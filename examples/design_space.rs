@@ -1,0 +1,94 @@
+//! Design-space exploration: how the O-SRAM advantage responds to the
+//! architectural knobs — the ablations DESIGN.md calls out.
+//!
+//! Sweeps (on the NELL-2 fingerprint, the paper's on-chip-bound case):
+//!   * WDM wavelength count λ (the Eq. 1 bandwidth driver);
+//!   * cache capacity;
+//!   * PE count;
+//!   * §IV-A type-3 bypass routing on/off.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::util::table::{Align, Table};
+
+fn speedup(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> (f64, f64) {
+    let cmp = compare_technologies(tensor, cfg);
+    (cmp.total_speedup(), cmp.energy_savings())
+}
+
+fn main() {
+    let scale = 1.0 / 1024.0;
+    let tensor = frostt::preset(FrosttTensor::Nell2).scaled(scale).generate(42);
+    let base = AcceleratorConfig::paper_default().scaled(scale);
+    println!("workload: {} ({} nnz)\n", tensor.name, tensor.nnz());
+
+    // --- λ sweep: reimplement Eq. 1 sensitivity by scaling the optical
+    // lane count (5 is the paper's number) ---
+    let mut t = Table::new("wavelength (λ) sweep — O-SRAM runtime", &["λ", "o-sram ms", "speedup vs e-sram"]);
+    let e_runtime = {
+        let r = simulate_all_modes(&tensor, &base, MemTech::ESram);
+        r.total_runtime_s()
+    };
+    for lam in [1u32, 2, 5, 10] {
+        let mut cfg = base.clone();
+        cfg.osram_lambda_override = Some(lam); // Eq. 1: b_process ∝ λ
+        let r = simulate_all_modes(&tensor, &cfg, MemTech::OSram);
+        let ms = r.total_runtime_s() * 1e3;
+        t.row(vec![
+            lam.to_string(),
+            format!("{ms:.3}"),
+            format!("{:.2}x", e_runtime * 1e3 / ms),
+        ]);
+    }
+    println!("{}", t.render_ascii());
+
+    // --- cache capacity sweep ---
+    let mut t = Table::new("cache capacity sweep", &["lines/cache", "speedup", "energy savings"]);
+    for lines in [base.cache_lines / 4, base.cache_lines / 2, base.cache_lines, base.cache_lines * 2] {
+        let mut cfg = base.clone();
+        cfg.cache_lines = lines.next_power_of_two();
+        let (s, e) = speedup(&tensor, &cfg);
+        t.row(vec![cfg.cache_lines.to_string(), format!("{s:.2}x"), format!("{e:.2}x")]);
+    }
+    println!("{}", t.render_ascii());
+
+    // --- PE count sweep ---
+    let mut t = Table::new("PE count sweep", &["PEs", "o-sram ms", "speedup"]);
+    for pes in [1usize, 2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.n_pes = pes;
+        let ro = simulate_all_modes(&tensor, &cfg, MemTech::OSram);
+        let (s, _) = speedup(&tensor, &cfg);
+        t.row(vec![
+            pes.to_string(),
+            format!("{:.3}", ro.total_runtime_s() * 1e3),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("{}", t.render_ascii());
+
+    // --- §IV-A type-3 bypass routing, on a cache-hostile tensor ---
+    let cold = frostt::preset(FrosttTensor::Nell1).scaled(scale / 8.0).generate(42);
+    let mut t = Table::new(
+        "element-wise bypass routing (nell-1 fingerprint)",
+        &["bypass", "o-sram ms", "hit rate"],
+    )
+    .align(0, Align::Left);
+    for bypass in [None, Some(16), Some(1)] {
+        let mut cfg = AcceleratorConfig::paper_default().scaled(scale / 8.0);
+        cfg.cache_bypass_factor = bypass;
+        let r = simulate_all_modes(&cold, &cfg, MemTech::OSram);
+        t.row(vec![
+            format!("{bypass:?}"),
+            format!("{:.3}", r.total_runtime_s() * 1e3),
+            format!(
+                "{:.1}%",
+                r.modes.iter().map(|m| m.hit_rate()).sum::<f64>() / r.modes.len() as f64 * 100.0
+            ),
+        ]);
+    }
+    println!("{}", t.render_ascii());
+}

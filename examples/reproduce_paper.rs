@@ -1,0 +1,44 @@
+//! Regenerate every table and figure of the paper's evaluation section.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper            # scale 1/1000
+//! PHOTON_SCALE=0.01 cargo run --release --example reproduce_paper
+//! ```
+//!
+//! Emits Tables I–IV and the Fig. 7 / Fig. 8 series (ASCII + CSV files
+//! under `target/paper/`), with the paper's reported bands alongside.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::report::paper;
+
+fn main() {
+    let scale: f64 = std::env::var("PHOTON_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.001);
+    let seed: u64 =
+        std::env::var("PHOTON_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let cfg = AcceleratorConfig::paper_default();
+
+    println!("{}", paper::table_i(&cfg).render_ascii());
+    println!("{}", paper::table_ii(scale).render_ascii());
+    println!("{}", paper::table_iii().render_ascii());
+    println!("{}", paper::table_iv(&cfg).render_ascii());
+
+    eprintln!("evaluating the 7-tensor suite at scale {scale:.1e} (seed {seed}) ...");
+    let t0 = std::time::Instant::now();
+    let results = paper::evaluate_suite(scale, seed);
+    eprintln!("suite done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let f7 = paper::fig7(&results);
+    let f8 = paper::fig8(&results);
+    println!("{}", f7.render_ascii());
+    println!("{}", f8.render_ascii());
+
+    // CSV dumps for plotting
+    std::fs::create_dir_all("target/paper").ok();
+    std::fs::write("target/paper/fig7.csv", f7.render_csv()).ok();
+    std::fs::write("target/paper/fig8.csv", f8.render_csv()).ok();
+    std::fs::write("target/paper/table4.csv", paper::table_iv(&cfg).render_csv()).ok();
+    eprintln!("CSV series written to target/paper/");
+}

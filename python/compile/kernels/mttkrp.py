@@ -1,0 +1,126 @@
+"""Layer-1 Pallas kernels for the spMTTKRP compute hot-spot.
+
+These kernels express the PE datapath of the paper's accelerator (Fig. 4)
+in Pallas for TPU-class hardware — see DESIGN.md §Hardware-Adaptation:
+
+* the paper's 80 electrical rank-16 pipelines map to the VPU lanes of a
+  (block × R) tile: ``scaled_hadamard`` is the elementwise
+  ``x × B(i1,:) × C(i2,:)`` of Algorithm 1 over a whole block of nonzeros;
+* the partial-sum buffer maps to the accumulation tile of
+  ``mttkrp_block`` (product + in-kernel segment accumulation);
+* the CP-ALS gram matrix ``Fᵀ F`` is the only matmul-shaped op and maps
+  to the MXU via ``gram_tile`` / ``row_matmul``.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin the
+rust runtime uses cannot execute Mosaic custom-calls, and interpret-mode
+lowers to plain HLO with identical numerics (the TPU mapping is an
+estimate documented in DESIGN.md §9). VMEM budgeting: the default
+block=1024, R=16 tiles keep ≤ 5 f32 operands of 64 KiB each in VMEM —
+~320 KiB, far under a TensorCore's ~16 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block of nonzeros processed per kernel invocation; 1024 matches
+# the paper's psum-buffer sizing (Table I).
+DEFAULT_BLOCK = 1024
+# Sub-tile the grid walks; 256 rows keeps every ref a few KiB.
+ROW_TILE = 256
+
+
+def _hadamard_kernel(n_factors, vals_ref, *refs):
+    """o = vals[:, None] * f0 * f1 * ...  (refs = factor refs + out ref)."""
+    out_ref = refs[n_factors]
+    acc = vals_ref[...][:, None] * refs[0][...]
+    for k in range(1, n_factors):
+        acc = acc * refs[k][...]
+    out_ref[...] = acc
+
+
+def scaled_hadamard(vals, *factors, row_tile=ROW_TILE):
+    """Pallas: ``out[b, r] = vals[b] * prod_k factors[k][b, r]``.
+
+    `vals`: f32[B]; each factor: f32[B, R]. B must be a multiple of
+    `row_tile` (the AOT wrapper pads). Grid walks B in `row_tile` chunks —
+    the same HBM→VMEM streaming schedule the paper's DMA performs into the
+    PE pipelines.
+    """
+    b, r = factors[0].shape
+    assert b % row_tile == 0, f"block {b} not a multiple of {row_tile}"
+    n = len(factors)
+    grid = (b // row_tile,)
+    kernel = functools.partial(_hadamard_kernel, n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile,), lambda i: (i,))]
+        + [pl.BlockSpec((row_tile, r), lambda i: (i, 0)) for _ in range(n)],
+        out_specs=pl.BlockSpec((row_tile, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(vals.astype(jnp.float32), *[f.astype(jnp.float32) for f in factors])
+
+
+def _gram_kernel(f_ref, o_ref):
+    """Accumulating Fᵀ F over the row-tile grid (MXU-shaped contraction)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = f_ref[...]
+    # fp32 accumulation on the MXU (preferred_element_type pins the
+    # accumulator precision like the hardware's 32-bit accumulators).
+    o_ref[...] += jax.lax.dot_general(
+        tile,
+        tile,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram_tile(f, row_tile=ROW_TILE):
+    """Pallas: ``G = Fᵀ F`` for a factor tile f32[I, R] (CP-ALS grams)."""
+    i, r = f.shape
+    assert i % row_tile == 0, f"tile rows {i} not a multiple of {row_tile}"
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(i // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, r), lambda k: (k, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(f.astype(jnp.float32))
+
+
+def _row_matmul_kernel(rows_ref, m_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        rows_ref[...],
+        m_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def row_matmul(rows, m, row_tile=ROW_TILE):
+    """Pallas: ``out = rows @ m`` — the factor update ``MTTKRP @ inv``."""
+    b, r = rows.shape
+    r2, r3 = m.shape
+    assert r == r2 == r3, "square RxR update matrix expected"
+    assert b % row_tile == 0
+    return pl.pallas_call(
+        _row_matmul_kernel,
+        grid=(b // row_tile,),
+        in_specs=[
+            pl.BlockSpec((row_tile, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(rows.astype(jnp.float32), m.astype(jnp.float32))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in `mttkrp.py` has a reference implementation here
+written with nothing but `jax.numpy` ops; pytest asserts allclose between
+the two across shapes and dtypes (see python/tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def scaled_hadamard_ref(vals, *factors):
+    """out[b, r] = vals[b] * prod_k factors[k][b, r].
+
+    The Algorithm 1 inner loop over a block of nonzeros: `vals` are the
+    tensor values, each `factors[k]` holds the gathered rows of input
+    factor matrix k for those nonzeros.
+    """
+    out = vals[:, None].astype(jnp.float32)
+    for f in factors:
+        out = out * f.astype(jnp.float32)
+    return out
+
+
+def segment_rows_ref(contrib, seg_ids, num_segments):
+    """out[s, r] = sum over b with seg_ids[b] == s of contrib[b, r].
+
+    Accumulates per-nonzero contributions into output factor rows (the
+    `A(i0, r) +=` of Algorithm 1) for a block whose nonzeros are grouped
+    by output index.
+    """
+    return jax.ops.segment_sum(contrib, seg_ids, num_segments=num_segments)
+
+
+def mttkrp_block_ref(vals, seg_ids, num_segments, *factors):
+    """Fused block MTTKRP: scaled Hadamard then segment accumulation."""
+    return segment_rows_ref(scaled_hadamard_ref(vals, *factors), seg_ids, num_segments)
+
+
+def gram_ref(f):
+    """G = Fᵀ F for a factor tile F[i, r] (CP-ALS normal equations)."""
+    f32 = f.astype(jnp.float32)
+    return f32.T @ f32
+
+
+def row_matmul_ref(rows, m):
+    """out = rows @ m — the CP-ALS factor update `MTTKRP(X) @ pinv(...)`."""
+    return rows.astype(jnp.float32) @ m.astype(jnp.float32)

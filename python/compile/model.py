@@ -1,0 +1,81 @@
+"""Layer-2 JAX model: the spMTTKRP compute graph the rust coordinator
+executes through PJRT.
+
+Entry points (all jit-able with static shapes, AOT-lowered by `aot.py`):
+
+* ``mttkrp_block_<N>`` — one block of Algorithm 1 for an N-mode tensor:
+  scaled-Hadamard product of the gathered input factor rows (L1 Pallas
+  kernel) followed by segment accumulation into output rows. The rust
+  driver gathers rows / builds segment ids (that is the memory system the
+  paper models); this graph is the arithmetic.
+* ``gram`` — partial CP-ALS gram matrix of a factor tile (L1 MXU kernel);
+  the driver accumulates tiles.
+* ``factor_update`` — `rows @ M` applying the inverted Hadamard-of-grams
+  to the MTTKRP output (L1 MXU kernel).
+
+Python exists only at artifact-build time; nothing here runs at serving
+time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mttkrp as kernels
+
+
+def mttkrp_block(vals, seg_ids, *factors, num_segments):
+    """Block MTTKRP: ``out[s, :] = Σ_{b: seg[b]=s} vals[b] · Π_k Fk[b, :]``.
+
+    vals: f32[B]; seg_ids: i32[B] in [0, num_segments); factors: f32[B, R]
+    each (rows already gathered). Returns f32[num_segments, R].
+    Nonzeros are grouped by output index (the Algorithm 1 ordering), but
+    correctness does not depend on it — segment_sum handles any grouping.
+    """
+    contrib = kernels.scaled_hadamard(vals, *factors)
+    return jax.ops.segment_sum(contrib, seg_ids, num_segments=num_segments)
+
+
+def mttkrp_block_3(vals, seg_ids, f1, f2, *, num_segments):
+    """3-mode tensor block (two input factor matrices)."""
+    return mttkrp_block(vals, seg_ids, f1, f2, num_segments=num_segments)
+
+
+def mttkrp_block_4(vals, seg_ids, f1, f2, f3, *, num_segments):
+    """4-mode tensor block (DELICIOUS-class)."""
+    return mttkrp_block(vals, seg_ids, f1, f2, f3, num_segments=num_segments)
+
+
+def mttkrp_block_5(vals, seg_ids, f1, f2, f3, f4, *, num_segments):
+    """5-mode tensor block (LBNL-class)."""
+    return mttkrp_block(vals, seg_ids, f1, f2, f3, f4, num_segments=num_segments)
+
+
+def scaled_hadamard_block(vals, *factors):
+    """Scatter-free block kernel: just the L1 product
+    ``out[b, :] = vals[b] · Π_k Fk[b, :]`` — the coordinator accumulates
+    rows on the rust side (cheaper than XLA-CPU scatter; see aot.py).
+
+    Lowered as a single grid step: in interpret mode every grid iteration
+    re-materializes the whole output via dynamic-update-slice (O(block²)
+    per call); one step keeps the CPU execution linear. The multi-step
+    BlockSpec schedule remains the TPU-facing story (kernels.ROW_TILE).
+    """
+    return kernels.scaled_hadamard(vals, *factors, row_tile=factors[0].shape[0])
+
+
+def gram(f_tile):
+    """Partial gram ``Fᵀ F`` of one factor tile f32[TILE, R]."""
+    return kernels.gram_tile(f_tile)
+
+
+def factor_update(rows, m):
+    """CP-ALS update: ``A_new = MTTKRP_rows @ M`` with M = pinv(⊛ grams)."""
+    return kernels.row_matmul(rows, m)
+
+
+def hadamard_grams(grams):
+    """Elementwise (Hadamard) product of the input grams, f32[K, R, R] →
+    f32[R, R] — the CP-ALS normal-equations matrix before inversion. Small
+    and bandwidth-trivial, so plain jnp (fused by XLA) rather than Pallas.
+    """
+    return jnp.prod(grams.astype(jnp.float32), axis=0)

@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps block shapes, ranks, factor counts, value ranges and
+dtypes; every case asserts allclose between the Pallas kernel (interpret
+mode — identical numerics to what the rust runtime executes) and ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mttkrp as k
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# scaled_hadamard
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    tiles=st.integers(1, 4),
+    rank=st.sampled_from([4, 8, 16, 32]),
+    n_factors=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scaled_hadamard_matches_ref(tiles, rank, n_factors, seed):
+    rng = np.random.default_rng(seed)
+    b = tiles * k.ROW_TILE
+    vals = rand(rng, b)
+    factors = [rand(rng, b, rank) for _ in range(n_factors)]
+    got = k.scaled_hadamard(vals, *factors)
+    want = ref.scaled_hadamard_ref(jnp.asarray(vals), *map(jnp.asarray, factors))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(scale=st.sampled_from([1e-6, 1.0, 1e6]), seed=st.integers(0, 2**31 - 1))
+def test_scaled_hadamard_value_ranges(scale, seed):
+    rng = np.random.default_rng(seed)
+    b = k.ROW_TILE
+    vals = rand(rng, b, scale=scale)
+    f1 = rand(rng, b, 16)
+    f2 = rand(rng, b, 16)
+    got = np.asarray(k.scaled_hadamard(vals, f1, f2))
+    want = np.asarray(ref.scaled_hadamard_ref(jnp.asarray(vals), jnp.asarray(f1), jnp.asarray(f2)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_scaled_hadamard_accepts_f64_inputs_downcasting():
+    rng = np.random.default_rng(0)
+    b = k.ROW_TILE
+    vals = rand(rng, b, dtype=np.float64)
+    f1 = rand(rng, b, 8, dtype=np.float64)
+    got = np.asarray(k.scaled_hadamard(vals, f1))
+    assert got.dtype == np.float32
+    want = (vals[:, None] * f1).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_scaled_hadamard_rejects_ragged_block():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        k.scaled_hadamard(rand(rng, 100), rand(rng, 100, 16))
+
+
+def test_scaled_hadamard_zero_vals_zero_out():
+    rng = np.random.default_rng(1)
+    b = k.ROW_TILE
+    got = np.asarray(k.scaled_hadamard(np.zeros(b, np.float32), rand(rng, b, 16)))
+    assert np.all(got == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# gram_tile
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    tiles=st.integers(1, 4),
+    rank=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(tiles, rank, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, tiles * k.ROW_TILE, rank)
+    got = np.asarray(k.gram_tile(f))
+    want = np.asarray(ref.gram_ref(jnp.asarray(f)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(3)
+    g = np.asarray(k.gram_tile(rand(rng, k.ROW_TILE, 16)))
+    np.testing.assert_allclose(g, g.T, rtol=1e-6)
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() > -1e-3
+
+
+# ---------------------------------------------------------------------------
+# row_matmul
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    tiles=st.integers(1, 3),
+    rank=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_matmul_matches_ref(tiles, rank, seed):
+    rng = np.random.default_rng(seed)
+    rows = rand(rng, tiles * k.ROW_TILE, rank)
+    m = rand(rng, rank, rank)
+    got = np.asarray(k.row_matmul(rows, m))
+    want = np.asarray(ref.row_matmul_ref(jnp.asarray(rows), jnp.asarray(m)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_row_matmul_identity_is_noop():
+    rng = np.random.default_rng(5)
+    rows = rand(rng, k.ROW_TILE, 16)
+    got = np.asarray(k.row_matmul(rows, np.eye(16, dtype=np.float32)))
+    np.testing.assert_allclose(got, rows, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernels under jit (the exact path the AOT lowering takes)
+# ---------------------------------------------------------------------------
+
+
+def test_kernels_jit_and_grad_safe():
+    rng = np.random.default_rng(7)
+    b = k.ROW_TILE
+    vals, f1, f2 = rand(rng, b), rand(rng, b, 16), rand(rng, b, 16)
+    jitted = jax.jit(lambda v, a, c: k.scaled_hadamard(v, a, c))
+    np.testing.assert_allclose(
+        np.asarray(jitted(vals, f1, f2)),
+        np.asarray(k.scaled_hadamard(vals, f1, f2)),
+        rtol=1e-6,
+    )

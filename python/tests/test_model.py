@@ -1,0 +1,138 @@
+"""Layer-2 model tests: block MTTKRP vs a dense einsum oracle, shapes,
+segment handling, and the CP-ALS helper algebra."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import mttkrp as k
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+B = k.ROW_TILE  # one-tile blocks keep the sweep fast
+
+
+def dense_mttkrp_mode0(dense, factors):
+    """Oracle: full dense MTTKRP for mode 0 via einsum (3-mode)."""
+    b, c = factors
+    return np.einsum("ijk,jr,kr->ir", dense, b, c)
+
+
+@hypothesis.given(
+    dims=st.tuples(st.integers(2, 8), st.integers(2, 8), st.integers(2, 8)),
+    rank=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_mttkrp_equals_dense_einsum(dims, rank, seed):
+    """Scatter a random sparse tensor into a block and compare to einsum."""
+    rng = np.random.default_rng(seed)
+    i0, i1, i2 = dims
+    nnz = min(B, i0 * i1 * i2 // 2 + 1)
+    coords = np.stack(
+        [rng.integers(0, d, size=nnz) for d in dims], axis=1
+    )
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    dense = np.zeros(dims, np.float32)
+    for (a, b_, c), v in zip(coords, vals):
+        dense[a, b_, c] += v
+    fb = rng.standard_normal((i1, rank)).astype(np.float32)
+    fc = rng.standard_normal((i2, rank)).astype(np.float32)
+
+    # pad the block to B
+    pv = np.zeros(B, np.float32)
+    pv[:nnz] = vals
+    seg = np.zeros(B, np.int32)  # padding rows scatter into segment 0 with v=0
+    seg[:nnz] = coords[:, 0]
+    g1 = np.zeros((B, rank), np.float32)
+    g2 = np.zeros((B, rank), np.float32)
+    g1[:nnz] = fb[coords[:, 1]]
+    g2[:nnz] = fc[coords[:, 2]]
+
+    out = np.asarray(
+        model.mttkrp_block(jnp.asarray(pv), jnp.asarray(seg), jnp.asarray(g1), jnp.asarray(g2), num_segments=B)
+    )
+    want = dense_mttkrp_mode0(dense, (fb, fc))
+    np.testing.assert_allclose(out[:i0], want, rtol=1e-4, atol=1e-4)
+    # rows beyond i0 untouched
+    assert np.all(out[i0:] == 0.0)
+
+
+def test_block_matches_ref_composition():
+    rng = np.random.default_rng(1)
+    vals = rng.standard_normal(B).astype(np.float32)
+    seg = rng.integers(0, 50, B).astype(np.int32)
+    f1 = rng.standard_normal((B, 16)).astype(np.float32)
+    f2 = rng.standard_normal((B, 16)).astype(np.float32)
+    got = np.asarray(model.mttkrp_block(vals, seg, f1, f2, num_segments=B))
+    want = np.asarray(ref.mttkrp_block_ref(jnp.asarray(vals), jnp.asarray(seg), B, jnp.asarray(f1), jnp.asarray(f2)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_arity_wrappers_shapes():
+    rng = np.random.default_rng(2)
+    vals = rng.standard_normal(B).astype(np.float32)
+    seg = np.zeros(B, np.int32)
+    fs = [rng.standard_normal((B, 16)).astype(np.float32) for _ in range(4)]
+    o3 = model.mttkrp_block_3(vals, seg, *fs[:2], num_segments=B)
+    o4 = model.mttkrp_block_4(vals, seg, *fs[:3], num_segments=B)
+    o5 = model.mttkrp_block_5(vals, seg, *fs[:4], num_segments=B)
+    for o in (o3, o4, o5):
+        assert o.shape == (B, 16)
+        assert o.dtype == jnp.float32
+
+
+def test_linearity_in_values():
+    """MTTKRP is linear in tensor values: f(2v) = 2 f(v)."""
+    rng = np.random.default_rng(3)
+    vals = rng.standard_normal(B).astype(np.float32)
+    seg = rng.integers(0, 10, B).astype(np.int32)
+    f1 = rng.standard_normal((B, 8)).astype(np.float32)
+    a = np.asarray(model.mttkrp_block(vals, seg, f1, num_segments=B))
+    b = np.asarray(model.mttkrp_block(2 * vals, seg, f1, num_segments=B))
+    np.testing.assert_allclose(b, 2 * a, rtol=1e-5)
+
+
+def test_permutation_invariance_within_block():
+    """Reordering nonzeros inside a block cannot change the output."""
+    rng = np.random.default_rng(4)
+    vals = rng.standard_normal(B).astype(np.float32)
+    seg = rng.integers(0, 33, B).astype(np.int32)
+    f1 = rng.standard_normal((B, 16)).astype(np.float32)
+    f2 = rng.standard_normal((B, 16)).astype(np.float32)
+    perm = rng.permutation(B)
+    a = np.asarray(model.mttkrp_block(vals, seg, f1, f2, num_segments=B))
+    b = np.asarray(
+        model.mttkrp_block(vals[perm], seg[perm], f1[perm], f2[perm], num_segments=B)
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_hadamard_grams_and_factor_update_algebra():
+    rng = np.random.default_rng(5)
+    g = rng.standard_normal((3, 16, 16)).astype(np.float32)
+    hg = np.asarray(model.hadamard_grams(jnp.asarray(g)))
+    np.testing.assert_allclose(hg, g[0] * g[1] * g[2], rtol=1e-6)
+    rows = rng.standard_normal((B, 16)).astype(np.float32)
+    upd = np.asarray(model.factor_update(rows, np.eye(16, dtype=np.float32)))
+    np.testing.assert_allclose(upd, rows, rtol=1e-6)
+
+
+def test_model_jit_stability():
+    rng = np.random.default_rng(6)
+    vals = rng.standard_normal(B).astype(np.float32)
+    seg = rng.integers(0, 5, B).astype(np.int32)
+    f1 = rng.standard_normal((B, 16)).astype(np.float32)
+    f2 = rng.standard_normal((B, 16)).astype(np.float32)
+    fn = jax.jit(lambda v, s, a, b: model.mttkrp_block(v, s, a, b, num_segments=B))
+    np.testing.assert_allclose(
+        np.asarray(fn(vals, seg, f1, f2)),
+        np.asarray(model.mttkrp_block(vals, seg, f1, f2, num_segments=B)),
+        rtol=1e-6,
+    )

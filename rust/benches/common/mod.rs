@@ -1,0 +1,15 @@
+//! Shared helpers for the bench targets.
+//!
+//! Benches honour two environment variables:
+//! * `PHOTON_SCALE` — workload scale for the suite benches (default 1e-3);
+//! * `PHOTON_BENCH_FAST=1` — shrink the measurement budget (CI).
+
+#![allow(dead_code)]
+
+pub fn scale() -> f64 {
+    std::env::var("PHOTON_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1e-3)
+}
+
+pub fn seed() -> u64 {
+    std::env::var("PHOTON_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}

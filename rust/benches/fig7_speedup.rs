@@ -1,0 +1,64 @@
+//! Fig. 7 regeneration: per-mode speedup from replacing E-SRAM with O-SRAM
+//! over the seven Table II tensors, plus wall-time of the simulations
+//! themselves. Paper band: 1.1×–2.9×, mean 1.68×.
+
+mod common;
+
+use photon_mttkrp::report::paper;
+use photon_mttkrp::util::bench::Bench;
+use photon_mttkrp::util::stats::Summary;
+
+fn main() {
+    let scale = common::scale();
+    let mut b = Bench::new();
+    b.group("fig7");
+
+    println!("\nevaluating the Table II suite at scale {scale:.1e} ...");
+    let t0 = std::time::Instant::now();
+    let results = paper::evaluate_suite(scale, common::seed());
+    println!("suite wall time: {:.2}s\n", t0.elapsed().as_secs_f64());
+
+    println!("{}", paper::fig7(&results).render_ascii());
+
+    for r in &results {
+        b.record_value(&format!("{}/total_speedup", r.name), r.comparison.total_speedup(), "x");
+    }
+    let all: Vec<f64> = results.iter().map(|r| r.comparison.total_speedup()).collect();
+    let mean = Summary::geomean_of(&all);
+    b.record_value("geomean_speedup", mean, "x  (paper mean: 1.68x)");
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(0.0f64, f64::max);
+    b.record_value("band_low", lo, "x  (paper band low: 1.1x)");
+    b.record_value("band_high", hi, "x  (paper band high: 2.9x)");
+
+    // shape assertions — the bench fails loudly if the reproduction drifts
+    let by_name = |n: &str| {
+        results.iter().find(|r| r.name == n).map(|r| r.comparison.total_speedup()).unwrap()
+    };
+    assert!(
+        by_name("nell-2") > by_name("nell-1") + 0.5,
+        "NELL-2 must dominate NELL-1 (paper §V-B)"
+    );
+    assert!(
+        by_name("patents") > by_name("delicious") + 0.5,
+        "PATENTS must dominate DELICIOUS (paper §V-B)"
+    );
+    assert!(lo >= 0.99, "O-SRAM must never lose");
+    println!("\nfig7 shape checks passed");
+
+    // timed: the simulation itself (one hot + one cold tensor, one mode)
+    let hot = photon_mttkrp::tensor::gen::preset(photon_mttkrp::tensor::gen::FrosttTensor::Nell2)
+        .scaled(scale)
+        .generate(common::seed());
+    let cfg = photon_mttkrp::accel::config::AcceleratorConfig::paper_default().scaled(scale);
+    b.bench_items("simulate_mode/nell-2/osram", hot.nnz() as f64, || {
+        photon_mttkrp::sim::engine::simulate_mode(
+            &hot,
+            0,
+            &cfg,
+            photon_mttkrp::mem::tech::MemTech::OSram,
+        )
+        .runtime_cycles()
+    });
+    b.write_csv("target/bench/fig7.csv");
+}

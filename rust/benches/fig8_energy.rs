@@ -1,0 +1,50 @@
+//! Fig. 8 regeneration: energy savings of the O-SRAM system over the
+//! E-SRAM baseline across the Table II suite. Paper band: 2.8×–8.1×,
+//! mean 5.3×.
+
+mod common;
+
+use photon_mttkrp::report::paper;
+use photon_mttkrp::util::bench::Bench;
+use photon_mttkrp::util::stats::Summary;
+
+fn main() {
+    let scale = common::scale();
+    let mut b = Bench::new();
+    b.group("fig8");
+
+    println!("\nevaluating the Table II suite at scale {scale:.1e} ...");
+    let results = paper::evaluate_suite(scale, common::seed());
+    println!("{}", paper::fig8(&results).render_ascii());
+
+    let mut all = Vec::new();
+    for r in &results {
+        let s = r.comparison.energy_savings();
+        all.push(s);
+        b.record_value(&format!("{}/energy_savings", r.name), s, "x");
+        // Eq. 2 decomposition per technology
+        let e = &r.comparison.esram_energy;
+        b.record_value(
+            &format!("{}/esram_switching_share", r.name),
+            e.switching_j / e.total_j(),
+            "frac",
+        );
+    }
+    let mean = Summary::geomean_of(&all);
+    b.record_value("geomean_savings", mean, "x  (paper mean: 5.3x)");
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(0.0f64, f64::max);
+    b.record_value("band_low", lo, "x  (paper band low: 2.8x)");
+    b.record_value("band_high", hi, "x  (paper band high: 8.1x)");
+
+    // shape assertions
+    assert!(lo > 1.5, "every tensor must save energy substantially, min {lo}");
+    assert!(hi < 12.0, "savings {hi} beyond plausibility");
+    assert!(mean > 3.0 && mean < 8.0, "mean {mean} outside the paper's regime");
+    let by_name = |n: &str| {
+        results.iter().find(|r| r.name == n).map(|r| r.comparison.energy_savings()).unwrap()
+    };
+    assert!(by_name("nell-2") > by_name("nell-1"), "on-chip-bound tensors save more");
+    println!("\nfig8 shape checks passed");
+    b.write_csv("target/bench/fig8.csv");
+}

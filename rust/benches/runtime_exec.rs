@@ -1,0 +1,56 @@
+//! PJRT artifact-execution performance: per-block latency and nnz
+//! throughput of the numeric MTTKRP path (§Perf target: amortized
+//! < 100 µs per 1024-nonzero block).
+
+use photon_mttkrp::mttkrp::block::{mttkrp_via_artifacts, BLOCK};
+use photon_mttkrp::mttkrp::reference::{mttkrp, FactorMatrix};
+use photon_mttkrp::runtime::client::{Arg, Runtime};
+use photon_mttkrp::tensor::gen;
+use photon_mttkrp::util::bench::Bench;
+
+fn main() {
+    let dir = photon_mttkrp::runtime::client::artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("runtime_exec: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let rt = Runtime::from_dir(&dir).expect("runtime");
+    let mut b = Bench::new();
+    b.group("runtime_exec");
+
+    // raw artifact dispatch latency (cache warm)
+    let vals = vec![1.0f32; BLOCK];
+    let segs: Vec<i32> = (0..BLOCK as i32).collect();
+    let f1 = vec![0.5f32; BLOCK * 16];
+    let f2 = vec![0.25f32; BLOCK * 16];
+    rt.warm("mttkrp3_b1024_r16").unwrap();
+    b.bench_items("mttkrp3_block_dispatch", BLOCK as f64, || {
+        rt.execute_f32(
+            "mttkrp3_b1024_r16",
+            &[Arg::F32(&vals), Arg::S32(&segs), Arg::F32(&f1), Arg::F32(&f2)],
+        )
+        .unwrap()
+        .len()
+    });
+    b.bench_items("gram_tile_dispatch", 1024.0, || {
+        rt.execute_f32("gram_t1024_r16", &[Arg::F32(&f1)]).unwrap().len()
+    });
+
+    // end-to-end blocked MTTKRP vs the scalar reference
+    let t = gen::random(&[200, 200, 200], 100_000, 5);
+    let factors: Vec<FactorMatrix> =
+        t.dims.iter().enumerate().map(|(m, &d)| FactorMatrix::random(d as usize, 16, m as u64)).collect();
+    let m_art = b.bench_items("mttkrp_via_artifacts/100k_nnz", t.nnz() as f64, || {
+        mttkrp_via_artifacts(&rt, &t, 0, &factors).unwrap().data.len()
+    });
+    let blocks = (t.nnz() as f64 / BLOCK as f64).ceil();
+    let us_per_block = m_art.mean.as_secs_f64() * 1e6 / blocks;
+    println!("amortized {us_per_block:.1} us/block ({blocks:.0} blocks) — §Perf target < 100 us");
+
+    b.bench_items("mttkrp_reference/100k_nnz", t.nnz() as f64, || {
+        mttkrp(&t, 0, &factors).data.len()
+    });
+
+    println!("\n{}", b.summary_table().render_ascii());
+    b.write_csv("target/bench/runtime_exec.csv");
+}

@@ -1,0 +1,54 @@
+//! Simulator performance: nnz-events/second of the L3 engine — the §Perf
+//! hot path. Targets (DESIGN.md §9): ≥ 20 M nnz-events/s single-thread.
+//!
+//! An "event" here is one simulated nonzero through one technology
+//! (each nonzero drives (N−1) cache lookups + exec/psum/dma charges).
+
+mod common;
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::sim::engine::simulate_mode;
+use photon_mttkrp::tensor::csf::ModeView;
+use photon_mttkrp::tensor::gen::{self, TensorSpec};
+use photon_mttkrp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.group("sim_throughput");
+    let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 256.0);
+
+    // hot: cache-resident (hit-path dominated)
+    let hot = TensorSpec::custom("hot", vec![300, 300, 300], 400_000, 1.1).generate(1);
+    // cold: miss-path dominated
+    let cold = TensorSpec::custom("cold", vec![2_000_000, 2_000_000, 2_000_000], 400_000, 0.2)
+        .generate(1);
+    // 5-mode: more lookups per nonzero
+    let wide = TensorSpec::custom("wide", vec![500, 500, 500, 500, 500], 200_000, 0.8).generate(1);
+
+    for (name, t) in [("hot3", &hot), ("cold3", &cold), ("wide5", &wide)] {
+        for tech in [MemTech::ESram, MemTech::OSram] {
+            let m = b.bench_items(
+                &format!("{name}/{}", tech.name()),
+                t.nnz() as f64,
+                || simulate_mode(t, 0, &cfg, tech).runtime_cycles(),
+            );
+            let nnz_per_s = m.throughput_per_s().unwrap();
+            if name == "hot3" && tech == MemTech::OSram {
+                // §Perf target gate (soft: prints rather than fails in CI)
+                if nnz_per_s < 20.0e6 {
+                    println!("!! below the 20 M nnz/s §Perf target: {nnz_per_s:.3e}");
+                }
+            }
+        }
+    }
+
+    // substrate microbenches feeding the profile
+    let view_t = gen::random(&[4096, 512, 512], 1_000_000, 3);
+    b.bench_items("modeview_build", view_t.nnz() as f64, || ModeView::build(&view_t, 0).nnz());
+    let spec = gen::preset(gen::FrosttTensor::Nell2).scaled(1e-3);
+    b.bench_items("tensor_generate", spec.nnz as f64, || spec.generate(9).nnz());
+
+    println!("\n{}", b.summary_table().render_ascii());
+    b.write_csv("target/bench/sim_throughput.csv");
+}

@@ -1,0 +1,44 @@
+//! Table III regeneration: per-bit static/switching energy of the two
+//! memory technologies, plus the derived Eq. 3 power of a Table I design
+//! under a representative activity factor.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::accel::design::OnChipBudget;
+use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::report::paper;
+use photon_mttkrp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.group("table3");
+    println!("\n{}", paper::table_iii().render_ascii());
+
+    let e = MemTech::ESram.technology();
+    let o = MemTech::OSram.technology();
+    // paper constants, asserted to stay exact
+    assert_eq!(e.static_pj_per_bit_cycle, 1.175e-6);
+    assert_eq!(o.static_pj_per_bit_cycle, 4.17e-6);
+    assert_eq!(e.switching_pj_per_bit, 4.68);
+    assert_eq!(o.switching_pj_per_bit, 1.04);
+
+    b.record_value("esram/static_pj_per_bit_cycle", e.static_pj_per_bit_cycle, "pJ");
+    b.record_value("osram/static_pj_per_bit_cycle", o.static_pj_per_bit_cycle, "pJ");
+    b.record_value("esram/switching_pj_per_bit", e.switching_pj_per_bit, "pJ");
+    b.record_value("osram/switching_pj_per_bit", o.switching_pj_per_bit, "pJ");
+    b.record_value("switching_ratio_e_over_o", e.switching_pj_per_bit / o.switching_pj_per_bit, "x");
+
+    // Eq. 3 at design level: static power of the Table I on-chip budget
+    // and switching power at a 10% activity factor, in watts.
+    let cfg = AcceleratorConfig::paper_default();
+    let bits = OnChipBudget::from_config(&cfg).total_bits();
+    for (name, tech) in [("esram", &e), ("osram", &o)] {
+        let static_w = tech.static_pj_per_cycle(bits) * cfg.fabric_hz * 1e-12;
+        let active_bits_per_cycle = bits as f64 * 0.10 / 1e6; // 0.1 ppm of bits/cycle
+        let switching_w =
+            active_bits_per_cycle * tech.switching_pj_per_bit * cfg.fabric_hz * 1e-12;
+        b.record_value(&format!("{name}/design_static_w"), static_w, "W");
+        b.record_value(&format!("{name}/design_switching_w_0.1ppm"), switching_w, "W");
+    }
+    println!("\ntable3 constants verified");
+    b.write_csv("target/bench/table3.csv");
+}

@@ -1,0 +1,35 @@
+//! Table IV regeneration: layout area of the E-SRAM and O-SRAM systems
+//! (54 MB on-chip + the 202.2 mm² PE array), and the wafer-scale argument.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::area::model::{AreaModel, PAPER_OSRAM_MEM_MM2};
+use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::report::paper;
+use photon_mttkrp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.group("table4");
+    let cfg = AcceleratorConfig::paper_default();
+    println!("\n{}", paper::table_iv(&cfg).render_ascii());
+
+    let m = AreaModel::new(&cfg);
+    let e = m.platform(MemTech::ESram);
+    let o = m.platform(MemTech::OSram);
+    b.record_value("esram/onchip_mm2", e.onchip_mem_mm2, "mm^2 (paper: 43.2)");
+    b.record_value("esram/total_mm2", e.total_mm2(), "mm^2 (paper: 247.2)");
+    b.record_value("osram/onchip_mm2", o.onchip_mem_mm2, "mm^2 (paper: 103.7e4)");
+    b.record_value("osram/total_mm2", o.total_mm2(), "mm^2");
+    b.record_value("area_penalty", m.area_penalty(), "x");
+
+    // paper round-trips
+    assert!((e.onchip_mem_mm2 - 43.2).abs() < 1e-6);
+    assert!((o.onchip_mem_mm2 - PAPER_OSRAM_MEM_MM2).abs() / PAPER_OSRAM_MEM_MM2 < 1e-9);
+    assert!(m.requires_wafer_scale());
+    // 300 mm wafer ≈ 70 685 mm²; the O-SRAM system needs several wafers
+    // worth of area (§II motivates wafer-scale integration)
+    let wafers = o.total_mm2() / 70_685.0;
+    b.record_value("wafer_equivalents", wafers, "x 300mm wafers");
+    println!("\ntable4 round-trips verified");
+    b.write_csv("target/bench/table4.csv");
+}

@@ -1,0 +1,300 @@
+//! Accelerator configuration — Table I of the paper, plus the platform
+//! constants of §V-A, all overridable from a config file or CLI.
+
+use crate::mem::dram::DramConfig;
+use crate::util::configfile::Config;
+
+/// Full accelerator + platform configuration.
+///
+/// Defaults reproduce Table I and §V-A exactly:
+///
+/// | module             | configuration                          |
+/// |--------------------|----------------------------------------|
+/// | PE                 | 4 PEs (= number of DRAM channels)      |
+/// | parallel pipelines | 80 per PE, psum buffer 1024 elements   |
+/// | cache subsystem    | 3 caches, 4-way, 4096 lines × 64 B     |
+/// | DMAs               | 6 buffers × 64 KB                      |
+/// | rank R             | 16                                     |
+/// | fabric clock       | 500 MHz                                |
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Processing elements; the paper keeps this equal to the number of
+    /// attached DRAM channels (Fig. 4).
+    pub n_pes: usize,
+    /// Parallel rank pipelines per PE.
+    pub n_pipelines: usize,
+    /// Partial-sum buffer capacity per pipeline, in f32 elements.
+    pub psum_elements: usize,
+    /// Caches per PE memory controller.
+    pub n_caches: usize,
+    /// Cache associativity.
+    pub cache_assoc: usize,
+    /// Total cache lines per cache (sets = lines / assoc).
+    pub cache_lines: usize,
+    /// Cache line width in bytes.
+    pub line_bytes: usize,
+    /// DMA buffers per PE.
+    pub n_dma_buffers: usize,
+    /// Bytes per DMA buffer.
+    pub dma_buffer_bytes: usize,
+    /// CP decomposition rank R.
+    pub rank: usize,
+    /// Fabric (electrical mesh) clock in Hz.
+    pub fabric_hz: f64,
+    /// External memory channel model (one channel per PE).
+    pub dram: DramConfig,
+    /// Data-array interleaving factor for *electrical* on-chip arrays:
+    /// how many BRAM banks a cache data array / psum buffer cascades to
+    /// widen its port (standard FPGA cache construction). The optical
+    /// array needs no banking — Eq. 1 already yields 200 words/cycle.
+    pub esram_bank_factor: usize,
+    /// Compute (LUT/DSP mesh) power draw in watts while the design is
+    /// active — identical across the two memory technologies, used by
+    /// Eq. 2's `P_compute × t_runtime`. Default sized for the Table I
+    /// design's ~1.3K DSP-equivalent FMA pipelines at 12 nm / 500 MHz
+    /// (~0.3 mW each), not the whole card.
+    pub compute_power_w: f64,
+    /// Optional §IV-A type-3 routing: factor matrices with more rows than
+    /// `cache_lines × factor` bypass the caches to the element-wise DMA.
+    /// `None` (the default) routes every factor matrix through the cache
+    /// subsystem, which is the paper's configuration; the ablation bench
+    /// sweeps this knob.
+    pub cache_bypass_factor: Option<usize>,
+    /// Override the O-SRAM WDM wavelength count λ (default: the device's
+    /// 5). Eq. 1 ablation knob — changes concurrency, not the device
+    /// energies.
+    pub osram_lambda_override: Option<u32>,
+
+    // --- platform resource budget (§V-A, Alveo U250-class) ---
+    /// Total on-chip memory replaced by O-SRAM, bytes (54 MB).
+    pub onchip_bytes: u64,
+    pub luts: u64,
+    pub flipflops: u64,
+    pub dsps: u64,
+}
+
+impl AcceleratorConfig {
+    /// Table I / §V-A defaults.
+    pub fn paper_default() -> Self {
+        AcceleratorConfig {
+            n_pes: 4,
+            n_pipelines: 80,
+            psum_elements: 1024,
+            n_caches: 3,
+            cache_assoc: 4,
+            cache_lines: 4096,
+            line_bytes: 64,
+            n_dma_buffers: 6,
+            dma_buffer_bytes: 64 * 1024,
+            rank: 16,
+            fabric_hz: crate::mem::tech::FABRIC_HZ,
+            dram: DramConfig::default(),
+            esram_bank_factor: 4,
+            compute_power_w: 0.4,
+            cache_bypass_factor: None,
+            osram_lambda_override: None,
+            onchip_bytes: 54 * 1024 * 1024,
+            luts: 6_433_000,
+            flipflops: 8_474_000,
+            dsps: 31_000,
+        }
+    }
+
+    /// Scale the on-chip working-set capacity with a scaled workload (see
+    /// `tensor::gen`). A tensor scaled by `s` shrinks each mode dimension —
+    /// and hence each factor matrix's row working set — by `s^(1/N)`, so
+    /// the cache/DMA capacities scale by the same `s^(1/3)` (N = 3, the
+    /// dominant arity of Table II) to preserve the working-set-to-capacity
+    /// ratio that determines the hit-rate regime. Compute resources are
+    /// left untouched.
+    pub fn scaled(mut self, s: f64) -> Self {
+        assert!(s > 0.0 && s <= 1.0);
+        let cap = s.powf(1.0 / 3.0);
+        let clamp_pow2 = |x: usize, lo: usize| -> usize {
+            let scaled = (x as f64 * cap).max(lo as f64) as usize;
+            scaled.next_power_of_two()
+        };
+        self.cache_lines = clamp_pow2(self.cache_lines, 16 * self.cache_assoc);
+        self.dma_buffer_bytes = clamp_pow2(self.dma_buffer_bytes, 1024);
+        self.onchip_bytes = ((self.onchip_bytes as f64 * cap) as u64).max(1 << 20);
+        self
+    }
+
+    /// Cache sets (lines / associativity).
+    pub fn cache_sets(&self) -> usize {
+        self.cache_lines / self.cache_assoc
+    }
+
+    /// Resolve the device model for `tech`, applying any config-level
+    /// overrides (the λ ablation knob).
+    pub fn technology(&self, tech: crate::mem::tech::MemTech) -> crate::mem::tech::MemTechnology {
+        let mut t = tech.technology();
+        if tech == crate::mem::tech::MemTech::OSram {
+            if let Some(l) = self.osram_lambda_override {
+                assert!(l >= 1);
+                t.wavelengths = l;
+                t.lanes_per_core_cycle = l;
+                t.ports_per_block = (l as f64 * t.freq_hz / self.fabric_hz).round() as u32;
+            }
+        }
+        t
+    }
+
+    /// Bytes of one factor-matrix row (R × f32).
+    pub fn row_bytes(&self) -> usize {
+        self.rank * 4
+    }
+
+    /// Per-cache data capacity in bytes.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache_lines * self.line_bytes
+    }
+
+    /// Apply overrides from a parsed config file (TOML subset). Unknown
+    /// keys are rejected so typos fail loudly.
+    pub fn apply_config(&mut self, c: &Config) -> Result<(), String> {
+        const KNOWN: [&str; 14] = [
+            "pe.count",
+            "pe.pipelines",
+            "pe.psum_elements",
+            "cache.count",
+            "cache.assoc",
+            "cache.lines",
+            "cache.line_bytes",
+            "dma.count",
+            "dma.buffer_bytes",
+            "model.rank",
+            "model.fabric_mhz",
+            "model.esram_bank_factor",
+            "model.compute_power_w",
+            "platform.onchip_mb",
+        ];
+        for k in c.keys() {
+            if !KNOWN.contains(&k) {
+                return Err(format!("unknown config key `{k}`"));
+            }
+        }
+        self.n_pes = c.usize_or("pe.count", self.n_pes);
+        self.n_pipelines = c.usize_or("pe.pipelines", self.n_pipelines);
+        self.psum_elements = c.usize_or("pe.psum_elements", self.psum_elements);
+        self.n_caches = c.usize_or("cache.count", self.n_caches);
+        self.cache_assoc = c.usize_or("cache.assoc", self.cache_assoc);
+        self.cache_lines = c.usize_or("cache.lines", self.cache_lines);
+        self.line_bytes = c.usize_or("cache.line_bytes", self.line_bytes);
+        self.n_dma_buffers = c.usize_or("dma.count", self.n_dma_buffers);
+        self.dma_buffer_bytes = c.usize_or("dma.buffer_bytes", self.dma_buffer_bytes);
+        self.rank = c.usize_or("model.rank", self.rank);
+        self.fabric_hz = c.f64_or("model.fabric_mhz", self.fabric_hz / 1e6) * 1e6;
+        self.esram_bank_factor = c.usize_or("model.esram_bank_factor", self.esram_bank_factor);
+        self.compute_power_w = c.f64_or("model.compute_power_w", self.compute_power_w);
+        self.onchip_bytes =
+            (c.f64_or("platform.onchip_mb", self.onchip_bytes as f64 / (1 << 20) as f64)
+                * (1 << 20) as f64) as u64;
+        self.validate()
+    }
+
+    /// Structural sanity checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_pes == 0 || self.n_pipelines == 0 || self.n_caches == 0 {
+            return Err("PE/pipeline/cache counts must be positive".into());
+        }
+        if self.cache_lines % self.cache_assoc != 0 {
+            return Err("cache_lines must be divisible by associativity".into());
+        }
+        if !self.cache_sets().is_power_of_two() {
+            return Err("cache sets must be a power of two".into());
+        }
+        if self.row_bytes() > self.line_bytes {
+            return Err(format!(
+                "factor row ({} B) must fit in a cache line ({} B)",
+                self.row_bytes(),
+                self.line_bytes
+            ));
+        }
+        if self.fabric_hz <= 0.0 {
+            return Err("fabric clock must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table_i() {
+        let c = AcceleratorConfig::paper_default();
+        assert_eq!(c.n_pes, 4);
+        assert_eq!(c.n_pipelines, 80);
+        assert_eq!(c.psum_elements, 1024);
+        assert_eq!(c.n_caches, 3);
+        assert_eq!(c.cache_assoc, 4);
+        assert_eq!(c.cache_lines, 4096);
+        assert_eq!(c.line_bytes, 64);
+        assert_eq!(c.n_dma_buffers, 6);
+        assert_eq!(c.dma_buffer_bytes, 64 * 1024);
+        assert_eq!(c.rank, 16);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rank16_row_is_exactly_one_line() {
+        // R=16 × 4 B = 64 B — the paper's line width; one row per line.
+        let c = AcceleratorConfig::paper_default();
+        assert_eq!(c.row_bytes(), c.line_bytes);
+    }
+
+    #[test]
+    fn derived_geometry() {
+        let c = AcceleratorConfig::paper_default();
+        assert_eq!(c.cache_sets(), 1024);
+        assert_eq!(c.cache_bytes(), 256 * 1024);
+    }
+
+    #[test]
+    fn scaled_keeps_validity_and_shrinks() {
+        let c = AcceleratorConfig::paper_default().scaled(1.0 / 256.0);
+        c.validate().unwrap();
+        assert!(c.cache_lines < 4096);
+        assert!(c.cache_lines >= 16 * c.cache_assoc);
+        assert!(c.cache_sets().is_power_of_two());
+    }
+
+    #[test]
+    fn config_file_overrides() {
+        let mut c = AcceleratorConfig::paper_default();
+        let file = Config::parse("[pe]\ncount = 8\n[model]\nrank = 32\n[cache]\nline_bytes = 128")
+            .unwrap();
+        c.apply_config(&file).unwrap();
+        assert_eq!(c.n_pes, 8);
+        assert_eq!(c.rank, 32);
+        assert_eq!(c.line_bytes, 128);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = AcceleratorConfig::paper_default();
+        let file = Config::parse("[pe]\ncuont = 8").unwrap();
+        assert!(c.apply_config(&file).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = AcceleratorConfig::paper_default();
+        c.rank = 64; // 256 B row > 64 B line
+        assert!(c.validate().is_err());
+        let mut c2 = AcceleratorConfig::paper_default();
+        c2.cache_lines = 4095;
+        assert!(c2.validate().is_err());
+        let mut c3 = AcceleratorConfig::paper_default();
+        c3.n_pes = 0;
+        assert!(c3.validate().is_err());
+    }
+}

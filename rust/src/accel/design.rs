@@ -1,0 +1,108 @@
+//! On-chip memory budgeting: how many SRAM blocks the Table I design
+//! instantiates, for the energy model's `n_O-SRAM` term (Eq. 2) and the
+//! capacity check against the 54 MB platform budget.
+
+use crate::accel::config::AcceleratorConfig;
+use crate::mem::tech::{MemTech, MemTechnology};
+
+/// Bytes of on-chip memory the accelerator design actually instantiates,
+/// by component (per the Fig. 4 architecture, aggregated over all PEs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnChipBudget {
+    pub cache_data_bytes: u64,
+    pub cache_tag_bytes: u64,
+    pub psum_bytes: u64,
+    pub dma_bytes: u64,
+}
+
+impl OnChipBudget {
+    /// Derive the budget from a configuration.
+    pub fn from_config(cfg: &AcceleratorConfig) -> Self {
+        let pes = cfg.n_pes as u64;
+        let cache_data = pes * cfg.n_caches as u64 * cfg.cache_bytes() as u64;
+        // Tag entry: tag (≈ 32 − log2(sets) − log2(line) bits, round to 32)
+        // + valid/dirty + LRU stamp (Fig. 5/6 share Tag RAM and LRU RAM):
+        // model 8 B per line.
+        let cache_tag = pes * cfg.n_caches as u64 * cfg.cache_lines as u64 * 8;
+        let psum = pes * cfg.n_pipelines as u64 * cfg.psum_elements as u64 * 4;
+        let dma = pes * cfg.n_dma_buffers as u64 * cfg.dma_buffer_bytes as u64;
+        OnChipBudget { cache_data_bytes: cache_data, cache_tag_bytes: cache_tag, psum_bytes: psum, dma_bytes: dma }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.cache_data_bytes + self.cache_tag_bytes + self.psum_bytes + self.dma_bytes
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_bytes() * 8
+    }
+
+    /// Number of memory blocks of the given technology the design consumes
+    /// (Eq. 2's `n_O-SRAM` when `tech` is the O-SRAM).
+    pub fn blocks(&self, tech: &MemTechnology) -> u64 {
+        tech.blocks_for_bits(self.total_bits())
+    }
+
+    /// Does the design fit the platform's on-chip capacity?
+    pub fn fits(&self, cfg: &AcceleratorConfig) -> bool {
+        self.total_bytes() <= cfg.onchip_bytes
+    }
+}
+
+/// A fully-resolved design instance: configuration + memory technology.
+#[derive(Clone, Debug)]
+pub struct DesignInstance {
+    pub cfg: AcceleratorConfig,
+    pub tech: MemTech,
+    pub budget: OnChipBudget,
+}
+
+impl DesignInstance {
+    pub fn new(cfg: AcceleratorConfig, tech: MemTech) -> Self {
+        let budget = OnChipBudget::from_config(&cfg);
+        DesignInstance { cfg, tech, budget }
+    }
+
+    /// `n_blocks` of the instantiated technology (Eq. 2's n_O-SRAM).
+    pub fn n_blocks(&self) -> u64 {
+        self.budget.blocks(&self.tech.technology())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_budget_fits_54mb() {
+        let cfg = AcceleratorConfig::paper_default();
+        let b = OnChipBudget::from_config(&cfg);
+        // 4 PEs × (3 × 256 KB cache + 80 × 4 KB psum + 6 × 64 KB DMA)
+        assert_eq!(b.cache_data_bytes, 4 * 3 * 256 * 1024);
+        assert_eq!(b.psum_bytes, 4 * 80 * 1024 * 4);
+        assert_eq!(b.dma_bytes, 4 * 6 * 64 * 1024);
+        assert!(b.fits(&cfg), "design uses {} B of {} B", b.total_bytes(), cfg.onchip_bytes);
+        // sanity: a meaningful fraction of the chip, not a rounding error
+        assert!(b.total_bytes() > 4 << 20);
+    }
+
+    #[test]
+    fn block_counts_differ_by_technology() {
+        let cfg = AcceleratorConfig::paper_default();
+        let d_o = DesignInstance::new(cfg.clone(), MemTech::OSram);
+        let d_e = DesignInstance::new(cfg, MemTech::ESram);
+        // O-SRAM blocks are 32 Kb vs E-SRAM 36 Kb ⇒ more O blocks
+        assert!(d_o.n_blocks() > d_e.n_blocks());
+        // n_OSRAM for Eq. 2 is in the thousands for a MB-scale design
+        assert!(d_o.n_blocks() > 1000);
+    }
+
+    #[test]
+    fn budget_scales_with_pes() {
+        let mut cfg = AcceleratorConfig::paper_default();
+        let b4 = OnChipBudget::from_config(&cfg);
+        cfg.n_pes = 8;
+        let b8 = OnChipBudget::from_config(&cfg);
+        assert_eq!(b8.total_bytes(), 2 * b4.total_bytes());
+    }
+}

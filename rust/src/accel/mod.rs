@@ -1,0 +1,4 @@
+//! Accelerator configuration (Table I) and on-chip resource budgeting.
+
+pub mod config;
+pub mod design;

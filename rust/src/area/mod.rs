@@ -1,0 +1,3 @@
+//! Area model (paper §V-D, Table IV).
+
+pub mod model;

@@ -1,0 +1,111 @@
+//! Table IV: layout area of the two systems.
+//!
+//! | system  | on-chip memory      | PEs        | total                |
+//! |---------|---------------------|------------|----------------------|
+//! | E-SRAM  | 43.2 mm²            | 202.2 mm²  | 247.2 mm² (paper)    |
+//! | O-SRAM  | 103.7 × 10⁴ mm²     | 202.2 mm²  | 103.7 × 10⁴ mm²      |
+//!
+//! Note the paper's E-SRAM "Total" (247.2) differs from the sum of its own
+//! components (43.2 + 202.2 = 245.4) by ~0.7% — presumably interface glue
+//! counted only in the total. We report the component sum and carry the
+//! paper's printed value as `PAPER_ESRAM_TOTAL_MM2` for comparison output.
+
+use crate::accel::config::AcceleratorConfig;
+use crate::mem::tech::MemTech;
+
+/// PE-array area at 12 nm (Table IV, identical for both systems — the
+/// compute mesh is CMOS either way).
+pub const PE_AREA_MM2: f64 = 202.2;
+/// The paper's printed E-SRAM total (see module docs on the 0.7% gap).
+pub const PAPER_ESRAM_TOTAL_MM2: f64 = 247.2;
+/// The paper's printed O-SRAM on-chip-memory and total area.
+pub const PAPER_OSRAM_MEM_MM2: f64 = 103.7e4;
+
+/// Area breakdown of one system instance, mm².
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaBreakdown {
+    pub onchip_mem_mm2: f64,
+    pub pe_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.onchip_mem_mm2 + self.pe_mm2
+    }
+}
+
+/// The Table IV model: full-platform on-chip memory (54 MB) in the given
+/// technology + the fixed PE array.
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    pub cfg: AcceleratorConfig,
+}
+
+impl AreaModel {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        AreaModel { cfg: cfg.clone() }
+    }
+
+    /// Area of the platform with its full on-chip memory in `tech`
+    /// (Table IV replaces *all* 54 MB, not just the bytes the design uses).
+    pub fn platform(&self, tech: MemTech) -> AreaBreakdown {
+        let bits = self.cfg.onchip_bytes * 8;
+        AreaBreakdown { onchip_mem_mm2: tech.technology().area_mm2(bits), pe_mm2: PE_AREA_MM2 }
+    }
+
+    /// O-SRAM : E-SRAM total-area ratio — the wafer-scale penalty of §V-D.
+    pub fn area_penalty(&self) -> f64 {
+        self.platform(MemTech::OSram).total_mm2() / self.platform(MemTech::ESram).total_mm2()
+    }
+
+    /// Does the O-SRAM system exceed a single reticle (~858 mm²)? It must —
+    /// that is the wafer-scale argument of §II.
+    pub fn requires_wafer_scale(&self) -> bool {
+        self.platform(MemTech::OSram).total_mm2() > 858.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> AreaModel {
+        AreaModel::new(&AcceleratorConfig::paper_default())
+    }
+
+    #[test]
+    fn esram_row_matches_table_iv() {
+        let a = model().platform(MemTech::ESram);
+        assert!((a.onchip_mem_mm2 - 43.2).abs() < 1e-6, "{}", a.onchip_mem_mm2);
+        assert_eq!(a.pe_mm2, 202.2);
+        // component sum; paper prints 247.2 (see module docs)
+        assert!((a.total_mm2() - 245.4).abs() < 1e-6);
+        assert!((a.total_mm2() - PAPER_ESRAM_TOTAL_MM2).abs() / PAPER_ESRAM_TOTAL_MM2 < 0.01);
+    }
+
+    #[test]
+    fn osram_row_matches_table_iv() {
+        let a = model().platform(MemTech::OSram);
+        assert!((a.onchip_mem_mm2 - 103.7e4).abs() / 103.7e4 < 1e-9);
+        // memory dwarfs PEs: total ≈ memory (paper prints the same number)
+        assert!((a.total_mm2() - 103.7e4).abs() / 103.7e4 < 1e-3);
+    }
+
+    #[test]
+    fn wafer_scale_is_required() {
+        let m = model();
+        assert!(m.requires_wafer_scale());
+        let penalty = m.area_penalty();
+        assert!(penalty > 1e3, "area penalty {penalty} should be >3 orders");
+    }
+
+    #[test]
+    fn area_scales_with_capacity() {
+        let mut cfg = AcceleratorConfig::paper_default();
+        cfg.onchip_bytes /= 2;
+        let m = AreaModel::new(&cfg);
+        let full = model().platform(MemTech::OSram).onchip_mem_mm2;
+        let half = m.platform(MemTech::OSram).onchip_mem_mm2;
+        assert!((half - full / 2.0).abs() / full < 1e-9);
+    }
+}

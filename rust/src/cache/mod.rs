@@ -1,0 +1,17 @@
+//! The O-SRAM/E-SRAM cache subsystem (paper §IV-B, Figs. 5–6).
+//!
+//! Each PE's memory controller contains `n_caches` set-associative caches
+//! shared among the input factor matrices. A cache is modeled at two
+//! levels:
+//!
+//! * [`lru`] + [`cache`] — *functional*: a real set-associative LRU cache
+//!   simulated over the actual factor-row index stream, producing exact
+//!   hit/miss/eviction counts (the workload-dependent part of the model).
+//! * [`pipeline`] — *timing*: the PE pipeline (Fig. 6: tag access → tag
+//!   compare → LRU update → data access) and MEM pipeline (Fig. 5) as
+//!   issue-rate/latency parameters derived from the plugged
+//!   [`MemTechnology`](crate::mem::tech::MemTechnology).
+
+pub mod cache;
+pub mod lru;
+pub mod pipeline;

@@ -1,0 +1,174 @@
+//! Timing model of the cache's two pipelines (Figs. 5–6) and of generic
+//! on-chip SRAM arrays (psum buffer, DMA buffers).
+//!
+//! The functional cache (`cache.rs`) answers *what* hits; this module
+//! answers *how fast*: how many line requests per fabric cycle an array
+//! built from a given [`MemTechnology`] can serve, and at what latency.
+//!
+//! ## Throughput
+//!
+//! One factor row / cache line is `line_bytes / 4` 32-bit words. A block
+//! serves `lanes × f_mem / f_fabric` words per fabric cycle (Eq. 1). An
+//! *electrical* data array additionally cascades `bank_factor` BRAMs to
+//! widen the port (standard FPGA cache construction — this is a *design*
+//! choice, so it is an [`AcceleratorConfig`](crate::accel::config::AcceleratorConfig)
+//! knob, not a device constant). The optical array needs no cascading:
+//! wavelength concurrency and the 40× clock already deliver 200 words per
+//! fabric cycle (§III-A), which is the point of the paper.
+//!
+//! ## Latency
+//!
+//! The PE pipeline of Fig. 6 has 4 stages (tag access, tag compare, LRU
+//! update / evaluation, data access), clocked in the memory domain, plus
+//! the synchronizer crossing for asynchronous (optical) arrays. Both
+//! pipelines are fully pipelined — latency is overlap-able, throughput is
+//! the binding constraint, which is why the engine charges occupancy in
+//! words and only exposes latency for reporting and for the dependent-
+//! access (pointer-chase) penalty on slice boundaries.
+
+use crate::mem::sync::SyncInterface;
+use crate::mem::tech::MemTechnology;
+
+/// Fig. 6 PE-pipeline depth in memory-core cycles.
+pub const PE_PIPELINE_STAGES: u32 = 4;
+/// Fig. 5 MEM-pipeline depth in memory-core cycles (tag probe, line fill
+/// write, LRU update, response).
+pub const MEM_PIPELINE_STAGES: u32 = 4;
+
+/// Throughput/latency summary of one on-chip SRAM array instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayTiming {
+    /// 32-bit words served per fabric cycle.
+    pub words_per_fabric_cycle: f64,
+    /// Pipelined access latency seen from the fabric, fabric cycles.
+    pub latency_fabric_cycles: f64,
+}
+
+impl ArrayTiming {
+    /// Build timing for an array of the given technology.
+    ///
+    /// `bank_factor` — port-widening cascade for electrical arrays; pass 1
+    /// for optical arrays (see module docs).
+    pub fn new(tech: &MemTechnology, fabric_hz: f64, bank_factor: usize) -> Self {
+        assert!(bank_factor >= 1);
+        let words = tech.words_per_fabric_cycle(fabric_hz) * bank_factor as f64;
+        let sync = SyncInterface::new(tech, fabric_hz);
+        let stages = PE_PIPELINE_STAGES as f64 * fabric_hz / tech.freq_hz;
+        let latency = (stages + sync.crossing_fabric_cycles).max(1.0);
+        ArrayTiming { words_per_fabric_cycle: words, latency_fabric_cycles: latency }
+    }
+
+    /// Fabric cycles of occupancy to transfer `words` 32-bit words.
+    #[inline]
+    pub fn occupancy_cycles(&self, words: f64) -> f64 {
+        words / self.words_per_fabric_cycle
+    }
+}
+
+/// Timing of one cache instance: the PE (hit) pipeline and MEM (fill)
+/// pipeline share the tag/data/LRU arrays (Figs. 5–6), so both draw from
+/// the same word budget; each additionally has its own issue limit of one
+/// request per memory-core cycle.
+#[derive(Clone, Debug)]
+pub struct CacheTiming {
+    /// Shared array bandwidth.
+    pub array: ArrayTiming,
+    /// Words per line (line_bytes / 4).
+    pub words_per_line: usize,
+    /// Max line *requests* issued per fabric cycle per pipeline
+    /// (1 per memory-core cycle).
+    pub issue_per_fabric_cycle: f64,
+}
+
+impl CacheTiming {
+    pub fn new(tech: &MemTechnology, fabric_hz: f64, bank_factor: usize, line_bytes: usize) -> Self {
+        let array = ArrayTiming::new(tech, fabric_hz, bank_factor);
+        CacheTiming {
+            array,
+            words_per_line: line_bytes / 4,
+            issue_per_fabric_cycle: (tech.freq_hz / fabric_hz).max(1.0),
+        }
+    }
+
+    /// Fabric-cycle occupancy of one hit (tag + data read of one line),
+    /// bounded by both the word bandwidth and the issue rate.
+    pub fn hit_occupancy(&self) -> f64 {
+        let bw = self.array.occupancy_cycles(self.words_per_line as f64);
+        let issue = 1.0 / self.issue_per_fabric_cycle;
+        bw.max(issue)
+    }
+
+    /// Fabric-cycle occupancy a miss adds on the MEM pipeline (line fill
+    /// write + tag/LRU update; the DRAM time is charged to the channel).
+    pub fn fill_occupancy(&self) -> f64 {
+        self.hit_occupancy()
+    }
+
+    /// Hit latency (for reporting and dependent-access penalties).
+    pub fn hit_latency(&self) -> f64 {
+        self.array.latency_fabric_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tech::{MemTech, FABRIC_HZ};
+
+    #[test]
+    fn esram_array_words_with_banking() {
+        let e = MemTech::ESram.technology();
+        let t = ArrayTiming::new(&e, FABRIC_HZ, 4);
+        // dual port × 4 banks = 8 words per fabric cycle
+        assert!((t.words_per_fabric_cycle - 8.0).abs() < 1e-12);
+        // synchronous, 4 stages at fabric clock
+        assert!((t.latency_fabric_cycles - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn osram_array_words_match_eq1() {
+        let o = MemTech::OSram.technology();
+        let t = ArrayTiming::new(&o, FABRIC_HZ, 1);
+        assert!((t.words_per_fabric_cycle - 200.0).abs() < 1e-9);
+        // 4 stages at 20 GHz = 0.1 fabric cycles + 2 sync ⇒ 2.1
+        assert!((t.latency_fabric_cycles - 2.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn esram_cache_serves_half_line_per_cycle() {
+        let e = MemTech::ESram.technology();
+        let c = CacheTiming::new(&e, FABRIC_HZ, 4, 64);
+        // 16 words/line over 8 words/cycle ⇒ 2 cycles per request
+        assert!((c.hit_occupancy() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn osram_cache_two_orders_faster() {
+        let o = MemTech::OSram.technology();
+        let e = MemTech::ESram.technology();
+        let co = CacheTiming::new(&o, FABRIC_HZ, 1, 64);
+        let ce = CacheTiming::new(&e, FABRIC_HZ, 4, 64);
+        let ratio = ce.hit_occupancy() / co.hit_occupancy();
+        assert!(ratio > 20.0, "O/E cache throughput ratio {ratio}");
+        // issue rate (40/cycle) binds before word bandwidth for O-SRAM:
+        // 16 words / 200 = 0.08 > 1/40 = 0.025 ⇒ bandwidth-bound at 0.08
+        assert!((co.hit_occupancy() - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_scales_linearly_in_words() {
+        let o = MemTech::OSram.technology();
+        let t = ArrayTiming::new(&o, FABRIC_HZ, 1);
+        assert!((t.occupancy_cycles(400.0) - 2.0 * t.occupancy_cycles(200.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fill_occupancy_positive_and_latency_reported() {
+        for tech in [MemTech::ESram, MemTech::OSram] {
+            let m = tech.technology();
+            let c = CacheTiming::new(&m, FABRIC_HZ, 2, 64);
+            assert!(c.fill_occupancy() > 0.0);
+            assert!(c.hit_latency() >= 1.0);
+        }
+    }
+}

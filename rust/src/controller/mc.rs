@@ -1,0 +1,330 @@
+//! Per-PE memory controller: functional caches + timing for the three
+//! access types of §IV-A.
+//!
+//! 1. **Cache transfers** — random accesses with reuse potential (input
+//!    factor rows). Routed to one of the `n_caches` set-associative
+//!    caches (matrix → cache, round-robin as "each cache is shared with
+//!    multiple input factor matrices").
+//! 2. **DMA stream transfers** — sequential loads/stores (the mode-sorted
+//!    tensor nonzeros in; output factor rows out).
+//! 3. **DMA element-wise transfers** — no locality at all: factor matrices
+//!    whose row space is hopeless for the cache (≫ capacity × bypass
+//!    factor) bypass the cache so they neither pollute it nor pay tag
+//!    overhead; they go straight to DRAM as independent bursts.
+
+use crate::accel::config::AcceleratorConfig;
+use crate::cache::cache::{Access, CacheStats, SetAssocCache};
+use crate::cache::pipeline::{ArrayTiming, CacheTiming};
+use crate::dma::elementwise::ElementDma;
+use crate::dma::stream::StreamDma;
+use crate::mem::dram::{DramChannelState, DramConfig};
+use crate::mem::tech::MemTech;
+
+/// How a factor-row access was served (for the engine's accounting).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Served {
+    CacheHit { cache: usize },
+    CacheMiss { cache: usize, writeback: bool },
+    Bypass,
+}
+
+/// Per-PE memory controller: functional + timing state.
+pub struct MemoryController {
+    pub tech: MemTech,
+    pub caches: Vec<SetAssocCache>,
+    pub cache_timing: CacheTiming,
+    pub stream_dma: StreamDma,
+    pub element_dma: ElementDma,
+    pub dram_cfg: DramConfig,
+    pub dram: DramChannelState,
+    /// Busy cycles per cache (hit path + fill path share the arrays).
+    pub cache_busy: Vec<f64>,
+    /// Busy cycles of the stream/element DMA buffers.
+    pub stream_busy: f64,
+    pub element_busy: f64,
+    /// Active-word counters for the Eq. 3 `S_active` energy terms.
+    pub cache_words: u64,
+    pub dma_words: u64,
+    /// Matrices bypassing the cache (index = matrix slot).
+    bypass: Vec<bool>,
+    line_bytes: u64,
+    /// Data-array ways read per lookup: `assoc` for synchronous arrays
+    /// (speculative parallel way read, Fig. 6), 1 for fast arrays that
+    /// serialize tag→data within a fabric cycle (energy model only; see
+    /// `MemTechnology::serial_tag_data`).
+    ways_read_per_lookup: u64,
+    /// Tag words pulled per probe (all `assoc` candidate tags).
+    tag_words_per_access: u64,
+    // --- hoisted per-access constants (§Perf: computed once, the
+    // factor_row_load fast path runs hundreds of millions of times) ---
+    hit_occ: f64,
+    fill_occ: f64,
+    probe_words: u64,
+    words_per_line: u64,
+    miss_dram_cycles: f64,
+}
+
+/// The electrical cache's MEM pipeline (500 MHz) sustains fewer in-flight
+/// misses than the 20 GHz optical one, reducing the effective bank-level
+/// overlap its DRAM channel achieves on miss bursts (MSHR depth scales
+/// with the pipeline clock). Applied as a multiplier on
+/// `DramConfig::random_overlap` for E-SRAM controllers.
+pub const ESRAM_MISS_OVERLAP_DERATE: f64 = 0.875;
+
+impl MemoryController {
+    /// Build a controller for one PE. `matrix_rows[j]` = row count of input
+    /// factor matrix slot `j` (used for the §IV-A type-3 bypass routing
+    /// decision when `cfg.cache_bypass_factor` is set).
+    pub fn new(cfg: &AcceleratorConfig, tech: MemTech, matrix_rows: &[u64]) -> Self {
+        let t = cfg.technology(tech);
+        let banks = match tech {
+            MemTech::ESram => cfg.esram_bank_factor,
+            MemTech::OSram => 1,
+        };
+        let cache_timing = CacheTiming::new(&t, cfg.fabric_hz, banks, cfg.line_bytes);
+        let buffer_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
+        let caches = (0..cfg.n_caches)
+            .map(|_| SetAssocCache::new(cfg.cache_sets(), cfg.cache_assoc))
+            .collect();
+        let capacity_lines = cfg.cache_lines as u64;
+        let bypass = matrix_rows
+            .iter()
+            .map(|&rows| match cfg.cache_bypass_factor {
+                Some(f) => rows > capacity_lines * f as u64,
+                None => false,
+            })
+            .collect();
+        let mut dram_cfg = cfg.dram.clone();
+        if tech == MemTech::ESram {
+            dram_cfg.random_overlap *= ESRAM_MISS_OVERLAP_DERATE;
+        }
+        let ways_read = if t.serial_tag_data(cfg.fabric_hz) { 1 } else { cfg.cache_assoc as u64 };
+        let words_per_line = (cfg.line_bytes / 4) as u64;
+        let tag_words = cfg.cache_assoc as u64 * 2;
+        MemoryController {
+            tech,
+            caches,
+            hit_occ: cache_timing.hit_occupancy(),
+            fill_occ: cache_timing.fill_occupancy(),
+            probe_words: tag_words + ways_read * words_per_line,
+            words_per_line,
+            miss_dram_cycles: dram_cfg.random_access_cycles(cfg.line_bytes as u64),
+            cache_timing,
+            stream_dma: StreamDma::new(buffer_timing.clone(), cfg.dma_buffer_bytes),
+            element_dma: ElementDma::new(buffer_timing),
+            dram_cfg,
+            dram: DramChannelState::default(),
+            cache_busy: vec![0.0; cfg.n_caches],
+            stream_busy: 0.0,
+            element_busy: 0.0,
+            cache_words: 0,
+            dma_words: 0,
+            bypass,
+            line_bytes: cfg.line_bytes as u64,
+            ways_read_per_lookup: ways_read,
+            tag_words_per_access: tag_words,
+        }
+    }
+
+    /// Which cache serves factor-matrix slot `j`.
+    #[inline]
+    pub fn cache_of(&self, matrix: usize) -> usize {
+        matrix % self.caches.len()
+    }
+
+    /// Is matrix slot `j` routed around the cache?
+    pub fn is_bypassed(&self, matrix: usize) -> bool {
+        self.bypass.get(matrix).copied().unwrap_or(false)
+    }
+
+    /// One factor-row load: the §IV-A type-1 (or type-3, if bypassed) path.
+    /// Charges timing + traffic; returns how it was served.
+    #[inline]
+    pub fn factor_row_load(&mut self, matrix: usize, row: u32) -> Served {
+        if self.is_bypassed(matrix) {
+            let c = self.element_dma.access(&self.dram_cfg, self.line_bytes);
+            self.dram.random_access(&self.dram_cfg, self.line_bytes);
+            self.element_busy += c.buffer_cycles;
+            self.dma_words += c.buffer_words;
+            return Served::Bypass;
+        }
+        let ci = self.cache_of(matrix);
+        let key = crate::cache::cache::row_key(matrix, row);
+        // Fig. 6: every probe reads all `assoc` tags and, on a read hit,
+        // `ways_read_per_lookup` data ways — active words for the energy
+        // model include that fan-out even though the *timing* sees
+        // parallel way banks (one line-time of occupancy). All occupancy
+        // constants are hoisted into the controller (§Perf).
+        match self.caches[ci].access(key, false) {
+            Access::Hit => {
+                self.cache_busy[ci] += self.hit_occ;
+                self.cache_words += self.probe_words;
+                Served::CacheHit { cache: ci }
+            }
+            Access::Miss { evicted_dirty } => {
+                // probe + MEM-pipeline line fill (Fig. 5)
+                self.cache_busy[ci] += self.hit_occ + self.fill_occ;
+                self.cache_words += self.probe_words + self.words_per_line;
+                self.dram.busy_cycles += self.miss_dram_cycles;
+                self.dram.bytes_random += self.line_bytes;
+                self.dram.random_accesses += 1;
+                if evicted_dirty {
+                    self.dram.busy_cycles += self.miss_dram_cycles;
+                    self.dram.bytes_random += self.line_bytes;
+                    self.dram.random_accesses += 1;
+                    self.cache_words += self.words_per_line;
+                }
+                Served::CacheMiss { cache: ci, writeback: evicted_dirty }
+            }
+        }
+    }
+
+    /// Sequential stream of `bytes` (tensor in / output rows out):
+    /// §IV-A type 2.
+    pub fn stream(&mut self, bytes: u64) {
+        let c = self.stream_dma.stream(&self.dram_cfg, bytes);
+        self.dram.stream(&self.dram_cfg, bytes);
+        self.stream_busy += c.buffer_cycles;
+        self.dma_words += c.buffer_words;
+    }
+
+    /// Combined cache statistics across the subsystem.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.caches {
+            s.hits += c.stats.hits;
+            s.misses += c.stats.misses;
+            s.evictions += c.stats.evictions;
+            s.writebacks += c.stats.writebacks;
+        }
+        s
+    }
+
+    /// Busiest single resource the controller owns, in cycles (the
+    /// engine's bottleneck scan folds this in).
+    pub fn max_busy(&self) -> f64 {
+        let cache_max = self.cache_busy.iter().cloned().fold(0.0f64, f64::max);
+        cache_max.max(self.dram.busy_cycles).max(self.stream_busy).max(self.element_busy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::paper_default()
+    }
+
+    #[test]
+    fn routing_matrix_to_cache_round_robin() {
+        let mc = MemoryController::new(&cfg(), MemTech::ESram, &[100, 100, 100, 100]);
+        assert_eq!(mc.cache_of(0), 0);
+        assert_eq!(mc.cache_of(1), 1);
+        assert_eq!(mc.cache_of(2), 2);
+        assert_eq!(mc.cache_of(3), 0);
+    }
+
+    #[test]
+    fn hit_and_miss_paths_charge_resources() {
+        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        let s1 = mc.factor_row_load(0, 7);
+        assert!(matches!(s1, Served::CacheMiss { cache: 0, writeback: false }));
+        let dram_after_miss = mc.dram.busy_cycles;
+        assert!(dram_after_miss > 0.0);
+        let s2 = mc.factor_row_load(0, 7);
+        assert_eq!(s2, Served::CacheHit { cache: 0 });
+        // hit adds cache busy but no dram
+        assert_eq!(mc.dram.busy_cycles, dram_after_miss);
+        assert!(mc.cache_busy[0] > 0.0);
+        assert_eq!(mc.cache_stats().hits, 1);
+        assert_eq!(mc.cache_stats().misses, 1);
+    }
+
+    #[test]
+    fn bypass_off_by_default_routes_everything_to_cache() {
+        let huge = u32::MAX as u64; // would bypass under any finite factor
+        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[huge]);
+        assert!(!mc.is_bypassed(0));
+        mc.factor_row_load(0, 3);
+        assert_eq!(mc.cache_stats().accesses(), 1);
+    }
+
+    #[test]
+    fn esram_miss_concurrency_derate_applies() {
+        let me = MemoryController::new(&cfg(), MemTech::ESram, &[10]);
+        let mo = MemoryController::new(&cfg(), MemTech::OSram, &[10]);
+        assert!(me.dram_cfg.random_overlap < mo.dram_cfg.random_overlap);
+        // stream bandwidth untouched
+        assert_eq!(me.dram_cfg.stream_bytes_per_cycle(), mo.dram_cfg.stream_bytes_per_cycle());
+    }
+
+    #[test]
+    fn huge_matrices_bypass_to_element_dma() {
+        let mut c = cfg();
+        c.cache_bypass_factor = Some(64);
+        let huge = (c.cache_lines * 64 + 1) as u64;
+        let cfg = move || c.clone();
+        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[huge, 100]);
+        assert!(mc.is_bypassed(0));
+        assert!(!mc.is_bypassed(1));
+        assert_eq!(mc.factor_row_load(0, 3), Served::Bypass);
+        // bypass never touches the caches
+        assert_eq!(mc.cache_stats().accesses(), 0);
+        assert!(mc.element_busy > 0.0);
+        assert!(mc.dram.random_accesses == 1);
+    }
+
+    #[test]
+    fn stream_charges_dram_and_buffer() {
+        let mut mc = MemoryController::new(&cfg(), MemTech::OSram, &[10]);
+        mc.stream(1 << 20);
+        assert!(mc.dram.bytes_streamed == 1 << 20);
+        assert!(mc.stream_busy > 0.0);
+        assert!(mc.dma_words > 0);
+    }
+
+    #[test]
+    fn osram_cache_busy_far_below_esram() {
+        let mut me = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        let mut mo = MemoryController::new(&cfg(), MemTech::OSram, &[1000]);
+        for r in 0..1000u32 {
+            me.factor_row_load(0, r % 50);
+            mo.factor_row_load(0, r % 50);
+        }
+        assert!(me.cache_busy[0] > 10.0 * mo.cache_busy[0]);
+        // functional behaviour identical: same hit counts
+        assert_eq!(me.cache_stats(), mo.cache_stats());
+    }
+
+    #[test]
+    fn energy_words_accumulate() {
+        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        mc.factor_row_load(0, 1); // miss: probe + fill words
+        let w_miss = mc.cache_words;
+        mc.factor_row_load(0, 1); // hit: probe words only
+        let w_hit = mc.cache_words - w_miss;
+        assert!(w_miss > w_hit);
+        // synchronous E-SRAM reads all 4 ways speculatively:
+        // 4×16 data + 4×2 tag = 72 words per probe (Table I assoc 4)
+        assert_eq!(w_hit, 4 * 16 + 8);
+    }
+
+    #[test]
+    fn fast_array_serializes_tag_then_data() {
+        // O-SRAM (40× fabric speed) reads tags first, then only the
+        // matching way: 16 data + 8 tag words per hit probe.
+        let mut mc = MemoryController::new(&cfg(), MemTech::OSram, &[1000]);
+        mc.factor_row_load(0, 1);
+        let w_miss = mc.cache_words;
+        mc.factor_row_load(0, 1);
+        let w_hit = mc.cache_words - w_miss;
+        assert_eq!(w_hit, 16 + 8);
+        // ~3× fewer active bits per lookup than the E-SRAM path
+        let mut me = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        me.factor_row_load(0, 1);
+        let we0 = me.cache_words;
+        me.factor_row_load(0, 1);
+        assert_eq!((me.cache_words - we0) / w_hit, 3);
+    }
+}

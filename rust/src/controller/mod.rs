@@ -1,0 +1,6 @@
+//! The PE memory controller (§IV-A): routes each access class to the
+//! right engine — caches for reusable factor rows, streaming DMA for
+//! sequential tensor/output traffic, element-wise DMA for locality-free
+//! accesses.
+
+pub mod mc;

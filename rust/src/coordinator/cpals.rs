@@ -1,0 +1,277 @@
+//! CP-ALS tensor decomposition on top of the MTTKRP paths — the
+//! end-to-end workload (examples/cp_als.rs) proving the full stack
+//! composes: rust coordinator → per-mode MTTKRP through the AOT artifacts
+//! → CP factor update with the mini-linalg solver → fit metric.
+//!
+//! Standard alternating least squares for the CP model
+//! `X ≈ Σ_r λ_r · a_r ⊗ b_r ⊗ c_r …`:
+//!
+//! ```text
+//! for each mode d:  M   = MTTKRP(X, d)            (the kernel under study)
+//!                   V   = ⊛_{m≠d} F_mᵀF_m         (Hadamard of grams)
+//!                   F_d = M V⁻¹ ; normalize columns → λ
+//! fit = 1 − ‖X − X̂‖ / ‖X‖   computed sparsely:
+//!   ‖X − X̂‖² = ‖X‖² − 2⟨X, X̂⟩ + ‖X̂‖²,
+//!   ⟨X, X̂⟩ = Σ_nnz x · Σ_r λ_r Π_m F_m(i_m, r)   (one more MTTKRP-style pass)
+//!   ‖X̂‖²   = λᵀ (⊛_m F_mᵀF_m) λ
+//! ```
+
+use anyhow::Result;
+
+use crate::coordinator::driver::{compute_mode, Compute};
+use crate::coordinator::linalg::{self, SquareMat};
+use crate::mttkrp::reference::FactorMatrix;
+use crate::tensor::coo::SparseTensor;
+
+/// One CP-ALS iteration record (for the fit curve log).
+#[derive(Clone, Copy, Debug)]
+pub struct IterStat {
+    pub iter: usize,
+    pub fit: f64,
+    pub fit_delta: f64,
+}
+
+/// The decomposition result.
+#[derive(Clone, Debug)]
+pub struct CpModel {
+    pub factors: Vec<FactorMatrix>,
+    pub lambda: Vec<f64>,
+    pub history: Vec<IterStat>,
+}
+
+impl CpModel {
+    pub fn final_fit(&self) -> f64 {
+        self.history.last().map(|s| s.fit).unwrap_or(0.0)
+    }
+}
+
+/// CP-ALS configuration.
+#[derive(Clone, Debug)]
+pub struct CpAlsConfig {
+    pub rank: usize,
+    pub max_iters: usize,
+    /// Stop when |Δfit| falls below this.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for CpAlsConfig {
+    fn default() -> Self {
+        CpAlsConfig { rank: 16, max_iters: 20, tol: 1e-5, seed: 42 }
+    }
+}
+
+/// Run CP-ALS. `compute` selects the MTTKRP backend (reference CPU or the
+/// PJRT artifacts).
+pub fn cp_als(
+    tensor: &SparseTensor,
+    cfg: &CpAlsConfig,
+    compute: &Compute<'_>,
+) -> Result<CpModel> {
+    let n = tensor.n_modes();
+    let r = cfg.rank;
+    let mut factors: Vec<FactorMatrix> = tensor
+        .dims
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| FactorMatrix::random(d as usize, r, cfg.seed + m as u64))
+        .collect();
+    let mut lambda = vec![1.0f64; r];
+    // cached grams of every factor
+    let mut grams: Vec<SquareMat> =
+        factors.iter().map(|f| linalg::gram(&f.data, r)).collect();
+
+    let norm_x = tensor.values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let mut history = Vec::new();
+    let mut prev_fit = 0.0f64;
+
+    for iter in 0..cfg.max_iters {
+        for d in 0..n {
+            // M = MTTKRP(X, d) using current factors
+            let m = compute_mode(compute, tensor, d, &factors)?;
+            // V = Hadamard of the other grams (⊛-neutral seed: all-ones)
+            let mut v = SquareMat::ones(r);
+            for (j, g) in grams.iter().enumerate() {
+                if j != d {
+                    v = v.hadamard(g);
+                }
+            }
+            // F_d = M V⁻¹ (solve Vᵀ = V SPD-ish; rows are RHS)
+            let rows = m.rows;
+            let rhs: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+            let solved = linalg::solve_spd(&v, &rhs);
+            let mut new_data: Vec<f32> = solved.iter().map(|&x| x as f32).collect();
+            lambda = linalg::normalize_columns(&mut new_data, r);
+            factors[d] = FactorMatrix { rows, rank: r, data: new_data };
+            grams[d] = linalg::gram(&factors[d].data, r);
+        }
+
+        let fit = fit_metric(tensor, &factors, &lambda, &grams, norm_x);
+        let delta = (fit - prev_fit).abs();
+        history.push(IterStat { iter, fit, fit_delta: delta });
+        if iter > 0 && delta < cfg.tol {
+            break;
+        }
+        prev_fit = fit;
+    }
+    Ok(CpModel { factors, lambda, history })
+}
+
+/// Sparse CP fit: `1 − ‖X − X̂‖ / ‖X‖` (see module docs).
+fn fit_metric(
+    tensor: &SparseTensor,
+    factors: &[FactorMatrix],
+    lambda: &[f64],
+    grams: &[SquareMat],
+    norm_x: f64,
+) -> f64 {
+    let r = lambda.len();
+    // ⟨X, X̂⟩
+    let mut inner = 0.0f64;
+    let mut prod = vec![0.0f64; r];
+    for k in 0..tensor.nnz() {
+        prod.iter_mut().zip(lambda).for_each(|(p, &l)| *p = l);
+        for (m, f) in factors.iter().enumerate() {
+            let row = f.row(tensor.indices[m][k] as usize);
+            for q in 0..r {
+                prod[q] *= row[q] as f64;
+            }
+        }
+        inner += tensor.values[k] as f64 * prod.iter().sum::<f64>();
+    }
+    // ‖X̂‖² = λᵀ (⊛ grams) λ  (⊛-neutral seed: all-ones)
+    let mut had = SquareMat::ones(r);
+    for g in grams {
+        had = had.hadamard(g);
+    }
+    let mut norm_model_sq = 0.0f64;
+    for a in 0..r {
+        for b in 0..r {
+            norm_model_sq += lambda[a] * had.at(a, b) * lambda[b];
+        }
+    }
+    let resid_sq = (norm_x * norm_x - 2.0 * inner + norm_model_sq).max(0.0);
+    1.0 - resid_sq.sqrt() / norm_x.max(1e-30)
+}
+
+/// Build a synthetic tensor with an exact low-rank CP structure plus
+/// noise — the standard recoverability workload for CP-ALS validation.
+pub fn low_rank_tensor(
+    dims: &[u64],
+    true_rank: usize,
+    nnz: usize,
+    noise: f32,
+    seed: u64,
+) -> SparseTensor {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let factors: Vec<FactorMatrix> = dims
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| FactorMatrix::random(d as usize, true_rank, seed ^ (m as u64) << 8))
+        .collect();
+    let mut t = SparseTensor::new("lowrank", dims.to_vec());
+    let mut coords = vec![0u32; dims.len()];
+    // sample distinct cells: duplicates would sum and break low-rankness
+    let mut seen = std::collections::HashSet::new();
+    let cells: f64 = dims.iter().map(|&d| d as f64).product();
+    let nnz = nnz.min((cells * 0.8) as usize);
+    while t.nnz() < nnz {
+        for (m, &d) in dims.iter().enumerate() {
+            coords[m] = rng.below(d) as u32;
+        }
+        if !seen.insert(coords.clone()) {
+            continue;
+        }
+        let mut v = 0.0f64;
+        for q in 0..true_rank {
+            let mut p = 1.0f64;
+            for (m, f) in factors.iter().enumerate() {
+                p *= f.row(coords[m] as usize)[q] as f64;
+            }
+            v += p;
+        }
+        t.push(&coords, v as f32 + noise * (rng.f32() - 0.5));
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_improves_and_converges_on_low_rank_data() {
+        // dense sampling (≈70% fill): a sparse CP model treats unsampled
+        // cells as hard zeros, so only densely-sampled low-rank tensors
+        // are recoverable to high fit.
+        let t = low_rank_tensor(&[12, 12, 12], 3, 1650, 0.0, 7); // ~95% fill
+        let cfg = CpAlsConfig { rank: 6, max_iters: 40, tol: 1e-9, seed: 3 };
+        let model = cp_als(&t, &cfg, &Compute::Reference).unwrap();
+        assert!(model.history.len() >= 2);
+        // ceiling check: the ~5% masked cells bound the achievable fit at
+        // ≈0.5 for the *true* factors; ALS must meet or beat that (it
+        // reaches ≈0.64 — see the dbg study in EXPERIMENTS.md).
+        assert!(model.final_fit() > 0.55, "fit {}", model.final_fit());
+        // monotone-ish improvement: final ≥ first
+        assert!(model.final_fit() >= model.history[0].fit - 1e-6);
+    }
+
+    #[test]
+    fn sparse_masking_lowers_fit() {
+        // the masking effect itself: same generator, sparser sample ⇒
+        // worse CP fit (the implicit zeros fight the low-rank structure)
+        let dense = low_rank_tensor(&[12, 12, 12], 3, 1200, 0.0, 7);
+        let sparse = low_rank_tensor(&[12, 12, 12], 3, 250, 0.0, 7);
+        let cfg = CpAlsConfig { rank: 6, max_iters: 15, tol: 1e-9, seed: 3 };
+        let fd = cp_als(&dense, &cfg, &Compute::Reference).unwrap().final_fit();
+        let fs = cp_als(&sparse, &cfg, &Compute::Reference).unwrap().final_fit();
+        assert!(fd > fs, "dense-fill fit {fd} should beat sparse-fill {fs}");
+    }
+
+    #[test]
+    fn fit_bounded_above_by_one() {
+        let t = low_rank_tensor(&[10, 10, 10], 2, 500, 0.1, 1);
+        let model =
+            cp_als(&t, &CpAlsConfig { rank: 4, max_iters: 5, ..Default::default() }, &Compute::Reference)
+                .unwrap();
+        for s in &model.history {
+            assert!(s.fit <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_lowers_fit() {
+        let clean = low_rank_tensor(&[20, 20, 20], 3, 2000, 0.0, 9);
+        let noisy = low_rank_tensor(&[20, 20, 20], 3, 2000, 2.0, 9);
+        let cfg = CpAlsConfig { rank: 6, max_iters: 10, ..Default::default() };
+        let fc = cp_als(&clean, &cfg, &Compute::Reference).unwrap().final_fit();
+        let fnz = cp_als(&noisy, &cfg, &Compute::Reference).unwrap().final_fit();
+        assert!(fc > fnz, "clean {fc} vs noisy {fnz}");
+    }
+
+    #[test]
+    fn four_mode_decomposition_runs() {
+        let t = low_rank_tensor(&[7, 6, 5, 6], 2, 900, 0.01, 5); // ~71% fill
+        let cfg = CpAlsConfig { rank: 4, max_iters: 20, tol: 1e-9, ..Default::default() };
+        let model = cp_als(&t, &cfg, &Compute::Reference).unwrap();
+        assert_eq!(model.factors.len(), 4);
+        assert!(model.final_fit() > 0.5, "fit {}", model.final_fit());
+    }
+
+    #[test]
+    fn lambda_columns_are_normalized() {
+        let t = low_rank_tensor(&[15, 15, 15], 3, 1000, 0.0, 2);
+        let cfg = CpAlsConfig { rank: 4, max_iters: 3, ..Default::default() };
+        let model = cp_als(&t, &cfg, &Compute::Reference).unwrap();
+        for f in &model.factors {
+            for q in 0..4 {
+                let norm: f64 = (0..f.rows)
+                    .map(|i| (f.row(i)[q] as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!((norm - 1.0).abs() < 1e-3, "column norm {norm}");
+            }
+        }
+        assert!(model.lambda.iter().all(|&l| l > 0.0));
+    }
+}

@@ -1,0 +1,293 @@
+//! Small dense linear algebra for the CP-ALS update (R ≤ 32).
+//!
+//! Everything is row-major `Vec<f64>` (f64 internally: the normal
+//! equations `⊛ grams` can be ill-conditioned and the matrices are tiny,
+//! so precision is free).
+
+/// Row-major square matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SquareMat {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl SquareMat {
+    pub fn zeros(n: usize) -> Self {
+        SquareMat { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// All-ones matrix — the neutral element of the *Hadamard* product
+    /// (using `identity` there zeroes every cross term; see cpals).
+    pub fn ones(n: usize) -> Self {
+        SquareMat { n, data: vec![1.0; n * n] }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &SquareMat) -> SquareMat {
+        assert_eq!(self.n, other.n);
+        SquareMat {
+            n: self.n,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Gram matrix `G = FᵀF` of a row-major `rows × rank` f32 matrix.
+pub fn gram(data: &[f32], rank: usize) -> SquareMat {
+    assert_eq!(data.len() % rank, 0);
+    let rows = data.len() / rank;
+    let mut g = SquareMat::zeros(rank);
+    for i in 0..rows {
+        let row = &data[i * rank..(i + 1) * rank];
+        for a in 0..rank {
+            let ra = row[a] as f64;
+            for b in a..rank {
+                g.data[a * rank + b] += ra * row[b] as f64;
+            }
+        }
+    }
+    // mirror the upper triangle
+    for a in 0..rank {
+        for b in 0..a {
+            g.data[a * rank + b] = g.data[b * rank + a];
+        }
+    }
+    g
+}
+
+/// Cholesky factorization (in place lower triangle). Returns `None` if the
+/// matrix is not positive definite (caller adds ridge and retries).
+pub fn cholesky(m: &SquareMat) -> Option<SquareMat> {
+    let n = m.n;
+    let mut l = SquareMat::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = m.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.at(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `M x = b` for many right-hand sides via Cholesky; `rhs` is
+/// row-major `nrhs × n` (each row one RHS). Adds an escalating ridge if
+/// needed. Returns row-major solutions of the same shape.
+pub fn solve_spd(m: &SquareMat, rhs: &[f64]) -> Vec<f64> {
+    let n = m.n;
+    assert_eq!(rhs.len() % n, 0);
+    let mut ridge = 0.0;
+    let scale = m.max_abs().max(1e-30);
+    let l = loop {
+        let mut try_m = m.clone();
+        if ridge > 0.0 {
+            for i in 0..n {
+                try_m.data[i * n + i] += ridge;
+            }
+        }
+        if let Some(l) = cholesky(&try_m) {
+            break l;
+        }
+        ridge = if ridge == 0.0 { scale * 1e-12 } else { ridge * 100.0 };
+        assert!(ridge < scale * 1e3, "solve_spd: matrix unrecoverably singular");
+    };
+    let nrhs = rhs.len() / n;
+    let mut out = vec![0.0f64; rhs.len()];
+    for r in 0..nrhs {
+        let b = &rhs[r * n..(r + 1) * n];
+        // forward: L y = b
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= l.at(i, k) * y[k];
+            }
+            y[i] = s / l.at(i, i);
+        }
+        // backward: Lᵀ x = y
+        let x = &mut out[r * n..(r + 1) * n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= l.at(k, i) * x[k];
+            }
+            x[i] = s / l.at(i, i);
+        }
+    }
+    out
+}
+
+/// Inverse of an SPD matrix via Cholesky solves against the identity.
+pub fn inv_spd(m: &SquareMat) -> SquareMat {
+    let n = m.n;
+    let eye = SquareMat::identity(n);
+    let x = solve_spd(m, &eye.data);
+    // solve returned rows of M⁻¹ᵀ = M⁻¹ (symmetric)
+    SquareMat { n, data: x }
+}
+
+/// Normalize the columns of a row-major `rows × rank` f32 matrix to unit
+/// 2-norm; returns the column norms λ_r (zero-norm columns get λ = 1 and
+/// are left untouched — keeps CP-ALS stable on degenerate inits).
+pub fn normalize_columns(data: &mut [f32], rank: usize) -> Vec<f64> {
+    let rows = data.len() / rank;
+    let mut norms = vec![0.0f64; rank];
+    for i in 0..rows {
+        for r in 0..rank {
+            let v = data[i * rank + r] as f64;
+            norms[r] += v * v;
+        }
+    }
+    for n in &mut norms {
+        *n = n.sqrt();
+        if *n == 0.0 {
+            *n = 1.0;
+        }
+    }
+    for i in 0..rows {
+        for r in 0..rank {
+            data[i * rank + r] /= norms[r] as f32;
+        }
+    }
+    norms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, FnGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gram_small_hand_check() {
+        // F = [[1, 2], [3, 4]] → FᵀF = [[10, 14], [14, 20]]
+        let g = gram(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(g.data, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let m = SquareMat { n: 2, data: vec![4.0, 2.0, 2.0, 3.0] };
+        let l = cholesky(&m).unwrap();
+        // L Lᵀ = M
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut s = 0.0;
+                for k in 0..2 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - m.at(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = SquareMat { n: 2, data: vec![1.0, 2.0, 2.0, 1.0] }; // eigvals 3, −1
+        assert!(cholesky(&m).is_none());
+    }
+
+    #[test]
+    fn solve_spd_known_system() {
+        let m = SquareMat { n: 2, data: vec![4.0, 2.0, 2.0, 3.0] };
+        // b = M · [1, 2]ᵀ = [8, 8]
+        let x = solve_spd(&m, &[8.0, 8.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inv_spd_times_m_is_identity() {
+        let m = SquareMat { n: 3, data: vec![5.0, 1.0, 0.5, 1.0, 4.0, 0.2, 0.5, 0.2, 3.0] };
+        let inv = inv_spd(&m);
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += inv.at(i, k) * m.at(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-10, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_gets_ridge_not_panic() {
+        let m = SquareMat { n: 2, data: vec![1.0, 1.0, 1.0, 1.0] }; // rank 1
+        let x = solve_spd(&m, &[2.0, 2.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm_and_lambdas() {
+        let mut f = vec![3.0f32, 0.0, 4.0, 0.0]; // col0 = [3,4] norm 5, col1 zero
+        let lam = normalize_columns(&mut f, 2);
+        assert!((lam[0] - 5.0).abs() < 1e-6);
+        assert_eq!(lam[1], 1.0);
+        let n0 = (f[0] * f[0] + f[2] * f[2]).sqrt();
+        assert!((n0 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_solve_recovers_random_spd_systems() {
+        let gen = FnGen(|rng: &mut Rng| {
+            let n = 1 + rng.index(8);
+            // SPD via AᵀA + εI
+            let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let mut m = SquareMat::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = if i == j { 0.1 } else { 0.0 };
+                    for k in 0..n {
+                        s += a[k * n + i] * a[k * n + j];
+                    }
+                    m.set(i, j, s);
+                }
+            }
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let mut b = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += m.at(i, j) * x[j];
+                }
+            }
+            (m.n as u64, m.data.clone(), x, b)
+        });
+        check("solve_spd_recovers", 60, &gen, |(n, data, x, b)| {
+            let m = SquareMat { n: *n as usize, data: data.clone() };
+            let got = solve_spd(&m, b);
+            got.iter().zip(x).all(|(g, w)| (g - w).abs() < 1e-6 * (1.0 + w.abs()))
+        });
+    }
+}

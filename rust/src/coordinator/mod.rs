@@ -1,0 +1,15 @@
+//! The L3 coordinator: ties tensors, the simulator, the energy/area
+//! models and the PJRT numeric path into end-to-end drivers.
+//!
+//! * [`linalg`] — small dense linear algebra (gram, Cholesky solve,
+//!   column normalization) for the CP-ALS update — no external BLAS in
+//!   this environment, and R ≤ 32 keeps everything tiny.
+//! * [`scheduler`] — work partitioning across PEs / numeric block plans.
+//! * [`driver`] — the public simulate/compute entry points (prelude API).
+//! * [`cpals`] — CP-ALS tensor decomposition on top of the MTTKRP paths:
+//!   the end-to-end workload that proves all layers compose.
+
+pub mod cpals;
+pub mod driver;
+pub mod linalg;
+pub mod scheduler;

@@ -1,0 +1,66 @@
+//! Work scheduling: PE partitions for the simulator (re-exported from the
+//! engine) and block plans for the numeric path.
+
+pub use crate::sim::engine::partition_slices;
+
+use crate::tensor::csf::ModeView;
+
+/// A numeric-path execution plan: which slices each worker processes and
+/// how many artifact blocks that amounts to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerPlan {
+    pub worker: usize,
+    /// Slice index range `[lo, hi)` of the mode view.
+    pub slices: (usize, usize),
+    pub nnz: u64,
+    pub blocks: u64,
+}
+
+/// Plan the numeric execution of one mode across `n_workers`, mirroring
+/// the simulator's PE partitioning so the numeric path exercises the same
+/// decomposition the timing model charges for.
+pub fn plan_workers(view: &ModeView, n_workers: usize, block: usize) -> Vec<WorkerPlan> {
+    partition_slices(view, n_workers)
+        .into_iter()
+        .enumerate()
+        .map(|(w, (lo, hi))| {
+            let nnz: u64 = (lo..hi).map(|s| view.slice(s).len() as u64).sum();
+            WorkerPlan {
+                worker: w,
+                slices: (lo, hi),
+                nnz,
+                blocks: nnz.div_ceil(block as u64),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+
+    #[test]
+    fn plans_cover_everything_and_count_blocks() {
+        let t = gen::random(&[100, 40, 40], 10_000, 1);
+        let view = ModeView::build(&t, 0);
+        let plans = plan_workers(&view, 4, 1024);
+        assert_eq!(plans.len(), 4);
+        let total: u64 = plans.iter().map(|p| p.nnz).sum();
+        assert_eq!(total, 10_000);
+        for p in &plans {
+            assert_eq!(p.blocks, p.nnz.div_ceil(1024));
+        }
+        assert_eq!(plans[0].slices.0, 0);
+        assert_eq!(plans.last().unwrap().slices.1, view.n_slices());
+    }
+
+    #[test]
+    fn degenerate_single_worker() {
+        let t = gen::random(&[10, 10], 100, 2);
+        let view = ModeView::build(&t, 1);
+        let plans = plan_workers(&view, 1, 1024);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].nnz, 100);
+    }
+}

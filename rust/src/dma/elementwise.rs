@@ -1,0 +1,71 @@
+//! Element-wise DMA (§IV-A type 3: "DMAs can also be used to access data
+//! with no spatial and temporal locality").
+//!
+//! Every request is an independent DRAM random access staged through the
+//! DMA's on-chip buffer; no reuse is attempted. The memory controller
+//! routes a factor matrix here when its measured reuse potential is too
+//! low for the cache to pay off (the cold alternative of the three access
+//! types) and routes output-row stores here when the output mode is too
+//! scattered to stream.
+
+use crate::cache::pipeline::ArrayTiming;
+use crate::mem::dram::DramConfig;
+
+/// Timing/occupancy model of one element-wise DMA engine.
+#[derive(Clone, Debug)]
+pub struct ElementDma {
+    pub buffer: ArrayTiming,
+}
+
+/// Cycles + traffic of one element-wise transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElementCharge {
+    pub dram_cycles: f64,
+    pub buffer_cycles: f64,
+    pub buffer_words: u64,
+}
+
+impl ElementDma {
+    pub fn new(buffer: ArrayTiming) -> Self {
+        ElementDma { buffer }
+    }
+
+    /// Charge one independent access of `bytes` (≥ one DRAM burst).
+    pub fn access(&self, dram: &DramConfig, bytes: u64) -> ElementCharge {
+        let words = bytes.div_ceil(4);
+        ElementCharge {
+            dram_cycles: dram.random_access_cycles(bytes),
+            buffer_cycles: self.buffer.occupancy_cycles(words as f64),
+            buffer_words: words * 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tech::{MemTech, FABRIC_HZ};
+
+    #[test]
+    fn elementwise_pays_random_access_cost() {
+        let d = DramConfig::default();
+        let e = ElementDma::new(ArrayTiming::new(&MemTech::ESram.technology(), FABRIC_HZ, 4));
+        let c = e.access(&d, 64);
+        assert!((c.dram_cycles - d.random_access_cycles(64)).abs() < 1e-12);
+        assert_eq!(c.buffer_words, 32);
+        // element-wise is slower per byte than streaming even with
+        // bank-level overlap
+        assert!(c.dram_cycles > 2.0 * d.stream_cycles(64));
+    }
+
+    #[test]
+    fn technology_changes_buffer_not_dram() {
+        let d = DramConfig::default();
+        let ee = ElementDma::new(ArrayTiming::new(&MemTech::ESram.technology(), FABRIC_HZ, 4));
+        let eo = ElementDma::new(ArrayTiming::new(&MemTech::OSram.technology(), FABRIC_HZ, 1));
+        let ce = ee.access(&d, 64);
+        let co = eo.access(&d, 64);
+        assert_eq!(ce.dram_cycles, co.dram_cycles); // DRAM identical
+        assert!(co.buffer_cycles < ce.buffer_cycles); // buffer is not
+    }
+}

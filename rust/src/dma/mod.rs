@@ -1,0 +1,9 @@
+//! DMA engines of the PE memory controller (§IV-A access types 2 and 3).
+//!
+//! * [`stream`] — double-buffered streaming DMA for sequential transfers
+//!   (tensor nonzeros in, output factor rows out).
+//! * [`elementwise`] — element-wise DMA for accesses with no spatial or
+//!   temporal locality (bypasses the cache entirely).
+
+pub mod elementwise;
+pub mod stream;

@@ -1,0 +1,3 @@
+//! Energy model (paper §III-B, Eq. 2–3, Table III).
+
+pub mod model;

@@ -1,0 +1,199 @@
+//! Equation 2–3: total accelerator energy for a simulated run.
+//!
+//! ```text
+//! E_FPGA = P_compute × t_runtime
+//!        + E_DRAM-FPGA
+//!        + (P_O-SRAM × n_O-SRAM) × t_runtime               (Eq. 2)
+//!
+//! P_SRAM          = P_static + P_switching                 (Eq. 3)
+//! P_static        = S_total  × (p̂_static_opt + p̂_static_elec)
+//! P_switching     = S_active × (p̂_conversion + p̂_storage)
+//! ```
+//!
+//! The simulator reports *activity* (active words per component, DRAM
+//! traffic, runtime); this module turns activity into joules using the
+//! Table III per-bit constants carried by the [`MemTechnology`]. The
+//! `(P × n_blocks) × t` product of Eq. 2 is evaluated as
+//! `S_total × p̂_static × cycles` for the static part (identical algebra,
+//! but exact for partially-filled blocks) plus `S_active × p̂_switching`
+//! for the switching part (which is time-independent, as Eq. 3's
+//! "active bits in a given clock cycle" integrates to total bits moved).
+
+use crate::accel::config::AcceleratorConfig;
+use crate::accel::design::OnChipBudget;
+use crate::mem::tech::MemTech;
+use crate::sim::result::{ModeReport, SimReport};
+
+/// Energy breakdown of one run, in joules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// `P_compute × t_runtime`.
+    pub compute_j: f64,
+    /// `E_DRAM-FPGA`: external-memory interface + array energy.
+    pub dram_j: f64,
+    /// On-chip static (leakage / bias) energy over the runtime.
+    pub static_j: f64,
+    /// On-chip switching energy for all active bits moved.
+    pub switching_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.dram_j + self.static_j + self.switching_j
+    }
+}
+
+/// The Eq. 2 evaluator bound to one accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub cfg: AcceleratorConfig,
+    /// On-chip bits the design instantiates (S_total of Eq. 3).
+    pub s_total_bits: u64,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        let budget = OnChipBudget::from_config(cfg);
+        EnergyModel { cfg: cfg.clone(), s_total_bits: budget.total_bits() }
+    }
+
+    /// Energy of one simulated mode.
+    pub fn mode_energy(&self, report: &ModeReport) -> EnergyBreakdown {
+        let tech = report.tech.technology();
+        let t_s = report.runtime_s();
+        let cycles = report.runtime_cycles();
+
+        // P_compute × t
+        let compute_j = self.cfg.compute_power_w * t_s;
+
+        // E_DRAM-FPGA: per-PE traffic through the per-PE channel
+        let mut dram_pj = 0.0;
+        for pe in &report.pes {
+            dram_pj += self.cfg.dram.transfer_pj(pe.dram_stream_bytes, 0);
+            dram_pj += self.cfg.dram.transfer_pj(pe.dram_random_bytes, pe.dram_random_accesses);
+        }
+
+        // Eq. 3 static: S_total × p̂_static × cycles
+        let static_pj = tech.static_pj_per_cycle(self.s_total_bits) * cycles;
+
+        // Eq. 3 switching: S_active × (p̂_conversion + p̂_storage)
+        let active_bits = report.total_onchip_words() * 32;
+        let switching_pj = tech.switching_pj(active_bits);
+
+        EnergyBreakdown {
+            compute_j: compute_j,
+            dram_j: dram_pj * 1e-12,
+            static_j: static_pj * 1e-12,
+            switching_j: switching_pj * 1e-12,
+        }
+    }
+
+    /// Energy of a full all-modes spMTTKRP run (modes execute serially).
+    pub fn run_energy(&self, report: &SimReport) -> EnergyBreakdown {
+        let mut acc = EnergyBreakdown::default();
+        for m in &report.modes {
+            let e = self.mode_energy(m);
+            acc.compute_j += e.compute_j;
+            acc.dram_j += e.dram_j;
+            acc.static_j += e.static_j;
+            acc.switching_j += e.switching_j;
+        }
+        acc
+    }
+}
+
+/// Fig. 8's metric: `E(E-SRAM run) / E(O-SRAM run)`.
+pub fn energy_savings(
+    model: &EnergyModel,
+    esram_run: &SimReport,
+    osram_run: &SimReport,
+) -> f64 {
+    assert_eq!(esram_run.tech, MemTech::ESram);
+    assert_eq!(osram_run.tech, MemTech::OSram);
+    model.run_energy(esram_run).total_j() / model.run_energy(osram_run).total_j()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate_all_modes, simulate_mode};
+    use crate::tensor::gen::{self, TensorSpec};
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+    }
+
+    #[test]
+    fn breakdown_components_all_positive() {
+        let t = gen::random(&[100, 100, 100], 20_000, 1);
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let r = simulate_mode(&t, 0, &cfg, MemTech::ESram);
+        let e = m.mode_energy(&r);
+        assert!(e.compute_j > 0.0);
+        assert!(e.dram_j > 0.0);
+        assert!(e.static_j > 0.0);
+        assert!(e.switching_j > 0.0);
+        assert!((e.total_j() - (e.compute_j + e.dram_j + e.static_j + e.switching_j)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn osram_saves_energy_on_hot_workload() {
+        let t = TensorSpec::custom("hot", vec![48, 48, 48], 50_000, 1.0).generate(2);
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let re = simulate_all_modes(&t, &cfg, MemTech::ESram);
+        let ro = simulate_all_modes(&t, &cfg, MemTech::OSram);
+        let savings = energy_savings(&m, &re, &ro);
+        assert!(savings > 2.0, "hot-workload savings {savings}");
+        assert!(savings < 20.0, "savings {savings} implausibly high");
+    }
+
+    #[test]
+    fn osram_still_saves_on_cold_workload() {
+        let t =
+            TensorSpec::custom("cold", vec![900_000, 800_000, 900_000], 50_000, 0.05).generate(2);
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let re = simulate_all_modes(&t, &cfg, MemTech::ESram);
+        let ro = simulate_all_modes(&t, &cfg, MemTech::OSram);
+        let savings = energy_savings(&m, &re, &ro);
+        assert!(savings > 1.0, "cold savings {savings}");
+    }
+
+    #[test]
+    fn switching_dominates_for_esram_hot_runs() {
+        // Table III: 4.68 pJ/bit switching is the headline cost of the
+        // electrical technology.
+        let t = TensorSpec::custom("hot", vec![48, 48, 48], 50_000, 1.0).generate(3);
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let r = simulate_mode(&t, 0, &cfg, MemTech::ESram);
+        let e = m.mode_energy(&r);
+        assert!(e.switching_j > e.dram_j);
+        assert!(e.switching_j > e.static_j);
+    }
+
+    #[test]
+    fn static_energy_scales_with_runtime_not_traffic() {
+        let t = gen::random(&[64, 64, 64], 10_000, 5);
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let r = simulate_mode(&t, 0, &cfg, MemTech::OSram);
+        let e = m.mode_energy(&r);
+        let tech = MemTech::OSram.technology();
+        let expect = tech.static_pj_per_cycle(m.s_total_bits) * r.runtime_cycles() * 1e-12;
+        assert!((e.static_j - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn energy_monotone_in_nnz() {
+        let cfg = cfg();
+        let m = EnergyModel::new(&cfg);
+        let t1 = gen::random(&[128, 128, 128], 10_000, 9);
+        let t2 = gen::random(&[128, 128, 128], 40_000, 9);
+        let e1 = m.mode_energy(&simulate_mode(&t1, 0, &cfg, MemTech::ESram));
+        let e2 = m.mode_energy(&simulate_mode(&t2, 0, &cfg, MemTech::ESram));
+        assert!(e2.total_j() > e1.total_j());
+    }
+}

@@ -1,0 +1,68 @@
+//! # photon-mttkrp
+//!
+//! Reproduction of *"Performance Modeling Sparse MTTKRP Using Optical Static
+//! Random Access Memory on FPGA"* (Wijeratne et al., 2022).
+//!
+//! The crate models a wafer-scale FPGA whose on-chip electrical SRAM
+//! (BRAM/URAM) has been replaced by optical SRAM (O-SRAM: 20 GHz, 5 WDM
+//! wavelengths, 200 concurrent 32-bit ports per 32 Kb block) and simulates a
+//! sparse-MTTKRP accelerator (4 PEs × 80 parallel rank-R pipelines, a
+//! 3-cache subsystem, stream/element DMAs, DDR4 external memory) on both
+//! memory technologies, reproducing the paper's speedup (Fig. 7), energy
+//! (Fig. 8, Table III) and area (Table IV) results.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — the accelerator simulator, energy/area models,
+//!   tensor substrates, PE scheduler, CP-ALS driver, CLI, benches.
+//! * **L2/L1 (build-time python)** — the MTTKRP block compute as a JAX
+//!   graph wrapping a Pallas kernel, AOT-lowered to HLO text.
+//! * **[`runtime`]** — loads `artifacts/*.hlo.txt` via the PJRT C API and
+//!   executes them from the Rust hot path; python never runs at runtime.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use photon_mttkrp::prelude::*;
+//!
+//! let tensor = frostt::preset(FrosttTensor::Nell2).scaled(1.0 / 256.0).generate(42);
+//! let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 256.0);
+//! let e = simulate_mode(&tensor, 0, &cfg, MemTech::ESram);
+//! let o = simulate_mode(&tensor, 0, &cfg, MemTech::OSram);
+//! println!("mode-0 speedup: {:.2}x", e.runtime_s() / o.runtime_s());
+//! ```
+
+pub mod accel;
+pub mod area;
+pub mod cache;
+pub mod controller;
+pub mod coordinator;
+pub mod dma;
+pub mod energy;
+pub mod mem;
+pub mod mttkrp;
+pub mod pe;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::accel::config::AcceleratorConfig;
+    pub use crate::area::model::AreaModel;
+    pub use crate::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
+    pub use crate::coordinator::driver::{
+        compare_technologies, simulate_all_modes, simulate_mode, Compute,
+    };
+    pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
+    pub use crate::mem::tech::MemTech;
+    pub use crate::mttkrp::reference::FactorMatrix;
+    pub use crate::runtime::client::Runtime;
+    pub use crate::sim::result::{ModeReport, SimReport};
+    pub use crate::tensor::coo::SparseTensor;
+    pub use crate::tensor::gen as frostt;
+    pub use crate::tensor::gen::{FrosttTensor, TensorSpec};
+}

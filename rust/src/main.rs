@@ -1,0 +1,222 @@
+//! `photon-mttkrp` — CLI for the O-SRAM spMTTKRP performance model.
+//!
+//! ```text
+//! photon-mttkrp info [--tensors]          platform + Table I/II echo
+//! photon-mttkrp simulate --tensor nell-2 [--scale S] [--tech both] [--mode M]
+//! photon-mttkrp reproduce [--scale S]     all paper tables + figures
+//! photon-mttkrp cpals [--rank R] [--iters N] [--artifacts]
+//! photon-mttkrp mttkrp <file.tns> [--mode M] [--artifacts]
+//! ```
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
+use photon_mttkrp::coordinator::driver::{compare_technologies, simulate_mode, Compute};
+use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mttkrp::reference::FactorMatrix;
+use photon_mttkrp::report::paper;
+use photon_mttkrp::runtime::client::Runtime;
+use photon_mttkrp::tensor::coo::SparseTensor;
+use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
+use photon_mttkrp::util::cli::{CliError, Command, Parsed};
+use photon_mttkrp::util::configfile::Config;
+
+fn cli() -> Command {
+    Command::new("photon-mttkrp", "O-SRAM vs E-SRAM spMTTKRP performance model")
+        .subcommand(
+            Command::new("info", "show platform, Table I config and the tensor suite")
+                .flag("tensors", 't', "also print Table II")
+                .opt("config", "FILE", "accelerator config file (TOML subset)", None),
+        )
+        .subcommand(
+            Command::new("simulate", "simulate one tensor on one or both technologies")
+                .opt("tensor", "NAME", "FROSTT preset name (e.g. nell-2)", Some("nell-2"))
+                .opt("scale", "S", "workload scale factor", Some("0.001"))
+                .opt("seed", "N", "generator seed", Some("42"))
+                .opt("mode", "M", "single output mode (default: all)", None)
+                .opt("tech", "T", "e-sram | o-sram | both", Some("both"))
+                .opt("config", "FILE", "accelerator config file", None),
+        )
+        .subcommand(
+            Command::new("reproduce", "regenerate every paper table and figure")
+                .opt("scale", "S", "workload scale factor", Some("0.001"))
+                .opt("seed", "N", "generator seed", Some("42"))
+                .flag("markdown", 'm', "emit Markdown instead of ASCII"),
+        )
+        .subcommand(
+            Command::new("cpals", "run CP-ALS end-to-end (fit curve)")
+                .opt("rank", "R", "decomposition rank", Some("16"))
+                .opt("iters", "N", "max ALS iterations", Some("20"))
+                .opt("nnz", "N", "synthetic tensor nonzeros", Some("50000"))
+                .opt("dim", "D", "mode dimension", Some("200"))
+                .opt("seed", "N", "seed", Some("42"))
+                .flag("artifacts", 'a', "use the PJRT artifacts (default: CPU reference)"),
+        )
+        .subcommand(
+            Command::new("mttkrp", "run spMTTKRP on a FROSTT .tns file")
+                .positional("input", "path to .tns file", true)
+                .opt("mode", "M", "output mode", Some("0"))
+                .opt("rank", "R", "rank (16 or 32 for --artifacts)", Some("16"))
+                .flag("artifacts", 'a', "use the PJRT artifacts"),
+        )
+}
+
+fn load_config(p: &Parsed) -> Result<AcceleratorConfig, String> {
+    let mut cfg = AcceleratorConfig::paper_default();
+    if let Some(path) = p.get("config") {
+        let file = Config::load(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+        cfg.apply_config(&file)?;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<(), String> {
+    let cmd = cli();
+    let p = cmd.parse_env().map_err(|e: CliError| e.to_string())?;
+    if p.help_requested || p.subcommand().is_none() {
+        println!("{}", cmd.help());
+        return Ok(());
+    }
+    match p.subcommand().unwrap() {
+        "info" => {
+            let cfg = load_config(&p)?;
+            println!("{}", paper::table_i(&cfg).render_ascii());
+            println!("{}", paper::table_iii().render_ascii());
+            println!("{}", paper::table_iv(&cfg).render_ascii());
+            if p.flag("tensors") {
+                println!("{}", paper::table_ii(1.0).render_ascii());
+            }
+        }
+        "simulate" => {
+            let cfg_base = load_config(&p)?;
+            let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
+            let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
+            let name = p.get("tensor").unwrap();
+            let ft = FrosttTensor::from_name(name)
+                .ok_or_else(|| format!("unknown tensor `{name}`"))?;
+            let cfg = cfg_base.scaled(scale);
+            let tensor = preset(ft).scaled(scale).generate(seed);
+            eprintln!("generated {} ({} nnz)", tensor.name, tensor.nnz());
+            match p.get("tech").unwrap() {
+                "both" => {
+                    let c = compare_technologies(&tensor, &cfg);
+                    for (m, s) in c.mode_speedups().iter().enumerate() {
+                        println!(
+                            "M{m}: e-sram {:.3e}s  o-sram {:.3e}s  speedup {s:.2}x  (hit {:.1}% / bottleneck {})",
+                            c.esram.modes[m].runtime_s(),
+                            c.osram.modes[m].runtime_s(),
+                            c.osram.modes[m].hit_rate() * 100.0,
+                            c.esram.modes[m].bottleneck().name(),
+                        );
+                    }
+                    println!(
+                        "total: speedup {:.2}x  energy savings {:.2}x",
+                        c.total_speedup(),
+                        c.energy_savings()
+                    );
+                }
+                t @ ("e-sram" | "o-sram") => {
+                    let tech = if t == "e-sram" { MemTech::ESram } else { MemTech::OSram };
+                    let modes: Vec<usize> = match p.get("mode") {
+                        Some(m) => vec![m.parse().map_err(|e| format!("--mode: {e}"))?],
+                        None => (0..tensor.n_modes()).collect(),
+                    };
+                    for m in modes {
+                        let r = simulate_mode(&tensor, m, &cfg, tech);
+                        println!(
+                            "M{m} [{}]: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
+                            tech.name(),
+                            r.runtime_s(),
+                            r.runtime_cycles(),
+                            r.hit_rate() * 100.0,
+                            r.bottleneck().name()
+                        );
+                    }
+                }
+                other => return Err(format!("unknown tech `{other}`")),
+            }
+        }
+        "reproduce" => {
+            let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
+            let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
+            let cfg = AcceleratorConfig::paper_default();
+            let render = |t: &photon_mttkrp::util::table::Table| {
+                if p.flag("markdown") {
+                    t.render_markdown()
+                } else {
+                    t.render_ascii()
+                }
+            };
+            println!("{}", render(&paper::table_i(&cfg)));
+            println!("{}", render(&paper::table_ii(scale)));
+            println!("{}", render(&paper::table_iii()));
+            println!("{}", render(&paper::table_iv(&cfg)));
+            eprintln!("running the 7-tensor suite at scale {scale:.1e} ...");
+            let results = paper::evaluate_suite(scale, seed);
+            println!("{}", render(&paper::fig7(&results)));
+            println!("{}", render(&paper::fig8(&results)));
+        }
+        "cpals" => {
+            let rank = p.get_usize("rank").map_err(|e| e.to_string())?;
+            let iters = p.get_usize("iters").map_err(|e| e.to_string())?;
+            let nnz = p.get_usize("nnz").map_err(|e| e.to_string())?;
+            let dim = p.get_u64("dim").map_err(|e| e.to_string())?;
+            let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
+            let tensor = low_rank_tensor(&[dim, dim, dim], rank / 2, nnz, 0.01, seed);
+            let cfg = CpAlsConfig { rank, max_iters: iters, tol: 1e-6, seed };
+            let rt;
+            let compute = if p.flag("artifacts") {
+                rt = Runtime::from_default_dir().map_err(|e| e.to_string())?;
+                Compute::Artifacts(&rt)
+            } else {
+                Compute::Reference
+            };
+            let model = cp_als(&tensor, &cfg, &compute).map_err(|e| e.to_string())?;
+            for s in &model.history {
+                println!("iter {:>3}: fit {:.6} (delta {:.2e})", s.iter, s.fit, s.fit_delta);
+            }
+            println!("final fit: {:.6}", model.final_fit());
+        }
+        "mttkrp" => {
+            let path = &p.positionals[0];
+            let mode = p.get_usize("mode").map_err(|e| e.to_string())?;
+            let rank = p.get_usize("rank").map_err(|e| e.to_string())?;
+            let tensor = SparseTensor::load_tns(std::path::Path::new(path))
+                .map_err(|e| e.to_string())?;
+            let factors: Vec<FactorMatrix> = tensor
+                .dims
+                .iter()
+                .enumerate()
+                .map(|(m, &d)| FactorMatrix::random(d as usize, rank, 7 + m as u64))
+                .collect();
+            let rt;
+            let compute = if p.flag("artifacts") {
+                rt = Runtime::from_default_dir().map_err(|e| e.to_string())?;
+                Compute::Artifacts(&rt)
+            } else {
+                Compute::Reference
+            };
+            let t0 = std::time::Instant::now();
+            let out = photon_mttkrp::coordinator::driver::compute_mode(
+                &compute, &tensor, mode, &factors,
+            )
+            .map_err(|e| e.to_string())?;
+            println!(
+                "mttkrp mode {mode}: {} nnz -> {}x{} output in {:.3}s (frobenius {:.4})",
+                tensor.nnz(),
+                out.rows,
+                out.rank,
+                t0.elapsed().as_secs_f64(),
+                out.frobenius()
+            );
+        }
+        other => return Err(format!("unknown subcommand `{other}`")),
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

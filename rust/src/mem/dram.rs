@@ -1,0 +1,206 @@
+//! DDR4 external-memory channel model (§III-A: "FPGA external memory
+//! contains multiple DRAMs which use DDR4 technology").
+//!
+//! The Alveo U250-class card the paper parameterizes against has 4 DDR4-2400
+//! 64-bit channels (one per PE in the Fig. 4 design). The model is a
+//! throughput/latency hybrid: streams are charged at sustained bandwidth,
+//! random (element-wise) accesses are charged the row-buffer-aware service
+//! time, and every access accrues interface energy. This is the shared
+//! substrate both memory technologies see — external memory is *identical*
+//! in the two systems, which is exactly why DRAM-bound tensors (NELL-1,
+//! DELICIOUS) show little O-SRAM speedup in Fig. 7.
+
+use crate::mem::tech::FABRIC_HZ;
+
+/// DDR4 channel parameters (DDR4-2400, 64-bit, typical data-center card).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramConfig {
+    /// Peak transfer rate, bytes/s (2400 MT/s × 8 B = 19.2 GB/s).
+    pub peak_bytes_per_s: f64,
+    /// Sustained fraction of peak for long sequential streams.
+    pub stream_efficiency: f64,
+    /// Burst granularity in bytes (BL8 × 64-bit bus = 64 B — deliberately
+    /// equal to the cache line of Table I).
+    pub burst_bytes: u32,
+    /// Row-buffer hit service latency, ns (CAS-bound).
+    pub row_hit_ns: f64,
+    /// Row-buffer miss service latency, ns (precharge + activate + CAS).
+    pub row_miss_ns: f64,
+    /// Probability an element-wise access hits an open row (captures
+    /// residual locality of the index stream).
+    pub random_row_hit_rate: f64,
+    /// Effective overlap of independent random accesses (bank-level
+    /// parallelism × memory-controller reordering): the channel sustains
+    /// `overlap` in-flight requests, so the per-access *occupancy* is the
+    /// service time divided by this factor.
+    pub random_overlap: f64,
+    /// Interface + array energy per transferred bit, pJ (DDR4 device-level
+    /// array access + I/O ≈ 4 pJ/bit; the paper's E_DRAM-FPGA term).
+    pub energy_pj_per_bit: f64,
+    /// Extra energy per row activation, pJ.
+    pub activate_pj: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            peak_bytes_per_s: 19.2e9,
+            stream_efficiency: 0.85,
+            burst_bytes: 64,
+            row_hit_ns: 15.0,
+            row_miss_ns: 45.0,
+            random_row_hit_rate: 0.35,
+            random_overlap: 4.0,
+            energy_pj_per_bit: 4.0,
+            activate_pj: 900.0,
+        }
+    }
+}
+
+impl DramConfig {
+    /// Sustained stream bandwidth in bytes per fabric cycle.
+    pub fn stream_bytes_per_cycle(&self) -> f64 {
+        self.peak_bytes_per_s * self.stream_efficiency / FABRIC_HZ
+    }
+
+    /// Fabric cycles to stream `bytes` sequentially (DMA stream transfers).
+    pub fn stream_cycles(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.stream_bytes_per_cycle()
+    }
+
+    /// Fabric cycles for one element-wise access of `bytes` (≤ one burst:
+    /// a 64 B burst is the minimum transfer; larger requests take multiple
+    /// bursts pipelined at the row-hit rate).
+    pub fn random_access_cycles(&self, bytes: u64) -> f64 {
+        let bursts = (bytes as f64 / self.burst_bytes as f64).ceil().max(1.0);
+        let first_ns = self.random_row_hit_rate * self.row_hit_ns
+            + (1.0 - self.random_row_hit_rate) * self.row_miss_ns;
+        // follow-on bursts in the same request stay in the open row
+        let ns = first_ns + (bursts - 1.0) * self.row_hit_ns;
+        // bank-level parallelism overlaps independent requests
+        ns * 1e-9 * FABRIC_HZ / self.random_overlap
+    }
+
+    /// Interface energy for transferring `bytes`, pJ (plus expected
+    /// activation energy for `accesses` independent requests).
+    pub fn transfer_pj(&self, bytes: u64, accesses: u64) -> f64 {
+        let miss_rate = 1.0 - self.random_row_hit_rate;
+        bytes as f64 * 8.0 * self.energy_pj_per_bit
+            + accesses as f64 * miss_rate * self.activate_pj
+    }
+}
+
+/// Mutable per-channel accounting used by the simulator: busy time and
+/// traffic counters accumulate as the engine charges work to the channel.
+#[derive(Clone, Debug, Default)]
+pub struct DramChannelState {
+    pub busy_cycles: f64,
+    pub bytes_streamed: u64,
+    pub bytes_random: u64,
+    pub random_accesses: u64,
+}
+
+impl DramChannelState {
+    /// Charge a sequential stream of `bytes`; returns cycles consumed.
+    pub fn stream(&mut self, cfg: &DramConfig, bytes: u64) -> f64 {
+        let c = cfg.stream_cycles(bytes);
+        self.busy_cycles += c;
+        self.bytes_streamed += bytes;
+        c
+    }
+
+    /// Charge one element-wise access of `bytes`; returns cycles consumed.
+    pub fn random_access(&mut self, cfg: &DramConfig, bytes: u64) -> f64 {
+        let c = cfg.random_access_cycles(bytes);
+        self.busy_cycles += c;
+        self.bytes_random += bytes;
+        self.random_accesses += 1;
+        c
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_streamed + self.bytes_random
+    }
+
+    /// Total DRAM-side energy (the paper's `E_DRAM-FPGA`), pJ.
+    pub fn energy_pj(&self, cfg: &DramConfig) -> f64 {
+        cfg.transfer_pj(self.bytes_streamed, 0)
+            + cfg.transfer_pj(self.bytes_random, self.random_accesses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_bandwidth_matches_config() {
+        let d = DramConfig::default();
+        // 19.2 GB/s × 0.85 at 500 MHz ⇒ 32.64 B/cycle
+        assert!((d.stream_bytes_per_cycle() - 32.64).abs() < 1e-9);
+        // 1 MiB stream
+        let cyc = d.stream_cycles(1 << 20);
+        assert!((cyc - (1 << 20) as f64 / 32.64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_slower_than_stream_per_byte() {
+        let d = DramConfig::default();
+        let per_byte_stream = d.stream_cycles(64) / 64.0;
+        let per_byte_random = d.random_access_cycles(64) / 64.0;
+        assert!(
+            per_byte_random > 2.0 * per_byte_stream,
+            "random {per_byte_random} vs stream {per_byte_stream}"
+        );
+    }
+
+    #[test]
+    fn random_access_latency_band() {
+        let d = DramConfig::default();
+        // expected occupancy between overlapped row-hit and row-miss extremes
+        let cyc = d.random_access_cycles(64);
+        let lo = d.row_hit_ns * 1e-9 * FABRIC_HZ / d.random_overlap;
+        let hi = d.row_miss_ns * 1e-9 * FABRIC_HZ / d.random_overlap;
+        assert!(cyc > lo && cyc < hi, "{cyc} not in ({lo}, {hi})");
+    }
+
+    #[test]
+    fn overlap_divides_occupancy() {
+        let mut d = DramConfig::default();
+        let base = d.random_access_cycles(64);
+        d.random_overlap = 8.0;
+        assert!((d.random_access_cycles(64) - base / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_burst_requests_pipeline() {
+        let d = DramConfig::default();
+        let one = d.random_access_cycles(64);
+        let four = d.random_access_cycles(256);
+        assert!(four < 4.0 * one, "follow-on bursts must be cheaper");
+        assert!(four > one);
+    }
+
+    #[test]
+    fn channel_state_accumulates_and_energizes() {
+        let d = DramConfig::default();
+        let mut ch = DramChannelState::default();
+        ch.stream(&d, 1000);
+        ch.random_access(&d, 64);
+        ch.random_access(&d, 64);
+        assert_eq!(ch.total_bytes(), 1128);
+        assert_eq!(ch.random_accesses, 2);
+        assert!(ch.busy_cycles > 0.0);
+        let e = ch.energy_pj(&d);
+        // at least the pure interface energy
+        assert!(e >= 1128.0 * 8.0 * d.energy_pj_per_bit);
+        // activation overhead present
+        assert!(e > 1128.0 * 8.0 * d.energy_pj_per_bit + 0.5 * d.activate_pj);
+    }
+
+    #[test]
+    fn energy_scales_with_traffic() {
+        let d = DramConfig::default();
+        assert!(d.transfer_pj(2000, 0) == 2.0 * d.transfer_pj(1000, 0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Memory technology models (paper §II–III).
+//!
+//! * [`tech`] — the [`tech::MemTechnology`] device model shared by both
+//!   SRAM variants: frequency, WDM wavelengths, ports, Eq. 1 bandwidth,
+//!   Table III per-bit energies, Table IV per-bit area.
+//! * [`esram`] — electrical SRAM (Xilinx BRAM/URAM-class) parameters.
+//! * [`osram`] — optical SRAM parameters ([14]'s device: 20 GHz, λ = 5,
+//!   200 × 32-bit concurrent ports per 32 Kb block).
+//! * [`dram`] — the DDR4 external-memory channel model (§III-A "inputs
+//!   initially reside in the FPGA external memory").
+//! * [`sync`] — the synchronization interface between the 500 MHz
+//!   electrical mesh and the 20 GHz optical memory clock domain (Fig. 2).
+
+pub mod dram;
+pub mod esram;
+pub mod osram;
+pub mod sync;
+pub mod tech;

@@ -1,0 +1,121 @@
+//! Clock-domain synchronization interface (Fig. 2: "An O-SRAM uses a
+//! synchronization interface to connect with the configurable mesh due to
+//! the operation frequency difference between electrical compute components
+//! and optical memory components").
+//!
+//! Modeled as a dual-clock FIFO: a request crossing from the 500 MHz mesh
+//! into the 20 GHz memory domain (and its response crossing back) pays a
+//! fixed synchronizer latency per direction, and the interface throughput
+//! is bounded by Eq. 1's `b_process` on the memory side and by the mesh
+//! port width on the fabric side. For E-SRAM (synchronous) the crossing
+//! cost is zero.
+
+use crate::mem::tech::MemTechnology;
+
+/// A clock domain with frequency in Hz.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClockDomain {
+    pub hz: f64,
+}
+
+impl ClockDomain {
+    pub fn new(hz: f64) -> Self {
+        assert!(hz > 0.0);
+        ClockDomain { hz }
+    }
+
+    /// Convert a cycle count in this domain to seconds.
+    pub fn to_seconds(&self, cycles: f64) -> f64 {
+        cycles / self.hz
+    }
+
+    /// Convert seconds to cycles of this domain.
+    pub fn cycles(&self, seconds: f64) -> f64 {
+        seconds * self.hz
+    }
+
+    /// Convert cycles of `self` to cycles of `other`.
+    pub fn convert(&self, cycles: f64, other: &ClockDomain) -> f64 {
+        cycles * other.hz / self.hz
+    }
+}
+
+/// The mesh↔memory synchronization interface for one memory technology.
+#[derive(Clone, Debug)]
+pub struct SyncInterface {
+    pub fabric: ClockDomain,
+    pub memory: ClockDomain,
+    /// Dual-clock FIFO synchronizer depth, in *fabric* cycles per crossing
+    /// direction (2-flop synchronizer ⇒ 2 cycles of the receiving clock;
+    /// the receiving clock for requests is the fast memory clock — free —
+    /// and for responses the fabric clock — 2 cycles).
+    pub crossing_fabric_cycles: f64,
+}
+
+impl SyncInterface {
+    /// Build the interface for a memory technology at a given fabric clock.
+    pub fn new(tech: &MemTechnology, fabric_hz: f64) -> Self {
+        let synchronous = (tech.freq_hz - fabric_hz).abs() < 1.0;
+        SyncInterface {
+            fabric: ClockDomain::new(fabric_hz),
+            memory: ClockDomain::new(tech.freq_hz),
+            // asynchronous domains pay a 2-flop synchronizer on the
+            // response path; synchronous arrays pay nothing.
+            crossing_fabric_cycles: if synchronous { 0.0 } else { 2.0 },
+        }
+    }
+
+    /// Round-trip latency of one memory access seen from the fabric, in
+    /// fabric cycles: request crossing + array access + response crossing.
+    pub fn round_trip_fabric_cycles(&self, tech: &MemTechnology) -> f64 {
+        let array = tech.access_latency_cycles as f64 * self.fabric.hz / self.memory.hz;
+        self.crossing_fabric_cycles + array.max(if self.crossing_fabric_cycles == 0.0 { 1.0 } else { 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tech::{MemTech, FABRIC_HZ};
+
+    #[test]
+    fn clock_conversions() {
+        let fast = ClockDomain::new(20e9);
+        let slow = ClockDomain::new(500e6);
+        assert!((fast.convert(40.0, &slow) - 1.0).abs() < 1e-12);
+        assert!((slow.convert(1.0, &fast) - 40.0).abs() < 1e-12);
+        assert!((slow.to_seconds(500e6) - 1.0).abs() < 1e-12);
+        assert!((slow.cycles(2e-9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn esram_crossing_is_free() {
+        let e = MemTech::ESram.technology();
+        let s = SyncInterface::new(&e, FABRIC_HZ);
+        assert_eq!(s.crossing_fabric_cycles, 0.0);
+        // synchronous round trip = the array's own latency
+        assert_eq!(s.round_trip_fabric_cycles(&e), 1.0);
+    }
+
+    #[test]
+    fn osram_pays_synchronizer_but_still_fast() {
+        let o = MemTech::OSram.technology();
+        let s = SyncInterface::new(&o, FABRIC_HZ);
+        assert_eq!(s.crossing_fabric_cycles, 2.0);
+        let rt = s.round_trip_fabric_cycles(&o);
+        // 2 fabric cycles of synchronizer + 0.05 of array ≈ 2.05
+        assert!(rt > 2.0 && rt < 2.1, "rt={rt}");
+    }
+
+    #[test]
+    fn osram_round_trip_longer_than_esram_latency_but_bandwidth_wins() {
+        // the paper's design hides the crossing latency behind the two
+        // pipelines (Figs. 5–6); the model must still expose it honestly.
+        let e = MemTech::ESram.technology();
+        let o = MemTech::OSram.technology();
+        let se = SyncInterface::new(&e, FABRIC_HZ);
+        let so = SyncInterface::new(&o, FABRIC_HZ);
+        assert!(so.round_trip_fabric_cycles(&o) > se.round_trip_fabric_cycles(&e));
+        assert!(o.words_per_fabric_cycle(FABRIC_HZ) > 50.0 * e.words_per_fabric_cycle(FABRIC_HZ));
+    }
+}

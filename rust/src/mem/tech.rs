@@ -1,0 +1,212 @@
+//! The device-level memory technology model shared by E-SRAM and O-SRAM.
+//!
+//! Everything the simulator, the energy model (Eq. 2–3) and the area model
+//! (Table IV) need about an on-chip memory is captured by one parameter
+//! struct; the *only* difference between the baseline FPGA and the paper's
+//! proposal is which parameter set is plugged in.
+
+/// Which on-chip memory technology an accelerator instance uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    /// Electrical SRAM — BRAM/URAM-class, the baseline (§V-A3).
+    ESram,
+    /// Optical SRAM of [14] — the paper's proposal (§II).
+    OSram,
+}
+
+impl MemTech {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemTech::ESram => "e-sram",
+            MemTech::OSram => "o-sram",
+        }
+    }
+
+    /// The parameter set for this technology.
+    pub fn technology(&self) -> MemTechnology {
+        match self {
+            MemTech::ESram => crate::mem::esram::esram(),
+            MemTech::OSram => crate::mem::osram::osram(),
+        }
+    }
+}
+
+/// Device parameters of one on-chip memory block family.
+///
+/// Energies follow Table III's split (static vs switching, per bit); the
+/// switching energy is further decomposed per Eq. 3 into the
+/// optical↔electrical conversion part and the storage-cell part (for
+/// E-SRAM the "conversion" part is the bit-line/sense-amp energy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemTechnology {
+    pub name: &'static str,
+    /// Memory core clock, Hz (f_optical in Eq. 1; for E-SRAM this equals
+    /// the fabric clock — the array is synchronous with the mesh).
+    pub freq_hz: f64,
+    /// Number of WDM wavelengths λ usable concurrently (1 for E-SRAM).
+    pub wavelengths: u32,
+    /// Independent word accesses the block serves per *memory-core* cycle:
+    /// λ for WDM optical arrays, the physical port count for electrical
+    /// arrays (Eq. 1 generalized — for O-SRAM this equals λ, reproducing
+    /// the paper's formula verbatim).
+    pub lanes_per_core_cycle: u32,
+    /// Port width z in bits.
+    pub port_width_bits: u32,
+    /// Physical concurrent read/write ports per block.
+    pub ports_per_block: u32,
+    /// Capacity of one block in bits (32 Kb for O-SRAM per §III-A;
+    /// 36 Kb BRAM-class for E-SRAM).
+    pub block_bits: u64,
+    /// Word lines per block (1024 × 32 b for the O-SRAM of Fig. 2).
+    pub data_lines: u32,
+    /// Access latency in *memory-core* cycles (tag or data array read).
+    pub access_latency_cycles: u32,
+
+    // --- Table III energies (pJ, per bit) ---
+    /// Static power, pJ per bit per *fabric* cycle (Table III "Static").
+    pub static_pj_per_bit_cycle: f64,
+    /// Switching energy per accessed bit (Table III "Switching"), total.
+    pub switching_pj_per_bit: f64,
+    /// Eq. 3 decomposition: conversion (O↔E or bitline/sense-amp) part.
+    pub conversion_pj_per_bit: f64,
+    /// Eq. 3 decomposition: storage-cell part.
+    pub storage_pj_per_bit: f64,
+
+    // --- Table IV area ---
+    /// Layout area per bit, µm² (array + periphery, amortized).
+    pub area_um2_per_bit: f64,
+}
+
+impl MemTechnology {
+    /// Equation 1: bits deliverable to the electrical compute elements per
+    /// electrical cycle, **per block**:
+    /// `b_process = λ × f_optical × z / f_electrical`
+    /// with λ generalized to [`lanes_per_core_cycle`](Self::lanes_per_core_cycle)
+    /// (= λ for the O-SRAM, = physical ports for the synchronous E-SRAM).
+    pub fn bits_per_fabric_cycle(&self, fabric_hz: f64) -> f64 {
+        assert!(fabric_hz > 0.0);
+        self.lanes_per_core_cycle as f64 * self.freq_hz * self.port_width_bits as f64 / fabric_hz
+    }
+
+    /// Independent 32-bit word accesses a block can serve per fabric cycle
+    /// (the simulator's port-arbitration unit).
+    pub fn words_per_fabric_cycle(&self, fabric_hz: f64) -> f64 {
+        self.bits_per_fabric_cycle(fabric_hz) / self.port_width_bits as f64
+    }
+
+    /// Access latency seen from the fabric, in fabric cycles (ceil of the
+    /// core-cycle latency converted across the frequency ratio; min 1).
+    pub fn access_latency_fabric_cycles(&self, fabric_hz: f64) -> f64 {
+        (self.access_latency_cycles as f64 * fabric_hz / self.freq_hz).max(1.0)
+    }
+
+    /// Blocks needed to store `bits` of state.
+    pub fn blocks_for_bits(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.block_bits)
+    }
+
+    /// Static power of `bits` of this memory, in pJ per fabric cycle
+    /// (Eq. 3: `P_static = S_total × (p̂_static_optical + p̂_static_electrical)`;
+    /// the two leakage terms are folded into `static_pj_per_bit_cycle`).
+    pub fn static_pj_per_cycle(&self, bits: u64) -> f64 {
+        bits as f64 * self.static_pj_per_bit_cycle
+    }
+
+    /// Switching energy for accessing `bits` of data (Eq. 3:
+    /// `P_switching = S_active × (p̂_conversion + p̂_storage)`).
+    pub fn switching_pj(&self, bits: u64) -> f64 {
+        bits as f64 * self.switching_pj_per_bit
+    }
+
+    /// Layout area of `bits` of this memory, mm².
+    pub fn area_mm2(&self, bits: u64) -> f64 {
+        bits as f64 * self.area_um2_per_bit * 1e-6
+    }
+
+    /// Can a cache built from this memory serialize tag→data within one
+    /// fabric cycle? A synchronous (fabric-speed) array must read all
+    /// `assoc` candidate ways speculatively in parallel with the tag
+    /// compare (Fig. 6) — burning `assoc×` the data-array energy per
+    /// lookup; an array ≥ 4× faster than the fabric resolves the tag first
+    /// and reads only the matching way with no throughput loss.
+    pub fn serial_tag_data(&self, fabric_hz: f64) -> bool {
+        self.freq_hz >= 4.0 * fabric_hz
+    }
+}
+
+/// The fabric (electrical mesh) clock the paper models: 500 MHz (§V-A).
+pub const FABRIC_HZ: f64 = 500e6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_matches_paper_example() {
+        // §III-A: λ=5, f_opt=20 GHz, z=32, f_elec=500 MHz ⇒ 6400 bits/cycle
+        // (= the 200 × 32 b parallel ports claim).
+        let o = MemTech::OSram.technology();
+        let b = o.bits_per_fabric_cycle(FABRIC_HZ);
+        assert!((b - 6400.0).abs() < 1e-9, "b_process = {b}");
+        assert!((o.words_per_fabric_cycle(FABRIC_HZ) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn esram_is_port_limited() {
+        let e = MemTech::ESram.technology();
+        // dual-port 32b at fabric clock: 64 bits per cycle
+        assert!((e.bits_per_fabric_cycle(FABRIC_HZ) - 64.0).abs() < 1e-9);
+        assert!((e.words_per_fabric_cycle(FABRIC_HZ) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_ports_match_paper_claim() {
+        // §III-A: "each O-SRAM consists of 200 parallel read-write ports"
+        // — 200 = λ × f_opt / f_elec is exactly Eq. 1's word count.
+        let o = MemTech::OSram.technology();
+        assert_eq!(o.ports_per_block, 200);
+        assert_eq!(
+            o.ports_per_block as f64,
+            o.lanes_per_core_cycle as f64 * o.freq_hz / FABRIC_HZ
+        );
+    }
+
+    #[test]
+    fn latency_converts_across_domains() {
+        let o = MemTech::OSram.technology();
+        // 20 GHz core, 500 MHz fabric: a 2-core-cycle access is well under
+        // one fabric cycle ⇒ clamps to 1.
+        assert_eq!(o.access_latency_fabric_cycles(FABRIC_HZ), 1.0);
+        let e = MemTech::ESram.technology();
+        // synchronous: latency in fabric cycles = core cycles
+        assert_eq!(e.access_latency_fabric_cycles(FABRIC_HZ), e.access_latency_cycles as f64);
+    }
+
+    #[test]
+    fn blocks_for_bits_rounds_up() {
+        let o = MemTech::OSram.technology();
+        assert_eq!(o.blocks_for_bits(1), 1);
+        assert_eq!(o.blocks_for_bits(o.block_bits), 1);
+        assert_eq!(o.blocks_for_bits(o.block_bits + 1), 2);
+    }
+
+    #[test]
+    fn energy_helpers_scale_linearly() {
+        let o = MemTech::OSram.technology();
+        assert!((o.switching_pj(2000) - 2.0 * o.switching_pj(1000)).abs() < 1e-9);
+        assert!((o.static_pj_per_cycle(2000) - 2.0 * o.static_pj_per_cycle(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switching_decomposition_sums() {
+        for t in [MemTech::ESram, MemTech::OSram] {
+            let m = t.technology();
+            assert!(
+                (m.conversion_pj_per_bit + m.storage_pj_per_bit - m.switching_pj_per_bit).abs()
+                    < 1e-9,
+                "{}: Eq.3 decomposition must sum to Table III switching",
+                m.name
+            );
+        }
+    }
+}

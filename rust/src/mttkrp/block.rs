@@ -1,0 +1,312 @@
+//! Blocked spMTTKRP through the AOT artifacts.
+//!
+//! The rust side plays the paper's memory system: it walks the per-mode
+//! view, gathers input factor rows (the cache's job), packs fixed-size
+//! blocks (vals, segment ids, gathered rows — the DMA stream) and executes
+//! the `mttkrp<N>_b1024_r<R>` artifact for the arithmetic, then
+//! scatter-adds block outputs into the output factor matrix (the psum
+//! drain). Padding lanes carry `val = 0`, so they contribute nothing
+//! regardless of their segment id.
+
+use anyhow::{bail, Result};
+
+use crate::mttkrp::reference::FactorMatrix;
+use crate::runtime::client::{Arg, Runtime};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Base block geometry (must match `python/compile/aot.py`'s BLOCK; the
+/// paper's psum sizing).
+pub const BLOCK: usize = 1024;
+/// Preferred artifact block sizes. §Perf note: the 4096-element variant
+/// was tried to amortize the fixed PJRT dispatch cost and measured ~7×
+/// *worse* per nonzero — interpret-mode Pallas + XLA-CPU segment-scatter
+/// cost grows super-linearly in the block, so the psum-matched 1024 block
+/// is also the performance-optimal one (see EXPERIMENTS.md §Perf).
+pub const PREFERRED_BLOCKS: [usize; 2] = [1024, 4096];
+
+/// Pick the largest lowered block variant available in the manifest.
+fn pick_artifact(rt: &Runtime, n: usize, rank: usize) -> Result<(String, usize)> {
+    for b in PREFERRED_BLOCKS {
+        let name = format!("mttkrp{n}_b{b}_r{rank}");
+        if rt.manifest().get(&name).is_ok() {
+            return Ok((name, b));
+        }
+    }
+    bail!("no mttkrp artifact for {n} modes at rank {rank} — run `make artifacts`")
+}
+
+/// Pick the scatter-free (hadamard-only) variant, largest block first —
+/// the §Perf fast path: the artifact computes only the L1 product, the
+/// coordinator accumulates rows itself, so the (super-linear) XLA-CPU
+/// scatter never runs and the 4096 block amortizes dispatch 4×.
+fn pick_hadamard(rt: &Runtime, n: usize, rank: usize) -> Option<(String, usize)> {
+    // measured on this host: per-nnz cost is copy-dominated and nearly
+    // block-size-independent; 1024 has the lower tail latency
+    for b in [1024usize, 4096] {
+        let name = format!("hadamard{n}_b{b}_r{rank}");
+        if rt.manifest().get(&name).is_ok() {
+            return Some((name, b));
+        }
+    }
+    None
+}
+
+/// Scatter-free execution path (see [`pick_hadamard`]).
+fn mttkrp_via_hadamard(
+    rt: &Runtime,
+    tensor: &SparseTensor,
+    mode: usize,
+    factors: &[FactorMatrix],
+    artifact: &str,
+    block: usize,
+) -> Result<FactorMatrix> {
+    let n = tensor.n_modes();
+    let rank = factors[mode].rank;
+    let input_modes: Vec<usize> = (0..n).filter(|&m| m != mode).collect();
+    let mut out = FactorMatrix::zeros(tensor.dims[mode] as usize, rank);
+    let view = ModeView::build(tensor, mode);
+
+    let mut vals = vec![0.0f32; block];
+    let mut gathered: Vec<Vec<f32>> =
+        input_modes.iter().map(|_| vec![0.0f32; block * rank]).collect();
+    let mut rows: Vec<u32> = Vec::with_capacity(block); // output row per lane
+    let mut fill = 0usize;
+
+    let flush = |fill: &mut usize,
+                 rows: &mut Vec<u32>,
+                 vals: &mut [f32],
+                 gathered: &mut [Vec<f32>],
+                 out: &mut FactorMatrix|
+     -> Result<()> {
+        if *fill == 0 {
+            return Ok(());
+        }
+        for i in *fill..block {
+            vals[i] = 0.0;
+        }
+        let mut args: Vec<Arg<'_>> = vec![Arg::F32(vals)];
+        for g in gathered.iter() {
+            args.push(Arg::F32(g));
+        }
+        let contrib = rt.execute_f32(artifact, &args)?;
+        // rust-side segment accumulation (the psum drain)
+        for (lane, &row) in rows.iter().enumerate() {
+            let dst = out.row_mut(row as usize);
+            let src = &contrib[lane * rank..(lane + 1) * rank];
+            for r in 0..rank {
+                dst[r] += src[r];
+            }
+        }
+        *fill = 0;
+        rows.clear();
+        Ok(())
+    };
+
+    for (out_row, slice) in view.slices() {
+        for &k in slice {
+            if fill == block {
+                flush(&mut fill, &mut rows, &mut vals, &mut gathered, &mut out)?;
+            }
+            let k = k as usize;
+            vals[fill] = tensor.values[k];
+            rows.push(out_row);
+            for (j, &m) in input_modes.iter().enumerate() {
+                let row = factors[m].row(tensor.indices[m][k] as usize);
+                gathered[j][fill * rank..(fill + 1) * rank].copy_from_slice(row);
+            }
+            fill += 1;
+        }
+    }
+    flush(&mut fill, &mut rows, &mut vals, &mut gathered, &mut out)?;
+    Ok(out)
+}
+
+/// Compute spMTTKRP for `mode` by running blocks through the PJRT runtime.
+///
+/// Supported shapes: 3/4/5-mode tensors, rank ∈ {16, 32} (the lowered
+/// artifact set). Returns the output factor matrix.
+pub fn mttkrp_via_artifacts(
+    rt: &Runtime,
+    tensor: &SparseTensor,
+    mode: usize,
+    factors: &[FactorMatrix],
+) -> Result<FactorMatrix> {
+    let n = tensor.n_modes();
+    let rank = factors[mode].rank;
+    if !(3..=5).contains(&n) {
+        bail!("artifacts cover 3–5 mode tensors, tensor has {n}");
+    }
+    if rank != 16 && rank != 32 {
+        bail!("artifacts cover rank 16/32, got {rank}");
+    }
+    // fast path: scatter-free artifact + rust accumulation
+    if let Some((artifact, block)) = pick_hadamard(rt, n, rank) {
+        return mttkrp_via_hadamard(rt, tensor, mode, factors, &artifact, block);
+    }
+    let (artifact, block) = pick_artifact(rt, n, rank)?;
+    let input_modes: Vec<usize> = (0..n).filter(|&m| m != mode).collect();
+    let mut out = FactorMatrix::zeros(tensor.dims[mode] as usize, rank);
+    let view = ModeView::build(tensor, mode);
+
+    // Per-block buffers (reused across blocks).
+    let mut vals = vec![0.0f32; block];
+    let mut segs = vec![0i32; block];
+    let mut gathered: Vec<Vec<f32>> =
+        input_modes.iter().map(|_| vec![0.0f32; block * rank]).collect();
+    // Block-local segment table: local seg id → global output row.
+    let mut seg_rows: Vec<u32> = Vec::with_capacity(block);
+
+    let mut fill = 0usize;
+    let flush = |fill: &mut usize,
+                     seg_rows: &mut Vec<u32>,
+                     vals: &mut [f32],
+                     segs: &mut [i32],
+                     gathered: &mut [Vec<f32>],
+                     out: &mut FactorMatrix|
+     -> Result<()> {
+        if *fill == 0 {
+            return Ok(());
+        }
+        // zero the padding lanes
+        for i in *fill..block {
+            vals[i] = 0.0;
+            segs[i] = 0;
+        }
+        let mut args: Vec<Arg<'_>> = vec![Arg::F32(vals), Arg::S32(segs)];
+        for g in gathered.iter() {
+            args.push(Arg::F32(g));
+        }
+        let block_out = rt.execute_f32(&artifact, &args)?;
+        for (local, &row) in seg_rows.iter().enumerate() {
+            let dst = out.row_mut(row as usize);
+            let src = &block_out[local * rank..(local + 1) * rank];
+            for r in 0..rank {
+                dst[r] += src[r];
+            }
+        }
+        *fill = 0;
+        seg_rows.clear();
+        Ok(())
+    };
+
+    for (out_row, slice) in view.slices() {
+        for &k in slice {
+            if fill == block || seg_rows.len() == block {
+                flush(&mut fill, &mut seg_rows, &mut vals, &mut segs, &mut gathered, &mut out)?;
+            }
+            if seg_rows.last() != Some(&out_row) {
+                seg_rows.push(out_row);
+            }
+            let local_seg = (seg_rows.len() - 1) as i32;
+            let k = k as usize;
+            vals[fill] = tensor.values[k];
+            segs[fill] = local_seg;
+            for (j, &m) in input_modes.iter().enumerate() {
+                let row = factors[m].row(tensor.indices[m][k] as usize);
+                gathered[j][fill * rank..(fill + 1) * rank].copy_from_slice(row);
+            }
+            fill += 1;
+        }
+    }
+    flush(&mut fill, &mut seg_rows, &mut vals, &mut segs, &mut gathered, &mut out)?;
+    Ok(out)
+}
+
+/// Number of artifact executions a tensor/mode will need (for tests and
+/// for the runtime_exec bench's work estimates).
+pub fn blocks_needed(nnz: usize) -> usize {
+    nnz.div_ceil(BLOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::reference::{max_rel_diff, mttkrp};
+    use crate::tensor::gen;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::runtime::client::artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(Runtime::from_dir(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    fn factors_for(t: &SparseTensor, rank: usize, seed: u64) -> Vec<FactorMatrix> {
+        t.dims
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| FactorMatrix::random(d as usize, rank, seed + m as u64))
+            .collect()
+    }
+
+    #[test]
+    fn artifact_path_matches_reference_3mode() {
+        let Some(rt) = runtime() else { return };
+        let t = gen::random(&[40, 50, 60], 5000, 3);
+        let f = factors_for(&t, 16, 7);
+        for mode in 0..3 {
+            let got = mttkrp_via_artifacts(&rt, &t, mode, &f).unwrap();
+            let want = mttkrp(&t, mode, &f);
+            let d = max_rel_diff(&got, &want);
+            assert!(d < 1e-4, "mode {mode}: rel diff {d}");
+        }
+    }
+
+    #[test]
+    fn artifact_path_matches_reference_4_and_5_mode() {
+        let Some(rt) = runtime() else { return };
+        for dims in [vec![12u64, 13, 14, 15], vec![6, 7, 8, 9, 10]] {
+            let t = gen::random(&dims, 3000, 5);
+            let f = factors_for(&t, 16, 1);
+            let got = mttkrp_via_artifacts(&rt, &t, 1, &f).unwrap();
+            let want = mttkrp(&t, 1, &f);
+            assert!(max_rel_diff(&got, &want) < 1e-4, "{} modes", dims.len());
+        }
+    }
+
+    #[test]
+    fn rank32_artifacts_work() {
+        let Some(rt) = runtime() else { return };
+        let t = gen::random(&[20, 20, 20], 2000, 9);
+        let f = factors_for(&t, 32, 3);
+        let got = mttkrp_via_artifacts(&rt, &t, 0, &f).unwrap();
+        let want = mttkrp(&t, 0, &f);
+        assert!(max_rel_diff(&got, &want) < 1e-4);
+    }
+
+    #[test]
+    fn block_boundary_exactness() {
+        let Some(rt) = runtime() else { return };
+        // nnz exactly at, just below and just above the block size
+        for nnz in [BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK] {
+            let t = gen::random(&[8, 8, 8], nnz, 42);
+            let f = factors_for(&t, 16, 11);
+            let got = mttkrp_via_artifacts(&rt, &t, 2, &f).unwrap();
+            let want = mttkrp(&t, 2, &f);
+            assert!(max_rel_diff(&got, &want) < 1e-4, "nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn unsupported_shapes_error() {
+        let Some(rt) = runtime() else { return };
+        let t2 = gen::random(&[8, 8], 100, 1);
+        let f2 = factors_for(&t2, 16, 1);
+        assert!(mttkrp_via_artifacts(&rt, &t2, 0, &f2).is_err());
+        let t3 = gen::random(&[8, 8, 8], 100, 1);
+        let f3 = factors_for(&t3, 8, 1);
+        assert!(mttkrp_via_artifacts(&rt, &t3, 0, &f3).is_err());
+    }
+
+    #[test]
+    fn blocks_needed_math() {
+        assert_eq!(blocks_needed(0), 0);
+        assert_eq!(blocks_needed(1), 1);
+        assert_eq!(blocks_needed(BLOCK), 1);
+        assert_eq!(blocks_needed(BLOCK + 1), 2);
+    }
+}

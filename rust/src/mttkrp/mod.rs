@@ -1,0 +1,14 @@
+//! The spMTTKRP computation itself (Algorithm 1).
+//!
+//! * [`reference`] — golden scalar CPU implementation, any mode count —
+//!   the numeric ground truth everything else is checked against.
+//! * [`block`] — the blocked execution path: gathers factor rows, builds
+//!   padded 1024-nonzero blocks and runs them through the AOT artifacts
+//!   via the PJRT [`Runtime`](crate::runtime::client::Runtime), scattering
+//!   results into the output factor matrix.
+//! * [`trace`] — per-mode memory-access statistics (the §IV-A analytic
+//!   totals) used to cross-check the simulator's traffic accounting.
+
+pub mod block;
+pub mod reference;
+pub mod trace;

@@ -1,0 +1,188 @@
+//! Golden CPU spMTTKRP (Algorithm 1), any number of modes.
+//!
+//! Factor matrices are dense row-major `rows × rank` `Vec<f32>`. For
+//! output mode `d`:
+//!
+//! ```text
+//! A(i_d, r) += x(i_0..i_{N-1}) × Π_{m≠d} F_m(i_m, r)
+//! ```
+
+use crate::tensor::coo::SparseTensor;
+
+/// A dense row-major factor matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FactorMatrix {
+    pub rows: usize,
+    pub rank: usize,
+    pub data: Vec<f32>,
+}
+
+impl FactorMatrix {
+    pub fn zeros(rows: usize, rank: usize) -> Self {
+        FactorMatrix { rows, rank, data: vec![0.0; rows * rank] }
+    }
+
+    /// Deterministic pseudo-random init in [0, 1) (CP-ALS starting point).
+    pub fn random(rows: usize, rank: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        FactorMatrix { rows, rank, data: (0..rows * rank).map(|_| rng.f32()).collect() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.rank..(i + 1) * self.rank]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.rank..(i + 1) * self.rank]
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Reference spMTTKRP for output mode `mode`. `factors` holds one matrix
+/// per tensor mode (the output-mode entry is ignored as input). Returns
+/// the updated output factor matrix.
+pub fn mttkrp(tensor: &SparseTensor, mode: usize, factors: &[FactorMatrix]) -> FactorMatrix {
+    assert_eq!(factors.len(), tensor.n_modes(), "one factor per mode");
+    assert!(mode < tensor.n_modes());
+    let rank = factors[mode].rank;
+    for (m, f) in factors.iter().enumerate() {
+        assert_eq!(f.rank, rank, "rank mismatch in factor {m}");
+        assert_eq!(f.rows as u64, tensor.dims[m], "rows mismatch in factor {m}");
+    }
+    let mut out = FactorMatrix::zeros(tensor.dims[mode] as usize, rank);
+    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
+    let mut prod = vec![0.0f32; rank];
+    for k in 0..tensor.nnz() {
+        let val = tensor.values[k];
+        prod.iter_mut().for_each(|p| *p = val);
+        for &m in &input_modes {
+            let row = factors[m].row(tensor.indices[m][k] as usize);
+            for r in 0..rank {
+                prod[r] *= row[r];
+            }
+        }
+        let out_row = out.row_mut(tensor.indices[mode][k] as usize);
+        for r in 0..rank {
+            out_row[r] += prod[r];
+        }
+    }
+    out
+}
+
+/// Max relative element difference between two same-shape matrices
+/// (test / verification helper).
+pub fn max_rel_diff(a: &FactorMatrix, b: &FactorMatrix) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let d = (x - y).abs() as f64;
+            d / (1.0 + x.abs().max(y.abs()) as f64)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+
+    fn factors_for(t: &SparseTensor, rank: usize, seed: u64) -> Vec<FactorMatrix> {
+        t.dims
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| FactorMatrix::random(d as usize, rank, seed + m as u64))
+            .collect()
+    }
+
+    #[test]
+    fn single_nonzero_3mode_hand_check() {
+        let mut t = SparseTensor::new("t", vec![2, 3, 4]);
+        t.push(&[1, 2, 3], 2.0);
+        let mut f = vec![
+            FactorMatrix::zeros(2, 2),
+            FactorMatrix::zeros(3, 2),
+            FactorMatrix::zeros(4, 2),
+        ];
+        f[1].row_mut(2).copy_from_slice(&[3.0, 5.0]);
+        f[2].row_mut(3).copy_from_slice(&[7.0, 11.0]);
+        let out = mttkrp(&t, 0, &f);
+        // A(1, r) = 2 × B(2, r) × C(3, r)
+        assert_eq!(out.row(1), &[2.0 * 3.0 * 7.0, 2.0 * 5.0 * 11.0]);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_einsum_equivalence_small() {
+        // brute-force dense evaluation over all cells
+        let t = gen::random(&[4, 5, 6], 30, 1);
+        let f = factors_for(&t, 3, 9);
+        let out = mttkrp(&t, 1, &f);
+        let mut want = FactorMatrix::zeros(5, 3);
+        for k in 0..t.nnz() {
+            let (i, j, l) =
+                (t.indices[0][k] as usize, t.indices[1][k] as usize, t.indices[2][k] as usize);
+            for r in 0..3 {
+                want.row_mut(j)[r] += t.values[k] * f[0].row(i)[r] * f[2].row(l)[r];
+            }
+        }
+        assert!(max_rel_diff(&out, &want) < 1e-6);
+    }
+
+    #[test]
+    fn linearity_in_values() {
+        let t = gen::random(&[10, 10, 10], 200, 3);
+        let mut t2 = t.clone();
+        for v in &mut t2.values {
+            *v *= 2.0;
+        }
+        let f = factors_for(&t, 4, 5);
+        let a = mttkrp(&t, 0, &f);
+        let b = mttkrp(&t2, 0, &f);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((2.0 * x - y).abs() < 1e-4 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn permutation_invariance() {
+        let t = gen::random(&[10, 12, 14], 300, 7);
+        let mut tp = t.clone();
+        tp.sort_by_mode(2); // any reordering of nonzeros
+        let f = factors_for(&t, 4, 2);
+        for mode in 0..3 {
+            let a = mttkrp(&t, mode, &f);
+            let b = mttkrp(&tp, mode, &f);
+            assert!(max_rel_diff(&a, &b) < 1e-5, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn five_mode_tensor_works() {
+        let t = gen::random(&[4, 5, 6, 7, 8], 100, 11);
+        let f = factors_for(&t, 2, 1);
+        for mode in 0..5 {
+            let out = mttkrp(&t, mode, &f);
+            assert_eq!(out.rows as u64, t.dims[mode]);
+            assert!(out.data.iter().any(|&x| x != 0.0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rows mismatch")]
+    fn wrong_factor_shape_panics() {
+        let t = gen::random(&[4, 5, 6], 10, 1);
+        let f = vec![
+            FactorMatrix::zeros(4, 2),
+            FactorMatrix::zeros(99, 2),
+            FactorMatrix::zeros(6, 2),
+        ];
+        mttkrp(&t, 0, &f);
+    }
+}

@@ -1,0 +1,83 @@
+//! Analytic per-mode access totals (§IV-A) and trace statistics.
+//!
+//! The paper derives closed-form totals for compute and external-memory
+//! traffic; this module evaluates them for a concrete tensor/mode and
+//! cross-checks the simulator's measured traffic against them (the
+//! integration tests assert the two agree, which ties the cycle model to
+//! the paper's analytic model).
+
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Closed-form §IV-A totals for one output mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModeTotals {
+    /// Multiply-add operations: `N × |T| × R`.
+    pub compute_ops: u64,
+    /// Elements transferred: `|T| + (N−1)×|T|×R + I_out×R`.
+    pub transfer_elements: u64,
+    /// Factor-row *requests* the cache subsystem sees: `(N−1) × |T|`.
+    pub factor_requests: u64,
+    /// Output rows written (non-empty slices — the paper's bound uses the
+    /// full `I_out`; we expose both).
+    pub output_rows_written: u64,
+    pub output_rows_bound: u64,
+}
+
+/// Evaluate the §IV-A totals for `tensor` / `mode` at rank `r`.
+pub fn mode_totals(tensor: &SparseTensor, mode: usize, r: usize) -> ModeTotals {
+    let n = tensor.n_modes() as u64;
+    let t = tensor.nnz() as u64;
+    let i_out = tensor.dims[mode];
+    let view = ModeView::build(tensor, mode);
+    ModeTotals {
+        compute_ops: n * t * r as u64,
+        transfer_elements: t + (n - 1) * t * r as u64 + i_out * r as u64,
+        factor_requests: (n - 1) * t,
+        output_rows_written: view.n_slices() as u64,
+        output_rows_bound: i_out,
+    }
+}
+
+/// Bytes of tensor data streamed per §IV-A (coordinates + value per
+/// nonzero, matching the simulator's nnz item layout).
+pub fn tensor_stream_bytes(tensor: &SparseTensor) -> u64 {
+    tensor.nnz_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+
+    #[test]
+    fn totals_match_paper_formulas() {
+        let t = gen::random(&[10, 20, 30], 500, 1);
+        let m = mode_totals(&t, 0, 16);
+        assert_eq!(m.compute_ops, 3 * 500 * 16);
+        assert_eq!(m.transfer_elements, 500 + 2 * 500 * 16 + 10 * 16);
+        assert_eq!(m.factor_requests, 2 * 500);
+        assert_eq!(m.output_rows_bound, 10);
+        assert!(m.output_rows_written <= 10);
+    }
+
+    #[test]
+    fn five_mode_totals() {
+        let t = gen::random(&[4, 5, 6, 7, 8], 200, 2);
+        let m = mode_totals(&t, 4, 8);
+        assert_eq!(m.compute_ops, 5 * 200 * 8);
+        assert_eq!(m.factor_requests, 4 * 200);
+        assert_eq!(m.transfer_elements, 200 + 4 * 200 * 8 + 8 * 8);
+    }
+
+    #[test]
+    fn written_rows_counts_nonempty_slices_only() {
+        let mut t = SparseTensor::new("t", vec![100, 4]);
+        t.push(&[5, 0], 1.0);
+        t.push(&[5, 1], 1.0);
+        t.push(&[90, 2], 1.0);
+        let m = mode_totals(&t, 0, 4);
+        assert_eq!(m.output_rows_written, 2);
+        assert_eq!(m.output_rows_bound, 100);
+    }
+}

@@ -1,0 +1,122 @@
+//! Execution unit timing (Fig. 4, Table I "Parallel Pipelines").
+//!
+//! A PE's execution unit contains `n_pipelines` identical pipelines, each
+//! executing the Algorithm 1 inner loop: for a nonzero x at (i₀, …),
+//! `A(i₀, r) += x × B(i₁, r) × C(i₂, r) × …` for r = 1..R. One pipeline
+//! retires one rank-element FMA chain per cycle, so a nonzero of an N-mode
+//! tensor costs `R × (N−1)` pipeline-cycles of multiply plus the final
+//! accumulate (fused). Partial sums live in the technology-dependent
+//! partial-sum buffer: each nonzero reads and writes the R-element row
+//! segment (2R word-ops), and each completed output slice drains R words.
+
+use crate::cache::pipeline::ArrayTiming;
+
+/// Timing model of one PE's execution unit + psum buffer.
+#[derive(Clone, Debug)]
+pub struct ExecUnit {
+    pub n_pipelines: usize,
+    pub rank: usize,
+    /// Partial-sum buffer array timing (per PE; the buffer is banked per
+    /// pipeline by construction — Table I sizes it per pipeline — so the
+    /// array bandwidth scales with the pipeline count for both techs; the
+    /// *per-bank* width is what the technology changes).
+    pub psum: ArrayTiming,
+    /// Banks the psum buffer exposes (= pipelines, by construction).
+    pub psum_banks: usize,
+}
+
+/// Per-nonzero / per-slice charges the engine accumulates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecCharge {
+    /// Pipeline occupancy in fabric cycles.
+    pub pipeline_cycles: f64,
+    /// Psum-buffer occupancy in fabric cycles.
+    pub psum_cycles: f64,
+    /// Psum words touched (for `S_active` energy accounting).
+    pub psum_words: u64,
+}
+
+impl ExecUnit {
+    pub fn new(n_pipelines: usize, rank: usize, psum: ArrayTiming, psum_banks: usize) -> Self {
+        assert!(n_pipelines > 0 && rank > 0 && psum_banks > 0);
+        ExecUnit { n_pipelines, rank, psum, psum_banks }
+    }
+
+    /// Aggregate psum bandwidth: banks × per-bank words/cycle.
+    fn psum_words_per_cycle(&self) -> f64 {
+        self.psum.words_per_fabric_cycle * self.psum_banks as f64
+    }
+
+    /// Charge for processing one nonzero of an `n_modes`-way tensor.
+    pub fn nonzero(&self, n_modes: usize) -> ExecCharge {
+        debug_assert!(n_modes >= 2);
+        let r = self.rank as f64;
+        let mults = r * (n_modes as f64 - 1.0);
+        let psum_words = 2 * self.rank as u64; // read R + write R
+        ExecCharge {
+            pipeline_cycles: mults / self.n_pipelines as f64,
+            psum_cycles: psum_words as f64 / self.psum_words_per_cycle(),
+            psum_words: psum_words as u64,
+        }
+    }
+
+    /// Charge for draining one completed output slice (R words leave the
+    /// psum buffer toward the store path).
+    pub fn drain_slice(&self) -> ExecCharge {
+        let words = self.rank as u64;
+        ExecCharge {
+            pipeline_cycles: 0.0,
+            psum_cycles: words as f64 / self.psum_words_per_cycle(),
+            psum_words: words,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tech::{MemTech, FABRIC_HZ};
+
+    fn unit(tech: MemTech, banks_per_array: usize) -> ExecUnit {
+        let t = ArrayTiming::new(&tech.technology(), FABRIC_HZ, banks_per_array);
+        ExecUnit::new(80, 16, t, 8)
+    }
+
+    #[test]
+    fn pipeline_cost_matches_alg1_op_count() {
+        let u = unit(MemTech::ESram, 1);
+        // 3-mode: R(N−1) = 32 mults over 80 pipelines = 0.4 cyc/nnz
+        let c = u.nonzero(3);
+        assert!((c.pipeline_cycles - 0.4).abs() < 1e-12);
+        // 5-mode: 64/80
+        assert!((u.nonzero(5).pipeline_cycles - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psum_charge_reads_and_writes_rank_words() {
+        let u = unit(MemTech::ESram, 1);
+        let c = u.nonzero(3);
+        assert_eq!(c.psum_words, 32);
+        // 32 words over (2 words/cyc × 8 banks) = 2 cyc
+        assert!((c.psum_cycles - 2.0).abs() < 1e-12);
+        let o = unit(MemTech::OSram, 1);
+        // O-SRAM: 32 / (200 × 8) = 0.02
+        assert!((o.nonzero(3).psum_cycles - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_charges_rank_words() {
+        let u = unit(MemTech::OSram, 1);
+        let d = u.drain_slice();
+        assert_eq!(d.psum_words, 16);
+        assert_eq!(d.pipeline_cycles, 0.0);
+        assert!(d.psum_cycles > 0.0);
+    }
+
+    #[test]
+    fn compute_cost_is_technology_independent() {
+        let e = unit(MemTech::ESram, 1);
+        let o = unit(MemTech::OSram, 1);
+        assert_eq!(e.nonzero(3).pipeline_cycles, o.nonzero(3).pipeline_cycles);
+    }
+}

@@ -1,0 +1,4 @@
+//! Processing element (Fig. 4): execution unit with parallel rank
+//! pipelines and the partial-sum buffer.
+
+pub mod exec;

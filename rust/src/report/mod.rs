@@ -1,0 +1,3 @@
+//! Paper table/figure regeneration.
+
+pub mod paper;

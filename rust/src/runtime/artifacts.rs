@@ -1,0 +1,216 @@
+//! The artifact manifest: `artifacts/manifest.txt` written by
+//! `python/compile/aot.py`, one tab-separated line per lowered entry point:
+//!
+//! ```text
+//! mttkrp3_b1024_r16\tmttkrp3_b1024_r16.hlo.txt\tin=f32[1024],s32[1024],f32[1024,16],f32[1024,16]\tout=f32[1024,16]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+}
+
+/// Shape of one argument/output: dtype + dims.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    /// Parse `f32[1024,16]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (d, rest) =
+            s.split_once('[').with_context(|| format!("bad shape `{s}`"))?;
+        let dims_s = rest.strip_suffix(']').with_context(|| format!("bad shape `{s}`"))?;
+        let dims = if dims_s.is_empty() {
+            Vec::new()
+        } else {
+            dims_s
+                .split(',')
+                .map(|x| x.trim().parse::<usize>().with_context(|| format!("bad dim in `{s}`")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(ShapeSpec { dtype: DType::parse(d)?, dims })
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<ShapeSpec>,
+    pub output: ShapeSpec,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text; `dir` is the artifacts directory paths are
+    /// resolved against.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 4 {
+                bail!("manifest line {}: expected 4 tab-separated fields", ln + 1);
+            }
+            let name = fields[0].to_string();
+            let path = dir.join(fields[1]);
+            let ins = fields[2]
+                .strip_prefix("in=")
+                .with_context(|| format!("manifest line {}: missing in=", ln + 1))?;
+            let outs = fields[3]
+                .strip_prefix("out=")
+                .with_context(|| format!("manifest line {}: missing out=", ln + 1))?;
+            let inputs = split_shapes(ins)?
+                .iter()
+                .map(|s| ShapeSpec::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            let output = ShapeSpec::parse(outs)?;
+            if artifacts
+                .insert(name.clone(), ArtifactSpec { name: name.clone(), path, inputs, output })
+                .is_some()
+            {
+                bail!("duplicate artifact `{name}`");
+            }
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Default artifacts directory: `$PHOTON_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PHOTON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// Split `f32[1024],s32[1024],f32[1024,16]` at top-level commas (commas
+/// inside brackets are dims).
+fn split_shapes(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth = depth.checked_sub(1).with_context(|| format!("unbalanced ] in `{s}`"))?;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "mttkrp3\tmttkrp3.hlo.txt\tin=f32[1024],s32[1024],f32[1024,16],f32[1024,16]\tout=f32[1024,16]\ngram\tgram.hlo.txt\tin=f32[1024,16]\tout=f32[16,16]\n";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("mttkrp3").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].dtype, DType::S32);
+        assert_eq!(a.inputs[2].dims, vec![1024, 16]);
+        assert_eq!(a.output.n_elements(), 1024 * 16);
+        assert_eq!(a.path, Path::new("/a/mttkrp3.hlo.txt"));
+    }
+
+    #[test]
+    fn shape_parse_cases() {
+        assert_eq!(
+            ShapeSpec::parse("f32[3,16,16]").unwrap(),
+            ShapeSpec { dtype: DType::F32, dims: vec![3, 16, 16] }
+        );
+        assert_eq!(ShapeSpec::parse("s32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(ShapeSpec::parse("f16[4]").is_err());
+        assert!(ShapeSpec::parse("f32(4)").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("too\tfew\tfields", Path::new(".")).is_err());
+        assert!(Manifest::parse("a\tb\tnotin=x\tout=f32[1]", Path::new(".")).is_err());
+        let dup = "a\ta.hlo\tin=f32[1]\tout=f32[1]\na\ta.hlo\tin=f32[1]\tout=f32[1]";
+        assert!(Manifest::parse(dup, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_is_helpful() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let e = m.get("nope").unwrap_err().to_string();
+        assert!(e.contains("nope") && e.contains("mttkrp3"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // integration check against the actual `make artifacts` output
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("mttkrp3_b1024_r16").is_ok());
+            assert!(m.get("gram_t1024_r16").is_ok());
+        }
+    }
+}

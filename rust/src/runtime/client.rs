@@ -1,0 +1,249 @@
+//! The PJRT client wrapper: HLO-text → compiled executable cache → typed
+//! execution (adapted from /opt/xla-example/load_hlo).
+//!
+//! One [`Runtime`] owns the PJRT CPU client and a lazily-populated cache
+//! of compiled executables (one per artifact — compilation happens once,
+//! execution is the steady-state path). Arguments are passed as typed
+//! slices and validated against the manifest shapes before they reach the
+//! PJRT boundary, so shape bugs fail with a named artifact and argument
+//! index instead of an opaque XLA error.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::{ArtifactSpec, DType, Manifest};
+
+/// A typed argument to an artifact call.
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    S32(&'a [i32]),
+}
+
+impl Arg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(x) => x.len(),
+            Arg::S32(x) => x.len(),
+        }
+    }
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::S32(_) => DType::S32,
+        }
+    }
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Execution counters (exposed for the perf benches).
+    pub executions: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and start a PJRT CPU client.
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            executions: RefCell::new(0),
+        })
+    }
+
+    /// Load from the default artifacts directory (`$PHOTON_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::from_dir(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("parse HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compile artifact `{}`", spec.name))
+    }
+
+    /// Ensure `name` is compiled (warm the cache explicitly; `execute`
+    /// does this lazily).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let spec = self.manifest.get(name)?.clone();
+        if !self.executables.borrow().contains_key(name) {
+            let exe = self.compile(&spec)?;
+            self.executables.borrow_mut().insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `args`; returns the flattened f32
+    /// output (all our artifacts produce a single f32 array).
+    pub fn execute_f32(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.validate(&spec, args)?;
+        self.warm(name)?;
+        let literals: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(shape, arg)| {
+                let dims: Vec<i64> = shape.dims.iter().map(|&d| d as i64).collect();
+                let lit = match arg {
+                    Arg::F32(x) => xla::Literal::vec1(x),
+                    Arg::S32(x) => xla::Literal::vec1(x),
+                };
+                lit.reshape(&dims).map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).expect("warmed above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute `{name}`"))?[0][0]
+            .to_literal_sync()?;
+        *self.executions.borrow_mut() += 1;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn validate(&self, spec: &ArtifactSpec, args: &[Arg<'_>]) -> Result<()> {
+        if spec.inputs.len() != args.len() {
+            bail!("artifact `{}` takes {} args, got {}", spec.name, spec.inputs.len(), args.len());
+        }
+        for (i, (shape, arg)) in spec.inputs.iter().zip(args).enumerate() {
+            if shape.dtype != arg.dtype() {
+                bail!("artifact `{}` arg {i}: dtype mismatch ({:?} expected)", spec.name, shape.dtype);
+            }
+            if shape.n_elements() != arg.len() {
+                bail!(
+                    "artifact `{}` arg {i}: {} elements given, shape {:?} needs {}",
+                    spec.name,
+                    arg.len(),
+                    shape.dims,
+                    shape.n_elements()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolve an artifacts dir that works from the repo root and from
+/// `cargo test` (which runs in the crate root too).
+pub fn artifacts_dir() -> PathBuf {
+    Manifest::default_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need built artifacts (`make artifacts`); they skip
+    //! cleanly when the directory is absent so `cargo test` stays green in
+    //! a fresh checkout.
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(Runtime::from_dir(&dir).expect("runtime"))
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn mttkrp3_artifact_matches_cpu_math() {
+        let Some(rt) = runtime() else { return };
+        let b = 1024usize;
+        let r = 16usize;
+        let vals: Vec<f32> = (0..b).map(|i| (i % 7) as f32 * 0.25).collect();
+        let segs: Vec<i32> = (0..b).map(|i| (i as i32) % 33).collect();
+        let f1: Vec<f32> = (0..b * r).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        let f2: Vec<f32> = (0..b * r).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let out = rt
+            .execute_f32(
+                "mttkrp3_b1024_r16",
+                &[Arg::F32(&vals), Arg::S32(&segs), Arg::F32(&f1), Arg::F32(&f2)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), b * r);
+        // CPU oracle
+        let mut want = vec![0.0f32; b * r];
+        for i in 0..b {
+            let s = segs[i] as usize;
+            for j in 0..r {
+                want[s * r + j] += vals[i] * f1[i * r + j] * f2[i * r + j];
+            }
+        }
+        for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gram_artifact_matches_cpu_math() {
+        let Some(rt) = runtime() else { return };
+        let (t, r) = (1024usize, 16usize);
+        let f: Vec<f32> = (0..t * r).map(|i| ((i % 17) as f32 - 8.0) * 0.05).collect();
+        let out = rt.execute_f32("gram_t1024_r16", &[Arg::F32(&f)]).unwrap();
+        assert_eq!(out.len(), r * r);
+        let mut want = vec![0.0f32; r * r];
+        for row in 0..t {
+            for a in 0..r {
+                for b_ in 0..r {
+                    want[a * r + b_] += f[row * r + a] * f[row * r + b_];
+                }
+            }
+        }
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-2 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        let r = 16usize;
+        let rows = vec![1.0f32; 1024 * r];
+        let eye: Vec<f32> =
+            (0..r * r).map(|i| if i % (r + 1) == 0 { 1.0 } else { 0.0 }).collect();
+        for _ in 0..3 {
+            let out = rt
+                .execute_f32("factor_update_b1024_r16", &[Arg::F32(&rows), Arg::F32(&eye)])
+                .unwrap();
+            assert!((out[0] - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(*rt.executions.borrow(), 3);
+        assert_eq!(rt.executables.borrow().len(), 1);
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_args() {
+        let Some(rt) = runtime() else { return };
+        let short = vec![1.0f32; 10];
+        let e = rt.execute_f32("gram_t1024_r16", &[Arg::F32(&short)]).unwrap_err().to_string();
+        assert!(e.contains("elements"), "{e}");
+        let ints = vec![0i32; 1024 * 16];
+        let e = rt.execute_f32("gram_t1024_r16", &[Arg::S32(&ints)]).unwrap_err().to_string();
+        assert!(e.contains("dtype"), "{e}");
+        let e = rt.execute_f32("gram_t1024_r16", &[]).unwrap_err().to_string();
+        assert!(e.contains("takes"), "{e}");
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the rust hot path. Python never runs here.
+//!
+//! * [`artifacts`] — the manifest parser: names, files, argument/output
+//!   shapes of every lowered entry point.
+//! * [`client`] — the PJRT CPU client wrapper: compile-once executable
+//!   cache and typed execute helpers.
+
+pub mod artifacts;
+pub mod client;

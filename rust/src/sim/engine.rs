@@ -1,0 +1,330 @@
+//! The streaming bottleneck engine.
+//!
+//! Simulates Algorithm 1 for one output mode on the Fig. 4 accelerator:
+//! the mode-sorted nonzero stream is partitioned across PEs by output
+//! slice; each PE walks its share charging occupancy to every resource an
+//! action touches (DRAM channel, the three caches, psum buffer, exec
+//! pipelines, DMA buffers). Runtime per PE is the busiest resource's total
+//! (all units are deeply pipelined and run concurrently — the classic
+//! bottleneck/roofline abstraction the paper's own model uses) plus the
+//! un-hideable startup/drain latency; mode runtime is the slowest PE.
+//!
+//! Complexity is O(nnz × (N−1)) per mode — the cache lookups dominate, so
+//! the engine streams tens of millions of nonzeros per second (see
+//! EXPERIMENTS.md §Perf).
+
+use crate::accel::config::AcceleratorConfig;
+use crate::cache::pipeline::ArrayTiming;
+use crate::controller::mc::MemoryController;
+use crate::mem::tech::MemTech;
+use crate::pe::exec::ExecUnit;
+use crate::sim::result::{ModeReport, PeReport, SimReport};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Partition the view's slices into `n_pes` contiguous chunks balanced by
+/// nonzero count. Returns per-PE slice index ranges `[lo, hi)`.
+pub fn partition_slices(view: &ModeView, n_pes: usize) -> Vec<(usize, usize)> {
+    assert!(n_pes > 0);
+    let n_slices = view.n_slices();
+    let total: u64 = view.nnz() as u64;
+    let target = total as f64 / n_pes as f64;
+    let mut parts = Vec::with_capacity(n_pes);
+    let mut lo = 0usize;
+    let mut consumed = 0u64;
+    for pe in 0..n_pes {
+        if pe == n_pes - 1 {
+            parts.push((lo, n_slices));
+            break;
+        }
+        let want = ((pe + 1) as f64 * target).round() as u64;
+        let mut hi = lo;
+        while hi < n_slices && consumed < want {
+            consumed +=
+                (view.slice_ptr[hi + 1] - view.slice_ptr[hi]) as u64;
+            hi += 1;
+        }
+        parts.push((lo, hi));
+        lo = hi;
+    }
+    parts
+}
+
+/// Simulate one output mode of `tensor` on the accelerator with memory
+/// technology `tech`. The tensor does **not** need to be pre-sorted — the
+/// engine builds the per-mode view itself (counting sort, O(nnz)).
+pub fn simulate_mode(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: MemTech,
+) -> ModeReport {
+    assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    cfg.validate().expect("invalid accelerator config");
+    let view = ModeView::build(tensor, mode);
+    let parts = partition_slices(&view, cfg.n_pes);
+
+    // Input factor matrices, in mode order, skipping the output mode; the
+    // controller's bypass routing needs their row counts.
+    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
+    let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
+
+    let t = cfg.technology(tech);
+    let banks = match tech {
+        MemTech::ESram => cfg.esram_bank_factor,
+        MemTech::OSram => 1,
+    };
+    let psum_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
+    // psum banking: one bank per group of 10 pipelines (Table I's 80
+    // pipelines share 8 psum banks — a fixed design property, see
+    // DESIGN.md §4).
+    let psum_banks = (cfg.n_pipelines / 10).max(1);
+
+    let mut pes = Vec::with_capacity(cfg.n_pes);
+    let nnz_item_bytes = (4 * tensor.n_modes() + 4) as u64;
+    let row_bytes = cfg.row_bytes() as u64;
+
+    for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
+        let mut mc = MemoryController::new(cfg, tech, &matrix_rows);
+        let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
+
+        let mut pipeline_cycles = 0.0f64;
+        let mut psum_cycles = 0.0f64;
+        let mut psum_words = 0u64;
+        let mut pe_nnz = 0u64;
+
+        let per_nnz = exec.nonzero(tensor.n_modes());
+        let per_drain = exec.drain_slice();
+
+        for s in slo..shi {
+            let slice = view.slice(s);
+            pe_nnz += slice.len() as u64;
+            for &k in slice {
+                let k = k as usize;
+                for (j, &m) in input_modes.iter().enumerate() {
+                    let row = tensor.indices[m][k];
+                    mc.factor_row_load(j, row);
+                }
+                pipeline_cycles += per_nnz.pipeline_cycles;
+                psum_cycles += per_nnz.psum_cycles;
+                psum_words += per_nnz.psum_words;
+            }
+            // slice complete: drain psum row + store output row
+            psum_cycles += per_drain.psum_cycles;
+            psum_words += per_drain.psum_words;
+        }
+
+        // Sequential traffic, charged in bulk: the tensor's nonzeros stream
+        // in once (coordinates + value), the output rows stream out once.
+        let n_slices_pe = (shi - slo) as u64;
+        mc.stream(pe_nnz * nnz_item_bytes);
+        mc.stream(n_slices_pe * row_bytes);
+
+        // Startup/drain latency that pipelining cannot hide: one DRAM
+        // round-trip to prime the stream + one cache fill latency + the
+        // exec pipeline depth.
+        let latency_overhead = cfg.dram.row_miss_ns * 1e-9 * cfg.fabric_hz
+            + mc.cache_timing.hit_latency()
+            + cfg.rank as f64;
+
+        let stats = mc.cache_stats();
+        pes.push(PeReport {
+            pe: pe_idx,
+            nnz: pe_nnz,
+            slices: n_slices_pe,
+            dram_cycles: mc.dram.busy_cycles,
+            cache_cycles: mc.cache_busy.clone(),
+            psum_cycles,
+            pipeline_cycles,
+            stream_dma_cycles: mc.stream_busy,
+            element_dma_cycles: mc.element_busy,
+            latency_overhead_cycles: latency_overhead,
+            cache_stats: stats,
+            dram_stream_bytes: mc.dram.bytes_streamed,
+            dram_random_bytes: mc.dram.bytes_random,
+            dram_random_accesses: mc.dram.random_accesses,
+            cache_words: mc.cache_words,
+            psum_words,
+            dma_words: mc.dma_words,
+        });
+    }
+
+    ModeReport {
+        tensor: tensor.name.clone(),
+        mode,
+        tech,
+        rank: cfg.rank,
+        fabric_hz: cfg.fabric_hz,
+        pes,
+    }
+}
+
+/// Simulate every output mode (the full spMTTKRP sweep of Fig. 7's x-axis).
+pub fn simulate_all_modes(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    tech: MemTech,
+) -> SimReport {
+    let modes = (0..tensor.n_modes())
+        .map(|m| simulate_mode(tensor, m, cfg, tech))
+        .collect();
+    SimReport { tensor: tensor.name.clone(), tech, modes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen::{self, FrosttTensor, TensorSpec};
+
+    fn small_cfg() -> AcceleratorConfig {
+        AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+    }
+
+    #[test]
+    fn partition_covers_all_slices_once() {
+        let t = gen::random(&[100, 50, 60], 5000, 1);
+        let v = ModeView::build(&t, 0);
+        for n_pes in [1, 2, 4, 7] {
+            let parts = partition_slices(&v, n_pes);
+            assert_eq!(parts.len(), n_pes);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, v.n_slices());
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_roughly_balanced() {
+        let t = gen::random(&[1000, 50, 60], 40_000, 2);
+        let v = ModeView::build(&t, 0);
+        let parts = partition_slices(&v, 4);
+        for &(lo, hi) in &parts {
+            let nnz: u64 = (lo..hi).map(|s| v.slice(s).len() as u64).sum();
+            assert!(
+                (nnz as f64 - 10_000.0).abs() < 2_000.0,
+                "partition nnz {nnz} far from target"
+            );
+        }
+    }
+
+    #[test]
+    fn all_nonzeros_processed_once() {
+        let t = gen::random(&[64, 64, 64], 10_000, 3);
+        let r = simulate_mode(&t, 0, &small_cfg(), MemTech::ESram);
+        assert_eq!(r.total_nnz(), 10_000);
+        assert_eq!(r.pes.len(), 4);
+    }
+
+    #[test]
+    fn osram_never_slower_esram_never_faster() {
+        let cfg = small_cfg();
+        for spec in [
+            TensorSpec::custom("hot", vec![200, 200, 200], 30_000, 1.2),
+            TensorSpec::custom("cold", vec![500_000, 400_000, 600_000], 30_000, 0.1),
+        ] {
+            let t = spec.generate(11);
+            for mode in 0..3 {
+                let e = simulate_mode(&t, mode, &cfg, MemTech::ESram);
+                let o = simulate_mode(&t, mode, &cfg, MemTech::OSram);
+                assert!(
+                    e.runtime_cycles() >= o.runtime_cycles() * 0.999,
+                    "{} mode {mode}: E {} < O {}",
+                    t.name,
+                    e.runtime_cycles(),
+                    o.runtime_cycles()
+                );
+                // functional cache behaviour must be identical
+                assert_eq!(e.hit_rate(), o.hit_rate());
+            }
+        }
+    }
+
+    #[test]
+    fn hot_tensor_speedup_exceeds_cold() {
+        let cfg = small_cfg();
+        // hot: factor matrices fit the (scaled) caches entirely
+        let hot = TensorSpec::custom("hot", vec![48, 48, 48], 60_000, 1.2).generate(5);
+        let cold =
+            TensorSpec::custom("cold", vec![800_000, 700_000, 900_000], 60_000, 0.05).generate(5);
+        let sp = |t: &SparseTensor| {
+            let e = simulate_mode(t, 0, &cfg, MemTech::ESram);
+            let o = simulate_mode(t, 0, &cfg, MemTech::OSram);
+            e.runtime_cycles() / o.runtime_cycles()
+        };
+        let (sh, sc) = (sp(&hot), sp(&cold));
+        assert!(sh > sc, "hot speedup {sh} should exceed cold {sc}");
+        assert!(sh > 1.5, "hot speedup {sh} too small");
+        assert!(sc < 2.0, "cold speedup {sc} too large");
+    }
+
+    #[test]
+    fn runtime_scales_with_nnz() {
+        // cache-resident factor matrices ⇒ no cold-miss amortization ⇒
+        // runtime must scale linearly in nnz
+        let cfg = small_cfg();
+        let t1 = gen::random(&[64, 64, 64], 50_000, 7);
+        let t2 = gen::random(&[64, 64, 64], 200_000, 7);
+        let r1 = simulate_mode(&t1, 0, &cfg, MemTech::OSram);
+        let r2 = simulate_mode(&t2, 0, &cfg, MemTech::OSram);
+        let ratio = r2.runtime_cycles() / r1.runtime_cycles();
+        assert!(ratio > 3.5 && ratio < 4.5, "4x nnz should be ~4x time, got {ratio}");
+    }
+
+    #[test]
+    fn cold_miss_amortization_improves_hit_rate() {
+        // same dims, more nnz ⇒ compulsory misses amortize ⇒ hit rate up
+        let cfg = small_cfg();
+        let t1 = gen::random(&[256, 256, 256], 10_000, 7);
+        let t2 = gen::random(&[256, 256, 256], 40_000, 7);
+        let r1 = simulate_mode(&t1, 0, &cfg, MemTech::OSram);
+        let r2 = simulate_mode(&t2, 0, &cfg, MemTech::OSram);
+        assert!(r2.hit_rate() > r1.hit_rate());
+    }
+
+    #[test]
+    fn all_modes_report_covers_every_mode() {
+        let spec = gen::preset(FrosttTensor::Lbnl).scaled(1.0 / 64.0);
+        let t = spec.generate(4);
+        let r = simulate_all_modes(&t, &small_cfg(), MemTech::OSram);
+        assert_eq!(r.modes.len(), 5);
+        for (i, m) in r.modes.iter().enumerate() {
+            assert_eq!(m.mode, i);
+            assert_eq!(m.total_nnz() as u64, t.nnz() as u64);
+        }
+        assert!(r.total_runtime_s() > 0.0);
+    }
+
+    #[test]
+    fn single_pe_configuration_works() {
+        let mut cfg = small_cfg();
+        cfg.n_pes = 1;
+        let t = gen::random(&[64, 64], 1000, 9);
+        let r = simulate_mode(&t, 1, &cfg, MemTech::ESram);
+        assert_eq!(r.pes.len(), 1);
+        assert_eq!(r.total_nnz(), 1000);
+    }
+
+    #[test]
+    fn empty_tensor_simulates_to_near_zero() {
+        let t = SparseTensor::new("empty", vec![10, 10]);
+        let r = simulate_mode(&t, 0, &small_cfg(), MemTech::OSram);
+        assert_eq!(r.total_nnz(), 0);
+        // only fixed latency overhead remains
+        assert!(r.runtime_cycles() < 100.0);
+    }
+
+    #[test]
+    fn more_pes_reduce_runtime() {
+        let t = gen::random(&[2048, 512, 512], 100_000, 13);
+        let mut c1 = small_cfg();
+        c1.n_pes = 1;
+        let mut c4 = small_cfg();
+        c4.n_pes = 4;
+        let r1 = simulate_mode(&t, 0, &c1, MemTech::OSram);
+        let r4 = simulate_mode(&t, 0, &c4, MemTech::OSram);
+        let sp = r1.runtime_cycles() / r4.runtime_cycles();
+        assert!(sp > 2.5, "4 PEs should give ≥2.5x over 1, got {sp}");
+    }
+}

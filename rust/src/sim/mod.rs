@@ -1,0 +1,11 @@
+//! The cycle-approximate simulation engine.
+//!
+//! * [`result`] — [`result::SimReport`] / [`result::ModeReport`]: per-PE
+//!   resource busy times, cache statistics, traffic and active-word
+//!   counters, bottleneck identification.
+//! * [`engine`] — the streaming bottleneck engine: walks the mode-sorted
+//!   nonzero stream through the memory controller / exec-unit timing
+//!   models, O(nnz) per mode.
+
+pub mod engine;
+pub mod result;

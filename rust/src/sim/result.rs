@@ -1,0 +1,281 @@
+//! Simulation results: per-PE and per-mode reports.
+
+use crate::cache::cache::CacheStats;
+use crate::mem::tech::MemTech;
+
+/// Named resources a PE can bottleneck on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resource {
+    /// External DRAM channel (stream + random combined).
+    Dram,
+    /// The busiest of the PE's caches.
+    Cache,
+    /// Partial-sum buffer ports.
+    Psum,
+    /// Execution pipelines.
+    Pipelines,
+    /// Stream-DMA staging buffer.
+    StreamDma,
+    /// Element-wise DMA staging buffer.
+    ElementDma,
+}
+
+impl Resource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resource::Dram => "dram",
+            Resource::Cache => "cache",
+            Resource::Psum => "psum",
+            Resource::Pipelines => "pipelines",
+            Resource::StreamDma => "stream-dma",
+            Resource::ElementDma => "element-dma",
+        }
+    }
+}
+
+/// Result of simulating one PE's share of one output mode.
+#[derive(Clone, Debug)]
+pub struct PeReport {
+    pub pe: usize,
+    pub nnz: u64,
+    pub slices: u64,
+    /// Busy cycles per resource (fabric cycles).
+    pub dram_cycles: f64,
+    pub cache_cycles: Vec<f64>,
+    pub psum_cycles: f64,
+    pub pipeline_cycles: f64,
+    pub stream_dma_cycles: f64,
+    pub element_dma_cycles: f64,
+    /// Fixed latency overhead not hidden by pipelining (startup / drain).
+    pub latency_overhead_cycles: f64,
+    /// Functional cache statistics (summed over the PE's caches).
+    pub cache_stats: CacheStats,
+    /// DRAM traffic.
+    pub dram_stream_bytes: u64,
+    pub dram_random_bytes: u64,
+    pub dram_random_accesses: u64,
+    /// Active 32-bit words moved through each on-chip component
+    /// (Eq. 3 `S_active` feeders).
+    pub cache_words: u64,
+    pub psum_words: u64,
+    pub dma_words: u64,
+}
+
+impl PeReport {
+    /// The PE finishes when its most-loaded resource drains.
+    pub fn runtime_cycles(&self) -> f64 {
+        let cache_max = self.cache_cycles.iter().cloned().fold(0.0f64, f64::max);
+        self.dram_cycles
+            .max(cache_max)
+            .max(self.psum_cycles)
+            .max(self.pipeline_cycles)
+            .max(self.stream_dma_cycles)
+            .max(self.element_dma_cycles)
+            + self.latency_overhead_cycles
+    }
+
+    /// Which resource bound this PE.
+    pub fn bottleneck(&self) -> Resource {
+        let cache_max = self.cache_cycles.iter().cloned().fold(0.0f64, f64::max);
+        let candidates = [
+            (self.dram_cycles, Resource::Dram),
+            (cache_max, Resource::Cache),
+            (self.psum_cycles, Resource::Psum),
+            (self.pipeline_cycles, Resource::Pipelines),
+            (self.stream_dma_cycles, Resource::StreamDma),
+            (self.element_dma_cycles, Resource::ElementDma),
+        ];
+        candidates
+            .iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|&(_, r)| r)
+            .unwrap()
+    }
+
+    /// Total active on-chip words (cache + psum + DMA buffers).
+    pub fn onchip_words(&self) -> u64 {
+        self.cache_words + self.psum_words + self.dma_words
+    }
+}
+
+/// Result of simulating one full output mode across all PEs.
+#[derive(Clone, Debug)]
+pub struct ModeReport {
+    pub tensor: String,
+    pub mode: usize,
+    pub tech: MemTech,
+    pub rank: usize,
+    pub fabric_hz: f64,
+    pub pes: Vec<PeReport>,
+}
+
+impl ModeReport {
+    /// Mode runtime = slowest PE (they run concurrently).
+    pub fn runtime_cycles(&self) -> f64 {
+        self.pes.iter().map(|p| p.runtime_cycles()).fold(0.0, f64::max)
+    }
+
+    pub fn runtime_s(&self) -> f64 {
+        self.runtime_cycles() / self.fabric_hz
+    }
+
+    pub fn total_nnz(&self) -> u64 {
+        self.pes.iter().map(|p| p.nnz).sum()
+    }
+
+    /// Aggregate cache hit rate over all PEs.
+    pub fn hit_rate(&self) -> f64 {
+        let (mut h, mut a) = (0u64, 0u64);
+        for p in &self.pes {
+            h += p.cache_stats.hits;
+            a += p.cache_stats.accesses();
+        }
+        if a == 0 {
+            0.0
+        } else {
+            h as f64 / a as f64
+        }
+    }
+
+    /// Bottleneck of the slowest PE.
+    pub fn bottleneck(&self) -> Resource {
+        self.pes
+            .iter()
+            .max_by(|a, b| a.runtime_cycles().partial_cmp(&b.runtime_cycles()).unwrap())
+            .map(|p| p.bottleneck())
+            .unwrap_or(Resource::Dram)
+    }
+
+    /// Aggregates for the energy model.
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.pes.iter().map(|p| p.dram_stream_bytes + p.dram_random_bytes).sum()
+    }
+    pub fn total_dram_random_accesses(&self) -> u64 {
+        self.pes.iter().map(|p| p.dram_random_accesses).sum()
+    }
+    pub fn total_onchip_words(&self) -> u64 {
+        self.pes.iter().map(|p| p.onchip_words()).sum()
+    }
+
+    /// PE load imbalance: max/mean nnz ratio (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        if self.pes.is_empty() {
+            return 1.0;
+        }
+        let max = self.pes.iter().map(|p| p.nnz).max().unwrap() as f64;
+        let mean = self.total_nnz() as f64 / self.pes.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// All modes of one tensor on one technology.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub tensor: String,
+    pub tech: MemTech,
+    pub modes: Vec<ModeReport>,
+}
+
+impl SimReport {
+    /// Total spMTTKRP time: the paper's experiments execute all modes in
+    /// sequence (M0..M_{N−1} on the Fig. 7 x-axis).
+    pub fn total_runtime_s(&self) -> f64 {
+        self.modes.iter().map(|m| m.runtime_s()).sum()
+    }
+
+    pub fn total_runtime_cycles(&self) -> f64 {
+        self.modes.iter().map(|m| m.runtime_cycles()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe(dram: f64, cache: f64, psum: f64) -> PeReport {
+        PeReport {
+            pe: 0,
+            nnz: 100,
+            slices: 10,
+            dram_cycles: dram,
+            cache_cycles: vec![cache, cache / 2.0],
+            psum_cycles: psum,
+            pipeline_cycles: 1.0,
+            stream_dma_cycles: 0.5,
+            element_dma_cycles: 0.0,
+            latency_overhead_cycles: 2.0,
+            cache_stats: CacheStats { hits: 80, misses: 20, evictions: 5, writebacks: 0 },
+            dram_stream_bytes: 1000,
+            dram_random_bytes: 640,
+            dram_random_accesses: 10,
+            cache_words: 100,
+            psum_words: 50,
+            dma_words: 25,
+        }
+    }
+
+    #[test]
+    fn runtime_is_max_resource_plus_latency() {
+        let p = pe(10.0, 20.0, 5.0);
+        assert_eq!(p.runtime_cycles(), 22.0);
+        assert_eq!(p.bottleneck(), Resource::Cache);
+        let p2 = pe(30.0, 20.0, 5.0);
+        assert_eq!(p2.bottleneck(), Resource::Dram);
+        assert_eq!(p2.runtime_cycles(), 32.0);
+    }
+
+    #[test]
+    fn mode_runtime_is_slowest_pe() {
+        let m = ModeReport {
+            tensor: "t".into(),
+            mode: 0,
+            tech: MemTech::ESram,
+            rank: 16,
+            fabric_hz: 500e6,
+            pes: vec![pe(10.0, 5.0, 1.0), pe(40.0, 5.0, 1.0)],
+        };
+        assert_eq!(m.runtime_cycles(), 42.0);
+        assert!((m.runtime_s() - 42.0 / 500e6).abs() < 1e-18);
+        assert_eq!(m.total_nnz(), 200);
+        assert!((m.hit_rate() - 0.8).abs() < 1e-12);
+        assert_eq!(m.bottleneck(), Resource::Dram);
+        assert_eq!(m.total_dram_bytes(), 2 * 1640);
+        assert_eq!(m.total_onchip_words(), 2 * 175);
+        assert!((m.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_report_sums_modes() {
+        let m = ModeReport {
+            tensor: "t".into(),
+            mode: 0,
+            tech: MemTech::OSram,
+            rank: 16,
+            fabric_hz: 500e6,
+            pes: vec![pe(10.0, 5.0, 1.0)],
+        };
+        let r = SimReport { tensor: "t".into(), tech: MemTech::OSram, modes: vec![m.clone(), m] };
+        assert_eq!(r.total_runtime_cycles(), 24.0);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let mut a = pe(1.0, 1.0, 1.0);
+        let mut b = pe(1.0, 1.0, 1.0);
+        a.nnz = 300;
+        b.nnz = 100;
+        let m = ModeReport {
+            tensor: "t".into(),
+            mode: 0,
+            tech: MemTech::ESram,
+            rank: 16,
+            fabric_hz: 500e6,
+            pes: vec![a, b],
+        };
+        assert!((m.imbalance() - 1.5).abs() < 1e-12);
+    }
+}

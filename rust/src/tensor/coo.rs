@@ -1,0 +1,334 @@
+//! Coordinate-format (COO) sparse tensors with FROSTT `.tns` I/O.
+//!
+//! Layout: structure-of-arrays — one flat `Vec<u32>` of indices per mode
+//! plus a `Vec<f32>` of values. SoA keeps the simulator's per-mode walks
+//! cache-friendly and lets the trace generator iterate a single mode's
+//! index stream without striding over the others.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// An N-mode sparse tensor in coordinate format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    /// Human-readable name (e.g. `"nell-2@1/256"`).
+    pub name: String,
+    /// Size of each mode, `dims.len()` = number of modes N ≥ 1.
+    pub dims: Vec<u64>,
+    /// `indices[m][k]` = mode-`m` coordinate of nonzero `k`.
+    pub indices: Vec<Vec<u32>>,
+    /// `values[k]` = value of nonzero `k`.
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    /// Create an empty tensor with the given mode sizes.
+    pub fn new(name: &str, dims: Vec<u64>) -> Self {
+        assert!(!dims.is_empty(), "tensor needs at least one mode");
+        assert!(
+            dims.iter().all(|&d| d > 0 && d <= u32::MAX as u64 + 1),
+            "mode sizes must fit u32 coordinates"
+        );
+        let n = dims.len();
+        SparseTensor { name: name.to_string(), dims, indices: vec![Vec::new(); n], values: Vec::new() }
+    }
+
+    /// Number of modes N.
+    #[inline]
+    pub fn n_modes(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Number of stored nonzeros |T|.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density |T| / ∏ dims (Table II's rightmost column).
+    pub fn density(&self) -> f64 {
+        let cells: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / cells
+    }
+
+    /// Append a nonzero. Panics (debug) if coordinates are out of range.
+    #[inline]
+    pub fn push(&mut self, coords: &[u32], value: f32) {
+        debug_assert_eq!(coords.len(), self.n_modes());
+        for (m, (&c, &d)) in coords.iter().zip(&self.dims).enumerate() {
+            debug_assert!((c as u64) < d, "mode {m}: coord {c} out of range {d}");
+            let _ = m;
+        }
+        for (m, &c) in coords.iter().enumerate() {
+            self.indices[m].push(c);
+        }
+        self.values.push(value);
+    }
+
+    /// Coordinates of nonzero `k` (allocates; hot paths should index
+    /// `self.indices[m][k]` directly).
+    pub fn coords(&self, k: usize) -> Vec<u32> {
+        self.indices.iter().map(|col| col[k]).collect()
+    }
+
+    /// Full structural validation: arity, lengths, coordinate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.dims.is_empty() {
+            bail!("tensor {} has no modes", self.name);
+        }
+        if self.indices.len() != self.dims.len() {
+            bail!(
+                "tensor {}: {} index columns for {} modes",
+                self.name,
+                self.indices.len(),
+                self.dims.len()
+            );
+        }
+        for (m, col) in self.indices.iter().enumerate() {
+            if col.len() != self.values.len() {
+                bail!(
+                    "tensor {}: mode {m} has {} coords but {} values",
+                    self.name,
+                    col.len(),
+                    self.values.len()
+                );
+            }
+            let dim = self.dims[m];
+            if let Some(&bad) = col.iter().find(|&&c| c as u64 >= dim) {
+                bail!("tensor {}: mode {m} coordinate {bad} ≥ dim {dim}", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort nonzeros lexicographically with `mode` as the primary key (the
+    /// order Algorithm 1 consumes for output mode `mode`). Stable w.r.t.
+    /// remaining modes in ascending mode order. Returns the permutation
+    /// applied (old position of each new slot).
+    pub fn sort_by_mode(&mut self, mode: usize) -> Vec<u32> {
+        assert!(mode < self.n_modes());
+        let n = self.nnz();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let key_modes: Vec<usize> =
+            std::iter::once(mode).chain((0..self.n_modes()).filter(|&m| m != mode)).collect();
+        order.sort_unstable_by(|&a, &b| {
+            for &m in &key_modes {
+                let (ia, ib) = (self.indices[m][a as usize], self.indices[m][b as usize]);
+                match ia.cmp(&ib) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        self.apply_permutation(&order);
+        order
+    }
+
+    /// Reorder nonzeros so new slot `i` holds old nonzero `perm[i]`.
+    pub fn apply_permutation(&mut self, perm: &[u32]) {
+        assert_eq!(perm.len(), self.nnz());
+        for col in &mut self.indices {
+            let new: Vec<u32> = perm.iter().map(|&p| col[p as usize]).collect();
+            *col = new;
+        }
+        let newv: Vec<f32> = perm.iter().map(|&p| self.values[p as usize]).collect();
+        self.values = newv;
+    }
+
+    /// Total bytes a hardware run must move for the tensor itself:
+    /// each nonzero is N u32 coordinates + one f32 value.
+    pub fn nnz_bytes(&self) -> u64 {
+        (self.nnz() as u64) * (4 * self.n_modes() as u64 + 4)
+    }
+
+    // ------------------------------------------------------------------
+    // FROSTT .tns text format: one nonzero per line,
+    // `i_1 i_2 ... i_N value`, 1-based indices, `#` comments.
+    // ------------------------------------------------------------------
+
+    /// Parse FROSTT `.tns` text. Mode sizes are taken as the max coordinate
+    /// seen per mode (the FROSTT convention) unless `dims` is given.
+    pub fn read_tns(reader: impl BufRead, name: &str, dims: Option<Vec<u64>>) -> Result<Self> {
+        let mut rows: Vec<(Vec<u32>, f32)> = Vec::new();
+        let mut n_modes: Option<usize> = None;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.context("read error")?;
+            let body = line.split('#').next().unwrap_or("").trim();
+            if body.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = body.split_whitespace().collect();
+            if fields.len() < 2 {
+                bail!("{name}:{}: expected `i.. value`, got `{body}`", lineno + 1);
+            }
+            let n = fields.len() - 1;
+            match n_modes {
+                None => n_modes = Some(n),
+                Some(expect) if expect != n => {
+                    bail!("{name}:{}: {n} coords, expected {expect}", lineno + 1)
+                }
+                _ => {}
+            }
+            let mut coords = Vec::with_capacity(n);
+            for f in &fields[..n] {
+                let one_based: u64 =
+                    f.parse().with_context(|| format!("{name}:{}: bad index `{f}`", lineno + 1))?;
+                if one_based == 0 {
+                    bail!("{name}:{}: .tns indices are 1-based, got 0", lineno + 1);
+                }
+                coords.push((one_based - 1) as u32);
+            }
+            let value: f32 = fields[n]
+                .parse()
+                .with_context(|| format!("{name}:{}: bad value `{}`", lineno + 1, fields[n]))?;
+            rows.push((coords, value));
+        }
+        let n = n_modes.unwrap_or(dims.as_ref().map(|d| d.len()).unwrap_or(0));
+        if n == 0 {
+            bail!("{name}: empty tensor file and no dims given");
+        }
+        let dims = dims.unwrap_or_else(|| {
+            (0..n)
+                .map(|m| rows.iter().map(|(c, _)| c[m] as u64 + 1).max().unwrap_or(1))
+                .collect()
+        });
+        let mut t = SparseTensor::new(name, dims);
+        for (coords, v) in rows {
+            t.push(&coords, v);
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Load a `.tns` file from disk.
+    pub fn load_tns(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("tensor").to_string();
+        Self::read_tns(std::io::BufReader::new(file), &name, None)
+    }
+
+    /// Write FROSTT `.tns` text (1-based indices).
+    pub fn write_tns(&self, w: impl Write) -> Result<()> {
+        let mut w = BufWriter::new(w);
+        for k in 0..self.nnz() {
+            for m in 0..self.n_modes() {
+                write!(w, "{} ", self.indices[m][k] as u64 + 1)?;
+            }
+            writeln!(w, "{}", self.values[k])?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SparseTensor {
+        let mut t = SparseTensor::new("t", vec![4, 5, 6]);
+        t.push(&[3, 0, 2], 1.0);
+        t.push(&[0, 4, 5], 2.0);
+        t.push(&[3, 0, 1], 3.0);
+        t.push(&[1, 2, 2], 4.0);
+        t
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let t = small();
+        assert_eq!(t.n_modes(), 3);
+        assert_eq!(t.nnz(), 4);
+        assert_eq!(t.coords(1), vec![0, 4, 5]);
+        assert!((t.density() - 4.0 / 120.0).abs() < 1e-12);
+        assert_eq!(t.nnz_bytes(), 4 * (12 + 4));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn sort_by_mode_groups_output_index() {
+        let mut t = small();
+        t.sort_by_mode(0);
+        assert_eq!(t.indices[0], vec![0, 1, 3, 3]);
+        // ties on mode 0 broken by remaining modes ascending: (3,0,1) < (3,0,2)
+        assert_eq!(t.indices[2][2], 1);
+        assert_eq!(t.indices[2][3], 2);
+        // values follow their nonzeros
+        assert_eq!(t.values, vec![2.0, 4.0, 3.0, 1.0]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn sort_by_middle_mode() {
+        let mut t = small();
+        t.sort_by_mode(1);
+        let mut prev = 0u32;
+        for &i in &t.indices[1] {
+            assert!(i >= prev);
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        let t0 = small();
+        let mut t = t0.clone();
+        let perm = t.sort_by_mode(2);
+        // invert and restore
+        let mut inv = vec![0u32; perm.len()];
+        for (newpos, &old) in perm.iter().enumerate() {
+            inv[old as usize] = newpos as u32;
+        }
+        // applying inv to sorted gives original? apply_permutation semantics:
+        // new[i] = old[perm[i]]; to undo apply perm2 with perm2[j] = position
+        // of original j in sorted = inv[j].
+        t.apply_permutation(&inv);
+        assert_eq!(t, t0);
+    }
+
+    #[test]
+    fn tns_roundtrip() {
+        let t = small();
+        let mut buf = Vec::new();
+        t.write_tns(&mut buf).unwrap();
+        let back =
+            SparseTensor::read_tns(std::io::Cursor::new(buf), "t", Some(t.dims.clone())).unwrap();
+        assert_eq!(back.indices, t.indices);
+        assert_eq!(back.values, t.values);
+    }
+
+    #[test]
+    fn tns_parses_comments_and_infers_dims() {
+        let text = "# header\n1 1 1 5.0\n2 3 4 -1.5  # trailing\n\n";
+        let t = SparseTensor::read_tns(std::io::Cursor::new(text), "x", None).unwrap();
+        assert_eq!(t.dims, vec![2, 3, 4]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.values[1], -1.5);
+        assert_eq!(t.coords(0), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn tns_rejects_zero_based_and_ragged() {
+        assert!(SparseTensor::read_tns(std::io::Cursor::new("0 1 1 2.0"), "x", None).is_err());
+        assert!(SparseTensor::read_tns(std::io::Cursor::new("1 1 1 2.0\n1 1 2.0"), "x", None)
+            .is_err());
+        assert!(SparseTensor::read_tns(std::io::Cursor::new(""), "x", None).is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut t = small();
+        t.dims[0] = 2; // now coord 3 is invalid
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let mut t = small();
+        t.values.pop();
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Per-output-mode compressed view (CSF-style, two levels).
+//!
+//! Algorithm 1 consumes nonzeros grouped by the output-mode index so each
+//! output row `A(i,:)` is produced exactly once with no partial sums spilled
+//! to DRAM. [`ModeView`] materializes that grouping: slices (distinct output
+//! indices) → the range of nonzeros in each slice, over a mode-sorted
+//! nonzero ordering, without duplicating the tensor.
+
+use crate::tensor::coo::SparseTensor;
+
+/// A two-level compressed view of a tensor for one output mode.
+///
+/// `slice_ptr` is the classic CSR-style offsets array: slice `s` covers
+/// nonzeros `order[slice_ptr[s] .. slice_ptr[s+1]]`, all sharing output
+/// index `slice_idx[s]`. `order[k]` maps view position → original nonzero.
+#[derive(Clone, Debug)]
+pub struct ModeView {
+    /// The output mode this view is for.
+    pub mode: usize,
+    /// Distinct output-mode indices, ascending.
+    pub slice_idx: Vec<u32>,
+    /// Offsets into `order`, length `slice_idx.len() + 1`.
+    pub slice_ptr: Vec<u32>,
+    /// Permutation: view position → original nonzero id.
+    pub order: Vec<u32>,
+}
+
+impl ModeView {
+    /// Build the view for `mode`.
+    ///
+    /// Two strategies, picked by density of the output mode:
+    /// * **counting sort** — O(nnz + dim), stable; ideal when the mode
+    ///   dimension is comparable to nnz;
+    /// * **comparison sort** — O(nnz log nnz); when `dim ≫ nnz` the
+    ///   counting sort's dim-sized histogram (tens of MB for web-scale
+    ///   modes) costs more in allocation + cold-memory traffic than the
+    ///   log factor (§Perf: 4.3 → >15 M nnz-events/s on miss-heavy
+    ///   workloads).
+    ///
+    /// Both produce identical views (stable grouping by output index,
+    /// original order within a slice).
+    pub fn build(t: &SparseTensor, mode: usize) -> Self {
+        assert!(mode < t.n_modes(), "mode {mode} out of range");
+        let dim = t.dims[mode] as usize;
+        let nnz = t.nnz();
+        if dim <= 4 * nnz + 1024 {
+            Self::build_counting(t, mode, dim)
+        } else {
+            Self::build_sorting(t, mode)
+        }
+    }
+
+    /// Counting-sort construction (histogram → prefix sum → scatter).
+    fn build_counting(t: &SparseTensor, mode: usize, dim: usize) -> Self {
+        let col = &t.indices[mode];
+        let nnz = t.nnz();
+        let mut count = vec![0u32; dim + 1];
+        for &i in col {
+            count[i as usize + 1] += 1;
+        }
+        for s in 0..dim {
+            count[s + 1] += count[s];
+        }
+        let mut order = vec![0u32; nnz];
+        let mut cursor = count.clone();
+        for (k, &i) in col.iter().enumerate() {
+            let slot = cursor[i as usize];
+            order[slot as usize] = k as u32;
+            cursor[i as usize] += 1;
+        }
+
+        // compress empty slices out
+        let mut slice_idx = Vec::new();
+        let mut slice_ptr = vec![0u32];
+        for i in 0..dim {
+            if count[i + 1] > count[i] {
+                slice_idx.push(i as u32);
+                slice_ptr.push(count[i + 1]);
+            }
+        }
+        ModeView { mode, slice_idx, slice_ptr, order }
+    }
+
+    /// Sort-based construction for `dim ≫ nnz` modes.
+    fn build_sorting(t: &SparseTensor, mode: usize) -> Self {
+        let col = &t.indices[mode];
+        let nnz = t.nnz();
+        let mut order: Vec<u32> = (0..nnz as u32).collect();
+        // stable sort on output index keeps original order within slices,
+        // matching build_counting exactly
+        order.sort_by_key(|&k| col[k as usize]);
+        let mut slice_idx = Vec::new();
+        let mut slice_ptr = vec![0u32];
+        let mut prev: Option<u32> = None;
+        for (pos, &k) in order.iter().enumerate() {
+            let idx = col[k as usize];
+            if prev != Some(idx) {
+                if prev.is_some() {
+                    slice_ptr.push(pos as u32);
+                }
+                slice_idx.push(idx);
+                prev = Some(idx);
+            }
+        }
+        if prev.is_some() {
+            slice_ptr.push(nnz as u32);
+        }
+        ModeView { mode, slice_idx, slice_ptr, order }
+    }
+
+    /// Number of non-empty output slices (rows of A actually written).
+    #[inline]
+    pub fn n_slices(&self) -> usize {
+        self.slice_idx.len()
+    }
+
+    /// Total nonzeros covered (= tensor nnz).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Iterate `(output_index, &[original nonzero ids])` per slice.
+    pub fn slices(&self) -> impl Iterator<Item = (u32, &[u32])> + '_ {
+        self.slice_idx.iter().enumerate().map(move |(s, &idx)| {
+            let lo = self.slice_ptr[s] as usize;
+            let hi = self.slice_ptr[s + 1] as usize;
+            (idx, &self.order[lo..hi])
+        })
+    }
+
+    /// Nonzeros in slice `s` (by position, not output index).
+    pub fn slice(&self, s: usize) -> &[u32] {
+        let lo = self.slice_ptr[s] as usize;
+        let hi = self.slice_ptr[s + 1] as usize;
+        &self.order[lo..hi]
+    }
+
+    /// Fibers-per-slice summary used by the generators' calibration tests.
+    pub fn avg_nnz_per_slice(&self) -> f64 {
+        if self.n_slices() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_slices() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, FnGen};
+    use crate::util::rng::Rng;
+
+    fn small() -> SparseTensor {
+        let mut t = SparseTensor::new("t", vec![4, 5, 6]);
+        t.push(&[3, 0, 2], 1.0);
+        t.push(&[0, 4, 5], 2.0);
+        t.push(&[3, 0, 1], 3.0);
+        t.push(&[1, 2, 2], 4.0);
+        t
+    }
+
+    #[test]
+    fn groups_by_output_index() {
+        let t = small();
+        let v = ModeView::build(&t, 0);
+        assert_eq!(v.slice_idx, vec![0, 1, 3]);
+        assert_eq!(v.n_slices(), 3);
+        assert_eq!(v.slice(0), &[1]); // nonzero 1 has i0 = 0
+        assert_eq!(v.slice(1), &[3]);
+        assert_eq!(v.slice(2), &[0, 2]); // stable: original order kept
+        assert_eq!(v.nnz(), 4);
+    }
+
+    #[test]
+    fn every_mode_covers_all_nonzeros() {
+        let t = small();
+        for m in 0..3 {
+            let v = ModeView::build(&t, m);
+            let mut seen = vec![false; t.nnz()];
+            for (_, slice) in v.slices() {
+                for &k in slice {
+                    assert!(!seen[k as usize], "duplicate nonzero {k}");
+                    seen[k as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "mode {m} missed nonzeros");
+        }
+    }
+
+    #[test]
+    fn slices_have_uniform_output_index() {
+        let t = small();
+        for m in 0..3 {
+            let v = ModeView::build(&t, m);
+            for (idx, slice) in v.slices() {
+                for &k in slice {
+                    assert_eq!(t.indices[m][k as usize], idx);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counting_and_sorting_builders_agree() {
+        // force both paths on the same data and compare field-for-field
+        let mut t = SparseTensor::new("b", vec![1_000_000, 8]);
+        let mut rng = Rng::new(9);
+        for _ in 0..500 {
+            t.push(&[rng.below(1_000_000) as u32, rng.below(8) as u32], 1.0);
+        }
+        let by_sort = ModeView::build(&t, 0); // dim ≫ nnz ⇒ sorting path
+        let by_count = ModeView::build_counting(&t, 0, 1_000_000);
+        assert_eq!(by_sort.slice_idx, by_count.slice_idx);
+        assert_eq!(by_sort.slice_ptr, by_count.slice_ptr);
+        assert_eq!(by_sort.order, by_count.order);
+        // dense mode takes the counting path; cross-check it too
+        let dense_sort = ModeView::build_sorting(&t, 1);
+        let dense_count = ModeView::build(&t, 1);
+        assert_eq!(dense_sort.order, dense_count.order);
+        assert_eq!(dense_sort.slice_ptr, dense_count.slice_ptr);
+    }
+
+    #[test]
+    fn empty_tensor_has_no_slices() {
+        let t = SparseTensor::new("e", vec![10, 10]);
+        let v = ModeView::build(&t, 0);
+        assert_eq!(v.n_slices(), 0);
+        assert_eq!(v.nnz(), 0);
+        assert_eq!(v.avg_nnz_per_slice(), 0.0);
+    }
+
+    #[test]
+    fn prop_view_is_partition_with_sorted_slices() {
+        // random small tensors: view is a partition of nonzeros and
+        // slice_idx strictly ascending, for every mode.
+        let gen = FnGen(|rng: &mut Rng| {
+            let n_modes = 1 + rng.index(4);
+            let dims: Vec<u64> = (0..n_modes).map(|_| 1 + rng.below(12)).collect();
+            let nnz = rng.index(60);
+            let mut t = SparseTensor::new("p", dims.clone());
+            for _ in 0..nnz {
+                let coords: Vec<u32> =
+                    dims.iter().map(|&d| rng.below(d) as u32).collect();
+                t.push(&coords, rng.f32());
+            }
+            (t.dims.clone(), t.indices.clone(), t.values.clone())
+        });
+        check("modeview_partition", 60, &gen, |(dims, indices, values)| {
+            let t = SparseTensor {
+                name: "p".into(),
+                dims: dims.clone(),
+                indices: indices.clone(),
+                values: values.clone(),
+            };
+            (0..t.n_modes()).all(|m| {
+                let v = ModeView::build(&t, m);
+                let mut seen = vec![false; t.nnz()];
+                let mut prev: i64 = -1;
+                for (idx, slice) in v.slices() {
+                    if (idx as i64) <= prev || slice.is_empty() {
+                        return false;
+                    }
+                    prev = idx as i64;
+                    for &k in slice {
+                        if seen[k as usize] {
+                            return false;
+                        }
+                        seen[k as usize] = true;
+                    }
+                }
+                seen.iter().all(|&b| b)
+            })
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Hypergraph model of a sparse tensor (paper §IV-A, Fig. 3).
+//!
+//! For an N-mode tensor with M nonzeros, H = (V, E) has
+//! |V| = Σ dims (one vertex per index of every mode) and |E| = M (one
+//! hyperedge per nonzero, connecting its N coordinates). The paper uses
+//! this model to reason about the memory mapping; here it also feeds the
+//! locality statistics ([`remap`](crate::tensor::remap) and the generator
+//! calibration tests).
+
+use crate::tensor::coo::SparseTensor;
+
+/// Degree statistics of one mode's vertex class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModeDegrees {
+    /// `degree[i]` = number of hyperedges touching vertex `i` of this mode
+    /// (= nonzeros whose coordinate in this mode is `i`).
+    pub degree: Vec<u32>,
+    /// Vertices with degree > 0.
+    pub active: usize,
+}
+
+impl ModeDegrees {
+    pub fn max(&self) -> u32 {
+        self.degree.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fraction of all hyperedge endpoints landing on the `k` highest-degree
+    /// vertices — the "head mass", a direct proxy for cache hit potential:
+    /// if 90% of factor-row accesses hit 1% of rows, a small cache covers
+    /// them.
+    pub fn head_mass(&self, k: usize) -> f64 {
+        let total: u64 = self.degree.iter().map(|&d| d as u64).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut sorted: Vec<u32> = self.degree.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let head: u64 = sorted.iter().take(k).map(|&d| d as u64).sum();
+        head as f64 / total as f64
+    }
+}
+
+/// The hypergraph H = (V, E) of a tensor, stored as per-mode degree arrays
+/// plus global counts (the full incidence structure is the tensor itself —
+/// no need to duplicate it).
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    pub n_vertices: u64,
+    pub n_hyperedges: usize,
+    pub modes: Vec<ModeDegrees>,
+}
+
+impl Hypergraph {
+    pub fn build(t: &SparseTensor) -> Self {
+        let mut modes = Vec::with_capacity(t.n_modes());
+        for m in 0..t.n_modes() {
+            let mut degree = vec![0u32; t.dims[m] as usize];
+            for &i in &t.indices[m] {
+                degree[i as usize] += 1;
+            }
+            let active = degree.iter().filter(|&&d| d > 0).count();
+            modes.push(ModeDegrees { degree, active });
+        }
+        Hypergraph {
+            n_vertices: t.dims.iter().sum(),
+            n_hyperedges: t.nnz(),
+            modes,
+        }
+    }
+
+    /// Paper §IV-A analytic totals for MTTKRP on this tensor.
+    ///
+    /// * compute per mode: `N × |T| × R` (N−1 multiplies + 1 add per rank
+    ///   element);
+    /// * external data transferred for output mode `out`:
+    ///   `|T| + (N−1)×|T|×R + I_out×R` elements.
+    pub fn compute_per_mode(&self, rank: usize) -> u64 {
+        self.modes.len() as u64 * self.n_hyperedges as u64 * rank as u64
+    }
+
+    /// Elements transferred from/to external memory for output mode `out`
+    /// (tensor loads + input factor rows + output rows).
+    pub fn data_transfer_elements(&self, out: usize, rank: usize) -> u64 {
+        let n = self.modes.len() as u64;
+        let t = self.n_hyperedges as u64;
+        let i_out = self.modes[out].degree.len() as u64;
+        t + (n - 1) * t * rank as u64 + i_out * rank as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SparseTensor {
+        let mut t = SparseTensor::new("t", vec![4, 5, 6]);
+        t.push(&[3, 0, 2], 1.0);
+        t.push(&[0, 4, 5], 2.0);
+        t.push(&[3, 0, 1], 3.0);
+        t.push(&[1, 2, 2], 4.0);
+        t
+    }
+
+    #[test]
+    fn counts_match_paper_formulas() {
+        let t = small();
+        let h = Hypergraph::build(&t);
+        assert_eq!(h.n_vertices, 4 + 5 + 6);
+        assert_eq!(h.n_hyperedges, 4);
+        // N × |T| × R with N=3, |T|=4, R=16
+        assert_eq!(h.compute_per_mode(16), 3 * 4 * 16);
+        // |T| + (N-1)|T|R + I_out R for mode 0: 4 + 2*4*16 + 4*16
+        assert_eq!(h.data_transfer_elements(0, 16), 4 + 128 + 64);
+        // for mode 2: I_out = 6
+        assert_eq!(h.data_transfer_elements(2, 16), 4 + 128 + 96);
+    }
+
+    #[test]
+    fn degrees_sum_to_nnz_each_mode() {
+        let t = small();
+        let h = Hypergraph::build(&t);
+        for md in &h.modes {
+            let sum: u64 = md.degree.iter().map(|&d| d as u64).sum();
+            assert_eq!(sum, t.nnz() as u64);
+        }
+        assert_eq!(h.modes[0].degree, vec![1, 1, 0, 2]);
+        assert_eq!(h.modes[0].active, 3);
+        assert_eq!(h.modes[0].max(), 2);
+    }
+
+    #[test]
+    fn head_mass_behaviour() {
+        let t = small();
+        let h = Hypergraph::build(&t);
+        // mode 0 degrees [1,1,0,2]: top-1 mass = 2/4
+        assert!((h.modes[0].head_mass(1) - 0.5).abs() < 1e-12);
+        assert!((h.modes[0].head_mass(4) - 1.0).abs() < 1e-12);
+        // empty tensor
+        let e = SparseTensor::new("e", vec![3]);
+        let he = Hypergraph::build(&e);
+        assert_eq!(he.modes[0].head_mass(3), 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Sparse tensor substrate.
+//!
+//! The paper evaluates spMTTKRP over seven FROSTT tensors (Table II). This
+//! module provides everything the simulator and the numeric driver need:
+//!
+//! * [`coo`] — N-mode coordinate-format sparse tensors with FROSTT `.tns`
+//!   text I/O and validation.
+//! * [`csf`] — per-output-mode compressed slice ordering (Algorithm 1 walks
+//!   nonzeros grouped by the output-mode index, so no intermediate partial
+//!   sums leave the PE).
+//! * [`gen`] — synthetic generators that reproduce each Table II tensor's
+//!   shape / density / per-mode locality fingerprint at configurable scale,
+//!   plus generic random tensors for tests.
+//! * [`hypergraph`] — the paper's hypergraph view H=(V,E) of a tensor
+//!   (§IV-A): vertices = mode indices, hyperedges = nonzeros.
+//! * [`remap`] — locality-enhancing index remapping derived from the
+//!   hypergraph (degree-sorted relabeling), the "mapping of X into memory"
+//!   the paper optimizes per mode.
+
+pub mod coo;
+pub mod csf;
+pub mod gen;
+pub mod hypergraph;
+pub mod remap;

@@ -1,0 +1,263 @@
+//! Miniature benchmark harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module from a
+//! plain `main`. Each benchmark gets a warmup phase, a calibrated iteration
+//! count targeting a wall-time budget, and reports mean ± σ, min, and
+//! optional throughput. Results can also be dumped as CSV for plotting.
+//!
+//! This intentionally mirrors criterion's output shape
+//! (`name   time: [mean ± σ]`) so downstream tooling/log-readers behave.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+pub use std::hint::black_box as bb;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub sigma: Duration,
+    pub min: Duration,
+    /// Items (e.g. nnz) processed per iteration, for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        self.items_per_iter.map(|it| it / self.mean.as_secs_f64())
+    }
+}
+
+/// Harness configuration: wall-clock budgets per phase.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    results: Vec<Measurement>,
+    group: String,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor PHOTON_BENCH_FAST=1 for CI-speed runs.
+        let fast = std::env::var("PHOTON_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            min_iters: 5,
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+
+    pub fn group(&mut self, name: &str) -> &mut Self {
+        self.group = name.to_string();
+        println!("\n### bench group: {name}");
+        self
+    }
+
+    fn full_name(&self, name: &str) -> String {
+        if self.group.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.group, name)
+        }
+    }
+
+    /// Benchmark `f`, which should return something consumable by
+    /// `black_box` so the optimizer cannot delete the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items per iteration).
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        self.bench_with_items(name, Some(items_per_iter), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        // Warmup + single-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+        // Choose sample count: aim for `measure` total, ≥ min_iters samples.
+        let target = self
+            .measure
+            .as_nanos()
+            .checked_div(est.as_nanos().max(1))
+            .unwrap_or(u128::from(self.min_iters)) as u64;
+        let iters = target.clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Summary::new();
+        let mut min = Duration::MAX;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            let dt = t0.elapsed();
+            samples.push(dt.as_secs_f64());
+            if dt < min {
+                min = dt;
+            }
+        }
+        let m = Measurement {
+            name: self.full_name(name),
+            iters,
+            mean: Duration::from_secs_f64(samples.mean()),
+            sigma: Duration::from_secs_f64(samples.std()),
+            min,
+            items_per_iter: items,
+        };
+        print_measurement(&m);
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed scalar (used by the table/figure
+    /// "benches", where the interesting output is the model value itself).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} value: {} {}", self.full_name(name), crate::util::table::fmt_sig(value, 4), unit);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render all measurements as a table.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new("bench summary", &["name", "iters", "mean", "sigma", "min", "throughput"])
+            .align(0, crate::util::table::Align::Left);
+        for m in &self.results {
+            t.row(vec![
+                m.name.clone(),
+                m.iters.to_string(),
+                fmt_dur(m.mean),
+                fmt_dur(m.sigma),
+                fmt_dur(m.min),
+                m.throughput_per_s().map(|t| format!("{:.3e}/s", t)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Write CSV of all measurements to `path` (best effort).
+    pub fn write_csv(&self, path: &str) {
+        let mut t = Table::new("", &["name", "iters", "mean_s", "sigma_s", "min_s", "throughput_per_s"]);
+        for m in &self.results {
+            t.row(vec![
+                m.name.clone(),
+                m.iters.to_string(),
+                format!("{:.9}", m.mean.as_secs_f64()),
+                format!("{:.9}", m.sigma.as_secs_f64()),
+                format!("{:.9}", m.min.as_secs_f64()),
+                m.throughput_per_s().map(|t| format!("{t:.3}")).unwrap_or_default(),
+            ]);
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = std::fs::write(path, t.render_csv());
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+fn print_measurement(m: &Measurement) {
+    let thr = m
+        .throughput_per_s()
+        .map(|t| format!("   thrpt: {:.3e} items/s", t))
+        .unwrap_or_default();
+    println!(
+        "{:<44} time: [{} ± {}] min {} ({} iters){}",
+        m.name,
+        fmt_dur(m.mean),
+        fmt_dur(m.sigma),
+        fmt_dur(m.min),
+        m.iters,
+        thr
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let m = b.bench_items("items", 100.0, || std::hint::black_box(3 * 7)).clone();
+        let t = m.throughput_per_s().unwrap();
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn summary_and_csv_shapes() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.group("g");
+        b.bench("a", || 1 + 1);
+        let tbl = b.summary_table();
+        assert_eq!(tbl.n_rows(), 1);
+        let csv = {
+            let dir = std::env::temp_dir().join("photon_bench_test.csv");
+            b.write_csv(dir.to_str().unwrap());
+            std::fs::read_to_string(&dir).unwrap()
+        };
+        assert!(csv.starts_with("name,iters,mean_s"));
+        assert!(csv.contains("g/a"));
+    }
+}

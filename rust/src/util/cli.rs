@@ -1,0 +1,413 @@
+//! Declarative command-line parsing (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, repeated
+//! options, positional arguments, defaults, and generated `--help` text.
+//!
+//! ```
+//! use photon_mttkrp::util::cli::{Command, Parsed};
+//! let cmd = Command::new("demo", "demo tool")
+//!     .flag("verbose", 'v', "chatty output")
+//!     .opt("seed", "N", "rng seed", Some("42"));
+//! let p = cmd.parse_from(&["--verbose", "--seed=7"]).unwrap();
+//! assert!(p.flag("verbose"));
+//! assert_eq!(p.get_u64("seed").unwrap(), 7);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with a user-facing message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    short: Option<char>,
+    help: String,
+}
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    value_name: String,
+    help: String,
+    default: Option<String>,
+    repeated: bool,
+}
+
+#[derive(Clone, Debug)]
+struct PosSpec {
+    name: String,
+    help: String,
+    required: bool,
+}
+
+/// A command (or subcommand) definition.
+#[derive(Clone, Debug)]
+pub struct Command {
+    name: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    opts: Vec<OptSpec>,
+    positionals: Vec<PosSpec>,
+    subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &str, short: char, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            short: if short == '\0' { None } else { Some(short) },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// An option taking a value, with an optional default.
+    pub fn opt(mut self, name: &str, value_name: &str, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            value_name: value_name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            repeated: false,
+        });
+        self
+    }
+
+    /// An option that may be given multiple times (collected in order).
+    pub fn opt_repeated(mut self, name: &str, value_name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            value_name: value_name.to_string(),
+            help: help.to_string(),
+            default: None,
+            repeated: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str, required: bool) -> Self {
+        self.positionals.push(PosSpec { name: name.to_string(), help: help.to_string(), required });
+        self
+    }
+
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subcommands.push(sub);
+        self
+    }
+
+    /// Generated help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            out.push_str(" <SUBCOMMAND>");
+        }
+        if !self.flags.is_empty() || !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        for p in &self.positionals {
+            if p.required {
+                out.push_str(&format!(" <{}>", p.name));
+            } else {
+                out.push_str(&format!(" [{}]", p.name));
+            }
+        }
+        out.push('\n');
+        if !self.subcommands.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for s in &self.subcommands {
+                out.push_str(&format!("  {:<16} {}\n", s.name, s.about));
+            }
+        }
+        if !self.flags.is_empty() {
+            out.push_str("\nFLAGS:\n");
+            for f in &self.flags {
+                let short = f.short.map(|c| format!("-{c}, ")).unwrap_or_default();
+                out.push_str(&format!("  {short}--{:<16} {}\n", f.name, f.help));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let dflt = o
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!(
+                    "  --{} <{}>{}\n      {}{}\n",
+                    o.name,
+                    o.value_name,
+                    if o.repeated { " (repeatable)" } else { "" },
+                    o.help,
+                    dflt
+                ));
+            }
+        }
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for p in &self.positionals {
+                out.push_str(&format!("  {:<16} {}\n", p.name, p.help));
+            }
+        }
+        out
+    }
+
+    /// Parse from explicit argument strings (no program name).
+    pub fn parse_from<S: AsRef<str>>(&self, args: &[S]) -> Result<Parsed, CliError> {
+        let mut parsed = Parsed {
+            command_path: vec![self.name.clone()],
+            flags: Default::default(),
+            opts: Default::default(),
+            positionals: Vec::new(),
+            help_requested: false,
+        };
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                parsed.opts.insert(o.name.clone(), vec![d.clone()]);
+            }
+        }
+        let mut i = 0usize;
+        let mut first_positional_seen = false;
+        while i < args.len() {
+            let a = args[i].as_ref();
+            if a == "--help" || a == "-h" {
+                parsed.help_requested = true;
+                return Ok(parsed);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                if self.flags.iter().any(|f| f.name == key) {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    parsed.flags.insert(key.to_string());
+                } else if let Some(spec) = self.opts.iter().find(|o| o.name == key) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .map(|s| s.as_ref().to_string())
+                                .ok_or_else(|| CliError(format!("--{key} requires a value")))?
+                        }
+                    };
+                    let entry = parsed.opts.entry(key.to_string()).or_default();
+                    if spec.repeated {
+                        // defaults never exist for repeated opts
+                        entry.push(val);
+                    } else {
+                        *entry = vec![val];
+                    }
+                } else {
+                    return Err(CliError(format!("unknown option --{key}")));
+                }
+            } else if let Some(short) = a.strip_prefix('-').filter(|s| !s.is_empty()) {
+                for c in short.chars() {
+                    let f = self
+                        .flags
+                        .iter()
+                        .find(|f| f.short == Some(c))
+                        .ok_or_else(|| CliError(format!("unknown flag -{c}")))?;
+                    parsed.flags.insert(f.name.clone());
+                }
+            } else {
+                // subcommand (only in first positional position) or positional
+                if !first_positional_seen {
+                    if let Some(sub) = self.subcommands.iter().find(|s| s.name == a) {
+                        let rest: Vec<String> =
+                            args[i + 1..].iter().map(|s| s.as_ref().to_string()).collect();
+                        let mut sub_parsed = sub.parse_from(&rest)?;
+                        sub_parsed.command_path.insert(0, self.name.clone());
+                        return Ok(sub_parsed);
+                    }
+                    if !self.subcommands.is_empty() && self.positionals.is_empty() {
+                        return Err(CliError(format!("unknown subcommand `{a}`")));
+                    }
+                }
+                first_positional_seen = true;
+                parsed.positionals.push(a.to_string());
+            }
+            i += 1;
+        }
+        let required = self.positionals.iter().filter(|p| p.required).count();
+        if parsed.positionals.len() < required {
+            return Err(CliError(format!(
+                "missing required argument <{}>",
+                self.positionals[parsed.positionals.len()].name
+            )));
+        }
+        Ok(parsed)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name).
+    pub fn parse_env(&self) -> Result<Parsed, CliError> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&args)
+    }
+}
+
+/// Parse result: resolved flags, options and positionals.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    /// e.g. `["photon-mttkrp", "simulate"]` — last element is the leaf.
+    pub command_path: Vec<String>,
+    flags: std::collections::BTreeSet<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    pub positionals: Vec<String>,
+    pub help_requested: bool,
+}
+
+impl Parsed {
+    pub fn subcommand(&self) -> Option<&str> {
+        if self.command_path.len() > 1 {
+            Some(self.command_path.last().unwrap())
+        } else {
+            None
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("--{name} not given")))?
+            .parse()
+            .map_err(|e| CliError(format!("--{name}: {e}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.get_u64(name)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("--{name} not given")))?
+            .parse()
+            .map_err(|e| CliError(format!("--{name}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("tool", "a tool")
+            .flag("verbose", 'v', "verbose")
+            .flag("quiet", 'q', "quiet")
+            .opt("seed", "N", "seed", Some("42"))
+            .opt_repeated("tensor", "NAME", "tensor selection")
+            .subcommand(
+                Command::new("run", "run it")
+                    .opt("mode", "M", "mode index", None)
+                    .positional("input", "input file", true),
+            )
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse_from::<&str>(&[]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 42);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_eq_opts() {
+        let p = cmd().parse_from(&["--verbose", "--seed=7"]).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.get_u64("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let p = cmd().parse_from(&["--seed", "9"]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 9);
+    }
+
+    #[test]
+    fn short_flags_combined() {
+        let p = cmd().parse_from(&["-vq"]).unwrap();
+        assert!(p.flag("verbose") && p.flag("quiet"));
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let p = cmd().parse_from(&["--tensor", "nell-1", "--tensor=nell-2"]).unwrap();
+        assert_eq!(p.get_all("tensor"), vec!["nell-1", "nell-2"]);
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let p = cmd().parse_from(&["run", "--mode", "2", "file.tns"]).unwrap();
+        assert_eq!(p.subcommand(), Some("run"));
+        assert_eq!(p.get("mode"), Some("2"));
+        assert_eq!(p.positionals, vec!["file.tns"]);
+    }
+
+    #[test]
+    fn missing_required_positional() {
+        let e = cmd().parse_from(&["run"]).unwrap_err();
+        assert!(e.0.contains("input"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse_from(&["--nope"]).is_err());
+        assert!(cmd().parse_from(&["bogus-subcommand"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse_from(&["--seed"]).is_err());
+    }
+
+    #[test]
+    fn help_flag_short_circuits() {
+        let p = cmd().parse_from(&["--help"]).unwrap();
+        assert!(p.help_requested);
+        let h = cmd().help();
+        assert!(h.contains("SUBCOMMANDS"));
+        assert!(h.contains("--seed"));
+        assert!(h.contains("[default: 42]"));
+    }
+
+    #[test]
+    fn last_wins_for_non_repeated() {
+        let p = cmd().parse_from(&["--seed=1", "--seed=2"]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 2);
+    }
+}

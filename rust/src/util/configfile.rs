@@ -1,0 +1,294 @@
+//! A TOML-subset configuration parser (offline stand-in for `toml`+`serde`).
+//!
+//! Supports exactly what the accelerator config files need:
+//! `[section]` / `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Values are addressed by dotted path: `cfg.get_u64("cache.num_lines")`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse / lookup error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A flat dotted-key → value map parsed from TOML-subset text.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(hdr) = line.strip_prefix('[') {
+                let hdr = hdr
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError(format!("line {}: unterminated [section]", lineno + 1)))?
+                    .trim();
+                if hdr.is_empty() {
+                    return Err(ConfigError(format!("line {}: empty section name", lineno + 1)));
+                }
+                section = hdr.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = parse_value(val.trim())
+                .map_err(|e| ConfigError(format!("line {}: {}", lineno + 1, e.0)))?;
+            if values.insert(full.clone(), value).is_some() {
+                return Err(ConfigError(format!("line {}: duplicate key `{full}`", lineno + 1)));
+            }
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str, ConfigError> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| ConfigError(format!("missing or non-string key `{key}`")))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, ConfigError> {
+        let v = self
+            .get(key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| ConfigError(format!("missing or non-integer key `{key}`")))?;
+        u64::try_from(v).map_err(|_| ConfigError(format!("key `{key}` is negative")))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, ConfigError> {
+        Ok(self.get_u64(key)? as usize)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, ConfigError> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| ConfigError(format!("missing or non-numeric key `{key}`")))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool, ConfigError> {
+        self.get(key)
+            .and_then(Value::as_bool)
+            .ok_or_else(|| ConfigError(format!("missing or non-boolean key `{key}`")))
+    }
+
+    /// Typed lookups with a default when the key is absent.
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_i64).map(|v| v as u64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, ConfigError> {
+    if s.is_empty() {
+        return Err(ConfigError("empty value".to_string()));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError("unterminated string".to_string()))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| ConfigError("unterminated array".to_string()))?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, _> =
+            body.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError(format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# accelerator config
+scale = 0.5
+name = "osram"   # inline comment
+
+[pe]
+count = 4
+pipelines = 80
+
+[cache]
+num_lines = 4_096
+line_bytes = 64
+enabled = true
+ratios = [1.0, 2.5, 3]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_f64("scale").unwrap(), 0.5);
+        assert_eq!(c.get_str("name").unwrap(), "osram");
+        assert_eq!(c.get_u64("pe.count").unwrap(), 4);
+        assert_eq!(c.get_usize("cache.num_lines").unwrap(), 4096);
+        assert!(c.get_bool("cache.enabled").unwrap());
+        match c.get("cache.ratios").unwrap() {
+            Value::Array(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[0].as_f64(), Some(1.0));
+                assert_eq!(v[2].as_i64(), Some(3));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_reverse() {
+        let c = Config::parse("x = 3\ny = 3.5").unwrap();
+        assert_eq!(c.get_f64("x").unwrap(), 3.0);
+        assert!(c.get_u64("y").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        let e = Config::parse("ok = 1\nbad line").unwrap_err();
+        assert!(e.0.contains("line 2"), "{e}");
+        let e = Config::parse("[unterminated").unwrap_err();
+        assert!(e.0.contains("line 1"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = Config::parse("a = 1\na = 2").unwrap_err();
+        assert!(e.0.contains("duplicate"));
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.u64_or("a", 9), 1);
+        assert_eq!(c.u64_or("missing", 9), 9);
+        assert_eq!(c.f64_or("missing", 1.5), 1.5);
+        assert!(c.bool_or("missing", true));
+    }
+
+    #[test]
+    fn negative_int_to_u64_is_error() {
+        let c = Config::parse("a = -5").unwrap();
+        assert!(c.get_u64("a").is_err());
+        assert_eq!(c.get("a").unwrap().as_i64(), Some(-5));
+    }
+}

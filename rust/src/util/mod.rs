@@ -1,0 +1,25 @@
+//! Offline substrates.
+//!
+//! This build environment has no crates.io access beyond the vendored set,
+//! so the usual ecosystem pieces (rand, clap, toml, proptest, criterion)
+//! are implemented here as small, well-tested modules:
+//!
+//! * [`rng`] — SplitMix64 / PCG PRNG + the distributions the tensor
+//!   generators need (uniform, Zipf, log-normal, permutations).
+//! * [`cli`] — a declarative command-line parser (flags, options,
+//!   subcommands, `--help` generation).
+//! * [`configfile`] — a TOML-subset parser for accelerator config files.
+//! * [`stats`] — summary statistics, percentiles, histograms.
+//! * [`table`] — ASCII / Markdown / CSV table rendering for reports.
+//! * [`prop`] — a miniature property-testing harness (random generation +
+//!   bounded shrinking) used by the invariant tests.
+//! * [`bench`] — a miniature criterion: warmup, timed iterations,
+//!   mean/σ/min, throughput, and the same "name ... time" output layout.
+
+pub mod bench;
+pub mod cli;
+pub mod configfile;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

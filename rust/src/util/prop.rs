@@ -1,0 +1,265 @@
+//! Miniature property-based testing harness (offline stand-in for
+//! `proptest`).
+//!
+//! A property is a closure over a [`Gen`]-erated input; the harness runs it
+//! for `cases` random inputs and, on failure, attempts bounded shrinking via
+//! the generator's [`Gen::shrink`] candidates before reporting the minimal
+//! failing input (with the seed so the case is replayable).
+//!
+//! ```
+//! use photon_mttkrp::util::prop::{check, VecGen, U64Gen};
+//! // reversing twice is identity
+//! check("rev_rev", 200, &VecGen::new(U64Gen::below(100), 0..=16), |v| {
+//!     let mut r = v.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     r == *v
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A random-value generator that also knows how to shrink failures.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; the harness recurses greedily on the first
+    /// candidate that still fails. Returning an empty vec ends shrinking.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the (shrunk) minimal
+/// counterexample on failure. The base seed is derived from the name so each
+/// property gets a distinct but stable stream.
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(gen, input, &prop);
+            panic!(
+                "property `{name}` failed (case {case}/{cases}, seed {seed:#x})\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Bounded: at most 1000 successful shrink steps to guarantee termination
+    // even for misbehaving shrinkers.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Uniform `u64` in `[lo, hi]`; shrinks toward `lo`.
+#[derive(Clone, Debug)]
+pub struct U64Gen {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl U64Gen {
+    pub fn below(n: u64) -> Self {
+        assert!(n > 0);
+        U64Gen { lo: 0, hi: n - 1 }
+    }
+    pub fn range(lo: u64, hi: u64) -> Self {
+        assert!(lo <= hi);
+        U64Gen { lo, hi }
+    }
+}
+
+impl Gen for U64Gen {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform `f64` in `[lo, hi)`; shrinks toward `lo` and toward 0/1-ish
+/// round values.
+#[derive(Clone, Debug)]
+pub struct F64Gen {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for F64Gen {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if (*v - self.lo).abs() > 1e-9 {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator, with length in `len_range`;
+/// shrinks by halving length, then element-wise.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub len_lo: usize,
+    pub len_hi: usize,
+}
+
+impl<G> VecGen<G> {
+    pub fn new(elem: G, len: std::ops::RangeInclusive<usize>) -> Self {
+        VecGen { elem, len_lo: *len.start(), len_hi: *len.end() }
+    }
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = if self.len_lo == self.len_hi {
+            self.len_lo
+        } else {
+            self.len_lo + rng.index(self.len_hi - self.len_lo + 1)
+        };
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.len_lo {
+            // drop the back half, drop one element
+            let half = self.len_lo.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            let mut minus1 = v.clone();
+            minus1.pop();
+            out.push(minus1);
+        }
+        // shrink the first shrinkable element
+        for (i, e) in v.iter().enumerate() {
+            if let Some(smaller) = self.elem.shrink(e).into_iter().next() {
+                let mut w = v.clone();
+                w[i] = smaller;
+                out.push(w);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Generator from a closure (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T: Clone + std::fmt::Debug, F: Fn(&mut Rng) -> T> Gen for FnGen<F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_comm", 200, &PairGen(U64Gen::below(1000), U64Gen::below(1000)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let res = std::panic::catch_unwind(|| {
+            check("find_42", 5000, &U64Gen::below(1000), |&x| x < 42);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // the minimal counterexample of `x < 42` over shrink-toward-0 is 42
+        assert!(msg.contains("minimal counterexample: 42"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_length_bounds() {
+        let g = VecGen::new(U64Gen::below(10), 2..=5);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = g.generate(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length_to_bound() {
+        let res = std::panic::catch_unwind(|| {
+            check("nonempty_fails", 100, &VecGen::new(U64Gen::below(5), 1..=8), |v| v.len() > 50);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing vec should have been shrunk down to length 1
+        let tail = msg.split("counterexample:").nth(1).unwrap();
+        assert!(tail.contains('[') && tail.matches(',').count() == 0, "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // same property name ⇒ same stream ⇒ same first sample
+        let mut first = Vec::new();
+        for _ in 0..2 {
+            let captured = std::cell::Cell::new(0u64);
+            check("capture", 1, &U64Gen::below(1 << 40), |&x| {
+                captured.set(x);
+                true
+            });
+            first.push(captured.get());
+        }
+        assert_eq!(first[0], first[1]);
+    }
+}

@@ -1,0 +1,341 @@
+//! Deterministic pseudo-random generation.
+//!
+//! The synthetic FROSTT tensor generators and the property-test harness both
+//! need reproducible randomness; with no `rand` crate available we implement
+//! a small, fast generator (xoshiro256**, seeded via SplitMix64) plus the
+//! distributions the project needs. All generation is seed-stable across
+//! platforms: given the same seed the same tensor is produced everywhere,
+//! which the tests rely on.
+
+/// SplitMix64 step — used to expand a single `u64` seed into the generator
+/// state (recommended seeding procedure for xoshiro).
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — public-domain algorithm by Blackman & Vigna.
+///
+/// Fast (4×u64 state, a handful of ops per draw), passes BigCrush, and is
+/// trivially seedable; more than adequate for workload synthesis.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid for xoshiro; splitmix cannot produce it
+        // from any seed, but guard anyway.
+        if s.iter().all(|&x| x == 0) {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift
+    /// rejection method (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "Rng::below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (single value; wastes the pair,
+    /// simplicity over speed — the generators are not normal-heavy).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Split off an independent generator (for parallel streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Zipf(α) sampler over `{0, 1, .., n-1}` (rank 0 is the most popular).
+///
+/// Uses the rejection-inversion method of Hörmann & Derflinger, which is
+/// O(1) per sample and exact for any α > 0, α ≠ 1 handled too. The tensor
+/// generators use this to give each mode a controllable reuse/locality
+/// profile: large α ⇒ a few hot factor-matrix rows absorb most accesses
+/// (high cache hit rate), α → 0 ⇒ uniform (DRAM-bound).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    alpha: f64,
+    t: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n >= 1, "Zipf over empty support");
+        assert!(alpha >= 0.0 && alpha.is_finite());
+        let nf = n as f64;
+        let t = if (alpha - 1.0).abs() < 1e-12 {
+            1.0 + nf.ln()
+        } else {
+            (nf.powf(1.0 - alpha) - alpha) / (1.0 - alpha)
+        };
+        Zipf { n: nf, alpha, t }
+    }
+
+    /// `H(x) = ∫ u^-α du` helper (generalized harmonic integral).
+    #[inline]
+    fn h(&self, x: f64) -> f64 {
+        if (self.alpha - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - self.alpha) - 1.0) / (1.0 - self.alpha)
+        }
+    }
+
+    #[inline]
+    fn h_inv(&self, y: f64) -> f64 {
+        if (self.alpha - 1.0).abs() < 1e-12 {
+            y.exp()
+        } else {
+            (1.0 + y * (1.0 - self.alpha)).powf(1.0 / (1.0 - self.alpha))
+        }
+    }
+
+    /// Draw a sample in `[0, n)`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if self.alpha < 1e-9 {
+            return rng.index(self.n as usize); // uniform fast path
+        }
+        loop {
+            // Rejection-inversion over the continuous envelope.
+            let u = rng.f64() * self.t;
+            let x = if u <= 1.0 { 1.0 } else { self.h_inv(self.h(1.0) + u - 1.0) };
+            let k = x.floor().clamp(1.0, self.n);
+            // accept k with probability proportional to k^-α vs envelope
+            let ratio = (k.powf(-self.alpha)) / x.powf(-self.alpha);
+            if rng.f64() <= ratio {
+                return k as usize - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(1234);
+        let mut b = Rng::new(1234);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(99);
+        let n = 10u64;
+        let mut counts = [0usize; 10];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < expect * 0.1, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn below_never_exceeds_bound() {
+        let mut r = Rng::new(3);
+        for bound in [1u64, 2, 3, 7, 1000, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(5);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &x in &p {
+            assert!(!seen[x]);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_rank0_most_popular_and_support_respected() {
+        let mut r = Rng::new(21);
+        let z = Zipf::new(1000, 1.2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[500].saturating_sub(1)); // heavy head
+        // head mass: for α=1.2 over n=1000, top-10 should hold a large share
+        let head: usize = counts[..10].iter().sum();
+        assert!(head as f64 > 0.3 * 200_000.0, "head={head}");
+    }
+
+    #[test]
+    fn zipf_alpha_zero_is_uniform() {
+        let mut r = Rng::new(22);
+        let z = Zipf::new(100, 0.0);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        let expect = 1000.0;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < expect * 0.25);
+        }
+    }
+
+    #[test]
+    fn zipf_alpha_one_exact_path() {
+        let mut r = Rng::new(23);
+        let z = Zipf::new(50, 1.0);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 50);
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut a = Rng::new(77);
+        let mut b = a.fork();
+        let overlap = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(overlap, 0);
+    }
+}

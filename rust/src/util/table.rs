@@ -1,0 +1,245 @@
+//! Table rendering for the report / bench output.
+//!
+//! Every paper table and figure is regenerated as rows of a [`Table`]; the
+//! same structure renders to aligned ASCII (terminal), Markdown
+//! (EXPERIMENTS.md) and CSV (plotting).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple rows-of-strings table with a header.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignment for a column (default: Right).
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    fn pad(cell: &str, width: usize, a: Align) -> String {
+        match a {
+            Align::Left => format!("{cell:<width$}"),
+            Align::Right => format!("{cell:>width$}"),
+        }
+    }
+
+    /// Aligned plain-text rendering (terminal output).
+    pub fn render_ascii(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let hdr: Vec<String> = self
+            .header
+            .iter()
+            .zip(&w)
+            .zip(&self.aligns)
+            .map(|((h, &wi), &a)| Self::pad(h, wi, a))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len().saturating_sub(1))));
+        out.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .zip(&w)
+                .zip(&self.aligns)
+                .map(|((c, &wi), &a)| Self::pad(c, wi, a))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavoured Markdown rendering.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        let sep: Vec<&str> = self
+            .aligns
+            .iter()
+            .map(|a| if *a == Align::Right { "---:" } else { ":---" })
+            .collect();
+        out.push_str(&format!("| {} |\n", sep.join(" | ")));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-4180 quoting where needed).
+    pub fn render_csv(&self) -> String {
+        fn esc(s: &str) -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style sensible precision for tables.
+pub fn fmt_sig(x: f64, sig: usize) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let mag = x.abs().log10().floor() as i32;
+    if (-3..6).contains(&mag) {
+        let dec = (sig as i32 - 1 - mag).max(0) as usize;
+        format!("{x:.dec$}")
+    } else {
+        format!("{x:.prec$e}", prec = sig - 1)
+    }
+}
+
+/// Human-readable byte count (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable count (K/M/B), e.g. `143.6M` nnz like Table II.
+pub fn fmt_count(n: u64) -> String {
+    let v = n as f64;
+    if v >= 1e9 {
+        format!("{:.1}B", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("T", &["name", "value"]).align(0, Align::Left);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "22".into()]);
+        t
+    }
+
+    #[test]
+    fn ascii_aligns_columns() {
+        let s = sample().render_ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].contains("== T =="));
+        assert!(lines[1].starts_with("name "));
+        // value column right-aligned: " 1" and "22" end at same offset
+        let l3 = lines[3];
+        let l4 = lines[4];
+        assert_eq!(l3.len(), l4.len());
+        assert!(l3.ends_with(" 1"));
+        assert!(l4.ends_with("22"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let s = sample().render_markdown();
+        assert!(s.contains("| name | value |"));
+        assert!(s.contains("| :--- | ---: |"));
+        assert!(s.contains("| alpha | 1 |"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let s = t.render_csv();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.5, 3), "1234"); // round-half-even, no decimals
+        assert_eq!(fmt_sig(0.001234, 2), "0.0012");
+        assert!(fmt_sig(1.0e9, 3).contains('e'));
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_count(143_600_000), "143.6M");
+        assert_eq!(fmt_count(4_700_000_000), "4.7B");
+        assert_eq!(fmt_count(950), "950");
+    }
+}

@@ -1,0 +1,82 @@
+//! CLI smoke tests: drive the built binary end to end through its
+//! subcommands (the leader-entrypoint contract).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_photon-mttkrp"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for sub in ["info", "simulate", "reproduce", "cpals", "mttkrp"] {
+        assert!(text.contains(sub), "help missing `{sub}`:\n{text}");
+    }
+}
+
+#[test]
+fn info_prints_tables() {
+    let out = bin().args(["info", "--tensors"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table I"));
+    assert!(text.contains("Table III"));
+    assert!(text.contains("Table IV"));
+    assert!(text.contains("nell-2"));
+    assert!(text.contains("4.68"));
+}
+
+#[test]
+fn simulate_both_techs_reports_speedup() {
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "both"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("energy savings"));
+}
+
+#[test]
+fn simulate_single_tech_and_mode() {
+    let out = bin()
+        .args(["simulate", "--tensor", "patents", "--scale", "0.0001", "--tech", "e-sram", "--mode", "0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("M0 [e-sram]"), "{text}");
+}
+
+#[test]
+fn unknown_tensor_fails_cleanly() {
+    let out = bin().args(["simulate", "--tensor", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown tensor"));
+}
+
+#[test]
+fn cpals_reference_path_converges() {
+    let out = bin()
+        .args(["cpals", "--rank", "8", "--iters", "4", "--nnz", "3000", "--dim", "16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("final fit:"), "{text}");
+}
+
+#[test]
+fn mttkrp_on_tns_file() {
+    // build a small .tns on the fly
+    let dir = std::env::temp_dir().join("photon_cli_test.tns");
+    std::fs::write(&dir, "1 1 1 2.0\n2 3 4 1.5\n3 2 1 -0.5\n").unwrap();
+    let out = bin().args(["mttkrp", dir.to_str().unwrap(), "--mode", "0"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("3 nnz"), "{text}");
+}

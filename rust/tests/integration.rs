@@ -1,0 +1,202 @@
+//! Cross-module integration tests: the simulator's measured traffic versus
+//! the paper's §IV-A analytic totals, remap/numerics consistency, the
+//! E-vs-O orderings on the real generator suite, and config plumbing.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::coordinator::driver::{self, compare_technologies};
+use photon_mttkrp::energy::model::EnergyModel;
+use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mttkrp::reference::{max_rel_diff, mttkrp, FactorMatrix};
+use photon_mttkrp::mttkrp::trace;
+use photon_mttkrp::sim::engine;
+use photon_mttkrp::tensor::gen::{self, FrosttTensor, TensorSpec};
+use photon_mttkrp::tensor::remap;
+
+fn cfg(scale: f64) -> AcceleratorConfig {
+    AcceleratorConfig::paper_default().scaled(scale)
+}
+
+#[test]
+fn simulated_traffic_matches_analytic_totals() {
+    // §IV-A: tensor stream bytes and factor-request counts are closed-form;
+    // the engine's accounting must agree exactly.
+    let t = gen::random(&[128, 96, 160], 30_000, 11);
+    let c = cfg(1.0 / 64.0);
+    let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+    let totals = trace::mode_totals(&t, 0, c.rank);
+
+    // every nonzero streamed once: (4N+4) bytes each, plus one output row
+    // per non-empty slice
+    let streamed: u64 = r.pes.iter().map(|p| p.dram_stream_bytes).sum();
+    let expect = trace::tensor_stream_bytes(&t) + totals.output_rows_written * c.row_bytes() as u64;
+    assert_eq!(streamed, expect);
+
+    // cache accesses = (N−1) × |T| (every factor row request hits a cache)
+    let accesses: u64 = r.pes.iter().map(|p| p.cache_stats.accesses()).sum();
+    assert_eq!(accesses, totals.factor_requests);
+
+    // random DRAM traffic = miss count × line (no writebacks: read-only)
+    let misses: u64 = r.pes.iter().map(|p| p.cache_stats.misses).sum();
+    let random: u64 = r.pes.iter().map(|p| p.dram_random_bytes).sum();
+    assert_eq!(random, misses * c.line_bytes as u64);
+}
+
+#[test]
+fn remapped_tensor_with_permuted_factors_preserves_numerics() {
+    // the §IV-A memory mapping must not change MTTKRP results when the
+    // factor matrices are permuted consistently
+    let t = gen::random(&[40, 50, 60], 5_000, 3);
+    let rank = 16;
+    let factors: Vec<FactorMatrix> = t
+        .dims
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| FactorMatrix::random(d as usize, rank, 7 + m as u64))
+        .collect();
+
+    let remaps = remap::degree_remaps(&t);
+    let mut tm = t.clone();
+    remap::apply(&mut tm, &remaps);
+    let factors_m: Vec<FactorMatrix> = factors
+        .iter()
+        .zip(&remaps)
+        .map(|(f, r)| FactorMatrix {
+            rows: f.rows,
+            rank,
+            data: remap::permute_rows(&f.data, rank, &r.map),
+        })
+        .collect();
+
+    for mode in 0..3 {
+        let a = mttkrp(&t, mode, &factors);
+        let b = mttkrp(&tm, mode, &factors_m);
+        // b's rows are permuted by the output-mode remap; un-permute
+        let mut inv = vec![0u32; b.rows];
+        for (old, &new) in remaps[mode].map.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        let unperm = remap::permute_rows(&b.data, rank, &inv);
+        let b_back = FactorMatrix { rows: b.rows, rank, data: unperm };
+        assert!(max_rel_diff(&a, &b_back) < 1e-5, "mode {mode}");
+    }
+}
+
+#[test]
+fn suite_orderings_hold_across_seeds() {
+    // Fig. 7's qualitative story must be seed-robust
+    let scale = 1.0 / 8192.0;
+    for seed in [1u64, 99] {
+        let c = cfg(scale);
+        let hot = gen::preset(FrosttTensor::Nell2).scaled(scale).generate(seed);
+        let cold = gen::preset(FrosttTensor::Nell1).scaled(scale).generate(seed);
+        let sh = compare_technologies(&hot, &c).total_speedup();
+        let sc = compare_technologies(&cold, &c).total_speedup();
+        assert!(sh > sc + 0.3, "seed {seed}: nell-2 {sh} vs nell-1 {sc}");
+        assert!(sc >= 0.99, "seed {seed}: O-SRAM must never lose ({sc})");
+    }
+}
+
+#[test]
+fn energy_decomposition_is_exhaustive_and_ordered() {
+    let scale = 1.0 / 4096.0;
+    let c = cfg(scale);
+    let t = gen::preset(FrosttTensor::Nell2).scaled(scale).generate(5);
+    let m = EnergyModel::new(&c);
+    let re = driver::simulate_all_modes(&t, &c, MemTech::ESram);
+    let ro = driver::simulate_all_modes(&t, &c, MemTech::OSram);
+    let ee = m.run_energy(&re);
+    let eo = m.run_energy(&ro);
+    // identical DRAM traffic ⇒ identical DRAM energy
+    let rel = (ee.dram_j - eo.dram_j).abs() / ee.dram_j;
+    assert!(rel < 1e-9, "dram energy must match: {rel}");
+    // E-SRAM switching dominates its optical counterpart
+    assert!(ee.switching_j > 3.0 * eo.switching_j);
+    // O-SRAM leaks more per bit (Table III) but for less time
+    assert!(eo.total_j() < ee.total_j());
+}
+
+#[test]
+fn five_mode_and_four_mode_tensors_full_pipeline() {
+    let scale = 1.0 / 512.0;
+    let c = cfg(scale);
+    for ft in [FrosttTensor::Lbnl, FrosttTensor::Delicious] {
+        let t = gen::preset(ft).scaled(scale / 16.0).generate(3);
+        let cmp = compare_technologies(&t, &c);
+        assert_eq!(cmp.mode_speedups().len(), t.n_modes());
+        for s in cmp.mode_speedups() {
+            assert!(s >= 0.99 && s < 10.0, "{}: speedup {s}", ft.name());
+        }
+        assert!(cmp.energy_savings() > 1.0);
+    }
+}
+
+#[test]
+fn config_file_roundtrip_changes_simulation() {
+    let file = photon_mttkrp::util::configfile::Config::parse(
+        "[pe]\ncount = 1\n[cache]\nlines = 256",
+    )
+    .unwrap();
+    let mut c = cfg(1.0 / 64.0);
+    let lines_before = c.cache_lines;
+    c.apply_config(&file).unwrap();
+    assert_eq!(c.n_pes, 1);
+    assert_eq!(c.cache_lines, 256);
+    assert_ne!(c.cache_lines, lines_before);
+    let t = gen::random(&[100, 100, 100], 5_000, 1);
+    let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+    assert_eq!(r.pes.len(), 1);
+}
+
+#[test]
+fn tns_file_to_simulation_path() {
+    // write a .tns, load it back, simulate and compute — the external
+    // input path end to end
+    let t = gen::random(&[30, 30, 30], 2_000, 9);
+    let dir = std::env::temp_dir().join("photon_it.tns");
+    let mut buf = Vec::new();
+    t.write_tns(&mut buf).unwrap();
+    std::fs::write(&dir, buf).unwrap();
+    let loaded = photon_mttkrp::tensor::coo::SparseTensor::load_tns(&dir).unwrap();
+    assert_eq!(loaded.nnz(), 2_000);
+    let c = cfg(1.0 / 64.0);
+    let r = engine::simulate_mode(&loaded, 0, &c, MemTech::ESram);
+    assert_eq!(r.total_nnz(), 2_000);
+    let factors: Vec<FactorMatrix> = loaded
+        .dims
+        .iter()
+        .map(|&d| FactorMatrix::random(d as usize, 16, 1))
+        .collect();
+    let out = mttkrp(&loaded, 0, &factors);
+    assert!(out.frobenius() > 0.0);
+}
+
+#[test]
+fn rank_sweep_scales_compute_linearly() {
+    let t = gen::random(&[64, 64, 64], 20_000, 2);
+    let mut c16 = cfg(1.0 / 64.0);
+    c16.rank = 16;
+    let mut c32 = c16.clone();
+    c32.rank = 32;
+    c32.line_bytes = 128; // keep one row per line
+    let r16 = engine::simulate_mode(&t, 0, &c16, MemTech::OSram);
+    let r32 = engine::simulate_mode(&t, 0, &c32, MemTech::OSram);
+    let p16: f64 = r16.pes.iter().map(|p| p.pipeline_cycles).sum();
+    let p32: f64 = r32.pes.iter().map(|p| p.pipeline_cycles).sum();
+    assert!((p32 / p16 - 2.0).abs() < 1e-9, "R(N-1)/P is linear in R");
+}
+
+#[test]
+fn zipf_alpha_monotonically_improves_hit_rate() {
+    // the generator's locality knob must map monotonically to cache
+    // behaviour — the foundation of the Table II fingerprints
+    let c = cfg(1.0 / 64.0);
+    let mut last = -1.0;
+    for (i, alpha) in [0.0, 0.6, 1.0, 1.4].iter().enumerate() {
+        let t = TensorSpec::custom("a", vec![50_000, 50_000, 50_000], 60_000, *alpha).generate(4);
+        let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+        let hit = r.hit_rate();
+        assert!(hit >= last - 0.02, "alpha step {i}: hit {hit} after {last}");
+        last = hit;
+    }
+    assert!(last > 0.5, "alpha 1.4 should produce strong locality, hit {last}");
+}
