@@ -70,13 +70,13 @@ fn main() -> anyhow::Result<()> {
     // what would this run cost on the modeled hardware?
     let scale = 1.0 / 1024.0;
     let acc = AcceleratorConfig::paper_default().scaled(scale);
-    let cmp = compare_technologies(&tensor, &acc);
+    let cmp = compare_paper_pair(&tensor, &acc);
     println!(
         "\nmodeled accelerator (per ALS sweep over all modes): e-sram {:.3} ms, o-sram {:.3} ms ({:.2}x), energy savings {:.2}x",
-        cmp.esram.total_runtime_s() * 1e3,
-        cmp.osram.total_runtime_s() * 1e3,
-        cmp.total_speedup(),
-        cmp.energy_savings()
+        cmp.require("e-sram").report.total_runtime_s() * 1e3,
+        cmp.require("o-sram").report.total_runtime_s() * 1e3,
+        cmp.total_speedup("o-sram"),
+        cmp.energy_savings("o-sram")
     );
     Ok(())
 }

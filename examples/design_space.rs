@@ -1,41 +1,71 @@
-//! Design-space exploration: how the O-SRAM advantage responds to the
-//! architectural knobs — the ablations DESIGN.md calls out.
+//! Design-space exploration on top of the technology registry + the
+//! parallel sweep engine.
 //!
-//! Sweeps (on the NELL-2 fingerprint, the paper's on-chip-bound case):
-//!   * WDM wavelength count λ (the Eq. 1 bandwidth driver);
-//!   * cache capacity;
-//!   * PE count;
-//!   * §IV-A type-3 bypass routing on/off.
+//! 1. register a custom technology programmatically (a hypothetical
+//!    double-comb O-SRAM) next to the builtins;
+//! 2. sweep {3 tensors × every registered technology × all modes} across
+//!    all cores with `sim::sweep` and print the scenario table;
+//! 3. ablate the architectural knobs DESIGN.md calls out — WDM wavelength
+//!    count λ (the Eq. 1 bandwidth driver), cache capacity, PE count and
+//!    §IV-A type-3 bypass routing.
 //!
 //! ```bash
 //! cargo run --release --example design_space
 //! ```
 
-use photon_mttkrp::prelude::*;
-use photon_mttkrp::util::table::{Align, Table};
+use std::sync::Arc;
 
-fn speedup(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> (f64, f64) {
-    let cmp = compare_technologies(tensor, cfg);
-    (cmp.total_speedup(), cmp.energy_savings())
-}
+use photon_mttkrp::mem::registry::StaticTech;
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::sim::sweep;
+use photon_mttkrp::util::table::{Align, Table};
 
 fn main() {
     let scale = 1.0 / 1024.0;
+
+    // --- 1. extend the registry from code: the trait path ---
+    let mut double_comb = tech("o-sram");
+    double_comb.name = "o-sram-10l".to_string();
+    double_comb.wavelengths = 10;
+    double_comb.lanes_per_core_cycle = 10;
+    double_comb.ports_per_block = 400;
+    registry::register(Arc::new(StaticTech::new(
+        "hypothetical double-comb O-SRAM (10 wavelengths)",
+        double_comb,
+    )))
+    .expect("register custom tech");
+
+    // --- 2. the {tensor x tech x mode} sweep, across all cores ---
+    let mut spec = SweepSpec::new(
+        vec![
+            frostt::preset(FrosttTensor::Nell2),
+            frostt::preset(FrosttTensor::Nell1),
+            frostt::preset(FrosttTensor::Patents),
+        ],
+        vec![scale],
+        registry::all(),
+    );
+    spec.seed = 42;
+    let t0 = std::time::Instant::now();
+    let points = run_sweep(&spec).expect("sweep");
+    println!(
+        "swept {} scenarios in {:.2}s on {} threads\n",
+        points.len(),
+        t0.elapsed().as_secs_f64(),
+        sweep::effective_threads(spec.threads),
+    );
+    println!("{}", summary_table(&spec, &points).render_ascii());
+
+    // --- 3a. λ sweep: Eq. 1 sensitivity via the config override ---
     let tensor = frostt::preset(FrosttTensor::Nell2).scaled(scale).generate(42);
     let base = AcceleratorConfig::paper_default().scaled(scale);
-    println!("workload: {} ({} nnz)\n", tensor.name, tensor.nnz());
-
-    // --- λ sweep: reimplement Eq. 1 sensitivity by scaling the optical
-    // lane count (5 is the paper's number) ---
-    let mut t = Table::new("wavelength (λ) sweep — O-SRAM runtime", &["λ", "o-sram ms", "speedup vs e-sram"]);
-    let e_runtime = {
-        let r = simulate_all_modes(&tensor, &base, MemTech::ESram);
-        r.total_runtime_s()
-    };
+    let e_runtime = simulate_all_modes(&tensor, &base, &tech("e-sram")).total_runtime_s();
+    let mut t =
+        Table::new("wavelength (λ) sweep — O-SRAM runtime", &["λ", "o-sram ms", "speedup vs e-sram"]);
     for lam in [1u32, 2, 5, 10] {
         let mut cfg = base.clone();
         cfg.osram_lambda_override = Some(lam); // Eq. 1: b_process ∝ λ
-        let r = simulate_all_modes(&tensor, &cfg, MemTech::OSram);
+        let r = simulate_all_modes(&tensor, &cfg, &tech("o-sram"));
         let ms = r.total_runtime_s() * 1e3;
         t.row(vec![
             lam.to_string(),
@@ -45,32 +75,36 @@ fn main() {
     }
     println!("{}", t.render_ascii());
 
-    // --- cache capacity sweep ---
+    // --- 3b. cache capacity sweep ---
     let mut t = Table::new("cache capacity sweep", &["lines/cache", "speedup", "energy savings"]);
     for lines in [base.cache_lines / 4, base.cache_lines / 2, base.cache_lines, base.cache_lines * 2] {
         let mut cfg = base.clone();
         cfg.cache_lines = lines.next_power_of_two();
-        let (s, e) = speedup(&tensor, &cfg);
-        t.row(vec![cfg.cache_lines.to_string(), format!("{s:.2}x"), format!("{e:.2}x")]);
-    }
-    println!("{}", t.render_ascii());
-
-    // --- PE count sweep ---
-    let mut t = Table::new("PE count sweep", &["PEs", "o-sram ms", "speedup"]);
-    for pes in [1usize, 2, 4, 8] {
-        let mut cfg = base.clone();
-        cfg.n_pes = pes;
-        let ro = simulate_all_modes(&tensor, &cfg, MemTech::OSram);
-        let (s, _) = speedup(&tensor, &cfg);
+        let cmp = compare_paper_pair(&tensor, &cfg);
         t.row(vec![
-            pes.to_string(),
-            format!("{:.3}", ro.total_runtime_s() * 1e3),
-            format!("{s:.2}x"),
+            cfg.cache_lines.to_string(),
+            format!("{:.2}x", cmp.total_speedup("o-sram")),
+            format!("{:.2}x", cmp.energy_savings("o-sram")),
         ]);
     }
     println!("{}", t.render_ascii());
 
-    // --- §IV-A type-3 bypass routing, on a cache-hostile tensor ---
+    // --- 3c. PE count sweep ---
+    let mut t = Table::new("PE count sweep", &["PEs", "o-sram ms", "speedup"]);
+    for pes in [1usize, 2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.n_pes = pes;
+        let ro = simulate_all_modes(&tensor, &cfg, &tech("o-sram"));
+        let cmp = compare_paper_pair(&tensor, &cfg);
+        t.row(vec![
+            pes.to_string(),
+            format!("{:.3}", ro.total_runtime_s() * 1e3),
+            format!("{:.2}x", cmp.total_speedup("o-sram")),
+        ]);
+    }
+    println!("{}", t.render_ascii());
+
+    // --- 3d. §IV-A type-3 bypass routing, on a cache-hostile tensor ---
     let cold = frostt::preset(FrosttTensor::Nell1).scaled(scale / 8.0).generate(42);
     let mut t = Table::new(
         "element-wise bypass routing (nell-1 fingerprint)",
@@ -80,7 +114,7 @@ fn main() {
     for bypass in [None, Some(16), Some(1)] {
         let mut cfg = AcceleratorConfig::paper_default().scaled(scale / 8.0);
         cfg.cache_bypass_factor = bypass;
-        let r = simulate_all_modes(&cold, &cfg, MemTech::OSram);
+        let r = simulate_all_modes(&cold, &cfg, &tech("o-sram"));
         t.row(vec![
             format!("{bypass:?}"),
             format!("{:.3}", r.total_runtime_s() * 1e3),

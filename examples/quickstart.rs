@@ -5,7 +5,8 @@
 //! ```
 //!
 //! 1. generate a scaled FROSTT tensor (NELL-2 fingerprint);
-//! 2. simulate spMTTKRP on the E-SRAM and O-SRAM accelerators;
+//! 2. simulate spMTTKRP on the E-SRAM and O-SRAM accelerators
+//!    (both resolved through the open technology registry);
 //! 3. print per-mode speedup + energy savings (the paper's headline);
 //! 4. verify the AOT numeric path against the CPU reference.
 
@@ -20,21 +21,23 @@ fn main() -> anyhow::Result<()> {
 
     // 2. the Table I accelerator, capacity-scaled coherently with the data
     let cfg = AcceleratorConfig::paper_default().scaled(scale);
-    let cmp = compare_technologies(&tensor, &cfg);
+    let cmp = compare_paper_pair(&tensor, &cfg);
 
     // 3. headline numbers
-    for (m, s) in cmp.mode_speedups().iter().enumerate() {
+    let esram = &cmp.require("e-sram").report;
+    let osram = &cmp.require("o-sram").report;
+    for (m, s) in cmp.mode_speedups("o-sram").iter().enumerate() {
         println!(
             "  mode {m}: e-sram {:>9.4} ms | o-sram {:>9.4} ms | speedup {s:.2}x (hit rate {:.1}%)",
-            cmp.esram.modes[m].runtime_s() * 1e3,
-            cmp.osram.modes[m].runtime_s() * 1e3,
-            cmp.osram.modes[m].hit_rate() * 100.0,
+            esram.modes[m].runtime_s() * 1e3,
+            osram.modes[m].runtime_s() * 1e3,
+            osram.modes[m].hit_rate() * 100.0,
         );
     }
     println!(
         "  total speedup {:.2}x | energy savings {:.2}x (paper bands: 1.1-2.9x, 2.8-8.1x)",
-        cmp.total_speedup(),
-        cmp.energy_savings()
+        cmp.total_speedup("o-sram"),
+        cmp.energy_savings("o-sram")
     );
 
     // 4. numerics: AOT artifacts vs CPU reference on a small tensor

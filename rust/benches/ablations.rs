@@ -5,8 +5,8 @@
 mod common;
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
-use photon_mttkrp::coordinator::driver::{self, compare_technologies};
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::coordinator::driver::{self, compare_paper_pair};
+use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::sim::engine;
 use photon_mttkrp::tensor::gen::{self, FrosttTensor};
 use photon_mttkrp::util::bench::Bench;
@@ -23,7 +23,7 @@ fn main() {
     for lam in [1u32, 2, 5, 10] {
         let mut cfg = base.clone();
         cfg.osram_lambda_override = Some(lam);
-        let r = driver::simulate_all_modes(&hot, &cfg, MemTech::OSram);
+        let r = driver::simulate_all_modes(&hot, &cfg, &tech("o-sram"));
         b.record_value(&format!("lambda/{lam}/osram_ms"), r.total_runtime_s() * 1e3, "ms");
     }
 
@@ -35,10 +35,10 @@ fn main() {
         } else {
             base.cache_lines << shift
         };
-        let c = compare_technologies(&hot, &cfg);
+        let c = compare_paper_pair(&hot, &cfg);
         b.record_value(
             &format!("cache_lines/{}/speedup", cfg.cache_lines),
-            c.total_speedup(),
+            c.total_speedup("o-sram"),
             "x",
         );
     }
@@ -48,7 +48,7 @@ fn main() {
         let mut cfg = base.clone();
         cfg.cache_assoc = assoc;
         cfg.cache_lines = (base.cache_lines / base.cache_assoc * assoc).next_power_of_two();
-        let r = driver::simulate_all_modes(&hot, &cfg, MemTech::OSram);
+        let r = driver::simulate_all_modes(&hot, &cfg, &tech("o-sram"));
         let hit = r.modes.iter().map(|m| m.hit_rate()).sum::<f64>() / r.modes.len() as f64;
         b.record_value(&format!("assoc/{assoc}/hit_rate"), hit, "frac");
     }
@@ -57,15 +57,15 @@ fn main() {
     for banks in [1usize, 2, 4, 8] {
         let mut cfg = base.clone();
         cfg.esram_bank_factor = banks;
-        let c = compare_technologies(&hot, &cfg);
-        b.record_value(&format!("esram_banks/{banks}/speedup"), c.total_speedup(), "x");
+        let c = compare_paper_pair(&hot, &cfg);
+        b.record_value(&format!("esram_banks/{banks}/speedup"), c.total_speedup("o-sram"), "x");
     }
 
     // pipeline count (compute roof)
     for pipes in [20usize, 40, 80, 160] {
         let mut cfg = base.clone();
         cfg.n_pipelines = pipes;
-        let r = driver::simulate_all_modes(&hot, &cfg, MemTech::OSram);
+        let r = driver::simulate_all_modes(&hot, &cfg, &tech("o-sram"));
         b.record_value(&format!("pipelines/{pipes}/osram_ms"), r.total_runtime_s() * 1e3, "ms");
     }
 
@@ -73,13 +73,13 @@ fn main() {
     for (name, bypass) in [("off", None), ("x16", Some(16usize)), ("x1", Some(1))] {
         let mut cfg = AcceleratorConfig::paper_default().scaled(scale / 8.0);
         cfg.cache_bypass_factor = bypass;
-        let r = driver::simulate_all_modes(&cold, &cfg, MemTech::OSram);
+        let r = driver::simulate_all_modes(&cold, &cfg, &tech("o-sram"));
         b.record_value(&format!("bypass/{name}/osram_ms"), r.total_runtime_s() * 1e3, "ms");
     }
 
     // degree remap on vs off (the §IV-A memory mapping)
-    let mapped = driver::simulate_all_modes(&hot, &base, MemTech::OSram); // driver applies remap
-    let raw = engine::simulate_all_modes(&hot, &base, MemTech::OSram); // engine does not
+    let mapped = driver::simulate_all_modes(&hot, &base, &tech("o-sram")); // driver applies remap
+    let raw = engine::simulate_all_modes(&hot, &base, &tech("o-sram")); // engine does not
     b.record_value("remap/on/osram_ms", mapped.total_runtime_s() * 1e3, "ms");
     b.record_value("remap/off/osram_ms", raw.total_runtime_s() * 1e3, "ms");
 

@@ -21,9 +21,9 @@ fn main() {
     println!("{}", paper::fig7(&results).render_ascii());
 
     for r in &results {
-        b.record_value(&format!("{}/total_speedup", r.name), r.comparison.total_speedup(), "x");
+        b.record_value(&format!("{}/total_speedup", r.name), r.comparison.total_speedup("o-sram"), "x");
     }
-    let all: Vec<f64> = results.iter().map(|r| r.comparison.total_speedup()).collect();
+    let all: Vec<f64> = results.iter().map(|r| r.comparison.total_speedup("o-sram")).collect();
     let mean = Summary::geomean_of(&all);
     b.record_value("geomean_speedup", mean, "x  (paper mean: 1.68x)");
     let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
@@ -33,7 +33,7 @@ fn main() {
 
     // shape assertions — the bench fails loudly if the reproduction drifts
     let by_name = |n: &str| {
-        results.iter().find(|r| r.name == n).map(|r| r.comparison.total_speedup()).unwrap()
+        results.iter().find(|r| r.name == n).map(|r| r.comparison.total_speedup("o-sram")).unwrap()
     };
     assert!(
         by_name("nell-2") > by_name("nell-1") + 0.5,
@@ -56,7 +56,7 @@ fn main() {
             &hot,
             0,
             &cfg,
-            photon_mttkrp::mem::tech::MemTech::OSram,
+            &photon_mttkrp::mem::registry::tech("o-sram"),
         )
         .runtime_cycles()
     });

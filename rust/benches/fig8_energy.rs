@@ -19,11 +19,11 @@ fn main() {
 
     let mut all = Vec::new();
     for r in &results {
-        let s = r.comparison.energy_savings();
+        let s = r.comparison.energy_savings("o-sram");
         all.push(s);
         b.record_value(&format!("{}/energy_savings", r.name), s, "x");
         // Eq. 2 decomposition per technology
-        let e = &r.comparison.esram_energy;
+        let e = &r.comparison.require("e-sram").energy;
         b.record_value(
             &format!("{}/esram_switching_share", r.name),
             e.switching_j / e.total_j(),
@@ -42,7 +42,7 @@ fn main() {
     assert!(hi < 12.0, "savings {hi} beyond plausibility");
     assert!(mean > 3.0 && mean < 8.0, "mean {mean} outside the paper's regime");
     let by_name = |n: &str| {
-        results.iter().find(|r| r.name == n).map(|r| r.comparison.energy_savings()).unwrap()
+        results.iter().find(|r| r.name == n).map(|r| r.comparison.energy_savings("o-sram")).unwrap()
     };
     assert!(by_name("nell-2") > by_name("nell-1"), "on-chip-bound tensors save more");
     println!("\nfig8 shape checks passed");

@@ -7,7 +7,7 @@
 mod common;
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::sim::engine::simulate_mode;
 use photon_mttkrp::tensor::csf::ModeView;
 use photon_mttkrp::tensor::gen::{self, TensorSpec};
@@ -27,14 +27,14 @@ fn main() {
     let wide = TensorSpec::custom("wide", vec![500, 500, 500, 500, 500], 200_000, 0.8).generate(1);
 
     for (name, t) in [("hot3", &hot), ("cold3", &cold), ("wide5", &wide)] {
-        for tech in [MemTech::ESram, MemTech::OSram] {
+        for tc in [tech("e-sram"), tech("o-sram")] {
             let m = b.bench_items(
-                &format!("{name}/{}", tech.name()),
+                &format!("{name}/{}", tc.name),
                 t.nnz() as f64,
-                || simulate_mode(t, 0, &cfg, tech).runtime_cycles(),
+                || simulate_mode(t, 0, &cfg, &tc).runtime_cycles(),
             );
             let nnz_per_s = m.throughput_per_s().unwrap();
-            if name == "hot3" && tech == MemTech::OSram {
+            if name == "hot3" && tc.name == "o-sram" {
                 // §Perf target gate (soft: prints rather than fails in CI)
                 if nnz_per_s < 20.0e6 {
                     println!("!! below the 20 M nnz/s §Perf target: {nnz_per_s:.3e}");

@@ -4,7 +4,7 @@
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::accel::design::OnChipBudget;
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::util::bench::Bench;
 
@@ -13,8 +13,8 @@ fn main() {
     b.group("table3");
     println!("\n{}", paper::table_iii().render_ascii());
 
-    let e = MemTech::ESram.technology();
-    let o = MemTech::OSram.technology();
+    let e = tech("e-sram");
+    let o = tech("o-sram");
     // paper constants, asserted to stay exact
     assert_eq!(e.static_pj_per_bit_cycle, 1.175e-6);
     assert_eq!(o.static_pj_per_bit_cycle, 4.17e-6);

@@ -3,7 +3,7 @@
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::area::model::{AreaModel, PAPER_OSRAM_MEM_MM2};
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::util::bench::Bench;
 
@@ -14,8 +14,8 @@ fn main() {
     println!("\n{}", paper::table_iv(&cfg).render_ascii());
 
     let m = AreaModel::new(&cfg);
-    let e = m.platform(MemTech::ESram);
-    let o = m.platform(MemTech::OSram);
+    let e = m.platform(&tech("e-sram"));
+    let o = m.platform(&tech("o-sram"));
     b.record_value("esram/onchip_mm2", e.onchip_mem_mm2, "mm^2 (paper: 43.2)");
     b.record_value("esram/total_mm2", e.total_mm2(), "mm^2 (paper: 247.2)");
     b.record_value("osram/onchip_mm2", o.onchip_mem_mm2, "mm^2 (paper: 103.7e4)");

@@ -60,9 +60,10 @@ pub struct AcceleratorConfig {
     /// subsystem, which is the paper's configuration; the ablation bench
     /// sweeps this knob.
     pub cache_bypass_factor: Option<usize>,
-    /// Override the O-SRAM WDM wavelength count λ (default: the device's
-    /// 5). Eq. 1 ablation knob — changes concurrency, not the device
-    /// energies.
+    /// Override the WDM wavelength count λ of any optical-class (fast,
+    /// multi-wavelength) technology — the builtin O-SRAM's 5, a derived
+    /// variant's, etc. Eq. 1 ablation knob — changes concurrency, not
+    /// the device energies. See [`tuned_tech`](Self::tuned_tech).
     pub osram_lambda_override: Option<u32>,
 
     // --- platform resource budget (§V-A, Alveo U250-class) ---
@@ -125,11 +126,21 @@ impl AcceleratorConfig {
         self.cache_lines / self.cache_assoc
     }
 
-    /// Resolve the device model for `tech`, applying any config-level
-    /// overrides (the λ ablation knob).
-    pub fn technology(&self, tech: crate::mem::tech::MemTech) -> crate::mem::tech::MemTechnology {
-        let mut t = tech.technology();
-        if tech == crate::mem::tech::MemTech::OSram {
+    /// Apply config-level device overrides (the λ ablation knob) to a
+    /// registry-resolved technology. Layers that simulate always go
+    /// through this, so a config tweak reaches every consumer uniformly.
+    ///
+    /// The λ override applies to any *WDM optical-class* technology —
+    /// fast array with wavelength concurrency — not to a hardwired name,
+    /// so registry-defined optical variants ablate the same way the
+    /// builtin O-SRAM does. Electrical (fabric-synchronous or single-λ)
+    /// arrays pass through untouched.
+    pub fn tuned_tech(
+        &self,
+        base: &crate::mem::tech::MemTechnology,
+    ) -> crate::mem::tech::MemTechnology {
+        let mut t = base.clone();
+        if t.is_fast_array(self.fabric_hz) && t.wavelengths > 1 {
             if let Some(l) = self.osram_lambda_override {
                 assert!(l >= 1);
                 t.wavelengths = l;
@@ -138,6 +149,19 @@ impl AcceleratorConfig {
             }
         }
         t
+    }
+
+    /// Data-array bank cascade for an on-chip array of `tech`: electrical
+    /// (fabric-synchronous) arrays widen their port by cascading
+    /// [`esram_bank_factor`](Self::esram_bank_factor) blocks; a fast
+    /// (optical-class) array already delivers Eq. 1 bandwidth and needs no
+    /// cascading.
+    pub fn bank_factor(&self, tech: &crate::mem::tech::MemTechnology) -> usize {
+        if tech.is_fast_array(self.fabric_hz) {
+            1
+        } else {
+            self.esram_bank_factor
+        }
     }
 
     /// Bytes of one factor-matrix row (R × f32).
@@ -170,6 +194,11 @@ impl AcceleratorConfig {
             "platform.onchip_mb",
         ];
         for k in c.keys() {
+            if k.starts_with("tech.") {
+                // `[tech.<name>]` sections define registry technologies and
+                // are consumed by `mem::registry::load_config`, not here.
+                continue;
+            }
             if !KNOWN.contains(&k) {
                 return Err(format!("unknown config key `{k}`"));
             }
@@ -283,6 +312,46 @@ mod tests {
         let mut c = AcceleratorConfig::paper_default();
         let file = Config::parse("[pe]\ncuont = 8").unwrap();
         assert!(c.apply_config(&file).is_err());
+    }
+
+    #[test]
+    fn tech_sections_are_ignored_by_accel_config() {
+        let mut c = AcceleratorConfig::paper_default();
+        let file =
+            Config::parse("[tech.custom]\nbase = \"e-sram\"\n[pe]\ncount = 2").unwrap();
+        c.apply_config(&file).unwrap();
+        assert_eq!(c.n_pes, 2);
+    }
+
+    #[test]
+    fn tuned_tech_applies_lambda_override_to_wdm_optical_arrays() {
+        let mut c = AcceleratorConfig::paper_default();
+        c.osram_lambda_override = Some(10);
+        let o = c.tuned_tech(&crate::mem::osram::osram());
+        assert_eq!(o.wavelengths, 10);
+        assert_eq!(o.lanes_per_core_cycle, 10);
+        assert_eq!(o.ports_per_block, 400);
+        // the knob is structural, not name-matched: a derived optical
+        // variant (here the IMC array) ablates too
+        let imc = c.tuned_tech(&crate::mem::posram::osram_imc());
+        assert_eq!(imc.wavelengths, 10);
+        // electrical (fabric-synchronous) technologies pass through
+        let e = c.tuned_tech(&crate::mem::esram::esram());
+        assert_eq!(e, crate::mem::esram::esram());
+        let u = c.tuned_tech(&crate::mem::uram::uram());
+        assert_eq!(u, crate::mem::uram::uram());
+        // without the knob, everything is the identity
+        let plain = AcceleratorConfig::paper_default();
+        assert_eq!(plain.tuned_tech(&crate::mem::osram::osram()), crate::mem::osram::osram());
+    }
+
+    #[test]
+    fn bank_factor_follows_the_fast_array_predicate() {
+        let c = AcceleratorConfig::paper_default();
+        assert_eq!(c.bank_factor(&crate::mem::esram::esram()), c.esram_bank_factor);
+        assert_eq!(c.bank_factor(&crate::mem::uram::uram()), c.esram_bank_factor);
+        assert_eq!(c.bank_factor(&crate::mem::osram::osram()), 1);
+        assert_eq!(c.bank_factor(&crate::mem::posram::osram_imc()), 1);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! capacity check against the 54 MB platform budget.
 
 use crate::accel::config::AcceleratorConfig;
-use crate::mem::tech::{MemTech, MemTechnology};
+use crate::mem::tech::MemTechnology;
 
 /// Bytes of on-chip memory the accelerator design actually instantiates,
 /// by component (per the Fig. 4 architecture, aggregated over all PEs).
@@ -49,23 +49,24 @@ impl OnChipBudget {
     }
 }
 
-/// A fully-resolved design instance: configuration + memory technology.
+/// A fully-resolved design instance: configuration + memory technology
+/// (any registry-resolved parameter set).
 #[derive(Clone, Debug)]
 pub struct DesignInstance {
     pub cfg: AcceleratorConfig,
-    pub tech: MemTech,
+    pub tech: MemTechnology,
     pub budget: OnChipBudget,
 }
 
 impl DesignInstance {
-    pub fn new(cfg: AcceleratorConfig, tech: MemTech) -> Self {
+    pub fn new(cfg: AcceleratorConfig, tech: MemTechnology) -> Self {
         let budget = OnChipBudget::from_config(&cfg);
         DesignInstance { cfg, tech, budget }
     }
 
     /// `n_blocks` of the instantiated technology (Eq. 2's n_O-SRAM).
     pub fn n_blocks(&self) -> u64 {
-        self.budget.blocks(&self.tech.technology())
+        self.budget.blocks(&self.tech)
     }
 }
 
@@ -89,8 +90,8 @@ mod tests {
     #[test]
     fn block_counts_differ_by_technology() {
         let cfg = AcceleratorConfig::paper_default();
-        let d_o = DesignInstance::new(cfg.clone(), MemTech::OSram);
-        let d_e = DesignInstance::new(cfg, MemTech::ESram);
+        let d_o = DesignInstance::new(cfg.clone(), crate::mem::osram::osram());
+        let d_e = DesignInstance::new(cfg, crate::mem::esram::esram());
         // O-SRAM blocks are 32 Kb vs E-SRAM 36 Kb ⇒ more O blocks
         assert!(d_o.n_blocks() > d_e.n_blocks());
         // n_OSRAM for Eq. 2 is in the thousands for a MB-scale design

@@ -11,7 +11,8 @@
 //! paper's printed value as `PAPER_ESRAM_TOTAL_MM2` for comparison output.
 
 use crate::accel::config::AcceleratorConfig;
-use crate::mem::tech::MemTech;
+use crate::mem::registry;
+use crate::mem::tech::MemTechnology;
 
 /// PE-array area at 12 nm (Table IV, identical for both systems — the
 /// compute mesh is CMOS either way).
@@ -47,27 +48,41 @@ impl AreaModel {
     }
 
     /// Area of the platform with its full on-chip memory in `tech`
-    /// (Table IV replaces *all* 54 MB, not just the bytes the design uses).
-    pub fn platform(&self, tech: MemTech) -> AreaBreakdown {
+    /// (Table IV replaces *all* 54 MB, not just the bytes the design
+    /// uses). Any registry-resolved technology prices through the same
+    /// per-bit model.
+    pub fn platform(&self, tech: &MemTechnology) -> AreaBreakdown {
         let bits = self.cfg.onchip_bytes * 8;
-        AreaBreakdown { onchip_mem_mm2: tech.technology().area_mm2(bits), pe_mm2: PE_AREA_MM2 }
+        AreaBreakdown { onchip_mem_mm2: tech.area_mm2(bits), pe_mm2: PE_AREA_MM2 }
+    }
+
+    /// Resolve `name` through the global registry and price the platform.
+    pub fn platform_by_name(&self, name: &str) -> Result<AreaBreakdown, String> {
+        Ok(self.platform(&registry::resolve(name)?))
+    }
+
+    /// `tech` : `base` total-area ratio (e.g. the wafer-scale penalty of
+    /// §V-D with the o-sram/e-sram pair).
+    pub fn penalty_over(&self, tech: &MemTechnology, base: &MemTechnology) -> f64 {
+        self.platform(tech).total_mm2() / self.platform(base).total_mm2()
     }
 
     /// O-SRAM : E-SRAM total-area ratio — the wafer-scale penalty of §V-D.
     pub fn area_penalty(&self) -> f64 {
-        self.platform(MemTech::OSram).total_mm2() / self.platform(MemTech::ESram).total_mm2()
+        self.penalty_over(&registry::tech("o-sram"), &registry::tech("e-sram"))
     }
 
     /// Does the O-SRAM system exceed a single reticle (~858 mm²)? It must —
     /// that is the wafer-scale argument of §II.
     pub fn requires_wafer_scale(&self) -> bool {
-        self.platform(MemTech::OSram).total_mm2() > 858.0
+        self.platform(&registry::tech("o-sram")).total_mm2() > 858.0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::registry::tech;
 
     fn model() -> AreaModel {
         AreaModel::new(&AcceleratorConfig::paper_default())
@@ -75,7 +90,7 @@ mod tests {
 
     #[test]
     fn esram_row_matches_table_iv() {
-        let a = model().platform(MemTech::ESram);
+        let a = model().platform(&tech("e-sram"));
         assert!((a.onchip_mem_mm2 - 43.2).abs() < 1e-6, "{}", a.onchip_mem_mm2);
         assert_eq!(a.pe_mm2, 202.2);
         // component sum; paper prints 247.2 (see module docs)
@@ -85,7 +100,7 @@ mod tests {
 
     #[test]
     fn osram_row_matches_table_iv() {
-        let a = model().platform(MemTech::OSram);
+        let a = model().platform(&tech("o-sram"));
         assert!((a.onchip_mem_mm2 - 103.7e4).abs() / 103.7e4 < 1e-9);
         // memory dwarfs PEs: total ≈ memory (paper prints the same number)
         assert!((a.total_mm2() - 103.7e4).abs() / 103.7e4 < 1e-3);
@@ -104,8 +119,8 @@ mod tests {
         let mut cfg = AcceleratorConfig::paper_default();
         cfg.onchip_bytes /= 2;
         let m = AreaModel::new(&cfg);
-        let full = model().platform(MemTech::OSram).onchip_mem_mm2;
-        let half = m.platform(MemTech::OSram).onchip_mem_mm2;
+        let full = model().platform(&tech("o-sram")).onchip_mem_mm2;
+        let half = m.platform(&tech("o-sram")).onchip_mem_mm2;
         assert!((half - full / 2.0).abs() / full < 1e-9);
     }
 }

@@ -113,11 +113,13 @@ impl CacheTiming {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::tech::{MemTech, FABRIC_HZ};
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
 
     #[test]
     fn esram_array_words_with_banking() {
-        let e = MemTech::ESram.technology();
+        let e = esram();
         let t = ArrayTiming::new(&e, FABRIC_HZ, 4);
         // dual port × 4 banks = 8 words per fabric cycle
         assert!((t.words_per_fabric_cycle - 8.0).abs() < 1e-12);
@@ -127,7 +129,7 @@ mod tests {
 
     #[test]
     fn osram_array_words_match_eq1() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         let t = ArrayTiming::new(&o, FABRIC_HZ, 1);
         assert!((t.words_per_fabric_cycle - 200.0).abs() < 1e-9);
         // 4 stages at 20 GHz = 0.1 fabric cycles + 2 sync ⇒ 2.1
@@ -136,7 +138,7 @@ mod tests {
 
     #[test]
     fn esram_cache_serves_half_line_per_cycle() {
-        let e = MemTech::ESram.technology();
+        let e = esram();
         let c = CacheTiming::new(&e, FABRIC_HZ, 4, 64);
         // 16 words/line over 8 words/cycle ⇒ 2 cycles per request
         assert!((c.hit_occupancy() - 2.0).abs() < 1e-12);
@@ -144,8 +146,8 @@ mod tests {
 
     #[test]
     fn osram_cache_two_orders_faster() {
-        let o = MemTech::OSram.technology();
-        let e = MemTech::ESram.technology();
+        let o = osram();
+        let e = esram();
         let co = CacheTiming::new(&o, FABRIC_HZ, 1, 64);
         let ce = CacheTiming::new(&e, FABRIC_HZ, 4, 64);
         let ratio = ce.hit_occupancy() / co.hit_occupancy();
@@ -157,15 +159,14 @@ mod tests {
 
     #[test]
     fn occupancy_scales_linearly_in_words() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         let t = ArrayTiming::new(&o, FABRIC_HZ, 1);
         assert!((t.occupancy_cycles(400.0) - 2.0 * t.occupancy_cycles(200.0)).abs() < 1e-12);
     }
 
     #[test]
     fn fill_occupancy_positive_and_latency_reported() {
-        for tech in [MemTech::ESram, MemTech::OSram] {
-            let m = tech.technology();
+        for m in [esram(), osram()] {
             let c = CacheTiming::new(&m, FABRIC_HZ, 2, 64);
             assert!(c.fill_occupancy() > 0.0);
             assert!(c.hit_latency() >= 1.0);

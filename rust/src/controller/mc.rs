@@ -18,7 +18,7 @@ use crate::cache::pipeline::{ArrayTiming, CacheTiming};
 use crate::dma::elementwise::ElementDma;
 use crate::dma::stream::StreamDma;
 use crate::mem::dram::{DramChannelState, DramConfig};
-use crate::mem::tech::MemTech;
+use crate::mem::tech::MemTechnology;
 
 /// How a factor-row access was served (for the engine's accounting).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -30,7 +30,7 @@ pub enum Served {
 
 /// Per-PE memory controller: functional + timing state.
 pub struct MemoryController {
-    pub tech: MemTech,
+    pub tech: MemTechnology,
     pub caches: Vec<SetAssocCache>,
     pub cache_timing: CacheTiming,
     pub stream_dma: StreamDma,
@@ -64,25 +64,25 @@ pub struct MemoryController {
     miss_dram_cycles: f64,
 }
 
-/// The electrical cache's MEM pipeline (500 MHz) sustains fewer in-flight
-/// misses than the 20 GHz optical one, reducing the effective bank-level
-/// overlap its DRAM channel achieves on miss bursts (MSHR depth scales
-/// with the pipeline clock). Applied as a multiplier on
-/// `DramConfig::random_overlap` for E-SRAM controllers.
-pub const ESRAM_MISS_OVERLAP_DERATE: f64 = 0.875;
+/// A fabric-synchronous (electrical) cache's MEM pipeline sustains fewer
+/// in-flight misses than a fast (optical-class) one, reducing the
+/// effective bank-level overlap its DRAM channel achieves on miss bursts
+/// (MSHR depth scales with the pipeline clock). Applied as a multiplier
+/// on `DramConfig::random_overlap` whenever the technology fails the
+/// [`MemTechnology::is_fast_array`] predicate.
+pub const SLOW_ARRAY_MISS_OVERLAP_DERATE: f64 = 0.875;
 
 impl MemoryController {
-    /// Build a controller for one PE. `matrix_rows[j]` = row count of input
-    /// factor matrix slot `j` (used for the §IV-A type-3 bypass routing
-    /// decision when `cfg.cache_bypass_factor` is set).
-    pub fn new(cfg: &AcceleratorConfig, tech: MemTech, matrix_rows: &[u64]) -> Self {
-        let t = cfg.technology(tech);
-        let banks = match tech {
-            MemTech::ESram => cfg.esram_bank_factor,
-            MemTech::OSram => 1,
-        };
-        let cache_timing = CacheTiming::new(&t, cfg.fabric_hz, banks, cfg.line_bytes);
-        let buffer_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
+    /// Build a controller for one PE for an already-resolved (and, by the
+    /// engine, already [`tuned`](AcceleratorConfig::tuned_tech))
+    /// technology. `matrix_rows[j]` = row count of input factor matrix
+    /// slot `j` (used for the §IV-A type-3 bypass routing decision when
+    /// `cfg.cache_bypass_factor` is set).
+    pub fn new(cfg: &AcceleratorConfig, tech: &MemTechnology, matrix_rows: &[u64]) -> Self {
+        let t = tech;
+        let banks = cfg.bank_factor(t);
+        let cache_timing = CacheTiming::new(t, cfg.fabric_hz, banks, cfg.line_bytes);
+        let buffer_timing = ArrayTiming::new(t, cfg.fabric_hz, banks);
         let caches = (0..cfg.n_caches)
             .map(|_| SetAssocCache::new(cfg.cache_sets(), cfg.cache_assoc))
             .collect();
@@ -95,14 +95,14 @@ impl MemoryController {
             })
             .collect();
         let mut dram_cfg = cfg.dram.clone();
-        if tech == MemTech::ESram {
-            dram_cfg.random_overlap *= ESRAM_MISS_OVERLAP_DERATE;
+        if !t.is_fast_array(cfg.fabric_hz) {
+            dram_cfg.random_overlap *= SLOW_ARRAY_MISS_OVERLAP_DERATE;
         }
         let ways_read = if t.serial_tag_data(cfg.fabric_hz) { 1 } else { cfg.cache_assoc as u64 };
         let words_per_line = (cfg.line_bytes / 4) as u64;
         let tag_words = cfg.cache_assoc as u64 * 2;
         MemoryController {
-            tech,
+            tech: tech.clone(),
             caches,
             hit_occ: cache_timing.hit_occupancy(),
             fill_occ: cache_timing.fill_occupancy(),
@@ -211,6 +211,8 @@ impl MemoryController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
 
     fn cfg() -> AcceleratorConfig {
         AcceleratorConfig::paper_default()
@@ -218,7 +220,7 @@ mod tests {
 
     #[test]
     fn routing_matrix_to_cache_round_robin() {
-        let mc = MemoryController::new(&cfg(), MemTech::ESram, &[100, 100, 100, 100]);
+        let mc = MemoryController::new(&cfg(), &esram(), &[100, 100, 100, 100]);
         assert_eq!(mc.cache_of(0), 0);
         assert_eq!(mc.cache_of(1), 1);
         assert_eq!(mc.cache_of(2), 2);
@@ -227,7 +229,7 @@ mod tests {
 
     #[test]
     fn hit_and_miss_paths_charge_resources() {
-        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        let mut mc = MemoryController::new(&cfg(), &esram(), &[1000]);
         let s1 = mc.factor_row_load(0, 7);
         assert!(matches!(s1, Served::CacheMiss { cache: 0, writeback: false }));
         let dram_after_miss = mc.dram.busy_cycles;
@@ -244,7 +246,7 @@ mod tests {
     #[test]
     fn bypass_off_by_default_routes_everything_to_cache() {
         let huge = u32::MAX as u64; // would bypass under any finite factor
-        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[huge]);
+        let mut mc = MemoryController::new(&cfg(), &esram(), &[huge]);
         assert!(!mc.is_bypassed(0));
         mc.factor_row_load(0, 3);
         assert_eq!(mc.cache_stats().accesses(), 1);
@@ -252,8 +254,8 @@ mod tests {
 
     #[test]
     fn esram_miss_concurrency_derate_applies() {
-        let me = MemoryController::new(&cfg(), MemTech::ESram, &[10]);
-        let mo = MemoryController::new(&cfg(), MemTech::OSram, &[10]);
+        let me = MemoryController::new(&cfg(), &esram(), &[10]);
+        let mo = MemoryController::new(&cfg(), &osram(), &[10]);
         assert!(me.dram_cfg.random_overlap < mo.dram_cfg.random_overlap);
         // stream bandwidth untouched
         assert_eq!(me.dram_cfg.stream_bytes_per_cycle(), mo.dram_cfg.stream_bytes_per_cycle());
@@ -265,7 +267,7 @@ mod tests {
         c.cache_bypass_factor = Some(64);
         let huge = (c.cache_lines * 64 + 1) as u64;
         let cfg = move || c.clone();
-        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[huge, 100]);
+        let mut mc = MemoryController::new(&cfg(), &esram(), &[huge, 100]);
         assert!(mc.is_bypassed(0));
         assert!(!mc.is_bypassed(1));
         assert_eq!(mc.factor_row_load(0, 3), Served::Bypass);
@@ -277,7 +279,7 @@ mod tests {
 
     #[test]
     fn stream_charges_dram_and_buffer() {
-        let mut mc = MemoryController::new(&cfg(), MemTech::OSram, &[10]);
+        let mut mc = MemoryController::new(&cfg(), &osram(), &[10]);
         mc.stream(1 << 20);
         assert!(mc.dram.bytes_streamed == 1 << 20);
         assert!(mc.stream_busy > 0.0);
@@ -286,8 +288,8 @@ mod tests {
 
     #[test]
     fn osram_cache_busy_far_below_esram() {
-        let mut me = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
-        let mut mo = MemoryController::new(&cfg(), MemTech::OSram, &[1000]);
+        let mut me = MemoryController::new(&cfg(), &esram(), &[1000]);
+        let mut mo = MemoryController::new(&cfg(), &osram(), &[1000]);
         for r in 0..1000u32 {
             me.factor_row_load(0, r % 50);
             mo.factor_row_load(0, r % 50);
@@ -299,7 +301,7 @@ mod tests {
 
     #[test]
     fn energy_words_accumulate() {
-        let mut mc = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        let mut mc = MemoryController::new(&cfg(), &esram(), &[1000]);
         mc.factor_row_load(0, 1); // miss: probe + fill words
         let w_miss = mc.cache_words;
         mc.factor_row_load(0, 1); // hit: probe words only
@@ -314,14 +316,14 @@ mod tests {
     fn fast_array_serializes_tag_then_data() {
         // O-SRAM (40× fabric speed) reads tags first, then only the
         // matching way: 16 data + 8 tag words per hit probe.
-        let mut mc = MemoryController::new(&cfg(), MemTech::OSram, &[1000]);
+        let mut mc = MemoryController::new(&cfg(), &osram(), &[1000]);
         mc.factor_row_load(0, 1);
         let w_miss = mc.cache_words;
         mc.factor_row_load(0, 1);
         let w_hit = mc.cache_words - w_miss;
         assert_eq!(w_hit, 16 + 8);
         // ~3× fewer active bits per lookup than the E-SRAM path
-        let mut me = MemoryController::new(&cfg(), MemTech::ESram, &[1000]);
+        let mut me = MemoryController::new(&cfg(), &esram(), &[1000]);
         me.factor_row_load(0, 1);
         let we0 = me.cache_words;
         me.factor_row_load(0, 1);

@@ -4,14 +4,18 @@
 //!   (timing, traffic, energy counters) for one tensor on one memory
 //!   technology, with the paper's locality-enhancing remapping applied
 //!   first (§IV-A "determine a mapping of X into memory for each mode").
-//! * [`compare_technologies`] — the Fig. 7 / Fig. 8 primitive: run both
-//!   technologies and report per-mode speedup + run energy savings.
+//! * [`compare_technologies`] — the N-way generalization of the Fig. 7 /
+//!   Fig. 8 primitive: run any list of registry-resolved technologies on
+//!   one tensor and report per-mode speedups + run-energy ratios against
+//!   the first (baseline) entry.
+//! * [`compare_paper_pair`] — the paper's exact E-SRAM vs O-SRAM pair.
 //! * [`compute_mode`] — the numeric path: real MTTKRP values through the
 //!   AOT artifacts (or the scalar reference when artifacts are absent).
 
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};
-use crate::mem::tech::MemTech;
+use crate::mem::registry;
+use crate::mem::tech::MemTechnology;
 use crate::mttkrp::block::mttkrp_via_artifacts;
 use crate::mttkrp::reference::{mttkrp, FactorMatrix};
 use crate::runtime::client::Runtime;
@@ -35,7 +39,7 @@ pub fn simulate_mode(
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
-    tech: MemTech,
+    tech: &MemTechnology,
 ) -> ModeReport {
     let t = apply_memory_mapping(tensor);
     engine::simulate_mode(&t, mode, cfg, tech)
@@ -45,57 +49,127 @@ pub fn simulate_mode(
 pub fn simulate_all_modes(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
-    tech: MemTech,
+    tech: &MemTechnology,
 ) -> SimReport {
     let t = apply_memory_mapping(tensor);
     engine::simulate_all_modes(&t, cfg, tech)
 }
 
-/// Both technologies on one tensor: per-mode speedups + energy savings.
+/// One technology's full-run result inside a [`TechComparison`].
+#[derive(Clone, Debug)]
+pub struct TechRun {
+    pub report: SimReport,
+    pub energy: EnergyBreakdown,
+}
+
+impl TechRun {
+    /// The registry name of the technology this run used.
+    pub fn name(&self) -> &str {
+        &self.report.tech.name
+    }
+}
+
+/// N technologies on one tensor: per-mode speedups + energy ratios, all
+/// relative to the first (baseline) run.
 #[derive(Clone, Debug)]
 pub struct TechComparison {
     pub tensor: String,
-    pub esram: SimReport,
-    pub osram: SimReport,
-    pub esram_energy: EnergyBreakdown,
-    pub osram_energy: EnergyBreakdown,
+    /// One run per requested technology; `runs[0]` is the baseline.
+    pub runs: Vec<TechRun>,
 }
 
 impl TechComparison {
-    /// Fig. 7 series: speedup per mode.
-    pub fn mode_speedups(&self) -> Vec<f64> {
-        self.esram
+    /// The baseline run (the first technology passed in).
+    pub fn baseline(&self) -> &TechRun {
+        &self.runs[0]
+    }
+
+    /// The run for a technology name, if it was part of the comparison.
+    pub fn run(&self, name: &str) -> Option<&TechRun> {
+        self.runs.iter().find(|r| r.name() == name)
+    }
+
+    /// The run for `name`, panicking with the available names otherwise.
+    pub fn require(&self, name: &str) -> &TechRun {
+        self.run(name).unwrap_or_else(|| {
+            panic!("technology `{name}` not in comparison (have: {:?})", self.names())
+        })
+    }
+
+    /// Technology names in run order (baseline first).
+    pub fn names(&self) -> Vec<&str> {
+        self.runs.iter().map(|r| r.name()).collect()
+    }
+
+    /// Fig. 7 series for one technology: per-mode speedup over the
+    /// baseline (`baseline runtime / tech runtime`).
+    pub fn mode_speedups(&self, name: &str) -> Vec<f64> {
+        let run = self.require(name);
+        self.baseline()
+            .report
             .modes
             .iter()
-            .zip(&self.osram.modes)
-            .map(|(e, o)| e.runtime_cycles() / o.runtime_cycles())
+            .zip(&run.report.modes)
+            .map(|(b, t)| b.runtime_cycles() / t.runtime_cycles())
             .collect()
     }
 
-    /// Total-execution-time speedup.
-    pub fn total_speedup(&self) -> f64 {
-        self.esram.total_runtime_cycles() / self.osram.total_runtime_cycles()
+    /// Total-execution-time speedup of `name` over the baseline.
+    pub fn total_speedup(&self, name: &str) -> f64 {
+        self.baseline().report.total_runtime_cycles()
+            / self.require(name).report.total_runtime_cycles()
     }
 
-    /// Fig. 8 metric: E-SRAM run energy / O-SRAM run energy.
-    pub fn energy_savings(&self) -> f64 {
-        self.esram_energy.total_j() / self.osram_energy.total_j()
+    /// Fig. 8 metric for one technology: baseline run energy / tech run
+    /// energy (above 1.0 ⇒ `name` saves energy).
+    pub fn energy_savings(&self, name: &str) -> f64 {
+        self.baseline().energy.total_j() / self.require(name).energy.total_j()
     }
 }
 
-/// Run the full E-vs-O comparison for one tensor (the Fig. 7/8 primitive).
-pub fn compare_technologies(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> TechComparison {
-    let t = apply_memory_mapping(tensor);
-    let esram = engine::simulate_all_modes(&t, cfg, MemTech::ESram);
-    let osram = engine::simulate_all_modes(&t, cfg, MemTech::OSram);
-    let em = EnergyModel::new(cfg);
-    TechComparison {
-        tensor: tensor.name.clone(),
-        esram_energy: em.run_energy(&esram),
-        osram_energy: em.run_energy(&osram),
-        esram,
-        osram,
+/// Run every technology in `techs` on one tensor (the memory mapping and
+/// tensor preparation are shared across runs). `techs[0]` is the baseline
+/// the speedup/energy accessors compare against.
+pub fn compare_technologies(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+) -> TechComparison {
+    assert!(!techs.is_empty(), "compare_technologies needs at least one technology");
+    // the accessors are name-keyed (find-first), so a duplicate name would
+    // shadow its twin's numbers silently — reject it up front, like the
+    // sweep engine does
+    let mut seen: Vec<&str> = Vec::new();
+    for t in techs {
+        assert!(!seen.contains(&t.name.as_str()), "technology `{}` listed twice", t.name);
+        seen.push(&t.name);
     }
+    let t = apply_memory_mapping(tensor);
+    let em = EnergyModel::new(cfg);
+    let runs = techs
+        .iter()
+        .map(|tech| {
+            let report = engine::simulate_all_modes(&t, cfg, tech);
+            let energy = em.run_energy(&report);
+            TechRun { report, energy }
+        })
+        .collect();
+    TechComparison { tensor: tensor.name.clone(), runs }
+}
+
+/// The paper's Fig. 7 / Fig. 8 primitive: E-SRAM baseline vs O-SRAM.
+pub fn compare_paper_pair(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> TechComparison {
+    compare_technologies(
+        tensor,
+        cfg,
+        &[registry::tech("e-sram"), registry::tech("o-sram")],
+    )
+}
+
+/// Every technology in the global registry on one tensor, baseline =
+/// first registered entry (`e-sram`).
+pub fn compare_all_registered(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> TechComparison {
+    compare_technologies(tensor, cfg, &registry::all())
 }
 
 /// How the numeric MTTKRP is computed.
@@ -122,6 +196,7 @@ pub fn compute_mode(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::registry::tech;
     use crate::tensor::gen::{self, TensorSpec};
 
     fn cfg() -> AcceleratorConfig {
@@ -148,21 +223,56 @@ mod tests {
         // degree remap should help (or at least not wreck) cache behaviour
         let t = TensorSpec::custom("z", vec![4000, 4000, 4000], 50_000, 1.0).generate(3);
         let cfg = cfg();
-        let plain = engine::simulate_mode(&t, 0, &cfg, MemTech::OSram);
-        let mapped = simulate_mode(&t, 0, &cfg, MemTech::OSram);
+        let plain = engine::simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        let mapped = simulate_mode(&t, 0, &cfg, &tech("o-sram"));
         assert!(mapped.hit_rate() >= plain.hit_rate() - 0.02);
     }
 
     #[test]
-    fn comparison_has_consistent_shape() {
+    fn paper_pair_comparison_has_consistent_shape() {
         let t = TensorSpec::custom("c", vec![100, 100, 100], 20_000, 0.9).generate(2);
-        let c = compare_technologies(&t, &cfg());
-        assert_eq!(c.mode_speedups().len(), 3);
-        for s in c.mode_speedups() {
+        let c = compare_paper_pair(&t, &cfg());
+        assert_eq!(c.names(), vec!["e-sram", "o-sram"]);
+        assert_eq!(c.mode_speedups("o-sram").len(), 3);
+        for s in c.mode_speedups("o-sram") {
             assert!(s >= 0.99, "speedup {s} below 1");
         }
-        assert!(c.total_speedup() >= 1.0);
-        assert!(c.energy_savings() > 1.0);
+        assert!(c.total_speedup("o-sram") >= 1.0);
+        assert!(c.energy_savings("o-sram") > 1.0);
+        // the baseline compared against itself is exactly 1.0
+        assert_eq!(c.total_speedup("e-sram"), 1.0);
+        assert_eq!(c.energy_savings("e-sram"), 1.0);
+    }
+
+    #[test]
+    fn n_way_comparison_covers_every_requested_tech() {
+        let t = TensorSpec::custom("n", vec![80, 80, 80], 10_000, 1.0).generate(4);
+        let techs =
+            [tech("e-sram"), tech("e-uram"), tech("o-sram"), tech("o-sram-imc")];
+        let c = compare_technologies(&t, &cfg(), &techs);
+        assert_eq!(c.runs.len(), 4);
+        assert_eq!(c.names(), vec!["e-sram", "e-uram", "o-sram", "o-sram-imc"]);
+        // both optical points must beat the electrical baseline
+        assert!(c.total_speedup("o-sram") >= 1.0);
+        assert!(c.total_speedup("o-sram-imc") >= 1.0);
+        // the wider-comb IMC array can never be slower than the base O-SRAM
+        assert!(
+            c.total_speedup("o-sram-imc") >= c.total_speedup("o-sram") * 0.999,
+            "imc {} vs o-sram {}",
+            c.total_speedup("o-sram-imc"),
+            c.total_speedup("o-sram")
+        );
+        // unknown name panics with the available list
+        let err = std::panic::catch_unwind(|| c.total_speedup("t-sram"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn compare_all_registered_spans_the_registry() {
+        let t = TensorSpec::custom("r", vec![60, 60, 60], 5_000, 1.0).generate(9);
+        let c = compare_all_registered(&t, &cfg());
+        assert!(c.runs.len() >= 4);
+        assert_eq!(c.baseline().name(), "e-sram");
     }
 
     #[test]

@@ -44,12 +44,14 @@ impl ElementDma {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::tech::{MemTech, FABRIC_HZ};
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
 
     #[test]
     fn elementwise_pays_random_access_cost() {
         let d = DramConfig::default();
-        let e = ElementDma::new(ArrayTiming::new(&MemTech::ESram.technology(), FABRIC_HZ, 4));
+        let e = ElementDma::new(ArrayTiming::new(&esram(), FABRIC_HZ, 4));
         let c = e.access(&d, 64);
         assert!((c.dram_cycles - d.random_access_cycles(64)).abs() < 1e-12);
         assert_eq!(c.buffer_words, 32);
@@ -61,8 +63,8 @@ mod tests {
     #[test]
     fn technology_changes_buffer_not_dram() {
         let d = DramConfig::default();
-        let ee = ElementDma::new(ArrayTiming::new(&MemTech::ESram.technology(), FABRIC_HZ, 4));
-        let eo = ElementDma::new(ArrayTiming::new(&MemTech::OSram.technology(), FABRIC_HZ, 1));
+        let ee = ElementDma::new(ArrayTiming::new(&esram(), FABRIC_HZ, 4));
+        let eo = ElementDma::new(ArrayTiming::new(&osram(), FABRIC_HZ, 1));
         let ce = ee.access(&d, 64);
         let co = eo.access(&d, 64);
         assert_eq!(ce.dram_cycles, co.dram_cycles); // DRAM identical

@@ -64,17 +64,19 @@ impl StreamDma {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::tech::{MemTech, FABRIC_HZ};
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::{MemTechnology, FABRIC_HZ};
 
-    fn dma(tech: MemTech, banks: usize) -> StreamDma {
-        let t = ArrayTiming::new(&tech.technology(), FABRIC_HZ, banks);
+    fn dma(tech: &MemTechnology, banks: usize) -> StreamDma {
+        let t = ArrayTiming::new(tech, FABRIC_HZ, banks);
         StreamDma::new(t, 64 * 1024)
     }
 
     #[test]
     fn esram_buffer_throttles_ddr4_slightly() {
         let d = DramConfig::default();
-        let s = dma(MemTech::ESram, 4);
+        let s = dma(&esram(), 4);
         let eff = s.effective_bytes_per_cycle(&d);
         // 8 words × 4 B = 32 B/cycle < 32.64 B/cycle DRAM
         assert!((eff - 32.0).abs() < 1e-9, "eff={eff}");
@@ -84,7 +86,7 @@ mod tests {
     #[test]
     fn osram_buffer_never_the_limit() {
         let d = DramConfig::default();
-        let s = dma(MemTech::OSram, 1);
+        let s = dma(&osram(), 1);
         let eff = s.effective_bytes_per_cycle(&d);
         assert!((eff - d.stream_bytes_per_cycle()).abs() < 1e-9);
     }
@@ -92,7 +94,7 @@ mod tests {
     #[test]
     fn charge_accounts_dram_buffer_and_energy_words() {
         let d = DramConfig::default();
-        let s = dma(MemTech::OSram, 1);
+        let s = dma(&osram(), 1);
         let c = s.stream(&d, 64 * 1024);
         assert!((c.dram_cycles - d.stream_cycles(64 * 1024)).abs() < 1e-9);
         assert_eq!(c.buffer_words, 2 * 16 * 1024);
@@ -104,7 +106,7 @@ mod tests {
     #[test]
     fn zero_and_odd_sizes() {
         let d = DramConfig::default();
-        let s = dma(MemTech::ESram, 4);
+        let s = dma(&esram(), 4);
         let c0 = s.stream(&d, 0);
         assert_eq!(c0.buffer_words, 0);
         assert_eq!(c0.dram_cycles, 0.0);

@@ -21,7 +21,6 @@
 
 use crate::accel::config::AcceleratorConfig;
 use crate::accel::design::OnChipBudget;
-use crate::mem::tech::MemTech;
 use crate::sim::result::{ModeReport, SimReport};
 
 /// Energy breakdown of one run, in joules.
@@ -57,9 +56,12 @@ impl EnergyModel {
         EnergyModel { cfg: cfg.clone(), s_total_bits: budget.total_bits() }
     }
 
-    /// Energy of one simulated mode.
+    /// Energy of one simulated mode. The Table III constants come from
+    /// the resolved technology carried by the report itself, so any
+    /// registry entry — builtin, config-file or programmatic — prices
+    /// identically through Eq. 2–3.
     pub fn mode_energy(&self, report: &ModeReport) -> EnergyBreakdown {
-        let tech = report.tech.technology();
+        let tech = &report.tech;
         let t_s = report.runtime_s();
         let cycles = report.runtime_cycles();
 
@@ -102,20 +104,18 @@ impl EnergyModel {
     }
 }
 
-/// Fig. 8's metric: `E(E-SRAM run) / E(O-SRAM run)`.
-pub fn energy_savings(
-    model: &EnergyModel,
-    esram_run: &SimReport,
-    osram_run: &SimReport,
-) -> f64 {
-    assert_eq!(esram_run.tech, MemTech::ESram);
-    assert_eq!(osram_run.tech, MemTech::OSram);
-    model.run_energy(esram_run).total_j() / model.run_energy(osram_run).total_j()
+/// Fig. 8's metric generalized to any technology pair:
+/// `E(baseline run) / E(candidate run)` — above 1.0 the candidate saves
+/// energy. With `base` on E-SRAM and `other` on O-SRAM this is exactly
+/// the paper's number.
+pub fn energy_ratio(model: &EnergyModel, base: &SimReport, other: &SimReport) -> f64 {
+    model.run_energy(base).total_j() / model.run_energy(other).total_j()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::registry::tech;
     use crate::sim::engine::{simulate_all_modes, simulate_mode};
     use crate::tensor::gen::{self, TensorSpec};
 
@@ -128,7 +128,7 @@ mod tests {
         let t = gen::random(&[100, 100, 100], 20_000, 1);
         let cfg = cfg();
         let m = EnergyModel::new(&cfg);
-        let r = simulate_mode(&t, 0, &cfg, MemTech::ESram);
+        let r = simulate_mode(&t, 0, &cfg, &tech("e-sram"));
         let e = m.mode_energy(&r);
         assert!(e.compute_j > 0.0);
         assert!(e.dram_j > 0.0);
@@ -142,9 +142,9 @@ mod tests {
         let t = TensorSpec::custom("hot", vec![48, 48, 48], 50_000, 1.0).generate(2);
         let cfg = cfg();
         let m = EnergyModel::new(&cfg);
-        let re = simulate_all_modes(&t, &cfg, MemTech::ESram);
-        let ro = simulate_all_modes(&t, &cfg, MemTech::OSram);
-        let savings = energy_savings(&m, &re, &ro);
+        let re = simulate_all_modes(&t, &cfg, &tech("e-sram"));
+        let ro = simulate_all_modes(&t, &cfg, &tech("o-sram"));
+        let savings = energy_ratio(&m, &re, &ro);
         assert!(savings > 2.0, "hot-workload savings {savings}");
         assert!(savings < 20.0, "savings {savings} implausibly high");
     }
@@ -155,9 +155,9 @@ mod tests {
             TensorSpec::custom("cold", vec![900_000, 800_000, 900_000], 50_000, 0.05).generate(2);
         let cfg = cfg();
         let m = EnergyModel::new(&cfg);
-        let re = simulate_all_modes(&t, &cfg, MemTech::ESram);
-        let ro = simulate_all_modes(&t, &cfg, MemTech::OSram);
-        let savings = energy_savings(&m, &re, &ro);
+        let re = simulate_all_modes(&t, &cfg, &tech("e-sram"));
+        let ro = simulate_all_modes(&t, &cfg, &tech("o-sram"));
+        let savings = energy_ratio(&m, &re, &ro);
         assert!(savings > 1.0, "cold savings {savings}");
     }
 
@@ -168,7 +168,7 @@ mod tests {
         let t = TensorSpec::custom("hot", vec![48, 48, 48], 50_000, 1.0).generate(3);
         let cfg = cfg();
         let m = EnergyModel::new(&cfg);
-        let r = simulate_mode(&t, 0, &cfg, MemTech::ESram);
+        let r = simulate_mode(&t, 0, &cfg, &tech("e-sram"));
         let e = m.mode_energy(&r);
         assert!(e.switching_j > e.dram_j);
         assert!(e.switching_j > e.static_j);
@@ -179,10 +179,10 @@ mod tests {
         let t = gen::random(&[64, 64, 64], 10_000, 5);
         let cfg = cfg();
         let m = EnergyModel::new(&cfg);
-        let r = simulate_mode(&t, 0, &cfg, MemTech::OSram);
+        let r = simulate_mode(&t, 0, &cfg, &tech("o-sram"));
         let e = m.mode_energy(&r);
-        let tech = MemTech::OSram.technology();
-        let expect = tech.static_pj_per_cycle(m.s_total_bits) * r.runtime_cycles() * 1e-12;
+        let t = tech("o-sram");
+        let expect = t.static_pj_per_cycle(m.s_total_bits) * r.runtime_cycles() * 1e-12;
         assert!((e.static_j - expect).abs() / expect < 1e-12);
     }
 
@@ -192,8 +192,8 @@ mod tests {
         let m = EnergyModel::new(&cfg);
         let t1 = gen::random(&[128, 128, 128], 10_000, 9);
         let t2 = gen::random(&[128, 128, 128], 40_000, 9);
-        let e1 = m.mode_energy(&simulate_mode(&t1, 0, &cfg, MemTech::ESram));
-        let e2 = m.mode_energy(&simulate_mode(&t2, 0, &cfg, MemTech::ESram));
+        let e1 = m.mode_energy(&simulate_mode(&t1, 0, &cfg, &tech("e-sram")));
+        let e2 = m.mode_energy(&simulate_mode(&t2, 0, &cfg, &tech("e-sram")));
         assert!(e2.total_j() > e1.total_j());
     }
 }

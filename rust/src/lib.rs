@@ -1,15 +1,40 @@
 //! # photon-mttkrp
 //!
 //! Reproduction of *"Performance Modeling Sparse MTTKRP Using Optical Static
-//! Random Access Memory on FPGA"* (Wijeratne et al., 2022).
+//! Random Access Memory on FPGA"* (Wijeratne et al., 2022) — grown into a
+//! multi-technology design-space exploration engine.
 //!
 //! The crate models a wafer-scale FPGA whose on-chip electrical SRAM
-//! (BRAM/URAM) has been replaced by optical SRAM (O-SRAM: 20 GHz, 5 WDM
-//! wavelengths, 200 concurrent 32-bit ports per 32 Kb block) and simulates a
-//! sparse-MTTKRP accelerator (4 PEs × 80 parallel rank-R pipelines, a
-//! 3-cache subsystem, stream/element DMAs, DDR4 external memory) on both
-//! memory technologies, reproducing the paper's speedup (Fig. 7), energy
-//! (Fig. 8, Table III) and area (Table IV) results.
+//! (BRAM/URAM) has been replaced by an alternative memory technology and
+//! simulates a sparse-MTTKRP accelerator (4 PEs × 80 parallel rank-R
+//! pipelines, a 3-cache subsystem, stream/element DMAs, DDR4 external
+//! memory) on each of them, reproducing the paper's speedup (Fig. 7),
+//! energy (Fig. 8, Table III) and area (Table IV) results for the
+//! `e-sram`/`o-sram` pair.
+//!
+//! ## The technology registry
+//!
+//! Memory technologies are open, not a closed enum: every layer resolves a
+//! [`mem::tech::MemTechnology`] parameter set by name through
+//! [`mem::registry`]. Builtins:
+//!
+//! | name         | device                                                  |
+//! |--------------|---------------------------------------------------------|
+//! | `e-sram`     | electrical BRAM-class SRAM — the paper's baseline       |
+//! | `o-sram`     | optical SRAM of [14]: 20 GHz, 5λ WDM, 200 ports/block   |
+//! | `o-sram-imc` | photonic in-memory-computing SRAM (arXiv 2503.18206)    |
+//! | `e-uram`     | URAM288-class electrical SRAM: denser, still port-bound |
+//!
+//! `[tech.<name>]` sections in a config file register further entries
+//! (see [`mem::registry::TechRegistry::load_config`]), and code can
+//! register any [`mem::registry::TechSpec`] implementation.
+//!
+//! ## The sweep engine
+//!
+//! [`sim::sweep`] fans the cartesian product of
+//! {tensor × mode × technology × scale} across OS threads with
+//! deterministic result ordering — the `photon-mttkrp sweep` subcommand
+//! and the `design_space` example are its front-ends.
 //!
 //! ## Layering
 //!
@@ -19,6 +44,7 @@
 //!   graph wrapping a Pallas kernel, AOT-lowered to HLO text.
 //! * **[`runtime`]** — loads `artifacts/*.hlo.txt` via the PJRT C API and
 //!   executes them from the Rust hot path; python never runs at runtime.
+//!   (Built as a stub unless the `photon_pjrt` cfg enables the XLA bindings.)
 //!
 //! ## Quick start
 //!
@@ -27,9 +53,18 @@
 //!
 //! let tensor = frostt::preset(FrosttTensor::Nell2).scaled(1.0 / 256.0).generate(42);
 //! let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 256.0);
-//! let e = simulate_mode(&tensor, 0, &cfg, MemTech::ESram);
-//! let o = simulate_mode(&tensor, 0, &cfg, MemTech::OSram);
+//! let e = simulate_mode(&tensor, 0, &cfg, &tech("e-sram"));
+//! let o = simulate_mode(&tensor, 0, &cfg, &tech("o-sram"));
 //! println!("mode-0 speedup: {:.2}x", e.runtime_s() / o.runtime_s());
+//!
+//! // any registered technology sweeps the same way:
+//! let spec = SweepSpec::new(
+//!     vec![frostt::preset(FrosttTensor::Nell2)],
+//!     vec![1.0 / 256.0],
+//!     registry::all(),
+//! );
+//! let points = run_sweep(&spec).unwrap();
+//! println!("{} scenarios", points.len());
 //! ```
 
 pub mod accel;
@@ -55,13 +90,16 @@ pub mod prelude {
     pub use crate::area::model::AreaModel;
     pub use crate::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
     pub use crate::coordinator::driver::{
-        compare_technologies, simulate_all_modes, simulate_mode, Compute,
+        compare_all_registered, compare_paper_pair, compare_technologies, simulate_all_modes,
+        simulate_mode, Compute, TechComparison, TechRun,
     };
     pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
-    pub use crate::mem::tech::MemTech;
+    pub use crate::mem::registry::{self, tech, TechRegistry, TechSpec};
+    pub use crate::mem::tech::MemTechnology;
     pub use crate::mttkrp::reference::FactorMatrix;
     pub use crate::runtime::client::Runtime;
     pub use crate::sim::result::{ModeReport, SimReport};
+    pub use crate::sim::sweep::{run_sweep, summary_table, SweepPoint, SweepSpec};
     pub use crate::tensor::coo::SparseTensor;
     pub use crate::tensor::gen as frostt;
     pub use crate::tensor::gen::{FrosttTensor, TensorSpec};

@@ -1,40 +1,64 @@
-//! `photon-mttkrp` — CLI for the O-SRAM spMTTKRP performance model.
+//! `photon-mttkrp` — CLI for the multi-technology spMTTKRP performance
+//! model.
 //!
 //! ```text
-//! photon-mttkrp info [--tensors]          platform + Table I/II echo
-//! photon-mttkrp simulate --tensor nell-2 [--scale S] [--tech both] [--mode M]
+//! photon-mttkrp info [--tensors]          platform + Table I/III/IV echo + registry
+//! photon-mttkrp simulate --tensor nell-2 [--scale S] [--tech both|all|<name>] [--mode M]
+//! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--threads T]
 //! photon-mttkrp reproduce [--scale S]     all paper tables + figures
 //! photon-mttkrp cpals [--rank R] [--iters N] [--artifacts]
 //! photon-mttkrp mttkrp <file.tns> [--mode M] [--artifacts]
 //! ```
+//!
+//! `--tech` accepts any name registered in the technology registry
+//! (builtin: `e-sram`, `o-sram`, `o-sram-imc`, `e-uram`; config files add
+//! more via `[tech.<name>]` sections).
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
-use photon_mttkrp::coordinator::driver::{compare_technologies, simulate_mode, Compute};
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::coordinator::driver::{
+    compare_all_registered, compare_paper_pair, simulate_mode, Compute,
+};
+use photon_mttkrp::mem::registry;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::runtime::client::Runtime;
+use photon_mttkrp::sim::sweep::{self, SweepSpec};
 use photon_mttkrp::tensor::coo::SparseTensor;
 use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
 use photon_mttkrp::util::cli::{CliError, Command, Parsed};
 use photon_mttkrp::util::configfile::Config;
 
 fn cli() -> Command {
-    Command::new("photon-mttkrp", "O-SRAM vs E-SRAM spMTTKRP performance model")
+    Command::new("photon-mttkrp", "multi-technology spMTTKRP performance model")
         .subcommand(
-            Command::new("info", "show platform, Table I config and the tensor suite")
+            Command::new("info", "show platform, Table I config, tensors and the tech registry")
                 .flag("tensors", 't', "also print Table II")
                 .opt("config", "FILE", "accelerator config file (TOML subset)", None),
         )
         .subcommand(
-            Command::new("simulate", "simulate one tensor on one or both technologies")
+            Command::new("simulate", "simulate one tensor on one, both or all technologies")
                 .opt("tensor", "NAME", "FROSTT preset name (e.g. nell-2)", Some("nell-2"))
                 .opt("scale", "S", "workload scale factor", Some("0.001"))
                 .opt("seed", "N", "generator seed", Some("42"))
                 .opt("mode", "M", "single output mode (default: all)", None)
-                .opt("tech", "T", "e-sram | o-sram | both", Some("both"))
+                .opt(
+                    "tech",
+                    "T",
+                    "both | all | any registered technology name",
+                    Some("both"),
+                )
                 .opt("config", "FILE", "accelerator config file", None),
+        )
+        .subcommand(
+            Command::new("sweep", "parallel {tensor x mode x tech x scale} design-space sweep")
+                .opt_repeated("tensor", "NAME", "FROSTT preset (repeatable; default: nell-2 nell-1 patents)")
+                .opt_repeated("tech", "T", "technology name or `all` (repeatable; default: all)")
+                .opt_repeated("scale", "S", "workload scale (repeatable; default: 0.001)")
+                .opt_repeated("mode", "M", "output mode (repeatable; default: every mode)")
+                .opt("seed", "N", "generator seed", Some("42"))
+                .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
+                .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
             Command::new("reproduce", "regenerate every paper table and figure")
@@ -60,13 +84,29 @@ fn cli() -> Command {
         )
 }
 
+/// Load `--config`: accelerator overrides + `[tech.*]` registry entries.
 fn load_config(p: &Parsed) -> Result<AcceleratorConfig, String> {
     let mut cfg = AcceleratorConfig::paper_default();
     if let Some(path) = p.get("config") {
         let file = Config::load(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+        let added = registry::load_config(&file)?;
+        if !added.is_empty() {
+            eprintln!("registered technologies from {path}: {}", added.join(", "));
+        }
         cfg.apply_config(&file)?;
     }
     Ok(cfg)
+}
+
+fn parse_f64_list(p: &Parsed, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+    let given = p.get_all(name);
+    if given.is_empty() {
+        return Ok(default.to_vec());
+    }
+    given
+        .iter()
+        .map(|s| s.parse::<f64>().map_err(|e| format!("--{name} `{s}`: {e}")))
+        .collect()
 }
 
 fn run() -> Result<(), String> {
@@ -82,6 +122,10 @@ fn run() -> Result<(), String> {
             println!("{}", paper::table_i(&cfg).render_ascii());
             println!("{}", paper::table_iii().render_ascii());
             println!("{}", paper::table_iv(&cfg).render_ascii());
+            println!(
+                "{}",
+                paper::table_technologies(&registry::global().read().unwrap()).render_ascii()
+            );
             if p.flag("tensors") {
                 println!("{}", paper::table_ii(1.0).render_ascii());
             }
@@ -96,35 +140,57 @@ fn run() -> Result<(), String> {
             let cfg = cfg_base.scaled(scale);
             let tensor = preset(ft).scaled(scale).generate(seed);
             eprintln!("generated {} ({} nnz)", tensor.name, tensor.nnz());
-            match p.get("tech").unwrap() {
+            let tech_arg = p.get("tech").unwrap();
+            if matches!(tech_arg, "both" | "all") && p.get("mode").is_some() {
+                return Err(format!(
+                    "--mode needs a single technology (use `--tech <name> --mode M`, \
+                     or the sweep subcommand's --mode filter); got --tech {tech_arg}"
+                ));
+            }
+            match tech_arg {
                 "both" => {
-                    let c = compare_technologies(&tensor, &cfg);
-                    for (m, s) in c.mode_speedups().iter().enumerate() {
+                    let c = compare_paper_pair(&tensor, &cfg);
+                    let e = &c.require("e-sram").report;
+                    let o = &c.require("o-sram").report;
+                    for (m, s) in c.mode_speedups("o-sram").iter().enumerate() {
                         println!(
                             "M{m}: e-sram {:.3e}s  o-sram {:.3e}s  speedup {s:.2}x  (hit {:.1}% / bottleneck {})",
-                            c.esram.modes[m].runtime_s(),
-                            c.osram.modes[m].runtime_s(),
-                            c.osram.modes[m].hit_rate() * 100.0,
-                            c.esram.modes[m].bottleneck().name(),
+                            e.modes[m].runtime_s(),
+                            o.modes[m].runtime_s(),
+                            o.modes[m].hit_rate() * 100.0,
+                            e.modes[m].bottleneck().name(),
                         );
                     }
                     println!(
                         "total: speedup {:.2}x  energy savings {:.2}x",
-                        c.total_speedup(),
-                        c.energy_savings()
+                        c.total_speedup("o-sram"),
+                        c.energy_savings("o-sram")
                     );
                 }
-                t @ ("e-sram" | "o-sram") => {
-                    let tech = if t == "e-sram" { MemTech::ESram } else { MemTech::OSram };
+                "all" => {
+                    let c = compare_all_registered(&tensor, &cfg);
+                    let base = c.baseline().name().to_string();
+                    for run in &c.runs {
+                        println!(
+                            "{:<12} total {:.3e}s  speedup vs {base} {:.2}x  energy savings {:.2}x",
+                            run.name(),
+                            run.report.total_runtime_s(),
+                            c.total_speedup(run.name()),
+                            c.energy_savings(run.name()),
+                        );
+                    }
+                }
+                t => {
+                    let tech = registry::resolve(t)?;
                     let modes: Vec<usize> = match p.get("mode") {
                         Some(m) => vec![m.parse().map_err(|e| format!("--mode: {e}"))?],
                         None => (0..tensor.n_modes()).collect(),
                     };
                     for m in modes {
-                        let r = simulate_mode(&tensor, m, &cfg, tech);
+                        let r = simulate_mode(&tensor, m, &cfg, &tech);
                         println!(
                             "M{m} [{}]: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
-                            tech.name(),
+                            tech.name,
                             r.runtime_s(),
                             r.runtime_cycles(),
                             r.hit_rate() * 100.0,
@@ -132,8 +198,83 @@ fn run() -> Result<(), String> {
                         );
                     }
                 }
-                other => return Err(format!("unknown tech `{other}`")),
             }
+        }
+        "sweep" => {
+            let cfg_base = load_config(&p)?;
+            let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
+            let threads = p.get_usize("threads").map_err(|e| e.to_string())?;
+            let scales = parse_f64_list(&p, "scale", &[0.001])?;
+            let tensor_names: Vec<String> = {
+                let given = p.get_all("tensor");
+                if given.is_empty() {
+                    vec!["nell-2".into(), "nell-1".into(), "patents".into()]
+                } else {
+                    given.iter().map(|s| s.to_string()).collect()
+                }
+            };
+            let tensors = tensor_names
+                .iter()
+                .map(|n| {
+                    FrosttTensor::from_name(n)
+                        .map(preset)
+                        .ok_or_else(|| format!("unknown tensor `{n}`"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let tech_names: Vec<String> = {
+                let given = p.get_all("tech");
+                if given.contains(&"all") {
+                    if given.len() > 1 {
+                        return Err(
+                            "--tech all already selects every registered technology; \
+                             drop the other --tech values"
+                                .into(),
+                        );
+                    }
+                    registry::names()
+                } else if given.is_empty() {
+                    registry::names()
+                } else {
+                    given.iter().map(|s| s.to_string()).collect()
+                }
+            };
+            let techs = tech_names
+                .iter()
+                .map(|n| registry::resolve(n))
+                .collect::<Result<Vec<_>, _>>()?;
+            let modes: Vec<usize> = p
+                .get_all("mode")
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(|e| format!("--mode `{s}`: {e}")))
+                .collect::<Result<Vec<_>, _>>()?;
+            let mut spec = SweepSpec::new(tensors, scales, techs);
+            spec.base_cfg = cfg_base;
+            spec.seed = seed;
+            spec.threads = threads;
+            if !modes.is_empty() {
+                spec.modes = Some(modes);
+            }
+            let n_threads = sweep::effective_threads(spec.threads);
+            eprintln!(
+                "sweeping {} scenarios ({} tensors x {} scales x {} techs) on {} threads ...",
+                spec.n_points(),
+                spec.tensors.len(),
+                spec.scales.len(),
+                spec.techs.len(),
+                n_threads,
+            );
+            let t0 = std::time::Instant::now();
+            let points = sweep::run_sweep(&spec)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{}", sweep::summary_table(&spec, &points).render_ascii());
+            let sim_nnz: u64 = points.iter().map(|p| p.nnz).sum();
+            eprintln!(
+                "swept {} scenarios ({} simulated nonzero-events) in {:.2}s on {} threads",
+                points.len(),
+                sim_nnz,
+                dt,
+                n_threads,
+            );
         }
         "reproduce" => {
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;

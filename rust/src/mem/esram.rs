@@ -41,7 +41,7 @@ pub const ESRAM_ACCESS_LATENCY_CYCLES: u32 = 1;
 /// The E-SRAM `MemTechnology` parameter set.
 pub fn esram() -> MemTechnology {
     MemTechnology {
-        name: "e-sram",
+        name: "e-sram".to_string(),
         freq_hz: ESRAM_FREQ_HZ,
         wavelengths: ESRAM_WAVELENGTHS,
         lanes_per_core_cycle: ESRAM_PORTS,

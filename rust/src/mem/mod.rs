@@ -1,11 +1,18 @@
-//! Memory technology models (paper §II–III).
+//! Memory technology models (paper §II–III) and the open registry.
 //!
-//! * [`tech`] — the [`tech::MemTechnology`] device model shared by both
-//!   SRAM variants: frequency, WDM wavelengths, ports, Eq. 1 bandwidth,
+//! * [`tech`] — the [`tech::MemTechnology`] device model shared by every
+//!   SRAM variant: frequency, WDM wavelengths, ports, Eq. 1 bandwidth,
 //!   Table III per-bit energies, Table IV per-bit area.
+//! * [`registry`] — the name → parameter-set registry every consumer
+//!   layer resolves technologies through (builtins + config-file-defined
+//!   + programmatic [`registry::TechSpec`] entries).
 //! * [`esram`] — electrical SRAM (Xilinx BRAM/URAM-class) parameters.
 //! * [`osram`] — optical SRAM parameters ([14]'s device: 20 GHz, λ = 5,
 //!   200 × 32-bit concurrent ports per 32 Kb block).
+//! * [`posram`] — photonic in-memory-computing SRAM (`o-sram-imc`),
+//!   modeled after arXiv 2503.18206.
+//! * [`uram`] — URAM288-class electrical SRAM (`e-uram`): denser, deeper,
+//!   still port-limited.
 //! * [`dram`] — the DDR4 external-memory channel model (§III-A "inputs
 //!   initially reside in the FPGA external memory").
 //! * [`sync`] — the synchronization interface between the 500 MHz
@@ -14,5 +21,8 @@
 pub mod dram;
 pub mod esram;
 pub mod osram;
+pub mod posram;
+pub mod registry;
 pub mod sync;
 pub mod tech;
+pub mod uram;

@@ -51,7 +51,7 @@ pub const OSRAM_ACCESS_LATENCY_CYCLES: u32 = 2;
 /// The O-SRAM `MemTechnology` parameter set.
 pub fn osram() -> MemTechnology {
     MemTechnology {
-        name: "o-sram",
+        name: "o-sram".to_string(),
         freq_hz: OSRAM_FREQ_HZ,
         wavelengths: OSRAM_WAVELENGTHS,
         lanes_per_core_cycle: OSRAM_WAVELENGTHS,

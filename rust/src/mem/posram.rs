@@ -1,0 +1,115 @@
+//! Photonic in-memory-computing SRAM (`o-sram-imc`) device parameters.
+//!
+//! Models the pSRAM-based in-memory-computing array of the follow-up work
+//! *Predictive Performance of Photonic SRAM-based In-Memory Computing for
+//! Tensor Decomposition* (arXiv 2503.18206): the same microring-resonator
+//! bistable cell as the O-SRAM of [14], but with the multiply-accumulate
+//! moved into the optical domain so an access avoids one full
+//! optical→electrical conversion per operand. Modeled consequences:
+//!
+//! * wider WDM comb (8 wavelengths vs the O-SRAM's 5) — the IMC array is
+//!   laid out for operand broadcast, which amortizes the comb laser;
+//! * lower switching energy (0.62 pJ/bit vs 1.04): the dominant Eq. 3
+//!   conversion term shrinks because partial products stay optical;
+//! * higher static power (5.21e-6 pJ/bit/cycle): the always-on comb laser
+//!   and bias of the in-array modulators leak more than plain storage;
+//! * larger bit cell (~1.3× the O-SRAM footprint): the per-column
+//!   photonic MAC periphery is area the plain array does not pay.
+//!
+//! These are *derived estimates* anchored on the published O-SRAM numbers,
+//! not digitized values from 2503.18206 — the registry keeps them in one
+//! place so refinement touches only this file.
+
+use crate::mem::osram::{
+    OSRAM_AREA_UM2_PER_BIT, OSRAM_BLOCK_BITS, OSRAM_DATA_LINES, OSRAM_FREQ_HZ, OSRAM_PORT_WIDTH,
+};
+use crate::mem::tech::MemTechnology;
+
+/// Same 20 GHz optical core clock as the base O-SRAM device.
+pub const OSRAM_IMC_FREQ_HZ: f64 = OSRAM_FREQ_HZ;
+/// Wider WDM comb: 8 wavelengths for operand broadcast.
+pub const OSRAM_IMC_WAVELENGTHS: u32 = 8;
+/// Parallel ports per block: λ × f_opt / f_elec = 8 × 40 = 320 (the Eq. 1
+/// relation is asserted in the tests below).
+pub const OSRAM_IMC_PORTS: u32 = 320;
+
+/// Static power: comb laser + in-array modulator bias on top of the
+/// O-SRAM's 4.17e-6 pJ/bit/cycle.
+pub const OSRAM_IMC_STATIC_PJ_PER_BIT_CYCLE: f64 = 5.21e-6;
+/// Switching energy per bit, with the Eq. 3 conversion term reduced —
+/// partial products stay in the optical domain.
+pub const OSRAM_IMC_CONVERSION_PJ_PER_BIT: f64 = 0.48;
+pub const OSRAM_IMC_STORAGE_PJ_PER_BIT: f64 = 0.14;
+pub const OSRAM_IMC_SWITCHING_PJ_PER_BIT: f64 =
+    OSRAM_IMC_CONVERSION_PJ_PER_BIT + OSRAM_IMC_STORAGE_PJ_PER_BIT;
+
+/// Bit-cell + MAC periphery area: ~1.3× the plain O-SRAM cell.
+pub const OSRAM_IMC_AREA_UM2_PER_BIT: f64 = OSRAM_AREA_UM2_PER_BIT * 1.3;
+
+/// One extra core cycle over the O-SRAM's 2: the in-array MAC stage.
+pub const OSRAM_IMC_ACCESS_LATENCY_CYCLES: u32 = 3;
+
+/// The photonic-IMC `MemTechnology` parameter set.
+pub fn osram_imc() -> MemTechnology {
+    MemTechnology {
+        name: "o-sram-imc".to_string(),
+        freq_hz: OSRAM_IMC_FREQ_HZ,
+        wavelengths: OSRAM_IMC_WAVELENGTHS,
+        lanes_per_core_cycle: OSRAM_IMC_WAVELENGTHS,
+        port_width_bits: OSRAM_PORT_WIDTH,
+        ports_per_block: OSRAM_IMC_PORTS,
+        block_bits: OSRAM_BLOCK_BITS,
+        data_lines: OSRAM_DATA_LINES,
+        access_latency_cycles: OSRAM_IMC_ACCESS_LATENCY_CYCLES,
+        static_pj_per_bit_cycle: OSRAM_IMC_STATIC_PJ_PER_BIT_CYCLE,
+        switching_pj_per_bit: OSRAM_IMC_SWITCHING_PJ_PER_BIT,
+        conversion_pj_per_bit: OSRAM_IMC_CONVERSION_PJ_PER_BIT,
+        storage_pj_per_bit: OSRAM_IMC_STORAGE_PJ_PER_BIT,
+        area_um2_per_bit: OSRAM_IMC_AREA_UM2_PER_BIT,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
+
+    #[test]
+    fn ports_follow_eq1() {
+        assert_eq!(OSRAM_IMC_PORTS, 320);
+        let t = osram_imc();
+        assert_eq!(
+            t.ports_per_block as f64,
+            t.lanes_per_core_cycle as f64 * t.freq_hz / FABRIC_HZ
+        );
+    }
+
+    #[test]
+    fn imc_trades_static_for_switching() {
+        let imc = osram_imc();
+        let o = osram();
+        assert!(imc.switching_pj_per_bit < o.switching_pj_per_bit);
+        assert!(imc.static_pj_per_bit_cycle > o.static_pj_per_bit_cycle);
+        assert!(imc.area_um2_per_bit > o.area_um2_per_bit);
+    }
+
+    #[test]
+    fn eq3_decomposition_sums() {
+        let t = osram_imc();
+        assert!(
+            (t.conversion_pj_per_bit + t.storage_pj_per_bit - t.switching_pj_per_bit).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn higher_bandwidth_than_base_osram() {
+        let imc = osram_imc();
+        let o = osram();
+        assert!(
+            imc.words_per_fabric_cycle(FABRIC_HZ) > o.words_per_fabric_cycle(FABRIC_HZ),
+            "8λ must out-deliver 5λ"
+        );
+        assert!(imc.is_fast_array(FABRIC_HZ));
+    }
+}

@@ -1,0 +1,697 @@
+//! The open memory-technology registry.
+//!
+//! The paper compares exactly two technologies; the model does not. Every
+//! consumer layer (simulator, energy, area, reports, CLI) resolves a
+//! [`MemTechnology`] parameter set *by name* through this registry, so a
+//! new device — the photonic-IMC array of arXiv 2503.18206, a
+//! config-file-defined what-if point, a programmatically registered
+//! variant — plugs in without touching any of those layers.
+//!
+//! Three registration paths:
+//!
+//! 1. **Builtins** — `e-sram`, `o-sram` (the paper's pair, parameter-exact),
+//!    `o-sram-imc` (photonic IMC) and `e-uram` (URAM-class electrical).
+//! 2. **Config files** — `[tech.<name>]` sections in the TOML-subset config
+//!    (see [`TechRegistry::load_config`]); every numeric field can be set,
+//!    optionally starting from a registered `base` technology.
+//! 3. **Code** — anything implementing [`TechSpec`] via
+//!    [`TechRegistry::register`] / the global [`register`].
+//!
+//! A process-wide registry ([`global`]) seeded with the builtins backs the
+//! CLI and the convenience [`tech`]/[`resolve`] lookups; library users who
+//! need isolation build their own [`TechRegistry`] value.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::mem::tech::MemTechnology;
+use crate::util::configfile::Config;
+
+/// A named source of one memory-technology parameter set.
+///
+/// Implementors are usually static parameter tables, but the trait allows
+/// computed specs (e.g. a λ-scaled variant derived from another entry).
+pub trait TechSpec: Send + Sync {
+    /// Registry key (e.g. `o-sram-imc`). Must be stable and unique.
+    fn name(&self) -> &str;
+    /// One-line human description for listings.
+    fn summary(&self) -> &str;
+    /// Materialize the parameter set. `technology().name` must equal
+    /// [`name`](Self::name).
+    fn technology(&self) -> MemTechnology;
+}
+
+/// A [`TechSpec`] that wraps a fixed parameter set (builtins, config-file
+/// technologies).
+pub struct StaticTech {
+    summary: String,
+    tech: MemTechnology,
+}
+
+impl StaticTech {
+    pub fn new(summary: impl Into<String>, tech: MemTechnology) -> Self {
+        StaticTech { summary: summary.into(), tech }
+    }
+}
+
+impl TechSpec for StaticTech {
+    fn name(&self) -> &str {
+        &self.tech.name
+    }
+    fn summary(&self) -> &str {
+        &self.summary
+    }
+    fn technology(&self) -> MemTechnology {
+        self.tech.clone()
+    }
+}
+
+/// An ordered, name-unique collection of technology specs.
+pub struct TechRegistry {
+    entries: Vec<Arc<dyn TechSpec>>,
+}
+
+impl TechRegistry {
+    /// An empty registry (no builtins).
+    pub fn empty() -> Self {
+        TechRegistry { entries: Vec::new() }
+    }
+
+    /// The registry every consumer starts from: the paper's pair plus the
+    /// follow-up design points.
+    pub fn builtin() -> Self {
+        let mut r = TechRegistry::empty();
+        r.register(Arc::new(StaticTech::new(
+            "electrical BRAM-class SRAM, the paper's baseline (§V-A3)",
+            crate::mem::esram::esram(),
+        )))
+        .expect("builtin");
+        r.register(Arc::new(StaticTech::new(
+            "optical SRAM of [14]: 20 GHz, 5λ WDM, 200 ports/block (§II–III)",
+            crate::mem::osram::osram(),
+        )))
+        .expect("builtin");
+        r.register(Arc::new(StaticTech::new(
+            "photonic in-memory-computing SRAM (modeled after arXiv 2503.18206)",
+            crate::mem::posram::osram_imc(),
+        )))
+        .expect("builtin");
+        r.register(Arc::new(StaticTech::new(
+            "electrical URAM288-class SRAM: denser, deeper, port-limited",
+            crate::mem::uram::uram(),
+        )))
+        .expect("builtin");
+        r
+    }
+
+    /// Register a spec. Fails on a duplicate name so typos surface loudly.
+    pub fn register(&mut self, spec: Arc<dyn TechSpec>) -> Result<(), String> {
+        let name = spec.name().to_string();
+        if name.is_empty() {
+            return Err("technology name must be non-empty".into());
+        }
+        if self.entries.iter().any(|e| e.name() == name) {
+            return Err(format!("technology `{name}` is already registered"));
+        }
+        self.entries.push(spec);
+        Ok(())
+    }
+
+    /// Resolve a technology by name.
+    pub fn resolve(&self, name: &str) -> Result<MemTechnology, String> {
+        self.entries
+            .iter()
+            .find(|e| e.name() == name)
+            .map(|e| e.technology())
+            .ok_or_else(|| {
+                format!(
+                    "unknown memory technology `{name}` (registered: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Registered names, in registration order (builtins first).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name().to_string()).collect()
+    }
+
+    /// All registered specs, in registration order.
+    pub fn specs(&self) -> &[Arc<dyn TechSpec>] {
+        &self.entries
+    }
+
+    /// Resolve every registered technology, in registration order.
+    pub fn all(&self) -> Vec<MemTechnology> {
+        self.entries.iter().map(|e| e.technology()).collect()
+    }
+
+    /// Register every `[tech.<name>]` section of a parsed config file and
+    /// return the names registered, in registration order (sections may
+    /// `base` on each other in any order; dependencies register first).
+    ///
+    /// ```toml
+    /// [tech.cryo-sram]
+    /// summary = "what-if cryogenic point"
+    /// base = "e-sram"              # optional: start from a registered set
+    /// freq_mhz = 1000.0
+    /// conversion_pj_per_bit = 1.9
+    /// storage_pj_per_bit = 0.4
+    /// area_um2_per_bit = 0.08
+    /// ```
+    ///
+    /// Every [`MemTechnology`] field is settable (`freq_mhz`,
+    /// `wavelengths`, `lanes_per_core_cycle`, `port_width_bits`,
+    /// `ports_per_block`, `block_kbits`, `data_lines`,
+    /// `access_latency_cycles`, `static_pj_per_bit_cycle`,
+    /// `conversion_pj_per_bit`, `storage_pj_per_bit`, `area_um2_per_bit`).
+    /// The Table III switching total is always `conversion + storage`, so
+    /// the Eq. 3 decomposition invariant holds by construction. Without a
+    /// `base`, all fields are required.
+    pub fn load_config(&mut self, cfg: &Config) -> Result<Vec<String>, String> {
+        let mut names: Vec<String> = Vec::new();
+        for key in cfg.keys() {
+            if let Some(rest) = key.strip_prefix("tech.") {
+                if let Some((name, _field)) = rest.split_once('.') {
+                    if name.is_empty() {
+                        return Err(format!("config key `{key}`: empty technology name"));
+                    }
+                    if !names.iter().any(|n| n == name) {
+                        names.push(name.to_string());
+                    }
+                } else {
+                    return Err(format!(
+                        "config key `{key}`: technology fields live under [tech.{rest}]"
+                    ));
+                }
+            }
+        }
+        // Sections may `base` on each other in any order (the key map is
+        // sorted, not file-ordered), so build in dependency order: keep
+        // passing over the pending set until a pass makes no progress.
+        // Everything is staged and only committed to the registry once the
+        // whole file validates — a failing call leaves `self` untouched.
+        let base_of =
+            |name: &str| cfg.get(&format!("tech.{name}.base")).and_then(|v| v.as_str());
+        let mut staged: Vec<StaticTech> = Vec::new();
+        let mut pending = names;
+        while !pending.is_empty() {
+            let mut next_pending = Vec::new();
+            let mut errors: Vec<(String, String)> = Vec::new();
+            for name in &pending {
+                match self.tech_from_config(cfg, name, &staged) {
+                    Ok(spec) => staged.push(spec),
+                    Err(e) => {
+                        errors.push((name.clone(), e));
+                        next_pending.push(name.clone());
+                    }
+                }
+            }
+            if next_pending.len() == pending.len() {
+                // No progress. Report a *root cause*: a section whose
+                // failure is not just "my base is another pending
+                // section" — otherwise a missing-field error in a base
+                // would be masked by its dependents' unknown-base errors.
+                for (name, e) in &errors {
+                    let blocked_on_pending = base_of(name)
+                        .map(|b| pending.iter().any(|p| p == b))
+                        .unwrap_or(false);
+                    if !blocked_on_pending {
+                        return Err(e.clone());
+                    }
+                }
+                return Err(format!(
+                    "[tech.*]: base cycle among sections: {}",
+                    pending.join(", ")
+                ));
+            }
+            pending = next_pending;
+        }
+        // Commit atomically: check every staged name against the registry
+        // before mutating it, so a duplicate cannot leave a partial load.
+        for s in &staged {
+            if self.entries.iter().any(|e| e.name() == s.name()) {
+                return Err(format!(
+                    "[tech.{}]: technology `{}` is already registered",
+                    s.name(),
+                    s.name()
+                ));
+            }
+        }
+        let mut registered = Vec::with_capacity(staged.len());
+        for s in staged {
+            registered.push(s.name().to_string());
+            self.entries.push(Arc::new(s));
+        }
+        Ok(registered)
+    }
+
+    /// Build one `[tech.<name>]` section. `staged` holds sections of the
+    /// same file that already validated this call, so a `base` may name
+    /// either a registered technology or a sibling section.
+    fn tech_from_config(
+        &self,
+        cfg: &Config,
+        name: &str,
+        staged: &[StaticTech],
+    ) -> Result<StaticTech, String> {
+        let prefix = format!("tech.{name}");
+        let known = [
+            "summary",
+            "base",
+            "freq_mhz",
+            "wavelengths",
+            "lanes_per_core_cycle",
+            "port_width_bits",
+            "ports_per_block",
+            "block_kbits",
+            "data_lines",
+            "access_latency_cycles",
+            "static_pj_per_bit_cycle",
+            "conversion_pj_per_bit",
+            "storage_pj_per_bit",
+            "area_um2_per_bit",
+        ];
+        for key in cfg.keys() {
+            if let Some(field) = key.strip_prefix(&format!("{prefix}.")) {
+                if !known.contains(&field) {
+                    return Err(format!("[tech.{name}]: unknown field `{field}`"));
+                }
+            }
+        }
+        let f64_key = |field: &str| cfg.get(&format!("{prefix}.{field}")).and_then(|v| v.as_f64());
+        let u32_key = |field: &str| -> Result<Option<u32>, String> {
+            match cfg.get(&format!("{prefix}.{field}")).map(|v| v.as_i64()) {
+                None => Ok(None),
+                Some(Some(i)) if i > 0 && i <= u32::MAX as i64 => Ok(Some(i as u32)),
+                Some(_) => Err(format!(
+                    "[tech.{name}]: `{field}` must be a positive integer fitting u32"
+                )),
+            }
+        };
+
+        let mut t = match cfg.get(&format!("{prefix}.base")).and_then(|v| v.as_str()) {
+            Some(base) => {
+                let mut b = staged
+                    .iter()
+                    .find(|s| s.tech.name == base)
+                    .map(|s| Ok(s.tech.clone()))
+                    .unwrap_or_else(|| self.resolve(base))
+                    .map_err(|e| format!("[tech.{name}]: base: {e}"))?;
+                b.name = name.to_string();
+                b
+            }
+            None => {
+                let require = |field: &str| -> Result<f64, String> {
+                    f64_key(field).ok_or_else(|| {
+                        format!("[tech.{name}]: missing `{field}` (no `base` to inherit from)")
+                    })
+                };
+                let require_u32 = |field: &str| -> Result<u32, String> {
+                    u32_key(field)?
+                        .ok_or_else(|| format!("[tech.{name}]: missing `{field}`"))
+                };
+                MemTechnology {
+                    name: name.to_string(),
+                    freq_hz: require("freq_mhz")? * 1e6,
+                    wavelengths: require_u32("wavelengths")?,
+                    lanes_per_core_cycle: require_u32("lanes_per_core_cycle")?,
+                    port_width_bits: require_u32("port_width_bits")?,
+                    ports_per_block: require_u32("ports_per_block")?,
+                    block_bits: (require("block_kbits")? * 1024.0) as u64,
+                    data_lines: require_u32("data_lines")?,
+                    access_latency_cycles: require_u32("access_latency_cycles")?,
+                    static_pj_per_bit_cycle: require("static_pj_per_bit_cycle")?,
+                    switching_pj_per_bit: 0.0, // fixed up below
+                    conversion_pj_per_bit: require("conversion_pj_per_bit")?,
+                    storage_pj_per_bit: require("storage_pj_per_bit")?,
+                    area_um2_per_bit: require("area_um2_per_bit")?,
+                }
+            }
+        };
+        // overrides on top of the base (no-ops when the key built the
+        // struct above)
+        if let Some(v) = f64_key("freq_mhz") {
+            t.freq_hz = v * 1e6;
+        }
+        if let Some(v) = u32_key("wavelengths")? {
+            t.wavelengths = v;
+        }
+        if let Some(v) = u32_key("lanes_per_core_cycle")? {
+            t.lanes_per_core_cycle = v;
+        }
+        if let Some(v) = u32_key("port_width_bits")? {
+            t.port_width_bits = v;
+        }
+        if let Some(v) = u32_key("ports_per_block")? {
+            t.ports_per_block = v;
+        }
+        if let Some(v) = f64_key("block_kbits") {
+            t.block_bits = (v * 1024.0) as u64;
+        }
+        if let Some(v) = u32_key("data_lines")? {
+            t.data_lines = v;
+        }
+        if let Some(v) = u32_key("access_latency_cycles")? {
+            t.access_latency_cycles = v;
+        }
+        if let Some(v) = f64_key("static_pj_per_bit_cycle") {
+            t.static_pj_per_bit_cycle = v;
+        }
+        if let Some(v) = f64_key("conversion_pj_per_bit") {
+            t.conversion_pj_per_bit = v;
+        }
+        if let Some(v) = f64_key("storage_pj_per_bit") {
+            t.storage_pj_per_bit = v;
+        }
+        if let Some(v) = f64_key("area_um2_per_bit") {
+            t.area_um2_per_bit = v;
+        }
+        // Eq. 3: the Table III switching total is the sum of its split.
+        t.switching_pj_per_bit = t.conversion_pj_per_bit + t.storage_pj_per_bit;
+        // Physical sanity: these feed Eq. 2–3 and Table IV directly, so a
+        // sign typo must fail here, not surface as negative joules.
+        if !(t.freq_hz.is_finite() && t.freq_hz > 0.0) || t.block_bits == 0 {
+            return Err(format!("[tech.{name}]: frequency and block size must be positive"));
+        }
+        for (field, v) in [
+            ("static_pj_per_bit_cycle", t.static_pj_per_bit_cycle),
+            ("conversion_pj_per_bit", t.conversion_pj_per_bit),
+            ("storage_pj_per_bit", t.storage_pj_per_bit),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!(
+                    "[tech.{name}]: `{field}` must be a finite non-negative energy, got {v}"
+                ));
+            }
+        }
+        if !(t.area_um2_per_bit.is_finite() && t.area_um2_per_bit > 0.0) {
+            return Err(format!(
+                "[tech.{name}]: `area_um2_per_bit` must be a finite positive area, got {}",
+                t.area_um2_per_bit
+            ));
+        }
+        let summary = cfg
+            .get(&format!("{prefix}.summary"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("config-file-defined technology")
+            .to_string();
+        Ok(StaticTech::new(summary, t))
+    }
+}
+
+impl Default for TechRegistry {
+    fn default() -> Self {
+        TechRegistry::builtin()
+    }
+}
+
+/// The process-wide registry, seeded with the builtins on first use.
+pub fn global() -> &'static RwLock<TechRegistry> {
+    static GLOBAL: OnceLock<RwLock<TechRegistry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| RwLock::new(TechRegistry::builtin()))
+}
+
+/// Resolve a technology by name from the global registry.
+pub fn resolve(name: &str) -> Result<MemTechnology, String> {
+    global().read().unwrap().resolve(name)
+}
+
+/// Resolve a technology by name, panicking with the registry's error
+/// message on an unknown name — the concise form for tests, benches and
+/// examples.
+pub fn tech(name: &str) -> MemTechnology {
+    resolve(name).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Names registered in the global registry.
+pub fn names() -> Vec<String> {
+    global().read().unwrap().names()
+}
+
+/// Every technology registered in the global registry.
+pub fn all() -> Vec<MemTechnology> {
+    global().read().unwrap().all()
+}
+
+/// Register a spec in the global registry.
+pub fn register(spec: Arc<dyn TechSpec>) -> Result<(), String> {
+    global().write().unwrap().register(spec)
+}
+
+/// Register every `[tech.*]` section of a config file in the global
+/// registry; returns the registered names.
+pub fn load_config(cfg: &Config) -> Result<Vec<String>, String> {
+    global().write().unwrap().load_config(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tech::FABRIC_HZ;
+
+    #[test]
+    fn builtins_resolve_to_the_exact_parameter_sets() {
+        let r = TechRegistry::builtin();
+        assert_eq!(r.resolve("e-sram").unwrap(), crate::mem::esram::esram());
+        assert_eq!(r.resolve("o-sram").unwrap(), crate::mem::osram::osram());
+        assert_eq!(r.resolve("o-sram-imc").unwrap(), crate::mem::posram::osram_imc());
+        assert_eq!(r.resolve("e-uram").unwrap(), crate::mem::uram::uram());
+        assert_eq!(r.names(), vec!["e-sram", "o-sram", "o-sram-imc", "e-uram"]);
+    }
+
+    #[test]
+    fn unknown_name_lists_the_registry() {
+        let e = TechRegistry::builtin().resolve("t-sram").unwrap_err();
+        assert!(e.contains("t-sram") && e.contains("e-sram") && e.contains("o-sram"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut r = TechRegistry::builtin();
+        let dup = Arc::new(StaticTech::new("dup", crate::mem::esram::esram()));
+        assert!(r.register(dup).is_err());
+    }
+
+    #[test]
+    fn config_tech_from_base_overrides_fields() {
+        let cfg = Config::parse(concat!(
+            "[tech.cryo-sram]\n",
+            "summary = \"cryo point\"\n",
+            "base = \"e-sram\"\n",
+            "freq_mhz = 1000.0\n",
+            "conversion_pj_per_bit = 1.9\n",
+            "storage_pj_per_bit = 0.4\n",
+        ))
+        .unwrap();
+        let mut r = TechRegistry::builtin();
+        let names = r.load_config(&cfg).unwrap();
+        assert_eq!(names, vec!["cryo-sram"]);
+        let t = r.resolve("cryo-sram").unwrap();
+        assert_eq!(t.name, "cryo-sram");
+        assert_eq!(t.freq_hz, 1e9);
+        // inherited from e-sram
+        assert_eq!(t.block_bits, crate::mem::esram::ESRAM_BLOCK_BITS);
+        // Eq. 3 invariant holds by construction
+        assert!((t.switching_pj_per_bit - 2.3).abs() < 1e-12);
+        let spec = r.specs().iter().find(|s| s.name() == "cryo-sram").unwrap();
+        assert_eq!(spec.summary(), "cryo point");
+    }
+
+    #[test]
+    fn config_techs_may_base_on_each_other_in_any_order() {
+        // "a-derived" sorts before its base "z-base": the loader must
+        // register in dependency order, not key order
+        let cfg = Config::parse(concat!(
+            "[tech.a-derived]\n",
+            "base = \"z-base\"\n",
+            "wavelengths = 2\n",
+            "[tech.z-base]\n",
+            "base = \"e-sram\"\n",
+            "freq_mhz = 750.0\n",
+        ))
+        .unwrap();
+        let mut r = TechRegistry::builtin();
+        let names = r.load_config(&cfg).unwrap();
+        assert_eq!(names, vec!["z-base", "a-derived"]);
+        let d = r.resolve("a-derived").unwrap();
+        assert_eq!(d.freq_hz, 750e6);
+        assert_eq!(d.wavelengths, 2);
+        // a base cycle (or unknown base) still errors instead of looping
+        let cyc = Config::parse("[tech.loop]\nbase = \"loop\"\n").unwrap();
+        let e = TechRegistry::builtin().load_config(&cyc).unwrap_err();
+        assert!(e.contains("loop"), "{e}");
+    }
+
+    #[test]
+    fn failed_load_leaves_the_registry_untouched() {
+        // `good` validates but `e-sram` collides with a builtin: nothing
+        // may be committed, and a corrected file must load cleanly after
+        let bad = Config::parse(concat!(
+            "[tech.good]\nbase = \"o-sram\"\nwavelengths = 7\n",
+            "[tech.e-sram]\nbase = \"o-sram\"\n",
+        ))
+        .unwrap();
+        let mut r = TechRegistry::builtin();
+        let before = r.names();
+        let e = r.load_config(&bad).unwrap_err();
+        assert!(e.contains("already registered"), "{e}");
+        assert_eq!(r.names(), before, "failed load must not mutate the registry");
+        let fixed = Config::parse("[tech.good]\nbase = \"o-sram\"\nwavelengths = 7\n").unwrap();
+        assert_eq!(r.load_config(&fixed).unwrap(), vec!["good"]);
+        assert_eq!(r.resolve("good").unwrap().wavelengths, 7);
+    }
+
+    #[test]
+    fn base_section_error_is_reported_as_the_root_cause() {
+        // `a` is broken (missing fields); `z` bases on `a`. The error must
+        // name a's real problem, not z's derived "unknown technology `a`".
+        let cfg = Config::parse(concat!(
+            "[tech.a]\nfreq_mhz = 500.0\n",
+            "[tech.z]\nbase = \"a\"\n",
+        ))
+        .unwrap();
+        let e = TechRegistry::builtin().load_config(&cfg).unwrap_err();
+        assert!(e.contains("[tech.a]") && e.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn oversized_integer_field_rejected() {
+        let cfg =
+            Config::parse("[tech.big]\nbase = \"e-sram\"\nports_per_block = 4294967297\n").unwrap();
+        let e = TechRegistry::builtin().load_config(&cfg).unwrap_err();
+        assert!(e.contains("ports_per_block"), "{e}");
+    }
+
+    #[test]
+    fn every_config_field_reaches_its_parameter() {
+        // guards the field plumbing against drift: a field accepted by the
+        // unknown-field check but dropped by the override pass would fail
+        // here, not silently keep the base's value
+        let cfg = Config::parse(concat!(
+            "[tech.full]\n",
+            "base = \"e-sram\"\n",
+            "freq_mhz = 1500.0\n",
+            "wavelengths = 3\n",
+            "lanes_per_core_cycle = 4\n",
+            "port_width_bits = 16\n",
+            "ports_per_block = 5\n",
+            "block_kbits = 72\n",
+            "data_lines = 512\n",
+            "access_latency_cycles = 6\n",
+            "static_pj_per_bit_cycle = 7.5e-6\n",
+            "conversion_pj_per_bit = 2.5\n",
+            "storage_pj_per_bit = 0.25\n",
+            "area_um2_per_bit = 3.5\n",
+        ))
+        .unwrap();
+        let mut r = TechRegistry::builtin();
+        r.load_config(&cfg).unwrap();
+        let t = r.resolve("full").unwrap();
+        assert_eq!(t.freq_hz, 1.5e9);
+        assert_eq!(t.wavelengths, 3);
+        assert_eq!(t.lanes_per_core_cycle, 4);
+        assert_eq!(t.port_width_bits, 16);
+        assert_eq!(t.ports_per_block, 5);
+        assert_eq!(t.block_bits, 72 * 1024);
+        assert_eq!(t.data_lines, 512);
+        assert_eq!(t.access_latency_cycles, 6);
+        assert_eq!(t.static_pj_per_bit_cycle, 7.5e-6);
+        assert_eq!(t.conversion_pj_per_bit, 2.5);
+        assert_eq!(t.storage_pj_per_bit, 0.25);
+        assert_eq!(t.area_um2_per_bit, 3.5);
+        assert_eq!(t.switching_pj_per_bit, 2.75);
+    }
+
+    #[test]
+    fn unphysical_energy_and_area_values_rejected() {
+        // a sign typo must fail at load, not print negative joules later
+        let neg = Config::parse("[tech.x]\nbase = \"e-sram\"\nconversion_pj_per_bit = -5.0\n")
+            .unwrap();
+        let e = TechRegistry::builtin().load_config(&neg).unwrap_err();
+        assert!(e.contains("conversion_pj_per_bit"), "{e}");
+        let zero_area =
+            Config::parse("[tech.y]\nbase = \"o-sram\"\narea_um2_per_bit = 0.0\n").unwrap();
+        let e = TechRegistry::builtin().load_config(&zero_area).unwrap_err();
+        assert!(e.contains("area_um2_per_bit"), "{e}");
+    }
+
+    #[test]
+    fn config_tech_without_base_requires_all_fields() {
+        let cfg = Config::parse("[tech.partial]\nfreq_mhz = 500.0\n").unwrap();
+        let e = TechRegistry::builtin().load_config(&cfg).unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn config_tech_full_definition() {
+        let cfg = Config::parse(concat!(
+            "[tech.flat]\n",
+            "freq_mhz = 2000.0\n",
+            "wavelengths = 2\n",
+            "lanes_per_core_cycle = 2\n",
+            "port_width_bits = 32\n",
+            "ports_per_block = 8\n",
+            "block_kbits = 64\n",
+            "data_lines = 2048\n",
+            "access_latency_cycles = 1\n",
+            "static_pj_per_bit_cycle = 2.0e-6\n",
+            "conversion_pj_per_bit = 1.0\n",
+            "storage_pj_per_bit = 0.5\n",
+            "area_um2_per_bit = 1.0\n",
+        ))
+        .unwrap();
+        let mut r = TechRegistry::empty();
+        // no base needed: every field given, resolves against empty registry
+        r.load_config(&cfg).unwrap();
+        let t = r.resolve("flat").unwrap();
+        assert_eq!(t.block_bits, 64 * 1024);
+        assert_eq!(t.wavelengths, 2);
+        assert!((t.switching_pj_per_bit - 1.5).abs() < 1e-12);
+        // 2 lanes × 4× clock ratio = 8 words per fabric cycle
+        assert!((t.words_per_fabric_cycle(FABRIC_HZ) - 8.0).abs() < 1e-12);
+        assert!(t.is_fast_array(FABRIC_HZ));
+    }
+
+    #[test]
+    fn unknown_tech_field_rejected() {
+        let cfg = Config::parse("[tech.x]\nbase = \"o-sram\"\nfrequency = 1.0\n").unwrap();
+        let e = TechRegistry::builtin().load_config(&cfg).unwrap_err();
+        assert!(e.contains("unknown field `frequency`"), "{e}");
+    }
+
+    #[test]
+    fn global_registry_serves_builtins() {
+        assert_eq!(tech("e-sram"), crate::mem::esram::esram());
+        assert!(names().len() >= 4);
+        assert!(resolve("definitely-not-registered").is_err());
+    }
+
+    #[test]
+    fn computed_spec_through_the_trait() {
+        struct Doubled;
+        impl TechSpec for Doubled {
+            fn name(&self) -> &str {
+                "o-sram-2x"
+            }
+            fn summary(&self) -> &str {
+                "O-SRAM with a doubled WDM comb"
+            }
+            fn technology(&self) -> MemTechnology {
+                let mut t = crate::mem::osram::osram();
+                t.name = "o-sram-2x".into();
+                t.wavelengths *= 2;
+                t.lanes_per_core_cycle *= 2;
+                t.ports_per_block *= 2;
+                t
+            }
+        }
+        let mut r = TechRegistry::builtin();
+        r.register(Arc::new(Doubled)).unwrap();
+        let t = r.resolve("o-sram-2x").unwrap();
+        assert_eq!(t.wavelengths, 10);
+        assert!(
+            t.words_per_fabric_cycle(FABRIC_HZ)
+                > r.resolve("o-sram").unwrap().words_per_fabric_cycle(FABRIC_HZ)
+        );
+    }
+}

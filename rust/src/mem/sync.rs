@@ -76,7 +76,9 @@ impl SyncInterface {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::tech::{MemTech, FABRIC_HZ};
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
 
     #[test]
     fn clock_conversions() {
@@ -90,7 +92,7 @@ mod tests {
 
     #[test]
     fn esram_crossing_is_free() {
-        let e = MemTech::ESram.technology();
+        let e = esram();
         let s = SyncInterface::new(&e, FABRIC_HZ);
         assert_eq!(s.crossing_fabric_cycles, 0.0);
         // synchronous round trip = the array's own latency
@@ -99,7 +101,7 @@ mod tests {
 
     #[test]
     fn osram_pays_synchronizer_but_still_fast() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         let s = SyncInterface::new(&o, FABRIC_HZ);
         assert_eq!(s.crossing_fabric_cycles, 2.0);
         let rt = s.round_trip_fabric_cycles(&o);
@@ -111,8 +113,8 @@ mod tests {
     fn osram_round_trip_longer_than_esram_latency_but_bandwidth_wins() {
         // the paper's design hides the crossing latency behind the two
         // pipelines (Figs. 5–6); the model must still expose it honestly.
-        let e = MemTech::ESram.technology();
-        let o = MemTech::OSram.technology();
+        let e = esram();
+        let o = osram();
         let se = SyncInterface::new(&e, FABRIC_HZ);
         let so = SyncInterface::new(&o, FABRIC_HZ);
         assert!(so.round_trip_fabric_cycles(&o) > se.round_trip_fabric_cycles(&e));

@@ -1,35 +1,14 @@
-//! The device-level memory technology model shared by E-SRAM and O-SRAM.
+//! The device-level memory technology model shared by every SRAM variant.
 //!
 //! Everything the simulator, the energy model (Eq. 2–3) and the area model
 //! (Table IV) need about an on-chip memory is captured by one parameter
-//! struct; the *only* difference between the baseline FPGA and the paper's
-//! proposal is which parameter set is plugged in.
-
-/// Which on-chip memory technology an accelerator instance uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum MemTech {
-    /// Electrical SRAM — BRAM/URAM-class, the baseline (§V-A3).
-    ESram,
-    /// Optical SRAM of [14] — the paper's proposal (§II).
-    OSram,
-}
-
-impl MemTech {
-    pub fn name(&self) -> &'static str {
-        match self {
-            MemTech::ESram => "e-sram",
-            MemTech::OSram => "o-sram",
-        }
-    }
-
-    /// The parameter set for this technology.
-    pub fn technology(&self) -> MemTechnology {
-        match self {
-            MemTech::ESram => crate::mem::esram::esram(),
-            MemTech::OSram => crate::mem::osram::osram(),
-        }
-    }
-}
+//! struct; the *only* difference between the baseline FPGA, the paper's
+//! proposal, and any follow-up device is which parameter set is plugged in.
+//!
+//! Parameter sets are looked up by name through the open
+//! [`registry`](crate::mem::registry) — `e-sram` and `o-sram` reproduce the
+//! paper, and new technologies (photonic IMC variants, config-file-defined
+//! devices) register without touching any consumer layer.
 
 /// Device parameters of one on-chip memory block family.
 ///
@@ -39,7 +18,9 @@ impl MemTech {
 /// E-SRAM the "conversion" part is the bit-line/sense-amp energy).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MemTechnology {
-    pub name: &'static str,
+    /// Registry name the consumers resolve this parameter set by
+    /// (e.g. `e-sram`, `o-sram`, `o-sram-imc`).
+    pub name: String,
     /// Memory core clock, Hz (f_optical in Eq. 1; for E-SRAM this equals
     /// the fabric clock — the array is synchronous with the mesh).
     pub freq_hz: f64,
@@ -123,6 +104,17 @@ impl MemTechnology {
         bits as f64 * self.area_um2_per_bit * 1e-6
     }
 
+    /// Is the array fast enough relative to the fabric (≥ 4×) to hide
+    /// multi-step array sequencing inside one fabric cycle? This single
+    /// predicate drives every "electrical vs optical" structural choice in
+    /// the consumer layers — tag→data serialization, data-array bank
+    /// cascading, and the MSHR-depth DRAM-overlap derate — so a new
+    /// registry technology picks up the right behaviour from its clock
+    /// alone, without any per-name special-casing.
+    pub fn is_fast_array(&self, fabric_hz: f64) -> bool {
+        self.freq_hz >= 4.0 * fabric_hz
+    }
+
     /// Can a cache built from this memory serialize tag→data within one
     /// fabric cycle? A synchronous (fabric-speed) array must read all
     /// `assoc` candidate ways speculatively in parallel with the tag
@@ -130,7 +122,7 @@ impl MemTechnology {
     /// lookup; an array ≥ 4× faster than the fabric resolves the tag first
     /// and reads only the matching way with no throughput loss.
     pub fn serial_tag_data(&self, fabric_hz: f64) -> bool {
-        self.freq_hz >= 4.0 * fabric_hz
+        self.is_fast_array(fabric_hz)
     }
 }
 
@@ -140,12 +132,14 @@ pub const FABRIC_HZ: f64 = 500e6;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
 
     #[test]
     fn eq1_matches_paper_example() {
         // §III-A: λ=5, f_opt=20 GHz, z=32, f_elec=500 MHz ⇒ 6400 bits/cycle
         // (= the 200 × 32 b parallel ports claim).
-        let o = MemTech::OSram.technology();
+        let o = osram();
         let b = o.bits_per_fabric_cycle(FABRIC_HZ);
         assert!((b - 6400.0).abs() < 1e-9, "b_process = {b}");
         assert!((o.words_per_fabric_cycle(FABRIC_HZ) - 200.0).abs() < 1e-9);
@@ -153,7 +147,7 @@ mod tests {
 
     #[test]
     fn esram_is_port_limited() {
-        let e = MemTech::ESram.technology();
+        let e = esram();
         // dual-port 32b at fabric clock: 64 bits per cycle
         assert!((e.bits_per_fabric_cycle(FABRIC_HZ) - 64.0).abs() < 1e-9);
         assert!((e.words_per_fabric_cycle(FABRIC_HZ) - 2.0).abs() < 1e-9);
@@ -163,7 +157,7 @@ mod tests {
     fn effective_ports_match_paper_claim() {
         // §III-A: "each O-SRAM consists of 200 parallel read-write ports"
         // — 200 = λ × f_opt / f_elec is exactly Eq. 1's word count.
-        let o = MemTech::OSram.technology();
+        let o = osram();
         assert_eq!(o.ports_per_block, 200);
         assert_eq!(
             o.ports_per_block as f64,
@@ -173,18 +167,18 @@ mod tests {
 
     #[test]
     fn latency_converts_across_domains() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         // 20 GHz core, 500 MHz fabric: a 2-core-cycle access is well under
         // one fabric cycle ⇒ clamps to 1.
         assert_eq!(o.access_latency_fabric_cycles(FABRIC_HZ), 1.0);
-        let e = MemTech::ESram.technology();
+        let e = esram();
         // synchronous: latency in fabric cycles = core cycles
         assert_eq!(e.access_latency_fabric_cycles(FABRIC_HZ), e.access_latency_cycles as f64);
     }
 
     #[test]
     fn blocks_for_bits_rounds_up() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         assert_eq!(o.blocks_for_bits(1), 1);
         assert_eq!(o.blocks_for_bits(o.block_bits), 1);
         assert_eq!(o.blocks_for_bits(o.block_bits + 1), 2);
@@ -192,15 +186,14 @@ mod tests {
 
     #[test]
     fn energy_helpers_scale_linearly() {
-        let o = MemTech::OSram.technology();
+        let o = osram();
         assert!((o.switching_pj(2000) - 2.0 * o.switching_pj(1000)).abs() < 1e-9);
         assert!((o.static_pj_per_cycle(2000) - 2.0 * o.static_pj_per_cycle(1000)).abs() < 1e-12);
     }
 
     #[test]
     fn switching_decomposition_sums() {
-        for t in [MemTech::ESram, MemTech::OSram] {
-            let m = t.technology();
+        for m in [esram(), osram()] {
             assert!(
                 (m.conversion_pj_per_bit + m.storage_pj_per_bit - m.switching_pj_per_bit).abs()
                     < 1e-9,
@@ -208,5 +201,13 @@ mod tests {
                 m.name
             );
         }
+    }
+
+    #[test]
+    fn fast_array_predicate_splits_the_builtin_pair() {
+        assert!(!esram().is_fast_array(FABRIC_HZ));
+        assert!(osram().is_fast_array(FABRIC_HZ));
+        // the predicate is what serial_tag_data forwards to
+        assert_eq!(osram().serial_tag_data(FABRIC_HZ), osram().is_fast_array(FABRIC_HZ));
     }
 }

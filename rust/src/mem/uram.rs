@@ -1,0 +1,104 @@
+//! UltraRAM-class electrical SRAM (`e-uram`) device parameters.
+//!
+//! The second electrical design point of a data-center FPGA: the deep,
+//! dense URAM288-style block (Alveo U250-class, §V-A's platform). Compared
+//! to the BRAM-class `e-sram` baseline it is:
+//!
+//! * **denser** — an 8T high-density macro at ~0.65× the BRAM-class area
+//!   per bit (the periphery amortizes over a 288 Kb block);
+//! * **slower to access** — the deep array is internally pipelined with a
+//!   2-cycle read latency at the fabric clock;
+//! * **cheaper to keep, costlier to swing** — leakage per bit drops
+//!   slightly (fewer peripheral circuits per bit) while the long bit lines
+//!   raise the per-access switching energy.
+//!
+//! It exists so the registry ships more than one *electrical* point: the
+//! programmable-memory-controller design-space work (arXiv 2207.08298)
+//! tunes exactly this BRAM/URAM split, and the sweep engine can now cover
+//! it without touching any consumer layer.
+
+use crate::mem::esram::{
+    ESRAM_AREA_UM2_PER_BIT, ESRAM_PORT_WIDTH, ESRAM_PORTS, ESRAM_STATIC_PJ_PER_BIT_CYCLE,
+};
+use crate::mem::tech::{MemTechnology, FABRIC_HZ};
+
+/// Synchronous with the 500 MHz fabric, like all electrical arrays here.
+pub const URAM_FREQ_HZ: f64 = FABRIC_HZ;
+/// URAM288: 288 Kb per block (4096 × 72 b).
+pub const URAM_BLOCK_BITS: u64 = 288 * 1024;
+/// 4096 word lines per block.
+pub const URAM_DATA_LINES: u32 = 4096;
+/// Internally pipelined deep array: 2-cycle access at the fabric clock.
+pub const URAM_ACCESS_LATENCY_CYCLES: u32 = 2;
+
+/// Slightly lower leakage per bit than the BRAM-class macro.
+pub const URAM_STATIC_PJ_PER_BIT_CYCLE: f64 = ESRAM_STATIC_PJ_PER_BIT_CYCLE * 0.9;
+/// Long bit lines: higher switching than the 4.68 pJ/bit baseline, with
+/// the same bitline/sense-amp-dominated Eq. 3 split.
+pub const URAM_CONVERSION_PJ_PER_BIT: f64 = 4.32;
+pub const URAM_STORAGE_PJ_PER_BIT: f64 = 0.88;
+pub const URAM_SWITCHING_PJ_PER_BIT: f64 =
+    URAM_CONVERSION_PJ_PER_BIT + URAM_STORAGE_PJ_PER_BIT;
+
+/// High-density macro: ~0.65× the BRAM-class area per bit.
+pub const URAM_AREA_UM2_PER_BIT: f64 = ESRAM_AREA_UM2_PER_BIT * 0.65;
+
+/// The E-URAM `MemTechnology` parameter set.
+pub fn uram() -> MemTechnology {
+    MemTechnology {
+        name: "e-uram".to_string(),
+        freq_hz: URAM_FREQ_HZ,
+        wavelengths: 1,
+        lanes_per_core_cycle: ESRAM_PORTS,
+        port_width_bits: ESRAM_PORT_WIDTH,
+        ports_per_block: ESRAM_PORTS,
+        block_bits: URAM_BLOCK_BITS,
+        data_lines: URAM_DATA_LINES,
+        access_latency_cycles: URAM_ACCESS_LATENCY_CYCLES,
+        static_pj_per_bit_cycle: URAM_STATIC_PJ_PER_BIT_CYCLE,
+        switching_pj_per_bit: URAM_SWITCHING_PJ_PER_BIT,
+        conversion_pj_per_bit: URAM_CONVERSION_PJ_PER_BIT,
+        storage_pj_per_bit: URAM_STORAGE_PJ_PER_BIT,
+        area_um2_per_bit: URAM_AREA_UM2_PER_BIT,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::esram::esram;
+
+    #[test]
+    fn denser_but_hotter_than_bram() {
+        let u = uram();
+        let e = esram();
+        assert!(u.area_um2_per_bit < e.area_um2_per_bit);
+        assert!(u.switching_pj_per_bit > e.switching_pj_per_bit);
+        assert!(u.static_pj_per_bit_cycle < e.static_pj_per_bit_cycle);
+    }
+
+    #[test]
+    fn same_port_throughput_as_bram() {
+        // the dual-port electrical bottleneck is the point of the paper's
+        // comparison; URAM changes density/energy, not port count
+        let u = uram();
+        assert!((u.words_per_fabric_cycle(FABRIC_HZ) - 2.0).abs() < 1e-12);
+        assert!(!u.is_fast_array(FABRIC_HZ));
+    }
+
+    #[test]
+    fn block_geometry_is_uram288() {
+        assert_eq!(URAM_BLOCK_BITS, 294_912);
+        let u = uram();
+        assert!(u.blocks_for_bits(URAM_BLOCK_BITS) == 1);
+        assert!(u.blocks_for_bits(URAM_BLOCK_BITS + 1) == 2);
+    }
+
+    #[test]
+    fn eq3_decomposition_sums() {
+        let u = uram();
+        assert!(
+            (u.conversion_pj_per_bit + u.storage_pj_per_bit - u.switching_pj_per_bit).abs() < 1e-12
+        );
+    }
+}

@@ -75,16 +75,18 @@ impl ExecUnit {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::tech::{MemTech, FABRIC_HZ};
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::{MemTechnology, FABRIC_HZ};
 
-    fn unit(tech: MemTech, banks_per_array: usize) -> ExecUnit {
-        let t = ArrayTiming::new(&tech.technology(), FABRIC_HZ, banks_per_array);
+    fn unit(tech: &MemTechnology, banks_per_array: usize) -> ExecUnit {
+        let t = ArrayTiming::new(tech, FABRIC_HZ, banks_per_array);
         ExecUnit::new(80, 16, t, 8)
     }
 
     #[test]
     fn pipeline_cost_matches_alg1_op_count() {
-        let u = unit(MemTech::ESram, 1);
+        let u = unit(&esram(), 1);
         // 3-mode: R(N−1) = 32 mults over 80 pipelines = 0.4 cyc/nnz
         let c = u.nonzero(3);
         assert!((c.pipeline_cycles - 0.4).abs() < 1e-12);
@@ -94,19 +96,19 @@ mod tests {
 
     #[test]
     fn psum_charge_reads_and_writes_rank_words() {
-        let u = unit(MemTech::ESram, 1);
+        let u = unit(&esram(), 1);
         let c = u.nonzero(3);
         assert_eq!(c.psum_words, 32);
         // 32 words over (2 words/cyc × 8 banks) = 2 cyc
         assert!((c.psum_cycles - 2.0).abs() < 1e-12);
-        let o = unit(MemTech::OSram, 1);
+        let o = unit(&osram(), 1);
         // O-SRAM: 32 / (200 × 8) = 0.02
         assert!((o.nonzero(3).psum_cycles - 0.02).abs() < 1e-12);
     }
 
     #[test]
     fn drain_charges_rank_words() {
-        let u = unit(MemTech::OSram, 1);
+        let u = unit(&osram(), 1);
         let d = u.drain_slice();
         assert_eq!(d.psum_words, 16);
         assert_eq!(d.pipeline_cycles, 0.0);
@@ -115,8 +117,8 @@ mod tests {
 
     #[test]
     fn compute_cost_is_technology_independent() {
-        let e = unit(MemTech::ESram, 1);
-        let o = unit(MemTech::OSram, 1);
+        let e = unit(&esram(), 1);
+        let o = unit(&osram(), 1);
         assert_eq!(e.nonzero(3).pipeline_cycles, o.nonzero(3).pipeline_cycles);
     }
 }

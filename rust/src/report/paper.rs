@@ -5,8 +5,9 @@
 
 use crate::accel::config::AcceleratorConfig;
 use crate::area::model::{AreaModel, PAPER_ESRAM_TOTAL_MM2, PAPER_OSRAM_MEM_MM2};
-use crate::coordinator::driver::{compare_technologies, TechComparison};
-use crate::mem::tech::MemTech;
+use crate::coordinator::driver::{compare_paper_pair, TechComparison};
+use crate::mem::registry::{self, TechRegistry};
+use crate::mem::tech::FABRIC_HZ;
 use crate::tensor::gen::{preset, FrosttTensor, TensorSpec};
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_count, fmt_sig, Align, Table};
@@ -62,8 +63,8 @@ pub fn table_ii(scale: f64) -> Table {
 
 /// Table III: per-bit energy of the two technologies.
 pub fn table_iii() -> Table {
-    let e = MemTech::ESram.technology();
-    let o = MemTech::OSram.technology();
+    let e = registry::tech("e-sram");
+    let o = registry::tech("o-sram");
     let mut t = Table::new(
         "Table III: per-bit energy (pJ/cycle) at 500 MHz",
         &["", "electrical", "optical"],
@@ -82,11 +83,36 @@ pub fn table_iii() -> Table {
     t
 }
 
+/// The registry listing: every registered technology's headline device
+/// parameters — the open-registry counterpart of Table III.
+pub fn table_technologies(reg: &TechRegistry) -> Table {
+    let mut t = Table::new(
+        "Registered memory technologies",
+        &["name", "clock", "lanes", "words/cyc@500MHz", "switch pJ/b", "static pJ/b/cyc", "um^2/b", "summary"],
+    )
+    .align(0, Align::Left)
+    .align(7, Align::Left);
+    for spec in reg.specs() {
+        let m = spec.technology();
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.1} GHz", m.freq_hz / 1e9),
+            m.lanes_per_core_cycle.to_string(),
+            format!("{:.0}", m.words_per_fabric_cycle(FABRIC_HZ)),
+            format!("{:.2}", m.switching_pj_per_bit),
+            format!("{:.2e}", m.static_pj_per_bit_cycle),
+            format!("{:.3}", m.area_um2_per_bit),
+            spec.summary().to_string(),
+        ]);
+    }
+    t
+}
+
 /// Table IV: area comparison (with the paper's printed values alongside).
 pub fn table_iv(cfg: &AcceleratorConfig) -> Table {
     let m = AreaModel::new(cfg);
-    let e = m.platform(MemTech::ESram);
-    let o = m.platform(MemTech::OSram);
+    let e = m.platform(&registry::tech("e-sram"));
+    let o = m.platform(&registry::tech("o-sram"));
     let mut t = Table::new(
         "Table IV: area with different SRAM technologies (mm^2)",
         &["system", "on-chip memory", "PEs", "total", "paper total"],
@@ -116,7 +142,8 @@ pub struct EvaluatedTensor {
 }
 
 /// Run the whole Table II suite at `scale` (tensor + accelerator scaled
-/// coherently — see DESIGN.md §6) and return per-tensor comparisons.
+/// coherently — see DESIGN.md §6) and return per-tensor comparisons on
+/// the paper's e-sram/o-sram pair.
 pub fn evaluate_suite(scale: f64, seed: u64) -> Vec<EvaluatedTensor> {
     let cfg = AcceleratorConfig::paper_default().scaled(scale);
     FrosttTensor::ALL
@@ -124,7 +151,7 @@ pub fn evaluate_suite(scale: f64, seed: u64) -> Vec<EvaluatedTensor> {
         .map(|&ft| {
             let spec: TensorSpec = preset(ft).scaled(scale);
             let tensor = spec.generate(seed);
-            EvaluatedTensor { name: ft.name().into(), comparison: compare_technologies(&tensor, &cfg) }
+            EvaluatedTensor { name: ft.name().into(), comparison: compare_paper_pair(&tensor, &cfg) }
         })
         .collect()
 }
@@ -133,7 +160,7 @@ pub fn evaluate_suite(scale: f64, seed: u64) -> Vec<EvaluatedTensor> {
 pub fn fig7(results: &[EvaluatedTensor]) -> Table {
     let max_modes = results
         .iter()
-        .map(|r| r.comparison.esram.modes.len())
+        .map(|r| r.comparison.baseline().report.modes.len())
         .max()
         .unwrap_or(0);
     let mut header: Vec<String> = vec!["tensor".into()];
@@ -146,18 +173,19 @@ pub fn fig7(results: &[EvaluatedTensor]) -> Table {
     )
     .align(0, Align::Left);
     for r in results {
-        let speedups = r.comparison.mode_speedups();
+        let speedups = r.comparison.mode_speedups("o-sram");
         let mut row = vec![r.name.clone()];
         for m in 0..max_modes {
             row.push(
                 speedups.get(m).map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
             );
         }
-        row.push(format!("{:.2}x", r.comparison.total_speedup()));
+        row.push(format!("{:.2}x", r.comparison.total_speedup("o-sram")));
         t.row(row);
     }
     // §VI aggregate
-    let all: Vec<f64> = results.iter().map(|r| r.comparison.total_speedup()).collect();
+    let all: Vec<f64> =
+        results.iter().map(|r| r.comparison.total_speedup("o-sram")).collect();
     let mut agg = vec!["MEAN (paper: 1.68x)".to_string()];
     agg.extend((0..max_modes).map(|_| "".to_string()));
     agg.push(format!("{:.2}x", Summary::geomean_of(&all)));
@@ -174,12 +202,12 @@ pub fn fig8(results: &[EvaluatedTensor]) -> Table {
     .align(0, Align::Left);
     let mut all = Vec::new();
     for r in results {
-        let s = r.comparison.energy_savings();
+        let s = r.comparison.energy_savings("o-sram");
         all.push(s);
         t.row(vec![
             r.name.clone(),
-            fmt_sig(r.comparison.esram_energy.total_j(), 4),
-            fmt_sig(r.comparison.osram_energy.total_j(), 4),
+            fmt_sig(r.comparison.require("e-sram").energy.total_j(), 4),
+            fmt_sig(r.comparison.require("o-sram").energy.total_j(), 4),
             format!("{s:.2}x"),
         ]);
     }
@@ -203,6 +231,17 @@ mod tests {
         assert_eq!(table_ii(1.0).n_rows(), 7);
         assert_eq!(table_iii().n_rows(), 2);
         assert_eq!(table_iv(&cfg).n_rows(), 2);
+    }
+
+    #[test]
+    fn technology_table_lists_the_registry() {
+        let reg = TechRegistry::builtin();
+        let t = table_technologies(&reg);
+        assert_eq!(t.n_rows(), reg.names().len());
+        let s = t.render_ascii();
+        for name in reg.names() {
+            assert!(s.contains(&name), "{s}");
+        }
     }
 
     #[test]

@@ -1,0 +1,95 @@
+//! Stub PJRT client, compiled when the `photon_pjrt` cfg is off.
+//!
+//! Mirrors the public surface of the real [`client`](super::client)
+//! module so every caller (CLI `--artifacts` paths, benches, examples)
+//! type-checks identically; constructing a [`Runtime`] fails with a clear
+//! message instead. The numeric MTTKRP reference path
+//! ([`crate::mttkrp::reference`]) is unaffected — only artifact execution
+//! needs the real PJRT bindings.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+
+/// A typed argument to an artifact call.
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    S32(&'a [i32]),
+}
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: photon-mttkrp was built without the \
+     photon_pjrt backend (the XLA bindings are not vendored offline; add the `xla` dependency \
+     and build with RUSTFLAGS=\"--cfg photon_pjrt\"); use the CPU reference path instead";
+
+/// Stub runtime. [`Runtime::from_dir`] always fails; the struct exists so
+/// the API (and the `Compute::Artifacts` plumbing) stays identical.
+pub struct Runtime {
+    manifest: Manifest,
+    /// Execution counters (exposed for the perf benches).
+    pub executions: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Always fails in the stub build (after validating that `dir` holds a
+    /// readable manifest, so error precedence matches the real client).
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Load from the default artifacts directory (`$PHOTON_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::from_dir(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Unreachable in practice (no stub `Runtime` can be constructed).
+    pub fn warm(&self, _name: &str) -> Result<()> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Unreachable in practice (no stub `Runtime` can be constructed).
+    pub fn execute_f32(&self, _name: &str, _args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+/// Resolve an artifacts dir that works from the repo root and from
+/// `cargo test` (which runs in the crate root too).
+pub fn artifacts_dir() -> PathBuf {
+    Manifest::default_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_with_a_clear_message() {
+        // a manifest-less dir fails on the manifest first (same as the
+        // real client), a present one on the missing feature
+        let err = Runtime::from_dir(std::path::Path::new("/nonexistent-artifacts"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("manifest") || err.contains("read"), "{err}");
+        // process-unique path so concurrent suites on one machine don't race
+        let dir =
+            std::env::temp_dir().join(format!("photon_stub_artifacts_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "").unwrap();
+        let err = Runtime::from_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

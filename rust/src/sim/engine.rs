@@ -9,14 +9,20 @@
 //! bottleneck/roofline abstraction the paper's own model uses) plus the
 //! un-hideable startup/drain latency; mode runtime is the slowest PE.
 //!
+//! The engine is technology-agnostic: it takes any registry-resolved
+//! [`MemTechnology`] (see [`crate::mem::registry`]) and derives every
+//! structural choice — banking, tag→data serialization, the DRAM overlap
+//! derate — from the parameter set itself.
+//!
 //! Complexity is O(nnz × (N−1)) per mode — the cache lookups dominate, so
 //! the engine streams tens of millions of nonzeros per second (see
-//! EXPERIMENTS.md §Perf).
+//! EXPERIMENTS.md §Perf). For many-scenario runs, [`crate::sim::sweep`]
+//! fans independent simulations across OS threads.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::MemoryController;
-use crate::mem::tech::MemTech;
+use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
@@ -24,26 +30,32 @@ use crate::tensor::csf::ModeView;
 
 /// Partition the view's slices into `n_pes` contiguous chunks balanced by
 /// nonzero count. Returns per-PE slice index ranges `[lo, hi)`.
+///
+/// The ranges are always in order, non-overlapping, and cover
+/// `[0, n_slices)` exactly — including when `n_pes > n_slices`, where the
+/// trailing PEs receive valid *empty* ranges. Targets are computed with
+/// exact integer arithmetic so billion-nonzero tensors cannot hit f64
+/// rounding artifacts.
 pub fn partition_slices(view: &ModeView, n_pes: usize) -> Vec<(usize, usize)> {
     assert!(n_pes > 0);
     let n_slices = view.n_slices();
     let total: u64 = view.nnz() as u64;
-    let target = total as f64 / n_pes as f64;
     let mut parts = Vec::with_capacity(n_pes);
     let mut lo = 0usize;
     let mut consumed = 0u64;
     for pe in 0..n_pes {
-        if pe == n_pes - 1 {
-            parts.push((lo, n_slices));
-            break;
-        }
-        let want = ((pe + 1) as f64 * target).round() as u64;
-        let mut hi = lo;
-        while hi < n_slices && consumed < want {
-            consumed +=
-                (view.slice_ptr[hi + 1] - view.slice_ptr[hi]) as u64;
-            hi += 1;
-        }
+        let hi = if pe == n_pes - 1 {
+            n_slices
+        } else {
+            // cumulative nonzero target after this PE
+            let want = ((pe as u128 + 1) * total as u128 / n_pes as u128) as u64;
+            let mut hi = lo;
+            while hi < n_slices && consumed < want {
+                consumed += (view.slice_ptr[hi + 1] - view.slice_ptr[hi]) as u64;
+                hi += 1;
+            }
+            hi
+        };
         parts.push((lo, hi));
         lo = hi;
     }
@@ -51,29 +63,43 @@ pub fn partition_slices(view: &ModeView, n_pes: usize) -> Vec<(usize, usize)> {
 }
 
 /// Simulate one output mode of `tensor` on the accelerator with memory
-/// technology `tech`. The tensor does **not** need to be pre-sorted — the
-/// engine builds the per-mode view itself (counting sort, O(nnz)).
+/// technology `tech` (any registry-resolved parameter set). The tensor
+/// does **not** need to be pre-sorted — the engine builds the per-mode
+/// view itself (counting sort, O(nnz)).
 pub fn simulate_mode(
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
-    tech: MemTech,
+    tech: &MemTechnology,
+) -> ModeReport {
+    assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    let view = ModeView::build(tensor, mode);
+    simulate_mode_with_view(tensor, &view, mode, cfg, tech)
+}
+
+/// [`simulate_mode`] with a caller-supplied mode view, so many-scenario
+/// runs (the [`crate::sim::sweep`] engine sweeping one tensor across N
+/// technologies) pay the O(nnz) view build once per (tensor, mode)
+/// instead of once per scenario. `view` must be `ModeView::build(tensor,
+/// mode)` for the same tensor and mode.
+pub fn simulate_mode_with_view(
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
 ) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
     cfg.validate().expect("invalid accelerator config");
-    let view = ModeView::build(tensor, mode);
-    let parts = partition_slices(&view, cfg.n_pes);
+    let parts = partition_slices(view, cfg.n_pes);
 
     // Input factor matrices, in mode order, skipping the output mode; the
     // controller's bypass routing needs their row counts.
     let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
     let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
 
-    let t = cfg.technology(tech);
-    let banks = match tech {
-        MemTech::ESram => cfg.esram_bank_factor,
-        MemTech::OSram => 1,
-    };
+    let t = cfg.tuned_tech(tech);
+    let banks = cfg.bank_factor(&t);
     let psum_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
     // psum banking: one bank per group of 10 pipelines (Table I's 80
     // pipelines share 8 psum banks — a fixed design property, see
@@ -85,7 +111,7 @@ pub fn simulate_mode(
     let row_bytes = cfg.row_bytes() as u64;
 
     for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
-        let mut mc = MemoryController::new(cfg, tech, &matrix_rows);
+        let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
         let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
 
         let mut pipeline_cycles = 0.0f64;
@@ -152,7 +178,7 @@ pub fn simulate_mode(
     ModeReport {
         tensor: tensor.name.clone(),
         mode,
-        tech,
+        tech: t,
         rank: cfg.rank,
         fabric_hz: cfg.fabric_hz,
         pes,
@@ -163,21 +189,40 @@ pub fn simulate_mode(
 pub fn simulate_all_modes(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
-    tech: MemTech,
+    tech: &MemTechnology,
 ) -> SimReport {
     let modes = (0..tensor.n_modes())
         .map(|m| simulate_mode(tensor, m, cfg, tech))
         .collect();
-    SimReport { tensor: tensor.name.clone(), tech, modes }
+    SimReport { tensor: tensor.name.clone(), tech: cfg.tuned_tech(tech), modes }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::registry::tech;
     use crate::tensor::gen::{self, FrosttTensor, TensorSpec};
 
     fn small_cfg() -> AcceleratorConfig {
         AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+    }
+
+    fn assert_valid_partition(parts: &[(usize, usize)], v: &ModeView, n_pes: usize) {
+        assert_eq!(parts.len(), n_pes);
+        assert_eq!(parts[0].0, 0);
+        assert_eq!(parts.last().unwrap().1, v.n_slices());
+        for &(lo, hi) in parts {
+            assert!(lo <= hi, "range ({lo},{hi}) out of order");
+            assert!(hi <= v.n_slices(), "range end {hi} past {}", v.n_slices());
+        }
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous");
+        }
+        let covered: u64 = parts
+            .iter()
+            .flat_map(|&(lo, hi)| (lo..hi).map(|s| v.slice(s).len() as u64))
+            .sum();
+        assert_eq!(covered, v.nnz() as u64, "nnz conserved");
     }
 
     #[test]
@@ -186,12 +231,7 @@ mod tests {
         let v = ModeView::build(&t, 0);
         for n_pes in [1, 2, 4, 7] {
             let parts = partition_slices(&v, n_pes);
-            assert_eq!(parts.len(), n_pes);
-            assert_eq!(parts[0].0, 0);
-            assert_eq!(parts.last().unwrap().1, v.n_slices());
-            for w in parts.windows(2) {
-                assert_eq!(w[0].1, w[1].0, "contiguous");
-            }
+            assert_valid_partition(&parts, &v, n_pes);
         }
     }
 
@@ -210,9 +250,46 @@ mod tests {
     }
 
     #[test]
+    fn partition_with_more_pes_than_slices_is_valid() {
+        // regression: 3 output slices shared by 8 PEs must produce ordered,
+        // non-overlapping ranges with valid empty tails — not garbage
+        let t = gen::random(&[3, 40, 40], 3_000, 5);
+        let v = ModeView::build(&t, 0);
+        assert!(v.n_slices() <= 3);
+        for n_pes in [4, 8, 17] {
+            let parts = partition_slices(&v, n_pes);
+            assert_valid_partition(&parts, &v, n_pes);
+            // at least one PE must be empty, and empty ranges are well-formed
+            assert!(parts.iter().any(|&(lo, hi)| lo == hi));
+        }
+    }
+
+    #[test]
+    fn partition_of_empty_view_is_all_empty() {
+        let t = SparseTensor::new("empty", vec![10, 10]);
+        let v = ModeView::build(&t, 0);
+        let parts = partition_slices(&v, 6);
+        assert_valid_partition(&parts, &v, 6);
+    }
+
+    #[test]
+    fn simulate_with_more_pes_than_slices() {
+        // end to end: empty PE partitions must simulate cleanly and the
+        // nonzero count must be conserved across the PE reports
+        let t = gen::random(&[2, 64, 64], 4_000, 7);
+        let mut cfg = small_cfg();
+        cfg.n_pes = 8;
+        let r = simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        assert_eq!(r.pes.len(), 8);
+        assert_eq!(r.total_nnz(), 4_000);
+        assert!(r.pes.iter().any(|p| p.nnz == 0), "some PE must be empty");
+        assert!(r.runtime_cycles() > 0.0);
+    }
+
+    #[test]
     fn all_nonzeros_processed_once() {
         let t = gen::random(&[64, 64, 64], 10_000, 3);
-        let r = simulate_mode(&t, 0, &small_cfg(), MemTech::ESram);
+        let r = simulate_mode(&t, 0, &small_cfg(), &tech("e-sram"));
         assert_eq!(r.total_nnz(), 10_000);
         assert_eq!(r.pes.len(), 4);
     }
@@ -226,8 +303,8 @@ mod tests {
         ] {
             let t = spec.generate(11);
             for mode in 0..3 {
-                let e = simulate_mode(&t, mode, &cfg, MemTech::ESram);
-                let o = simulate_mode(&t, mode, &cfg, MemTech::OSram);
+                let e = simulate_mode(&t, mode, &cfg, &tech("e-sram"));
+                let o = simulate_mode(&t, mode, &cfg, &tech("o-sram"));
                 assert!(
                     e.runtime_cycles() >= o.runtime_cycles() * 0.999,
                     "{} mode {mode}: E {} < O {}",
@@ -249,8 +326,8 @@ mod tests {
         let cold =
             TensorSpec::custom("cold", vec![800_000, 700_000, 900_000], 60_000, 0.05).generate(5);
         let sp = |t: &SparseTensor| {
-            let e = simulate_mode(t, 0, &cfg, MemTech::ESram);
-            let o = simulate_mode(t, 0, &cfg, MemTech::OSram);
+            let e = simulate_mode(t, 0, &cfg, &tech("e-sram"));
+            let o = simulate_mode(t, 0, &cfg, &tech("o-sram"));
             e.runtime_cycles() / o.runtime_cycles()
         };
         let (sh, sc) = (sp(&hot), sp(&cold));
@@ -266,8 +343,8 @@ mod tests {
         let cfg = small_cfg();
         let t1 = gen::random(&[64, 64, 64], 50_000, 7);
         let t2 = gen::random(&[64, 64, 64], 200_000, 7);
-        let r1 = simulate_mode(&t1, 0, &cfg, MemTech::OSram);
-        let r2 = simulate_mode(&t2, 0, &cfg, MemTech::OSram);
+        let r1 = simulate_mode(&t1, 0, &cfg, &tech("o-sram"));
+        let r2 = simulate_mode(&t2, 0, &cfg, &tech("o-sram"));
         let ratio = r2.runtime_cycles() / r1.runtime_cycles();
         assert!(ratio > 3.5 && ratio < 4.5, "4x nnz should be ~4x time, got {ratio}");
     }
@@ -278,8 +355,8 @@ mod tests {
         let cfg = small_cfg();
         let t1 = gen::random(&[256, 256, 256], 10_000, 7);
         let t2 = gen::random(&[256, 256, 256], 40_000, 7);
-        let r1 = simulate_mode(&t1, 0, &cfg, MemTech::OSram);
-        let r2 = simulate_mode(&t2, 0, &cfg, MemTech::OSram);
+        let r1 = simulate_mode(&t1, 0, &cfg, &tech("o-sram"));
+        let r2 = simulate_mode(&t2, 0, &cfg, &tech("o-sram"));
         assert!(r2.hit_rate() > r1.hit_rate());
     }
 
@@ -287,11 +364,12 @@ mod tests {
     fn all_modes_report_covers_every_mode() {
         let spec = gen::preset(FrosttTensor::Lbnl).scaled(1.0 / 64.0);
         let t = spec.generate(4);
-        let r = simulate_all_modes(&t, &small_cfg(), MemTech::OSram);
+        let r = simulate_all_modes(&t, &small_cfg(), &tech("o-sram"));
         assert_eq!(r.modes.len(), 5);
         for (i, m) in r.modes.iter().enumerate() {
             assert_eq!(m.mode, i);
             assert_eq!(m.total_nnz() as u64, t.nnz() as u64);
+            assert_eq!(m.tech.name, "o-sram");
         }
         assert!(r.total_runtime_s() > 0.0);
     }
@@ -301,7 +379,7 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.n_pes = 1;
         let t = gen::random(&[64, 64], 1000, 9);
-        let r = simulate_mode(&t, 1, &cfg, MemTech::ESram);
+        let r = simulate_mode(&t, 1, &cfg, &tech("e-sram"));
         assert_eq!(r.pes.len(), 1);
         assert_eq!(r.total_nnz(), 1000);
     }
@@ -309,7 +387,7 @@ mod tests {
     #[test]
     fn empty_tensor_simulates_to_near_zero() {
         let t = SparseTensor::new("empty", vec![10, 10]);
-        let r = simulate_mode(&t, 0, &small_cfg(), MemTech::OSram);
+        let r = simulate_mode(&t, 0, &small_cfg(), &tech("o-sram"));
         assert_eq!(r.total_nnz(), 0);
         // only fixed latency overhead remains
         assert!(r.runtime_cycles() < 100.0);
@@ -322,9 +400,22 @@ mod tests {
         c1.n_pes = 1;
         let mut c4 = small_cfg();
         c4.n_pes = 4;
-        let r1 = simulate_mode(&t, 0, &c1, MemTech::OSram);
-        let r4 = simulate_mode(&t, 0, &c4, MemTech::OSram);
+        let r1 = simulate_mode(&t, 0, &c1, &tech("o-sram"));
+        let r4 = simulate_mode(&t, 0, &c4, &tech("o-sram"));
         let sp = r1.runtime_cycles() / r4.runtime_cycles();
         assert!(sp > 2.5, "4 PEs should give ≥2.5x over 1, got {sp}");
+    }
+
+    #[test]
+    fn every_registered_technology_simulates() {
+        // the engine must be closed over the registry: any entry runs
+        let t = gen::random(&[64, 64, 64], 5_000, 21);
+        let cfg = small_cfg();
+        for tname in crate::mem::registry::names() {
+            let r = simulate_mode(&t, 0, &cfg, &tech(&tname));
+            assert_eq!(r.total_nnz(), 5_000, "{tname}");
+            assert!(r.runtime_cycles() > 0.0, "{tname}");
+            assert_eq!(r.tech.name, tname);
+        }
     }
 }

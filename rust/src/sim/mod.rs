@@ -5,7 +5,11 @@
 //!   counters, bottleneck identification.
 //! * [`engine`] — the streaming bottleneck engine: walks the mode-sorted
 //!   nonzero stream through the memory controller / exec-unit timing
-//!   models, O(nnz) per mode.
+//!   models, O(nnz) per mode, for any registry-resolved technology.
+//! * [`sweep`] — the parallel design-space sweep: a deterministic
+//!   {tensor × mode × technology × scale} cartesian product fanned across
+//!   OS threads.
 
 pub mod engine;
 pub mod result;
+pub mod sweep;

@@ -1,7 +1,7 @@
 //! Simulation results: per-PE and per-mode reports.
 
 use crate::cache::cache::CacheStats;
-use crate::mem::tech::MemTech;
+use crate::mem::tech::MemTechnology;
 
 /// Named resources a PE can bottleneck on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,7 +103,10 @@ impl PeReport {
 pub struct ModeReport {
     pub tensor: String,
     pub mode: usize,
-    pub tech: MemTech,
+    /// The resolved (and config-tuned) technology this mode ran on. The
+    /// energy model reads its Table III constants straight from here, so
+    /// a report is self-describing even for config-file technologies.
+    pub tech: MemTechnology,
     pub rank: usize,
     pub fabric_hz: f64,
     pub pes: Vec<PeReport>,
@@ -176,7 +179,7 @@ impl ModeReport {
 #[derive(Clone, Debug)]
 pub struct SimReport {
     pub tensor: String,
-    pub tech: MemTech,
+    pub tech: MemTechnology,
     pub modes: Vec<ModeReport>,
 }
 
@@ -195,6 +198,8 @@ impl SimReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::esram::esram;
+    use crate::mem::osram::osram;
 
     fn pe(dram: f64, cache: f64, psum: f64) -> PeReport {
         PeReport {
@@ -233,7 +238,7 @@ mod tests {
         let m = ModeReport {
             tensor: "t".into(),
             mode: 0,
-            tech: MemTech::ESram,
+            tech: esram(),
             rank: 16,
             fabric_hz: 500e6,
             pes: vec![pe(10.0, 5.0, 1.0), pe(40.0, 5.0, 1.0)],
@@ -253,12 +258,12 @@ mod tests {
         let m = ModeReport {
             tensor: "t".into(),
             mode: 0,
-            tech: MemTech::OSram,
+            tech: osram(),
             rank: 16,
             fabric_hz: 500e6,
             pes: vec![pe(10.0, 5.0, 1.0)],
         };
-        let r = SimReport { tensor: "t".into(), tech: MemTech::OSram, modes: vec![m.clone(), m] };
+        let r = SimReport { tensor: "t".into(), tech: osram(), modes: vec![m.clone(), m] };
         assert_eq!(r.total_runtime_cycles(), 24.0);
     }
 
@@ -271,7 +276,7 @@ mod tests {
         let m = ModeReport {
             tensor: "t".into(),
             mode: 0,
-            tech: MemTech::ESram,
+            tech: esram(),
             rank: 16,
             fabric_hz: 500e6,
             pes: vec![a, b],

@@ -1,0 +1,471 @@
+//! The parallel design-space sweep engine.
+//!
+//! The single-pair reproduction answers "is O-SRAM faster on this
+//! tensor?"; the sweep engine answers the N-dimensional question the open
+//! registry makes possible: the cartesian product of
+//! **{tensor × mode × technology × configuration scale}**, fanned across
+//! OS threads with scoped `std::thread` (no external dependencies) and
+//! returned in a deterministic order — point `i` of the result vector is
+//! always the same scenario with bit-identical numbers regardless of the
+//! thread count (each point is computed independently from shared
+//! immutable inputs, so no floating-point reduction order varies).
+//!
+//! Work is split in two parallel phases:
+//!
+//! 1. **Workload preparation** — one job per (tensor, scale): generate the
+//!    tensor, apply the §IV-A degree remap, scale the accelerator config
+//!    and build its energy model. Shared by every (tech, mode) point so
+//!    generation cost is paid once, not `|techs| × |modes|` times.
+//! 2. **Simulation** — one job per (workload, tech, mode): run the
+//!    bottleneck engine and price the run through Eq. 2–3.
+//!
+//! Throughput notes live in EXPERIMENTS.md §Perf. The CLI front-end is
+//! `photon-mttkrp sweep`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::accel::config::AcceleratorConfig;
+use crate::energy::model::{EnergyBreakdown, EnergyModel};
+use crate::mem::tech::MemTechnology;
+use crate::sim::engine;
+use crate::sim::result::ModeReport;
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+use crate::tensor::gen::TensorSpec;
+use crate::tensor::remap;
+use crate::util::table::{Align, Table};
+
+/// One sweep request: the axes of the cartesian product plus execution
+/// knobs.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Tensor fingerprints to generate (axis 1).
+    pub tensors: Vec<TensorSpec>,
+    /// Workload/accelerator scale factors (axis 2); each scales both the
+    /// tensor spec and the accelerator config coherently, like the paper
+    /// reproduction does.
+    pub scales: Vec<f64>,
+    /// Registry-resolved technologies (axis 3).
+    pub techs: Vec<MemTechnology>,
+    /// Output modes to simulate (axis 4); `None` = every mode of each
+    /// tensor (modes beyond a tensor's arity are skipped, so mixed-arity
+    /// suites sweep cleanly).
+    pub modes: Option<Vec<usize>>,
+    /// Unscaled base accelerator configuration.
+    pub base_cfg: AcceleratorConfig,
+    /// Generator seed (one seed ⇒ one deterministic result set).
+    pub seed: u64,
+    /// OS threads to fan across; 0 = all available cores.
+    pub threads: usize,
+    /// Apply the §IV-A memory mapping before simulating (the driver-path
+    /// behaviour; `false` is the raw-engine ablation).
+    pub remap: bool,
+}
+
+impl SweepSpec {
+    /// A sweep over the given tensors/scales/techs with driver-path
+    /// defaults: all modes, paper-default config, seed 42, all cores.
+    pub fn new(tensors: Vec<TensorSpec>, scales: Vec<f64>, techs: Vec<MemTechnology>) -> Self {
+        SweepSpec {
+            tensors,
+            scales,
+            techs,
+            modes: None,
+            base_cfg: AcceleratorConfig::paper_default(),
+            seed: 42,
+            threads: 0,
+            remap: true,
+        }
+    }
+
+    /// Number of cartesian points this spec expands to.
+    pub fn n_points(&self) -> usize {
+        let modes_of = |spec: &TensorSpec| match &self.modes {
+            None => spec.dims.len(),
+            Some(ms) => ms.iter().filter(|&&m| m < spec.dims.len()).count(),
+        };
+        self.tensors.iter().map(|t| modes_of(t) * self.scales.len() * self.techs.len()).sum()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.tensors.is_empty() || self.scales.is_empty() || self.techs.is_empty() {
+            return Err("sweep needs at least one tensor, scale and technology".into());
+        }
+        for &s in &self.scales {
+            if !(s > 0.0 && s <= 1.0) {
+                return Err(format!("sweep scale {s} outside (0, 1]"));
+            }
+        }
+        let mut seen: Vec<&str> = Vec::new();
+        for t in &self.techs {
+            if seen.contains(&t.name.as_str()) {
+                return Err(format!("technology `{}` listed twice", t.name));
+            }
+            seen.push(&t.name);
+        }
+        // duplicate tensor names would collide in per-scenario grouping
+        // (e.g. the summary table's baseline lookup) and silently pair
+        // rows with the wrong baseline
+        let mut seen_tensors: Vec<&str> = Vec::new();
+        for t in &self.tensors {
+            if seen_tensors.contains(&t.name.as_str()) {
+                return Err(format!("tensor `{}` listed twice", t.name));
+            }
+            seen_tensors.push(&t.name);
+        }
+        // a typo'd --mode must not masquerade as a successful empty run
+        if self.n_points() == 0 {
+            return Err(format!(
+                "sweep expands to zero scenarios: mode filter {:?} matches no tensor arity",
+                self.modes.as_deref().unwrap_or(&[])
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One evaluated scenario of the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Stable index in the cartesian enumeration (== position in the
+    /// result vector).
+    pub index: usize,
+    pub tensor: String,
+    pub scale: f64,
+    pub tech: String,
+    pub mode: usize,
+    pub nnz: u64,
+    /// The full per-PE report (timing, traffic, cache stats).
+    pub report: ModeReport,
+    /// Eq. 2–3 energy of this mode.
+    pub energy: EnergyBreakdown,
+}
+
+impl SweepPoint {
+    pub fn runtime_s(&self) -> f64 {
+        self.report.runtime_s()
+    }
+    pub fn runtime_cycles(&self) -> f64 {
+        self.report.runtime_cycles()
+    }
+    pub fn hit_rate(&self) -> f64 {
+        self.report.hit_rate()
+    }
+}
+
+/// A prepared (tensor × scale) workload shared by all its points: the
+/// generated (and remapped) tensor, its scaled config/energy model, and
+/// the prebuilt per-mode CSF views, so none of that O(nnz) work repeats
+/// per technology.
+struct Workload {
+    tensor: SparseTensor,
+    tensor_name: String,
+    scale: f64,
+    cfg: AcceleratorConfig,
+    energy: EnergyModel,
+    /// `(mode, view)` for every mode this sweep will simulate.
+    views: Vec<(usize, ModeView)>,
+}
+
+/// The modes the spec simulates for a tensor of the given arity.
+fn modes_for(spec: &SweepSpec, arity: usize) -> Vec<usize> {
+    match &spec.modes {
+        None => (0..arity).collect(),
+        Some(ms) => ms.iter().copied().filter(|&m| m < arity).collect(),
+    }
+}
+
+/// Deterministic-order parallel map: spawns up to `threads` scoped OS
+/// threads that claim indices from an atomic counter; slot `i` of the
+/// output always holds `f(&items[i])`.
+fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n_threads = threads.clamp(1, items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
+        .collect()
+}
+
+/// Threads a spec will actually use (0 ⇒ all available cores).
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Run the sweep. Returns one [`SweepPoint`] per cartesian scenario, in
+/// deterministic enumeration order (tensor-major, then scale, then tech,
+/// then mode) regardless of `spec.threads`.
+pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
+    spec.validate()?;
+    let threads = effective_threads(spec.threads);
+
+    // Phase 1: prepare workloads (tensor × scale), in parallel.
+    let wl_jobs: Vec<(usize, usize)> = (0..spec.tensors.len())
+        .flat_map(|ti| (0..spec.scales.len()).map(move |si| (ti, si)))
+        .collect();
+    let workloads: Vec<Workload> = parallel_map(&wl_jobs, threads, |&(ti, si)| {
+        let scale = spec.scales[si];
+        let tspec = spec.tensors[ti].clone().scaled(scale);
+        let mut tensor = tspec.generate(spec.seed);
+        if spec.remap {
+            let remaps = remap::degree_remaps(&tensor);
+            remap::apply(&mut tensor, &remaps);
+        }
+        let cfg = spec.base_cfg.clone().scaled(scale);
+        let energy = EnergyModel::new(&cfg);
+        let views = modes_for(spec, tensor.n_modes())
+            .into_iter()
+            .map(|m| (m, ModeView::build(&tensor, m)))
+            .collect();
+        // group points under the *base* spec name; the scale is its own
+        // axis (the scaled spec renames itself to e.g. `nell-2@1e-3`)
+        Workload { tensor_name: spec.tensors[ti].name.clone(), tensor, scale, cfg, energy, views }
+    });
+
+    // Phase 2: enumerate and evaluate the cartesian points.
+    let jobs: Vec<(usize, usize, usize)> = wl_jobs
+        .iter()
+        .enumerate()
+        .flat_map(|(wi, &(ti, _))| {
+            let modes = modes_for(spec, spec.tensors[ti].dims.len());
+            spec.techs
+                .iter()
+                .enumerate()
+                .flat_map(move |(xi, _)| modes.clone().into_iter().map(move |m| (wi, xi, m)))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    let points = parallel_map(&jobs, threads, |&(wi, xi, mode)| {
+        let wl = &workloads[wi];
+        let (_, view) = wl
+            .views
+            .iter()
+            .find(|(m, _)| *m == mode)
+            .expect("view prepared for every enumerated mode");
+        let report =
+            engine::simulate_mode_with_view(&wl.tensor, view, mode, &wl.cfg, &spec.techs[xi]);
+        let energy = wl.energy.mode_energy(&report);
+        SweepPoint {
+            index: 0, // fixed up below (enumeration order == job order)
+            tensor: wl.tensor_name.clone(),
+            scale: wl.scale,
+            tech: spec.techs[xi].name.clone(),
+            mode,
+            nnz: report.total_nnz(),
+            report,
+            energy,
+        }
+    });
+    let mut points = points;
+    for (i, p) in points.iter_mut().enumerate() {
+        p.index = i;
+    }
+    Ok(points)
+}
+
+/// Render the sweep as a table: one row per point, with each point's
+/// speedup over the same scenario on the sweep's first (baseline)
+/// technology.
+pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
+    let base_tech = spec.techs.first().map(|t| t.name.clone()).unwrap_or_default();
+    // baseline runtimes by scenario, so rendering stays O(n) for the
+    // thousands-of-points grids the parallel engine makes cheap to run
+    let baselines: std::collections::HashMap<(&str, u64, usize), f64> = points
+        .iter()
+        .filter(|q| q.tech == base_tech)
+        .map(|q| ((q.tensor.as_str(), q.scale.to_bits(), q.mode), q.runtime_cycles()))
+        .collect();
+    let mut t = Table::new(
+        &format!("sweep: {} points, baseline {base_tech}", points.len()),
+        &["tensor", "scale", "mode", "tech", "runtime", "hit", "bottleneck", "energy", "speedup"],
+    )
+    .align(0, Align::Left)
+    .align(3, Align::Left)
+    .align(6, Align::Left);
+    for p in points {
+        let base = baselines
+            .get(&(p.tensor.as_str(), p.scale.to_bits(), p.mode))
+            .copied()
+            .unwrap_or(f64::NAN);
+        t.row(vec![
+            p.tensor.clone(),
+            format!("{:.1e}", p.scale),
+            format!("M{}", p.mode),
+            p.tech.clone(),
+            format!("{:.3e} s", p.runtime_s()),
+            format!("{:.1}%", p.hit_rate() * 100.0),
+            p.report.bottleneck().name().to_string(),
+            format!("{:.3e} J", p.energy.total_j()),
+            format!("{:.2}x", base / p.runtime_cycles()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::registry::tech;
+    use crate::tensor::gen::TensorSpec;
+
+    fn tiny_spec(threads: usize) -> SweepSpec {
+        let mut s = SweepSpec::new(
+            vec![
+                TensorSpec::custom("hot", vec![48, 48, 48], 8_000, 1.1),
+                TensorSpec::custom("cold", vec![9_000, 8_000, 7_000], 6_000, 0.2),
+            ],
+            vec![1.0 / 64.0],
+            vec![tech("e-sram"), tech("o-sram"), tech("o-sram-imc")],
+        );
+        s.threads = threads;
+        s
+    }
+
+    #[test]
+    fn point_count_matches_the_cartesian_product() {
+        let s = tiny_spec(1);
+        // 2 tensors × 1 scale × 3 techs × 3 modes
+        assert_eq!(s.n_points(), 18);
+        let points = run_sweep(&s).unwrap();
+        assert_eq!(points.len(), 18);
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert!(p.runtime_cycles() > 0.0);
+            // nnz scales with the workload: 8000/64 = 125, 6000/64 ≈ 94
+            assert_eq!(p.nnz, if p.tensor == "hot" { 125 } else { 94 });
+        }
+    }
+
+    #[test]
+    fn enumeration_order_is_tensor_scale_tech_mode() {
+        let points = run_sweep(&tiny_spec(1)).unwrap();
+        assert_eq!(points[0].tensor, "hot");
+        assert_eq!((points[0].tech.as_str(), points[0].mode), ("e-sram", 0));
+        assert_eq!((points[1].tech.as_str(), points[1].mode), ("e-sram", 1));
+        assert_eq!((points[3].tech.as_str(), points[3].mode), ("o-sram", 0));
+        assert_eq!(points[9].tensor, "cold");
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let base = run_sweep(&tiny_spec(1)).unwrap();
+        for threads in [2, 4, 8] {
+            let other = run_sweep(&tiny_spec(threads)).unwrap();
+            assert_eq!(base.len(), other.len(), "threads={threads}");
+            for (a, b) in base.iter().zip(&other) {
+                assert_eq!(a.tensor, b.tensor);
+                assert_eq!(a.tech, b.tech);
+                assert_eq!(a.mode, b.mode);
+                // bit-identical, not approximately equal
+                assert_eq!(
+                    a.runtime_cycles().to_bits(),
+                    b.runtime_cycles().to_bits(),
+                    "threads={threads} point {}",
+                    a.index
+                );
+                assert_eq!(
+                    a.energy.total_j().to_bits(),
+                    b.energy.total_j().to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_arity_suites_skip_missing_modes() {
+        let mut s = SweepSpec::new(
+            vec![
+                TensorSpec::custom("three", vec![32, 32, 32], 2_000, 1.0),
+                TensorSpec::custom("four", vec![32, 32, 32, 32], 2_000, 1.0),
+            ],
+            vec![1.0 / 64.0],
+            vec![tech("o-sram")],
+        );
+        s.modes = Some(vec![0, 3]);
+        // mode 3 exists only for the 4-way tensor
+        assert_eq!(s.n_points(), 3);
+        let points = run_sweep(&s).unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].mode, 0);
+        assert_eq!(points[1].mode, 0);
+        assert_eq!(points[2].mode, 3);
+    }
+
+    #[test]
+    fn sweep_matches_single_runs_exactly() {
+        // a sweep point must be bit-identical to the same scenario run
+        // through the driver path by hand
+        let s = tiny_spec(4);
+        let points = run_sweep(&s).unwrap();
+        let scale = s.scales[0];
+        let cfg = s.base_cfg.clone().scaled(scale);
+        let tensor = s.tensors[0].clone().scaled(scale).generate(s.seed);
+        let direct =
+            crate::coordinator::driver::simulate_mode(&tensor, 1, &cfg, &tech("o-sram"));
+        let p = points
+            .iter()
+            .find(|p| p.tensor == "hot" && p.tech == "o-sram" && p.mode == 1)
+            .unwrap();
+        assert_eq!(p.runtime_cycles().to_bits(), direct.runtime_cycles().to_bits());
+        assert_eq!(p.hit_rate(), direct.hit_rate());
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let mut s = tiny_spec(1);
+        s.scales = vec![2.0];
+        assert!(run_sweep(&s).is_err());
+        let mut s = tiny_spec(1);
+        s.techs.push(tech("e-sram"));
+        assert!(run_sweep(&s).is_err());
+        let mut s = tiny_spec(1);
+        s.techs.clear();
+        assert!(run_sweep(&s).is_err());
+        // duplicate tensor names would mispair summary-table baselines
+        let mut s = tiny_spec(1);
+        s.tensors.push(TensorSpec::custom("hot", vec![8, 8, 8], 10, 0.0));
+        assert!(run_sweep(&s).is_err());
+        // a mode filter matching no tensor arity must error, not return
+        // an empty success
+        let mut s = tiny_spec(1);
+        s.modes = Some(vec![9]);
+        let e = run_sweep(&s).unwrap_err();
+        assert!(e.contains("zero scenarios"), "{e}");
+    }
+
+    #[test]
+    fn summary_table_has_one_row_per_point() {
+        let s = tiny_spec(2);
+        let points = run_sweep(&s).unwrap();
+        let t = summary_table(&s, &points);
+        assert_eq!(t.n_rows(), points.len());
+        let rendered = t.render_ascii();
+        assert!(rendered.contains("o-sram-imc"));
+        // baseline rows compare against themselves at exactly 1.00x
+        assert!(rendered.contains("1.00x"));
+    }
+}

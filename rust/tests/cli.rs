@@ -12,13 +12,13 @@ fn help_lists_subcommands() {
     let out = bin().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["info", "simulate", "reproduce", "cpals", "mttkrp"] {
+    for sub in ["info", "simulate", "sweep", "reproduce", "cpals", "mttkrp"] {
         assert!(text.contains(sub), "help missing `{sub}`:\n{text}");
     }
 }
 
 #[test]
-fn info_prints_tables() {
+fn info_prints_tables_and_the_registry() {
     let out = bin().args(["info", "--tensors"]).output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
@@ -27,6 +27,11 @@ fn info_prints_tables() {
     assert!(text.contains("Table IV"));
     assert!(text.contains("nell-2"));
     assert!(text.contains("4.68"));
+    // the open registry is part of the platform echo
+    assert!(text.contains("Registered memory technologies"), "{text}");
+    for tech in ["e-sram", "o-sram", "o-sram-imc", "e-uram"] {
+        assert!(text.contains(tech), "registry listing missing `{tech}`:\n{text}");
+    }
 }
 
 #[test]
@@ -79,4 +84,102 @@ fn mttkrp_on_tns_file() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("3 nnz"), "{text}");
+}
+
+#[test]
+fn simulate_a_registry_technology_by_name() {
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "o-sram-imc", "--mode", "0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("M0 [o-sram-imc]"), "{text}");
+}
+
+#[test]
+fn simulate_all_compares_every_registered_tech() {
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "all"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for tech in ["e-sram", "o-sram", "o-sram-imc", "e-uram"] {
+        assert!(text.contains(tech), "missing `{tech}`:\n{text}");
+    }
+}
+
+#[test]
+fn mode_filter_is_rejected_for_multi_tech_simulate() {
+    // --mode silently ignored would mislabel whole-run numbers; it must
+    // error for `both`/`all` and point at the working spellings
+    for tech in ["both", "all"] {
+        let out = bin()
+            .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", tech, "--mode", "0"])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "--tech {tech} --mode must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("--mode"), "{err}");
+    }
+}
+
+#[test]
+fn unknown_tech_lists_the_registry() {
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "t-sram"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("t-sram") && err.contains("e-sram"), "{err}");
+}
+
+#[test]
+fn sweep_runs_a_three_by_three_grid_in_parallel() {
+    // acceptance-criteria scenario: >=3 technologies x >=3 tensors
+    let out = bin()
+        .args([
+            "sweep",
+            "--tensor", "nell-2", "--tensor", "nell-1", "--tensor", "patents",
+            "--tech", "e-sram", "--tech", "o-sram", "--tech", "o-sram-imc",
+            "--scale", "0.0001",
+            "--threads", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // 3 tensors x 3 modes x 3 techs = 27 scenario rows
+    assert!(text.contains("sweep: 27 points"), "{text}");
+    for needle in ["nell-2", "nell-1", "patents", "o-sram-imc", "speedup"] {
+        assert!(text.contains(needle), "missing `{needle}`:\n{text}");
+    }
+    let meta = String::from_utf8_lossy(&out.stderr);
+    assert!(meta.contains("on 4 threads"), "{meta}");
+}
+
+#[test]
+fn sweep_accepts_config_defined_technologies() {
+    // process-unique path so concurrent suites on one machine don't race
+    let dir = std::env::temp_dir().join(format!("photon_cli_tech_{}.toml", std::process::id()));
+    std::fs::write(
+        &dir,
+        "[tech.cryo-sram]\nsummary = \"cryo what-if\"\nbase = \"e-sram\"\nfreq_mhz = 1000.0\n",
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "sweep",
+            "--config", dir.to_str().unwrap(),
+            "--tensor", "nell-2",
+            "--tech", "cryo-sram", "--tech", "e-sram",
+            "--scale", "0.0001",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cryo-sram"), "{text}");
 }

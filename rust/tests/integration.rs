@@ -3,9 +3,9 @@
 //! E-vs-O orderings on the real generator suite, and config plumbing.
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
-use photon_mttkrp::coordinator::driver::{self, compare_technologies};
+use photon_mttkrp::coordinator::driver::{self, compare_paper_pair};
 use photon_mttkrp::energy::model::EnergyModel;
-use photon_mttkrp::mem::tech::MemTech;
+use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::mttkrp::reference::{max_rel_diff, mttkrp, FactorMatrix};
 use photon_mttkrp::mttkrp::trace;
 use photon_mttkrp::sim::engine;
@@ -22,7 +22,7 @@ fn simulated_traffic_matches_analytic_totals() {
     // the engine's accounting must agree exactly.
     let t = gen::random(&[128, 96, 160], 30_000, 11);
     let c = cfg(1.0 / 64.0);
-    let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+    let r = engine::simulate_mode(&t, 0, &c, &tech("o-sram"));
     let totals = trace::mode_totals(&t, 0, c.rank);
 
     // every nonzero streamed once: (4N+4) bytes each, plus one output row
@@ -89,8 +89,8 @@ fn suite_orderings_hold_across_seeds() {
         let c = cfg(scale);
         let hot = gen::preset(FrosttTensor::Nell2).scaled(scale).generate(seed);
         let cold = gen::preset(FrosttTensor::Nell1).scaled(scale).generate(seed);
-        let sh = compare_technologies(&hot, &c).total_speedup();
-        let sc = compare_technologies(&cold, &c).total_speedup();
+        let sh = compare_paper_pair(&hot, &c).total_speedup("o-sram");
+        let sc = compare_paper_pair(&cold, &c).total_speedup("o-sram");
         assert!(sh > sc + 0.3, "seed {seed}: nell-2 {sh} vs nell-1 {sc}");
         assert!(sc >= 0.99, "seed {seed}: O-SRAM must never lose ({sc})");
     }
@@ -102,8 +102,8 @@ fn energy_decomposition_is_exhaustive_and_ordered() {
     let c = cfg(scale);
     let t = gen::preset(FrosttTensor::Nell2).scaled(scale).generate(5);
     let m = EnergyModel::new(&c);
-    let re = driver::simulate_all_modes(&t, &c, MemTech::ESram);
-    let ro = driver::simulate_all_modes(&t, &c, MemTech::OSram);
+    let re = driver::simulate_all_modes(&t, &c, &tech("e-sram"));
+    let ro = driver::simulate_all_modes(&t, &c, &tech("o-sram"));
     let ee = m.run_energy(&re);
     let eo = m.run_energy(&ro);
     // identical DRAM traffic ⇒ identical DRAM energy
@@ -121,12 +121,12 @@ fn five_mode_and_four_mode_tensors_full_pipeline() {
     let c = cfg(scale);
     for ft in [FrosttTensor::Lbnl, FrosttTensor::Delicious] {
         let t = gen::preset(ft).scaled(scale / 16.0).generate(3);
-        let cmp = compare_technologies(&t, &c);
-        assert_eq!(cmp.mode_speedups().len(), t.n_modes());
-        for s in cmp.mode_speedups() {
+        let cmp = compare_paper_pair(&t, &c);
+        assert_eq!(cmp.mode_speedups("o-sram").len(), t.n_modes());
+        for s in cmp.mode_speedups("o-sram") {
             assert!(s >= 0.99 && s < 10.0, "{}: speedup {s}", ft.name());
         }
-        assert!(cmp.energy_savings() > 1.0);
+        assert!(cmp.energy_savings("o-sram") > 1.0);
     }
 }
 
@@ -143,7 +143,7 @@ fn config_file_roundtrip_changes_simulation() {
     assert_eq!(c.cache_lines, 256);
     assert_ne!(c.cache_lines, lines_before);
     let t = gen::random(&[100, 100, 100], 5_000, 1);
-    let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+    let r = engine::simulate_mode(&t, 0, &c, &tech("o-sram"));
     assert_eq!(r.pes.len(), 1);
 }
 
@@ -159,7 +159,7 @@ fn tns_file_to_simulation_path() {
     let loaded = photon_mttkrp::tensor::coo::SparseTensor::load_tns(&dir).unwrap();
     assert_eq!(loaded.nnz(), 2_000);
     let c = cfg(1.0 / 64.0);
-    let r = engine::simulate_mode(&loaded, 0, &c, MemTech::ESram);
+    let r = engine::simulate_mode(&loaded, 0, &c, &tech("e-sram"));
     assert_eq!(r.total_nnz(), 2_000);
     let factors: Vec<FactorMatrix> = loaded
         .dims
@@ -178,8 +178,8 @@ fn rank_sweep_scales_compute_linearly() {
     let mut c32 = c16.clone();
     c32.rank = 32;
     c32.line_bytes = 128; // keep one row per line
-    let r16 = engine::simulate_mode(&t, 0, &c16, MemTech::OSram);
-    let r32 = engine::simulate_mode(&t, 0, &c32, MemTech::OSram);
+    let r16 = engine::simulate_mode(&t, 0, &c16, &tech("o-sram"));
+    let r32 = engine::simulate_mode(&t, 0, &c32, &tech("o-sram"));
     let p16: f64 = r16.pes.iter().map(|p| p.pipeline_cycles).sum();
     let p32: f64 = r32.pes.iter().map(|p| p.pipeline_cycles).sum();
     assert!((p32 / p16 - 2.0).abs() < 1e-9, "R(N-1)/P is linear in R");
@@ -193,7 +193,7 @@ fn zipf_alpha_monotonically_improves_hit_rate() {
     let mut last = -1.0;
     for (i, alpha) in [0.0, 0.6, 1.0, 1.4].iter().enumerate() {
         let t = TensorSpec::custom("a", vec![50_000, 50_000, 50_000], 60_000, *alpha).generate(4);
-        let r = engine::simulate_mode(&t, 0, &c, MemTech::OSram);
+        let r = engine::simulate_mode(&t, 0, &c, &tech("o-sram"));
         let hit = r.hit_rate();
         assert!(hit >= last - 0.02, "alpha step {i}: hit {hit} after {last}");
         last = hit;

@@ -1,0 +1,212 @@
+//! Registry parity and sweep determinism.
+//!
+//! The refactor from the closed two-variant enum to the open technology
+//! registry must be *numerically invisible*: a simulation, energy and
+//! area evaluation driven by the registry-resolved `e-sram`/`o-sram`
+//! parameter sets must be byte-identical to one driven by the
+//! directly-constructed device tables (`mem::esram::esram()` /
+//! `mem::osram::osram()`) that the pre-refactor enum dispatched to.
+//! These tests pin that equivalence bit-for-bit, and pin the sweep
+//! engine's thread-count independence on top of it.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::area::model::AreaModel;
+use photon_mttkrp::coordinator::driver;
+use photon_mttkrp::energy::model::EnergyModel;
+use photon_mttkrp::mem::registry::{self, tech, TechRegistry};
+use photon_mttkrp::mem::tech::MemTechnology;
+use photon_mttkrp::mem::{esram::esram, osram::osram};
+use photon_mttkrp::sim::result::SimReport;
+use photon_mttkrp::sim::sweep::{run_sweep, SweepSpec};
+use photon_mttkrp::tensor::gen::{preset, FrosttTensor, TensorSpec};
+
+fn cfg() -> AcceleratorConfig {
+    AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+}
+
+/// Bit-exact SimReport equality (runtimes, per-PE resources, traffic,
+/// cache stats, energy feeders).
+fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.tensor, b.tensor);
+    assert_eq!(a.tech, b.tech);
+    assert_eq!(a.modes.len(), b.modes.len());
+    for (ma, mb) in a.modes.iter().zip(&b.modes) {
+        assert_eq!(ma.runtime_cycles().to_bits(), mb.runtime_cycles().to_bits());
+        assert_eq!(ma.pes.len(), mb.pes.len());
+        for (pa, pb) in ma.pes.iter().zip(&mb.pes) {
+            assert_eq!(pa.nnz, pb.nnz);
+            assert_eq!(pa.slices, pb.slices);
+            assert_eq!(pa.dram_cycles.to_bits(), pb.dram_cycles.to_bits());
+            assert_eq!(pa.psum_cycles.to_bits(), pb.psum_cycles.to_bits());
+            assert_eq!(pa.pipeline_cycles.to_bits(), pb.pipeline_cycles.to_bits());
+            assert_eq!(pa.stream_dma_cycles.to_bits(), pb.stream_dma_cycles.to_bits());
+            assert_eq!(pa.element_dma_cycles.to_bits(), pb.element_dma_cycles.to_bits());
+            assert_eq!(pa.cache_stats, pb.cache_stats);
+            assert_eq!(pa.dram_stream_bytes, pb.dram_stream_bytes);
+            assert_eq!(pa.dram_random_bytes, pb.dram_random_bytes);
+            assert_eq!(pa.cache_words, pb.cache_words);
+            assert_eq!(pa.psum_words, pb.psum_words);
+            assert_eq!(pa.dma_words, pb.dma_words);
+        }
+    }
+}
+
+#[test]
+fn registry_parameter_sets_equal_the_device_tables() {
+    // the registry must hand out the exact structs the enum paths built
+    assert_eq!(tech("e-sram"), esram());
+    assert_eq!(tech("o-sram"), osram());
+}
+
+#[test]
+fn registry_resolved_simulation_is_byte_identical() {
+    let c = cfg();
+    let t = preset(FrosttTensor::Nell2).scaled(1.0 / 4096.0).generate(42);
+    for (name, direct) in [("e-sram", esram()), ("o-sram", osram())] {
+        let via_registry = driver::simulate_all_modes(&t, &c, &tech(name));
+        let via_struct = driver::simulate_all_modes(&t, &c, &direct);
+        assert_reports_identical(&via_registry, &via_struct);
+    }
+}
+
+#[test]
+fn registry_resolved_energy_is_byte_identical() {
+    let c = cfg();
+    let t = TensorSpec::custom("e", vec![90, 90, 90], 15_000, 1.0).generate(7);
+    let em = EnergyModel::new(&c);
+    for (name, direct) in [("e-sram", esram()), ("o-sram", osram())] {
+        let er = em.run_energy(&driver::simulate_all_modes(&t, &c, &tech(name)));
+        let es = em.run_energy(&driver::simulate_all_modes(&t, &c, &direct));
+        assert_eq!(er.compute_j.to_bits(), es.compute_j.to_bits());
+        assert_eq!(er.dram_j.to_bits(), es.dram_j.to_bits());
+        assert_eq!(er.static_j.to_bits(), es.static_j.to_bits());
+        assert_eq!(er.switching_j.to_bits(), es.switching_j.to_bits());
+    }
+}
+
+#[test]
+fn registry_resolved_area_is_byte_identical() {
+    let m = AreaModel::new(&AcceleratorConfig::paper_default());
+    for (name, direct) in [("e-sram", esram()), ("o-sram", osram())] {
+        let ar = m.platform(&tech(name));
+        let ad = m.platform(&direct);
+        assert_eq!(ar.onchip_mem_mm2.to_bits(), ad.onchip_mem_mm2.to_bits());
+        assert_eq!(ar.total_mm2().to_bits(), ad.total_mm2().to_bits());
+    }
+    // the paper's Table IV numbers survive the registry path
+    assert!((m.platform(&tech("e-sram")).onchip_mem_mm2 - 43.2).abs() < 1e-6);
+    assert!((m.platform(&tech("o-sram")).onchip_mem_mm2 - 103.7e4).abs() / 103.7e4 < 1e-9);
+}
+
+#[test]
+fn paper_pair_comparison_preserves_the_headline_orderings() {
+    // the Fig. 7 / Fig. 8 story must hold through the N-way comparison
+    let scale = 1.0 / 8192.0;
+    let c = AcceleratorConfig::paper_default().scaled(scale);
+    let hot = preset(FrosttTensor::Nell2).scaled(scale).generate(1);
+    let cmp = driver::compare_paper_pair(&hot, &c);
+    assert!(cmp.total_speedup("o-sram") > 1.0);
+    assert!(cmp.energy_savings("o-sram") > 1.0);
+}
+
+#[test]
+fn config_defined_tech_flows_through_every_layer() {
+    // a custom technology defined in a config file must simulate, price
+    // energy and area — no layer may special-case the builtin names
+    let file = photon_mttkrp::util::configfile::Config::parse(
+        "[tech.test-layers]\nbase = \"o-sram\"\nwavelengths = 3\nlanes_per_core_cycle = 3\n",
+    )
+    .unwrap();
+    let mut reg = TechRegistry::builtin();
+    reg.load_config(&file).unwrap();
+    let custom = reg.resolve("test-layers").unwrap();
+    let c = cfg();
+    let t = TensorSpec::custom("cfg", vec![64, 64, 64], 8_000, 1.0).generate(3);
+    let run = driver::simulate_all_modes(&t, &c, &custom);
+    assert_eq!(run.tech.name, "test-layers");
+    assert!(run.total_runtime_s() > 0.0);
+    // 3λ sits between the 2-port electrical and 5λ optical arrays
+    let fast = driver::simulate_all_modes(&t, &c, &tech("o-sram"));
+    let slow = driver::simulate_all_modes(&t, &c, &tech("e-sram"));
+    assert!(run.total_runtime_cycles() <= slow.total_runtime_cycles() * 1.001);
+    assert!(run.total_runtime_cycles() >= fast.total_runtime_cycles() * 0.999);
+    // energy + area price through the same per-bit model
+    let e = EnergyModel::new(&c).run_energy(&run);
+    assert!(e.total_j() > 0.0);
+    let area = AreaModel::new(&c).platform(&custom);
+    assert!(area.total_mm2() > 0.0);
+}
+
+#[test]
+fn sweep_is_deterministic_across_thread_counts() {
+    let mk = |threads: usize| {
+        let mut s = SweepSpec::new(
+            vec![
+                preset(FrosttTensor::Nell2),
+                preset(FrosttTensor::Nell1),
+                preset(FrosttTensor::Lbnl),
+            ],
+            vec![1.0 / 8192.0],
+            vec![tech("e-sram"), tech("o-sram"), tech("o-sram-imc"), tech("e-uram")],
+        );
+        s.threads = threads;
+        s
+    };
+    let reference = run_sweep(&mk(1)).unwrap();
+    // 2 three-mode tensors + 1 five-mode tensor, 4 techs: (3+3+5)*4
+    assert_eq!(reference.len(), 44);
+    for threads in [2, 3, 8, 32] {
+        let run = run_sweep(&mk(threads)).unwrap();
+        assert_eq!(run.len(), reference.len());
+        for (a, b) in reference.iter().zip(&run) {
+            assert_eq!(a.index, b.index);
+            assert_eq!((a.tensor.as_str(), a.tech.as_str(), a.mode), (b.tensor.as_str(), b.tech.as_str(), b.mode));
+            assert_eq!(
+                a.runtime_cycles().to_bits(),
+                b.runtime_cycles().to_bits(),
+                "threads={threads}, point {}",
+                a.index
+            );
+            assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+        }
+    }
+}
+
+#[test]
+fn sweep_agrees_with_the_driver_path_bit_for_bit() {
+    let scale = 1.0 / 8192.0;
+    let mut s = SweepSpec::new(
+        vec![preset(FrosttTensor::Nell2)],
+        vec![scale],
+        vec![tech("o-sram")],
+    );
+    s.threads = 4;
+    let points = run_sweep(&s).unwrap();
+    let c = AcceleratorConfig::paper_default().scaled(scale);
+    let t = preset(FrosttTensor::Nell2).scaled(scale).generate(s.seed);
+    let direct = driver::simulate_all_modes(&t, &c, &tech("o-sram"));
+    assert_eq!(points.len(), direct.modes.len());
+    for (p, m) in points.iter().zip(&direct.modes) {
+        assert_eq!(p.runtime_cycles().to_bits(), m.runtime_cycles().to_bits());
+    }
+}
+
+#[test]
+fn global_registry_reaches_the_required_sweep_width() {
+    // acceptance: a ≥3-technology × ≥3-tensor sweep must be expressible
+    // straight from the builtins
+    assert!(registry::names().len() >= 3);
+    let techs: Vec<MemTechnology> = registry::all();
+    let mut s = SweepSpec::new(
+        vec![
+            preset(FrosttTensor::Nell2),
+            preset(FrosttTensor::Nell1),
+            preset(FrosttTensor::Patents),
+        ],
+        vec![1.0 / 16384.0],
+        techs,
+    );
+    s.threads = 0; // all cores
+    let points = run_sweep(&s).unwrap();
+    assert_eq!(points.len(), 3 * 3 * registry::names().len());
+}

@@ -1,0 +1,183 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the real
+//! `anyhow` cannot be fetched; this vendored crate provides exactly the
+//! surface photon-mttkrp uses — [`Error`], [`Result`], the [`bail!`] and
+//! [`anyhow!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option` — with compatible semantics (contexts wrap the message,
+//! sources are preserved for the Debug chain).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically-typed error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error, keeping it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|b| b.as_ref() as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for (i, cause) in self.chain().enumerate() {
+            if i == 0 {
+                write!(f, "\n\nCaused by:")?;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error` (mirroring
+// the real anyhow), which is what makes this blanket conversion coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to the error (or `None`) case of a fallible value.
+pub trait Context<T>: Sized {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_context_compose() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+        let r: Result<()> = Err(io_err()).context("opening file");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "opening file: gone");
+        assert_eq!(e.chain().count(), 1);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_option_and_result() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        let some = Some(7u32).context("unused").unwrap();
+        assert_eq!(some, 7);
+        let ok: std::result::Result<u32, std::io::Error> = Ok(3);
+        assert_eq!(ok.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros_format() {
+        fn f(x: u32) -> Result<u32> {
+            if x > 3 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(9).unwrap_err().to_string(), "x too large: 9");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(e.to_string(), "plain message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
