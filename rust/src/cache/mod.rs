@@ -11,6 +11,14 @@
 //!   compare → LRU update → data access) and MEM pipeline (Fig. 5) as
 //!   issue-rate/latency parameters derived from the plugged
 //!   [`MemTechnology`](crate::mem::tech::MemTechnology).
+//!
+//! Both simulation engines drive the *same* functional cache, so hit
+//! rates are engine-independent; they consume the timing differently:
+//! the analytic engine ([`crate::sim::engine`]) charges aggregate
+//! occupancy per access, while the event engine ([`crate::sim::event`])
+//! arbitrates accesses across the array's
+//! [`bank_factor`](crate::accel::config::AcceleratorConfig::bank_factor)
+//! banks and measures the serialization that same-bank collisions add.
 
 pub mod cache;
 pub mod lru;

@@ -2,5 +2,13 @@
 //! right engine — caches for reusable factor rows, streaming DMA for
 //! sequential tensor/output traffic, element-wise DMA for locality-free
 //! accesses.
+//!
+//! [`mc::MemoryController`] is the shared functional + accounting core of
+//! **both** simulation backends: the analytic engine
+//! ([`crate::sim::engine`]) uses its accumulated busy totals directly,
+//! and the event engine ([`crate::sim::event`]) replays the
+//! [`mc::Served`] outcomes of the very same calls through arbitrated
+//! bank/channel clocks. Traffic, hit rates and active-word counters are
+//! therefore bit-identical across engines by construction.
 
 pub mod mc;

@@ -4,11 +4,16 @@
 //!   (timing, traffic, energy counters) for one tensor on one memory
 //!   technology, with the paper's locality-enhancing remapping applied
 //!   first (§IV-A "determine a mapping of X into memory for each mode").
+//!   The `_with_engine` variants select the simulation backend
+//!   ([`EngineKind`]: analytic roofline or event-driven contention).
 //! * [`compare_technologies`] — the N-way generalization of the Fig. 7 /
 //!   Fig. 8 primitive: run any list of registry-resolved technologies on
 //!   one tensor and report per-mode speedups + run-energy ratios against
 //!   the first (baseline) entry.
 //! * [`compare_paper_pair`] — the paper's exact E-SRAM vs O-SRAM pair.
+//! * [`cross_validate`] — run both engines on one tensor per technology
+//!   and report the analytic-vs-event runtime delta (the roofline model's
+//!   error bound on that workload).
 //! * [`compute_mode`] — the numeric path: real MTTKRP values through the
 //!   AOT artifacts (or the scalar reference when artifacts are absent).
 
@@ -19,8 +24,8 @@ use crate::mem::tech::MemTechnology;
 use crate::mttkrp::block::mttkrp_via_artifacts;
 use crate::mttkrp::reference::{mttkrp, FactorMatrix};
 use crate::runtime::client::Runtime;
-use crate::sim::engine;
 use crate::sim::result::{ModeReport, SimReport};
+use crate::sim::EngineKind;
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::remap;
 
@@ -34,25 +39,48 @@ pub fn apply_memory_mapping(tensor: &SparseTensor) -> SparseTensor {
     t
 }
 
-/// Simulate one output mode (with the memory mapping applied).
+/// Simulate one output mode (with the memory mapping applied) on the
+/// analytic engine.
 pub fn simulate_mode(
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> ModeReport {
-    let t = apply_memory_mapping(tensor);
-    engine::simulate_mode(&t, mode, cfg, tech)
+    simulate_mode_with_engine(tensor, mode, cfg, tech, EngineKind::Analytic)
 }
 
-/// Simulate all modes (the full spMTTKRP of Fig. 7's x-axis).
+/// [`simulate_mode`] on an explicitly selected simulation backend.
+pub fn simulate_mode_with_engine(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    engine: EngineKind,
+) -> ModeReport {
+    let t = apply_memory_mapping(tensor);
+    engine.simulate_mode(&t, mode, cfg, tech)
+}
+
+/// Simulate all modes (the full spMTTKRP of Fig. 7's x-axis) on the
+/// analytic engine.
 pub fn simulate_all_modes(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> SimReport {
+    simulate_all_modes_with_engine(tensor, cfg, tech, EngineKind::Analytic)
+}
+
+/// [`simulate_all_modes`] on an explicitly selected simulation backend.
+pub fn simulate_all_modes_with_engine(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    engine: EngineKind,
+) -> SimReport {
     let t = apply_memory_mapping(tensor);
-    engine::simulate_all_modes(&t, cfg, tech)
+    engine.simulate_all_modes(&t, cfg, tech)
 }
 
 /// One technology's full-run result inside a [`TechComparison`].
@@ -135,6 +163,18 @@ pub fn compare_technologies(
     cfg: &AcceleratorConfig,
     techs: &[MemTechnology],
 ) -> TechComparison {
+    compare_technologies_with_engine(tensor, cfg, techs, EngineKind::Analytic)
+}
+
+/// [`compare_technologies`] on an explicitly selected backend (every run
+/// in one comparison uses the same engine, so speedups compare like with
+/// like).
+pub fn compare_technologies_with_engine(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+    engine: EngineKind,
+) -> TechComparison {
     assert!(!techs.is_empty(), "compare_technologies needs at least one technology");
     // the accessors are name-keyed (find-first), so a duplicate name would
     // shadow its twin's numbers silently — reject it up front, like the
@@ -149,7 +189,7 @@ pub fn compare_technologies(
     let runs = techs
         .iter()
         .map(|tech| {
-            let report = engine::simulate_all_modes(&t, cfg, tech);
+            let report = engine.simulate_all_modes(&t, cfg, tech);
             let energy = em.run_energy(&report);
             TechRun { report, energy }
         })
@@ -157,13 +197,81 @@ pub fn compare_technologies(
     TechComparison { tensor: tensor.name.clone(), runs }
 }
 
+/// One technology's analytic-vs-event cross-validation result.
+#[derive(Clone, Debug)]
+pub struct EngineDelta {
+    pub tech: String,
+    /// Full-run cycles priced by the analytic roofline engine.
+    pub analytic_cycles: f64,
+    /// Full-run cycles measured by the event-driven replay (≥ analytic).
+    pub event_cycles: f64,
+}
+
+impl EngineDelta {
+    /// `event / analytic` (1.0 = perfect agreement, always ≥ 1.0).
+    pub fn ratio(&self) -> f64 {
+        self.event_cycles / self.analytic_cycles
+    }
+
+    /// Contention the roofline model hides, as a percentage of its own
+    /// estimate (`(ratio − 1) × 100`).
+    pub fn delta_pct(&self) -> f64 {
+        (self.ratio() - 1.0) * 100.0
+    }
+}
+
+/// Run **both** engines on one tensor for every technology in `techs` and
+/// return the per-technology runtime deltas — the analytic model's
+/// measured error bound on this workload. The §IV-A memory mapping, the
+/// tensor preparation and the O(nnz) per-mode view builds are all shared
+/// across every (technology × engine) run, like the sweep engine does.
+pub fn cross_validate(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+) -> Vec<EngineDelta> {
+    let t = apply_memory_mapping(tensor);
+    let views: Vec<(usize, crate::tensor::csf::ModeView)> = (0..t.n_modes())
+        .map(|m| (m, crate::tensor::csf::ModeView::build(&t, m)))
+        .collect();
+    techs
+        .iter()
+        .map(|tech| {
+            let total = |kind: EngineKind| -> f64 {
+                views
+                    .iter()
+                    .map(|(m, v)| {
+                        kind.simulate_mode_with_view(&t, v, *m, cfg, tech).runtime_cycles()
+                    })
+                    .sum()
+            };
+            EngineDelta {
+                tech: tech.name.clone(),
+                analytic_cycles: total(EngineKind::Analytic),
+                event_cycles: total(EngineKind::Event),
+            }
+        })
+        .collect()
+}
+
+/// The paper's exact E-SRAM-baseline vs O-SRAM technology pair — the
+/// single owner of that pair definition for every front-end.
+pub fn paper_pair() -> [MemTechnology; 2] {
+    [registry::tech("e-sram"), registry::tech("o-sram")]
+}
+
 /// The paper's Fig. 7 / Fig. 8 primitive: E-SRAM baseline vs O-SRAM.
 pub fn compare_paper_pair(tensor: &SparseTensor, cfg: &AcceleratorConfig) -> TechComparison {
-    compare_technologies(
-        tensor,
-        cfg,
-        &[registry::tech("e-sram"), registry::tech("o-sram")],
-    )
+    compare_paper_pair_with_engine(tensor, cfg, EngineKind::Analytic)
+}
+
+/// [`compare_paper_pair`] on an explicitly selected backend.
+pub fn compare_paper_pair_with_engine(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    engine: EngineKind,
+) -> TechComparison {
+    compare_technologies_with_engine(tensor, cfg, &paper_pair(), engine)
 }
 
 /// Every technology in the global registry on one tensor, baseline =
@@ -197,6 +305,7 @@ pub fn compute_mode(
 mod tests {
     use super::*;
     use crate::mem::registry::tech;
+    use crate::sim::engine;
     use crate::tensor::gen::{self, TensorSpec};
 
     fn cfg() -> AcceleratorConfig {
@@ -273,6 +382,34 @@ mod tests {
         let c = compare_all_registered(&t, &cfg());
         assert!(c.runs.len() >= 4);
         assert_eq!(c.baseline().name(), "e-sram");
+    }
+
+    #[test]
+    fn engine_variants_agree_with_the_defaults() {
+        let t = TensorSpec::custom("v", vec![80, 80, 80], 8_000, 0.9).generate(6);
+        let cfg = cfg();
+        let a = simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        let a2 = simulate_mode_with_engine(&t, 0, &cfg, &tech("o-sram"), EngineKind::Analytic);
+        assert_eq!(a.runtime_cycles().to_bits(), a2.runtime_cycles().to_bits());
+        let e = simulate_mode_with_engine(&t, 0, &cfg, &tech("o-sram"), EngineKind::Event);
+        assert!(e.runtime_cycles() >= a.runtime_cycles());
+        // comparisons carry the engine through every run
+        let techs = [tech("e-sram"), tech("o-sram")];
+        let ce = compare_technologies_with_engine(&t, &cfg, &techs, EngineKind::Event);
+        assert_eq!(ce.names(), vec!["e-sram", "o-sram"]);
+        assert!(ce.total_speedup("o-sram") > 0.0);
+    }
+
+    #[test]
+    fn cross_validation_bounds_the_analytic_model() {
+        let t = TensorSpec::custom("x", vec![400, 400, 400], 10_000, 0.5).generate(8);
+        let deltas = cross_validate(&t, &cfg(), &[tech("e-sram"), tech("o-sram")]);
+        assert_eq!(deltas.len(), 2);
+        for d in &deltas {
+            assert!(d.ratio() >= 1.0, "{}: event may not beat analytic ({})", d.tech, d.ratio());
+            assert!(d.delta_pct() >= 0.0);
+            assert!(d.analytic_cycles > 0.0 && d.event_cycles.is_finite());
+        }
     }
 
     #[test]

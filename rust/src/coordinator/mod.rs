@@ -1,11 +1,16 @@
-//! The L3 coordinator: ties tensors, the simulator, the energy/area
-//! models and the PJRT numeric path into end-to-end drivers.
+//! The L3 coordinator: ties tensors, the simulation engines, the
+//! energy/area models and the PJRT numeric path into end-to-end drivers.
 //!
 //! * [`linalg`] — small dense linear algebra (gram, Cholesky solve,
 //!   column normalization) for the CP-ALS update — no external BLAS in
 //!   this environment, and R ≤ 32 keeps everything tiny.
-//! * [`scheduler`] — work partitioning across PEs / numeric block plans.
-//! * [`driver`] — the public simulate/compute entry points (prelude API).
+//! * [`scheduler`] — work partitioning across PEs / numeric block plans
+//!   (re-exports the single [`crate::sim::engine::partition_slices`]
+//!   path both simulation engines use, so scheduling and simulation can
+//!   never drift apart).
+//! * [`driver`] — the public simulate/compare/cross-validate entry
+//!   points (prelude API); every simulate entry point has a
+//!   `_with_engine` variant selecting the analytic or event backend.
 //! * [`cpals`] — CP-ALS tensor decomposition on top of the MTTKRP paths:
 //!   the end-to-end workload that proves all layers compose.
 

@@ -2,7 +2,7 @@
 //!
 //! Reproduction of *"Performance Modeling Sparse MTTKRP Using Optical Static
 //! Random Access Memory on FPGA"* (Wijeratne et al., 2022) — grown into a
-//! multi-technology design-space exploration engine.
+//! multi-technology, multi-engine design-space exploration simulator.
 //!
 //! The crate models a wafer-scale FPGA whose on-chip electrical SRAM
 //! (BRAM/URAM) has been replaced by an alternative memory technology and
@@ -12,39 +12,12 @@
 //! energy (Fig. 8, Table III) and area (Table IV) results for the
 //! `e-sram`/`o-sram` pair.
 //!
-//! ## The technology registry
-//!
-//! Memory technologies are open, not a closed enum: every layer resolves a
-//! [`mem::tech::MemTechnology`] parameter set by name through
-//! [`mem::registry`]. Builtins:
-//!
-//! | name         | device                                                  |
-//! |--------------|---------------------------------------------------------|
-//! | `e-sram`     | electrical BRAM-class SRAM — the paper's baseline       |
-//! | `o-sram`     | optical SRAM of [14]: 20 GHz, 5λ WDM, 200 ports/block   |
-//! | `o-sram-imc` | photonic in-memory-computing SRAM (arXiv 2503.18206)    |
-//! | `e-uram`     | URAM288-class electrical SRAM: denser, still port-bound |
-//!
-//! `[tech.<name>]` sections in a config file register further entries
-//! (see [`mem::registry::TechRegistry::load_config`]), and code can
-//! register any [`mem::registry::TechSpec`] implementation.
-//!
-//! ## The sweep engine
-//!
-//! [`sim::sweep`] fans the cartesian product of
-//! {tensor × mode × technology × scale} across OS threads with
-//! deterministic result ordering — the `photon-mttkrp sweep` subcommand
-//! and the `design_space` example are its front-ends.
-//!
-//! ## Layering
-//!
-//! * **L3 (this crate)** — the accelerator simulator, energy/area models,
-//!   tensor substrates, PE scheduler, CP-ALS driver, CLI, benches.
-//! * **L2/L1 (build-time python)** — the MTTKRP block compute as a JAX
-//!   graph wrapping a Pallas kernel, AOT-lowered to HLO text.
-//! * **[`runtime`]** — loads `artifacts/*.hlo.txt` via the PJRT C API and
-//!   executes them from the Rust hot path; python never runs at runtime.
-//!   (Built as a stub unless the `photon_pjrt` cfg enables the XLA bindings.)
+//! A module-by-module map of the crate, with dataflow diagrams of both
+//! simulation engines tied to the paper's Fig. 4 / Algorithm 1 / Eq. 2–3,
+//! lives in `docs/ARCHITECTURE.md` at the repository root; the
+//! experiment-harness conventions and performance expectations live in
+//! `EXPERIMENTS.md` alongside it. (Plain paths, not hyperlinks — the
+//! rendered rustdoc tree does not ship those files.)
 //!
 //! ## Quick start
 //!
@@ -57,15 +30,85 @@
 //! let o = simulate_mode(&tensor, 0, &cfg, &tech("o-sram"));
 //! println!("mode-0 speedup: {:.2}x", e.runtime_s() / o.runtime_s());
 //!
-//! // any registered technology sweeps the same way:
-//! let spec = SweepSpec::new(
+//! // cross-validate the analytic numbers with the event-driven engine:
+//! for d in cross_validate(&tensor, &cfg, &registry::all()) {
+//!     println!("{:<12} roofline error bound: +{:.1}%", d.tech, d.delta_pct());
+//! }
+//!
+//! // any registered technology sweeps the same way, on either engine:
+//! let mut spec = SweepSpec::new(
 //!     vec![frostt::preset(FrosttTensor::Nell2)],
 //!     vec![1.0 / 256.0],
 //!     registry::all(),
 //! );
+//! spec.engine = EngineKind::Event;
 //! let points = run_sweep(&spec).unwrap();
 //! println!("{} scenarios", points.len());
 //! ```
+//!
+//! ## Choosing a simulation engine
+//!
+//! Two backends implement [`sim::SimEngine`] and are selected by
+//! [`sim::EngineKind`] (or `--engine analytic|event` on the CLI):
+//!
+//! * **`analytic`** ([`sim::engine`]) — the paper's own
+//!   bottleneck/roofline model: every resource is assumed deeply
+//!   pipelined and perfectly overlapped, a mode costs its busiest
+//!   resource's total occupancy. Fastest; use it for large sweeps and for
+//!   reproducing the paper's numbers.
+//! * **`event`** ([`sim::event`]) — a cycle-level replay of the identical
+//!   access stream through bank-arbitrated caches, a FIFO DRAM channel
+//!   and windowed execution slots. It measures the queueing and
+//!   bank-conflict stalls the roofline hides and reports them as
+//!   [`sim::result::PeReport::stall_cycles`], so `event ≥ analytic`
+//!   always holds and the delta is the analytic model's error bound on
+//!   that workload. Use it whenever a headline number needs a trust
+//!   interval ([`coordinator::driver::cross_validate`] automates the
+//!   pairing).
+//!
+//! Both engines share the functional caches, the traffic/active-word
+//! accounting and the [`sim::engine::partition_slices`] work split, so
+//! hit rates and energy inputs are bit-identical between them — the
+//! engines disagree only about *time*, which is exactly the quantity
+//! under test.
+//!
+//! ## The technology registry
+//!
+//! Memory technologies are open, not a closed enum: every layer resolves a
+//! [`mem::tech::MemTechnology`] parameter set by name through
+//! [`mem::registry`]. Builtins:
+//!
+//! | name         | device                                                  |
+//! |--------------|---------------------------------------------------------|
+//! | `e-sram`     | electrical BRAM-class SRAM — the paper's baseline       |
+//! | `o-sram`     | optical SRAM of ref. 14: 20 GHz, 5λ WDM, 200 ports/block |
+//! | `o-sram-imc` | photonic in-memory-computing SRAM (arXiv 2503.18206)    |
+//! | `e-uram`     | URAM288-class electrical SRAM: denser, still port-bound |
+//!
+//! `[tech.<name>]` sections in a config file register further entries
+//! (see [`mem::registry::TechRegistry::load_config`]), and code can
+//! register any [`mem::registry::TechSpec`] implementation. Both engines
+//! are closed over the registry: any entry — builtin, config-file or
+//! programmatic — simulates on either backend with no per-name code.
+//!
+//! ## The sweep engine
+//!
+//! [`sim::sweep`] fans the cartesian product of
+//! {tensor × mode × technology × scale} across OS threads with
+//! deterministic result ordering, on either simulation backend — the
+//! `photon-mttkrp sweep` subcommand and the `design_space` example are
+//! its front-ends.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — the accelerator simulator (both engines),
+//!   energy/area models, tensor substrates, PE scheduler, CP-ALS driver,
+//!   CLI, benches.
+//! * **L2/L1 (build-time python)** — the MTTKRP block compute as a JAX
+//!   graph wrapping a Pallas kernel, AOT-lowered to HLO text.
+//! * **[`runtime`]** — loads `artifacts/*.hlo.txt` via the PJRT C API and
+//!   executes them from the Rust hot path; python never runs at runtime.
+//!   (Built as a stub unless the `photon_pjrt` cfg enables the XLA bindings.)
 
 pub mod accel;
 pub mod area;
@@ -90,8 +133,10 @@ pub mod prelude {
     pub use crate::area::model::AreaModel;
     pub use crate::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
     pub use crate::coordinator::driver::{
-        compare_all_registered, compare_paper_pair, compare_technologies, simulate_all_modes,
-        simulate_mode, Compute, TechComparison, TechRun,
+        compare_all_registered, compare_paper_pair, compare_paper_pair_with_engine,
+        compare_technologies, compare_technologies_with_engine, cross_validate, paper_pair,
+        simulate_all_modes, simulate_all_modes_with_engine, simulate_mode,
+        simulate_mode_with_engine, Compute, EngineDelta, TechComparison, TechRun,
     };
     pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
     pub use crate::mem::registry::{self, tech, TechRegistry, TechSpec};
@@ -100,6 +145,7 @@ pub mod prelude {
     pub use crate::runtime::client::Runtime;
     pub use crate::sim::result::{ModeReport, SimReport};
     pub use crate::sim::sweep::{run_sweep, summary_table, SweepPoint, SweepSpec};
+    pub use crate::sim::{EngineKind, SimEngine};
     pub use crate::tensor::coo::SparseTensor;
     pub use crate::tensor::gen as frostt;
     pub use crate::tensor::gen::{FrosttTensor, TensorSpec};

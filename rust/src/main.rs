@@ -2,28 +2,41 @@
 //! model.
 //!
 //! ```text
-//! photon-mttkrp info [--tensors]          platform + Table I/III/IV echo + registry
-//! photon-mttkrp simulate --tensor nell-2 [--scale S] [--tech both|all|<name>] [--mode M]
-//! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--threads T]
-//! photon-mttkrp reproduce [--scale S]     all paper tables + figures
-//! photon-mttkrp cpals [--rank R] [--iters N] [--artifacts]
-//! photon-mttkrp mttkrp <file.tns> [--mode M] [--artifacts]
+//! photon-mttkrp info [--tensors] [--config FILE]
+//!     platform + Table I/III/IV echo + the technology registry listing
+//! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
+//!     [--tech both|all|<name>] [--mode M] [--engine analytic|event] [--config FILE]
+//!     one tensor on one/both/all technologies; with --engine event it
+//!     also prints the analytic-vs-event cycle delta (per mode for a
+//!     single technology, per technology for both/all)
+//! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
+//!     [--engine analytic|event] [--seed N] [--threads T] [--config FILE]
+//!     parallel {tensor x mode x tech x scale} design-space sweep
+//! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
+//!     all paper tables + figures + the engine cross-validation table
+//! photon-mttkrp cpals [--rank R] [--iters N] [--nnz N] [--dim D] [--seed N] [--artifacts]
+//! photon-mttkrp mttkrp <file.tns> [--mode M] [--rank R] [--artifacts]
 //! ```
 //!
 //! `--tech` accepts any name registered in the technology registry
 //! (builtin: `e-sram`, `o-sram`, `o-sram-imc`, `e-uram`; config files add
-//! more via `[tech.<name>]` sections).
+//! more via `[tech.<name>]` sections). `--engine` selects the simulation
+//! backend: `analytic` (the paper's roofline model, the default) or
+//! `event` (the cycle-level contention replay that bounds its error —
+//! see docs/ARCHITECTURE.md and EXPERIMENTS.md §Cross-validation).
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
 use photon_mttkrp::coordinator::driver::{
-    compare_all_registered, compare_paper_pair, simulate_mode, Compute,
+    apply_memory_mapping, compare_paper_pair_with_engine, compare_technologies_with_engine,
+    Compute, EngineDelta, TechComparison,
 };
 use photon_mttkrp::mem::registry;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::runtime::client::Runtime;
 use photon_mttkrp::sim::sweep::{self, SweepSpec};
+use photon_mttkrp::sim::EngineKind;
 use photon_mttkrp::tensor::coo::SparseTensor;
 use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
 use photon_mttkrp::util::cli::{CliError, Command, Parsed};
@@ -48,6 +61,7 @@ fn cli() -> Command {
                     "both | all | any registered technology name",
                     Some("both"),
                 )
+                .opt("engine", "E", "simulation engine: analytic | event", Some("analytic"))
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
@@ -56,6 +70,7 @@ fn cli() -> Command {
                 .opt_repeated("tech", "T", "technology name or `all` (repeatable; default: all)")
                 .opt_repeated("scale", "S", "workload scale (repeatable; default: 0.001)")
                 .opt_repeated("mode", "M", "output mode (repeatable; default: every mode)")
+                .opt("engine", "E", "simulation engine: analytic | event", Some("analytic"))
                 .opt("seed", "N", "generator seed", Some("42"))
                 .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
@@ -137,9 +152,8 @@ fn run() -> Result<(), String> {
             let name = p.get("tensor").unwrap();
             let ft = FrosttTensor::from_name(name)
                 .ok_or_else(|| format!("unknown tensor `{name}`"))?;
-            let cfg = cfg_base.scaled(scale);
-            let tensor = preset(ft).scaled(scale).generate(seed);
-            eprintln!("generated {} ({} nnz)", tensor.name, tensor.nnz());
+            // validate cheap arguments before the expensive generation
+            let engine = EngineKind::parse(p.get("engine").unwrap())?;
             let tech_arg = p.get("tech").unwrap();
             if matches!(tech_arg, "both" | "all") && p.get("mode").is_some() {
                 return Err(format!(
@@ -147,9 +161,29 @@ fn run() -> Result<(), String> {
                      or the sweep subcommand's --mode filter); got --tech {tech_arg}"
                 ));
             }
+            let cfg = cfg_base.scaled(scale);
+            let tensor = preset(ft).scaled(scale).generate(seed);
+            eprintln!("generated {} ({} nnz)", tensor.name, tensor.nnz());
+            // With --engine event, every variant also prints the
+            // analytic-vs-event delta (the roofline error bound), derived
+            // from the event comparison already in hand plus one analytic
+            // pass — nothing is simulated twice on the same engine.
+            let print_deltas = |c_event: &TechComparison, c_analytic: &TechComparison| {
+                for (er, ar) in c_event.runs.iter().zip(&c_analytic.runs) {
+                    let d = EngineDelta {
+                        tech: er.name().to_string(),
+                        analytic_cycles: ar.report.total_runtime_cycles(),
+                        event_cycles: er.report.total_runtime_cycles(),
+                    };
+                    println!(
+                        "{:<12} engine event: analytic {:.4e} cycles, event {:.4e} cycles, delta +{:.1}%",
+                        d.tech, d.analytic_cycles, d.event_cycles, d.delta_pct(),
+                    );
+                }
+            };
             match tech_arg {
                 "both" => {
-                    let c = compare_paper_pair(&tensor, &cfg);
+                    let c = compare_paper_pair_with_engine(&tensor, &cfg, engine);
                     let e = &c.require("e-sram").report;
                     let o = &c.require("o-sram").report;
                     for (m, s) in c.mode_speedups("o-sram").iter().enumerate() {
@@ -166,9 +200,15 @@ fn run() -> Result<(), String> {
                         c.total_speedup("o-sram"),
                         c.energy_savings("o-sram")
                     );
+                    if engine == EngineKind::Event {
+                        let ca =
+                            compare_paper_pair_with_engine(&tensor, &cfg, EngineKind::Analytic);
+                        print_deltas(&c, &ca);
+                    }
                 }
                 "all" => {
-                    let c = compare_all_registered(&tensor, &cfg);
+                    let c =
+                        compare_technologies_with_engine(&tensor, &cfg, &registry::all(), engine);
                     let base = c.baseline().name().to_string();
                     for run in &c.runs {
                         println!(
@@ -179,6 +219,15 @@ fn run() -> Result<(), String> {
                             c.energy_savings(run.name()),
                         );
                     }
+                    if engine == EngineKind::Event {
+                        let ca = compare_technologies_with_engine(
+                            &tensor,
+                            &cfg,
+                            &registry::all(),
+                            EngineKind::Analytic,
+                        );
+                        print_deltas(&c, &ca);
+                    }
                 }
                 t => {
                     let tech = registry::resolve(t)?;
@@ -186,8 +235,11 @@ fn run() -> Result<(), String> {
                         Some(m) => vec![m.parse().map_err(|e| format!("--mode: {e}"))?],
                         None => (0..tensor.n_modes()).collect(),
                     };
+                    // the §IV-A mapping is mode-independent: apply it once
+                    // instead of once per (mode × engine) simulation
+                    let mapped = apply_memory_mapping(&tensor);
                     for m in modes {
-                        let r = simulate_mode(&tensor, m, &cfg, &tech);
+                        let r = engine.simulate_mode(&mapped, m, &cfg, &tech);
                         println!(
                             "M{m} [{}]: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
                             tech.name,
@@ -196,6 +248,22 @@ fn run() -> Result<(), String> {
                             r.hit_rate() * 100.0,
                             r.bottleneck().name()
                         );
+                        if engine == EngineKind::Event {
+                            // the event replay's headline deliverable: how
+                            // far off the roofline abstraction is here
+                            let a = EngineKind::Analytic.simulate_mode(&mapped, m, &cfg, &tech);
+                            let d = EngineDelta {
+                                tech: tech.name.clone(),
+                                analytic_cycles: a.runtime_cycles(),
+                                event_cycles: r.runtime_cycles(),
+                            };
+                            println!(
+                                "    engine event: analytic {:.0} cycles, event {:.0} cycles, delta +{:.1}%",
+                                d.analytic_cycles,
+                                d.event_cycles,
+                                d.delta_pct(),
+                            );
+                        }
                     }
                 }
             }
@@ -251,6 +319,7 @@ fn run() -> Result<(), String> {
             spec.base_cfg = cfg_base;
             spec.seed = seed;
             spec.threads = threads;
+            spec.engine = EngineKind::parse(p.get("engine").unwrap())?;
             if !modes.is_empty() {
                 spec.modes = Some(modes);
             }
@@ -295,6 +364,8 @@ fn run() -> Result<(), String> {
             let results = paper::evaluate_suite(scale, seed);
             println!("{}", render(&paper::fig7(&results)));
             println!("{}", render(&paper::fig8(&results)));
+            eprintln!("cross-validating the analytic engine against the event engine ...");
+            println!("{}", render(&paper::table_cross_validation(scale, seed)));
         }
         "cpals" => {
             let rank = p.get_usize("rank").map_err(|e| e.to_string())?;

@@ -1,11 +1,14 @@
 //! Regenerates every table and figure of the paper's evaluation (§V) as
 //! [`Table`]s: Table I (config echo), Table II (dataset characteristics),
 //! Table III (per-bit energies), Table IV (area), Fig. 7 (speedup series)
-//! and Fig. 8 (energy savings), plus the §VI aggregate row.
+//! and Fig. 8 (energy savings), plus the §VI aggregate row — and, beyond
+//! the paper, the engine cross-validation table
+//! ([`table_cross_validation`]): both simulation backends' cycle counts
+//! with the analytic-vs-event delta per registered technology.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::area::model::{AreaModel, PAPER_ESRAM_TOTAL_MM2, PAPER_OSRAM_MEM_MM2};
-use crate::coordinator::driver::{compare_paper_pair, TechComparison};
+use crate::coordinator::driver::{compare_paper_pair, cross_validate, TechComparison};
 use crate::mem::registry::{self, TechRegistry};
 use crate::mem::tech::FABRIC_HZ;
 use crate::tensor::gen::{preset, FrosttTensor, TensorSpec};
@@ -135,6 +138,31 @@ pub fn table_iv(cfg: &AcceleratorConfig) -> Table {
     t
 }
 
+/// Engine cross-validation: run **both** simulation backends on the
+/// NELL-2 fingerprint at `scale` for every registered technology and
+/// tabulate the analytic cycles, event cycles and their delta — the
+/// measured error bound of the roofline abstraction on that workload
+/// (EXPERIMENTS.md §Cross-validation explains how to read the bands).
+pub fn table_cross_validation(scale: f64, seed: u64) -> Table {
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    let tensor = preset(FrosttTensor::Nell2).scaled(scale).generate(seed);
+    let deltas = cross_validate(&tensor, &cfg, &registry::all());
+    let mut t = Table::new(
+        &format!("Cross-validation: analytic vs event engine ({}, scale {scale:.1e})", tensor.name),
+        &["tech", "analytic cycles", "event cycles", "delta"],
+    )
+    .align(0, Align::Left);
+    for d in &deltas {
+        t.row(vec![
+            d.tech.clone(),
+            format!("{:.4e}", d.analytic_cycles),
+            format!("{:.4e}", d.event_cycles),
+            format!("+{:.1}%", d.delta_pct()),
+        ]);
+    }
+    t
+}
+
 /// One evaluated tensor for the Fig. 7 / Fig. 8 suites.
 pub struct EvaluatedTensor {
     pub name: String,
@@ -258,6 +286,20 @@ mod tests {
         assert!(s.contains("143.6M"), "{s}");
         assert!(s.contains("4.7B"));
         assert!(s.contains("nell-2"));
+    }
+
+    #[test]
+    fn cross_validation_table_covers_the_registry() {
+        let t = table_cross_validation(1.0 / 65536.0, 1);
+        let reg = registry::names();
+        assert_eq!(t.n_rows(), reg.len());
+        let s = t.render_ascii();
+        for name in reg {
+            assert!(s.contains(&name), "{s}");
+        }
+        assert!(s.contains("delta"), "{s}");
+        // non-negativity of the deltas themselves is asserted on the
+        // EngineDelta values by the driver and engine-agreement tests
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! the engine streams tens of millions of nonzeros per second (see
 //! EXPERIMENTS.md §Perf). For many-scenario runs, [`crate::sim::sweep`]
 //! fans independent simulations across OS threads.
+//!
+//! This is the *analytic* backend of the [`crate::sim::SimEngine`] trait;
+//! [`crate::sim::event`] is the event-driven backend that replays the same
+//! access stream through bank-arbitrated and queue-arbitrated resources to
+//! cross-validate the perfect-overlap assumption made here.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::pipeline::ArrayTiming;
@@ -28,6 +33,52 @@ use crate::sim::result::{ModeReport, PeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
+// --- shared engine plumbing -------------------------------------------------
+//
+// Both simulation backends must price *identical* work from *identical*
+// constants — the cross-engine contracts (`event >= analytic`, bit-identical
+// busy/traffic accounting) depend on it. Everything below is therefore
+// defined once here and imported by `crate::sim::event`, like
+// [`partition_slices`] is.
+
+/// Bytes of one streamed nonzero record: N 4-byte coordinates + the value.
+pub(crate) fn nnz_item_bytes(n_modes: usize) -> u64 {
+    (4 * n_modes + 4) as u64
+}
+
+/// Input factor-matrix slots for an output mode: the input mode indices
+/// (every mode but `mode`, ascending) and their factor-matrix row counts
+/// (`matrix_rows[j]` = rows of slot `j`, as the memory controller expects).
+pub(crate) fn input_slots(tensor: &SparseTensor, mode: usize) -> (Vec<usize>, Vec<u64>) {
+    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
+    let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
+    (input_modes, matrix_rows)
+}
+
+/// Startup/drain latency that pipelining cannot hide: one DRAM round-trip
+/// to prime the stream + one cache fill latency + the exec pipeline depth.
+/// The event engine measures its contention stall relative to this same
+/// bound, so the formula must never fork between engines.
+pub(crate) fn startup_latency(cfg: &AcceleratorConfig, mc: &MemoryController) -> f64 {
+    cfg.dram.row_miss_ns * 1e-9 * cfg.fabric_hz + mc.cache_timing.hit_latency() + cfg.rank as f64
+}
+
+/// Charge one PE's §IV-A sequential streams in the canonical order (the
+/// tensor's nonzeros in, the output rows out). The *call order* is part of
+/// the cross-engine contract: both engines issue these exact `stream`
+/// calls after the nonzero walk, keeping the reported traffic/busy fields
+/// bit-identical.
+pub(crate) fn charge_streams(
+    mc: &mut MemoryController,
+    pe_nnz: u64,
+    n_slices_pe: u64,
+    item_bytes: u64,
+    row_bytes: u64,
+) {
+    mc.stream(pe_nnz * item_bytes);
+    mc.stream(n_slices_pe * row_bytes);
+}
+
 /// Partition the view's slices into `n_pes` contiguous chunks balanced by
 /// nonzero count. Returns per-PE slice index ranges `[lo, hi)`.
 ///
@@ -36,6 +87,14 @@ use crate::tensor::csf::ModeView;
 /// trailing PEs receive valid *empty* ranges. Targets are computed with
 /// exact integer arithmetic so billion-nonzero tensors cannot hit f64
 /// rounding artifacts.
+///
+/// **Shared-path invariant:** this is the *only* slice-partitioning logic
+/// in the crate. The analytic engine (this module), the event engine
+/// ([`crate::sim::event`]) and the PE scheduler
+/// ([`crate::coordinator::scheduler`]) all call this one function, so for
+/// a given `(view, n_pes)` every backend simulates *identical* per-PE
+/// work assignments — the engine-agreement tests rely on the runtimes
+/// differing only in timing assembly, never in workload split.
 pub fn partition_slices(view: &ModeView, n_pes: usize) -> Vec<(usize, usize)> {
     assert!(n_pes > 0);
     let n_slices = view.n_slices();
@@ -95,8 +154,7 @@ pub fn simulate_mode_with_view(
 
     // Input factor matrices, in mode order, skipping the output mode; the
     // controller's bypass routing needs their row counts.
-    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
-    let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
+    let (input_modes, matrix_rows) = input_slots(tensor, mode);
 
     let t = cfg.tuned_tech(tech);
     let banks = cfg.bank_factor(&t);
@@ -107,7 +165,7 @@ pub fn simulate_mode_with_view(
     let psum_banks = (cfg.n_pipelines / 10).max(1);
 
     let mut pes = Vec::with_capacity(cfg.n_pes);
-    let nnz_item_bytes = (4 * tensor.n_modes() + 4) as u64;
+    let item_bytes = nnz_item_bytes(tensor.n_modes());
     let row_bytes = cfg.row_bytes() as u64;
 
     for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
@@ -143,15 +201,9 @@ pub fn simulate_mode_with_view(
         // Sequential traffic, charged in bulk: the tensor's nonzeros stream
         // in once (coordinates + value), the output rows stream out once.
         let n_slices_pe = (shi - slo) as u64;
-        mc.stream(pe_nnz * nnz_item_bytes);
-        mc.stream(n_slices_pe * row_bytes);
+        charge_streams(&mut mc, pe_nnz, n_slices_pe, item_bytes, row_bytes);
 
-        // Startup/drain latency that pipelining cannot hide: one DRAM
-        // round-trip to prime the stream + one cache fill latency + the
-        // exec pipeline depth.
-        let latency_overhead = cfg.dram.row_miss_ns * 1e-9 * cfg.fabric_hz
-            + mc.cache_timing.hit_latency()
-            + cfg.rank as f64;
+        let latency_overhead = startup_latency(cfg, &mc);
 
         let stats = mc.cache_stats();
         pes.push(PeReport {
@@ -165,6 +217,7 @@ pub fn simulate_mode_with_view(
             stream_dma_cycles: mc.stream_busy,
             element_dma_cycles: mc.element_busy,
             latency_overhead_cycles: latency_overhead,
+            stall_cycles: 0.0,
             cache_stats: stats,
             dram_stream_bytes: mc.dram.bytes_streamed,
             dram_random_bytes: mc.dram.bytes_random,

@@ -1,15 +1,247 @@
-//! The cycle-approximate simulation engine.
+//! The simulation engines: one workload, two timing models.
 //!
 //! * [`result`] — [`result::SimReport`] / [`result::ModeReport`]: per-PE
 //!   resource busy times, cache statistics, traffic and active-word
-//!   counters, bottleneck identification.
-//! * [`engine`] — the streaming bottleneck engine: walks the mode-sorted
-//!   nonzero stream through the memory controller / exec-unit timing
-//!   models, O(nnz) per mode, for any registry-resolved technology.
+//!   counters, bottleneck identification, contention stall.
+//! * [`engine`] — the **analytic** streaming bottleneck engine: walks the
+//!   mode-sorted nonzero stream through the memory controller / exec-unit
+//!   timing models and prices a mode as its busiest resource's total
+//!   occupancy (the paper's own roofline abstraction). O(nnz) per mode.
+//! * [`event`] — the **event-driven** contention engine: replays the
+//!   identical access stream through bank-arbitrated caches, a FIFO DRAM
+//!   channel and windowed execution slots, measuring the queueing and
+//!   bank-conflict stalls the analytic engine hides. Same functional
+//!   model, same traffic, `runtime ≥ analytic` by construction.
 //! * [`sweep`] — the parallel design-space sweep: a deterministic
 //!   {tensor × mode × technology × scale} cartesian product fanned across
-//!   OS threads.
+//!   OS threads, on either engine.
+//!
+//! Both backends implement the [`SimEngine`] trait and are selected by
+//! [`EngineKind`] (`--engine analytic|event` on the CLI). Use the analytic
+//! engine for large sweeps (it is the paper's model and ~2× faster); use
+//! the event engine to bound the analytic model's error on a workload —
+//! the delta between the two is exactly the contention the roofline
+//! abstraction cannot see (see EXPERIMENTS.md §Cross-validation).
 
 pub mod engine;
+pub mod event;
 pub mod result;
 pub mod sweep;
+
+use crate::accel::config::AcceleratorConfig;
+use crate::mem::tech::MemTechnology;
+use crate::sim::result::{ModeReport, SimReport};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// A simulation backend: prices one output mode of a tensor on one
+/// registry-resolved memory technology.
+///
+/// Both implementations share the functional model (caches, traffic,
+/// active words) and the [`engine::partition_slices`] work split; they
+/// differ only in how per-request timing composes into a runtime. Any
+/// [`ModeReport`] they return feeds the energy/area models identically.
+pub trait SimEngine: Send + Sync {
+    /// Short stable name (`analytic`, `event`) used by the CLI and
+    /// report headers.
+    fn name(&self) -> &'static str;
+
+    /// Simulate one mode with a caller-supplied mode view (`view` must be
+    /// `ModeView::build(tensor, mode)` for the same tensor and mode).
+    fn simulate_mode_with_view(
+        &self,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport;
+
+    /// Simulate one mode (builds the view itself).
+    fn simulate_mode(
+        &self,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        let view = ModeView::build(tensor, mode);
+        self.simulate_mode_with_view(tensor, &view, mode, cfg, tech)
+    }
+
+    /// Simulate every output mode (the full spMTTKRP of Fig. 7's x-axis).
+    fn simulate_all_modes(
+        &self,
+        tensor: &SparseTensor,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> SimReport {
+        let modes =
+            (0..tensor.n_modes()).map(|m| self.simulate_mode(tensor, m, cfg, tech)).collect();
+        SimReport { tensor: tensor.name.clone(), tech: cfg.tuned_tech(tech), modes }
+    }
+}
+
+/// The analytic bottleneck backend ([`engine`]).
+struct AnalyticEngine;
+
+impl SimEngine for AnalyticEngine {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+    fn simulate_mode_with_view(
+        &self,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        engine::simulate_mode_with_view(tensor, view, mode, cfg, tech)
+    }
+}
+
+/// The event-driven contention backend ([`event`]).
+struct EventEngine;
+
+impl SimEngine for EventEngine {
+    fn name(&self) -> &'static str {
+        "event"
+    }
+    fn simulate_mode_with_view(
+        &self,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        event::simulate_mode_event_with_view(tensor, view, mode, cfg, tech)
+    }
+}
+
+/// Engine selector: every registered simulation backend, by name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// The paper's bottleneck/roofline model ([`engine`]) — the default.
+    #[default]
+    Analytic,
+    /// The cycle-level contention replay ([`event`]).
+    Event,
+}
+
+impl EngineKind {
+    /// Every registered backend, in CLI listing order.
+    pub const ALL: [EngineKind; 2] = [EngineKind::Analytic, EngineKind::Event];
+
+    /// The stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        self.engine().name()
+    }
+
+    /// The backend implementation this selector names.
+    pub fn engine(self) -> &'static dyn SimEngine {
+        match self {
+            EngineKind::Analytic => &AnalyticEngine,
+            EngineKind::Event => &EventEngine,
+        }
+    }
+
+    /// Parse a CLI spelling; the error lists the valid options.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+                format!("unknown engine `{s}` (expected one of: {})", names.join(", "))
+            })
+    }
+
+    /// [`SimEngine::simulate_mode`] on the selected backend.
+    pub fn simulate_mode(
+        self,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        self.engine().simulate_mode(tensor, mode, cfg, tech)
+    }
+
+    /// [`SimEngine::simulate_mode_with_view`] on the selected backend.
+    pub fn simulate_mode_with_view(
+        self,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        self.engine().simulate_mode_with_view(tensor, view, mode, cfg, tech)
+    }
+
+    /// [`SimEngine::simulate_all_modes`] on the selected backend.
+    pub fn simulate_all_modes(
+        self,
+        tensor: &SparseTensor,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> SimReport {
+        self.engine().simulate_all_modes(tensor, cfg, tech)
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::registry::tech;
+    use crate::tensor::gen;
+
+    #[test]
+    fn engine_kinds_parse_and_display() {
+        assert_eq!(EngineKind::parse("analytic"), Ok(EngineKind::Analytic));
+        assert_eq!(EngineKind::parse("event"), Ok(EngineKind::Event));
+        assert_eq!("event".parse::<EngineKind>(), Ok(EngineKind::Event));
+        let err = EngineKind::parse("roofline").unwrap_err();
+        assert!(err.contains("analytic") && err.contains("event"), "{err}");
+        assert_eq!(EngineKind::default(), EngineKind::Analytic);
+        assert_eq!(EngineKind::Event.to_string(), "event");
+    }
+
+    #[test]
+    fn trait_dispatch_matches_direct_calls() {
+        let t = gen::random(&[64, 64, 64], 3_000, 2);
+        let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        let a1 = EngineKind::Analytic.simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        let a2 = engine::simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        assert_eq!(a1.runtime_cycles().to_bits(), a2.runtime_cycles().to_bits());
+        let e1 = EngineKind::Event.simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        let e2 = event::simulate_mode_event(&t, 0, &cfg, &tech("o-sram"));
+        assert_eq!(e1.runtime_cycles().to_bits(), e2.runtime_cycles().to_bits());
+    }
+
+    #[test]
+    fn all_modes_via_trait_has_full_shape() {
+        let t = gen::random(&[32, 32, 32], 1_000, 4);
+        let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        for kind in EngineKind::ALL {
+            let r = kind.simulate_all_modes(&t, &cfg, &tech("e-sram"));
+            assert_eq!(r.modes.len(), 3, "{kind}");
+            assert_eq!(r.tech.name, "e-sram");
+        }
+    }
+}

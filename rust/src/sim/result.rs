@@ -48,6 +48,12 @@ pub struct PeReport {
     pub element_dma_cycles: f64,
     /// Fixed latency overhead not hidden by pipelining (startup / drain).
     pub latency_overhead_cycles: f64,
+    /// Contention stall measured by the event engine (bank-conflict
+    /// serialization, DRAM-channel queueing, decoupling-window
+    /// back-pressure) **on top of** the bottleneck-resource time. The
+    /// analytic engine assumes perfect overlap and always reports `0.0`;
+    /// see [`crate::sim::event`] for how the event replay measures it.
+    pub stall_cycles: f64,
     /// Functional cache statistics (summed over the PE's caches).
     pub cache_stats: CacheStats,
     /// DRAM traffic.
@@ -62,7 +68,9 @@ pub struct PeReport {
 }
 
 impl PeReport {
-    /// The PE finishes when its most-loaded resource drains.
+    /// The PE finishes when its most-loaded resource drains, plus any
+    /// contention stall an event-driven replay measured on top (zero for
+    /// the analytic engine, so both engines report through one type).
     pub fn runtime_cycles(&self) -> f64 {
         let cache_max = self.cache_cycles.iter().cloned().fold(0.0f64, f64::max);
         self.dram_cycles
@@ -72,6 +80,7 @@ impl PeReport {
             .max(self.stream_dma_cycles)
             .max(self.element_dma_cycles)
             + self.latency_overhead_cycles
+            + self.stall_cycles
     }
 
     /// Which resource bound this PE.
@@ -213,6 +222,7 @@ mod tests {
             stream_dma_cycles: 0.5,
             element_dma_cycles: 0.0,
             latency_overhead_cycles: 2.0,
+            stall_cycles: 0.0,
             cache_stats: CacheStats { hits: 80, misses: 20, evictions: 5, writebacks: 0 },
             dram_stream_bytes: 1000,
             dram_random_bytes: 640,
@@ -231,6 +241,16 @@ mod tests {
         let p2 = pe(30.0, 20.0, 5.0);
         assert_eq!(p2.bottleneck(), Resource::Dram);
         assert_eq!(p2.runtime_cycles(), 32.0);
+    }
+
+    #[test]
+    fn stall_extends_runtime_without_moving_the_bottleneck() {
+        // the event engine reports contention as stall on top of the
+        // bottleneck max; the bottleneck attribution must not change
+        let mut p = pe(10.0, 20.0, 5.0);
+        p.stall_cycles = 7.5;
+        assert_eq!(p.runtime_cycles(), 29.5);
+        assert_eq!(p.bottleneck(), Resource::Cache);
     }
 
     #[test]

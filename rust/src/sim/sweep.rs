@@ -17,7 +17,8 @@
 //!    and build its energy model. Shared by every (tech, mode) point so
 //!    generation cost is paid once, not `|techs| × |modes|` times.
 //! 2. **Simulation** — one job per (workload, tech, mode): run the
-//!    bottleneck engine and price the run through Eq. 2–3.
+//!    selected backend ([`SweepSpec::engine`]: analytic bottleneck or
+//!    event-driven contention replay) and price the run through Eq. 2–3.
 //!
 //! Throughput notes live in EXPERIMENTS.md §Perf. The CLI front-end is
 //! `photon-mttkrp sweep`.
@@ -28,8 +29,8 @@ use std::sync::Mutex;
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};
 use crate::mem::tech::MemTechnology;
-use crate::sim::engine;
 use crate::sim::result::ModeReport;
+use crate::sim::EngineKind;
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 use crate::tensor::gen::TensorSpec;
@@ -61,6 +62,9 @@ pub struct SweepSpec {
     /// Apply the §IV-A memory mapping before simulating (the driver-path
     /// behaviour; `false` is the raw-engine ablation).
     pub remap: bool,
+    /// Simulation backend every point runs on (axis-uniform so speedup
+    /// columns compare like with like); default [`EngineKind::Analytic`].
+    pub engine: EngineKind,
 }
 
 impl SweepSpec {
@@ -76,6 +80,7 @@ impl SweepSpec {
             seed: 42,
             threads: 0,
             remap: true,
+            engine: EngineKind::Analytic,
         }
     }
 
@@ -267,7 +272,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
             .find(|(m, _)| *m == mode)
             .expect("view prepared for every enumerated mode");
         let report =
-            engine::simulate_mode_with_view(&wl.tensor, view, mode, &wl.cfg, &spec.techs[xi]);
+            spec.engine.simulate_mode_with_view(&wl.tensor, view, mode, &wl.cfg, &spec.techs[xi]);
         let energy = wl.energy.mode_energy(&report);
         SweepPoint {
             index: 0, // fixed up below (enumeration order == job order)
@@ -300,7 +305,11 @@ pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
         .map(|q| ((q.tensor.as_str(), q.scale.to_bits(), q.mode), q.runtime_cycles()))
         .collect();
     let mut t = Table::new(
-        &format!("sweep: {} points, baseline {base_tech}", points.len()),
+        &format!(
+            "sweep: {} points, baseline {base_tech}, engine {}",
+            points.len(),
+            spec.engine.name()
+        ),
         &["tensor", "scale", "mode", "tech", "runtime", "hit", "bottleneck", "energy", "speedup"],
     )
     .align(0, Align::Left)
@@ -393,6 +402,35 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn event_engine_sweep_is_deterministic_and_never_faster() {
+        let a_points = run_sweep(&tiny_spec(1)).unwrap();
+        let mut es = tiny_spec(1);
+        es.engine = EngineKind::Event;
+        let e_points = run_sweep(&es).unwrap();
+        assert_eq!(a_points.len(), e_points.len());
+        for (a, e) in a_points.iter().zip(&e_points) {
+            assert_eq!((a.tensor.as_str(), a.tech.as_str(), a.mode), (
+                e.tensor.as_str(),
+                e.tech.as_str(),
+                e.mode
+            ));
+            // contention can only add time, and traffic is shared
+            assert!(e.runtime_cycles() >= a.runtime_cycles(), "point {}", a.index);
+            assert_eq!(a.hit_rate(), e.hit_rate());
+        }
+        // the event replay is as deterministic across threads as analytic
+        let mut es8 = tiny_spec(8);
+        es8.engine = EngineKind::Event;
+        let e8 = run_sweep(&es8).unwrap();
+        for (x, y) in e_points.iter().zip(&e8) {
+            assert_eq!(x.runtime_cycles().to_bits(), y.runtime_cycles().to_bits());
+        }
+        // and the summary table says which engine produced it
+        let table = summary_table(&es, &e_points).render_ascii();
+        assert!(table.contains("engine event"), "{table}");
     }
 
     #[test]

@@ -111,6 +111,72 @@ fn simulate_all_compares_every_registered_tech() {
 }
 
 #[test]
+fn simulate_event_engine_prints_the_analytic_delta() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "o-sram", "--mode", "0", "--engine", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("M0 [o-sram]"), "{text}");
+    assert!(text.contains("engine event"), "{text}");
+    assert!(text.contains("delta +"), "{text}");
+}
+
+#[test]
+fn simulate_both_with_event_engine_prints_per_tech_deltas() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "both", "--engine", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("speedup"), "{text}");
+    // the documented contract: event runs always surface the roofline
+    // error bound, here one delta line per technology of the pair
+    for tech in ["e-sram", "o-sram"] {
+        assert!(
+            text.lines().any(|l| l.contains(tech) && l.contains("delta +")),
+            "missing delta line for `{tech}`:\n{text}"
+        );
+    }
+}
+
+#[test]
+fn sweep_accepts_the_event_engine() {
+    let out = bin()
+        .args([
+            "sweep", "--tensor", "nell-2", "--tech", "e-sram", "--tech", "o-sram",
+            "--scale", "0.0001", "--engine", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("engine event"), "{text}");
+}
+
+#[test]
+fn unknown_engine_lists_the_backends() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "o-sram", "--engine", "roofline",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("analytic") && err.contains("event"), "{err}");
+}
+
+#[test]
 fn mode_filter_is_rejected_for_multi_tech_simulate() {
     // --mode silently ignored would mislabel whole-run numbers; it must
     // error for `both`/`all` and point at the working spellings

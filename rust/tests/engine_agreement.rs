@@ -1,0 +1,119 @@
+//! Engine-agreement golden tests: the event-driven contention engine must
+//! bracket the analytic roofline engine — never below it (their busy
+//! accounting is shared), and within the documented tolerance above it on
+//! conflict-light deterministic tensors. A bank-conflict-heavy stream
+//! must make the event engine *strictly* slower, which is the whole point
+//! of having a second engine.
+
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::sim::engine;
+use photon_mttkrp::sim::event::{self, EVENT_AGREEMENT_TOLERANCE};
+use photon_mttkrp::tensor::gen;
+
+fn small_cfg() -> AcceleratorConfig {
+    AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+}
+
+/// `event / analytic` runtime ratio for one (tensor, mode, tech).
+fn ratio(t: &SparseTensor, mode: usize, cfg: &AcceleratorConfig, name: &str) -> f64 {
+    let a = engine::simulate_mode(t, mode, cfg, &tech(name));
+    let e = event::simulate_mode_event(t, mode, cfg, &tech(name));
+    e.runtime_cycles() / a.runtime_cycles()
+}
+
+#[test]
+fn engines_agree_within_tolerance_on_uniform_streams() {
+    // uniform row accesses spread evenly over the cache banks, so the
+    // event replay must land inside the documented agreement band for
+    // every builtin technology, in both the cache-resident and the
+    // DRAM-bound regime
+    let cfg = small_cfg();
+    let hot = gen::random(&[1024, 1024, 1024], 100_000, 11);
+    let cold = gen::random(&[120_000, 110_000, 100_000], 30_000, 13);
+    for t in [&hot, &cold] {
+        for name in registry::names() {
+            let r = ratio(t, 0, &cfg, &name);
+            assert!(
+                (1.0 - 1e-12..=EVENT_AGREEMENT_TOLERANCE).contains(&r),
+                "{} on {name}: event/analytic = {r} outside [1, {EVENT_AGREEMENT_TOLERANCE}]",
+                t.name
+            );
+        }
+    }
+}
+
+#[test]
+fn bank_conflict_heavy_stream_is_strictly_slower_on_event() {
+    // every mode-1 access hits factor row 0 ⇒ one bank of the banked
+    // electrical cache serializes the whole stream; the analytic engine
+    // cannot see this, the event engine must
+    let mut t = SparseTensor::new("conflict", vec![256, 4, 64]);
+    for k in 0..20_000u32 {
+        t.push(&[k % 256, 0, k % 64], 1.0);
+    }
+    let cfg = small_cfg();
+    let r_esram = ratio(&t, 0, &cfg, "e-sram");
+    assert!(r_esram > 1.5, "conflict stream must inflate e-sram: ratio {r_esram}");
+    // the single-bank optical array has no cascade to conflict on
+    let r_osram = ratio(&t, 0, &cfg, "o-sram");
+    assert!(r_osram < r_esram, "o-sram {r_osram} must sit below e-sram {r_esram}");
+    assert!(r_osram <= EVENT_AGREEMENT_TOLERANCE, "{r_osram}");
+}
+
+#[test]
+fn event_engine_runs_every_builtin_tech_on_every_frostt_preset() {
+    // the acceptance grid: both engines, all registered technologies, all
+    // Table II fingerprints — and the delta is always a well-formed,
+    // non-negative error bound
+    let scale = 1.0 / 262_144.0;
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    for ft in FrosttTensor::ALL {
+        let tensor = frostt::preset(ft).scaled(scale).generate(3);
+        let deltas = cross_validate(&tensor, &cfg, &registry::all());
+        assert_eq!(deltas.len(), registry::names().len(), "{}", tensor.name);
+        for d in &deltas {
+            assert!(
+                d.ratio() >= 1.0 - 1e-12,
+                "{} on {}: event {} below analytic {}",
+                tensor.name,
+                d.tech,
+                d.event_cycles,
+                d.analytic_cycles
+            );
+            assert!(d.ratio().is_finite(), "{} on {}", tensor.name, d.tech);
+            assert!(d.delta_pct() >= -1e-9);
+        }
+    }
+}
+
+#[test]
+fn engine_choice_never_changes_functional_results() {
+    // hit rate, DRAM traffic and active words feed the energy model; a
+    // simulation engine is a *timing* choice and must not perturb them
+    let t = gen::random(&[2048, 512, 512], 50_000, 17);
+    let cfg = small_cfg();
+    for name in ["e-sram", "o-sram"] {
+        let a = engine::simulate_mode(&t, 1, &cfg, &tech(name));
+        let e = event::simulate_mode_event(&t, 1, &cfg, &tech(name));
+        assert_eq!(a.hit_rate(), e.hit_rate(), "{name}");
+        assert_eq!(a.total_dram_bytes(), e.total_dram_bytes(), "{name}");
+        assert_eq!(a.total_dram_random_accesses(), e.total_dram_random_accesses(), "{name}");
+        assert_eq!(a.total_onchip_words(), e.total_onchip_words(), "{name}");
+        assert_eq!(a.imbalance(), e.imbalance(), "{name}");
+    }
+}
+
+#[test]
+fn driver_engine_variants_compose_with_the_registry() {
+    let t = frostt::preset(FrosttTensor::Nell2).scaled(1.0 / 65_536.0).generate(5);
+    let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 65_536.0);
+    let c = compare_technologies_with_engine(&t, &cfg, &registry::all(), EngineKind::Event);
+    assert_eq!(c.runs.len(), registry::names().len());
+    // O-SRAM still beats E-SRAM under contention-aware timing (its
+    // single-bank array has strictly less to conflict on)
+    assert!(
+        c.total_speedup("o-sram") >= 1.0,
+        "event-engine o-sram speedup {}",
+        c.total_speedup("o-sram")
+    );
+}
