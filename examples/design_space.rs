@@ -7,7 +7,10 @@
 //!    all cores with `sim::sweep` and print the scenario table;
 //! 3. ablate the architectural knobs DESIGN.md calls out — WDM wavelength
 //!    count λ (the Eq. 1 bandwidth driver), cache capacity, PE count and
-//!    §IV-A type-3 bypass routing.
+//!    §IV-A type-3 bypass routing;
+//! 4. open the *workload* axis: run every builtin sparse kernel
+//!    (spMTTKRP / Tucker TTMc / SpMM) through the identical engines and
+//!    compare where each one bottlenecks.
 //!
 //! ```bash
 //! cargo run --release --example design_space
@@ -60,8 +63,8 @@ fn main() {
     let tensor = frostt::preset(FrosttTensor::Nell2).scaled(scale).generate(42);
     let base = AcceleratorConfig::paper_default().scaled(scale);
     let e_runtime = simulate_all_modes(&tensor, &base, &tech("e-sram")).total_runtime_s();
-    let mut t =
-        Table::new("wavelength (λ) sweep — O-SRAM runtime", &["λ", "o-sram ms", "speedup vs e-sram"]);
+    let cols = ["λ", "o-sram ms", "speedup vs e-sram"];
+    let mut t = Table::new("wavelength (λ) sweep — O-SRAM runtime", &cols);
     for lam in [1u32, 2, 5, 10] {
         let mut cfg = base.clone();
         cfg.osram_lambda_override = Some(lam); // Eq. 1: b_process ∝ λ
@@ -77,7 +80,9 @@ fn main() {
 
     // --- 3b. cache capacity sweep ---
     let mut t = Table::new("cache capacity sweep", &["lines/cache", "speedup", "energy savings"]);
-    for lines in [base.cache_lines / 4, base.cache_lines / 2, base.cache_lines, base.cache_lines * 2] {
+    let line_counts =
+        [base.cache_lines / 4, base.cache_lines / 2, base.cache_lines, base.cache_lines * 2];
+    for lines in line_counts {
         let mut cfg = base.clone();
         cfg.cache_lines = lines.next_power_of_two();
         let cmp = compare_paper_pair(&tensor, &cfg);
@@ -103,6 +108,49 @@ fn main() {
         ]);
     }
     println!("{}", t.render_ascii());
+
+    // --- 4. the kernel axis: same tensor, same memory system, three
+    //        workloads — the access-stream IR makes this one loop ---
+    let mut t = Table::new(
+        "sparse-kernel axis (nell-2 fingerprint)",
+        &["kernel", "o-sram ms", "bottleneck", "speedup vs e-sram", "summary"],
+    )
+    .align(0, Align::Left)
+    .align(2, Align::Left)
+    .align(4, Align::Left);
+    for kind in KernelKind::ALL {
+        let c = compare_technologies_with_kernel(
+            &tensor,
+            &base,
+            &paper_pair(),
+            EngineKind::Analytic,
+            kind,
+        );
+        let o = &c.require("o-sram").report;
+        let slowest = o
+            .modes
+            .iter()
+            .max_by(|a, b| a.runtime_cycles().partial_cmp(&b.runtime_cycles()).unwrap())
+            .expect("modes");
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{:.3}", o.total_runtime_s() * 1e3),
+            slowest.bottleneck().name().to_string(),
+            format!("{:.2}x", c.total_speedup("o-sram")),
+            kind.kernel().summary().to_string(),
+        ]);
+    }
+    println!("{}", t.render_ascii());
+
+    // --- and a whole sweep grid on a non-default kernel ---
+    let mut tspec = SweepSpec::new(
+        vec![frostt::preset(FrosttTensor::Nell2)],
+        vec![scale],
+        vec![tech("e-sram"), tech("o-sram")],
+    );
+    tspec.kernel = KernelKind::Spttm;
+    let tpoints = run_sweep(&tspec).expect("ttm sweep");
+    println!("{}", summary_table(&tspec, &tpoints).render_ascii());
 
     // --- 3d. §IV-A type-3 bypass routing, on a cache-hostile tensor ---
     let cold = frostt::preset(FrosttTensor::Nell1).scaled(scale / 8.0).generate(42);

@@ -83,6 +83,8 @@ fn main() {
     b.record_value("remap/on/osram_ms", mapped.total_runtime_s() * 1e3, "ms");
     b.record_value("remap/off/osram_ms", raw.total_runtime_s() * 1e3, "ms");
 
-    b.write_csv("target/bench/ablations.csv");
+    if let Err(e) = b.write_csv(std::path::Path::new("target/bench/ablations.csv")) {
+        eprintln!("warning: could not write target/bench/ablations.csv: {e}");
+    }
     println!("\nablations complete");
 }

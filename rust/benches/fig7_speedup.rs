@@ -21,7 +21,8 @@ fn main() {
     println!("{}", paper::fig7(&results).render_ascii());
 
     for r in &results {
-        b.record_value(&format!("{}/total_speedup", r.name), r.comparison.total_speedup("o-sram"), "x");
+        let name = format!("{}/total_speedup", r.name);
+        b.record_value(&name, r.comparison.total_speedup("o-sram"), "x");
     }
     let all: Vec<f64> = results.iter().map(|r| r.comparison.total_speedup("o-sram")).collect();
     let mean = Summary::geomean_of(&all);
@@ -60,5 +61,7 @@ fn main() {
         )
         .runtime_cycles()
     });
-    b.write_csv("target/bench/fig7.csv");
+    if let Err(e) = b.write_csv(std::path::Path::new("target/bench/fig7.csv")) {
+        eprintln!("warning: could not write target/bench/fig7.csv: {e}");
+    }
 }

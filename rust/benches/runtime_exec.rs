@@ -39,18 +39,26 @@ fn main() {
     // end-to-end blocked MTTKRP vs the scalar reference
     let t = gen::random(&[200, 200, 200], 100_000, 5);
     let factors: Vec<FactorMatrix> =
-        t.dims.iter().enumerate().map(|(m, &d)| FactorMatrix::random(d as usize, 16, m as u64)).collect();
+        t.dims
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| FactorMatrix::random(d as usize, 16, m as u64))
+            .collect();
     let m_art = b.bench_items("mttkrp_via_artifacts/100k_nnz", t.nnz() as f64, || {
         mttkrp_via_artifacts(&rt, &t, 0, &factors).unwrap().data.len()
     });
     let blocks = (t.nnz() as f64 / BLOCK as f64).ceil();
     let us_per_block = m_art.mean.as_secs_f64() * 1e6 / blocks;
-    println!("amortized {us_per_block:.1} us/block ({blocks:.0} blocks) — §Perf target < 100 us");
+    println!(
+        "amortized {us_per_block:.1} us/block ({blocks:.0} blocks) — §Perf target < 100 us"
+    );
 
     b.bench_items("mttkrp_reference/100k_nnz", t.nnz() as f64, || {
         mttkrp(&t, 0, &factors).data.len()
     });
 
     println!("\n{}", b.summary_table().render_ascii());
-    b.write_csv("target/bench/runtime_exec.csv");
+    if let Err(e) = b.write_csv(std::path::Path::new("target/bench/runtime_exec.csv")) {
+        eprintln!("warning: could not write target/bench/runtime_exec.csv: {e}");
+    }
 }

@@ -50,5 +50,17 @@ fn main() {
     b.bench_items("tensor_generate", spec.nnz as f64, || spec.generate(9).nnz());
 
     println!("\n{}", b.summary_table().render_ascii());
-    b.write_csv("target/bench/sim_throughput.csv");
+    if let Err(e) = b.write_csv(std::path::Path::new("target/bench/sim_throughput.csv")) {
+        eprintln!("warning: could not write target/bench/sim_throughput.csv: {e}");
+    }
+    // The perf trajectory accumulates at the repository root (the bench
+    // runs with CARGO_MANIFEST_DIR = rust/, one level below it):
+    // commit the refreshed BENCH_sim_throughput.json alongside perf-
+    // relevant changes so regressions are visible in history.
+    let json =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim_throughput.json");
+    match b.write_json(&json) {
+        Ok(()) => eprintln!("wrote {}", json.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", json.display()),
+    }
 }

@@ -26,7 +26,12 @@ impl OnChipBudget {
         let cache_tag = pes * cfg.n_caches as u64 * cfg.cache_lines as u64 * 8;
         let psum = pes * cfg.n_pipelines as u64 * cfg.psum_elements as u64 * 4;
         let dma = pes * cfg.n_dma_buffers as u64 * cfg.dma_buffer_bytes as u64;
-        OnChipBudget { cache_data_bytes: cache_data, cache_tag_bytes: cache_tag, psum_bytes: psum, dma_bytes: dma }
+        OnChipBudget {
+            cache_data_bytes: cache_data,
+            cache_tag_bytes: cache_tag,
+            psum_bytes: psum,
+            dma_bytes: dma,
+        }
     }
 
     pub fn total_bytes(&self) -> u64 {

@@ -81,7 +81,12 @@ pub struct CacheTiming {
 }
 
 impl CacheTiming {
-    pub fn new(tech: &MemTechnology, fabric_hz: f64, bank_factor: usize, line_bytes: usize) -> Self {
+    pub fn new(
+        tech: &MemTechnology,
+        fabric_hz: f64,
+        bank_factor: usize,
+        line_bytes: usize,
+    ) -> Self {
         let array = ArrayTiming::new(tech, fabric_hz, bank_factor);
         CacheTiming {
             array,

@@ -232,7 +232,11 @@ mod tests {
     fn fit_bounded_above_by_one() {
         let t = low_rank_tensor(&[10, 10, 10], 2, 500, 0.1, 1);
         let model =
-            cp_als(&t, &CpAlsConfig { rank: 4, max_iters: 5, ..Default::default() }, &Compute::Reference)
+            cp_als(
+                &t,
+                &CpAlsConfig { rank: 4, max_iters: 5, ..Default::default() },
+                &Compute::Reference,
+            )
                 .unwrap();
         for s in &model.history {
             assert!(s.fit <= 1.0 + 1e-9);

@@ -5,11 +5,13 @@
 //!   technology, with the paper's locality-enhancing remapping applied
 //!   first (§IV-A "determine a mapping of X into memory for each mode").
 //!   The `_with_engine` variants select the simulation backend
-//!   ([`EngineKind`]: analytic roofline or event-driven contention).
+//!   ([`EngineKind`]: analytic roofline or event-driven contention); the
+//!   `_with_kernel` variants additionally select the workload
+//!   ([`KernelKind`]: spMTTKRP, Tucker TTM-chain, SpMM).
 //! * [`compare_technologies`] — the N-way generalization of the Fig. 7 /
 //!   Fig. 8 primitive: run any list of registry-resolved technologies on
 //!   one tensor and report per-mode speedups + run-energy ratios against
-//!   the first (baseline) entry.
+//!   the first (baseline) entry, for any kernel on either engine.
 //! * [`compare_paper_pair`] — the paper's exact E-SRAM vs O-SRAM pair.
 //! * [`cross_validate`] — run both engines on one tensor per technology
 //!   and report the analytic-vs-event runtime delta (the roofline model's
@@ -19,6 +21,7 @@
 
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};
+use crate::kernel::KernelKind;
 use crate::mem::registry;
 use crate::mem::tech::MemTechnology;
 use crate::mttkrp::block::mttkrp_via_artifacts;
@@ -40,14 +43,14 @@ pub fn apply_memory_mapping(tensor: &SparseTensor) -> SparseTensor {
 }
 
 /// Simulate one output mode (with the memory mapping applied) on the
-/// analytic engine.
+/// analytic engine, spMTTKRP kernel.
 pub fn simulate_mode(
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> ModeReport {
-    simulate_mode_with_engine(tensor, mode, cfg, tech, EngineKind::Analytic)
+    simulate_mode_with_kernel(tensor, mode, cfg, tech, EngineKind::Analytic, KernelKind::Spmttkrp)
 }
 
 /// [`simulate_mode`] on an explicitly selected simulation backend.
@@ -58,8 +61,20 @@ pub fn simulate_mode_with_engine(
     tech: &MemTechnology,
     engine: EngineKind,
 ) -> ModeReport {
+    simulate_mode_with_kernel(tensor, mode, cfg, tech, engine, KernelKind::Spmttkrp)
+}
+
+/// [`simulate_mode`] on an explicitly selected backend *and* kernel.
+pub fn simulate_mode_with_kernel(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    engine: EngineKind,
+    kernel: KernelKind,
+) -> ModeReport {
     let t = apply_memory_mapping(tensor);
-    engine.simulate_mode(&t, mode, cfg, tech)
+    engine.simulate_kernel_mode(kernel.kernel(), &t, mode, cfg, tech)
 }
 
 /// Simulate all modes (the full spMTTKRP of Fig. 7's x-axis) on the
@@ -69,7 +84,7 @@ pub fn simulate_all_modes(
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> SimReport {
-    simulate_all_modes_with_engine(tensor, cfg, tech, EngineKind::Analytic)
+    simulate_all_modes_with_kernel(tensor, cfg, tech, EngineKind::Analytic, KernelKind::Spmttkrp)
 }
 
 /// [`simulate_all_modes`] on an explicitly selected simulation backend.
@@ -79,8 +94,19 @@ pub fn simulate_all_modes_with_engine(
     tech: &MemTechnology,
     engine: EngineKind,
 ) -> SimReport {
+    simulate_all_modes_with_kernel(tensor, cfg, tech, engine, KernelKind::Spmttkrp)
+}
+
+/// [`simulate_all_modes`] on an explicitly selected backend *and* kernel.
+pub fn simulate_all_modes_with_kernel(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    engine: EngineKind,
+    kernel: KernelKind,
+) -> SimReport {
     let t = apply_memory_mapping(tensor);
-    engine.simulate_all_modes(&t, cfg, tech)
+    engine.simulate_kernel_all_modes(kernel.kernel(), &t, cfg, tech)
 }
 
 /// One technology's full-run result inside a [`TechComparison`].
@@ -163,7 +189,7 @@ pub fn compare_technologies(
     cfg: &AcceleratorConfig,
     techs: &[MemTechnology],
 ) -> TechComparison {
-    compare_technologies_with_engine(tensor, cfg, techs, EngineKind::Analytic)
+    compare_technologies_with_kernel(tensor, cfg, techs, EngineKind::Analytic, KernelKind::Spmttkrp)
 }
 
 /// [`compare_technologies`] on an explicitly selected backend (every run
@@ -174,6 +200,19 @@ pub fn compare_technologies_with_engine(
     cfg: &AcceleratorConfig,
     techs: &[MemTechnology],
     engine: EngineKind,
+) -> TechComparison {
+    compare_technologies_with_kernel(tensor, cfg, techs, engine, KernelKind::Spmttkrp)
+}
+
+/// [`compare_technologies`] on an explicitly selected backend *and*
+/// kernel (engine- and kernel-uniform across every run, so the ratios
+/// always compare like with like).
+pub fn compare_technologies_with_kernel(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+    engine: EngineKind,
+    kernel: KernelKind,
 ) -> TechComparison {
     assert!(!techs.is_empty(), "compare_technologies needs at least one technology");
     // the accessors are name-keyed (find-first), so a duplicate name would
@@ -189,7 +228,7 @@ pub fn compare_technologies_with_engine(
     let runs = techs
         .iter()
         .map(|tech| {
-            let report = engine.simulate_all_modes(&t, cfg, tech);
+            let report = engine.simulate_kernel_all_modes(kernel.kernel(), &t, cfg, tech);
             let energy = em.run_energy(&report);
             TechRun { report, energy }
         })
@@ -222,13 +261,24 @@ impl EngineDelta {
 
 /// Run **both** engines on one tensor for every technology in `techs` and
 /// return the per-technology runtime deltas — the analytic model's
-/// measured error bound on this workload. The §IV-A memory mapping, the
-/// tensor preparation and the O(nnz) per-mode view builds are all shared
-/// across every (technology × engine) run, like the sweep engine does.
+/// measured error bound on this workload (spMTTKRP). The §IV-A memory
+/// mapping, the tensor preparation and the O(nnz) per-mode view builds
+/// are all shared across every (technology × engine) run, like the sweep
+/// engine does.
 pub fn cross_validate(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
     techs: &[MemTechnology],
+) -> Vec<EngineDelta> {
+    cross_validate_kernel(tensor, cfg, techs, KernelKind::Spmttkrp)
+}
+
+/// [`cross_validate`] for an explicitly selected kernel.
+pub fn cross_validate_kernel(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+    kernel: KernelKind,
 ) -> Vec<EngineDelta> {
     let t = apply_memory_mapping(tensor);
     let views: Vec<(usize, crate::tensor::csf::ModeView)> = (0..t.n_modes())
@@ -241,7 +291,8 @@ pub fn cross_validate(
                 views
                     .iter()
                     .map(|(m, v)| {
-                        kind.simulate_mode_with_view(&t, v, *m, cfg, tech).runtime_cycles()
+                        kind.simulate_kernel_mode_with_view(kernel.kernel(), &t, v, *m, cfg, tech)
+                            .runtime_cycles()
                     })
                     .sum()
             };
@@ -398,6 +449,37 @@ mod tests {
         let ce = compare_technologies_with_engine(&t, &cfg, &techs, EngineKind::Event);
         assert_eq!(ce.names(), vec!["e-sram", "o-sram"]);
         assert!(ce.total_speedup("o-sram") > 0.0);
+    }
+
+    #[test]
+    fn kernel_variants_flow_through_the_driver() {
+        let t = TensorSpec::custom("k", vec![90, 90, 90], 7_000, 0.8).generate(12);
+        let cfg = cfg();
+        // explicit spmttkrp == the default path, bit for bit
+        let a = simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+        let b = simulate_mode_with_kernel(
+            &t, 0, &cfg, &tech("o-sram"), EngineKind::Analytic, KernelKind::Spmttkrp,
+        );
+        assert_eq!(a.runtime_cycles().to_bits(), b.runtime_cycles().to_bits());
+        // the other kernels run end to end and label their reports
+        for kernel in [KernelKind::Spttm, KernelKind::Spmm] {
+            let r = simulate_all_modes_with_kernel(
+                &t, &cfg, &tech("o-sram"), EngineKind::Analytic, kernel,
+            );
+            assert_eq!(r.kernel, kernel.name());
+            assert_eq!(r.modes.len(), 3);
+            let c = compare_technologies_with_kernel(
+                &t, &cfg, &paper_pair(), EngineKind::Analytic, kernel,
+            );
+            assert_eq!(c.names(), vec!["e-sram", "o-sram"]);
+            assert!(c.total_speedup("o-sram") > 0.0, "{kernel}");
+        }
+        // cross-validation holds per kernel too
+        for kernel in KernelKind::ALL {
+            for d in cross_validate_kernel(&t, &cfg, &paper_pair(), kernel) {
+                assert!(d.ratio() >= 1.0 - 1e-12, "{kernel} on {}: {}", d.tech, d.ratio());
+            }
+        }
     }
 
     #[test]

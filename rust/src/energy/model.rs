@@ -134,7 +134,8 @@ mod tests {
         assert!(e.dram_j > 0.0);
         assert!(e.static_j > 0.0);
         assert!(e.switching_j > 0.0);
-        assert!((e.total_j() - (e.compute_j + e.dram_j + e.static_j + e.switching_j)).abs() < 1e-18);
+        let parts = e.compute_j + e.dram_j + e.static_j + e.switching_j;
+        assert!((e.total_j() - parts).abs() < 1e-18);
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! The access-stream intermediate representation.
+//!
+//! A sparse kernel's memory behaviour is a *stream of access programs*:
+//! per nonzero, which factor-matrix rows are read (the cache-routed §IV-A
+//! type-1/type-3 traffic), and where the output-slice boundaries fall
+//! (each completed slice drains the psum buffer and emits one output row
+//! through the stream DMA). Both simulation engines consume exactly this
+//! stream — nothing kernel-specific survives inside them.
+//!
+//! The stream is **chunked**: [`AccessStream`] yields [`AccessChunk`]s of
+//! at most `chunk_nnz` nonzeros, so a PE's walk over a multi-hundred-
+//! million-nonzero tensor needs O(chunk) live memory — the full trace is
+//! never materialized. A chunk may end mid-slice; a slice boundary is
+//! recorded only in the chunk where the slice's last nonzero retires, so
+//! slices larger than a chunk (a single hot output row) stream correctly.
+//!
+//! Op ordering is part of the cross-engine bit-identity contract: within
+//! a chunk, nonzeros appear in mode-view order and each nonzero's factor
+//! reads appear in ascending slot order — the exact order the
+//! pre-refactor engines issued [`MemoryController::factor_row_load`]
+//! calls in, so the functional caches see an identical request sequence.
+//!
+//! [`MemoryController::factor_row_load`]: crate::controller::mc::MemoryController::factor_row_load
+
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Default chunk granularity, in nonzeros. Large enough to amortize the
+/// per-chunk `Vec` allocation and the index-copy pass over the ≥ 64 Ki
+/// cache lookups each chunk funds (the copy is the deliberate cost of a
+/// kernel-agnostic owned-chunk iterator — a scratch-reuse fill API would
+/// save it at the price of lending semantics every consumer must thread),
+/// small enough that a chunk (≤ `64 Ki × reads_per_nnz` 8-byte ops)
+/// stays cache/memory friendly.
+pub const DEFAULT_CHUNK_NNZ: usize = 65_536;
+
+/// One factor-row read op: load row `row` of input slot `slot` (the
+/// engine routes the slot through its cache / bypass policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FactorRead {
+    pub slot: u32,
+    pub row: u32,
+}
+
+/// A chunk of one PE's access stream.
+///
+/// `reads` is flat and nonzero-major: nonzero `i` of the chunk owns
+/// `reads[i*rpn .. (i+1)*rpn]` where `rpn` is the kernel's fixed
+/// reads-per-nonzero count ([`super::SparseKernel::read_modes`] length).
+/// `slice_ends` holds strictly-ascending nonzero positions (chunk-local,
+/// 0-based) after which an output slice completes.
+#[derive(Clone, Debug, Default)]
+pub struct AccessChunk {
+    /// Nonzeros retired by this chunk.
+    pub n_nnz: usize,
+    /// Flattened factor-read ops, `rpn` per nonzero.
+    pub reads: Vec<FactorRead>,
+    /// Chunk-local positions whose nonzero completes an output slice.
+    pub slice_ends: Vec<u32>,
+}
+
+/// Chunked iterator over one PE's slice range `[slo, shi)` of a mode
+/// view: the default [`super::SparseKernel::stream`] implementation. Each
+/// nonzero emits one [`FactorRead`] per entry of `read_modes`, in order.
+pub struct AccessStream<'a> {
+    tensor: &'a SparseTensor,
+    view: &'a ModeView,
+    read_modes: Vec<usize>,
+    chunk_nnz: usize,
+    /// Next slice to drain from, and the position already consumed
+    /// within it (a slice may span chunks).
+    s: usize,
+    shi: usize,
+    k_in_slice: usize,
+}
+
+impl<'a> AccessStream<'a> {
+    /// Stream `view`'s slices `[slices.0, slices.1)`, reading the listed
+    /// tensor modes per nonzero, `chunk_nnz` nonzeros per chunk.
+    pub fn new(
+        tensor: &'a SparseTensor,
+        view: &'a ModeView,
+        slices: (usize, usize),
+        read_modes: Vec<usize>,
+        chunk_nnz: usize,
+    ) -> Self {
+        let (slo, shi) = slices;
+        assert!(slo <= shi && shi <= view.n_slices(), "slice range ({slo},{shi}) out of bounds");
+        assert!(chunk_nnz > 0, "chunk size must be positive");
+        AccessStream { tensor, view, read_modes, chunk_nnz, s: slo, shi, k_in_slice: 0 }
+    }
+}
+
+impl Iterator for AccessStream<'_> {
+    type Item = AccessChunk;
+
+    fn next(&mut self) -> Option<AccessChunk> {
+        if self.s >= self.shi {
+            return None;
+        }
+        let rpn = self.read_modes.len();
+        // allocation bounded by min(chunk size, remaining work) — the
+        // O(chunk)-memory contract, robust to caller-supplied huge sizes
+        let remaining = (self.view.slice_ptr[self.shi] - self.view.slice_ptr[self.s]) as usize
+            - self.k_in_slice;
+        let take_cap = self.chunk_nnz.min(remaining);
+        let mut chunk = AccessChunk {
+            n_nnz: 0,
+            reads: Vec::with_capacity(take_cap * rpn),
+            slice_ends: Vec::new(),
+        };
+        while self.s < self.shi && chunk.n_nnz < self.chunk_nnz {
+            let slice = self.view.slice(self.s);
+            let take = (self.chunk_nnz - chunk.n_nnz).min(slice.len() - self.k_in_slice);
+            for &k in &slice[self.k_in_slice..self.k_in_slice + take] {
+                for (j, &m) in self.read_modes.iter().enumerate() {
+                    let row = self.tensor.indices[m][k as usize];
+                    chunk.reads.push(FactorRead { slot: j as u32, row });
+                }
+            }
+            chunk.n_nnz += take;
+            self.k_in_slice += take;
+            if self.k_in_slice == slice.len() {
+                // the slice's last nonzero retired inside this chunk
+                chunk.slice_ends.push((chunk.n_nnz - 1) as u32);
+                self.s += 1;
+                self.k_in_slice = 0;
+            }
+        }
+        Some(chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+
+    fn stream_all(
+        t: &SparseTensor,
+        view: &ModeView,
+        modes: Vec<usize>,
+        chunk: usize,
+    ) -> Vec<AccessChunk> {
+        AccessStream::new(t, view, (0, view.n_slices()), modes, chunk).collect()
+    }
+
+    #[test]
+    fn covers_every_nonzero_and_slice_exactly_once() {
+        let t = gen::random(&[40, 30, 20], 2_000, 5);
+        let view = ModeView::build(&t, 0);
+        for chunk_nnz in [1, 7, 64, 10_000] {
+            let chunks = stream_all(&t, &view, vec![1, 2], chunk_nnz);
+            let nnz: usize = chunks.iter().map(|c| c.n_nnz).sum();
+            let slices: usize = chunks.iter().map(|c| c.slice_ends.len()).sum();
+            assert_eq!(nnz, t.nnz(), "chunk {chunk_nnz}");
+            assert_eq!(slices, view.n_slices(), "chunk {chunk_nnz}");
+            for c in &chunks {
+                assert!(c.n_nnz <= chunk_nnz);
+                assert_eq!(c.reads.len(), c.n_nnz * 2);
+                // slice_ends strictly ascending and in range
+                for w in c.slice_ends.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+                for &p in &c.slice_ends {
+                    assert!((p as usize) < c.n_nnz);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_never_changes_the_op_sequence() {
+        let t = gen::random(&[16, 64, 64], 3_000, 9);
+        let view = ModeView::build(&t, 0);
+        let whole: Vec<FactorRead> = stream_all(&t, &view, vec![1, 2], usize::MAX / 2)
+            .into_iter()
+            .flat_map(|c| c.reads)
+            .collect();
+        for chunk_nnz in [1, 3, 100] {
+            let split: Vec<FactorRead> = stream_all(&t, &view, vec![1, 2], chunk_nnz)
+                .into_iter()
+                .flat_map(|c| c.reads)
+                .collect();
+            assert_eq!(whole, split, "chunk {chunk_nnz}");
+        }
+    }
+
+    #[test]
+    fn reads_follow_mode_view_order() {
+        let t = gen::random(&[8, 32], 200, 3);
+        let view = ModeView::build(&t, 0);
+        let chunks = stream_all(&t, &view, vec![1], 64);
+        let mut it = chunks.iter().flat_map(|c| c.reads.iter());
+        for s in 0..view.n_slices() {
+            for &k in view.slice(s) {
+                let r = it.next().unwrap();
+                assert_eq!(r.slot, 0);
+                assert_eq!(r.row, t.indices[1][k as usize]);
+            }
+        }
+        assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn slices_spanning_chunks_end_in_the_right_chunk() {
+        // one giant slice (single output row) must stream across many
+        // chunks and record exactly one slice end, in the last chunk
+        let mut t = SparseTensor::new("hot", vec![4, 64]);
+        for k in 0..1_000u32 {
+            t.push(&[2, k % 64], 1.0);
+        }
+        let view = ModeView::build(&t, 0);
+        assert_eq!(view.n_slices(), 1);
+        let chunks = stream_all(&t, &view, vec![1], 64);
+        assert!(chunks.len() > 10);
+        for c in &chunks[..chunks.len() - 1] {
+            assert!(c.slice_ends.is_empty());
+        }
+        assert_eq!(chunks.last().unwrap().slice_ends.len(), 1);
+    }
+
+    #[test]
+    fn empty_range_yields_no_chunks() {
+        let t = gen::random(&[8, 8], 100, 1);
+        let view = ModeView::build(&t, 0);
+        let n = view.n_slices();
+        assert_eq!(AccessStream::new(&t, &view, (n, n), vec![1], 16).count(), 0);
+        let e = SparseTensor::new("e", vec![4, 4]);
+        let ev = ModeView::build(&e, 0);
+        assert_eq!(AccessStream::new(&e, &ev, (0, 0), vec![1], 16).count(), 0);
+    }
+}

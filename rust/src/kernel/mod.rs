@@ -1,0 +1,269 @@
+//! Sparse-kernel layer: the workload axis of the simulator.
+//!
+//! "Towards Programmable Memory Controller for Tensor Decomposition"
+//! (arXiv:2207.08298) observes that what a tensor accelerator actually
+//! reuses across workloads is the **memory-access pattern**, not the
+//! kernel arithmetic. This module makes that the architecture: a
+//! [`SparseKernel`] describes one sparse workload as
+//!
+//! 1. a chunked **access-stream IR** ([`ir`]): per nonzero, which factor
+//!    rows are read; per output slice, where the psum drain / output-row
+//!    write falls — generated lazily in O(chunk) memory;
+//! 2. per-nonzero / per-slice **execution charges** against the PE's
+//!    pipelines and psum buffer;
+//! 3. its own **closed-form totals** ([`KernelTotals`], the §IV-A-style
+//!    compute/traffic formulas) the tests cross-check the simulated
+//!    traffic against.
+//!
+//! Both simulation engines ([`crate::sim::engine`], [`crate::sim::event`])
+//! consume only this interface, so any kernel runs on either backend, on
+//! any registry technology, with no per-kernel code in the engines.
+//!
+//! Builtins ([`KernelKind`], `--kernel` on the CLI):
+//!
+//! | name       | workload                                                    |
+//! |------------|-------------------------------------------------------------|
+//! | `spmttkrp` | sparse MTTKRP (CP-ALS) — the paper's kernel, bit-identical  |
+//! | `spttm`    | sparse TTM-chain (Tucker mode product, TTMc)                |
+//! | `spmm`     | sparse matrix × dense matrix (the 2-mode degenerate case)   |
+
+pub mod ir;
+pub mod spmm;
+pub mod spmttkrp;
+pub mod spttm;
+
+use crate::pe::exec::{ExecCharge, ExecUnit};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+pub use ir::{AccessChunk, AccessStream, FactorRead, DEFAULT_CHUNK_NNZ};
+
+/// Closed-form per-mode totals of a kernel (the generalization of the
+/// paper's §IV-A MTTKRP formulas; see each builtin for its derivation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelTotals {
+    /// Multiply/accumulate operations for the whole mode.
+    pub compute_ops: u64,
+    /// Elements transferred from/to external memory.
+    pub transfer_elements: u64,
+    /// Factor-row *requests* the cache subsystem sees.
+    pub factor_requests: u64,
+    /// Output rows actually written (non-empty slices).
+    pub output_rows_written: u64,
+    /// The paper-style bound: the full output-mode dimension.
+    pub output_rows_bound: u64,
+}
+
+/// One sparse workload, described entirely by its access stream, its
+/// execution charges and its closed-form totals.
+///
+/// Contract (the engines rely on it):
+/// * [`stream`](Self::stream) yields every nonzero of the slice range
+///   exactly once, in mode-view order, with exactly
+///   `read_modes().len()` [`FactorRead`]s per nonzero in slot order;
+/// * slot `j` reads rows of the factor matrix for tensor mode
+///   `read_modes()[j]` (its row count bounds the bypass decision);
+/// * each chunk's memory is bounded by the requested chunk size — a
+///   kernel never materializes the full trace.
+pub trait SparseKernel: Send + Sync {
+    /// Short stable name (`spmttkrp`, `spttm`, `spmm`) used by the CLI,
+    /// reports and sweep tables.
+    fn name(&self) -> &'static str;
+
+    /// One-line human description for listings.
+    fn summary(&self) -> &'static str;
+
+    /// Is this kernel defined for `tensor` / `mode`? The engines check
+    /// this before simulating; the CLI surfaces the message.
+    fn validate(&self, tensor: &SparseTensor, mode: usize) -> Result<(), String> {
+        if mode >= tensor.n_modes() {
+            return Err(format!("mode {mode} out of range for {}-mode tensor", tensor.n_modes()));
+        }
+        Ok(())
+    }
+
+    /// Tensor modes whose factor matrix is read per nonzero, in slot
+    /// order. Slot `j` of every [`FactorRead`] refers to entry `j` here.
+    fn read_modes(&self, tensor: &SparseTensor, mode: usize) -> Vec<usize>;
+
+    /// Per-nonzero execution charge (pipelines + psum) on `exec`.
+    fn nnz_exec(&self, exec: &ExecUnit, n_modes: usize) -> ExecCharge;
+
+    /// Per-completed-slice psum drain charge on `exec`.
+    fn drain_exec(&self, exec: &ExecUnit, n_modes: usize) -> ExecCharge;
+
+    /// Bytes of one output row streamed out per completed slice.
+    fn out_row_bytes(&self, rank: usize, n_modes: usize) -> u64;
+
+    /// The kernel's closed-form totals for `tensor` / `mode` at `rank`.
+    fn totals(&self, tensor: &SparseTensor, mode: usize, rank: usize) -> KernelTotals;
+
+    /// Chunked access-program stream for one PE's slice range of `view`
+    /// (which must be `ModeView::build(tensor, view.mode)`).
+    fn stream<'a>(
+        &self,
+        tensor: &'a SparseTensor,
+        view: &'a ModeView,
+        slices: (usize, usize),
+        chunk_nnz: usize,
+    ) -> AccessStream<'a> {
+        AccessStream::new(tensor, view, slices, self.read_modes(tensor, view.mode), chunk_nnz)
+    }
+}
+
+/// All tensor modes except the output mode, ascending — the read set of
+/// the MTTKRP / TTM-chain family (shared by their `read_modes`).
+pub fn input_modes(tensor: &SparseTensor, mode: usize) -> Vec<usize> {
+    (0..tensor.n_modes()).filter(|&m| m != mode).collect()
+}
+
+/// Non-empty output slices (distinct `mode` coordinates) of a tensor —
+/// the `output_rows_written` term of every builtin's closed forms,
+/// counted in one O(nnz) pass without sorting or materializing a
+/// [`ModeView`] (whose `n_slices()` this must always equal; the kernel
+/// tests cross-check the two). Dense modes use a dim-sized bitmap,
+/// sparse (dim ≫ nnz) modes a hash set, mirroring the view builder's
+/// own strategy split.
+pub fn output_rows_written(tensor: &SparseTensor, mode: usize) -> u64 {
+    let dim = tensor.dims[mode] as usize;
+    let nnz = tensor.nnz();
+    if dim <= 4 * nnz + 1024 {
+        let mut seen = vec![false; dim];
+        let mut n = 0u64;
+        for &i in &tensor.indices[mode] {
+            if !seen[i as usize] {
+                seen[i as usize] = true;
+                n += 1;
+            }
+        }
+        n
+    } else {
+        let distinct: std::collections::HashSet<u32> =
+            tensor.indices[mode].iter().copied().collect();
+        distinct.len() as u64
+    }
+}
+
+/// Kernel selector: every builtin workload, by name (the workload
+/// counterpart of [`crate::sim::EngineKind`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Sparse MTTKRP (the paper's kernel) — the default.
+    #[default]
+    Spmttkrp,
+    /// Sparse Tucker TTM-chain (TTMc).
+    Spttm,
+    /// Sparse matrix × dense matrix.
+    Spmm,
+}
+
+impl KernelKind {
+    /// Every builtin kernel, in CLI listing order.
+    pub const ALL: [KernelKind; 3] = [KernelKind::Spmttkrp, KernelKind::Spttm, KernelKind::Spmm];
+
+    /// The kernel implementation this selector names.
+    pub fn kernel(self) -> &'static dyn SparseKernel {
+        match self {
+            KernelKind::Spmttkrp => &spmttkrp::SpMttkrp,
+            KernelKind::Spttm => &spttm::SpTtm,
+            KernelKind::Spmm => &spmm::SpMm,
+        }
+    }
+
+    /// The stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        self.kernel().name()
+    }
+
+    /// Parse a CLI spelling; the error lists every registered kernel.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Self::ALL.into_iter().find(|k| k.name() == s).ok_or_else(|| {
+            let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+            format!("unknown kernel `{s}` (registered kernels: {})", names.join(", "))
+        })
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+
+    #[test]
+    fn kernel_kinds_parse_and_display() {
+        assert_eq!(KernelKind::parse("spmttkrp"), Ok(KernelKind::Spmttkrp));
+        assert_eq!(KernelKind::parse("spttm"), Ok(KernelKind::Spttm));
+        assert_eq!("spmm".parse::<KernelKind>(), Ok(KernelKind::Spmm));
+        let err = KernelKind::parse("mttkrp").unwrap_err();
+        for name in ["spmttkrp", "spttm", "spmm"] {
+            assert!(err.contains(name), "{err}");
+        }
+        assert_eq!(KernelKind::default(), KernelKind::Spmttkrp);
+        assert_eq!(KernelKind::Spttm.to_string(), "spttm");
+    }
+
+    #[test]
+    fn builtin_names_are_unique_and_stable() {
+        let names: Vec<&str> = KernelKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names, vec!["spmttkrp", "spttm", "spmm"]);
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()), Ok(k));
+            assert!(!k.kernel().summary().is_empty());
+        }
+    }
+
+    #[test]
+    fn every_builtin_streams_every_nonzero_once() {
+        let t = gen::random(&[20, 30, 40], 1_500, 4);
+        let view = crate::tensor::csf::ModeView::build(&t, 1);
+        for k in KernelKind::ALL {
+            let kernel = k.kernel();
+            let rpn = kernel.read_modes(&t, 1).len();
+            let mut nnz = 0usize;
+            let mut slices = 0usize;
+            for c in kernel.stream(&t, &view, (0, view.n_slices()), 128) {
+                assert_eq!(c.reads.len(), c.n_nnz * rpn, "{k}");
+                nnz += c.n_nnz;
+                slices += c.slice_ends.len();
+            }
+            assert_eq!(nnz, t.nnz(), "{k}");
+            assert_eq!(slices, view.n_slices(), "{k}");
+        }
+    }
+
+    #[test]
+    fn totals_are_consistent_with_the_stream() {
+        // factor_requests must equal the number of FactorRead ops the
+        // stream emits — the IR and the closed forms may never diverge
+        let t = gen::random(&[25, 35, 45], 2_000, 8);
+        for k in KernelKind::ALL {
+            let kernel = k.kernel();
+            for mode in 0..t.n_modes() {
+                let view = crate::tensor::csf::ModeView::build(&t, mode);
+                let reads: u64 = kernel
+                    .stream(&t, &view, (0, view.n_slices()), 256)
+                    .map(|c| c.reads.len() as u64)
+                    .sum();
+                let totals = kernel.totals(&t, mode, 16);
+                assert_eq!(reads, totals.factor_requests, "{k} mode {mode}");
+                assert_eq!(totals.output_rows_written, view.n_slices() as u64);
+                assert_eq!(totals.output_rows_bound, t.dims[mode]);
+                assert!(totals.compute_ops > 0);
+                assert!(totals.transfer_elements > totals.factor_requests);
+            }
+        }
+    }
+}

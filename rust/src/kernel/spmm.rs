@@ -1,0 +1,128 @@
+//! The sparse-matrix × dense-matrix (SpMM) builtin kernel.
+//!
+//! `Y = X_(d) · U`: per nonzero, read **one** dense-operand row
+//! `U(i_c, :)` (where `i_c` is the first non-output coordinate), run `R`
+//! multiplies into the psum row `Y(i_d, :)` and drain R words per
+//! completed output slice. On a 2-mode tensor this is literal SpMM — the
+//! degenerate case of the MTTKRP family with a single input slot. On an
+//! N-mode tensor it prices the *matricized, batched* SpMM: the remaining
+//! coordinates ride along in the nonzero stream as batch indices and
+//! touch no factor matrix, so the cache subsystem sees exactly one
+//! request per nonzero — the lightest read-side workload the memory
+//! system serves, and the sharpest contrast to [`crate::kernel::spttm`]'s
+//! compute-heavy chain on the identical streaming machinery.
+
+use crate::kernel::{KernelTotals, SparseKernel};
+use crate::pe::exec::{ExecCharge, ExecUnit};
+use crate::tensor::coo::SparseTensor;
+
+/// The dense-operand mode: the first tensor mode that is not the output
+/// mode (mode 1 when `mode == 0`, mode 0 otherwise).
+fn dense_mode(mode: usize) -> usize {
+    usize::from(mode == 0)
+}
+
+/// Sparse matrix × dense matrix: `Y(i_d,:) += x · U(i_c,:)` per nonzero.
+pub struct SpMm;
+
+impl SparseKernel for SpMm {
+    fn name(&self) -> &'static str {
+        "spmm"
+    }
+
+    fn summary(&self) -> &'static str {
+        "sparse matrix times dense matrix (2-mode degenerate case; batched when N>2)"
+    }
+
+    fn validate(&self, tensor: &SparseTensor, mode: usize) -> Result<(), String> {
+        if mode >= tensor.n_modes() {
+            return Err(format!("mode {mode} out of range for {}-mode tensor", tensor.n_modes()));
+        }
+        if tensor.n_modes() < 2 {
+            return Err("spmm needs a tensor with at least 2 modes".into());
+        }
+        Ok(())
+    }
+
+    fn read_modes(&self, _tensor: &SparseTensor, mode: usize) -> Vec<usize> {
+        vec![dense_mode(mode)]
+    }
+
+    fn nnz_exec(&self, exec: &ExecUnit, _n_modes: usize) -> ExecCharge {
+        // one scaled row: R multiplies (accumulate fused), 2R psum words
+        exec.nonzero(2)
+    }
+
+    fn drain_exec(&self, exec: &ExecUnit, _n_modes: usize) -> ExecCharge {
+        exec.drain_slice()
+    }
+
+    fn out_row_bytes(&self, rank: usize, _n_modes: usize) -> u64 {
+        4 * rank as u64
+    }
+
+    /// Closed forms: compute `2·|T|·R` (R multiplies + R accumulates),
+    /// transfer `|T| + |T|·R + I_out·R` elements, `|T|` factor-row
+    /// requests.
+    fn totals(&self, tensor: &SparseTensor, mode: usize, rank: usize) -> KernelTotals {
+        let t = tensor.nnz() as u64;
+        let r = rank as u64;
+        let i_out = tensor.dims[mode];
+        KernelTotals {
+            compute_ops: 2 * t * r,
+            transfer_elements: t + t * r + i_out * r,
+            factor_requests: t,
+            output_rows_written: crate::kernel::output_rows_written(tensor, mode),
+            output_rows_bound: i_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::pipeline::ArrayTiming;
+    use crate::kernel::spmttkrp::SpMttkrp;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
+    use crate::tensor::gen;
+
+    #[test]
+    fn reads_exactly_one_dense_row_per_nonzero() {
+        let t = gen::random(&[10, 20, 30], 400, 3);
+        assert_eq!(SpMm.read_modes(&t, 0), vec![1]);
+        assert_eq!(SpMm.read_modes(&t, 1), vec![0]);
+        assert_eq!(SpMm.read_modes(&t, 2), vec![0]);
+    }
+
+    #[test]
+    fn two_mode_spmm_equals_two_mode_mttkrp() {
+        // the advertised degeneracy: on a matrix the three-way family
+        // collapses and spmm must price identically to spmttkrp
+        let e = ExecUnit::new(80, 16, ArrayTiming::new(&osram(), FABRIC_HZ, 1), 8);
+        assert_eq!(SpMm.nnz_exec(&e, 2), SpMttkrp.nnz_exec(&e, 2));
+        assert_eq!(SpMm.drain_exec(&e, 2), SpMttkrp.drain_exec(&e, 2));
+        let t = gen::random(&[40, 50], 700, 9);
+        for mode in 0..2 {
+            assert_eq!(SpMm.read_modes(&t, mode), SpMttkrp.read_modes(&t, mode));
+            assert_eq!(SpMm.totals(&t, mode, 16), SpMttkrp.totals(&t, mode, 16));
+        }
+    }
+
+    #[test]
+    fn totals_count_a_single_request_per_nonzero() {
+        let t = gen::random(&[10, 20, 30], 400, 5);
+        let m = SpMm.totals(&t, 0, 16);
+        assert_eq!(m.factor_requests, 400);
+        assert_eq!(m.compute_ops, 2 * 400 * 16);
+        assert_eq!(m.transfer_elements, 400 + 400 * 16 + 10 * 16);
+    }
+
+    #[test]
+    fn validates_arity() {
+        let v = SparseTensor::new("vec", vec![8]);
+        assert!(SpMm.validate(&v, 0).is_err());
+        let t = gen::random(&[8, 8], 10, 1);
+        assert!(SpMm.validate(&t, 1).is_ok());
+    }
+}

@@ -1,0 +1,99 @@
+//! The sparse-MTTKRP builtin kernel (the paper's workload).
+//!
+//! For output mode `d` of an N-mode tensor at rank R, each nonzero
+//! `x(i_0..i_{N−1})` reads the N−1 input factor rows `U_m(i_m, :)` for
+//! every `m ≠ d`, performs `R·(N−1)` multiplies into the psum row
+//! `A(i_d, :)` (read-modify-write of 2R psum words), and each completed
+//! output slice drains R words and streams one R-element output row out.
+//!
+//! This file is the single owner of the paper's §IV-A closed forms —
+//! [`crate::mttkrp::trace::mode_totals`] delegates here — and the
+//! bit-identity baseline of the kernel layer: its access stream, charges
+//! and totals reproduce the pre-IR engines' numbers exactly (pinned by
+//! `rust/tests/engine_agreement.rs`).
+
+use crate::kernel::{input_modes, KernelTotals, SparseKernel};
+use crate::pe::exec::{ExecCharge, ExecUnit};
+use crate::tensor::coo::SparseTensor;
+
+/// Sparse MTTKRP: `A(i_d,:) += x · ⊙_{m≠d} U_m(i_m,:)` per nonzero.
+pub struct SpMttkrp;
+
+impl SparseKernel for SpMttkrp {
+    fn name(&self) -> &'static str {
+        "spmttkrp"
+    }
+
+    fn summary(&self) -> &'static str {
+        "sparse matricized tensor times Khatri-Rao product (CP-ALS, the paper's kernel)"
+    }
+
+    fn read_modes(&self, tensor: &SparseTensor, mode: usize) -> Vec<usize> {
+        input_modes(tensor, mode)
+    }
+
+    fn nnz_exec(&self, exec: &ExecUnit, n_modes: usize) -> ExecCharge {
+        exec.nonzero(n_modes)
+    }
+
+    fn drain_exec(&self, exec: &ExecUnit, _n_modes: usize) -> ExecCharge {
+        exec.drain_slice()
+    }
+
+    fn out_row_bytes(&self, rank: usize, _n_modes: usize) -> u64 {
+        4 * rank as u64
+    }
+
+    /// The §IV-A formulas: compute `N·|T|·R`, transfer
+    /// `|T| + (N−1)·|T|·R + I_out·R` elements, `(N−1)·|T|` factor-row
+    /// requests.
+    fn totals(&self, tensor: &SparseTensor, mode: usize, rank: usize) -> KernelTotals {
+        let n = tensor.n_modes() as u64;
+        let t = tensor.nnz() as u64;
+        let r = rank as u64;
+        let i_out = tensor.dims[mode];
+        KernelTotals {
+            compute_ops: n * t * r,
+            transfer_elements: t + (n - 1) * t * r + i_out * r,
+            factor_requests: (n - 1) * t,
+            output_rows_written: crate::kernel::output_rows_written(tensor, mode),
+            output_rows_bound: i_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::pipeline::ArrayTiming;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
+    use crate::tensor::gen;
+
+    #[test]
+    fn reads_every_input_mode_in_ascending_order() {
+        let t = gen::random(&[10, 12, 14, 16], 500, 2);
+        assert_eq!(SpMttkrp.read_modes(&t, 0), vec![1, 2, 3]);
+        assert_eq!(SpMttkrp.read_modes(&t, 2), vec![0, 1, 3]);
+        assert_eq!(SpMttkrp.read_modes(&t, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn charges_delegate_to_the_exec_unit() {
+        let exec = ExecUnit::new(80, 16, ArrayTiming::new(&osram(), FABRIC_HZ, 1), 8);
+        assert_eq!(SpMttkrp.nnz_exec(&exec, 3), exec.nonzero(3));
+        assert_eq!(SpMttkrp.drain_exec(&exec, 3), exec.drain_slice());
+        assert_eq!(SpMttkrp.out_row_bytes(16, 3), 64);
+    }
+
+    #[test]
+    fn totals_match_the_paper_formulas() {
+        let t = gen::random(&[10, 20, 30], 500, 1);
+        let m = SpMttkrp.totals(&t, 0, 16);
+        assert_eq!(m.compute_ops, 3 * 500 * 16);
+        assert_eq!(m.transfer_elements, 500 + 2 * 500 * 16 + 10 * 16);
+        assert_eq!(m.factor_requests, 2 * 500);
+        assert_eq!(m.output_rows_bound, 10);
+        assert!(m.output_rows_written <= 10);
+    }
+}

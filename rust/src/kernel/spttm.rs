@@ -1,0 +1,168 @@
+//! The sparse Tucker TTM-chain builtin kernel (TTMc).
+//!
+//! The Tucker decomposition's hot loop contracts a sparse tensor with
+//! the dense factor matrices of every mode but one (the "TTM chain",
+//! e.g. the Sparse Tucker FPGA accelerator literature): per nonzero
+//! `x(i_0..i_{N−1})` of output mode `d`,
+//!
+//! ```text
+//! Y(i_d, :) += x · ⊗_{m≠d} U_m(i_m, :)        (Kronecker, not Khatri-Rao)
+//! ```
+//!
+//! The **memory-access pattern is identical to spMTTKRP** — the same
+//! N−1 factor-row reads per nonzero, the same slice-grouped output — which
+//! is exactly the reuse arXiv:2207.08298 argues for and why the kernel IR
+//! can serve both. What changes is the arithmetic intensity and the
+//! output width: the Kronecker chain runs `R + R² + … + R^{N−1}`
+//! multiplies per nonzero and the output row widens to `R^{N−1}`
+//! elements, so TTMc is psum/compute-bound where MTTKRP is cache-bound —
+//! a genuinely different operating point for the same memory system.
+
+use crate::kernel::{input_modes, KernelTotals, SparseKernel};
+use crate::pe::exec::{ExecCharge, ExecUnit};
+use crate::tensor::coo::SparseTensor;
+
+/// Output-row width: `R^{N−1}` core elements (the contracted-core slice).
+fn core_row_elems(rank: usize, n_modes: usize) -> u64 {
+    (rank as u64).pow(n_modes as u32 - 1)
+}
+
+/// Kronecker-chain multiplies per nonzero: scaling `U_{m_1}` by `x` costs
+/// `R`, then each further factor row widens the partial product by `R×`:
+/// `R + R² + … + R^{N−1}`.
+fn kron_mults(rank: usize, n_modes: usize) -> u64 {
+    (1..n_modes as u32).map(|j| (rank as u64).pow(j)).sum()
+}
+
+/// Sparse TTM chain: `Y(i_d,:) += x · ⊗_{m≠d} U_m(i_m,:)` per nonzero.
+pub struct SpTtm;
+
+impl SparseKernel for SpTtm {
+    fn name(&self) -> &'static str {
+        "spttm"
+    }
+
+    fn summary(&self) -> &'static str {
+        "sparse tensor times dense-matrix chain (Tucker TTMc mode product)"
+    }
+
+    fn validate(&self, tensor: &SparseTensor, mode: usize) -> Result<(), String> {
+        if mode >= tensor.n_modes() {
+            return Err(format!("mode {mode} out of range for {}-mode tensor", tensor.n_modes()));
+        }
+        if tensor.n_modes() < 2 {
+            return Err("spttm needs a tensor with at least 2 modes".into());
+        }
+        Ok(())
+    }
+
+    fn read_modes(&self, tensor: &SparseTensor, mode: usize) -> Vec<usize> {
+        input_modes(tensor, mode)
+    }
+
+    fn nnz_exec(&self, exec: &ExecUnit, n_modes: usize) -> ExecCharge {
+        let psum_words = 2 * core_row_elems(exec.rank, n_modes);
+        ExecCharge {
+            pipeline_cycles: kron_mults(exec.rank, n_modes) as f64 / exec.n_pipelines as f64,
+            psum_cycles: psum_words as f64 / exec.psum_words_per_cycle(),
+            psum_words,
+        }
+    }
+
+    fn drain_exec(&self, exec: &ExecUnit, n_modes: usize) -> ExecCharge {
+        let words = core_row_elems(exec.rank, n_modes);
+        ExecCharge {
+            pipeline_cycles: 0.0,
+            psum_cycles: words as f64 / exec.psum_words_per_cycle(),
+            psum_words: words,
+        }
+    }
+
+    fn out_row_bytes(&self, rank: usize, n_modes: usize) -> u64 {
+        4 * core_row_elems(rank, n_modes)
+    }
+
+    /// Closed forms: compute `|T|·(R + R² + … + R^{N−1} + R^{N−1})`
+    /// (chain multiplies + the final accumulate), transfer
+    /// `|T| + (N−1)·|T|·R + I_out·R^{N−1}` elements, `(N−1)·|T|`
+    /// factor-row requests — read traffic identical to spMTTKRP, output
+    /// traffic widened to the core slice.
+    fn totals(&self, tensor: &SparseTensor, mode: usize, rank: usize) -> KernelTotals {
+        let n = tensor.n_modes() as u64;
+        let t = tensor.nnz() as u64;
+        let r = rank as u64;
+        let i_out = tensor.dims[mode];
+        let core = core_row_elems(rank, tensor.n_modes());
+        KernelTotals {
+            compute_ops: t * (kron_mults(rank, tensor.n_modes()) + core),
+            transfer_elements: t + (n - 1) * t * r + i_out * core,
+            factor_requests: (n - 1) * t,
+            output_rows_written: crate::kernel::output_rows_written(tensor, mode),
+            output_rows_bound: i_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::pipeline::ArrayTiming;
+    use crate::kernel::spmttkrp::SpMttkrp;
+    use crate::mem::osram::osram;
+    use crate::mem::tech::FABRIC_HZ;
+    use crate::tensor::gen;
+
+    fn exec() -> ExecUnit {
+        ExecUnit::new(80, 16, ArrayTiming::new(&osram(), FABRIC_HZ, 1), 8)
+    }
+
+    #[test]
+    fn core_widths_and_chain_costs() {
+        assert_eq!(core_row_elems(16, 2), 16);
+        assert_eq!(core_row_elems(16, 3), 256);
+        assert_eq!(core_row_elems(4, 5), 256);
+        assert_eq!(kron_mults(16, 2), 16);
+        assert_eq!(kron_mults(16, 3), 16 + 256);
+        assert_eq!(kron_mults(2, 4), 2 + 4 + 8);
+    }
+
+    #[test]
+    fn two_mode_ttm_degenerates_to_mttkrp() {
+        // on a matrix, the TTM chain IS the MTTKRP row update — the
+        // charges and totals must coincide exactly
+        let e = exec();
+        assert_eq!(SpTtm.nnz_exec(&e, 2), SpMttkrp.nnz_exec(&e, 2));
+        assert_eq!(SpTtm.drain_exec(&e, 2), SpMttkrp.drain_exec(&e, 2));
+        assert_eq!(SpTtm.out_row_bytes(16, 2), SpMttkrp.out_row_bytes(16, 2));
+        let t = gen::random(&[50, 60], 800, 4);
+        for mode in 0..2 {
+            assert_eq!(SpTtm.totals(&t, mode, 16), SpMttkrp.totals(&t, mode, 16));
+        }
+    }
+
+    #[test]
+    fn three_mode_ttm_is_compute_and_psum_heavier_than_mttkrp() {
+        let e = exec();
+        let ttm = SpTtm.nnz_exec(&e, 3);
+        let mtt = SpMttkrp.nnz_exec(&e, 3);
+        assert!(ttm.pipeline_cycles > mtt.pipeline_cycles);
+        assert!(ttm.psum_words > mtt.psum_words);
+        assert_eq!(ttm.psum_words, 2 * 256);
+        let t = gen::random(&[30, 30, 30], 1_000, 6);
+        let tt = SpTtm.totals(&t, 0, 16);
+        let mt = SpMttkrp.totals(&t, 0, 16);
+        // identical read-side traffic, widened output
+        assert_eq!(tt.factor_requests, mt.factor_requests);
+        assert!(tt.compute_ops > mt.compute_ops);
+        assert!(tt.transfer_elements > mt.transfer_elements);
+    }
+
+    #[test]
+    fn validates_arity() {
+        let m = SparseTensor::new("vec", vec![8]);
+        assert!(SpTtm.validate(&m, 0).is_err());
+        let t = gen::random(&[8, 8], 10, 1);
+        assert!(SpTtm.validate(&t, 0).is_ok());
+        assert!(SpTtm.validate(&t, 2).is_err());
+    }
+}

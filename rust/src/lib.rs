@@ -72,6 +72,26 @@
 //! engines disagree only about *time*, which is exactly the quantity
 //! under test.
 //!
+//! ## The kernel layer
+//!
+//! The *workload* is as pluggable as the memory technology: a
+//! [`kernel::SparseKernel`] describes a sparse kernel as a chunked
+//! access-stream IR (per-nonzero factor reads + slice boundaries,
+//! generated in O(chunk) memory — never a materialized trace), its
+//! per-nonzero execution charges and its closed-form totals. Both
+//! engines consume only that interface. Builtins
+//! ([`kernel::KernelKind`], `--kernel` on the CLI):
+//!
+//! | name       | workload                                              |
+//! |------------|-------------------------------------------------------|
+//! | `spmttkrp` | sparse MTTKRP (CP-ALS) — the paper's kernel, default  |
+//! | `spttm`    | sparse Tucker TTM-chain (TTMc)                        |
+//! | `spmm`     | sparse × dense matrix multiply (2-mode degenerate)    |
+//!
+//! The `spmttkrp` builtin is pinned **bit-identical** to the
+//! pre-kernel-IR engines (`rust/tests/engine_agreement.rs`), so every
+//! paper number is unchanged by the refactor.
+//!
 //! ## The technology registry
 //!
 //! Memory technologies are open, not a closed enum: every layer resolves a
@@ -117,6 +137,7 @@ pub mod controller;
 pub mod coordinator;
 pub mod dma;
 pub mod energy;
+pub mod kernel;
 pub mod mem;
 pub mod mttkrp;
 pub mod pe;
@@ -134,11 +155,14 @@ pub mod prelude {
     pub use crate::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
     pub use crate::coordinator::driver::{
         compare_all_registered, compare_paper_pair, compare_paper_pair_with_engine,
-        compare_technologies, compare_technologies_with_engine, cross_validate, paper_pair,
-        simulate_all_modes, simulate_all_modes_with_engine, simulate_mode,
-        simulate_mode_with_engine, Compute, EngineDelta, TechComparison, TechRun,
+        compare_technologies, compare_technologies_with_engine,
+        compare_technologies_with_kernel, cross_validate, cross_validate_kernel, paper_pair,
+        simulate_all_modes, simulate_all_modes_with_engine, simulate_all_modes_with_kernel,
+        simulate_mode, simulate_mode_with_engine, simulate_mode_with_kernel, Compute,
+        EngineDelta, TechComparison, TechRun,
     };
     pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
+    pub use crate::kernel::{KernelKind, KernelTotals, SparseKernel};
     pub use crate::mem::registry::{self, tech, TechRegistry, TechSpec};
     pub use crate::mem::tech::MemTechnology;
     pub use crate::mttkrp::reference::FactorMatrix;

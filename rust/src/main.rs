@@ -5,12 +5,13 @@
 //! photon-mttkrp info [--tensors] [--config FILE]
 //!     platform + Table I/III/IV echo + the technology registry listing
 //! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
-//!     [--tech both|all|<name>] [--mode M] [--engine analytic|event] [--config FILE]
+//!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
+//!     [--kernel spmttkrp|spttm|spmm] [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
 //!     single technology, per technology for both/all)
 //! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
-//!     [--engine analytic|event] [--seed N] [--threads T] [--config FILE]
+//!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T] [--config FILE]
 //!     parallel {tensor x mode x tech x scale} design-space sweep
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
@@ -24,13 +25,18 @@
 //! backend: `analytic` (the paper's roofline model, the default) or
 //! `event` (the cycle-level contention replay that bounds its error —
 //! see docs/ARCHITECTURE.md and EXPERIMENTS.md §Cross-validation).
+//! `--kernel` selects the sparse workload streamed through the engines:
+//! `spmttkrp` (the paper's CP-ALS kernel, the default), `spttm` (Tucker
+//! TTM-chain) or `spmm` (sparse × dense matrix — see EXPERIMENTS.md
+//! §Kernels).
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
 use photon_mttkrp::coordinator::driver::{
-    apply_memory_mapping, compare_paper_pair_with_engine, compare_technologies_with_engine,
-    Compute, EngineDelta, TechComparison,
+    apply_memory_mapping, compare_technologies_with_kernel, paper_pair, Compute, EngineDelta,
+    TechComparison,
 };
+use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
@@ -62,15 +68,31 @@ fn cli() -> Command {
                     Some("both"),
                 )
                 .opt("engine", "E", "simulation engine: analytic | event", Some("analytic"))
+                .opt(
+                    "kernel",
+                    "K",
+                    "sparse kernel: spmttkrp | spttm | spmm",
+                    Some("spmttkrp"),
+                )
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
             Command::new("sweep", "parallel {tensor x mode x tech x scale} design-space sweep")
-                .opt_repeated("tensor", "NAME", "FROSTT preset (repeatable; default: nell-2 nell-1 patents)")
+                .opt_repeated(
+                    "tensor",
+                    "NAME",
+                    "FROSTT preset (repeatable; default: nell-2 nell-1 patents)",
+                )
                 .opt_repeated("tech", "T", "technology name or `all` (repeatable; default: all)")
                 .opt_repeated("scale", "S", "workload scale (repeatable; default: 0.001)")
                 .opt_repeated("mode", "M", "output mode (repeatable; default: every mode)")
                 .opt("engine", "E", "simulation engine: analytic | event", Some("analytic"))
+                .opt(
+                    "kernel",
+                    "K",
+                    "sparse kernel: spmttkrp | spttm | spmm",
+                    Some("spmttkrp"),
+                )
                 .opt("seed", "N", "generator seed", Some("42"))
                 .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
@@ -154,6 +176,7 @@ fn run() -> Result<(), String> {
                 .ok_or_else(|| format!("unknown tensor `{name}`"))?;
             // validate cheap arguments before the expensive generation
             let engine = EngineKind::parse(p.get("engine").unwrap())?;
+            let kernel = KernelKind::parse(p.get("kernel").unwrap())?;
             let tech_arg = p.get("tech").unwrap();
             if matches!(tech_arg, "both" | "all") && p.get("mode").is_some() {
                 return Err(format!(
@@ -163,7 +186,7 @@ fn run() -> Result<(), String> {
             }
             let cfg = cfg_base.scaled(scale);
             let tensor = preset(ft).scaled(scale).generate(seed);
-            eprintln!("generated {} ({} nnz)", tensor.name, tensor.nnz());
+            eprintln!("generated {} ({} nnz), kernel {}", tensor.name, tensor.nnz(), kernel);
             // With --engine event, every variant also prints the
             // analytic-vs-event delta (the roofline error bound), derived
             // from the event comparison already in hand plus one analytic
@@ -183,7 +206,13 @@ fn run() -> Result<(), String> {
             };
             match tech_arg {
                 "both" => {
-                    let c = compare_paper_pair_with_engine(&tensor, &cfg, engine);
+                    let c = compare_technologies_with_kernel(
+                        &tensor,
+                        &cfg,
+                        &paper_pair(),
+                        engine,
+                        kernel,
+                    );
                     let e = &c.require("e-sram").report;
                     let o = &c.require("o-sram").report;
                     for (m, s) in c.mode_speedups("o-sram").iter().enumerate() {
@@ -196,19 +225,29 @@ fn run() -> Result<(), String> {
                         );
                     }
                     println!(
-                        "total: speedup {:.2}x  energy savings {:.2}x",
+                        "total [{kernel}]: speedup {:.2}x  energy savings {:.2}x",
                         c.total_speedup("o-sram"),
                         c.energy_savings("o-sram")
                     );
                     if engine == EngineKind::Event {
-                        let ca =
-                            compare_paper_pair_with_engine(&tensor, &cfg, EngineKind::Analytic);
+                        let ca = compare_technologies_with_kernel(
+                            &tensor,
+                            &cfg,
+                            &paper_pair(),
+                            EngineKind::Analytic,
+                            kernel,
+                        );
                         print_deltas(&c, &ca);
                     }
                 }
                 "all" => {
-                    let c =
-                        compare_technologies_with_engine(&tensor, &cfg, &registry::all(), engine);
+                    let c = compare_technologies_with_kernel(
+                        &tensor,
+                        &cfg,
+                        &registry::all(),
+                        engine,
+                        kernel,
+                    );
                     let base = c.baseline().name().to_string();
                     for run in &c.runs {
                         println!(
@@ -220,11 +259,12 @@ fn run() -> Result<(), String> {
                         );
                     }
                     if engine == EngineKind::Event {
-                        let ca = compare_technologies_with_engine(
+                        let ca = compare_technologies_with_kernel(
                             &tensor,
                             &cfg,
                             &registry::all(),
                             EngineKind::Analytic,
+                            kernel,
                         );
                         print_deltas(&c, &ca);
                     }
@@ -238,10 +278,11 @@ fn run() -> Result<(), String> {
                     // the §IV-A mapping is mode-independent: apply it once
                     // instead of once per (mode × engine) simulation
                     let mapped = apply_memory_mapping(&tensor);
+                    let k = kernel.kernel();
                     for m in modes {
-                        let r = engine.simulate_mode(&mapped, m, &cfg, &tech);
+                        let r = engine.simulate_kernel_mode(k, &mapped, m, &cfg, &tech);
                         println!(
-                            "M{m} [{}]: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
+                            "M{m} [{}] {kernel}: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
                             tech.name,
                             r.runtime_s(),
                             r.runtime_cycles(),
@@ -251,7 +292,8 @@ fn run() -> Result<(), String> {
                         if engine == EngineKind::Event {
                             // the event replay's headline deliverable: how
                             // far off the roofline abstraction is here
-                            let a = EngineKind::Analytic.simulate_mode(&mapped, m, &cfg, &tech);
+                            let a = EngineKind::Analytic
+                                .simulate_kernel_mode(kernel.kernel(), &mapped, m, &cfg, &tech);
                             let d = EngineDelta {
                                 tech: tech.name.clone(),
                                 analytic_cycles: a.runtime_cycles(),
@@ -320,6 +362,7 @@ fn run() -> Result<(), String> {
             spec.seed = seed;
             spec.threads = threads;
             spec.engine = EngineKind::parse(p.get("engine").unwrap())?;
+            spec.kernel = KernelKind::parse(p.get("kernel").unwrap())?;
             if !modes.is_empty() {
                 spec.modes = Some(modes);
             }
@@ -366,6 +409,8 @@ fn run() -> Result<(), String> {
             println!("{}", render(&paper::fig8(&results)));
             eprintln!("cross-validating the analytic engine against the event engine ...");
             println!("{}", render(&paper::table_cross_validation(scale, seed)));
+            eprintln!("pricing every registered sparse kernel on the paper pair ...");
+            println!("{}", render(&paper::table_kernels(scale, seed)));
         }
         "cpals" => {
             let rank = p.get_usize("rank").map_err(|e| e.to_string())?;

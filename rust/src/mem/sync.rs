@@ -69,7 +69,8 @@ impl SyncInterface {
     /// fabric cycles: request crossing + array access + response crossing.
     pub fn round_trip_fabric_cycles(&self, tech: &MemTechnology) -> f64 {
         let array = tech.access_latency_cycles as f64 * self.fabric.hz / self.memory.hz;
-        self.crossing_fabric_cycles + array.max(if self.crossing_fabric_cycles == 0.0 { 1.0 } else { 0.0 })
+        let floor = if self.crossing_fabric_cycles == 0.0 { 1.0 } else { 0.0 };
+        self.crossing_fabric_cycles + array.max(floor)
     }
 }
 

@@ -1,42 +1,27 @@
 //! Analytic per-mode access totals (§IV-A) and trace statistics.
 //!
 //! The paper derives closed-form totals for compute and external-memory
-//! traffic; this module evaluates them for a concrete tensor/mode and
-//! cross-checks the simulator's measured traffic against them (the
-//! integration tests assert the two agree, which ties the cycle model to
-//! the paper's analytic model).
+//! traffic. Since the kernel-IR refactor the formulas themselves live
+//! with the workload that owns them — the
+//! [`spmttkrp`](crate::kernel::spmttkrp) builtin kernel — and this module
+//! keeps the historical entry point as a thin delegate so the
+//! integration tests (and any downstream user of the §IV-A numbers) keep
+//! one stable address. The integration tests assert the simulator's
+//! measured traffic agrees with these totals, which ties the cycle model
+//! to the paper's analytic model.
 
+use crate::kernel::{KernelKind, SparseKernel};
 use crate::tensor::coo::SparseTensor;
-use crate::tensor::csf::ModeView;
 
-/// Closed-form §IV-A totals for one output mode.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ModeTotals {
-    /// Multiply-add operations: `N × |T| × R`.
-    pub compute_ops: u64,
-    /// Elements transferred: `|T| + (N−1)×|T|×R + I_out×R`.
-    pub transfer_elements: u64,
-    /// Factor-row *requests* the cache subsystem sees: `(N−1) × |T|`.
-    pub factor_requests: u64,
-    /// Output rows written (non-empty slices — the paper's bound uses the
-    /// full `I_out`; we expose both).
-    pub output_rows_written: u64,
-    pub output_rows_bound: u64,
-}
+/// Closed-form §IV-A totals for one output mode — the spMTTKRP instance
+/// of the kernel-generic [`crate::kernel::KernelTotals`] (same fields,
+/// historical name kept for the tests and downstream callers).
+pub use crate::kernel::KernelTotals as ModeTotals;
 
-/// Evaluate the §IV-A totals for `tensor` / `mode` at rank `r`.
+/// Evaluate the §IV-A totals for `tensor` / `mode` at rank `r` —
+/// delegates to the `spmttkrp` builtin kernel's closed forms.
 pub fn mode_totals(tensor: &SparseTensor, mode: usize, r: usize) -> ModeTotals {
-    let n = tensor.n_modes() as u64;
-    let t = tensor.nnz() as u64;
-    let i_out = tensor.dims[mode];
-    let view = ModeView::build(tensor, mode);
-    ModeTotals {
-        compute_ops: n * t * r as u64,
-        transfer_elements: t + (n - 1) * t * r as u64 + i_out * r as u64,
-        factor_requests: (n - 1) * t,
-        output_rows_written: view.n_slices() as u64,
-        output_rows_bound: i_out,
-    }
+    KernelKind::Spmttkrp.kernel().totals(tensor, mode, r)
 }
 
 /// Bytes of tensor data streamed per §IV-A (coordinates + value per
@@ -79,5 +64,14 @@ mod tests {
         let m = mode_totals(&t, 0, 4);
         assert_eq!(m.output_rows_written, 2);
         assert_eq!(m.output_rows_bound, 100);
+    }
+
+    #[test]
+    fn delegate_matches_the_kernel_exactly() {
+        let t = gen::random(&[12, 18, 24], 700, 9);
+        let k = KernelKind::Spmttkrp.kernel();
+        for mode in 0..3 {
+            assert_eq!(mode_totals(&t, mode, 16), k.totals(&t, mode, 16));
+        }
     }
 }

@@ -42,8 +42,10 @@ impl ExecUnit {
         ExecUnit { n_pipelines, rank, psum, psum_banks }
     }
 
-    /// Aggregate psum bandwidth: banks × per-bank words/cycle.
-    fn psum_words_per_cycle(&self) -> f64 {
+    /// Aggregate psum bandwidth: banks × per-bank words/cycle. Public so
+    /// kernels with non-MTTKRP psum footprints (e.g. the TTM chain's
+    /// `R^(N−1)`-wide rows) price against the same formula — one owner.
+    pub fn psum_words_per_cycle(&self) -> f64 {
         self.psum.words_per_fabric_cycle * self.psum_banks as f64
     }
 
@@ -56,7 +58,7 @@ impl ExecUnit {
         ExecCharge {
             pipeline_cycles: mults / self.n_pipelines as f64,
             psum_cycles: psum_words as f64 / self.psum_words_per_cycle(),
-            psum_words: psum_words as u64,
+            psum_words,
         }
     }
 

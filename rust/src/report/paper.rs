@@ -4,13 +4,20 @@
 //! and Fig. 8 (energy savings), plus the §VI aggregate row — and, beyond
 //! the paper, the engine cross-validation table
 //! ([`table_cross_validation`]): both simulation backends' cycle counts
-//! with the analytic-vs-event delta per registered technology.
+//! with the analytic-vs-event delta per registered technology, and the
+//! kernel listing ([`table_kernels`]): every builtin sparse kernel's
+//! closed-form totals and measured paper-pair speedup.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::area::model::{AreaModel, PAPER_ESRAM_TOTAL_MM2, PAPER_OSRAM_MEM_MM2};
-use crate::coordinator::driver::{compare_paper_pair, cross_validate, TechComparison};
+use crate::coordinator::driver::{
+    compare_paper_pair, compare_technologies_with_kernel, cross_validate, paper_pair,
+    TechComparison,
+};
+use crate::kernel::{KernelKind, SparseKernel};
 use crate::mem::registry::{self, TechRegistry};
 use crate::mem::tech::FABRIC_HZ;
+use crate::sim::EngineKind;
 use crate::tensor::gen::{preset, FrosttTensor, TensorSpec};
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_count, fmt_sig, Align, Table};
@@ -23,8 +30,9 @@ pub const PAPER_MEAN_ENERGY: f64 = 5.3;
 
 /// Table I echo: the accelerator configuration in the paper's layout.
 pub fn table_i(cfg: &AcceleratorConfig) -> Table {
-    let mut t =
-        Table::new("Table I: accelerator configuration", &["module", "configuration"]).align(0, Align::Left).align(1, Align::Left);
+    let mut t = Table::new("Table I: accelerator configuration", &["module", "configuration"])
+        .align(0, Align::Left)
+        .align(1, Align::Left);
     t.row(vec!["PE".into(), format!("Number of PEs: {}", cfg.n_pes)]);
     t.row(vec!["Parallel Pipelines".into(), format!("No. of pipelines: {}", cfg.n_pipelines)]);
     t.row(vec![
@@ -91,7 +99,16 @@ pub fn table_iii() -> Table {
 pub fn table_technologies(reg: &TechRegistry) -> Table {
     let mut t = Table::new(
         "Registered memory technologies",
-        &["name", "clock", "lanes", "words/cyc@500MHz", "switch pJ/b", "static pJ/b/cyc", "um^2/b", "summary"],
+        &[
+            "name",
+            "clock",
+            "lanes",
+            "words/cyc@500MHz",
+            "switch pJ/b",
+            "static pJ/b/cyc",
+            "um^2/b",
+            "summary",
+        ],
     )
     .align(0, Align::Left)
     .align(7, Align::Left);
@@ -163,6 +180,42 @@ pub fn table_cross_validation(scale: f64, seed: u64) -> Table {
     t
 }
 
+/// The kernel listing: every builtin sparse kernel's closed-form totals
+/// on the NELL-2 fingerprint at `scale` (mode 0, the paper's rank) plus
+/// its measured O-SRAM-vs-E-SRAM full-run speedup — the workload-axis
+/// counterpart of the technology registry listing, and the quickest way
+/// to see how the same memory system prices CP-ALS, Tucker and SpMM
+/// differently (EXPERIMENTS.md §Kernels).
+pub fn table_kernels(scale: f64, seed: u64) -> Table {
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    let tensor = preset(FrosttTensor::Nell2).scaled(scale).generate(seed);
+    let mut t = Table::new(
+        &format!("Registered sparse kernels ({}, scale {scale:.1e}, mode 0)", tensor.name),
+        &["kernel", "compute ops", "transfer elems", "factor reqs", "o-sram speedup", "summary"],
+    )
+    .align(0, Align::Left)
+    .align(5, Align::Left);
+    for kind in KernelKind::ALL {
+        let totals = kind.kernel().totals(&tensor, 0, cfg.rank);
+        let c = compare_technologies_with_kernel(
+            &tensor,
+            &cfg,
+            &paper_pair(),
+            EngineKind::Analytic,
+            kind,
+        );
+        t.row(vec![
+            kind.name().to_string(),
+            fmt_count(totals.compute_ops),
+            fmt_count(totals.transfer_elements),
+            fmt_count(totals.factor_requests),
+            format!("{:.2}x", c.total_speedup("o-sram")),
+            kind.kernel().summary().to_string(),
+        ]);
+    }
+    t
+}
+
 /// One evaluated tensor for the Fig. 7 / Fig. 8 suites.
 pub struct EvaluatedTensor {
     pub name: String,
@@ -179,7 +232,10 @@ pub fn evaluate_suite(scale: f64, seed: u64) -> Vec<EvaluatedTensor> {
         .map(|&ft| {
             let spec: TensorSpec = preset(ft).scaled(scale);
             let tensor = spec.generate(seed);
-            EvaluatedTensor { name: ft.name().into(), comparison: compare_paper_pair(&tensor, &cfg) }
+            EvaluatedTensor {
+                name: ft.name().into(),
+                comparison: compare_paper_pair(&tensor, &cfg),
+            }
         })
         .collect()
 }
@@ -300,6 +356,17 @@ mod tests {
         assert!(s.contains("delta"), "{s}");
         // non-negativity of the deltas themselves is asserted on the
         // EngineDelta values by the driver and engine-agreement tests
+    }
+
+    #[test]
+    fn kernel_table_lists_every_builtin() {
+        let t = table_kernels(1.0 / 65536.0, 1);
+        assert_eq!(t.n_rows(), KernelKind::ALL.len());
+        let s = t.render_ascii();
+        for kind in KernelKind::ALL {
+            assert!(s.contains(kind.name()), "{s}");
+        }
+        assert!(s.contains("o-sram speedup"), "{s}");
     }
 
     #[test]

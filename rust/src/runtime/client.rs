@@ -129,7 +129,11 @@ impl Runtime {
         }
         for (i, (shape, arg)) in spec.inputs.iter().zip(args).enumerate() {
             if shape.dtype != arg.dtype() {
-                bail!("artifact `{}` arg {i}: dtype mismatch ({:?} expected)", spec.name, shape.dtype);
+                bail!(
+                    "artifact `{}` arg {i}: dtype mismatch ({:?} expected)",
+                    spec.name,
+                    shape.dtype
+                );
             }
             if shape.n_elements() != arg.len() {
                 bail!(

@@ -1,23 +1,28 @@
 //! The streaming bottleneck engine.
 //!
-//! Simulates Algorithm 1 for one output mode on the Fig. 4 accelerator:
-//! the mode-sorted nonzero stream is partitioned across PEs by output
-//! slice; each PE walks its share charging occupancy to every resource an
-//! action touches (DRAM channel, the three caches, psum buffer, exec
-//! pipelines, DMA buffers). Runtime per PE is the busiest resource's total
-//! (all units are deeply pipelined and run concurrently — the classic
-//! bottleneck/roofline abstraction the paper's own model uses) plus the
-//! un-hideable startup/drain latency; mode runtime is the slowest PE.
+//! Simulates one output mode of a sparse kernel on the Fig. 4
+//! accelerator: the kernel's chunked access-stream IR
+//! ([`crate::kernel::SparseKernel::stream`]) is partitioned across PEs by
+//! output slice; each PE walks its share charging occupancy to every
+//! resource an op touches (DRAM channel, the three caches, psum buffer,
+//! exec pipelines, DMA buffers). Runtime per PE is the busiest resource's
+//! total (all units are deeply pipelined and run concurrently — the
+//! classic bottleneck/roofline abstraction the paper's own model uses)
+//! plus the un-hideable startup/drain latency; mode runtime is the
+//! slowest PE.
 //!
-//! The engine is technology-agnostic: it takes any registry-resolved
-//! [`MemTechnology`] (see [`crate::mem::registry`]) and derives every
+//! The engine is **kernel-agnostic** and technology-agnostic: the
+//! workload arrives as chunks of factor-read ops and slice boundaries
+//! (never a materialized full trace — per-PE live memory is O(chunk), so
+//! sweeps scale to multi-hundred-million-nonzero tensors), and every
 //! structural choice — banking, tag→data serialization, the DRAM overlap
-//! derate — from the parameter set itself.
+//! derate — derives from the registry-resolved [`MemTechnology`]
+//! parameter set itself.
 //!
-//! Complexity is O(nnz × (N−1)) per mode — the cache lookups dominate, so
-//! the engine streams tens of millions of nonzeros per second (see
-//! EXPERIMENTS.md §Perf). For many-scenario runs, [`crate::sim::sweep`]
-//! fans independent simulations across OS threads.
+//! Complexity is O(nnz × reads-per-nonzero) per mode — the cache lookups
+//! dominate, so the engine streams tens of millions of nonzeros per
+//! second (see EXPERIMENTS.md §Perf). For many-scenario runs,
+//! [`crate::sim::sweep`] fans independent simulations across OS threads.
 //!
 //! This is the *analytic* backend of the [`crate::sim::SimEngine`] trait;
 //! [`crate::sim::event`] is the event-driven backend that replays the same
@@ -27,6 +32,7 @@
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::MemoryController;
+use crate::kernel::{KernelKind, SparseKernel, DEFAULT_CHUNK_NNZ};
 use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
@@ -46,15 +52,6 @@ pub(crate) fn nnz_item_bytes(n_modes: usize) -> u64 {
     (4 * n_modes + 4) as u64
 }
 
-/// Input factor-matrix slots for an output mode: the input mode indices
-/// (every mode but `mode`, ascending) and their factor-matrix row counts
-/// (`matrix_rows[j]` = rows of slot `j`, as the memory controller expects).
-pub(crate) fn input_slots(tensor: &SparseTensor, mode: usize) -> (Vec<usize>, Vec<u64>) {
-    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
-    let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
-    (input_modes, matrix_rows)
-}
-
 /// Startup/drain latency that pipelining cannot hide: one DRAM round-trip
 /// to prime the stream + one cache fill latency + the exec pipeline depth.
 /// The event engine measures its contention stall relative to this same
@@ -67,7 +64,8 @@ pub(crate) fn startup_latency(cfg: &AcceleratorConfig, mc: &MemoryController) ->
 /// tensor's nonzeros in, the output rows out). The *call order* is part of
 /// the cross-engine contract: both engines issue these exact `stream`
 /// calls after the nonzero walk, keeping the reported traffic/busy fields
-/// bit-identical.
+/// bit-identical. `row_bytes` is the kernel's output-row width
+/// ([`SparseKernel::out_row_bytes`]).
 pub(crate) fn charge_streams(
     mc: &mut MemoryController,
     pe_nnz: u64,
@@ -121,11 +119,12 @@ pub fn partition_slices(view: &ModeView, n_pes: usize) -> Vec<(usize, usize)> {
     parts
 }
 
-/// Simulate one output mode of `tensor` on the accelerator with memory
-/// technology `tech` (any registry-resolved parameter set). The tensor
-/// does **not** need to be pre-sorted — the engine builds the per-mode
-/// view itself (counting sort, O(nnz)).
-pub fn simulate_mode(
+/// Simulate one output mode of `tensor` under `kernel` on the accelerator
+/// with memory technology `tech` (any registry-resolved parameter set).
+/// The tensor does **not** need to be pre-sorted — the engine builds the
+/// per-mode view itself (counting sort, O(nnz)).
+pub fn simulate_kernel_mode(
+    kernel: &dyn SparseKernel,
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
@@ -133,15 +132,16 @@ pub fn simulate_mode(
 ) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
     let view = ModeView::build(tensor, mode);
-    simulate_mode_with_view(tensor, &view, mode, cfg, tech)
+    simulate_kernel_mode_with_view(kernel, tensor, &view, mode, cfg, tech)
 }
 
-/// [`simulate_mode`] with a caller-supplied mode view, so many-scenario
-/// runs (the [`crate::sim::sweep`] engine sweeping one tensor across N
-/// technologies) pay the O(nnz) view build once per (tensor, mode)
-/// instead of once per scenario. `view` must be `ModeView::build(tensor,
-/// mode)` for the same tensor and mode.
-pub fn simulate_mode_with_view(
+/// [`simulate_kernel_mode`] with a caller-supplied mode view, so
+/// many-scenario runs (the [`crate::sim::sweep`] engine sweeping one
+/// tensor across N technologies) pay the O(nnz) view build once per
+/// (tensor, mode) instead of once per scenario. `view` must be
+/// `ModeView::build(tensor, mode)` for the same tensor and mode.
+pub fn simulate_kernel_mode_with_view(
+    kernel: &dyn SparseKernel,
     tensor: &SparseTensor,
     view: &ModeView,
     mode: usize,
@@ -149,12 +149,17 @@ pub fn simulate_mode_with_view(
     tech: &MemTechnology,
 ) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    if let Err(e) = kernel.validate(tensor, mode) {
+        panic!("kernel `{}` rejected the workload: {e}", kernel.name());
+    }
     cfg.validate().expect("invalid accelerator config");
     let parts = partition_slices(view, cfg.n_pes);
 
-    // Input factor matrices, in mode order, skipping the output mode; the
-    // controller's bypass routing needs their row counts.
-    let (input_modes, matrix_rows) = input_slots(tensor, mode);
+    // The kernel's input slots: which factor matrix each FactorRead slot
+    // addresses; the controller's bypass routing needs their row counts.
+    let read_modes = kernel.read_modes(tensor, mode);
+    let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+    let rpn = read_modes.len();
 
     let t = cfg.tuned_tech(tech);
     let banks = cfg.bank_factor(&t);
@@ -166,7 +171,7 @@ pub fn simulate_mode_with_view(
 
     let mut pes = Vec::with_capacity(cfg.n_pes);
     let item_bytes = nnz_item_bytes(tensor.n_modes());
-    let row_bytes = cfg.row_bytes() as u64;
+    let row_bytes = kernel.out_row_bytes(cfg.rank, tensor.n_modes());
 
     for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
         let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
@@ -177,25 +182,26 @@ pub fn simulate_mode_with_view(
         let mut psum_words = 0u64;
         let mut pe_nnz = 0u64;
 
-        let per_nnz = exec.nonzero(tensor.n_modes());
-        let per_drain = exec.drain_slice();
+        let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
+        let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
 
-        for s in slo..shi {
-            let slice = view.slice(s);
-            pe_nnz += slice.len() as u64;
-            for &k in slice {
-                let k = k as usize;
-                for (j, &m) in input_modes.iter().enumerate() {
-                    let row = tensor.indices[m][k];
-                    mc.factor_row_load(j, row);
+        for chunk in kernel.stream(tensor, view, (slo, shi), DEFAULT_CHUNK_NNZ) {
+            pe_nnz += chunk.n_nnz as u64;
+            let mut se = 0usize;
+            for i in 0..chunk.n_nnz {
+                for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
+                    mc.factor_row_load(read.slot as usize, read.row);
                 }
                 pipeline_cycles += per_nnz.pipeline_cycles;
                 psum_cycles += per_nnz.psum_cycles;
                 psum_words += per_nnz.psum_words;
+                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                    // slice complete: drain psum row + store output row
+                    psum_cycles += per_drain.psum_cycles;
+                    psum_words += per_drain.psum_words;
+                    se += 1;
+                }
             }
-            // slice complete: drain psum row + store output row
-            psum_cycles += per_drain.psum_cycles;
-            psum_words += per_drain.psum_words;
         }
 
         // Sequential traffic, charged in bulk: the tensor's nonzeros stream
@@ -230,6 +236,7 @@ pub fn simulate_mode_with_view(
 
     ModeReport {
         tensor: tensor.name.clone(),
+        kernel: kernel.name().to_string(),
         mode,
         tech: t,
         rank: cfg.rank,
@@ -238,16 +245,48 @@ pub fn simulate_mode_with_view(
     }
 }
 
-/// Simulate every output mode (the full spMTTKRP sweep of Fig. 7's x-axis).
+/// Simulate one output mode of the default spMTTKRP kernel (the paper's
+/// workload) — the pre-kernel-IR entry point, preserved verbatim.
+pub fn simulate_mode(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> ModeReport {
+    simulate_kernel_mode(KernelKind::Spmttkrp.kernel(), tensor, mode, cfg, tech)
+}
+
+/// [`simulate_mode`] with a caller-supplied mode view.
+pub fn simulate_mode_with_view(
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> ModeReport {
+    simulate_kernel_mode_with_view(KernelKind::Spmttkrp.kernel(), tensor, view, mode, cfg, tech)
+}
+
+/// Simulate every output mode of `kernel` (the full sweep of Fig. 7's
+/// x-axis for MTTKRP; the mode-product chain for TTM). The report
+/// assembly has one owner — the [`crate::sim::SimEngine`] trait default —
+/// so this delegates rather than re-building the [`SimReport`] shape.
+pub fn simulate_kernel_all_modes(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> SimReport {
+    crate::sim::EngineKind::Analytic.simulate_kernel_all_modes(kernel, tensor, cfg, tech)
+}
+
+/// Simulate every output mode of the default spMTTKRP kernel.
 pub fn simulate_all_modes(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> SimReport {
-    let modes = (0..tensor.n_modes())
-        .map(|m| simulate_mode(tensor, m, cfg, tech))
-        .collect();
-    SimReport { tensor: tensor.name.clone(), tech: cfg.tuned_tech(tech), modes }
+    simulate_kernel_all_modes(KernelKind::Spmttkrp.kernel(), tensor, cfg, tech)
 }
 
 #[cfg(test)]
@@ -345,6 +384,7 @@ mod tests {
         let r = simulate_mode(&t, 0, &small_cfg(), &tech("e-sram"));
         assert_eq!(r.total_nnz(), 10_000);
         assert_eq!(r.pes.len(), 4);
+        assert_eq!(r.kernel, "spmttkrp");
     }
 
     #[test]
@@ -424,6 +464,7 @@ mod tests {
             assert_eq!(m.total_nnz() as u64, t.nnz() as u64);
             assert_eq!(m.tech.name, "o-sram");
         }
+        assert_eq!(r.kernel, "spmttkrp");
         assert!(r.total_runtime_s() > 0.0);
     }
 
@@ -469,6 +510,57 @@ mod tests {
             assert_eq!(r.total_nnz(), 5_000, "{tname}");
             assert!(r.runtime_cycles() > 0.0, "{tname}");
             assert_eq!(r.tech.name, tname);
+        }
+    }
+
+    #[test]
+    fn every_builtin_kernel_simulates_on_every_technology() {
+        // the engine must be closed over *both* open axes: any registered
+        // kernel × any registered technology runs with no per-name code
+        let t = gen::random(&[64, 64, 64], 5_000, 23);
+        let cfg = small_cfg();
+        for kind in KernelKind::ALL {
+            for tname in crate::mem::registry::names() {
+                let r = simulate_kernel_mode(kind.kernel(), &t, 0, &cfg, &tech(&tname));
+                assert_eq!(r.total_nnz(), 5_000, "{kind} on {tname}");
+                assert!(r.runtime_cycles() > 0.0, "{kind} on {tname}");
+                assert_eq!(r.kernel, kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_differ_where_they_should() {
+        // same tensor, same technology: spmm does 1/2 the cache requests
+        // of spmttkrp on a 3-mode tensor; spttm matches spmttkrp's
+        // requests but is strictly psum/compute-heavier
+        let t = gen::random(&[256, 256, 256], 20_000, 3);
+        let cfg = small_cfg();
+        let mt = simulate_kernel_mode(KernelKind::Spmttkrp.kernel(), &t, 0, &cfg, &tech("o-sram"));
+        let mm = simulate_kernel_mode(KernelKind::Spmm.kernel(), &t, 0, &cfg, &tech("o-sram"));
+        let tm = simulate_kernel_mode(KernelKind::Spttm.kernel(), &t, 0, &cfg, &tech("o-sram"));
+        let accesses =
+            |r: &ModeReport| r.pes.iter().map(|p| p.cache_stats.accesses()).sum::<u64>();
+        assert_eq!(accesses(&mt), 2 * accesses(&mm));
+        assert_eq!(accesses(&mt), accesses(&tm));
+        let psum = |r: &ModeReport| r.pes.iter().map(|p| p.psum_cycles).sum::<f64>();
+        assert!(psum(&tm) > psum(&mt));
+        assert!(tm.runtime_cycles() > mt.runtime_cycles());
+    }
+
+    #[test]
+    fn spmm_on_a_matrix_equals_spmttkrp() {
+        // the degenerate-case contract, end to end through the engine
+        let t = gen::random(&[512, 512], 30_000, 5);
+        let cfg = small_cfg();
+        for mode in 0..2 {
+            let mtt = KernelKind::Spmttkrp.kernel();
+            let mm = KernelKind::Spmm.kernel();
+            let a = simulate_kernel_mode(mtt, &t, mode, &cfg, &tech("e-sram"));
+            let b = simulate_kernel_mode(mm, &t, mode, &cfg, &tech("e-sram"));
+            assert_eq!(a.runtime_cycles().to_bits(), b.runtime_cycles().to_bits());
+            assert_eq!(a.hit_rate(), b.hit_rate());
+            assert_eq!(a.total_dram_bytes(), b.total_dram_bytes());
         }
     }
 }

@@ -7,9 +7,10 @@
 //! Memory Controller for Tensor Decomposition" (arXiv:2207.08298) shows
 //! that assumption breaking for spMTTKRP: bank conflicts and DRAM-channel
 //! queueing put real stall time on top of the roofline. This module
-//! replays the **same per-nonzero access stream** (identical functional
-//! caches, identical traffic, identical [`partition_slices`] work split)
-//! through *arbitrated* resources to measure that stall:
+//! replays the **same chunked access-stream IR** (identical
+//! [`crate::kernel::SparseKernel`] chunks, identical functional caches,
+//! identical traffic, identical [`partition_slices`] work split) through
+//! *arbitrated* resources to measure that stall:
 //!
 //! * **Bank-arbitrated caches** — each cache array is split into
 //!   [`AcceleratorConfig::bank_factor`] independently addressable banks
@@ -24,7 +25,7 @@
 //!   analytic engine charges (bank-level parallelism stays folded into
 //!   the service time), so total channel occupancy is identical and only
 //!   queueing delay differs.
-//! * **PE execution slots** — the [`ExecUnit`] pipeline and psum charges
+//! * **PE execution slots** — the kernel's pipeline and psum charges
 //!   issue against busy-until clocks instead of plain accumulators, and a
 //!   finite decoupling window ([`DECOUPLE_WINDOW_PER_PIPELINE`] nonzeros
 //!   per pipeline ≈ MSHR + psum depth) back-pressures the front end when
@@ -33,12 +34,13 @@
 //! ## Invariants vs the analytic engine
 //!
 //! The functional model is *shared*, not re-implemented: the event engine
-//! drives the same [`MemoryController`], so hit rates, DRAM traffic,
-//! active-word counters — everything the energy model (Eq. 2–3) consumes —
-//! are bit-identical between the two backends. The measured contention is
-//! reported as [`PeReport::stall_cycles`] *on top of* the analytic
-//! bottleneck time, so `event runtime ≥ analytic runtime` always holds
-//! and the delta is exactly the roofline model's blind spot.
+//! drives the same [`MemoryController`] over the same IR chunks, so hit
+//! rates, DRAM traffic, active-word counters — everything the energy
+//! model (Eq. 2–3) consumes — are bit-identical between the two backends.
+//! The measured contention is reported as [`PeReport::stall_cycles`] *on
+//! top of* the analytic bottleneck time, so `event runtime ≥ analytic
+//! runtime` always holds and the delta is exactly the roofline model's
+//! blind spot.
 //!
 //! On conflict-light streams (uniform row access, ≥ a few hundred distinct
 //! rows per factor matrix) the two engines agree within
@@ -46,18 +48,20 @@
 //! electrical cache inflates runtime by up to `bank_factor ×` — the
 //! regression the golden tests pin (`rust/tests/engine_agreement.rs`).
 //!
-//! Complexity is O(nnz × (N−1)) per mode, same order as the analytic
-//! engine with a constant-factor overhead for the busy-until bookkeeping.
+//! Complexity is O(nnz × reads-per-nonzero) per mode, same order as the
+//! analytic engine with a constant-factor overhead for the busy-until
+//! bookkeeping; per-PE live memory is O(chunk), never the full trace.
+//!
+//! [`PeReport::stall_cycles`]: crate::sim::result::PeReport::stall_cycles
 
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::cache::row_key;
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::{MemoryController, Served};
+use crate::kernel::{KernelKind, SparseKernel, DEFAULT_CHUNK_NNZ};
 use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
-use crate::sim::engine::{
-    charge_streams, input_slots, nnz_item_bytes, partition_slices, startup_latency,
-};
+use crate::sim::engine::{charge_streams, nnz_item_bytes, partition_slices, startup_latency};
 use crate::sim::result::{ModeReport, PeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
@@ -82,9 +86,10 @@ fn bank_of(key: u64, banks: usize) -> usize {
     ((key ^ (key >> 17)) % banks as u64) as usize
 }
 
-/// Event-driven simulation of one output mode (builds the mode view
-/// itself; see [`simulate_mode_event_with_view`]).
-pub fn simulate_mode_event(
+/// Event-driven simulation of one output mode of `kernel` (builds the
+/// mode view itself; see [`simulate_kernel_mode_event_with_view`]).
+pub fn simulate_kernel_mode_event(
+    kernel: &dyn SparseKernel,
     tensor: &SparseTensor,
     mode: usize,
     cfg: &AcceleratorConfig,
@@ -92,13 +97,15 @@ pub fn simulate_mode_event(
 ) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
     let view = ModeView::build(tensor, mode);
-    simulate_mode_event_with_view(tensor, &view, mode, cfg, tech)
+    simulate_kernel_mode_event_with_view(kernel, tensor, &view, mode, cfg, tech)
 }
 
-/// Event-driven simulation of one output mode with a caller-supplied mode
-/// view (the [`crate::sim::sweep`] fast path). `view` must be
-/// `ModeView::build(tensor, mode)` for the same tensor and mode.
-pub fn simulate_mode_event_with_view(
+/// Event-driven simulation of one output mode of `kernel` with a
+/// caller-supplied mode view (the [`crate::sim::sweep`] fast path).
+/// `view` must be `ModeView::build(tensor, mode)` for the same tensor
+/// and mode.
+pub fn simulate_kernel_mode_event_with_view(
+    kernel: &dyn SparseKernel,
     tensor: &SparseTensor,
     view: &ModeView,
     mode: usize,
@@ -106,11 +113,16 @@ pub fn simulate_mode_event_with_view(
     tech: &MemTechnology,
 ) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    if let Err(e) = kernel.validate(tensor, mode) {
+        panic!("kernel `{}` rejected the workload: {e}", kernel.name());
+    }
     cfg.validate().expect("invalid accelerator config");
     // shared-path invariant: identical work split to the analytic engine
     let parts = partition_slices(view, cfg.n_pes);
 
-    let (input_modes, matrix_rows) = input_slots(tensor, mode);
+    let read_modes = kernel.read_modes(tensor, mode);
+    let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+    let rpn = read_modes.len();
 
     let t = cfg.tuned_tech(tech);
     let banks = cfg.bank_factor(&t);
@@ -119,15 +131,15 @@ pub fn simulate_mode_event_with_view(
 
     let mut pes = Vec::with_capacity(cfg.n_pes);
     let item_bytes = nnz_item_bytes(tensor.n_modes());
-    let row_bytes = cfg.row_bytes() as u64;
+    let row_bytes = kernel.out_row_bytes(cfg.rank, tensor.n_modes());
     let window = (cfg.n_pipelines * DECOUPLE_WINDOW_PER_PIPELINE).max(8);
 
     for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
         let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
         let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
 
-        let per_nnz = exec.nonzero(tensor.n_modes());
-        let per_drain = exec.drain_slice();
+        let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
+        let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
 
         // --- event constants (per-request service times; the bank-level
         // constants are the aggregate occupancies scaled to one bank) ---
@@ -157,11 +169,10 @@ pub fn simulate_mode_event_with_view(
         let mut psum_words = 0u64;
         let mut pe_nnz = 0u64;
 
-        for s in slo..shi {
-            let slice = view.slice(s);
-            pe_nnz += slice.len() as u64;
-            for &k in slice {
-                let k = k as usize;
+        for chunk in kernel.stream(tensor, view, (slo, shi), DEFAULT_CHUNK_NNZ) {
+            pe_nnz += chunk.n_nnz as u64;
+            let mut se = 0usize;
+            for i in 0..chunk.n_nnz {
                 // decoupling-window back-pressure: this nonzero may not
                 // issue before nonzero (processed - window) completed
                 let slot = processed % window;
@@ -171,8 +182,8 @@ pub fn simulate_mode_event_with_view(
                 dram_free += stream_per_nnz;
 
                 let mut ready = issue;
-                for (j, &m) in input_modes.iter().enumerate() {
-                    let row = tensor.indices[m][k];
+                for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
+                    let (j, row) = (read.slot as usize, read.row);
                     // the shared functional model decides hit/miss/bypass
                     // and keeps the analytic busy/traffic accounting
                     let complete = match mc.factor_row_load(j, row) {
@@ -216,12 +227,16 @@ pub fn simulate_mode_event_with_view(
                 pipeline_cycles += per_nnz.pipeline_cycles;
                 psum_cycles += per_nnz.psum_cycles;
                 psum_words += per_nnz.psum_words;
+
+                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                    // slice complete: drain psum row toward the store path
+                    psum_free += per_drain.psum_cycles;
+                    psum_cycles += per_drain.psum_cycles;
+                    psum_words += per_drain.psum_words;
+                    finish = finish.max(psum_free);
+                    se += 1;
+                }
             }
-            // slice complete: drain psum row toward the store path
-            psum_free += per_drain.psum_cycles;
-            psum_cycles += per_drain.psum_cycles;
-            psum_words += per_drain.psum_words;
-            finish = finish.max(psum_free);
         }
 
         // Bulk functional stream accounting — the shared helper issues the
@@ -270,6 +285,7 @@ pub fn simulate_mode_event_with_view(
 
     ModeReport {
         tensor: tensor.name.clone(),
+        kernel: kernel.name().to_string(),
         mode,
         tech: t,
         rank: cfg.rank,
@@ -278,16 +294,53 @@ pub fn simulate_mode_event_with_view(
     }
 }
 
-/// Event-driven simulation of every output mode.
+/// Event-driven simulation of one output mode of the default spMTTKRP
+/// kernel (the pre-kernel-IR entry point, preserved verbatim).
+pub fn simulate_mode_event(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> ModeReport {
+    simulate_kernel_mode_event(KernelKind::Spmttkrp.kernel(), tensor, mode, cfg, tech)
+}
+
+/// [`simulate_mode_event`] with a caller-supplied mode view.
+pub fn simulate_mode_event_with_view(
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> ModeReport {
+    simulate_kernel_mode_event_with_view(
+        KernelKind::Spmttkrp.kernel(),
+        tensor,
+        view,
+        mode,
+        cfg,
+        tech,
+    )
+}
+
+/// Event-driven simulation of every output mode of `kernel` (report
+/// assembly owned by the [`crate::sim::SimEngine`] trait default).
+pub fn simulate_kernel_all_modes_event(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> SimReport {
+    crate::sim::EngineKind::Event.simulate_kernel_all_modes(kernel, tensor, cfg, tech)
+}
+
+/// Event-driven simulation of every output mode (spMTTKRP).
 pub fn simulate_all_modes_event(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> SimReport {
-    let modes = (0..tensor.n_modes())
-        .map(|m| simulate_mode_event(tensor, m, cfg, tech))
-        .collect();
-    SimReport { tensor: tensor.name.clone(), tech: cfg.tuned_tech(tech), modes }
+    simulate_kernel_all_modes_event(KernelKind::Spmttkrp.kernel(), tensor, cfg, tech)
 }
 
 #[cfg(test)]
@@ -355,6 +408,29 @@ mod tests {
         }
     }
 
+    #[test]
+    fn event_never_faster_than_analytic_on_every_kernel() {
+        // the contention contract is kernel-agnostic: the replay may only
+        // add time, whatever the workload shape
+        let t = gen::random(&[600, 500, 400], 12_000, 19);
+        let cfg = small_cfg();
+        for kind in KernelKind::ALL {
+            for name in ["e-sram", "o-sram"] {
+                let a = engine::simulate_kernel_mode(kind.kernel(), &t, 1, &cfg, &tech(name));
+                let e = simulate_kernel_mode_event(kind.kernel(), &t, 1, &cfg, &tech(name));
+                assert!(
+                    e.runtime_cycles() >= a.runtime_cycles(),
+                    "{kind} on {name}: event {} < analytic {}",
+                    e.runtime_cycles(),
+                    a.runtime_cycles()
+                );
+                assert_eq!(a.hit_rate(), e.hit_rate(), "{kind} on {name}");
+                assert_eq!(a.total_dram_bytes(), e.total_dram_bytes(), "{kind} on {name}");
+                assert_eq!(e.kernel, kind.name());
+            }
+        }
+    }
+
     // NOTE: the bank-conflict regression (single hot row ⇒ event strictly
     // slower on banked electrical caches) lives in the golden integration
     // suite, rust/tests/engine_agreement.rs — one fixture, one owner.
@@ -390,6 +466,7 @@ mod tests {
             assert_eq!(m.mode, i);
             assert_eq!(m.total_nnz(), 4_000);
         }
+        assert_eq!(r.kernel, "spmttkrp");
         assert!(r.total_runtime_s() > 0.0);
     }
 }

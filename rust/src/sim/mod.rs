@@ -1,12 +1,13 @@
-//! The simulation engines: one workload, two timing models.
+//! The simulation engines: pluggable workloads, two timing models.
 //!
 //! * [`result`] — [`result::SimReport`] / [`result::ModeReport`]: per-PE
 //!   resource busy times, cache statistics, traffic and active-word
 //!   counters, bottleneck identification, contention stall.
-//! * [`engine`] — the **analytic** streaming bottleneck engine: walks the
-//!   mode-sorted nonzero stream through the memory controller / exec-unit
-//!   timing models and prices a mode as its busiest resource's total
-//!   occupancy (the paper's own roofline abstraction). O(nnz) per mode.
+//! * [`engine`] — the **analytic** streaming bottleneck engine: walks a
+//!   kernel's chunked access-stream IR through the memory controller /
+//!   exec-unit timing models and prices a mode as its busiest resource's
+//!   total occupancy (the paper's own roofline abstraction). O(nnz) per
+//!   mode, O(chunk) memory.
 //! * [`event`] — the **event-driven** contention engine: replays the
 //!   identical access stream through bank-arbitrated caches, a FIFO DRAM
 //!   channel and windowed execution slots, measuring the queueing and
@@ -14,14 +15,18 @@
 //!   model, same traffic, `runtime ≥ analytic` by construction.
 //! * [`sweep`] — the parallel design-space sweep: a deterministic
 //!   {tensor × mode × technology × scale} cartesian product fanned across
-//!   OS threads, on either engine.
+//!   OS threads, on either engine, for any kernel.
 //!
-//! Both backends implement the [`SimEngine`] trait and are selected by
-//! [`EngineKind`] (`--engine analytic|event` on the CLI). Use the analytic
-//! engine for large sweeps (it is the paper's model and ~2× faster); use
-//! the event engine to bound the analytic model's error on a workload —
-//! the delta between the two is exactly the contention the roofline
-//! abstraction cannot see (see EXPERIMENTS.md §Cross-validation).
+//! The *workload* axis is just as open as the technology axis: both
+//! backends consume the [`crate::kernel::SparseKernel`] access-stream IR
+//! (`--kernel spmttkrp|spttm|spmm` on the CLI) and default to the paper's
+//! spMTTKRP. Both backends implement the [`SimEngine`] trait and are
+//! selected by [`EngineKind`] (`--engine analytic|event`). Use the
+//! analytic engine for large sweeps (it is the paper's model and ~2×
+//! faster); use the event engine to bound the analytic model's error on a
+//! workload — the delta between the two is exactly the contention the
+//! roofline abstraction cannot see (see EXPERIMENTS.md
+//! §Cross-validation).
 
 pub mod engine;
 pub mod event;
@@ -29,27 +34,32 @@ pub mod result;
 pub mod sweep;
 
 use crate::accel::config::AcceleratorConfig;
+use crate::kernel::{KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
 use crate::sim::result::{ModeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
-/// A simulation backend: prices one output mode of a tensor on one
-/// registry-resolved memory technology.
+/// A simulation backend: prices one output mode of a sparse kernel on
+/// one registry-resolved memory technology.
 ///
 /// Both implementations share the functional model (caches, traffic,
-/// active words) and the [`engine::partition_slices`] work split; they
-/// differ only in how per-request timing composes into a runtime. Any
-/// [`ModeReport`] they return feeds the energy/area models identically.
+/// active words), the kernel access-stream IR and the
+/// [`engine::partition_slices`] work split; they differ only in how
+/// per-request timing composes into a runtime. Any [`ModeReport`] they
+/// return feeds the energy/area models identically.
 pub trait SimEngine: Send + Sync {
     /// Short stable name (`analytic`, `event`) used by the CLI and
     /// report headers.
     fn name(&self) -> &'static str;
 
-    /// Simulate one mode with a caller-supplied mode view (`view` must be
-    /// `ModeView::build(tensor, mode)` for the same tensor and mode).
-    fn simulate_mode_with_view(
+    /// Simulate one mode of `kernel` with a caller-supplied mode view
+    /// (`view` must be `ModeView::build(tensor, mode)` for the same
+    /// tensor and mode). The one required method — everything else
+    /// derives from it.
+    fn simulate_kernel_mode_with_view(
         &self,
+        kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
         view: &ModeView,
         mode: usize,
@@ -57,7 +67,59 @@ pub trait SimEngine: Send + Sync {
         tech: &MemTechnology,
     ) -> ModeReport;
 
-    /// Simulate one mode (builds the view itself).
+    /// Simulate one mode of `kernel` (builds the view itself).
+    fn simulate_kernel_mode(
+        &self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        let view = ModeView::build(tensor, mode);
+        self.simulate_kernel_mode_with_view(kernel, tensor, &view, mode, cfg, tech)
+    }
+
+    /// Simulate every output mode of `kernel`.
+    fn simulate_kernel_all_modes(
+        &self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> SimReport {
+        let modes = (0..tensor.n_modes())
+            .map(|m| self.simulate_kernel_mode(kernel, tensor, m, cfg, tech))
+            .collect();
+        SimReport {
+            tensor: tensor.name.clone(),
+            kernel: kernel.name().to_string(),
+            tech: cfg.tuned_tech(tech),
+            modes,
+        }
+    }
+
+    /// [`Self::simulate_kernel_mode_with_view`] on the default spMTTKRP
+    /// kernel.
+    fn simulate_mode_with_view(
+        &self,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        self.simulate_kernel_mode_with_view(
+            KernelKind::Spmttkrp.kernel(),
+            tensor,
+            view,
+            mode,
+            cfg,
+            tech,
+        )
+    }
+
+    /// Simulate one spMTTKRP mode (builds the view itself).
     fn simulate_mode(
         &self,
         tensor: &SparseTensor,
@@ -65,20 +127,17 @@ pub trait SimEngine: Send + Sync {
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
     ) -> ModeReport {
-        let view = ModeView::build(tensor, mode);
-        self.simulate_mode_with_view(tensor, &view, mode, cfg, tech)
+        self.simulate_kernel_mode(KernelKind::Spmttkrp.kernel(), tensor, mode, cfg, tech)
     }
 
-    /// Simulate every output mode (the full spMTTKRP of Fig. 7's x-axis).
+    /// Simulate every output mode of spMTTKRP (the full Fig. 7 x-axis).
     fn simulate_all_modes(
         &self,
         tensor: &SparseTensor,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
     ) -> SimReport {
-        let modes =
-            (0..tensor.n_modes()).map(|m| self.simulate_mode(tensor, m, cfg, tech)).collect();
-        SimReport { tensor: tensor.name.clone(), tech: cfg.tuned_tech(tech), modes }
+        self.simulate_kernel_all_modes(KernelKind::Spmttkrp.kernel(), tensor, cfg, tech)
     }
 }
 
@@ -89,15 +148,16 @@ impl SimEngine for AnalyticEngine {
     fn name(&self) -> &'static str {
         "analytic"
     }
-    fn simulate_mode_with_view(
+    fn simulate_kernel_mode_with_view(
         &self,
+        kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
         view: &ModeView,
         mode: usize,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
     ) -> ModeReport {
-        engine::simulate_mode_with_view(tensor, view, mode, cfg, tech)
+        engine::simulate_kernel_mode_with_view(kernel, tensor, view, mode, cfg, tech)
     }
 }
 
@@ -108,15 +168,16 @@ impl SimEngine for EventEngine {
     fn name(&self) -> &'static str {
         "event"
     }
-    fn simulate_mode_with_view(
+    fn simulate_kernel_mode_with_view(
         &self,
+        kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
         view: &ModeView,
         mode: usize,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
     ) -> ModeReport {
-        event::simulate_mode_event_with_view(tensor, view, mode, cfg, tech)
+        event::simulate_kernel_mode_event_with_view(kernel, tensor, view, mode, cfg, tech)
     }
 }
 
@@ -190,6 +251,43 @@ impl EngineKind {
     ) -> SimReport {
         self.engine().simulate_all_modes(tensor, cfg, tech)
     }
+
+    /// [`SimEngine::simulate_kernel_mode`] on the selected backend.
+    pub fn simulate_kernel_mode(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        self.engine().simulate_kernel_mode(kernel, tensor, mode, cfg, tech)
+    }
+
+    /// [`SimEngine::simulate_kernel_mode_with_view`] on the selected
+    /// backend.
+    pub fn simulate_kernel_mode_with_view(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> ModeReport {
+        self.engine().simulate_kernel_mode_with_view(kernel, tensor, view, mode, cfg, tech)
+    }
+
+    /// [`SimEngine::simulate_kernel_all_modes`] on the selected backend.
+    pub fn simulate_kernel_all_modes(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> SimReport {
+        self.engine().simulate_kernel_all_modes(kernel, tensor, cfg, tech)
+    }
 }
 
 impl std::str::FromStr for EngineKind {
@@ -235,6 +333,25 @@ mod tests {
     }
 
     #[test]
+    fn default_kernel_is_spmttkrp_on_both_backends() {
+        // the legacy entry points and the kernel-aware ones must be the
+        // same simulation, bit for bit
+        let t = gen::random(&[48, 48, 48], 2_000, 6);
+        let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        for kind in EngineKind::ALL {
+            let legacy = kind.simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+            let explicit = kind.simulate_kernel_mode(kernel, &t, 0, &cfg, &tech("o-sram"));
+            assert_eq!(
+                legacy.runtime_cycles().to_bits(),
+                explicit.runtime_cycles().to_bits(),
+                "{kind}"
+            );
+            assert_eq!(legacy.kernel, "spmttkrp");
+        }
+    }
+
+    #[test]
     fn all_modes_via_trait_has_full_shape() {
         let t = gen::random(&[32, 32, 32], 1_000, 4);
         let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
@@ -242,6 +359,23 @@ mod tests {
             let r = kind.simulate_all_modes(&t, &cfg, &tech("e-sram"));
             assert_eq!(r.modes.len(), 3, "{kind}");
             assert_eq!(r.tech.name, "e-sram");
+            assert_eq!(r.kernel, "spmttkrp");
+        }
+    }
+
+    #[test]
+    fn kernel_all_modes_via_trait_carries_the_kernel_name() {
+        let t = gen::random(&[32, 32, 32], 1_000, 4);
+        let cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        for kernel in KernelKind::ALL {
+            for kind in EngineKind::ALL {
+                let r = kind.simulate_kernel_all_modes(kernel.kernel(), &t, &cfg, &tech("e-sram"));
+                assert_eq!(r.modes.len(), 3, "{kernel}/{kind}");
+                assert_eq!(r.kernel, kernel.name());
+                for m in &r.modes {
+                    assert_eq!(m.kernel, kernel.name());
+                }
+            }
         }
     }
 }

@@ -111,6 +111,9 @@ impl PeReport {
 #[derive(Clone, Debug)]
 pub struct ModeReport {
     pub tensor: String,
+    /// Name of the [`crate::kernel::SparseKernel`] that generated the
+    /// access stream (`spmttkrp` for every legacy entry point).
+    pub kernel: String,
     pub mode: usize,
     /// The resolved (and config-tuned) technology this mode ran on. The
     /// energy model reads its Table III constants straight from here, so
@@ -188,6 +191,8 @@ impl ModeReport {
 #[derive(Clone, Debug)]
 pub struct SimReport {
     pub tensor: String,
+    /// Name of the kernel every mode ran (reports are kernel-uniform).
+    pub kernel: String,
     pub tech: MemTechnology,
     pub modes: Vec<ModeReport>,
 }
@@ -257,6 +262,7 @@ mod tests {
     fn mode_runtime_is_slowest_pe() {
         let m = ModeReport {
             tensor: "t".into(),
+            kernel: "spmttkrp".into(),
             mode: 0,
             tech: esram(),
             rank: 16,
@@ -277,13 +283,19 @@ mod tests {
     fn sim_report_sums_modes() {
         let m = ModeReport {
             tensor: "t".into(),
+            kernel: "spmttkrp".into(),
             mode: 0,
             tech: osram(),
             rank: 16,
             fabric_hz: 500e6,
             pes: vec![pe(10.0, 5.0, 1.0)],
         };
-        let r = SimReport { tensor: "t".into(), tech: osram(), modes: vec![m.clone(), m] };
+        let r = SimReport {
+            tensor: "t".into(),
+            kernel: "spmttkrp".into(),
+            tech: osram(),
+            modes: vec![m.clone(), m],
+        };
         assert_eq!(r.total_runtime_cycles(), 24.0);
     }
 
@@ -295,6 +307,7 @@ mod tests {
         b.nnz = 100;
         let m = ModeReport {
             tensor: "t".into(),
+            kernel: "spmttkrp".into(),
             mode: 0,
             tech: esram(),
             rank: 16,

@@ -17,8 +17,10 @@
 //!    and build its energy model. Shared by every (tech, mode) point so
 //!    generation cost is paid once, not `|techs| × |modes|` times.
 //! 2. **Simulation** — one job per (workload, tech, mode): run the
-//!    selected backend ([`SweepSpec::engine`]: analytic bottleneck or
-//!    event-driven contention replay) and price the run through Eq. 2–3.
+//!    selected kernel ([`SweepSpec::kernel`]: any access-stream-IR
+//!    builtin) on the selected backend ([`SweepSpec::engine`]: analytic
+//!    bottleneck or event-driven contention replay) and price the run
+//!    through Eq. 2–3.
 //!
 //! Throughput notes live in EXPERIMENTS.md §Perf. The CLI front-end is
 //! `photon-mttkrp sweep`.
@@ -28,6 +30,7 @@ use std::sync::Mutex;
 
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};
+use crate::kernel::KernelKind;
 use crate::mem::tech::MemTechnology;
 use crate::sim::result::ModeReport;
 use crate::sim::EngineKind;
@@ -65,6 +68,9 @@ pub struct SweepSpec {
     /// Simulation backend every point runs on (axis-uniform so speedup
     /// columns compare like with like); default [`EngineKind::Analytic`].
     pub engine: EngineKind,
+    /// Sparse kernel every point runs (axis-uniform like the engine);
+    /// default [`KernelKind::Spmttkrp`], the paper's workload.
+    pub kernel: KernelKind,
 }
 
 impl SweepSpec {
@@ -81,6 +87,7 @@ impl SweepSpec {
             threads: 0,
             remap: true,
             engine: EngineKind::Analytic,
+            kernel: KernelKind::Spmttkrp,
         }
     }
 
@@ -137,6 +144,8 @@ pub struct SweepPoint {
     /// result vector).
     pub index: usize,
     pub tensor: String,
+    /// Name of the kernel this point ran ([`SweepSpec::kernel`]).
+    pub kernel: String,
     pub scale: f64,
     pub tech: String,
     pub mode: usize,
@@ -271,12 +280,19 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
             .iter()
             .find(|(m, _)| *m == mode)
             .expect("view prepared for every enumerated mode");
-        let report =
-            spec.engine.simulate_mode_with_view(&wl.tensor, view, mode, &wl.cfg, &spec.techs[xi]);
+        let report = spec.engine.simulate_kernel_mode_with_view(
+            spec.kernel.kernel(),
+            &wl.tensor,
+            view,
+            mode,
+            &wl.cfg,
+            &spec.techs[xi],
+        );
         let energy = wl.energy.mode_energy(&report);
         SweepPoint {
             index: 0, // fixed up below (enumeration order == job order)
             tensor: wl.tensor_name.clone(),
+            kernel: spec.kernel.name().to_string(),
             scale: wl.scale,
             tech: spec.techs[xi].name.clone(),
             mode,
@@ -306,15 +322,20 @@ pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
         .collect();
     let mut t = Table::new(
         &format!(
-            "sweep: {} points, baseline {base_tech}, engine {}",
+            "sweep: {} points, baseline {base_tech}, engine {}, kernel {}",
             points.len(),
-            spec.engine.name()
+            spec.engine.name(),
+            spec.kernel.name()
         ),
-        &["tensor", "scale", "mode", "tech", "runtime", "hit", "bottleneck", "energy", "speedup"],
+        &[
+            "tensor", "kernel", "scale", "mode", "tech", "runtime", "hit", "bottleneck",
+            "energy", "speedup",
+        ],
     )
     .align(0, Align::Left)
-    .align(3, Align::Left)
-    .align(6, Align::Left);
+    .align(1, Align::Left)
+    .align(4, Align::Left)
+    .align(7, Align::Left);
     for p in points {
         let base = baselines
             .get(&(p.tensor.as_str(), p.scale.to_bits(), p.mode))
@@ -322,6 +343,7 @@ pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
             .unwrap_or(f64::NAN);
         t.row(vec![
             p.tensor.clone(),
+            p.kernel.clone(),
             format!("{:.1e}", p.scale),
             format!("M{}", p.mode),
             p.tech.clone(),
@@ -431,6 +453,32 @@ mod tests {
         // and the summary table says which engine produced it
         let table = summary_table(&es, &e_points).render_ascii();
         assert!(table.contains("engine event"), "{table}");
+    }
+
+    #[test]
+    fn kernel_axis_flows_through_the_sweep() {
+        let mut s = tiny_spec(2);
+        s.kernel = KernelKind::Spttm;
+        let points = run_sweep(&s).unwrap();
+        assert_eq!(points.len(), 18);
+        for p in &points {
+            assert_eq!(p.kernel, "spttm");
+            assert_eq!(p.report.kernel, "spttm");
+            assert!(p.runtime_cycles() > 0.0);
+        }
+        // the summary table names the kernel in its title and rows
+        let table = summary_table(&s, &points).render_ascii();
+        assert!(table.contains("kernel spttm"), "{table}");
+        // the default kernel is the paper's workload
+        let base = run_sweep(&tiny_spec(1)).unwrap();
+        for p in &base {
+            assert_eq!(p.kernel, "spmttkrp");
+        }
+        // TTMc's wider output makes every scenario strictly slower than
+        // its MTTKRP twin on the same axes
+        for (m, t) in base.iter().zip(&points) {
+            assert!(t.runtime_cycles() > m.runtime_cycles(), "point {}", m.index);
+        }
     }
 
     #[test]

@@ -32,7 +32,12 @@ impl SparseTensor {
             "mode sizes must fit u32 coordinates"
         );
         let n = dims.len();
-        SparseTensor { name: name.to_string(), dims, indices: vec![Vec::new(); n], values: Vec::new() }
+        SparseTensor {
+            name: name.to_string(),
+            dims,
+            indices: vec![Vec::new(); n],
+            values: Vec::new(),
+        }
     }
 
     /// Number of modes N.

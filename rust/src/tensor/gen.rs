@@ -273,6 +273,47 @@ mod tests {
     }
 
     #[test]
+    fn scaled_preserves_density_within_rounding() {
+        // the scaling rule (nnz × s, dims × s^(1/N)) keeps density
+        // invariant up to dim rounding: nnz·s / (Πdims · s) = density.
+        // Use dims large enough that the ≥4 clamp never engages.
+        let spec = TensorSpec::custom("d", vec![20_000, 30_000, 40_000], 5_000_000, 0.5);
+        let d0 = spec.density();
+        for s in [1.0 / 8.0, 1.0 / 64.0, 1.0 / 512.0] {
+            let sc = spec.clone().scaled(s);
+            let ratio = sc.density() / d0;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "scale {s}: density ratio {ratio} drifted (got {}, want ~{d0})",
+                sc.density()
+            );
+        }
+        // and scaling is what the name says: strictly fewer nonzeros,
+        // strictly smaller dims
+        let sc = spec.scaled(1.0 / 64.0);
+        assert_eq!(sc.nnz, 5_000_000 / 64);
+        assert!(sc.dims.iter().zip(&[20_000u64, 30_000, 40_000]).all(|(&a, &b)| a < b));
+    }
+
+    #[test]
+    fn generate_is_deterministic_per_seed_for_every_preset() {
+        // identical (spec, seed) ⇒ identical tensors, for all seven
+        // Table II fingerprints — the sweep's workload-sharing and the
+        // cross-engine comparisons both assume it
+        let s = 1.0 / 262_144.0;
+        for ft in FrosttTensor::ALL {
+            let spec = preset(ft).scaled(s);
+            let a = spec.generate(42);
+            let b = spec.generate(42);
+            assert_eq!(a, b, "{}", spec.name);
+            let c = spec.generate(43);
+            assert_ne!(a, c, "{} must vary with the seed", spec.name);
+        }
+        // the uniform helper too
+        assert_eq!(random(&[30, 30], 500, 9), random(&[30, 30], 500, 9));
+    }
+
+    #[test]
     fn generation_is_deterministic_and_valid() {
         let spec = preset(FrosttTensor::Nell2).scaled(1.0 / 8192.0);
         let a = spec.generate(7);

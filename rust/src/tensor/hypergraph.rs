@@ -140,4 +140,76 @@ mod tests {
         let he = Hypergraph::build(&e);
         assert_eq!(he.modes[0].head_mass(3), 0.0);
     }
+
+    #[test]
+    fn head_mass_is_monotone_in_k() {
+        // growing the head can only absorb more endpoint mass: for every
+        // mode, head_mass(k) ≤ head_mass(k+1), anchored at 0 for k = 0
+        // and exactly 1 once the head covers every active vertex
+        let t = crate::tensor::gen::TensorSpec::custom("m", vec![60, 45, 30], 4_000, 0.9)
+            .generate(17);
+        let h = Hypergraph::build(&t);
+        for (m, md) in h.modes.iter().enumerate() {
+            assert_eq!(md.head_mass(0), 0.0, "mode {m}");
+            let mut prev = 0.0;
+            for k in 1..=md.degree.len() {
+                let hm = md.head_mass(k);
+                assert!(
+                    hm >= prev - 1e-12,
+                    "mode {m}: head_mass({k}) = {hm} < head_mass({}) = {prev}",
+                    k - 1
+                );
+                assert!(hm <= 1.0 + 1e-12, "mode {m}: head_mass({k}) = {hm} above 1");
+                prev = hm;
+            }
+            assert!((md.head_mass(md.degree.len()) - 1.0).abs() < 1e-12, "mode {m}");
+            // k past the dimension saturates rather than panicking
+            assert!((md.head_mass(md.degree.len() + 100) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn totals_cross_check_against_the_kernel_closed_forms() {
+        // the hypergraph's §IV-A totals and mttkrp::trace::mode_totals
+        // (now the spmttkrp kernel's closed forms) are two derivations of
+        // the same formulas — they must agree exactly, mode by mode
+        let t = crate::tensor::gen::TensorSpec::custom("x", vec![80, 25, 55, 12], 3_000, 0.7)
+            .generate(23);
+        let h = Hypergraph::build(&t);
+        for rank in [8usize, 16, 32] {
+            for mode in 0..t.n_modes() {
+                let totals = crate::mttkrp::trace::mode_totals(&t, mode, rank);
+                assert_eq!(
+                    h.compute_per_mode(rank),
+                    totals.compute_ops,
+                    "rank {rank} mode {mode}"
+                );
+                assert_eq!(
+                    h.data_transfer_elements(mode, rank),
+                    totals.transfer_elements,
+                    "rank {rank} mode {mode}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_and_trace_agree_on_request_counts() {
+        // per-mode degree sums are the factor-request totals of every
+        // *other* mode's §IV-A formula: Σ_m≠d Σ_i degree_m[i] = (N−1)|T|
+        let t = crate::tensor::gen::TensorSpec::custom("r", vec![40, 40, 40], 2_500, 1.1)
+            .generate(31);
+        let h = Hypergraph::build(&t);
+        for mode in 0..t.n_modes() {
+            let requests: u64 = h
+                .modes
+                .iter()
+                .enumerate()
+                .filter(|(m, _)| *m != mode)
+                .map(|(_, md)| md.degree.iter().map(|&d| d as u64).sum::<u64>())
+                .sum();
+            let totals = crate::mttkrp::trace::mode_totals(&t, mode, 16);
+            assert_eq!(requests, totals.factor_requests, "mode {mode}");
+        }
+    }
 }

@@ -3,12 +3,15 @@
 //! `cargo bench` targets use `harness = false` and drive this module from a
 //! plain `main`. Each benchmark gets a warmup phase, a calibrated iteration
 //! count targeting a wall-time budget, and reports mean ± σ, min, and
-//! optional throughput. Results can also be dumped as CSV for plotting.
+//! optional throughput. Results can be dumped as CSV (plotting) or JSON
+//! (the `BENCH_*.json` perf-trajectory files at the repository root).
 //!
 //! This intentionally mirrors criterion's output shape
 //! (`name   time: [mean ± σ]`) so downstream tooling/log-readers behave.
 
 use std::hint::black_box;
+use std::io;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
@@ -143,7 +146,8 @@ impl Bench {
     /// Record an externally computed scalar (used by the table/figure
     /// "benches", where the interesting output is the model value itself).
     pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
-        println!("{:<44} value: {} {}", self.full_name(name), crate::util::table::fmt_sig(value, 4), unit);
+        let formatted = crate::util::table::fmt_sig(value, 4);
+        println!("{:<44} value: {formatted} {unit}", self.full_name(name));
     }
 
     pub fn results(&self) -> &[Measurement] {
@@ -152,8 +156,8 @@ impl Bench {
 
     /// Render all measurements as a table.
     pub fn summary_table(&self) -> Table {
-        let mut t = Table::new("bench summary", &["name", "iters", "mean", "sigma", "min", "throughput"])
-            .align(0, crate::util::table::Align::Left);
+        let cols = ["name", "iters", "mean", "sigma", "min", "throughput"];
+        let mut t = Table::new("bench summary", &cols).align(0, crate::util::table::Align::Left);
         for m in &self.results {
             t.row(vec![
                 m.name.clone(),
@@ -167,9 +171,11 @@ impl Bench {
         t
     }
 
-    /// Write CSV of all measurements to `path` (best effort).
-    pub fn write_csv(&self, path: &str) {
-        let mut t = Table::new("", &["name", "iters", "mean_s", "sigma_s", "min_s", "throughput_per_s"]);
+    /// Write CSV of all measurements to `path`, creating parent
+    /// directories as needed.
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        let cols = ["name", "iters", "mean_s", "sigma_s", "min_s", "throughput_per_s"];
+        let mut t = Table::new("", &cols);
         for m in &self.results {
             t.row(vec![
                 m.name.clone(),
@@ -180,11 +186,63 @@ impl Bench {
                 m.throughput_per_s().map(|t| format!("{t:.3}")).unwrap_or_default(),
             ]);
         }
-        if let Some(dir) = std::path::Path::new(path).parent() {
-            let _ = std::fs::create_dir_all(dir);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
         }
-        let _ = std::fs::write(path, t.render_csv());
+        std::fs::write(path, t.render_csv())
     }
+
+    /// Write all measurements as JSON to `path`, creating parent
+    /// directories as needed. Shape (stable — the perf-trajectory files
+    /// at the repository root accumulate against it):
+    ///
+    /// ```json
+    /// { "benchmarks": [ { "name": "...", "iters": 7, "mean_s": 0.1,
+    ///   "sigma_s": 0.01, "min_s": 0.09, "throughput_per_s": 123.0 } ] }
+    /// ```
+    ///
+    /// `throughput_per_s` is `null` for benches without an item count.
+    /// Hand-rolled writer (the build is offline, no serde): numbers via
+    /// `{:e}` so round-tripping loses nothing, names JSON-escaped.
+    pub fn write_json(&self, path: &Path) -> io::Result<()> {
+        let mut out = String::from("{\n  \"benchmarks\": [");
+        for (i, m) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
+                 \"sigma_s\": {:e}, \"min_s\": {:e}, \"throughput_per_s\": {}}}",
+                json_escape(&m.name),
+                m.iters,
+                m.mean.as_secs_f64(),
+                m.sigma.as_secs_f64(),
+                m.min.as_secs_f64(),
+                m.throughput_per_s().map(|t| format!("{t:e}")).unwrap_or_else(|| "null".into()),
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// bench names are ASCII identifiers but the writer must never emit
+/// invalid JSON whatever the caller names a bench.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -254,10 +312,45 @@ mod tests {
         assert_eq!(tbl.n_rows(), 1);
         let csv = {
             let dir = std::env::temp_dir().join("photon_bench_test.csv");
-            b.write_csv(dir.to_str().unwrap());
+            b.write_csv(&dir).unwrap();
             std::fs::read_to_string(&dir).unwrap()
         };
         assert!(csv.starts_with("name,iters,mean_s"));
         assert!(csv.contains("g/a"));
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.group("g");
+        b.bench_items("with\"quote", 10.0, || 1 + 1);
+        b.bench("plain", || 2 + 2);
+        let path = std::env::temp_dir()
+            .join(format!("photon_bench_test_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let json = std::fs::read_to_string(&path).unwrap();
+        assert!(json.starts_with("{\n  \"benchmarks\": ["), "{json}");
+        assert!(json.contains("\"name\": \"g/with\\\"quote\""), "{json}");
+        assert!(json.contains("\"throughput_per_s\": null"), "{json}");
+        assert!(json.contains("\"mean_s\": "), "{json}");
+        // balanced structure: one object per measurement
+        assert_eq!(json.matches("{\"name\"").count(), 2);
+        assert!(json.trim_end().ends_with('}'), "{json}");
+    }
+
+    #[test]
+    fn writers_create_parent_directories() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.bench("x", || 1);
+        let root = std::env::temp_dir()
+            .join(format!("photon_bench_dirs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        b.write_csv(&root.join("deep/nested/out.csv")).unwrap();
+        b.write_json(&root.join("deep/other/out.json")).unwrap();
+        assert!(root.join("deep/nested/out.csv").exists());
+        assert!(root.join("deep/other/out.json").exists());
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -76,7 +76,9 @@ impl Config {
             if let Some(hdr) = line.strip_prefix('[') {
                 let hdr = hdr
                     .strip_suffix(']')
-                    .ok_or_else(|| ConfigError(format!("line {}: unterminated [section]", lineno + 1)))?
+                    .ok_or_else(|| {
+                        ConfigError(format!("line {}: unterminated [section]", lineno + 1))
+                    })?
                     .trim();
                 if hdr.is_empty() {
                     return Err(ConfigError(format!("line {}: empty section name", lineno + 1)));
@@ -91,7 +93,8 @@ impl Config {
             if key.is_empty() {
                 return Err(ConfigError(format!("line {}: empty key", lineno + 1)));
             }
-            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let full =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             let value = parse_value(val.trim())
                 .map_err(|e| ConfigError(format!("line {}: {}", lineno + 1, e.0)))?;
             if values.insert(full.clone(), value).is_some() {

@@ -51,7 +51,11 @@ pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value)
     }
 }
 
-fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
     // Bounded: at most 1000 successful shrink steps to guarantee termination
     // even for misbehaving shrinkers.
     for _ in 0..1000 {

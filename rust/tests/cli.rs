@@ -49,7 +49,10 @@ fn simulate_both_techs_reports_speedup() {
 #[test]
 fn simulate_single_tech_and_mode() {
     let out = bin()
-        .args(["simulate", "--tensor", "patents", "--scale", "0.0001", "--tech", "e-sram", "--mode", "0"])
+        .args([
+            "simulate", "--tensor", "patents", "--scale", "0.0001", "--tech", "e-sram",
+            "--mode", "0",
+        ])
         .output()
         .unwrap();
     assert!(out.status.success());
@@ -89,7 +92,10 @@ fn mttkrp_on_tns_file() {
 #[test]
 fn simulate_a_registry_technology_by_name() {
     let out = bin()
-        .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "o-sram-imc", "--mode", "0"])
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "o-sram-imc",
+            "--mode", "0",
+        ])
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
@@ -182,7 +188,10 @@ fn mode_filter_is_rejected_for_multi_tech_simulate() {
     // error for `both`/`all` and point at the working spellings
     for tech in ["both", "all"] {
         let out = bin()
-            .args(["simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", tech, "--mode", "0"])
+            .args([
+                "simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", tech,
+                "--mode", "0",
+            ])
             .output()
             .unwrap();
         assert!(!out.status.success(), "--tech {tech} --mode must fail");
@@ -200,6 +209,85 @@ fn unknown_tech_lists_the_registry() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("t-sram") && err.contains("e-sram"), "{err}");
+}
+
+#[test]
+fn simulate_accepts_every_builtin_kernel() {
+    // happy path per builtin: the per-mode line names the kernel that ran
+    for kernel in ["spmttkrp", "spttm", "spmm"] {
+        let out = bin()
+            .args([
+                "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+                "--tech", "o-sram", "--mode", "0", "--kernel", kernel,
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "--kernel {kernel}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("M0 [o-sram] {kernel}")), "--kernel {kernel}:\n{text}");
+    }
+}
+
+#[test]
+fn simulate_both_accepts_a_kernel() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "both", "--kernel", "spttm",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("total [spttm]"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+}
+
+#[test]
+fn unknown_kernel_lists_the_registered_kernels() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "o-sram", "--kernel", "mttkrp",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown kernel `mttkrp`"), "{err}");
+    for kernel in ["spmttkrp", "spttm", "spmm"] {
+        assert!(err.contains(kernel), "error must list `{kernel}`:\n{err}");
+    }
+}
+
+#[test]
+fn sweep_accepts_a_kernel() {
+    let out = bin()
+        .args([
+            "sweep", "--tensor", "nell-2", "--tech", "e-sram", "--tech", "o-sram",
+            "--scale", "0.0001", "--kernel", "spmm",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("kernel spmm"), "{text}");
+    assert!(text.contains("spmm"), "{text}");
+}
+
+#[test]
+fn sweep_rejects_an_unknown_kernel() {
+    let out = bin()
+        .args(["sweep", "--tensor", "nell-2", "--scale", "0.0001", "--kernel", "ttmc"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown kernel `ttmc`") && err.contains("spttm"), "{err}");
 }
 
 #[test]

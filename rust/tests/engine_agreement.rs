@@ -5,13 +5,146 @@
 //! must make the event engine *strictly* slower, which is the whole point
 //! of having a second engine.
 
+use photon_mttkrp::cache::pipeline::ArrayTiming;
+use photon_mttkrp::controller::mc::MemoryController;
+use photon_mttkrp::pe::exec::ExecUnit;
 use photon_mttkrp::prelude::*;
-use photon_mttkrp::sim::engine;
+use photon_mttkrp::sim::engine::{self, partition_slices};
 use photon_mttkrp::sim::event::{self, EVENT_AGREEMENT_TOLERANCE};
+use photon_mttkrp::tensor::csf::ModeView;
 use photon_mttkrp::tensor::gen;
 
 fn small_cfg() -> AcceleratorConfig {
     AcceleratorConfig::paper_default().scaled(1.0 / 64.0)
+}
+
+/// Everything the pre-refactor analytic engine reported per PE, captured
+/// by the reference walk below for bit-for-bit comparison.
+#[derive(Debug, PartialEq)]
+struct LegacyPe {
+    nnz: u64,
+    slices: u64,
+    dram_cycles: u64,
+    cache_cycles: Vec<u64>,
+    psum_cycles: u64,
+    pipeline_cycles: u64,
+    stream_dma_cycles: u64,
+    element_dma_cycles: u64,
+    latency_overhead: u64,
+    hits: u64,
+    misses: u64,
+    dram_stream_bytes: u64,
+    dram_random_bytes: u64,
+    dram_random_accesses: u64,
+    cache_words: u64,
+    psum_words: u64,
+    dma_words: u64,
+}
+
+/// The **pre-kernel-IR analytic engine**, re-implemented verbatim from the
+/// original `sim/engine.rs` walk (ModeView slices → per-nonzero factor
+/// loads in ascending input-mode order → per-slice drain → bulk streams).
+/// The production engine now consumes the chunked access-stream IR; this
+/// reference pins the refactor bit-identical (every f64 is compared via
+/// `to_bits`, folded into u64 here).
+fn legacy_analytic_pes(
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+) -> Vec<LegacyPe> {
+    let view = ModeView::build(tensor, mode);
+    let parts = partition_slices(&view, cfg.n_pes);
+    let input_modes: Vec<usize> = (0..tensor.n_modes()).filter(|&m| m != mode).collect();
+    let matrix_rows: Vec<u64> = input_modes.iter().map(|&m| tensor.dims[m]).collect();
+
+    let t = cfg.tuned_tech(tech);
+    let banks = cfg.bank_factor(&t);
+    let psum_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
+    let psum_banks = (cfg.n_pipelines / 10).max(1);
+    let item_bytes = (4 * tensor.n_modes() + 4) as u64;
+    let row_bytes = cfg.row_bytes() as u64;
+
+    let mut out = Vec::new();
+    for &(slo, shi) in &parts {
+        let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
+        let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
+        let per_nnz = exec.nonzero(tensor.n_modes());
+        let per_drain = exec.drain_slice();
+
+        let mut pipeline_cycles = 0.0f64;
+        let mut psum_cycles = 0.0f64;
+        let mut psum_words = 0u64;
+        let mut pe_nnz = 0u64;
+        for s in slo..shi {
+            let slice = view.slice(s);
+            pe_nnz += slice.len() as u64;
+            for &k in slice {
+                let k = k as usize;
+                for (j, &m) in input_modes.iter().enumerate() {
+                    mc.factor_row_load(j, tensor.indices[m][k]);
+                }
+                pipeline_cycles += per_nnz.pipeline_cycles;
+                psum_cycles += per_nnz.psum_cycles;
+                psum_words += per_nnz.psum_words;
+            }
+            psum_cycles += per_drain.psum_cycles;
+            psum_words += per_drain.psum_words;
+        }
+        let n_slices_pe = (shi - slo) as u64;
+        mc.stream(pe_nnz * item_bytes);
+        mc.stream(n_slices_pe * row_bytes);
+        let latency =
+            cfg.dram.row_miss_ns * 1e-9 * cfg.fabric_hz + mc.cache_timing.hit_latency()
+                + cfg.rank as f64;
+        let stats = mc.cache_stats();
+        out.push(LegacyPe {
+            nnz: pe_nnz,
+            slices: n_slices_pe,
+            dram_cycles: mc.dram.busy_cycles.to_bits(),
+            cache_cycles: mc.cache_busy.iter().map(|c| c.to_bits()).collect(),
+            psum_cycles: psum_cycles.to_bits(),
+            pipeline_cycles: pipeline_cycles.to_bits(),
+            stream_dma_cycles: mc.stream_busy.to_bits(),
+            element_dma_cycles: mc.element_busy.to_bits(),
+            latency_overhead: latency.to_bits(),
+            hits: stats.hits,
+            misses: stats.misses,
+            dram_stream_bytes: mc.dram.bytes_streamed,
+            dram_random_bytes: mc.dram.bytes_random,
+            dram_random_accesses: mc.dram.random_accesses,
+            cache_words: mc.cache_words,
+            psum_words,
+            dma_words: mc.dma_words,
+        });
+    }
+    out
+}
+
+/// Capture a production-engine [`ModeReport`] in the same bit-folded form.
+fn report_as_legacy(r: &ModeReport) -> Vec<LegacyPe> {
+    r.pes
+        .iter()
+        .map(|p| LegacyPe {
+            nnz: p.nnz,
+            slices: p.slices,
+            dram_cycles: p.dram_cycles.to_bits(),
+            cache_cycles: p.cache_cycles.iter().map(|c| c.to_bits()).collect(),
+            psum_cycles: p.psum_cycles.to_bits(),
+            pipeline_cycles: p.pipeline_cycles.to_bits(),
+            stream_dma_cycles: p.stream_dma_cycles.to_bits(),
+            element_dma_cycles: p.element_dma_cycles.to_bits(),
+            latency_overhead: p.latency_overhead_cycles.to_bits(),
+            hits: p.cache_stats.hits,
+            misses: p.cache_stats.misses,
+            dram_stream_bytes: p.dram_stream_bytes,
+            dram_random_bytes: p.dram_random_bytes,
+            dram_random_accesses: p.dram_random_accesses,
+            cache_words: p.cache_words,
+            psum_words: p.psum_words,
+            dma_words: p.dma_words,
+        })
+        .collect()
 }
 
 /// `event / analytic` runtime ratio for one (tensor, mode, tech).
@@ -101,6 +234,99 @@ fn engine_choice_never_changes_functional_results() {
         assert_eq!(a.total_onchip_words(), e.total_onchip_words(), "{name}");
         assert_eq!(a.imbalance(), e.imbalance(), "{name}");
     }
+}
+
+#[test]
+fn spmttkrp_ir_is_bit_identical_to_the_pre_refactor_walk() {
+    // the acceptance grid: every FROSTT preset × every builtin technology
+    // through the kernel IR must reproduce the pre-refactor analytic
+    // engine bit for bit — cycles, traffic, hit counts, active words
+    let scale = 1.0 / 262_144.0;
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    for ft in FrosttTensor::ALL {
+        let tensor = frostt::preset(ft).scaled(scale).generate(3);
+        for name in registry::names() {
+            for mode in 0..tensor.n_modes().min(3) {
+                let legacy = legacy_analytic_pes(&tensor, mode, &cfg, &tech(&name));
+                let ir = engine::simulate_mode(&tensor, mode, &cfg, &tech(&name));
+                assert_eq!(
+                    legacy,
+                    report_as_legacy(&ir),
+                    "{} mode {mode} on {name}",
+                    tensor.name
+                );
+                for p in &ir.pes {
+                    assert_eq!(p.stall_cycles, 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn event_engine_through_the_ir_keeps_its_contracts_on_the_grid() {
+    // the event engine consumes the same chunks: its functional fields
+    // must match the pre-refactor walk bit for bit too (stall_cycles is
+    // the only field the replay may add), on every preset × technology
+    let scale = 1.0 / 262_144.0;
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    for ft in [FrosttTensor::Nell2, FrosttTensor::Lbnl, FrosttTensor::Delicious] {
+        let tensor = frostt::preset(ft).scaled(scale).generate(3);
+        for name in registry::names() {
+            let legacy = legacy_analytic_pes(&tensor, 0, &cfg, &tech(&name));
+            let ev = event::simulate_mode_event(&tensor, 0, &cfg, &tech(&name));
+            assert_eq!(legacy, report_as_legacy(&ev), "{} on {name}", tensor.name);
+            let an = engine::simulate_mode(&tensor, 0, &cfg, &tech(&name));
+            assert_eq!(an.hit_rate(), ev.hit_rate());
+            assert!(ev.runtime_cycles() >= an.runtime_cycles());
+            for p in &ev.pes {
+                assert!(p.stall_cycles >= 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_ir_simulates_ten_million_nonzeros_in_chunk_bounded_memory() {
+    // the scalability contract behind the chunked IR: a ≥10M-nnz tensor
+    // streams through the kernel in chunks whose allocation is bounded by
+    // the requested chunk size — the full trace is never materialized —
+    // and the engine consumes it end to end
+    let nnz = 10_000_000usize;
+    let t = gen::random(&[1_000_000, 1_000_000], nnz, 1);
+    assert_eq!(t.nnz(), nnz);
+    let view = ModeView::build(&t, 0);
+    let kernel = KernelKind::Spmttkrp.kernel();
+    let rpn = kernel.read_modes(&t, 0).len();
+    assert_eq!(rpn, 1);
+    let chunk_nnz = 8_192usize;
+    let (mut total, mut slices, mut chunks) = (0usize, 0usize, 0usize);
+    for c in kernel.stream(&t, &view, (0, view.n_slices()), chunk_nnz) {
+        // per-chunk memory bounded by the chunk size: both the logical
+        // length and the actual allocation
+        assert!(c.n_nnz <= chunk_nnz);
+        assert!(c.reads.len() <= chunk_nnz * rpn);
+        assert!(
+            c.reads.capacity() <= chunk_nnz * rpn,
+            "chunk over-allocated: capacity {} for chunk size {chunk_nnz}",
+            c.reads.capacity()
+        );
+        assert!(c.slice_ends.len() <= c.n_nnz);
+        total += c.n_nnz;
+        slices += c.slice_ends.len();
+        chunks += 1;
+    }
+    assert_eq!(total, nnz, "every nonzero streamed exactly once");
+    assert_eq!(slices, view.n_slices(), "every slice closed exactly once");
+    assert!(chunks >= nnz / chunk_nnz, "chunking actually chunked ({chunks} chunks)");
+
+    // and the whole pipeline consumes the same stream (analytic engine,
+    // one mode): nnz conserved, runtime finite and positive
+    let mut cfg = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+    cfg.n_pes = 4;
+    let r = engine::simulate_mode(&t, 0, &cfg, &tech("o-sram"));
+    assert_eq!(r.total_nnz(), nnz as u64);
+    assert!(r.runtime_cycles().is_finite() && r.runtime_cycles() > 0.0);
 }
 
 #[test]

@@ -160,7 +160,10 @@ fn sweep_is_deterministic_across_thread_counts() {
         assert_eq!(run.len(), reference.len());
         for (a, b) in reference.iter().zip(&run) {
             assert_eq!(a.index, b.index);
-            assert_eq!((a.tensor.as_str(), a.tech.as_str(), a.mode), (b.tensor.as_str(), b.tech.as_str(), b.mode));
+            assert_eq!(
+                (a.tensor.as_str(), a.tech.as_str(), a.mode),
+                (b.tensor.as_str(), b.tech.as_str(), b.mode)
+            );
             assert_eq!(
                 a.runtime_cycles().to_bits(),
                 b.runtime_cycles().to_bits(),
