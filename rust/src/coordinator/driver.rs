@@ -28,8 +28,9 @@ use crate::mttkrp::block::mttkrp_via_artifacts;
 use crate::mttkrp::reference::{mttkrp, FactorMatrix};
 use crate::runtime::client::Runtime;
 use crate::sim::result::{ModeReport, SimReport};
-use crate::sim::EngineKind;
+use crate::sim::{EngineKind, SimBudget};
 use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
 use crate::tensor::remap;
 
 /// Apply the §IV-A memory mapping (degree-descending remap on every mode)
@@ -214,7 +215,43 @@ pub fn compare_technologies_with_kernel(
     engine: EngineKind,
     kernel: KernelKind,
 ) -> TechComparison {
+    compare_technologies_with_budget(tensor, cfg, techs, engine, kernel, SimBudget::default())
+}
+
+/// [`compare_technologies_with_kernel`] under an explicit host-execution
+/// [`SimBudget`].
+pub fn compare_technologies_with_budget(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+    engine: EngineKind,
+    kernel: KernelKind,
+    budget: SimBudget,
+) -> TechComparison {
+    let mut cs = compare_technologies_on_engines(tensor, cfg, techs, &[engine], kernel, budget);
+    cs.pop().expect("one comparison per requested engine")
+}
+
+/// The fully-knobbed comparison primitive every `compare_*` front-end
+/// reduces to: run every technology in `techs` on **each** listed
+/// engine, returning one [`TechComparison`] per engine in order. The
+/// §IV-A memory mapping is applied once and the O(nnz) per-mode
+/// [`ModeView`] builds are **memoized**: each (tensor, mode) view is
+/// built exactly once and shared across every technology × engine run,
+/// instead of being rebuilt `|techs| × |engines| × |modes|` times (the
+/// CLI's `--engine event` delta printing passes
+/// `[Event, Analytic]` here, so the analytic bound reuses the event
+/// pass's workload preparation).
+pub fn compare_technologies_on_engines(
+    tensor: &SparseTensor,
+    cfg: &AcceleratorConfig,
+    techs: &[MemTechnology],
+    engines: &[EngineKind],
+    kernel: KernelKind,
+    budget: SimBudget,
+) -> Vec<TechComparison> {
     assert!(!techs.is_empty(), "compare_technologies needs at least one technology");
+    assert!(!engines.is_empty(), "compare_technologies needs at least one engine");
     // the accessors are name-keyed (find-first), so a duplicate name would
     // shadow its twin's numbers silently — reject it up front, like the
     // sweep engine does
@@ -225,15 +262,25 @@ pub fn compare_technologies_with_kernel(
     }
     let t = apply_memory_mapping(tensor);
     let em = EnergyModel::new(cfg);
-    let runs = techs
+    let k = kernel.kernel();
+    let views: Vec<(usize, ModeView)> =
+        (0..t.n_modes()).map(|m| (m, ModeView::build(&t, m))).collect();
+    engines
         .iter()
-        .map(|tech| {
-            let report = engine.simulate_kernel_all_modes(kernel.kernel(), &t, cfg, tech);
-            let energy = em.run_energy(&report);
-            TechRun { report, energy }
+        .map(|engine| {
+            let runs = techs
+                .iter()
+                .map(|tech| {
+                    let report = engine.simulate_kernel_all_modes_with_views_budget(
+                        k, &t, &views, cfg, tech, budget,
+                    );
+                    let energy = em.run_energy(&report);
+                    TechRun { report, energy }
+                })
+                .collect();
+            TechComparison { tensor: tensor.name.clone(), runs }
         })
-        .collect();
-    TechComparison { tensor: tensor.name.clone(), runs }
+        .collect()
 }
 
 /// One technology's analytic-vs-event cross-validation result.
@@ -281,9 +328,8 @@ pub fn cross_validate_kernel(
     kernel: KernelKind,
 ) -> Vec<EngineDelta> {
     let t = apply_memory_mapping(tensor);
-    let views: Vec<(usize, crate::tensor::csf::ModeView)> = (0..t.n_modes())
-        .map(|m| (m, crate::tensor::csf::ModeView::build(&t, m)))
-        .collect();
+    let views: Vec<(usize, ModeView)> =
+        (0..t.n_modes()).map(|m| (m, ModeView::build(&t, m))).collect();
     techs
         .iter()
         .map(|tech| {
@@ -479,6 +525,72 @@ mod tests {
             for d in cross_validate_kernel(&t, &cfg, &paper_pair(), kernel) {
                 assert!(d.ratio() >= 1.0 - 1e-12, "{kernel} on {}: {}", d.tech, d.ratio());
             }
+        }
+    }
+
+    #[test]
+    fn budget_comparison_matches_the_default_path() {
+        // the memoized-view + budget primitive must reproduce the
+        // classic per-run path bit for bit, at any thread budget
+        let t = TensorSpec::custom("b", vec![70, 70, 70], 6_000, 0.7).generate(15);
+        let cfg = cfg();
+        let base = compare_technologies(&t, &cfg, &paper_pair());
+        for budget in [SimBudget::single_threaded(), SimBudget::with_threads(3)] {
+            let c = compare_technologies_with_budget(
+                &t,
+                &cfg,
+                &paper_pair(),
+                EngineKind::Analytic,
+                KernelKind::Spmttkrp,
+                budget,
+            );
+            assert_eq!(base.names(), c.names());
+            for (a, b) in base.runs.iter().zip(&c.runs) {
+                assert_eq!(
+                    a.report.total_runtime_cycles().to_bits(),
+                    b.report.total_runtime_cycles().to_bits(),
+                    "{budget:?}"
+                );
+                assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn multi_engine_comparison_shares_one_workload() {
+        // one memoized workload, N engines: per-engine results must match
+        // the single-engine paths bit for bit, and the event comparison
+        // may never beat its analytic twin
+        let t = TensorSpec::custom("me", vec![80, 80, 80], 6_000, 0.6).generate(21);
+        let cfg = cfg();
+        let budget = SimBudget::single_threaded();
+        let cs = compare_technologies_on_engines(
+            &t,
+            &cfg,
+            &paper_pair(),
+            &[EngineKind::Event, EngineKind::Analytic],
+            KernelKind::Spmttkrp,
+            budget,
+        );
+        assert_eq!(cs.len(), 2);
+        let single = compare_technologies_with_budget(
+            &t,
+            &cfg,
+            &paper_pair(),
+            EngineKind::Analytic,
+            KernelKind::Spmttkrp,
+            budget,
+        );
+        for (a, b) in cs[1].runs.iter().zip(&single.runs) {
+            let (x, y) = (a.report.total_runtime_cycles(), b.report.total_runtime_cycles());
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (ev, an) in cs[0].runs.iter().zip(&cs[1].runs) {
+            assert!(
+                ev.report.total_runtime_cycles() >= an.report.total_runtime_cycles(),
+                "{}",
+                ev.name()
+            );
         }
     }
 

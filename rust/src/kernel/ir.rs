@@ -7,12 +7,26 @@
 //! through the stream DMA). Both simulation engines consume exactly this
 //! stream — nothing kernel-specific survives inside them.
 //!
-//! The stream is **chunked**: [`AccessStream`] yields [`AccessChunk`]s of
-//! at most `chunk_nnz` nonzeros, so a PE's walk over a multi-hundred-
+//! The stream is **chunked**: [`AccessStream`] produces [`AccessChunk`]s
+//! of at most `chunk_nnz` nonzeros, so a PE's walk over a multi-hundred-
 //! million-nonzero tensor needs O(chunk) live memory — the full trace is
 //! never materialized. A chunk may end mid-slice; a slice boundary is
 //! recorded only in the chunk where the slice's last nonzero retires, so
 //! slices larger than a chunk (a single hot output row) stream correctly.
+//!
+//! Chunks are delivered two ways, off one shared generator loop:
+//!
+//! * [`AccessStream::fill`] — the engines' hot path: refills a
+//!   caller-owned scratch [`AccessChunk`] in place. After the first fill
+//!   sizes the scratch, the steady-state chunk loop performs **zero heap
+//!   allocation** (the buffer pointer and capacity are stable across
+//!   chunks — the IR tests pin this).
+//! * the owned-chunk [`Iterator`] — a thin wrapper over `fill` for
+//!   tests, examples and one-shot consumers that want plain `for` loops.
+//!
+//! Each [`FactorRead`] op is packed into a single `u64`, so a chunk's
+//! `reads` buffer is one flat word array the engines stream through at
+//! memory speed.
 //!
 //! Op ordering is part of the cross-engine bit-identity contract: within
 //! a chunk, nonzeros appear in mode-view order and each nonzero's factor
@@ -26,20 +40,50 @@ use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
 /// Default chunk granularity, in nonzeros. Large enough to amortize the
-/// per-chunk `Vec` allocation and the index-copy pass over the ≥ 64 Ki
-/// cache lookups each chunk funds (the copy is the deliberate cost of a
-/// kernel-agnostic owned-chunk iterator — a scratch-reuse fill API would
-/// save it at the price of lending semantics every consumer must thread),
-/// small enough that a chunk (≤ `64 Ki × reads_per_nnz` 8-byte ops)
-/// stays cache/memory friendly.
+/// per-chunk stream bookkeeping over the ≥ 64 Ki cache lookups each
+/// chunk funds, small enough that a chunk (≤ `64 Ki × reads_per_nnz`
+/// 8-byte ops) stays cache/memory friendly. Overridable per run via
+/// [`crate::sim::SimBudget::chunk_nnz`] (`--chunk-nnz` on the CLI).
 pub const DEFAULT_CHUNK_NNZ: usize = 65_536;
 
-/// One factor-row read op: load row `row` of input slot `slot` (the
-/// engine routes the slot through its cache / bypass policy).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct FactorRead {
-    pub slot: u32,
-    pub row: u32,
+/// One factor-row read op — load row `row()` of input slot `slot()` (the
+/// engine routes the slot through its cache / bypass policy) — packed
+/// into a single `u64` word: slot in the high 32 bits, row in the low 32.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(transparent)]
+pub struct FactorRead(u64);
+
+impl FactorRead {
+    /// Pack a (slot, row) op.
+    #[inline]
+    pub fn new(slot: u32, row: u32) -> Self {
+        FactorRead(((slot as u64) << 32) | row as u64)
+    }
+
+    /// Input slot this op addresses (index into the kernel's
+    /// [`super::SparseKernel::read_modes`] list).
+    #[inline]
+    pub fn slot(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+
+    /// Factor-matrix row this op loads.
+    #[inline]
+    pub fn row(self) -> u32 {
+        self.0 as u32
+    }
+
+    /// The raw packed word (slot ≪ 32 | row).
+    #[inline]
+    pub fn packed(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Debug for FactorRead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FactorRead").field("slot", &self.slot()).field("row", &self.row()).finish()
+    }
 }
 
 /// A chunk of one PE's access stream.
@@ -53,13 +97,34 @@ pub struct FactorRead {
 pub struct AccessChunk {
     /// Nonzeros retired by this chunk.
     pub n_nnz: usize,
-    /// Flattened factor-read ops, `rpn` per nonzero.
+    /// Flattened packed factor-read ops, `rpn` per nonzero.
     pub reads: Vec<FactorRead>,
     /// Chunk-local positions whose nonzero completes an output slice.
     pub slice_ends: Vec<u32>,
 }
 
-/// Chunked iterator over one PE's slice range `[slo, shi)` of a mode
+impl AccessChunk {
+    /// A scratch chunk pre-sized for `chunk_nnz` nonzeros at
+    /// `reads_per_nnz` ops each, so even the first
+    /// [`AccessStream::fill`] into it allocates nothing.
+    pub fn with_capacity(chunk_nnz: usize, reads_per_nnz: usize) -> Self {
+        AccessChunk {
+            n_nnz: 0,
+            reads: Vec::with_capacity(chunk_nnz * reads_per_nnz),
+            slice_ends: Vec::with_capacity(chunk_nnz),
+        }
+    }
+
+    /// Empty the chunk, keeping its buffers (capacity is preserved — the
+    /// scratch-reuse contract `fill` relies on).
+    pub fn clear(&mut self) {
+        self.n_nnz = 0;
+        self.reads.clear();
+        self.slice_ends.clear();
+    }
+}
+
+/// Chunked generator over one PE's slice range `[slo, shi)` of a mode
 /// view: the default [`super::SparseKernel::stream`] implementation. Each
 /// nonzero emits one [`FactorRead`] per entry of `read_modes`, in order.
 pub struct AccessStream<'a> {
@@ -89,33 +154,43 @@ impl<'a> AccessStream<'a> {
         assert!(chunk_nnz > 0, "chunk size must be positive");
         AccessStream { tensor, view, read_modes, chunk_nnz, s: slo, shi, k_in_slice: 0 }
     }
-}
 
-impl Iterator for AccessStream<'_> {
-    type Item = AccessChunk;
+    /// Ops emitted per nonzero (`read_modes` length) — the scratch-chunk
+    /// sizing factor for [`AccessChunk::with_capacity`].
+    pub fn reads_per_nnz(&self) -> usize {
+        self.read_modes.len()
+    }
 
-    fn next(&mut self) -> Option<AccessChunk> {
+    /// Refill `chunk` with the next chunk of the stream, reusing its
+    /// buffers. Returns `false` (leaving `chunk` empty) once the stream
+    /// is exhausted.
+    ///
+    /// This is the engines' zero-allocation hot path: both buffers get
+    /// an exact reservation bounded by `min(chunk size, remaining work)`
+    /// — `slice_ends` too, since a later chunk can close far more slices
+    /// than any earlier one (many tiny slices after one giant slice) and
+    /// must not regrow mid-stream — and the first chunk of a stream is
+    /// its largest, so after the first fill into a given scratch the
+    /// buffer pointers and capacities never change: no per-chunk heap
+    /// traffic in steady state.
+    pub fn fill(&mut self, chunk: &mut AccessChunk) -> bool {
+        chunk.clear();
         if self.s >= self.shi {
-            return None;
+            return false;
         }
         let rpn = self.read_modes.len();
-        // allocation bounded by min(chunk size, remaining work) — the
-        // O(chunk)-memory contract, robust to caller-supplied huge sizes
         let remaining = (self.view.slice_ptr[self.shi] - self.view.slice_ptr[self.s]) as usize
             - self.k_in_slice;
         let take_cap = self.chunk_nnz.min(remaining);
-        let mut chunk = AccessChunk {
-            n_nnz: 0,
-            reads: Vec::with_capacity(take_cap * rpn),
-            slice_ends: Vec::new(),
-        };
+        chunk.reads.reserve_exact(take_cap * rpn);
+        chunk.slice_ends.reserve_exact(take_cap);
         while self.s < self.shi && chunk.n_nnz < self.chunk_nnz {
             let slice = self.view.slice(self.s);
             let take = (self.chunk_nnz - chunk.n_nnz).min(slice.len() - self.k_in_slice);
             for &k in &slice[self.k_in_slice..self.k_in_slice + take] {
                 for (j, &m) in self.read_modes.iter().enumerate() {
                     let row = self.tensor.indices[m][k as usize];
-                    chunk.reads.push(FactorRead { slot: j as u32, row });
+                    chunk.reads.push(FactorRead::new(j as u32, row));
                 }
             }
             chunk.n_nnz += take;
@@ -127,7 +202,23 @@ impl Iterator for AccessStream<'_> {
                 self.k_in_slice = 0;
             }
         }
-        Some(chunk)
+        true
+    }
+}
+
+/// Owned-chunk convenience path: allocates a fresh [`AccessChunk`] per
+/// step and delegates to [`AccessStream::fill`], so the two delivery
+/// modes can never diverge. Engines use `fill` directly.
+impl Iterator for AccessStream<'_> {
+    type Item = AccessChunk;
+
+    fn next(&mut self) -> Option<AccessChunk> {
+        let mut chunk = AccessChunk::default();
+        if self.fill(&mut chunk) {
+            Some(chunk)
+        } else {
+            None
+        }
     }
 }
 
@@ -143,6 +234,19 @@ mod tests {
         chunk: usize,
     ) -> Vec<AccessChunk> {
         AccessStream::new(t, view, (0, view.n_slices()), modes, chunk).collect()
+    }
+
+    #[test]
+    fn packed_reads_round_trip() {
+        for (slot, row) in [(0u32, 0u32), (1, 7), (2, u32::MAX), (u32::MAX, 12_345)] {
+            let r = FactorRead::new(slot, row);
+            assert_eq!(r.slot(), slot);
+            assert_eq!(r.row(), row);
+            assert_eq!(r.packed(), ((slot as u64) << 32) | row as u64);
+        }
+        assert_eq!(std::mem::size_of::<FactorRead>(), 8);
+        let dbg = format!("{:?}", FactorRead::new(1, 42));
+        assert!(dbg.contains("slot") && dbg.contains("42"), "{dbg}");
     }
 
     #[test]
@@ -195,8 +299,8 @@ mod tests {
         for s in 0..view.n_slices() {
             for &k in view.slice(s) {
                 let r = it.next().unwrap();
-                assert_eq!(r.slot, 0);
-                assert_eq!(r.row, t.indices[1][k as usize]);
+                assert_eq!(r.slot(), 0);
+                assert_eq!(r.row(), t.indices[1][k as usize]);
             }
         }
         assert!(it.next().is_none());
@@ -229,5 +333,87 @@ mod tests {
         let e = SparseTensor::new("e", vec![4, 4]);
         let ev = ModeView::build(&e, 0);
         assert_eq!(AccessStream::new(&e, &ev, (0, 0), vec![1], 16).count(), 0);
+        // the fill path agrees: false immediately, chunk left empty
+        let mut s = AccessStream::new(&t, &view, (n, n), vec![1], 16);
+        let mut c = AccessChunk::with_capacity(16, 1);
+        assert!(!s.fill(&mut c));
+        assert_eq!(c.n_nnz, 0);
+    }
+
+    #[test]
+    fn fill_reuses_the_scratch_buffer_without_reallocating() {
+        // the zero-allocation contract: across every chunk of a
+        // multi-chunk stream the scratch's buffer pointer and capacity
+        // never change — steady state does no heap allocation at all
+        let t = gen::random(&[64, 256, 256], 50_000, 7);
+        let view = ModeView::build(&t, 0);
+        let mut s = AccessStream::new(&t, &view, (0, view.n_slices()), vec![1, 2], 1024);
+        let mut chunk = AccessChunk::with_capacity(1024, s.reads_per_nnz());
+        let reads_ptr = chunk.reads.as_ptr();
+        let reads_cap = chunk.reads.capacity();
+        let ends_ptr = chunk.slice_ends.as_ptr();
+        let ends_cap = chunk.slice_ends.capacity();
+        let mut chunks = 0usize;
+        let mut nnz = 0usize;
+        while s.fill(&mut chunk) {
+            assert_eq!(chunk.reads.as_ptr(), reads_ptr, "chunk {chunks} reallocated reads");
+            assert_eq!(chunk.reads.capacity(), reads_cap, "chunk {chunks} regrew reads");
+            assert_eq!(chunk.slice_ends.as_ptr(), ends_ptr, "chunk {chunks} reallocated ends");
+            assert_eq!(chunk.slice_ends.capacity(), ends_cap, "chunk {chunks} regrew ends");
+            nnz += chunk.n_nnz;
+            chunks += 1;
+        }
+        assert!(chunks > 10, "stream must actually chunk ({chunks})");
+        assert_eq!(nnz, t.nnz());
+        // exhausted: further fills keep returning false, chunk left empty
+        assert!(!s.fill(&mut chunk));
+        assert_eq!(chunk.n_nnz, 0);
+    }
+
+    #[test]
+    fn default_scratch_stabilizes_after_the_first_fill() {
+        // an unsized scratch is also fine: the first fill (the stream's
+        // largest chunk) sizes both buffers exactly once, then they are
+        // stable — slice_ends included, even though later chunks close
+        // far more slices than the first
+        let t = gen::random(&[32, 128, 128], 20_000, 13);
+        let view = ModeView::build(&t, 0);
+        let mut s = AccessStream::new(&t, &view, (0, view.n_slices()), vec![1, 2], 512);
+        let mut chunk = AccessChunk::default();
+        assert!(s.fill(&mut chunk));
+        let ptr = chunk.reads.as_ptr();
+        let cap = chunk.reads.capacity();
+        let ends_ptr = chunk.slice_ends.as_ptr();
+        let ends_cap = chunk.slice_ends.capacity();
+        assert!(cap <= 512 * 2, "over-allocated: {cap}");
+        while s.fill(&mut chunk) {
+            assert_eq!(chunk.reads.as_ptr(), ptr);
+            assert_eq!(chunk.reads.capacity(), cap);
+            assert_eq!(chunk.slice_ends.as_ptr(), ends_ptr);
+            assert_eq!(chunk.slice_ends.capacity(), ends_cap);
+        }
+    }
+
+    #[test]
+    fn fill_and_iterator_produce_identical_chunks() {
+        // the two delivery modes are one generator: op-for-op, chunk
+        // boundary-for-chunk boundary identical
+        let t = gen::random(&[40, 80, 80], 5_000, 11);
+        let view = ModeView::build(&t, 0);
+        for chunk_nnz in [1usize, 17, 512, 100_000] {
+            let owned: Vec<AccessChunk> =
+                AccessStream::new(&t, &view, (0, view.n_slices()), vec![1, 2], chunk_nnz)
+                    .collect();
+            let mut s = AccessStream::new(&t, &view, (0, view.n_slices()), vec![1, 2], chunk_nnz);
+            let mut scratch = AccessChunk::default();
+            let mut i = 0usize;
+            while s.fill(&mut scratch) {
+                assert_eq!(scratch.n_nnz, owned[i].n_nnz, "chunk {i} @ {chunk_nnz}");
+                assert_eq!(scratch.reads, owned[i].reads, "chunk {i} @ {chunk_nnz}");
+                assert_eq!(scratch.slice_ends, owned[i].slice_ends, "chunk {i} @ {chunk_nnz}");
+                i += 1;
+            }
+            assert_eq!(i, owned.len(), "chunk count @ {chunk_nnz}");
+        }
     }
 }

@@ -8,7 +8,9 @@
 //!
 //! 1. a chunked **access-stream IR** ([`ir`]): per nonzero, which factor
 //!    rows are read; per output slice, where the psum drain / output-row
-//!    write falls — generated lazily in O(chunk) memory;
+//!    write falls — generated lazily in O(chunk) memory and delivered
+//!    through the zero-allocation [`AccessStream::fill`] scratch-reuse
+//!    API (the engines' hot path) or the owned-chunk iterator;
 //! 2. per-nonzero / per-slice **execution charges** against the PE's
 //!    pipelines and psum buffer;
 //! 3. its own **closed-form totals** ([`KernelTotals`], the §IV-A-style
@@ -99,7 +101,9 @@ pub trait SparseKernel: Send + Sync {
     fn totals(&self, tensor: &SparseTensor, mode: usize, rank: usize) -> KernelTotals;
 
     /// Chunked access-program stream for one PE's slice range of `view`
-    /// (which must be `ModeView::build(tensor, view.mode)`).
+    /// (which must be `ModeView::build(tensor, view.mode)`). Drive it
+    /// with [`AccessStream::fill`] for the zero-allocation scratch-reuse
+    /// loop, or iterate it for owned chunks.
     fn stream<'a>(
         &self,
         tensor: &'a SparseTensor,

@@ -111,13 +111,18 @@
 //! are closed over the registry: any entry — builtin, config-file or
 //! programmatic — simulates on either backend with no per-name code.
 //!
-//! ## The sweep engine
+//! ## The sweep engine and host parallelism
 //!
 //! [`sim::sweep`] fans the cartesian product of
 //! {tensor × mode × technology × scale} across OS threads with
 //! deterministic result ordering, on either simulation backend — the
 //! `photon-mttkrp sweep` subcommand and the `design_space` example are
-//! its front-ends.
+//! its front-ends. One level down, both engines fan their independent
+//! per-PE walks across threads too, and the two levels share one
+//! [`sim::SimBudget`] thread budget so they compose without
+//! oversubscription (`--threads`/`--chunk-nnz` on the CLI). Every host
+//! knob is bit-transparent: any thread count and chunk size reproduce
+//! identical reports.
 //!
 //! ## Layering
 //!
@@ -155,11 +160,11 @@ pub mod prelude {
     pub use crate::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
     pub use crate::coordinator::driver::{
         compare_all_registered, compare_paper_pair, compare_paper_pair_with_engine,
-        compare_technologies, compare_technologies_with_engine,
-        compare_technologies_with_kernel, cross_validate, cross_validate_kernel, paper_pair,
-        simulate_all_modes, simulate_all_modes_with_engine, simulate_all_modes_with_kernel,
-        simulate_mode, simulate_mode_with_engine, simulate_mode_with_kernel, Compute,
-        EngineDelta, TechComparison, TechRun,
+        compare_technologies, compare_technologies_on_engines, compare_technologies_with_budget,
+        compare_technologies_with_engine, compare_technologies_with_kernel, cross_validate,
+        cross_validate_kernel, paper_pair, simulate_all_modes, simulate_all_modes_with_engine,
+        simulate_all_modes_with_kernel, simulate_mode, simulate_mode_with_engine,
+        simulate_mode_with_kernel, Compute, EngineDelta, TechComparison, TechRun,
     };
     pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
     pub use crate::kernel::{KernelKind, KernelTotals, SparseKernel};
@@ -169,7 +174,7 @@ pub mod prelude {
     pub use crate::runtime::client::Runtime;
     pub use crate::sim::result::{ModeReport, SimReport};
     pub use crate::sim::sweep::{run_sweep, summary_table, SweepPoint, SweepSpec};
-    pub use crate::sim::{EngineKind, SimEngine};
+    pub use crate::sim::{EngineKind, SimBudget, SimEngine};
     pub use crate::tensor::coo::SparseTensor;
     pub use crate::tensor::gen as frostt;
     pub use crate::tensor::gen::{FrosttTensor, TensorSpec};

@@ -6,12 +6,13 @@
 //!     platform + Table I/III/IV echo + the technology registry listing
 //! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
 //!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
-//!     [--kernel spmttkrp|spttm|spmm] [--config FILE]
+//!     [--kernel spmttkrp|spttm|spmm] [--threads T] [--chunk-nnz N] [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
 //!     single technology, per technology for both/all)
 //! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
-//!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T] [--config FILE]
+//!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T]
+//!     [--chunk-nnz N] [--config FILE]
 //!     parallel {tensor x mode x tech x scale} design-space sweep
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
@@ -28,12 +29,14 @@
 //! `--kernel` selects the sparse workload streamed through the engines:
 //! `spmttkrp` (the paper's CP-ALS kernel, the default), `spttm` (Tucker
 //! TTM-chain) or `spmm` (sparse × dense matrix — see EXPERIMENTS.md
-//! §Kernels).
+//! §Kernels). `--threads` and `--chunk-nnz` are host-execution knobs
+//! (per-PE thread budget, access-stream chunk granularity): they change
+//! how fast the simulator runs, never what it reports.
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
 use photon_mttkrp::coordinator::driver::{
-    apply_memory_mapping, compare_technologies_with_kernel, paper_pair, Compute, EngineDelta,
+    apply_memory_mapping, compare_technologies_on_engines, paper_pair, Compute, EngineDelta,
     TechComparison,
 };
 use photon_mttkrp::kernel::KernelKind;
@@ -42,8 +45,9 @@ use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::runtime::client::Runtime;
 use photon_mttkrp::sim::sweep::{self, SweepSpec};
-use photon_mttkrp::sim::EngineKind;
+use photon_mttkrp::sim::{EngineKind, SimBudget};
 use photon_mttkrp::tensor::coo::SparseTensor;
+use photon_mttkrp::tensor::csf::ModeView;
 use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
 use photon_mttkrp::util::cli::{CliError, Command, Parsed};
 use photon_mttkrp::util::configfile::Config;
@@ -74,6 +78,13 @@ fn cli() -> Command {
                     "sparse kernel: spmttkrp | spttm | spmm",
                     Some("spmttkrp"),
                 )
+                .opt("threads", "T", "per-PE simulator threads (0 = all cores)", Some("0"))
+                .opt(
+                    "chunk-nnz",
+                    "N",
+                    "access-stream chunk granularity in nonzeros",
+                    Some("65536"),
+                )
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
@@ -95,6 +106,12 @@ fn cli() -> Command {
                 )
                 .opt("seed", "N", "generator seed", Some("42"))
                 .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
+                .opt(
+                    "chunk-nnz",
+                    "N",
+                    "access-stream chunk granularity in nonzeros",
+                    Some("65536"),
+                )
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
@@ -177,6 +194,13 @@ fn run() -> Result<(), String> {
             // validate cheap arguments before the expensive generation
             let engine = EngineKind::parse(p.get("engine").unwrap())?;
             let kernel = KernelKind::parse(p.get("kernel").unwrap())?;
+            let budget = SimBudget {
+                threads: p.get_usize("threads").map_err(|e| e.to_string())?,
+                chunk_nnz: p.get_usize("chunk-nnz").map_err(|e| e.to_string())?,
+            };
+            if budget.chunk_nnz == 0 {
+                return Err("--chunk-nnz must be positive".into());
+            }
             let tech_arg = p.get("tech").unwrap();
             if matches!(tech_arg, "both" | "all") && p.get("mode").is_some() {
                 return Err(format!(
@@ -204,15 +228,26 @@ fn run() -> Result<(), String> {
                     );
                 }
             };
+            // With --engine event the analytic delta pass rides along in
+            // the same memoized comparison, so the §IV-A mapping and the
+            // per-mode views are prepared once, not once per engine.
+            let engines: Vec<EngineKind> = if engine == EngineKind::Event {
+                vec![EngineKind::Event, EngineKind::Analytic]
+            } else {
+                vec![engine]
+            };
             match tech_arg {
                 "both" => {
-                    let c = compare_technologies_with_kernel(
+                    let mut cs = compare_technologies_on_engines(
                         &tensor,
                         &cfg,
                         &paper_pair(),
-                        engine,
+                        &engines,
                         kernel,
+                        budget,
                     );
+                    let ca = if cs.len() > 1 { cs.pop() } else { None };
+                    let c = cs.pop().expect("one comparison per engine");
                     let e = &c.require("e-sram").report;
                     let o = &c.require("o-sram").report;
                     for (m, s) in c.mode_speedups("o-sram").iter().enumerate() {
@@ -229,25 +264,21 @@ fn run() -> Result<(), String> {
                         c.total_speedup("o-sram"),
                         c.energy_savings("o-sram")
                     );
-                    if engine == EngineKind::Event {
-                        let ca = compare_technologies_with_kernel(
-                            &tensor,
-                            &cfg,
-                            &paper_pair(),
-                            EngineKind::Analytic,
-                            kernel,
-                        );
-                        print_deltas(&c, &ca);
+                    if let Some(ca) = &ca {
+                        print_deltas(&c, ca);
                     }
                 }
                 "all" => {
-                    let c = compare_technologies_with_kernel(
+                    let mut cs = compare_technologies_on_engines(
                         &tensor,
                         &cfg,
                         &registry::all(),
-                        engine,
+                        &engines,
                         kernel,
+                        budget,
                     );
+                    let ca = if cs.len() > 1 { cs.pop() } else { None };
+                    let c = cs.pop().expect("one comparison per engine");
                     let base = c.baseline().name().to_string();
                     for run in &c.runs {
                         println!(
@@ -258,15 +289,8 @@ fn run() -> Result<(), String> {
                             c.energy_savings(run.name()),
                         );
                     }
-                    if engine == EngineKind::Event {
-                        let ca = compare_technologies_with_kernel(
-                            &tensor,
-                            &cfg,
-                            &registry::all(),
-                            EngineKind::Analytic,
-                            kernel,
-                        );
-                        print_deltas(&c, &ca);
+                    if let Some(ca) = &ca {
+                        print_deltas(&c, ca);
                     }
                 }
                 t => {
@@ -280,7 +304,17 @@ fn run() -> Result<(), String> {
                     let mapped = apply_memory_mapping(&tensor);
                     let k = kernel.kernel();
                     for m in modes {
-                        let r = engine.simulate_kernel_mode(k, &mapped, m, &cfg, &tech);
+                        // one view per mode, shared by both engine passes
+                        let view = ModeView::build(&mapped, m);
+                        let r = engine.simulate_kernel_mode_with_view_budget(
+                            k,
+                            &mapped,
+                            &view,
+                            m,
+                            &cfg,
+                            &tech,
+                            budget,
+                        );
                         println!(
                             "M{m} [{}] {kernel}: {:.3e}s  ({:.0} cycles, hit {:.1}%, bottleneck {})",
                             tech.name,
@@ -292,8 +326,15 @@ fn run() -> Result<(), String> {
                         if engine == EngineKind::Event {
                             // the event replay's headline deliverable: how
                             // far off the roofline abstraction is here
-                            let a = EngineKind::Analytic
-                                .simulate_kernel_mode(kernel.kernel(), &mapped, m, &cfg, &tech);
+                            let a = EngineKind::Analytic.simulate_kernel_mode_with_view_budget(
+                                k,
+                                &mapped,
+                                &view,
+                                m,
+                                &cfg,
+                                &tech,
+                                budget,
+                            );
                             let d = EngineDelta {
                                 tech: tech.name.clone(),
                                 analytic_cycles: a.runtime_cycles(),
@@ -363,6 +404,7 @@ fn run() -> Result<(), String> {
             spec.threads = threads;
             spec.engine = EngineKind::parse(p.get("engine").unwrap())?;
             spec.kernel = KernelKind::parse(p.get("kernel").unwrap())?;
+            spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
             if !modes.is_empty() {
                 spec.modes = Some(modes);
             }

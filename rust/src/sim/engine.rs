@@ -21,8 +21,13 @@
 //!
 //! Complexity is O(nnz × reads-per-nonzero) per mode — the cache lookups
 //! dominate, so the engine streams tens of millions of nonzeros per
-//! second (see EXPERIMENTS.md §Perf). For many-scenario runs,
-//! [`crate::sim::sweep`] fans independent simulations across OS threads.
+//! second per core (see EXPERIMENTS.md §Perf). The hot loop pulls the
+//! stream through the zero-allocation [`AccessChunk`] fill API, and the
+//! independent per-PE walks fan across OS threads under the
+//! [`SimBudget`] thread budget — per-PE reports are reduced in fixed PE
+//! order, so every `f64` is bit-identical at any thread count. For
+//! many-scenario runs, [`crate::sim::sweep`] fans independent
+//! simulations across the same budget one level up.
 //!
 //! This is the *analytic* backend of the [`crate::sim::SimEngine`] trait;
 //! [`crate::sim::event`] is the event-driven backend that replays the same
@@ -32,10 +37,12 @@
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::MemoryController;
-use crate::kernel::{KernelKind, SparseKernel, DEFAULT_CHUNK_NNZ};
+use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
+use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
+use crate::sim::SimBudget;
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
@@ -148,6 +155,34 @@ pub fn simulate_kernel_mode_with_view(
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> ModeReport {
+    simulate_kernel_mode_with_view_budget(
+        kernel,
+        tensor,
+        view,
+        mode,
+        cfg,
+        tech,
+        SimBudget::default(),
+    )
+}
+
+/// [`simulate_kernel_mode_with_view`] under an explicit host-execution
+/// [`SimBudget`]: the independent per-PE walks fan across
+/// `budget.pe_threads(cfg.n_pes)` OS threads, each worker reusing one
+/// scratch [`AccessChunk`] through the zero-allocation
+/// [`crate::kernel::AccessStream::fill`] loop. Per-PE reports land in
+/// fixed PE order and every `f64` is accumulated inside its own PE, so
+/// the report is **bit-identical** for any thread count and any chunk
+/// size (pinned by `rust/tests/parallel_determinism.rs`).
+pub fn simulate_kernel_mode_with_view_budget(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    budget: SimBudget,
+) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
     if let Err(e) = kernel.validate(tensor, mode) {
         panic!("kernel `{}` rejected the workload: {e}", kernel.name());
@@ -169,70 +204,82 @@ pub fn simulate_kernel_mode_with_view(
     // DESIGN.md §4).
     let psum_banks = (cfg.n_pipelines / 10).max(1);
 
-    let mut pes = Vec::with_capacity(cfg.n_pes);
     let item_bytes = nnz_item_bytes(tensor.n_modes());
     let row_bytes = kernel.out_row_bytes(cfg.rank, tensor.n_modes());
+    let chunk_nnz = budget.chunk();
 
-    for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
-        let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
-        let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
+    // Every PE owns its controller, caches, DRAM channel and exec unit,
+    // and its slice range never overlaps another's — the walks are
+    // independent by construction, so they fan across threads with no
+    // shared mutable state. Slot-ordered results keep PE order fixed.
+    let pes = parallel_map_init(
+        &parts,
+        budget.pe_threads(cfg.n_pes),
+        AccessChunk::default,
+        |scratch, pe_idx, &(slo, shi)| {
+            let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
+            let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
 
-        let mut pipeline_cycles = 0.0f64;
-        let mut psum_cycles = 0.0f64;
-        let mut psum_words = 0u64;
-        let mut pe_nnz = 0u64;
+            let mut pipeline_cycles = 0.0f64;
+            let mut psum_cycles = 0.0f64;
+            let mut psum_words = 0u64;
+            let mut pe_nnz = 0u64;
 
-        let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
-        let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
+            let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
+            let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
 
-        for chunk in kernel.stream(tensor, view, (slo, shi), DEFAULT_CHUNK_NNZ) {
-            pe_nnz += chunk.n_nnz as u64;
-            let mut se = 0usize;
-            for i in 0..chunk.n_nnz {
-                for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
-                    mc.factor_row_load(read.slot as usize, read.row);
-                }
-                pipeline_cycles += per_nnz.pipeline_cycles;
-                psum_cycles += per_nnz.psum_cycles;
-                psum_words += per_nnz.psum_words;
-                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
-                    // slice complete: drain psum row + store output row
-                    psum_cycles += per_drain.psum_cycles;
-                    psum_words += per_drain.psum_words;
-                    se += 1;
+            let mut stream = kernel.stream(tensor, view, (slo, shi), chunk_nnz);
+            while stream.fill(scratch) {
+                let chunk = &*scratch;
+                pe_nnz += chunk.n_nnz as u64;
+                let mut se = 0usize;
+                for i in 0..chunk.n_nnz {
+                    for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
+                        mc.factor_row_load(read.slot() as usize, read.row());
+                    }
+                    pipeline_cycles += per_nnz.pipeline_cycles;
+                    psum_cycles += per_nnz.psum_cycles;
+                    psum_words += per_nnz.psum_words;
+                    if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                        // slice complete: drain psum row + store output row
+                        psum_cycles += per_drain.psum_cycles;
+                        psum_words += per_drain.psum_words;
+                        se += 1;
+                    }
                 }
             }
-        }
 
-        // Sequential traffic, charged in bulk: the tensor's nonzeros stream
-        // in once (coordinates + value), the output rows stream out once.
-        let n_slices_pe = (shi - slo) as u64;
-        charge_streams(&mut mc, pe_nnz, n_slices_pe, item_bytes, row_bytes);
+            // Sequential traffic, charged in bulk: the tensor's nonzeros
+            // stream in once (coordinates + value), the output rows
+            // stream out once.
+            let n_slices_pe = (shi - slo) as u64;
+            charge_streams(&mut mc, pe_nnz, n_slices_pe, item_bytes, row_bytes);
 
-        let latency_overhead = startup_latency(cfg, &mc);
+            let latency_overhead = startup_latency(cfg, &mc);
 
-        let stats = mc.cache_stats();
-        pes.push(PeReport {
-            pe: pe_idx,
-            nnz: pe_nnz,
-            slices: n_slices_pe,
-            dram_cycles: mc.dram.busy_cycles,
-            cache_cycles: mc.cache_busy.clone(),
-            psum_cycles,
-            pipeline_cycles,
-            stream_dma_cycles: mc.stream_busy,
-            element_dma_cycles: mc.element_busy,
-            latency_overhead_cycles: latency_overhead,
-            stall_cycles: 0.0,
-            cache_stats: stats,
-            dram_stream_bytes: mc.dram.bytes_streamed,
-            dram_random_bytes: mc.dram.bytes_random,
-            dram_random_accesses: mc.dram.random_accesses,
-            cache_words: mc.cache_words,
-            psum_words,
-            dma_words: mc.dma_words,
-        });
-    }
+            let stats = mc.cache_stats();
+            PeReport {
+                pe: pe_idx,
+                nnz: pe_nnz,
+                slices: n_slices_pe,
+                dram_cycles: mc.dram.busy_cycles,
+                cache_cycles: mc.cache_busy.clone(),
+                psum_cycles,
+                pipeline_cycles,
+                stream_dma_cycles: mc.stream_busy,
+                element_dma_cycles: mc.element_busy,
+                latency_overhead_cycles: latency_overhead,
+                stall_cycles: 0.0,
+                cache_stats: stats,
+                dram_stream_bytes: mc.dram.bytes_streamed,
+                dram_random_bytes: mc.dram.bytes_random,
+                dram_random_accesses: mc.dram.random_accesses,
+                cache_words: mc.cache_words,
+                psum_words,
+                dma_words: mc.dma_words,
+            }
+        },
+    );
 
     ModeReport {
         tensor: tensor.name.clone(),
@@ -546,6 +593,50 @@ mod tests {
         let psum = |r: &ModeReport| r.pes.iter().map(|p| p.psum_cycles).sum::<f64>();
         assert!(psum(&tm) > psum(&mt));
         assert!(tm.runtime_cycles() > mt.runtime_cycles());
+    }
+
+    #[test]
+    fn budget_never_changes_the_report() {
+        // threads and chunk size are host knobs: any combination must
+        // reproduce the single-threaded default-chunk report bit for bit
+        let t = gen::random(&[512, 256, 256], 30_000, 29);
+        let cfg = small_cfg();
+        let view = ModeView::build(&t, 0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let base = simulate_kernel_mode_with_view_budget(
+            kernel,
+            &t,
+            &view,
+            0,
+            &cfg,
+            &tech("o-sram"),
+            SimBudget::single_threaded(),
+        );
+        for budget in [
+            SimBudget::with_threads(2),
+            SimBudget::with_threads(0),
+            SimBudget { threads: 3, chunk_nnz: 777 },
+            SimBudget { threads: 1, chunk_nnz: 1 },
+        ] {
+            let r = simulate_kernel_mode_with_view_budget(
+                kernel,
+                &t,
+                &view,
+                0,
+                &cfg,
+                &tech("o-sram"),
+                budget,
+            );
+            let (x, y) = (base.runtime_cycles(), r.runtime_cycles());
+            assert_eq!(x.to_bits(), y.to_bits(), "{budget:?}");
+            for (a, b) in base.pes.iter().zip(&r.pes) {
+                assert_eq!(a.nnz, b.nnz, "{budget:?}");
+                assert_eq!(a.dram_cycles.to_bits(), b.dram_cycles.to_bits(), "{budget:?}");
+                assert_eq!(a.psum_cycles.to_bits(), b.psum_cycles.to_bits(), "{budget:?}");
+                assert_eq!(a.cache_stats.hits, b.cache_stats.hits, "{budget:?}");
+                assert_eq!(a.cache_words, b.cache_words, "{budget:?}");
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,10 @@
 //! Complexity is O(nnz × reads-per-nonzero) per mode, same order as the
 //! analytic engine with a constant-factor overhead for the busy-until
 //! bookkeeping; per-PE live memory is O(chunk), never the full trace.
+//! Like the analytic engine, the replay streams chunks through the
+//! zero-allocation fill API and fans its independent per-PE timelines
+//! across the [`crate::sim::SimBudget`] thread budget — bit-identical at
+//! any thread count.
 //!
 //! [`PeReport::stall_cycles`]: crate::sim::result::PeReport::stall_cycles
 
@@ -58,11 +62,13 @@ use crate::accel::config::AcceleratorConfig;
 use crate::cache::cache::row_key;
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::{MemoryController, Served};
-use crate::kernel::{KernelKind, SparseKernel, DEFAULT_CHUNK_NNZ};
+use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
 use crate::sim::engine::{charge_streams, nnz_item_bytes, partition_slices, startup_latency};
+use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
+use crate::sim::SimBudget;
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
@@ -84,6 +90,186 @@ pub const DECOUPLE_WINDOW_PER_PIPELINE: usize = 4;
 #[inline]
 fn bank_of(key: u64, banks: usize) -> usize {
     ((key ^ (key >> 17)) % banks as u64) as usize
+}
+
+/// Immutable inputs shared by every PE of one event-mode replay, so the
+/// per-PE worker ([`replay_pe`]) can fan across threads borrowing one
+/// context instead of a dozen loose captures.
+struct ReplayCtx<'a> {
+    kernel: &'a dyn SparseKernel,
+    tensor: &'a SparseTensor,
+    view: &'a ModeView,
+    cfg: &'a AcceleratorConfig,
+    tech: &'a MemTechnology,
+    matrix_rows: &'a [u64],
+    rpn: usize,
+    banks: usize,
+    psum_timing: &'a ArrayTiming,
+    psum_banks: usize,
+    item_bytes: u64,
+    row_bytes: u64,
+    window: usize,
+    chunk_nnz: usize,
+}
+
+/// Replay one PE's slice range through the arbitrated resources. All
+/// mutable state (controller, busy-until clocks, decoupling ring) is
+/// PE-private, so PEs replay concurrently with bit-identical results.
+fn replay_pe(
+    ctx: &ReplayCtx<'_>,
+    pe_idx: usize,
+    slices: (usize, usize),
+    scratch: &mut AccessChunk,
+) -> PeReport {
+    let (slo, shi) = slices;
+    let cfg = ctx.cfg;
+    let banks = ctx.banks;
+    let mut mc = MemoryController::new(cfg, ctx.tech, ctx.matrix_rows);
+    let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, ctx.psum_timing.clone(), ctx.psum_banks);
+
+    let per_nnz = ctx.kernel.nnz_exec(&exec, ctx.tensor.n_modes());
+    let per_drain = ctx.kernel.drain_exec(&exec, ctx.tensor.n_modes());
+
+    // --- event constants (per-request service times; the bank-level
+    // constants are the aggregate occupancies scaled to one bank) ---
+    let hit_occ = mc.cache_timing.hit_occupancy();
+    let fill_occ = mc.cache_timing.fill_occupancy();
+    let bank_hit = hit_occ * banks as f64;
+    let bank_fill = fill_occ * banks as f64;
+    let hit_latency = mc.cache_timing.hit_latency();
+    let miss_occ = mc.dram_cfg.random_access_cycles(cfg.line_bytes as u64);
+    let miss_latency = mc.dram_cfg.row_miss_ns * 1e-9 * cfg.fabric_hz;
+    let stream_per_nnz = mc.dram_cfg.stream_cycles(ctx.item_bytes);
+
+    // --- event state: busy-until clocks, in fabric cycles ---
+    let n_caches = mc.caches.len();
+    let mut bank_free = vec![0.0f64; n_caches * banks];
+    let mut dram_free = 0.0f64;
+    let mut pipe_free = 0.0f64;
+    let mut psum_free = 0.0f64;
+    // ring[k % window] holds the completion time of nonzero k - window
+    let mut ring = vec![0.0f64; ctx.window];
+    let mut processed = 0usize;
+    let mut finish = 0.0f64;
+
+    // --- analytic-identical accumulators (the report's busy fields) ---
+    let mut pipeline_cycles = 0.0f64;
+    let mut psum_cycles = 0.0f64;
+    let mut psum_words = 0u64;
+    let mut pe_nnz = 0u64;
+
+    let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
+    while stream.fill(scratch) {
+        let chunk = &*scratch;
+        pe_nnz += chunk.n_nnz as u64;
+        let mut se = 0usize;
+        for i in 0..chunk.n_nnz {
+            // decoupling-window back-pressure: this nonzero may not
+            // issue before nonzero (processed - window) completed
+            let slot = processed % ctx.window;
+            let issue = ring[slot];
+            // the nonzero itself (coordinates + value) streams in
+            // through the DRAM channel ahead of processing
+            dram_free += stream_per_nnz;
+
+            let mut ready = issue;
+            for read in &chunk.reads[i * ctx.rpn..(i + 1) * ctx.rpn] {
+                let (j, row) = (read.slot() as usize, read.row());
+                // the shared functional model decides hit/miss/bypass
+                // and keeps the analytic busy/traffic accounting
+                let complete = match mc.factor_row_load(j, row) {
+                    Served::CacheHit { cache } => {
+                        let b = cache * banks + bank_of(row_key(j, row), banks);
+                        let start = issue.max(bank_free[b]);
+                        bank_free[b] = start + bank_hit;
+                        bank_free[b] + hit_latency
+                    }
+                    Served::CacheMiss { cache, writeback } => {
+                        let b = cache * banks + bank_of(row_key(j, row), banks);
+                        let start = issue.max(bank_free[b]);
+                        // probe + line-fill write (+ victim read-out)
+                        let occ = bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
+                        bank_free[b] = start + occ;
+                        let grant = (start + hit_latency).max(dram_free);
+                        dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
+                        dram_free + miss_latency
+                    }
+                    Served::Bypass => {
+                        let grant = issue.max(dram_free);
+                        dram_free = grant + miss_occ;
+                        dram_free + miss_latency
+                    }
+                };
+                ready = ready.max(complete);
+            }
+
+            // execution slots: pipelines then psum, in dependence order
+            let estart = ready.max(pipe_free);
+            pipe_free = estart + per_nnz.pipeline_cycles;
+            let pstart = estart.max(psum_free);
+            psum_free = pstart + per_nnz.psum_cycles;
+            let done = pipe_free.max(psum_free);
+            ring[slot] = done;
+            processed += 1;
+            finish = finish.max(done);
+
+            pipeline_cycles += per_nnz.pipeline_cycles;
+            psum_cycles += per_nnz.psum_cycles;
+            psum_words += per_nnz.psum_words;
+
+            if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                // slice complete: drain psum row toward the store path
+                psum_free += per_drain.psum_cycles;
+                psum_cycles += per_drain.psum_cycles;
+                psum_words += per_drain.psum_words;
+                finish = finish.max(psum_free);
+                se += 1;
+            }
+        }
+    }
+
+    // Bulk functional stream accounting — the shared helper issues the
+    // identical calls in identical order to the analytic engine, so
+    // the *reported* busy/traffic fields stay bit-identical across
+    // engines. (The per-nonzero `stream_per_nnz` charges above feed
+    // only the event timeline and sum to the same total up to f64
+    // rounding.)
+    let n_slices_pe = (shi - slo) as u64;
+    charge_streams(&mut mc, pe_nnz, n_slices_pe, ctx.item_bytes, ctx.row_bytes);
+    // the output rows drain through the channel after compute
+    dram_free += mc.dram_cfg.stream_cycles(n_slices_pe * ctx.row_bytes);
+
+    let latency_overhead = startup_latency(cfg, &mc);
+
+    let bank_max = bank_free.iter().cloned().fold(0.0f64, f64::max);
+    let event_end = finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max);
+
+    let stats = mc.cache_stats();
+    let mut report = PeReport {
+        pe: pe_idx,
+        nnz: pe_nnz,
+        slices: n_slices_pe,
+        dram_cycles: mc.dram.busy_cycles,
+        cache_cycles: mc.cache_busy.clone(),
+        psum_cycles,
+        pipeline_cycles,
+        stream_dma_cycles: mc.stream_busy,
+        element_dma_cycles: mc.element_busy,
+        latency_overhead_cycles: latency_overhead,
+        stall_cycles: 0.0,
+        cache_stats: stats,
+        dram_stream_bytes: mc.dram.bytes_streamed,
+        dram_random_bytes: mc.dram.bytes_random,
+        dram_random_accesses: mc.dram.random_accesses,
+        cache_words: mc.cache_words,
+        psum_words,
+        dma_words: mc.dma_words,
+    };
+    // contention = measured event finish beyond the perfect-overlap
+    // bound; clamped so the event engine never under-reports the
+    // analytic model (their busy accounting is bit-identical)
+    report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
+    report
 }
 
 /// Event-driven simulation of one output mode of `kernel` (builds the
@@ -112,6 +298,33 @@ pub fn simulate_kernel_mode_event_with_view(
     cfg: &AcceleratorConfig,
     tech: &MemTechnology,
 ) -> ModeReport {
+    simulate_kernel_mode_event_with_view_budget(
+        kernel,
+        tensor,
+        view,
+        mode,
+        cfg,
+        tech,
+        SimBudget::default(),
+    )
+}
+
+/// [`simulate_kernel_mode_event_with_view`] under an explicit
+/// host-execution [`SimBudget`]: the independent per-PE replays fan
+/// across `budget.pe_threads(cfg.n_pes)` OS threads, each worker reusing
+/// one scratch [`AccessChunk`] through the zero-allocation fill loop.
+/// Reports land in fixed PE order, so the result is bit-identical for
+/// any thread count and chunk size — same contract as the analytic
+/// engine (pinned by `rust/tests/parallel_determinism.rs`).
+pub fn simulate_kernel_mode_event_with_view_budget(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    budget: SimBudget,
+) -> ModeReport {
     assert!(mode < tensor.n_modes(), "mode {mode} out of range");
     if let Err(e) = kernel.validate(tensor, mode) {
         panic!("kernel `{}` rejected the workload: {e}", kernel.name());
@@ -122,166 +335,33 @@ pub fn simulate_kernel_mode_event_with_view(
 
     let read_modes = kernel.read_modes(tensor, mode);
     let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
-    let rpn = read_modes.len();
 
     let t = cfg.tuned_tech(tech);
     let banks = cfg.bank_factor(&t);
     let psum_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
-    let psum_banks = (cfg.n_pipelines / 10).max(1);
+    let ctx = ReplayCtx {
+        kernel,
+        tensor,
+        view,
+        cfg,
+        tech: &t,
+        matrix_rows: &matrix_rows,
+        rpn: read_modes.len(),
+        banks,
+        psum_timing: &psum_timing,
+        psum_banks: (cfg.n_pipelines / 10).max(1),
+        item_bytes: nnz_item_bytes(tensor.n_modes()),
+        row_bytes: kernel.out_row_bytes(cfg.rank, tensor.n_modes()),
+        window: (cfg.n_pipelines * DECOUPLE_WINDOW_PER_PIPELINE).max(8),
+        chunk_nnz: budget.chunk(),
+    };
 
-    let mut pes = Vec::with_capacity(cfg.n_pes);
-    let item_bytes = nnz_item_bytes(tensor.n_modes());
-    let row_bytes = kernel.out_row_bytes(cfg.rank, tensor.n_modes());
-    let window = (cfg.n_pipelines * DECOUPLE_WINDOW_PER_PIPELINE).max(8);
-
-    for (pe_idx, &(slo, shi)) in parts.iter().enumerate() {
-        let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
-        let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
-
-        let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
-        let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
-
-        // --- event constants (per-request service times; the bank-level
-        // constants are the aggregate occupancies scaled to one bank) ---
-        let hit_occ = mc.cache_timing.hit_occupancy();
-        let fill_occ = mc.cache_timing.fill_occupancy();
-        let bank_hit = hit_occ * banks as f64;
-        let bank_fill = fill_occ * banks as f64;
-        let hit_latency = mc.cache_timing.hit_latency();
-        let miss_occ = mc.dram_cfg.random_access_cycles(cfg.line_bytes as u64);
-        let miss_latency = mc.dram_cfg.row_miss_ns * 1e-9 * cfg.fabric_hz;
-        let stream_per_nnz = mc.dram_cfg.stream_cycles(item_bytes);
-
-        // --- event state: busy-until clocks, in fabric cycles ---
-        let n_caches = mc.caches.len();
-        let mut bank_free = vec![0.0f64; n_caches * banks];
-        let mut dram_free = 0.0f64;
-        let mut pipe_free = 0.0f64;
-        let mut psum_free = 0.0f64;
-        // ring[k % window] holds the completion time of nonzero k - window
-        let mut ring = vec![0.0f64; window];
-        let mut processed = 0usize;
-        let mut finish = 0.0f64;
-
-        // --- analytic-identical accumulators (the report's busy fields) ---
-        let mut pipeline_cycles = 0.0f64;
-        let mut psum_cycles = 0.0f64;
-        let mut psum_words = 0u64;
-        let mut pe_nnz = 0u64;
-
-        for chunk in kernel.stream(tensor, view, (slo, shi), DEFAULT_CHUNK_NNZ) {
-            pe_nnz += chunk.n_nnz as u64;
-            let mut se = 0usize;
-            for i in 0..chunk.n_nnz {
-                // decoupling-window back-pressure: this nonzero may not
-                // issue before nonzero (processed - window) completed
-                let slot = processed % window;
-                let issue = ring[slot];
-                // the nonzero itself (coordinates + value) streams in
-                // through the DRAM channel ahead of processing
-                dram_free += stream_per_nnz;
-
-                let mut ready = issue;
-                for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
-                    let (j, row) = (read.slot as usize, read.row);
-                    // the shared functional model decides hit/miss/bypass
-                    // and keeps the analytic busy/traffic accounting
-                    let complete = match mc.factor_row_load(j, row) {
-                        Served::CacheHit { cache } => {
-                            let b = cache * banks + bank_of(row_key(j, row), banks);
-                            let start = issue.max(bank_free[b]);
-                            bank_free[b] = start + bank_hit;
-                            bank_free[b] + hit_latency
-                        }
-                        Served::CacheMiss { cache, writeback } => {
-                            let b = cache * banks + bank_of(row_key(j, row), banks);
-                            let start = issue.max(bank_free[b]);
-                            // probe + line-fill write (+ victim read-out)
-                            let occ =
-                                bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
-                            bank_free[b] = start + occ;
-                            let grant = (start + hit_latency).max(dram_free);
-                            dram_free =
-                                grant + miss_occ + if writeback { miss_occ } else { 0.0 };
-                            dram_free + miss_latency
-                        }
-                        Served::Bypass => {
-                            let grant = issue.max(dram_free);
-                            dram_free = grant + miss_occ;
-                            dram_free + miss_latency
-                        }
-                    };
-                    ready = ready.max(complete);
-                }
-
-                // execution slots: pipelines then psum, in dependence order
-                let estart = ready.max(pipe_free);
-                pipe_free = estart + per_nnz.pipeline_cycles;
-                let pstart = estart.max(psum_free);
-                psum_free = pstart + per_nnz.psum_cycles;
-                let done = pipe_free.max(psum_free);
-                ring[slot] = done;
-                processed += 1;
-                finish = finish.max(done);
-
-                pipeline_cycles += per_nnz.pipeline_cycles;
-                psum_cycles += per_nnz.psum_cycles;
-                psum_words += per_nnz.psum_words;
-
-                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
-                    // slice complete: drain psum row toward the store path
-                    psum_free += per_drain.psum_cycles;
-                    psum_cycles += per_drain.psum_cycles;
-                    psum_words += per_drain.psum_words;
-                    finish = finish.max(psum_free);
-                    se += 1;
-                }
-            }
-        }
-
-        // Bulk functional stream accounting — the shared helper issues the
-        // identical calls in identical order to the analytic engine, so
-        // the *reported* busy/traffic fields stay bit-identical across
-        // engines. (The per-nonzero `stream_per_nnz` charges above feed
-        // only the event timeline and sum to the same total up to f64
-        // rounding.)
-        let n_slices_pe = (shi - slo) as u64;
-        charge_streams(&mut mc, pe_nnz, n_slices_pe, item_bytes, row_bytes);
-        // the output rows drain through the channel after compute
-        dram_free += mc.dram_cfg.stream_cycles(n_slices_pe * row_bytes);
-
-        let latency_overhead = startup_latency(cfg, &mc);
-
-        let bank_max = bank_free.iter().cloned().fold(0.0f64, f64::max);
-        let event_end = finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max);
-
-        let stats = mc.cache_stats();
-        let mut report = PeReport {
-            pe: pe_idx,
-            nnz: pe_nnz,
-            slices: n_slices_pe,
-            dram_cycles: mc.dram.busy_cycles,
-            cache_cycles: mc.cache_busy.clone(),
-            psum_cycles,
-            pipeline_cycles,
-            stream_dma_cycles: mc.stream_busy,
-            element_dma_cycles: mc.element_busy,
-            latency_overhead_cycles: latency_overhead,
-            stall_cycles: 0.0,
-            cache_stats: stats,
-            dram_stream_bytes: mc.dram.bytes_streamed,
-            dram_random_bytes: mc.dram.bytes_random,
-            dram_random_accesses: mc.dram.random_accesses,
-            cache_words: mc.cache_words,
-            psum_words,
-            dma_words: mc.dma_words,
-        };
-        // contention = measured event finish beyond the perfect-overlap
-        // bound; clamped so the event engine never under-reports the
-        // analytic model (their busy accounting is bit-identical)
-        report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
-        pes.push(report);
-    }
+    let pes = parallel_map_init(
+        &parts,
+        budget.pe_threads(cfg.n_pes),
+        AccessChunk::default,
+        |scratch, pe_idx, &range| replay_pe(&ctx, pe_idx, range, scratch),
+    );
 
     ModeReport {
         tensor: tensor.name.clone(),
@@ -363,6 +443,46 @@ mod tests {
         assert_eq!(a.runtime_cycles().to_bits(), b.runtime_cycles().to_bits());
         for (pa, pb) in a.pes.iter().zip(&b.pes) {
             assert_eq!(pa.stall_cycles.to_bits(), pb.stall_cycles.to_bits());
+        }
+    }
+
+    #[test]
+    fn event_budget_never_changes_the_report() {
+        // host knobs (threads, chunk size) are bit-transparent on the
+        // replay too: stall_cycles included
+        let t = gen::random(&[512, 512, 512], 20_000, 23);
+        let cfg = small_cfg();
+        let view = ModeView::build(&t, 0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let base = simulate_kernel_mode_event_with_view_budget(
+            kernel,
+            &t,
+            &view,
+            0,
+            &cfg,
+            &tech("e-sram"),
+            SimBudget::single_threaded(),
+        );
+        for budget in [
+            SimBudget::with_threads(0),
+            SimBudget::with_threads(3),
+            SimBudget { threads: 2, chunk_nnz: 999 },
+        ] {
+            let r = simulate_kernel_mode_event_with_view_budget(
+                kernel,
+                &t,
+                &view,
+                0,
+                &cfg,
+                &tech("e-sram"),
+                budget,
+            );
+            let (x, y) = (base.runtime_cycles(), r.runtime_cycles());
+            assert_eq!(x.to_bits(), y.to_bits(), "{budget:?}");
+            for (a, b) in base.pes.iter().zip(&r.pes) {
+                assert_eq!(a.stall_cycles.to_bits(), b.stall_cycles.to_bits(), "{budget:?}");
+                assert_eq!(a.cache_stats.hits, b.cache_stats.hits, "{budget:?}");
+            }
         }
     }
 

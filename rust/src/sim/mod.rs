@@ -16,6 +16,9 @@
 //! * [`sweep`] — the parallel design-space sweep: a deterministic
 //!   {tensor × mode × technology × scale} cartesian product fanned across
 //!   OS threads, on either engine, for any kernel.
+//! * [`par`] — the deterministic slot-ordered parallel map shared by the
+//!   sweep and by both engines' per-PE inner loops; [`SimBudget`] is the
+//!   thread/chunk knob the two levels compose under.
 //!
 //! The *workload* axis is just as open as the technology axis: both
 //! backends consume the [`crate::kernel::SparseKernel`] access-stream IR
@@ -30,15 +33,75 @@
 
 pub mod engine;
 pub mod event;
+pub mod par;
 pub mod result;
 pub mod sweep;
 
 use crate::accel::config::AcceleratorConfig;
-use crate::kernel::{KernelKind, SparseKernel};
+use crate::kernel::{KernelKind, SparseKernel, DEFAULT_CHUNK_NNZ};
 use crate::mem::tech::MemTechnology;
 use crate::sim::result::{ModeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
+
+/// Host-execution knobs for one simulation: they change how fast the
+/// simulator runs, **never** what it computes. Every knob is
+/// bit-transparent — any thread count and any chunk size reproduce
+/// identical reports (pinned by `rust/tests/parallel_determinism.rs`) —
+/// so this lives apart from [`AcceleratorConfig`], which describes the
+/// *modeled* hardware.
+///
+/// **Thread-budget rule.** `threads` is a *budget*, shared between the
+/// two parallelism levels so they compose without oversubscription: the
+/// sweep engine fans scenarios across `min(budget, scenarios)` workers
+/// and hands each simulation the left-over `budget / workers` threads
+/// (≥ 1) for its per-PE inner loop. A saturated sweep therefore runs
+/// each point single-threaded exactly as before, while a single
+/// `simulate` run gives the whole budget to the PE loop — which is what
+/// makes the paper's one-point Fig. 7/8 workflow use every core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimBudget {
+    /// OS threads the per-PE inner loop may use; 0 = all available
+    /// cores (`--threads` on the CLI).
+    pub threads: usize,
+    /// Nonzeros per access-stream chunk (`--chunk-nnz` on the CLI);
+    /// bounds per-PE live memory, see [`crate::kernel::ir`].
+    pub chunk_nnz: usize,
+}
+
+impl Default for SimBudget {
+    fn default() -> Self {
+        SimBudget { threads: 0, chunk_nnz: DEFAULT_CHUNK_NNZ }
+    }
+}
+
+impl SimBudget {
+    /// A budget of exactly `threads` threads, default chunking.
+    pub fn with_threads(threads: usize) -> Self {
+        SimBudget { threads, ..SimBudget::default() }
+    }
+
+    /// The sequential budget (the pre-parallel engine behaviour).
+    pub fn single_threaded() -> Self {
+        SimBudget::with_threads(1)
+    }
+
+    /// Threads the per-PE loop actually uses for `n_pes` PEs: the
+    /// resolved budget, capped by the PE count (a PE is the unit of
+    /// independent work).
+    pub fn pe_threads(&self, n_pes: usize) -> usize {
+        par::effective_threads(self.threads).min(n_pes.max(1))
+    }
+
+    /// Chunk granularity. Panics on zero: the CLI and [`crate::sim::sweep`]
+    /// reject it with a proper error first, so a zero reaching here is a
+    /// library-caller bug (e.g. truncated integer arithmetic) that must
+    /// fail loudly rather than silently degrade into 1-nonzero chunks.
+    pub fn chunk(&self) -> usize {
+        assert!(self.chunk_nnz > 0, "SimBudget::chunk_nnz must be positive");
+        self.chunk_nnz
+    }
+}
 
 /// A simulation backend: prices one output mode of a sparse kernel on
 /// one registry-resolved memory technology.
@@ -55,8 +118,23 @@ pub trait SimEngine: Send + Sync {
 
     /// Simulate one mode of `kernel` with a caller-supplied mode view
     /// (`view` must be `ModeView::build(tensor, mode)` for the same
-    /// tensor and mode). The one required method — everything else
-    /// derives from it.
+    /// tensor and mode) under an explicit host-execution budget. The one
+    /// required method — everything else derives from it.
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_kernel_mode_with_view_budget(
+        &self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+        budget: SimBudget,
+    ) -> ModeReport;
+
+    /// [`Self::simulate_kernel_mode_with_view_budget`] under the default
+    /// budget (all cores, default chunking) — budget choice never changes
+    /// the report, only how fast it is produced.
     fn simulate_kernel_mode_with_view(
         &self,
         kernel: &dyn SparseKernel,
@@ -65,7 +143,32 @@ pub trait SimEngine: Send + Sync {
         mode: usize,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
-    ) -> ModeReport;
+    ) -> ModeReport {
+        self.simulate_kernel_mode_with_view_budget(
+            kernel,
+            tensor,
+            view,
+            mode,
+            cfg,
+            tech,
+            SimBudget::default(),
+        )
+    }
+
+    /// Simulate one mode of `kernel` under an explicit budget (builds
+    /// the view itself).
+    fn simulate_kernel_mode_budget(
+        &self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+        budget: SimBudget,
+    ) -> ModeReport {
+        let view = ModeView::build(tensor, mode);
+        self.simulate_kernel_mode_with_view_budget(kernel, tensor, &view, mode, cfg, tech, budget)
+    }
 
     /// Simulate one mode of `kernel` (builds the view itself).
     fn simulate_kernel_mode(
@@ -80,16 +183,27 @@ pub trait SimEngine: Send + Sync {
         self.simulate_kernel_mode_with_view(kernel, tensor, &view, mode, cfg, tech)
     }
 
-    /// Simulate every output mode of `kernel`.
-    fn simulate_kernel_all_modes(
+    /// Simulate every listed `(mode, view)` of `kernel` from prebuilt,
+    /// memoized views under an explicit budget — the multi-mode
+    /// primitive, and the **single** place a [`SimReport`] is assembled,
+    /// so the memoized driver/sweep paths can never drift from the
+    /// build-it-yourself paths.
+    fn simulate_kernel_all_modes_with_views_budget(
         &self,
         kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
+        views: &[(usize, ModeView)],
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
+        budget: SimBudget,
     ) -> SimReport {
-        let modes = (0..tensor.n_modes())
-            .map(|m| self.simulate_kernel_mode(kernel, tensor, m, cfg, tech))
+        let modes = views
+            .iter()
+            .map(|(m, view)| {
+                self.simulate_kernel_mode_with_view_budget(
+                    kernel, tensor, view, *m, cfg, tech, budget,
+                )
+            })
             .collect();
         SimReport {
             tensor: tensor.name.clone(),
@@ -97,6 +211,26 @@ pub trait SimEngine: Send + Sync {
             tech: cfg.tuned_tech(tech),
             modes,
         }
+    }
+
+    /// Simulate every output mode of `kernel` (builds the views itself).
+    fn simulate_kernel_all_modes(
+        &self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+    ) -> SimReport {
+        let views: Vec<(usize, ModeView)> =
+            (0..tensor.n_modes()).map(|m| (m, ModeView::build(tensor, m))).collect();
+        self.simulate_kernel_all_modes_with_views_budget(
+            kernel,
+            tensor,
+            &views,
+            cfg,
+            tech,
+            SimBudget::default(),
+        )
     }
 
     /// [`Self::simulate_kernel_mode_with_view`] on the default spMTTKRP
@@ -148,7 +282,7 @@ impl SimEngine for AnalyticEngine {
     fn name(&self) -> &'static str {
         "analytic"
     }
-    fn simulate_kernel_mode_with_view(
+    fn simulate_kernel_mode_with_view_budget(
         &self,
         kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
@@ -156,8 +290,9 @@ impl SimEngine for AnalyticEngine {
         mode: usize,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
+        budget: SimBudget,
     ) -> ModeReport {
-        engine::simulate_kernel_mode_with_view(kernel, tensor, view, mode, cfg, tech)
+        engine::simulate_kernel_mode_with_view_budget(kernel, tensor, view, mode, cfg, tech, budget)
     }
 }
 
@@ -168,7 +303,7 @@ impl SimEngine for EventEngine {
     fn name(&self) -> &'static str {
         "event"
     }
-    fn simulate_kernel_mode_with_view(
+    fn simulate_kernel_mode_with_view_budget(
         &self,
         kernel: &dyn SparseKernel,
         tensor: &SparseTensor,
@@ -176,8 +311,17 @@ impl SimEngine for EventEngine {
         mode: usize,
         cfg: &AcceleratorConfig,
         tech: &MemTechnology,
+        budget: SimBudget,
     ) -> ModeReport {
-        event::simulate_kernel_mode_event_with_view(kernel, tensor, view, mode, cfg, tech)
+        event::simulate_kernel_mode_event_with_view_budget(
+            kernel,
+            tensor,
+            view,
+            mode,
+            cfg,
+            tech,
+            budget,
+        )
     }
 }
 
@@ -278,6 +422,37 @@ impl EngineKind {
         self.engine().simulate_kernel_mode_with_view(kernel, tensor, view, mode, cfg, tech)
     }
 
+    /// [`SimEngine::simulate_kernel_mode_with_view_budget`] on the
+    /// selected backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn simulate_kernel_mode_with_view_budget(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        view: &ModeView,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+        budget: SimBudget,
+    ) -> ModeReport {
+        self.engine()
+            .simulate_kernel_mode_with_view_budget(kernel, tensor, view, mode, cfg, tech, budget)
+    }
+
+    /// [`SimEngine::simulate_kernel_mode_budget`] on the selected
+    /// backend.
+    pub fn simulate_kernel_mode_budget(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        mode: usize,
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+        budget: SimBudget,
+    ) -> ModeReport {
+        self.engine().simulate_kernel_mode_budget(kernel, tensor, mode, cfg, tech, budget)
+    }
+
     /// [`SimEngine::simulate_kernel_all_modes`] on the selected backend.
     pub fn simulate_kernel_all_modes(
         self,
@@ -287,6 +462,21 @@ impl EngineKind {
         tech: &MemTechnology,
     ) -> SimReport {
         self.engine().simulate_kernel_all_modes(kernel, tensor, cfg, tech)
+    }
+
+    /// [`SimEngine::simulate_kernel_all_modes_with_views_budget`] on the
+    /// selected backend.
+    pub fn simulate_kernel_all_modes_with_views_budget(
+        self,
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        views: &[(usize, ModeView)],
+        cfg: &AcceleratorConfig,
+        tech: &MemTechnology,
+        budget: SimBudget,
+    ) -> SimReport {
+        self.engine()
+            .simulate_kernel_all_modes_with_views_budget(kernel, tensor, views, cfg, tech, budget)
     }
 }
 
@@ -318,6 +508,19 @@ mod tests {
         assert!(err.contains("analytic") && err.contains("event"), "{err}");
         assert_eq!(EngineKind::default(), EngineKind::Analytic);
         assert_eq!(EngineKind::Event.to_string(), "event");
+    }
+
+    #[test]
+    fn sim_budget_resolves_threads_and_rejects_zero_chunk() {
+        assert!(SimBudget::default().chunk() >= 1);
+        assert!(SimBudget::default().pe_threads(4) >= 1);
+        assert_eq!(SimBudget::single_threaded().pe_threads(8), 1);
+        // the budget is capped by the PE count — the unit of work
+        assert_eq!(SimBudget::with_threads(16).pe_threads(4), 4);
+        assert_eq!(SimBudget::with_threads(2).pe_threads(4), 2);
+        // a zero chunk is a caller bug and fails loudly, never silently
+        let z = SimBudget { threads: 1, chunk_nnz: 0 };
+        assert!(std::panic::catch_unwind(move || z.chunk()).is_err());
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Deterministic parallel-map plumbing, shared by every host-parallel
+//! layer of the simulator.
+//!
+//! One primitive serves both parallelism levels: the design-space sweep
+//! ([`crate::sim::sweep`]) fans *scenarios* across OS threads with it,
+//! and both simulation engines ([`crate::sim::engine`],
+//! [`crate::sim::event`]) fan their *per-PE inner loops* across it. The
+//! output is slot-indexed — result `i` is always `f(&items[i])` — and
+//! every item is computed independently from shared immutable inputs, so
+//! no floating-point reduction order ever depends on the thread count:
+//! any thread budget reproduces bit-identical numbers.
+//!
+//! How the two levels share one budget without oversubscription is the
+//! thread-budget rule documented on [`crate::sim::SimBudget`] and
+//! implemented in [`crate::sim::sweep::run_sweep`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Threads a requested budget resolves to (0 ⇒ all available cores).
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Deterministic-order parallel map: spawns up to `threads` scoped OS
+/// threads that claim indices from an atomic counter; slot `i` of the
+/// output always holds `f(&items[i])`.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_init(items, threads, || (), |_, _, item| f(item))
+}
+
+/// [`parallel_map`] with per-worker scratch state: each worker thread
+/// calls `init()` once and threads the resulting value mutably through
+/// every item it claims. This is how the engines reuse one
+/// [`crate::kernel::AccessChunk`] across every chunk *and* every PE a
+/// worker processes — the zero-allocation steady state. The callback
+/// also receives the item's index (== its output slot), so callers
+/// never need to materialize an enumerated copy of their item list.
+///
+/// With an effective budget of one thread the map runs inline on the
+/// caller's thread (no spawn); results are identical either way.
+pub fn parallel_map_init<T, R, S, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n_threads = threads.clamp(1, items.len().max(1));
+    if n_threads == 1 {
+        let mut scratch = init();
+        return items.iter().enumerate().map(|(i, item)| f(&mut scratch, i, item)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&mut scratch, i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_threads_resolves_zero_to_cores() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn results_are_slot_ordered_for_any_thread_count() {
+        let items: Vec<usize> = (0..257).collect();
+        let expect: Vec<usize> = items.iter().map(|&i| i * i).collect();
+        for threads in [1, 2, 5, 64] {
+            let got = parallel_map(&items, threads, |&i| i * i);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_maps_to_empty_output() {
+        let items: Vec<u32> = Vec::new();
+        assert!(parallel_map(&items, 8, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn per_worker_scratch_and_slot_index_are_threaded_through() {
+        // each worker's scratch counts the items it processed, and the
+        // callback's index always names the output slot; single-threaded,
+        // one scratch sees everything in order
+        let items: Vec<usize> = (0..100).collect();
+        let got = parallel_map_init(
+            &items,
+            1,
+            || 0usize,
+            |seen, idx, &v| {
+                *seen += 1;
+                (idx, v, *seen)
+            },
+        );
+        for (k, &(idx, v, seen)) in got.iter().enumerate() {
+            assert_eq!(idx, k, "callback index == output slot");
+            assert_eq!(v, k);
+            assert_eq!(seen, k + 1, "one inline scratch visits items in order");
+        }
+        // multi-threaded: scratches partition the items exactly and the
+        // index still matches the item
+        let got = parallel_map_init(&items, 4, || 0usize, |seen, idx, &v| {
+            *seen += 1;
+            idx + v
+        });
+        let expect: Vec<usize> = items.iter().map(|&v| 2 * v).collect();
+        assert_eq!(got, expect);
+    }
+}

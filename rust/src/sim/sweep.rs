@@ -22,23 +22,29 @@
 //!    bottleneck or event-driven contention replay) and price the run
 //!    through Eq. 2–3.
 //!
-//! Throughput notes live in EXPERIMENTS.md §Perf. The CLI front-end is
-//! `photon-mttkrp sweep`.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+//! Parallelism composes across two levels under one thread budget (the
+//! rule documented on [`crate::sim::SimBudget`]): the sweep claims
+//! `min(threads, scenarios)` point workers and hands each simulation the
+//! left-over threads for its per-PE inner loop — a saturated grid runs
+//! points single-threaded exactly as before, while a sparse grid (or a
+//! single giant point) pushes the budget down into the engines instead
+//! of idling cores. Throughput notes live in EXPERIMENTS.md §Perf. The
+//! CLI front-end is `photon-mttkrp sweep`.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};
-use crate::kernel::KernelKind;
+use crate::kernel::{KernelKind, DEFAULT_CHUNK_NNZ};
 use crate::mem::tech::MemTechnology;
+use crate::sim::par::parallel_map;
 use crate::sim::result::ModeReport;
-use crate::sim::EngineKind;
+use crate::sim::{EngineKind, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 use crate::tensor::gen::TensorSpec;
 use crate::tensor::remap;
 use crate::util::table::{Align, Table};
+
+pub use crate::sim::par::effective_threads;
 
 /// One sweep request: the axes of the cartesian product plus execution
 /// knobs.
@@ -71,6 +77,10 @@ pub struct SweepSpec {
     /// Sparse kernel every point runs (axis-uniform like the engine);
     /// default [`KernelKind::Spmttkrp`], the paper's workload.
     pub kernel: KernelKind,
+    /// Access-stream chunk granularity handed to every simulation
+    /// ([`SimBudget::chunk_nnz`]); bit-transparent, bounds per-PE live
+    /// memory. Default [`DEFAULT_CHUNK_NNZ`].
+    pub chunk_nnz: usize,
 }
 
 impl SweepSpec {
@@ -88,6 +98,7 @@ impl SweepSpec {
             remap: true,
             engine: EngineKind::Analytic,
             kernel: KernelKind::Spmttkrp,
+            chunk_nnz: DEFAULT_CHUNK_NNZ,
         }
     }
 
@@ -108,6 +119,9 @@ impl SweepSpec {
             if !(s > 0.0 && s <= 1.0) {
                 return Err(format!("sweep scale {s} outside (0, 1]"));
             }
+        }
+        if self.chunk_nnz == 0 {
+            return Err("chunk_nnz must be positive".into());
         }
         let mut seen: Vec<&str> = Vec::new();
         for t in &self.techs {
@@ -190,48 +204,10 @@ fn modes_for(spec: &SweepSpec, arity: usize) -> Vec<usize> {
     }
 }
 
-/// Deterministic-order parallel map: spawns up to `threads` scoped OS
-/// threads that claim indices from an atomic counter; slot `i` of the
-/// output always holds `f(&items[i])`.
-fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(&T) -> R + Sync,
-{
-    let n_threads = threads.clamp(1, items.len().max(1));
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
-        .collect()
-}
-
-/// Threads a spec will actually use (0 ⇒ all available cores).
-pub fn effective_threads(requested: usize) -> usize {
-    if requested > 0 {
-        requested
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    }
-}
-
 /// Run the sweep. Returns one [`SweepPoint`] per cartesian scenario, in
 /// deterministic enumeration order (tensor-major, then scale, then tech,
-/// then mode) regardless of `spec.threads`.
+/// then mode) regardless of `spec.threads`. (The parallel-map plumbing
+/// lives in [`crate::sim::par`], shared with the engines' per-PE loops.)
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
     spec.validate()?;
     let threads = effective_threads(spec.threads);
@@ -273,6 +249,16 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
         })
         .collect();
 
+    // Thread-budget rule (see `SimBudget`): the point fan-out claims
+    // min(threads, jobs) workers; each simulation gets the left-over
+    // threads for its per-PE inner loop. Saturated grid ⇒ pe_threads = 1
+    // (identical to the pre-parallel-engine behaviour); small grid on a
+    // big machine ⇒ the spare cores sink into the PE loops instead of
+    // idling. Level products never exceed the requested budget.
+    let point_workers = threads.min(jobs.len().max(1));
+    let budget =
+        SimBudget { threads: (threads / point_workers).max(1), chunk_nnz: spec.chunk_nnz };
+
     let points = parallel_map(&jobs, threads, |&(wi, xi, mode)| {
         let wl = &workloads[wi];
         let (_, view) = wl
@@ -280,13 +266,14 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
             .iter()
             .find(|(m, _)| *m == mode)
             .expect("view prepared for every enumerated mode");
-        let report = spec.engine.simulate_kernel_mode_with_view(
+        let report = spec.engine.simulate_kernel_mode_with_view_budget(
             spec.kernel.kernel(),
             &wl.tensor,
             view,
             mode,
             &wl.cfg,
             &spec.techs[xi],
+            budget,
         );
         let energy = wl.energy.mode_energy(&report);
         SweepPoint {
@@ -453,6 +440,25 @@ mod tests {
         // and the summary table says which engine produced it
         let table = summary_table(&es, &e_points).render_ascii();
         assert!(table.contains("engine event"), "{table}");
+    }
+
+    #[test]
+    fn chunk_size_is_bit_transparent() {
+        // chunk_nnz is a host knob: any granularity reproduces the same
+        // points bit for bit, and zero is rejected up front
+        let base = run_sweep(&tiny_spec(2)).unwrap();
+        let mut s = tiny_spec(2);
+        s.chunk_nnz = 37;
+        let other = run_sweep(&s).unwrap();
+        assert_eq!(base.len(), other.len());
+        for (a, b) in base.iter().zip(&other) {
+            assert_eq!(a.runtime_cycles().to_bits(), b.runtime_cycles().to_bits());
+            assert_eq!(a.hit_rate(), b.hit_rate());
+        }
+        let mut s = tiny_spec(1);
+        s.chunk_nnz = 0;
+        let e = run_sweep(&s).unwrap_err();
+        assert!(e.contains("chunk_nnz"), "{e}");
     }
 
     #[test]

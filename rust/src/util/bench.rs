@@ -1,13 +1,17 @@
 //! Miniature benchmark harness (offline stand-in for `criterion`).
 //!
 //! `cargo bench` targets use `harness = false` and drive this module from a
-//! plain `main`. Each benchmark gets a warmup phase, a calibrated iteration
-//! count targeting a wall-time budget, and reports mean ± σ, min, and
-//! optional throughput. Results can be dumped as CSV (plotting) or JSON
-//! (the `BENCH_*.json` perf-trajectory files at the repository root).
+//! plain `main`. Each benchmark gets a warmup phase (at least one full
+//! iteration, so first-touch costs never contaminate samples), a
+//! calibrated iteration count targeting a wall-time budget, and reports
+//! **median**-of-N (the headline statistic — robust to scheduler noise, so
+//! `BENCH_*.json` files are comparable across runs), mean ± σ, min, and
+//! optional throughput (computed over the median). Results can be dumped
+//! as CSV (plotting) or JSON (the `BENCH_*.json` perf-trajectory files at
+//! the repository root).
 //!
 //! This intentionally mirrors criterion's output shape
-//! (`name   time: [mean ± σ]`) so downstream tooling/log-readers behave.
+//! (`name   time: [median ± σ]`) so downstream tooling/log-readers behave.
 
 use std::hint::black_box;
 use std::io;
@@ -24,6 +28,9 @@ pub use std::hint::black_box as bb;
 pub struct Measurement {
     pub name: String,
     pub iters: u64,
+    /// Median of the N samples — the headline statistic (robust to
+    /// scheduler/IO outliers, unlike a mean or a single shot).
+    pub median: Duration,
     pub mean: Duration,
     pub sigma: Duration,
     pub min: Duration,
@@ -32,8 +39,25 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Throughput over the **median** sample, so the number is stable
+    /// across runs on noisy machines.
     pub fn throughput_per_s(&self) -> Option<f64> {
-        self.items_per_iter.map(|it| it / self.mean.as_secs_f64())
+        self.items_per_iter.map(|it| it / self.median.as_secs_f64())
+    }
+}
+
+/// Median of a sample set (mean of the two middle samples when even).
+fn median_of(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
     }
 }
 
@@ -102,7 +126,9 @@ impl Bench {
         items: Option<f64>,
         f: &mut dyn FnMut() -> T,
     ) -> &Measurement {
-        // Warmup + single-iteration cost estimate.
+        // Warmup (always ≥ 1 full iteration — caches, allocator pools and
+        // lazy statics are primed before any timed sample) + a
+        // single-iteration cost estimate.
         let warm_start = Instant::now();
         let mut warm_iters = 0u64;
         while warm_start.elapsed() < self.warmup || warm_iters < 1 {
@@ -119,23 +145,22 @@ impl Bench {
             .unwrap_or(u128::from(self.min_iters)) as u64;
         let iters = target.clamp(self.min_iters, 1_000_000);
 
-        let mut samples = Summary::new();
-        let mut min = Duration::MAX;
+        // one sample buffer, all statistics derived from it at the end —
+        // no parallel accumulators to drift apart
+        let mut raw = Vec::with_capacity(iters as usize);
         for _ in 0..iters {
             let t0 = Instant::now();
             black_box(f());
-            let dt = t0.elapsed();
-            samples.push(dt.as_secs_f64());
-            if dt < min {
-                min = dt;
-            }
+            raw.push(t0.elapsed().as_secs_f64());
         }
+        let samples = Summary::from_slice(&raw);
         let m = Measurement {
             name: self.full_name(name),
             iters,
+            median: Duration::from_secs_f64(median_of(&raw)),
             mean: Duration::from_secs_f64(samples.mean()),
             sigma: Duration::from_secs_f64(samples.std()),
-            min,
+            min: Duration::from_secs_f64(samples.min()),
             items_per_iter: items,
         };
         print_measurement(&m);
@@ -156,12 +181,13 @@ impl Bench {
 
     /// Render all measurements as a table.
     pub fn summary_table(&self) -> Table {
-        let cols = ["name", "iters", "mean", "sigma", "min", "throughput"];
+        let cols = ["name", "iters", "median", "mean", "sigma", "min", "throughput"];
         let mut t = Table::new("bench summary", &cols).align(0, crate::util::table::Align::Left);
         for m in &self.results {
             t.row(vec![
                 m.name.clone(),
                 m.iters.to_string(),
+                fmt_dur(m.median),
                 fmt_dur(m.mean),
                 fmt_dur(m.sigma),
                 fmt_dur(m.min),
@@ -174,13 +200,15 @@ impl Bench {
     /// Write CSV of all measurements to `path`, creating parent
     /// directories as needed.
     pub fn write_csv(&self, path: &Path) -> io::Result<()> {
-        let cols = ["name", "iters", "mean_s", "sigma_s", "min_s", "throughput_per_s"];
+        let cols =
+            ["name", "iters", "mean_s", "median_s", "sigma_s", "min_s", "throughput_per_s"];
         let mut t = Table::new("", &cols);
         for m in &self.results {
             t.row(vec![
                 m.name.clone(),
                 m.iters.to_string(),
                 format!("{:.9}", m.mean.as_secs_f64()),
+                format!("{:.9}", m.median.as_secs_f64()),
                 format!("{:.9}", m.sigma.as_secs_f64()),
                 format!("{:.9}", m.min.as_secs_f64()),
                 m.throughput_per_s().map(|t| format!("{t:.3}")).unwrap_or_default(),
@@ -198,10 +226,12 @@ impl Bench {
     ///
     /// ```json
     /// { "benchmarks": [ { "name": "...", "iters": 7, "mean_s": 0.1,
-    ///   "sigma_s": 0.01, "min_s": 0.09, "throughput_per_s": 123.0 } ] }
+    ///   "median_s": 0.1, "sigma_s": 0.01, "min_s": 0.09,
+    ///   "throughput_per_s": 123.0 } ] }
     /// ```
     ///
-    /// `throughput_per_s` is `null` for benches without an item count.
+    /// `throughput_per_s` is `null` for benches without an item count and
+    /// is computed over `median_s`, the run-to-run-comparable statistic.
     /// Hand-rolled writer (the build is offline, no serde): numbers via
     /// `{:e}` so round-tripping loses nothing, names JSON-escaped.
     pub fn write_json(&self, path: &Path) -> io::Result<()> {
@@ -212,10 +242,12 @@ impl Bench {
             }
             out.push_str(&format!(
                 "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
-                 \"sigma_s\": {:e}, \"min_s\": {:e}, \"throughput_per_s\": {}}}",
+                 \"median_s\": {:e}, \"sigma_s\": {:e}, \"min_s\": {:e}, \
+                 \"throughput_per_s\": {}}}",
                 json_escape(&m.name),
                 m.iters,
                 m.mean.as_secs_f64(),
+                m.median.as_secs_f64(),
                 m.sigma.as_secs_f64(),
                 m.min.as_secs_f64(),
                 m.throughput_per_s().map(|t| format!("{t:e}")).unwrap_or_else(|| "null".into()),
@@ -266,7 +298,7 @@ fn print_measurement(m: &Measurement) {
     println!(
         "{:<44} time: [{} ± {}] min {} ({} iters){}",
         m.name,
-        fmt_dur(m.mean),
+        fmt_dur(m.median),
         fmt_dur(m.sigma),
         fmt_dur(m.min),
         m.iters,
@@ -290,7 +322,20 @@ mod tests {
             acc
         });
         assert!(m.mean.as_nanos() > 0);
+        assert!(m.median.as_nanos() > 0);
+        // the median of N samples can never undercut the fastest sample
+        assert!(m.median >= m.min);
         assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn median_is_the_middle_sample() {
+        assert_eq!(median_of(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_of(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median_of(&[7.0]), 7.0);
+        assert_eq!(median_of(&[]), 0.0);
+        // robust to one wild outlier — the property the bench JSONs need
+        assert_eq!(median_of(&[1.0, 1.0, 1.0, 1.0, 500.0]), 1.0);
     }
 
     #[test]
@@ -315,7 +360,7 @@ mod tests {
             b.write_csv(&dir).unwrap();
             std::fs::read_to_string(&dir).unwrap()
         };
-        assert!(csv.starts_with("name,iters,mean_s"));
+        assert!(csv.starts_with("name,iters,mean_s,median_s"));
         assert!(csv.contains("g/a"));
     }
 
@@ -334,6 +379,7 @@ mod tests {
         assert!(json.contains("\"name\": \"g/with\\\"quote\""), "{json}");
         assert!(json.contains("\"throughput_per_s\": null"), "{json}");
         assert!(json.contains("\"mean_s\": "), "{json}");
+        assert!(json.contains("\"median_s\": "), "{json}");
         // balanced structure: one object per measurement
         assert_eq!(json.matches("{\"name\"").count(), 2);
         assert!(json.trim_end().ends_with('}'), "{json}");

@@ -68,6 +68,37 @@ fn unknown_tensor_fails_cleanly() {
 }
 
 #[test]
+fn simulate_accepts_the_host_execution_knobs() {
+    // --threads / --chunk-nnz are bit-transparent: both runs must print
+    // the identical per-mode line
+    let args = |threads: &str, chunk: &str| {
+        let out = bin()
+            .args([
+                "simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "e-sram",
+                "--mode", "0", "--threads", threads, "--chunk-nnz", chunk,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let single = args("1", "65536");
+    let parallel = args("0", "777");
+    assert!(single.contains("M0 [e-sram]"), "{single}");
+    assert_eq!(single, parallel, "host knobs changed the report");
+}
+
+#[test]
+fn simulate_rejects_a_zero_chunk() {
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--chunk-nnz", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("chunk-nnz"));
+}
+
+#[test]
 fn cpals_reference_path_converges() {
     let out = bin()
         .args(["cpals", "--rank", "8", "--iters", "4", "--nnz", "3000", "--dim", "16"])
@@ -312,6 +343,20 @@ fn sweep_runs_a_three_by_three_grid_in_parallel() {
     }
     let meta = String::from_utf8_lossy(&out.stderr);
     assert!(meta.contains("on 4 threads"), "{meta}");
+}
+
+#[test]
+fn sweep_accepts_a_chunk_granularity() {
+    let out = bin()
+        .args([
+            "sweep", "--tensor", "nell-2", "--tech", "o-sram", "--scale", "0.0001",
+            "--chunk-nnz", "128",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sweep: 3 points"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,143 @@
+//! Determinism under host parallelism: the per-PE thread budget and the
+//! access-stream chunk size are *host* knobs — they may change how fast
+//! the simulator runs, never a single bit of what it reports. Both
+//! engines are pinned bit-identical (every `f64` via `to_bits`) across
+//! `threads ∈ {1, 2, available_parallelism}` on every FROSTT preset,
+//! which is what lets `simulate` default to all cores without perturbing
+//! any paper number.
+
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::sim::result::PeReport;
+
+const SCALE: f64 = 1.0 / 262_144.0;
+
+/// Every report field, bit-folded, so a single assert covers the whole
+/// cross-engine contract surface (busy cycles, stall, traffic, cache
+/// stats, active words).
+fn fold_pe(p: &PeReport) -> Vec<u64> {
+    let mut out = vec![
+        p.pe as u64,
+        p.nnz,
+        p.slices,
+        p.dram_cycles.to_bits(),
+        p.psum_cycles.to_bits(),
+        p.pipeline_cycles.to_bits(),
+        p.stream_dma_cycles.to_bits(),
+        p.element_dma_cycles.to_bits(),
+        p.latency_overhead_cycles.to_bits(),
+        p.stall_cycles.to_bits(),
+        p.cache_stats.hits,
+        p.cache_stats.misses,
+        p.dram_stream_bytes,
+        p.dram_random_bytes,
+        p.dram_random_accesses,
+        p.cache_words,
+        p.psum_words,
+        p.dma_words,
+    ];
+    out.extend(p.cache_cycles.iter().map(|c| c.to_bits()));
+    out
+}
+
+fn fold_mode(r: &ModeReport) -> Vec<Vec<u64>> {
+    r.pes.iter().map(fold_pe).collect()
+}
+
+#[test]
+fn both_engines_are_bit_identical_across_thread_counts_on_every_preset() {
+    let cfg = AcceleratorConfig::paper_default().scaled(SCALE);
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let kernel = KernelKind::Spmttkrp.kernel();
+    for ft in FrosttTensor::ALL {
+        let tensor = frostt::preset(ft).scaled(SCALE).generate(3);
+        for kind in EngineKind::ALL {
+            let base = kind.simulate_kernel_mode_budget(
+                kernel,
+                &tensor,
+                0,
+                &cfg,
+                &tech("o-sram"),
+                SimBudget::single_threaded(),
+            );
+            for threads in [2, avail] {
+                let r = kind.simulate_kernel_mode_budget(
+                    kernel,
+                    &tensor,
+                    0,
+                    &cfg,
+                    &tech("o-sram"),
+                    SimBudget::with_threads(threads),
+                );
+                assert_eq!(
+                    base.runtime_cycles().to_bits(),
+                    r.runtime_cycles().to_bits(),
+                    "{} on {kind} at {threads} threads",
+                    tensor.name
+                );
+                assert_eq!(
+                    fold_mode(&base),
+                    fold_mode(&r),
+                    "{} on {kind} at {threads} threads",
+                    tensor.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_size_is_bit_transparent_on_both_engines() {
+    let cfg = AcceleratorConfig::paper_default().scaled(SCALE);
+    let tensor = frostt::preset(FrosttTensor::Nell2).scaled(SCALE).generate(3);
+    let kernel = KernelKind::Spmttkrp.kernel();
+    for kind in EngineKind::ALL {
+        let base = kind.simulate_kernel_mode_budget(
+            kernel,
+            &tensor,
+            0,
+            &cfg,
+            &tech("e-sram"),
+            SimBudget::single_threaded(),
+        );
+        for chunk_nnz in [1usize, 13, 4_096, usize::MAX / 2] {
+            let r = kind.simulate_kernel_mode_budget(
+                kernel,
+                &tensor,
+                0,
+                &cfg,
+                &tech("e-sram"),
+                SimBudget { threads: 2, chunk_nnz },
+            );
+            assert_eq!(fold_mode(&base), fold_mode(&r), "{kind} at chunk {chunk_nnz}");
+        }
+    }
+}
+
+#[test]
+fn sweep_budget_composition_is_bit_identical_to_singlethreaded() {
+    // the thread-budget rule (sweep workers × PE threads) must be as
+    // bit-transparent as each level alone — a one-point sweep pushes the
+    // whole budget into the PE loop and still reproduces threads=1
+    let mut base = SweepSpec::new(
+        vec![frostt::preset(FrosttTensor::Nell2).scaled(SCALE)],
+        vec![1.0],
+        vec![tech("e-sram"), tech("o-sram")],
+    );
+    base.threads = 1;
+    let ref_points = run_sweep(&base).unwrap();
+    for threads in [0usize, 3, 16] {
+        let mut s = base.clone();
+        s.threads = threads;
+        let points = run_sweep(&s).unwrap();
+        assert_eq!(ref_points.len(), points.len());
+        for (a, b) in ref_points.iter().zip(&points) {
+            assert_eq!(
+                a.runtime_cycles().to_bits(),
+                b.runtime_cycles().to_bits(),
+                "threads={threads} point {}",
+                a.index
+            );
+            assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+        }
+    }
+}
