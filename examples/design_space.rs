@@ -10,7 +10,12 @@
 //!    §IV-A type-3 bypass routing;
 //! 4. open the *workload* axis: run every builtin sparse kernel
 //!    (spMTTKRP / Tucker TTMc / SpMM) through the identical engines and
-//!    compare where each one bottlenecks.
+//!    compare where each one bottlenecks;
+//! 5. stop replaying points and *search*: a `DesignSpace` over
+//!    {PE count × cache capacity} × every registered technology, screened
+//!    on the analytic engine, Pareto-reduced over (runtime, energy,
+//!    area), event-confirmed, ranked by EDP — with a warm evaluation
+//!    cache demonstrating cross-search reuse.
 //!
 //! ```bash
 //! cargo run --release --example design_space
@@ -151,6 +156,45 @@ fn main() {
     tspec.kernel = KernelKind::Spttm;
     let tpoints = run_sweep(&tspec).expect("ttm sweep");
     println!("{}", summary_table(&tspec, &tpoints).render_ascii());
+
+    // --- 5. explore: Pareto-frontier search over the design space ---
+    // The sweep above asks "how do these technologies compare at one
+    // design point?"; explore asks "which design points are worth
+    // building at all?". Screen the grid on the analytic engine, keep
+    // the (runtime, energy, area) Pareto frontier, confirm it on the
+    // event engine, rank by EDP.
+    let mut space = DesignSpace::paper_grid(registry::all(), vec![KernelKind::Spmttkrp]);
+    space.axes = vec![
+        Axis::parse("n_pes=2,4,8").expect("axis"),
+        Axis::parse("cache_lines=4096,8192").expect("axis"),
+    ];
+    let mut espec = ExploreSpec::new(space, frostt::preset(FrosttTensor::Nell2));
+    espec.scale = scale;
+    let cache = EvalCache::new();
+    let t0 = std::time::Instant::now();
+    let res = run_explore_with_cache(&espec, &cache).expect("explore");
+    println!(
+        "screened {} candidates in {:.2}s ({} on the frontier, {} cache misses)",
+        res.candidates.len(),
+        t0.elapsed().as_secs_f64(),
+        res.frontier.len(),
+        res.cache_misses,
+    );
+    println!("{}", frontier_table(&res, 0).render_ascii());
+    for d in &res.deltas {
+        println!("{}", d.describe());
+    }
+    // re-rank the same grid by runtime: the warm cache answers from
+    // memory — zero new simulations
+    espec.objective = ObjectiveKind::Runtime;
+    let res2 = run_explore_with_cache(&espec, &cache).expect("explore");
+    println!(
+        "re-ranked by runtime from the warm cache: {} hits, {} misses; fastest = {} on {}",
+        res2.cache_hits,
+        res2.cache_misses,
+        res2.frontier[0].candidate.label(),
+        res2.frontier[0].candidate.tech.name,
+    );
 
     // --- 3d. §IV-A type-3 bypass routing, on a cache-hostile tensor ---
     let cold = frostt::preset(FrosttTensor::Nell1).scaled(scale / 8.0).generate(42);

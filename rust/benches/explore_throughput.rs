@@ -1,0 +1,91 @@
+//! Explore-subsystem throughput: candidates/second of the two-phase
+//! Pareto search, cold vs warm evaluation cache.
+//!
+//! A "candidate" is one (config × tech × kernel) point: the cold number
+//! prices a full analytic all-modes simulation per candidate (plus the
+//! event confirmation of the frontier survivors); the warm number prices
+//! the same search answered entirely from the content-keyed
+//! [`photon_mttkrp::explore::EvalCache`] — the cross-search reuse path
+//! (`design_space` example §5). The warm/cold ratio is the headline:
+//! how much a refined search over an overlapping grid costs.
+//!
+//! Writes `BENCH_explore.json` at the repository root (the CI
+//! `explore-smoke` job exercises the CLI path instead; this bench is the
+//! library-path perf trajectory).
+
+mod common;
+
+use photon_mttkrp::explore::{run_explore_with_cache, Axis, DesignSpace, EvalCache, ExploreSpec};
+use photon_mttkrp::kernel::KernelKind;
+use photon_mttkrp::mem::registry::tech;
+use photon_mttkrp::tensor::gen::TensorSpec;
+use photon_mttkrp::util::bench::Bench;
+
+fn spec(threads: usize, smoke: bool) -> ExploreSpec {
+    let mut space = DesignSpace::paper_grid(
+        vec![tech("e-sram"), tech("o-sram")],
+        vec![KernelKind::Spmttkrp, KernelKind::Spmm],
+    );
+    space.axes = vec![
+        Axis::parse("n_pes=2,4").expect("axis"),
+        Axis::parse("cache_lines=2048,4096").expect("axis"),
+    ];
+    let nnz = if smoke { 4_000 } else { 40_000 };
+    let mut s = ExploreSpec::new(space, TensorSpec::custom("hot", vec![300, 300, 300], nnz, 1.1));
+    s.threads = threads;
+    s
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let smoke = std::env::var("PHOTON_BENCH_SMOKE").ok().as_deref() == Some("1");
+    // smoke runs shrink the workload 10x: distinct group name so a smoke
+    // artifact can never be compared against the full trajectory
+    let group = if smoke { "explore_throughput_smoke" } else { "explore_throughput" };
+    b.group(group);
+
+    for (tag, threads) in [("t1", 1usize), ("tall", 0usize)] {
+        let s = spec(threads, smoke);
+        let n_candidates = s.space.n_points() as f64;
+
+        // cold: every iteration pays the full screen + confirmation
+        b.bench_items(&format!("cold/{tag}"), n_candidates, || {
+            let cache = EvalCache::new();
+            run_explore_with_cache(&s, &cache).expect("explore").frontier.len()
+        });
+
+        // warm: one shared cache primed outside the timed region — the
+        // search is pure lookup + frontier extraction
+        let cache = EvalCache::new();
+        run_explore_with_cache(&s, &cache).expect("prime");
+        b.bench_items(&format!("warm/{tag}"), n_candidates, || {
+            let r = run_explore_with_cache(&s, &cache).expect("explore");
+            assert_eq!(r.cache_misses, 0, "warm run must be all hits");
+            r.frontier.len()
+        });
+    }
+
+    // headline ratio: warm vs cold at the default thread budget
+    let per_s = |name: &str| {
+        b.results()
+            .iter()
+            .find(|m| m.name == format!("{group}/{name}"))
+            .and_then(|m| m.throughput_per_s())
+            .unwrap_or(f64::NAN)
+    };
+    let (cold, warm) = (per_s("cold/tall"), per_s("warm/tall"));
+    println!(
+        "## explore: {cold:.3e} candidates/s cold, {warm:.3e} candidates/s warm \
+         ({:.1}x cache speedup)",
+        warm / cold
+    );
+
+    println!("\n{}", b.summary_table().render_ascii());
+    // perf trajectory at the repository root, like BENCH_sim_throughput
+    // (CARGO_MANIFEST_DIR is rust/, one level below it)
+    let json = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_explore.json");
+    match b.write_json(&json) {
+        Ok(()) => eprintln!("wrote {}", json.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", json.display()),
+    }
+}

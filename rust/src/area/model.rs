@@ -11,12 +11,19 @@
 //! paper's printed value as `PAPER_ESRAM_TOTAL_MM2` for comparison output.
 
 use crate::accel::config::AcceleratorConfig;
+use crate::accel::design::OnChipBudget;
 use crate::mem::registry;
 use crate::mem::tech::MemTechnology;
 
 /// PE-array area at 12 nm (Table IV, identical for both systems — the
-/// compute mesh is CMOS either way).
+/// compute mesh is CMOS either way). This is the area of the Table I
+/// array of [`PE_AREA_COUNT`] PEs; per-PE pricing divides by it.
 pub const PE_AREA_MM2: f64 = 202.2;
+/// PE count the Table IV [`PE_AREA_MM2`] figure corresponds to.
+pub const PE_AREA_COUNT: usize = 4;
+/// Single-reticle limit, mm² (~26 × 33 mm) — the §II wafer-scale
+/// feasibility line.
+pub const RETICLE_MM2: f64 = 858.0;
 /// The paper's printed E-SRAM total (see module docs on the 0.7% gap).
 pub const PAPER_ESRAM_TOTAL_MM2: f64 = 247.2;
 /// The paper's printed O-SRAM on-chip-memory and total area.
@@ -61,6 +68,23 @@ impl AreaModel {
         Ok(self.platform(&registry::resolve(name)?))
     }
 
+    /// Area of the **instantiated design**, not the whole 54 MB platform:
+    /// the on-chip bits [`OnChipBudget`] counts (caches + tags + psum +
+    /// DMA buffers, which scale with the PE count and the cache/rank
+    /// knobs) priced per-bit in `tech`, plus the PE array scaled to the
+    /// config's PE count from the Table IV [`PE_AREA_MM2`] /
+    /// [`PE_AREA_COUNT`] figure. This is the area objective (and the
+    /// `--budget-mm2` constraint) of the explore subsystem — unlike
+    /// [`Self::platform`], it responds to every design knob a search
+    /// sweeps.
+    pub fn design(&self, tech: &MemTechnology) -> AreaBreakdown {
+        let bits = OnChipBudget::from_config(&self.cfg).total_bits();
+        AreaBreakdown {
+            onchip_mem_mm2: tech.area_mm2(bits),
+            pe_mm2: PE_AREA_MM2 * self.cfg.n_pes as f64 / PE_AREA_COUNT as f64,
+        }
+    }
+
     /// `tech` : `base` total-area ratio (e.g. the wafer-scale penalty of
     /// §V-D with the o-sram/e-sram pair).
     pub fn penalty_over(&self, tech: &MemTechnology, base: &MemTechnology) -> f64 {
@@ -72,10 +96,10 @@ impl AreaModel {
         self.penalty_over(&registry::tech("o-sram"), &registry::tech("e-sram"))
     }
 
-    /// Does the O-SRAM system exceed a single reticle (~858 mm²)? It must —
-    /// that is the wafer-scale argument of §II.
+    /// Does the O-SRAM system exceed a single reticle ([`RETICLE_MM2`])?
+    /// It must — that is the wafer-scale argument of §II.
     pub fn requires_wafer_scale(&self) -> bool {
-        self.platform(&registry::tech("o-sram")).total_mm2() > 858.0
+        self.platform(&registry::tech("o-sram")).total_mm2() > RETICLE_MM2
     }
 }
 
@@ -112,6 +136,30 @@ mod tests {
         assert!(m.requires_wafer_scale());
         let penalty = m.area_penalty();
         assert!(penalty > 1e3, "area penalty {penalty} should be >3 orders");
+    }
+
+    #[test]
+    fn design_area_responds_to_the_explore_knobs() {
+        let base = model();
+        let d_e = base.design(&tech("e-sram"));
+        let d_o = base.design(&tech("o-sram"));
+        // the design instantiates a few MB, far below the 54 MB platform
+        assert!(d_e.onchip_mem_mm2 < base.platform(&tech("e-sram")).onchip_mem_mm2);
+        assert!(d_o.onchip_mem_mm2 < base.platform(&tech("o-sram")).onchip_mem_mm2);
+        // a Table-I e-sram design fits a reticle; the o-sram one cannot
+        assert!(d_e.total_mm2() < RETICLE_MM2);
+        assert!(d_o.total_mm2() > RETICLE_MM2);
+        // PE area scales with the PE count, memory with the cache knobs
+        let mut cfg = AcceleratorConfig::paper_default();
+        cfg.n_pes = 8;
+        let d8 = AreaModel::new(&cfg).design(&tech("e-sram"));
+        assert!((d8.pe_mm2 - 2.0 * PE_AREA_MM2).abs() < 1e-9);
+        assert!(d8.onchip_mem_mm2 > d_e.onchip_mem_mm2);
+        let mut cfg = AcceleratorConfig::paper_default();
+        cfg.cache_lines = 8192;
+        let big = AreaModel::new(&cfg).design(&tech("e-sram"));
+        assert_eq!(big.pe_mm2, d_e.pe_mm2);
+        assert!(big.onchip_mem_mm2 > d_e.onchip_mem_mm2);
     }
 
     #[test]

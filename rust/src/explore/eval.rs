@@ -1,0 +1,282 @@
+//! The multi-objective candidate evaluator and its memoizing cache.
+//!
+//! One evaluation = one full all-modes simulation of the candidate's
+//! kernel on the candidate's configuration × technology, priced through
+//! Eq. 2–3 — exactly the driver path
+//! ([`crate::coordinator::driver::compare_technologies_with_budget`]),
+//! bit for bit, because it runs through the same
+//! [`crate::sim::SimEngine::simulate_kernel_all_modes_with_views_budget`]
+//! entry point over the same memoized [`ModeView`]s. The views are built
+//! once per workload and shared by **every** candidate × engine
+//! evaluation (a candidate changes the accelerator, never the tensor).
+//!
+//! The [`EvalCache`] memoizes objective vectors under a **content key**:
+//! the full `Debug` rendering of the configuration and the resolved
+//! technology (shortest-roundtrip floats — injective per value, and new
+//! fields join the key automatically) plus the kernel, engine and
+//! workload tags. Overlapping candidates across searches — the same
+//! (config, tech, kernel, engine, workload) reached from different axis
+//! grammars, or a re-run with a warm cache — are therefore computed
+//! once. Host-execution knobs ([`SimBudget`]) are deliberately *not* part
+//! of the key: they are bit-transparent (pinned by
+//! `rust/tests/parallel_determinism.rs`), so a hit and a miss return
+//! bit-identical vectors by construction (pinned by
+//! `rust/tests/explore.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::energy::model::EnergyModel;
+use crate::explore::objective::Objectives;
+use crate::explore::space::Candidate;
+use crate::sim::{EngineKind, SimBudget};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Memoized objective vectors, shareable across searches (and across the
+/// worker threads of one search). Interior-mutable so a `&EvalCache` can
+/// be handed to every evaluation job.
+#[derive(Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<String, Objectives>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct evaluations currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to compute.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Return the memoized vector for `key`, or compute, memoize and
+    /// return it. The lock is **not** held across `compute` (a simulation
+    /// may take milliseconds), so two workers racing on the same fresh
+    /// key may both compute it — the results are bit-identical (that is
+    /// the cache's correctness contract), the counters are merely
+    /// approximate under such races, and last-insert wins harmlessly.
+    pub fn get_or_compute(&self, key: &str, compute: impl FnOnce() -> Objectives) -> Objectives {
+        if let Some(v) = self.map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        let v = compute();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key.to_string(), v);
+        v
+    }
+}
+
+/// The content key of one (candidate, engine, workload) evaluation.
+pub fn candidate_key(cand: &Candidate, engine: EngineKind, workload_tag: &str) -> String {
+    format!(
+        "{:?}|{:?}|{}|{}|{workload_tag}",
+        cand.cfg,
+        cand.tech,
+        cand.kernel.name(),
+        engine.name()
+    )
+}
+
+/// One prepared workload the whole search evaluates against: the
+/// (already remapped) tensor, its memoized per-mode views, and the
+/// identity tag that scopes cache keys to this workload.
+pub struct Evaluator<'a> {
+    /// The remapped tensor (see
+    /// [`crate::coordinator::driver::apply_memory_mapping`]).
+    pub tensor: &'a SparseTensor,
+    /// `(mode, view)` for every output mode, built once and shared by
+    /// every candidate × engine evaluation.
+    pub views: &'a [(usize, ModeView)],
+    /// Workload identity for cache keys: tensor name (which embeds the
+    /// scale), nnz, generator seed and remap switch.
+    pub workload_tag: String,
+    /// Host-execution budget (bit-transparent; excluded from keys).
+    pub budget: SimBudget,
+}
+
+impl Evaluator<'_> {
+    /// Build the workload tag for cache keys: name, dims, nnz, seed and
+    /// remap switch plus an FNV-1a fingerprint of the coordinate and
+    /// value streams — so two workloads that merely *look* alike (same
+    /// name/nnz/seed from a different shape or locality profile) can
+    /// never alias in a shared cache. O(nnz) once per search, amortized
+    /// over every candidate × engine evaluation.
+    pub fn tag(tensor: &SparseTensor, seed: u64, remap: bool) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x1_0000_0001_b3);
+        };
+        for col in &tensor.indices {
+            for &i in col {
+                mix(i as u64);
+            }
+        }
+        for &v in &tensor.values {
+            mix(v.to_bits() as u64);
+        }
+        format!(
+            "{}#dims{:?}#nnz{}#seed{seed}#remap{remap}#fp{h:016x}",
+            tensor.name,
+            tensor.dims,
+            tensor.nnz()
+        )
+    }
+
+    /// Evaluate `cand` on `engine`, through `cache`.
+    pub fn evaluate(&self, cand: &Candidate, engine: EngineKind, cache: &EvalCache) -> Objectives {
+        let key = candidate_key(cand, engine, &self.workload_tag);
+        cache.get_or_compute(&key, || {
+            let report = engine.simulate_kernel_all_modes_with_views_budget(
+                cand.kernel.kernel(),
+                self.tensor,
+                self.views,
+                &cand.cfg,
+                &cand.tech,
+                self.budget,
+            );
+            let energy = EnergyModel::new(&cand.cfg).run_energy(&report);
+            Objectives {
+                runtime_s: report.total_runtime_s(),
+                energy_j: energy.total_j(),
+                area_mm2: cand.area_mm2,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::config::AcceleratorConfig;
+    use crate::coordinator::driver::apply_memory_mapping;
+    use crate::kernel::KernelKind;
+    use crate::mem::registry::tech;
+    use crate::tensor::gen::TensorSpec;
+
+    fn candidate(tech_name: &str) -> Candidate {
+        let cfg = AcceleratorConfig::paper_default();
+        Candidate {
+            index: 0,
+            settings: Vec::new(),
+            cfg: cfg.clone(),
+            tech: tech(tech_name),
+            kernel: KernelKind::Spmttkrp,
+            area_mm2: crate::area::model::AreaModel::new(&cfg)
+                .design(&tech(tech_name))
+                .total_mm2(),
+        }
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cache = EvalCache::new();
+        assert!(cache.is_empty());
+        let o = Objectives { runtime_s: 1.0, energy_j: 2.0, area_mm2: 3.0 };
+        let a = cache.get_or_compute("k", || o);
+        let b = cache.get_or_compute("k", || panic!("must be a hit"));
+        assert_eq!(a, b);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn keys_separate_every_axis_of_identity() {
+        let base = candidate("o-sram");
+        let tag = "t#nnz10#seed1#remaptrue";
+        let k0 = candidate_key(&base, EngineKind::Analytic, tag);
+        // engine
+        assert_ne!(k0, candidate_key(&base, EngineKind::Event, tag));
+        // workload
+        assert_ne!(k0, candidate_key(&base, EngineKind::Analytic, "t#nnz11#seed1#remaptrue"));
+        // technology
+        assert_ne!(k0, candidate_key(&candidate("e-sram"), EngineKind::Analytic, tag));
+        // kernel
+        let mut k = base.clone();
+        k.kernel = KernelKind::Spttm;
+        assert_ne!(k0, candidate_key(&k, EngineKind::Analytic, tag));
+        // any config field — including ones no Knob names (the Debug
+        // rendering keys the whole struct)
+        let mut c = base.clone();
+        c.cfg.compute_power_w += 0.1;
+        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag));
+        let mut c = base.clone();
+        c.cfg.n_pipelines = 40;
+        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag));
+    }
+
+    #[test]
+    fn workload_tags_never_alias_lookalike_tensors() {
+        // same name, nnz and seed — different shape or locality profile
+        // must still produce distinct tags (the shared-cache contract)
+        let a = TensorSpec::custom("grid", vec![64, 64, 64], 3_000, 0.9).generate(7);
+        let b = TensorSpec::custom("grid", vec![256, 256, 256], 3_000, 0.9).generate(7);
+        let c = TensorSpec::custom("grid", vec![64, 64, 64], 3_000, 0.2).generate(7);
+        let ta = Evaluator::tag(&a, 7, true);
+        assert_ne!(ta, Evaluator::tag(&b, 7, true), "dims must be part of the tag");
+        assert_ne!(ta, Evaluator::tag(&c, 7, true), "content must be part of the tag");
+        assert_ne!(ta, Evaluator::tag(&a, 8, true));
+        assert_ne!(ta, Evaluator::tag(&a, 7, false));
+        // deterministic: the same workload always tags identically
+        assert_eq!(ta, Evaluator::tag(&a, 7, true));
+    }
+
+    #[test]
+    fn evaluation_runs_the_driver_path_over_shared_views() {
+        let tensor = TensorSpec::custom("ev", vec![60, 60, 60], 4_000, 0.8).generate(3);
+        let mapped = apply_memory_mapping(&tensor);
+        let views: Vec<(usize, ModeView)> =
+            (0..mapped.n_modes()).map(|m| (m, ModeView::build(&mapped, m))).collect();
+        let ev = Evaluator {
+            tensor: &mapped,
+            views: &views,
+            workload_tag: Evaluator::tag(&mapped, 3, true),
+            budget: SimBudget::single_threaded(),
+        };
+        let cand = candidate("o-sram");
+        let cache = EvalCache::new();
+        let got = ev.evaluate(&cand, EngineKind::Analytic, &cache);
+        // the classic driver path must agree bit for bit
+        let c = crate::coordinator::driver::compare_technologies_with_budget(
+            &tensor,
+            &cand.cfg,
+            &[tech("o-sram")],
+            EngineKind::Analytic,
+            KernelKind::Spmttkrp,
+            SimBudget::single_threaded(),
+        );
+        let run = c.baseline();
+        assert_eq!(got.runtime_s.to_bits(), run.report.total_runtime_s().to_bits());
+        assert_eq!(got.energy_j.to_bits(), run.energy.total_j().to_bits());
+        assert_eq!(got.area_mm2, cand.area_mm2);
+        // second evaluation is a hit and bit-identical
+        let again = ev.evaluate(&cand, EngineKind::Analytic, &cache);
+        assert_eq!(got.runtime_s.to_bits(), again.runtime_s.to_bits());
+        assert_eq!(cache.hits(), 1);
+        // the event evaluation keys separately and can only be slower
+        let event = ev.evaluate(&cand, EngineKind::Event, &cache);
+        assert_eq!(cache.len(), 2);
+        assert!(event.runtime_s >= got.runtime_s);
+        assert!(event.energy_j >= got.energy_j);
+        assert_eq!(event.area_mm2, got.area_mm2);
+    }
+}

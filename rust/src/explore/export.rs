@@ -1,0 +1,166 @@
+//! Frontier JSON export — the machine-readable counterpart of
+//! [`crate::explore::search::frontier_table`], written by
+//! `photon-mttkrp explore --json FILE` and uploaded as a CI artifact by
+//! the `explore-smoke` workflow step.
+//!
+//! Shape (stable — downstream tooling accumulates against it):
+//!
+//! ```json
+//! {
+//!   "objective": "edp",
+//!   "tensor": "nell-2@1e-4",
+//!   "nnz": 7690,
+//!   "candidates_screened": 12,
+//!   "invalid": 0,
+//!   "filtered": 0,
+//!   "frontier": [
+//!     { "rank": 0, "configuration": "n_pes=4,cache_lines=4096",
+//!       "tech": "o-sram", "kernel": "spmttkrp",
+//!       "analytic": {"runtime_s": 1e-3, "energy_j": 2e-3,
+//!                    "edp": 2e-6, "area_mm2": 9.6e4},
+//!       "event": {"runtime_s": 1.1e-3, "energy_j": 2.1e-3,
+//!                 "edp": 2.3e-6, "area_mm2": 9.6e4},
+//!       "event_rank": 0, "event_dominated": false }
+//!   ],
+//!   "deltas": [
+//!     { "configuration": "...", "tech": "...", "kernel": "...",
+//!       "analytic_rank": 0, "event_rank": 1, "event_dominated": false,
+//!       "analytic_value": 1e-6, "event_value": 1.4e-6 }
+//!   ]
+//! }
+//! ```
+//!
+//! Hand-rolled writer (the build is offline, no serde): numbers via
+//! `{:e}` so round-tripping loses nothing, strings escaped through
+//! [`json_escape`].
+
+use std::io;
+use std::path::Path;
+
+use crate::explore::objective::Objectives;
+use crate::explore::search::ExploreResult;
+use crate::util::bench::json_escape;
+
+fn objectives_json(o: &Objectives) -> String {
+    format!(
+        "{{\"runtime_s\": {:e}, \"energy_j\": {:e}, \"edp\": {:e}, \"area_mm2\": {:e}}}",
+        o.runtime_s,
+        o.energy_j,
+        o.edp(),
+        o.area_mm2
+    )
+}
+
+/// Serialize the search result (see the module docs for the shape).
+pub fn frontier_json(result: &ExploreResult) -> String {
+    let mut out = format!(
+        "{{\n  \"objective\": \"{}\",\n  \"tensor\": \"{}\",\n  \"nnz\": {},\n  \
+         \"candidates_screened\": {},\n  \"invalid\": {},\n  \"filtered\": {},\n  \
+         \"frontier\": [",
+        json_escape(result.objective.name()),
+        json_escape(&result.tensor),
+        result.nnz,
+        result.candidates.len(),
+        result.n_invalid,
+        result.n_filtered,
+    );
+    for (i, p) in result.frontier.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rank\": {}, \"configuration\": \"{}\", \"tech\": \"{}\", \
+             \"kernel\": \"{}\", \"analytic\": {}, \"event\": {}, \
+             \"event_rank\": {}, \"event_dominated\": {}}}",
+            p.analytic_rank,
+            json_escape(&p.candidate.label()),
+            json_escape(&p.candidate.tech.name),
+            p.candidate.kernel.name(),
+            objectives_json(&p.analytic),
+            objectives_json(&p.event),
+            p.event_rank,
+            p.event_dominated,
+        ));
+    }
+    out.push_str("\n  ],\n  \"deltas\": [");
+    for (i, d) in result.deltas.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"configuration\": \"{}\", \"tech\": \"{}\", \"kernel\": \"{}\", \
+             \"analytic_rank\": {}, \"event_rank\": {}, \"event_dominated\": {}, \
+             \"analytic_value\": {:e}, \"event_value\": {:e}}}",
+            json_escape(&d.label),
+            json_escape(&d.tech),
+            json_escape(&d.kernel),
+            d.analytic_rank,
+            d.event_rank,
+            d.event_dominated,
+            d.analytic_value,
+            d.event_value,
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Write [`frontier_json`] to `path`, creating parent directories as
+/// needed.
+pub fn write_frontier_json(result: &ExploreResult, path: &Path) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, frontier_json(result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::search::{run_explore, ExploreSpec};
+    use crate::explore::space::{Axis, DesignSpace};
+    use crate::kernel::KernelKind;
+    use crate::mem::registry::tech;
+    use crate::tensor::gen::TensorSpec;
+
+    fn result() -> ExploreResult {
+        let mut space = DesignSpace::paper_grid(
+            vec![tech("e-sram"), tech("o-sram")],
+            vec![KernelKind::Spmttkrp],
+        );
+        space.axes = vec![Axis::parse("n_pes=2,4").unwrap()];
+        let spec = ExploreSpec::new(space, TensorSpec::custom("j", vec![40, 40, 40], 2_000, 0.9));
+        run_explore(&spec).unwrap()
+    }
+
+    #[test]
+    fn json_has_the_documented_shape() {
+        let r = result();
+        let json = frontier_json(&r);
+        assert!(json.starts_with("{\n  \"objective\": \"edp\""), "{json}");
+        assert!(json.contains("\"candidates_screened\": 4"), "{json}");
+        assert!(json.contains("\"frontier\": ["), "{json}");
+        assert!(json.contains("\"deltas\": ["), "{json}");
+        assert!(json.contains("\"analytic\": {\"runtime_s\": "), "{json}");
+        assert!(json.contains("\"event_dominated\": "), "{json}");
+        // one frontier object per member, ranks in output order
+        assert_eq!(json.matches("{\"rank\"").count(), r.frontier.len());
+        assert!(json.contains("\"rank\": 0"), "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
+    }
+
+    #[test]
+    fn writer_creates_parent_directories() {
+        let r = result();
+        let root = std::env::temp_dir()
+            .join(format!("photon_explore_json_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let path = root.join("deep/frontier.json");
+        write_frontier_json(&r, &path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, frontier_json(&r));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,54 @@
+//! Design-space exploration: Pareto-frontier search over accelerator
+//! configurations.
+//!
+//! The paper evaluates O-SRAM vs E-SRAM at one hand-picked design point
+//! (Table I); its 1.1×–2.9× / 2.8×–8.1× claims are really claims about
+//! where each memory technology lands in a larger hardware design space
+//! — the question arXiv:2207.08298 poses for memory-controller
+//! configurations and arXiv:2503.18206 for photonic design points. This
+//! subsystem *searches* that space instead of replaying one point:
+//!
+//! * [`space`] — the [`space::DesignSpace`] axis grammar: knob axes over
+//!   [`crate::accel::config::AcceleratorConfig`] (`n_pes`, cache
+//!   capacity/ways, bank factor, rank) crossed with registry
+//!   technologies and kernels, pruned by constraint predicates
+//!   (structural validity, mm² area budget, wafer-scale exclusion);
+//! * [`objective`] — the (runtime, energy, area) objective vector with
+//!   derived EDP, and the [`objective::ObjectiveKind`] ranking selector;
+//! * [`eval`] — the multi-objective evaluator: the driver path
+//!   (memoized [`crate::tensor::csf::ModeView`]s, Eq. 2–3 pricing) behind
+//!   a content-keyed [`eval::EvalCache`] so overlapping candidates
+//!   across searches are computed once;
+//! * [`pareto`] — strict-dominance frontier extraction, scoped per
+//!   kernel;
+//! * [`search`] — the two-phase strategy: cheap analytic screen of the
+//!   full grid, event-engine confirmation of frontier survivors only,
+//!   with every analytic-vs-event disagreement surfaced as an
+//!   [`search::ExploreDelta`] (mirroring
+//!   [`crate::coordinator::driver::cross_validate`]) rather than
+//!   silently dropped;
+//! * [`export`] — the frontier JSON artifact.
+//!
+//! Candidate evaluation fans across OS threads through
+//! [`crate::sim::par`] under the one-thread-budget rule, and every layer
+//! is deterministic: the frontier (members, order, every f64) is
+//! bit-identical at any `--threads` value. Front-ends:
+//! `photon-mttkrp explore`, the `design_space` example §5, and the
+//! frontier table `reproduce` prints (EXPERIMENTS.md §Explore).
+
+pub mod eval;
+pub mod export;
+pub mod objective;
+pub mod pareto;
+pub mod search;
+pub mod space;
+
+pub use eval::{candidate_key, EvalCache, Evaluator};
+pub use export::{frontier_json, write_frontier_json};
+pub use objective::{ObjectiveKind, Objectives};
+pub use pareto::{dominates, frontier_indices};
+pub use search::{
+    frontier_table, run_explore, run_explore_with_cache, ExploreDelta, ExploreResult,
+    ExploreSpec, FrontierPoint,
+};
+pub use space::{Axis, Candidate, DesignSpace, EnumeratedSpace, Knob};

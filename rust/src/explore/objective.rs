@@ -1,0 +1,139 @@
+//! The multi-objective vector every candidate evaluation produces, and
+//! the objective selector the frontier is ranked by.
+
+/// The objective vector of one evaluated candidate.
+///
+/// `runtime_s` and `energy_j` come from a full all-modes simulation on
+/// one engine (Eq. 2–3 pricing); `area_mm2` is the instantiated-design
+/// area ([`crate::area::model::AreaModel::design`]) and is
+/// engine-independent. EDP is derived, not stored, so the vector can
+/// never carry an inconsistent product.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Full-run (all output modes, serial) runtime in seconds.
+    pub runtime_s: f64,
+    /// Full-run Eq. 2–3 energy in joules.
+    pub energy_j: f64,
+    /// Instantiated-design area (on-chip bits in the candidate's
+    /// technology + the PE array scaled to its PE count).
+    pub area_mm2: f64,
+}
+
+impl Objectives {
+    /// Energy-delay product (J·s) — the paper community's single-number
+    /// quality metric; [`crate::sim::sweep::SweepPoint::edp`] is the same
+    /// accessor on sweep points, so sweep and explore rank identically.
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.runtime_s
+    }
+
+    /// The scalar this vector scores under `objective` (the ranking
+    /// accessor; lower is always better).
+    pub fn value(&self, objective: ObjectiveKind) -> f64 {
+        match objective {
+            ObjectiveKind::Runtime => self.runtime_s,
+            ObjectiveKind::Energy => self.energy_j,
+            ObjectiveKind::Edp => self.edp(),
+            ObjectiveKind::Area => self.area_mm2,
+        }
+    }
+}
+
+/// Ranking objective selector (`--objective` on the CLI). The Pareto
+/// frontier itself is always extracted over the full
+/// (runtime, energy, area) vector — the objective only chooses how the
+/// frontier is *ordered* (and which scalar the two-phase rank-flip check
+/// compares across engines).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ObjectiveKind {
+    /// Full-run runtime, seconds.
+    Runtime,
+    /// Full-run Eq. 2–3 energy, joules.
+    Energy,
+    /// Energy-delay product — the default.
+    #[default]
+    Edp,
+    /// Instantiated-design area, mm².
+    Area,
+}
+
+impl ObjectiveKind {
+    /// Every objective, in CLI listing order.
+    pub const ALL: [ObjectiveKind; 4] = [
+        ObjectiveKind::Runtime,
+        ObjectiveKind::Energy,
+        ObjectiveKind::Edp,
+        ObjectiveKind::Area,
+    ];
+
+    /// The stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectiveKind::Runtime => "runtime",
+            ObjectiveKind::Energy => "energy",
+            ObjectiveKind::Edp => "edp",
+            ObjectiveKind::Area => "area",
+        }
+    }
+
+    /// Unit string for report columns.
+    pub fn unit(self) -> &'static str {
+        match self {
+            ObjectiveKind::Runtime => "s",
+            ObjectiveKind::Energy => "J",
+            ObjectiveKind::Edp => "J*s",
+            ObjectiveKind::Area => "mm^2",
+        }
+    }
+
+    /// Parse a CLI spelling; the error lists the valid options (the
+    /// `--kernel` / `--tech` error style).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Self::ALL.into_iter().find(|o| o.name() == s).ok_or_else(|| {
+            let names: Vec<&str> = Self::ALL.iter().map(|o| o.name()).collect();
+            format!("unknown objective `{s}` (expected one of: {})", names.join(", "))
+        })
+    }
+}
+
+impl std::str::FromStr for ObjectiveKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for ObjectiveKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_kinds_parse_and_display() {
+        for o in ObjectiveKind::ALL {
+            assert_eq!(ObjectiveKind::parse(o.name()), Ok(o));
+            assert_eq!(o.to_string(), o.name());
+            assert!(!o.unit().is_empty());
+        }
+        let err = ObjectiveKind::parse("speed").unwrap_err();
+        for name in ["runtime", "energy", "edp", "area"] {
+            assert!(err.contains(name), "{err}");
+        }
+        assert_eq!(ObjectiveKind::default(), ObjectiveKind::Edp);
+    }
+
+    #[test]
+    fn edp_is_the_product_and_value_dispatches() {
+        let o = Objectives { runtime_s: 2.0, energy_j: 3.0, area_mm2: 5.0 };
+        assert_eq!(o.edp(), 6.0);
+        assert_eq!(o.value(ObjectiveKind::Runtime), 2.0);
+        assert_eq!(o.value(ObjectiveKind::Energy), 3.0);
+        assert_eq!(o.value(ObjectiveKind::Edp), 6.0);
+        assert_eq!(o.value(ObjectiveKind::Area), 5.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Pareto-frontier extraction over the (runtime, energy, area) objective
+//! vector.
+//!
+//! Dominance is *strict*: `a` dominates `b` iff `a` is no worse on every
+//! objective and strictly better on at least one. Candidates with
+//! identical objective vectors therefore never dominate each other — both
+//! survive (e.g. two bank-factor twins of an optical technology, whose
+//! bank cascade is structurally 1 either way).
+//!
+//! Dominance is only meaningful between candidates doing the *same work*,
+//! so extraction takes a group key per candidate (the kernel name): a
+//! cheap kernel may never "dominate" an expensive one off the frontier.
+//! Extraction is deterministic — the returned indices are ascending, and
+//! the result depends only on the objective values, never on thread
+//! count or iteration order.
+
+use crate::explore::objective::Objectives;
+
+/// Does `a` strictly Pareto-dominate `b` over (runtime, energy, area)?
+///
+/// Objectives are expected finite (the engines and the area model only
+/// produce finite positives); any NaN comparison is `false`, so a NaN
+/// vector neither dominates nor is dominated.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let no_worse =
+        a.runtime_s <= b.runtime_s && a.energy_j <= b.energy_j && a.area_mm2 <= b.area_mm2;
+    let better = a.runtime_s < b.runtime_s || a.energy_j < b.energy_j || a.area_mm2 < b.area_mm2;
+    no_worse && better
+}
+
+/// Indices of the Pareto frontier of `objs`, in ascending index order.
+/// `groups[i]` is candidate `i`'s comparison group (its kernel name);
+/// only same-group candidates can dominate each other.
+///
+/// O(n²) pairwise — exact, deterministic, and easily fast enough for the
+/// grids a design-space search enumerates (hundreds to low thousands).
+pub fn frontier_indices<K: PartialEq>(objs: &[Objectives], groups: &[K]) -> Vec<usize> {
+    assert_eq!(objs.len(), groups.len(), "one group key per objective vector");
+    (0..objs.len())
+        .filter(|&i| {
+            !(0..objs.len())
+                .any(|j| j != i && groups[j] == groups[i] && dominates(&objs[j], &objs[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(r: f64, e: f64, a: f64) -> Objectives {
+        Objectives { runtime_s: r, energy_j: e, area_mm2: a }
+    }
+
+    #[test]
+    fn strict_dominance_needs_one_strict_improvement() {
+        assert!(dominates(&o(1.0, 1.0, 1.0), &o(2.0, 1.0, 1.0)));
+        assert!(dominates(&o(1.0, 0.5, 1.0), &o(1.0, 1.0, 1.0)));
+        // identical vectors: neither dominates
+        assert!(!dominates(&o(1.0, 1.0, 1.0), &o(1.0, 1.0, 1.0)));
+        // trade-offs: neither dominates
+        assert!(!dominates(&o(1.0, 2.0, 1.0), &o(2.0, 1.0, 1.0)));
+        assert!(!dominates(&o(2.0, 1.0, 1.0), &o(1.0, 2.0, 1.0)));
+        // NaN never dominates and is never dominated
+        assert!(!dominates(&o(f64::NAN, 1.0, 1.0), &o(1.0, 1.0, 1.0)));
+        assert!(!dominates(&o(1.0, 1.0, 1.0), &o(f64::NAN, 1.0, 1.0)));
+    }
+
+    #[test]
+    fn frontier_keeps_exactly_the_non_dominated() {
+        let objs = [
+            o(1.0, 4.0, 1.0), // frontier (best runtime)
+            o(2.0, 2.0, 1.0), // frontier (trade-off)
+            o(4.0, 1.0, 1.0), // frontier (best energy)
+            o(3.0, 3.0, 1.0), // dominated by [1]
+            o(2.0, 2.0, 2.0), // dominated by [1] (same r/e, worse area)
+        ];
+        let groups = ["k"; 5];
+        assert_eq!(frontier_indices(&objs, &groups), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ties_survive_together() {
+        let objs = [o(1.0, 1.0, 1.0), o(1.0, 1.0, 1.0), o(2.0, 2.0, 2.0)];
+        assert_eq!(frontier_indices(&objs, &["k"; 3]), vec![0, 1]);
+    }
+
+    #[test]
+    fn dominance_is_scoped_to_the_group() {
+        // a cheap kernel's point must not evict an expensive kernel's
+        let objs = [o(1.0, 1.0, 1.0), o(5.0, 5.0, 1.0)];
+        assert_eq!(frontier_indices(&objs, &["spmm", "spttm"]), vec![0, 1]);
+        assert_eq!(frontier_indices(&objs, &["k", "k"]), vec![0]);
+    }
+
+    #[test]
+    fn every_excluded_point_is_dominated_by_a_frontier_member() {
+        // the invariant the integration tests pin end to end, checked
+        // here on a synthetic cloud
+        let objs: Vec<Objectives> = (0..40)
+            .map(|i| {
+                let x = (i % 7) as f64;
+                let y = (i % 5) as f64;
+                o(1.0 + x, 6.0 - y, 1.0 + ((i % 3) as f64))
+            })
+            .collect();
+        let groups = vec!["k"; objs.len()];
+        let front = frontier_indices(&objs, &groups);
+        for i in 0..objs.len() {
+            if front.contains(&i) {
+                assert!(!objs.iter().enumerate().any(|(j, oj)| j != i && dominates(oj, &objs[i])));
+            } else {
+                assert!(
+                    front.iter().any(|&f| dominates(&objs[f], &objs[i])),
+                    "excluded point {i} not dominated by any frontier member"
+                );
+            }
+        }
+    }
+}

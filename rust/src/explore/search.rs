@@ -1,0 +1,512 @@
+//! The two-phase Pareto-frontier search.
+//!
+//! 1. **Screen** — every enumerated candidate is evaluated on the cheap
+//!    analytic engine (the paper's roofline model), fanned across OS
+//!    threads with the slot-ordered [`crate::sim::par`] map under the one
+//!    thread-budget rule ([`crate::sim::SimBudget`]): the candidate
+//!    fan-out claims `min(threads, candidates)` workers and hands each
+//!    simulation the left-over threads for its per-PE inner loop.
+//! 2. **Extract** — the Pareto frontier over (runtime, energy, area),
+//!    per kernel ([`crate::explore::pareto`]).
+//! 3. **Confirm** — frontier survivors *only* are re-evaluated on the
+//!    event-driven contention engine. Frontier **membership is decided by
+//!    the screen** and never silently revised: if the event numbers
+//!    re-rank the members under the chosen objective, or dominate a
+//!    member within the frontier, that disagreement is surfaced as an
+//!    [`ExploreDelta`] (mirroring
+//!    [`crate::coordinator::driver::cross_validate`]'s `EngineDelta`),
+//!    with every member still reported.
+//!
+//! Everything is deterministic: enumeration order is fixed, evaluation
+//! results are slot-ordered, and ranks tie-break on the candidate index —
+//! the frontier is bit-identical at any thread count (pinned by
+//! `rust/tests/explore.rs`).
+
+use crate::explore::eval::{EvalCache, Evaluator};
+use crate::explore::objective::{ObjectiveKind, Objectives};
+use crate::explore::pareto;
+use crate::explore::space::{Candidate, DesignSpace};
+use crate::kernel::DEFAULT_CHUNK_NNZ;
+use crate::sim::par::{effective_threads, parallel_map};
+use crate::sim::{EngineKind, SimBudget};
+use crate::tensor::csf::ModeView;
+use crate::tensor::gen::TensorSpec;
+use crate::util::table::{fmt_sig, Align, Table};
+
+/// One search request: the space, the workload fingerprint and the
+/// execution knobs.
+#[derive(Clone, Debug)]
+pub struct ExploreSpec {
+    /// What to enumerate ([`DesignSpace`]).
+    pub space: DesignSpace,
+    /// Workload fingerprint every candidate is evaluated against.
+    pub tensor: TensorSpec,
+    /// Workload scale factor — applied to the **tensor only**; the
+    /// design space evaluates real (unscaled) configurations, since its
+    /// capacity axes must mean something absolute.
+    pub scale: f64,
+    /// Generator seed.
+    pub seed: u64,
+    /// Ranking objective (frontier extraction is always over the full
+    /// vector; this orders the output and drives the rank-flip check).
+    pub objective: ObjectiveKind,
+    /// Apply the §IV-A memory mapping before simulating (the driver-path
+    /// behaviour).
+    pub remap: bool,
+    /// OS-thread budget; 0 = all available cores.
+    pub threads: usize,
+    /// Access-stream chunk granularity (bit-transparent).
+    pub chunk_nnz: usize,
+}
+
+impl ExploreSpec {
+    /// A search over `space` × `tensor` with driver-path defaults:
+    /// full-scale tensor, seed 42, EDP ranking, all cores.
+    pub fn new(space: DesignSpace, tensor: TensorSpec) -> Self {
+        ExploreSpec {
+            space,
+            tensor,
+            scale: 1.0,
+            seed: 42,
+            objective: ObjectiveKind::Edp,
+            remap: true,
+            threads: 0,
+            chunk_nnz: DEFAULT_CHUNK_NNZ,
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !(self.scale > 0.0 && self.scale <= 1.0) {
+            return Err(format!("explore scale {} outside (0, 1]", self.scale));
+        }
+        if self.chunk_nnz == 0 {
+            return Err("chunk_nnz must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// One confirmed frontier member: both engines' objective vectors plus
+/// its rank under each.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    pub candidate: Candidate,
+    /// Screening-phase (analytic-engine) objectives.
+    pub analytic: Objectives,
+    /// Confirmation-phase (event-engine) objectives; `runtime_s` and
+    /// `energy_j` are ≥ their analytic twins by construction, `area_mm2`
+    /// is engine-independent.
+    pub event: Objectives,
+    /// 0-based rank by the spec's objective under analytic numbers
+    /// (frontier output order).
+    pub analytic_rank: usize,
+    /// 0-based rank by the same objective under event numbers.
+    pub event_rank: usize,
+    /// Under event numbers, is this member dominated by another frontier
+    /// member (same kernel)? Membership was decided by the screen; this
+    /// flags the disagreement instead of dropping the point.
+    pub event_dominated: bool,
+}
+
+impl FrontierPoint {
+    /// Did the event confirmation disagree with the analytic screen
+    /// about this member (re-ranked, or dominated within the frontier)?
+    pub fn flipped(&self) -> bool {
+        self.analytic_rank != self.event_rank || self.event_dominated
+    }
+}
+
+/// One analytic-vs-event disagreement on a frontier member — the explore
+/// counterpart of [`crate::coordinator::driver::EngineDelta`].
+#[derive(Clone, Debug)]
+pub struct ExploreDelta {
+    /// The member's knob settings ([`Candidate::label`]).
+    pub label: String,
+    pub tech: String,
+    pub kernel: String,
+    /// The objective the ranks are under.
+    pub objective: ObjectiveKind,
+    pub analytic_value: f64,
+    pub event_value: f64,
+    pub analytic_rank: usize,
+    pub event_rank: usize,
+    pub event_dominated: bool,
+}
+
+impl ExploreDelta {
+    /// `event / analytic` on the chosen objective (≥ 1.0 for the
+    /// time/energy-derived objectives).
+    pub fn ratio(&self) -> f64 {
+        self.event_value / self.analytic_value
+    }
+
+    /// One-line human rendering for the CLI / example output. The
+    /// headline names what actually disagreed: a re-ranking is a
+    /// "rank flip"; identical ranks with within-frontier domination is
+    /// "event dominance".
+    pub fn describe(&self) -> String {
+        let kind =
+            if self.analytic_rank != self.event_rank { "rank flip" } else { "event dominance" };
+        let dom = if self.event_dominated { ", event-dominated within frontier" } else { "" };
+        format!(
+            "{kind} [{} {} {}]: {} {:.4e} -> {:.4e} under event engine \
+             (rank #{} -> #{}{dom})",
+            self.label,
+            self.tech,
+            self.kernel,
+            self.objective,
+            self.analytic_value,
+            self.event_value,
+            self.analytic_rank,
+            self.event_rank,
+        )
+    }
+}
+
+/// The full search result.
+#[derive(Clone, Debug)]
+pub struct ExploreResult {
+    /// Name of the generated (scaled) workload tensor.
+    pub tensor: String,
+    /// Nonzeros of the generated workload.
+    pub nnz: u64,
+    /// The ranking objective the frontier is ordered by.
+    pub objective: ObjectiveKind,
+    /// Every constraint-passing candidate, in enumeration order.
+    pub candidates: Vec<Candidate>,
+    /// Screening-phase objectives, parallel to
+    /// [`candidates`](Self::candidates).
+    pub analytic: Vec<Objectives>,
+    /// Points pruned by [`crate::accel::config::AcceleratorConfig::validate`].
+    pub n_invalid: usize,
+    /// Points pruned by the area-budget / reticle predicates.
+    pub n_filtered: usize,
+    /// The confirmed frontier, sorted by `analytic_rank`.
+    pub frontier: Vec<FrontierPoint>,
+    /// One entry per frontier member the event confirmation disagreed
+    /// about ([`FrontierPoint::flipped`]); empty = the engines agree on
+    /// both order and within-frontier dominance.
+    pub deltas: Vec<ExploreDelta>,
+    /// Evaluation-cache traffic attributable to this search.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ExploreResult {
+    /// The frontier member for a technology name at the paper-default
+    /// configuration, if the search kept one — the acceptance hook
+    /// ("is the paper's design point on the frontier?").
+    pub fn paper_default_point(&self, tech: &str) -> Option<&FrontierPoint> {
+        self.frontier
+            .iter()
+            .find(|p| p.candidate.tech.name == tech && p.candidate.is_paper_default())
+    }
+}
+
+/// Run the two-phase search with a private, single-use evaluation cache.
+pub fn run_explore(spec: &ExploreSpec) -> Result<ExploreResult, String> {
+    run_explore_with_cache(spec, &EvalCache::new())
+}
+
+/// [`run_explore`] against a caller-owned [`EvalCache`], so overlapping
+/// candidates across successive searches (refined axes, added
+/// technologies, a different ranking objective on the same grid) are
+/// computed once.
+pub fn run_explore_with_cache(
+    spec: &ExploreSpec,
+    cache: &EvalCache,
+) -> Result<ExploreResult, String> {
+    spec.validate()?;
+    let enumerated = spec.space.enumerate()?;
+    if enumerated.candidates.is_empty() {
+        return Err(format!(
+            "design space enumerates zero candidates ({} invalid, {} filtered by \
+             area constraints) — relax the axes or the budget",
+            enumerated.n_invalid, enumerated.n_filtered
+        ));
+    }
+    let candidates = enumerated.candidates;
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+
+    // one workload, shared by every candidate × engine evaluation
+    let tensor = spec.tensor.clone().scaled(spec.scale).generate(spec.seed);
+    let mapped = if spec.remap {
+        crate::coordinator::driver::apply_memory_mapping(&tensor)
+    } else {
+        tensor.clone()
+    };
+    let views: Vec<(usize, ModeView)> =
+        (0..mapped.n_modes()).map(|m| (m, ModeView::build(&mapped, m))).collect();
+
+    // thread-budget rule (see `SimBudget`): the candidate fan-out claims
+    // min(threads, candidates) workers; each simulation gets the
+    // left-over threads for its per-PE inner loop
+    let threads = effective_threads(spec.threads);
+    let budget_for = |jobs: usize| {
+        let workers = threads.min(jobs.max(1));
+        SimBudget { threads: (threads / workers).max(1), chunk_nnz: spec.chunk_nnz }
+    };
+    let evaluator = |budget: SimBudget| Evaluator {
+        tensor: &mapped,
+        views: &views,
+        workload_tag: Evaluator::tag(&mapped, spec.seed, spec.remap),
+        budget,
+    };
+
+    // Phase 1: analytic screen of the full grid.
+    let screen_eval = evaluator(budget_for(candidates.len()));
+    let analytic: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
+        screen_eval.evaluate(cand, EngineKind::Analytic, cache)
+    });
+
+    // Phase 2: frontier extraction (dominance scoped to the kernel).
+    let groups: Vec<&str> = candidates.iter().map(|c| c.kernel.name()).collect();
+    let front = pareto::frontier_indices(&analytic, &groups);
+
+    // Phase 3: event confirmation of the survivors only.
+    let confirm_eval = evaluator(budget_for(front.len()));
+    let event: Vec<Objectives> = parallel_map(&front, threads, |&i| {
+        confirm_eval.evaluate(&candidates[i], EngineKind::Event, cache)
+    });
+
+    // Ranks by the chosen objective under each engine's numbers;
+    // ties break on the (deterministic) candidate index.
+    let rank_by = |values: &[f64]| -> Vec<usize> {
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&x, &y| values[x].total_cmp(&values[y]).then(front[x].cmp(&front[y])));
+        let mut rank = vec![0usize; front.len()];
+        for (r, &slot) in order.iter().enumerate() {
+            rank[slot] = r;
+        }
+        rank
+    };
+    let analytic_values: Vec<f64> =
+        front.iter().map(|&i| analytic[i].value(spec.objective)).collect();
+    let event_values: Vec<f64> = event.iter().map(|o| o.value(spec.objective)).collect();
+    let analytic_rank = rank_by(&analytic_values);
+    let event_rank = rank_by(&event_values);
+
+    let mut frontier: Vec<FrontierPoint> = front
+        .iter()
+        .enumerate()
+        .map(|(slot, &i)| {
+            let event_dominated = front.iter().enumerate().any(|(other, &j)| {
+                other != slot
+                    && candidates[j].kernel == candidates[i].kernel
+                    && pareto::dominates(&event[other], &event[slot])
+            });
+            FrontierPoint {
+                candidate: candidates[i].clone(),
+                analytic: analytic[i],
+                event: event[slot],
+                analytic_rank: analytic_rank[slot],
+                event_rank: event_rank[slot],
+                event_dominated,
+            }
+        })
+        .collect();
+    frontier.sort_by_key(|p| p.analytic_rank);
+
+    let deltas: Vec<ExploreDelta> = frontier
+        .iter()
+        .filter(|p| p.flipped())
+        .map(|p| ExploreDelta {
+            label: p.candidate.label(),
+            tech: p.candidate.tech.name.clone(),
+            kernel: p.candidate.kernel.name().to_string(),
+            objective: spec.objective,
+            analytic_value: p.analytic.value(spec.objective),
+            event_value: p.event.value(spec.objective),
+            analytic_rank: p.analytic_rank,
+            event_rank: p.event_rank,
+            event_dominated: p.event_dominated,
+        })
+        .collect();
+
+    Ok(ExploreResult {
+        tensor: tensor.name.clone(),
+        nnz: tensor.nnz() as u64,
+        objective: spec.objective,
+        candidates,
+        analytic,
+        n_invalid: enumerated.n_invalid,
+        n_filtered: enumerated.n_filtered,
+        frontier,
+        deltas,
+        cache_hits: cache.hits() - hits0,
+        cache_misses: cache.misses() - misses0,
+    })
+}
+
+/// Render the frontier as a table (`top` = 0 keeps every member): one
+/// row per member in analytic-rank order, with both engines' view of the
+/// ranking objective and the flip marker.
+pub fn frontier_table(result: &ExploreResult, top: usize) -> Table {
+    let shown = if top == 0 {
+        result.frontier.len()
+    } else {
+        top.min(result.frontier.len())
+    };
+    let mut t = Table::new(
+        &format!(
+            "Pareto frontier by {} ({}, {} candidates screened, {} on frontier{})",
+            result.objective,
+            result.tensor,
+            result.candidates.len(),
+            result.frontier.len(),
+            if shown < result.frontier.len() {
+                format!(", top {shown} shown")
+            } else {
+                String::new()
+            }
+        ),
+        &[
+            "#",
+            "configuration",
+            "tech",
+            "kernel",
+            "runtime",
+            "energy",
+            "EDP",
+            "area mm^2",
+            "event rank",
+        ],
+    )
+    .align(1, Align::Left)
+    .align(2, Align::Left)
+    .align(3, Align::Left);
+    for p in result.frontier.iter().take(shown) {
+        let event_cell = if p.event_dominated {
+            format!("#{} (dominated)", p.event_rank)
+        } else if p.event_rank != p.analytic_rank {
+            format!("#{} (flip)", p.event_rank)
+        } else {
+            format!("#{}", p.event_rank)
+        };
+        t.row(vec![
+            format!("{}", p.analytic_rank),
+            p.candidate.label(),
+            p.candidate.tech.name.clone(),
+            p.candidate.kernel.name().to_string(),
+            format!("{:.3e} s", p.analytic.runtime_s),
+            format!("{:.3e} J", p.analytic.energy_j),
+            format!("{:.3e}", p.analytic.edp()),
+            fmt_sig(p.analytic.area_mm2, 4),
+            event_cell,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::mem::registry::tech;
+    use crate::tensor::gen::TensorSpec;
+
+    fn tiny_spec() -> ExploreSpec {
+        let mut space = DesignSpace::paper_grid(
+            vec![tech("e-sram"), tech("o-sram")],
+            vec![KernelKind::Spmttkrp],
+        );
+        space.axes = vec![crate::explore::space::Axis::parse("n_pes=2,4").unwrap()];
+        let mut spec =
+            ExploreSpec::new(space, TensorSpec::custom("tiny", vec![48, 48, 48], 4_000, 1.0));
+        spec.threads = 2;
+        spec
+    }
+
+    #[test]
+    fn search_runs_end_to_end_with_consistent_shape() {
+        let r = run_explore(&tiny_spec()).unwrap();
+        assert_eq!(r.candidates.len(), 4);
+        assert_eq!(r.analytic.len(), 4);
+        assert!(!r.frontier.is_empty());
+        assert_eq!(r.objective, ObjectiveKind::Edp);
+        // frontier is sorted by analytic rank, ranks are a permutation
+        for (i, p) in r.frontier.iter().enumerate() {
+            assert_eq!(p.analytic_rank, i);
+            assert!(p.event_rank < r.frontier.len());
+            // event can only add time/energy; area is engine-independent
+            assert!(p.event.runtime_s >= p.analytic.runtime_s);
+            assert!(p.event.energy_j >= p.analytic.energy_j);
+            assert_eq!(p.event.area_mm2, p.analytic.area_mm2);
+        }
+        // deltas are exactly the flipped members
+        assert_eq!(r.deltas.len(), r.frontier.iter().filter(|p| p.flipped()).count());
+        // cache traffic: screen misses + frontier event misses, no hits
+        assert_eq!(r.cache_misses, 4 + r.frontier.len() as u64);
+        assert_eq!(r.cache_hits, 0);
+    }
+
+    #[test]
+    fn frontier_table_lists_the_members_and_honours_top() {
+        let r = run_explore(&tiny_spec()).unwrap();
+        let full = frontier_table(&r, 0);
+        assert_eq!(full.n_rows(), r.frontier.len());
+        let s = full.render_ascii();
+        assert!(s.contains("Pareto frontier by edp"), "{s}");
+        assert!(s.contains("o-sram") || s.contains("e-sram"), "{s}");
+        let one = frontier_table(&r, 1);
+        assert_eq!(one.n_rows(), 1);
+        assert!(one.render_ascii().contains("top 1 shown"));
+    }
+
+    #[test]
+    fn warm_cache_reuses_every_evaluation() {
+        let spec = tiny_spec();
+        let cache = EvalCache::new();
+        let a = run_explore_with_cache(&spec, &cache).unwrap();
+        let b = run_explore_with_cache(&spec, &cache).unwrap();
+        assert_eq!(b.cache_misses, 0);
+        assert_eq!(b.cache_hits, a.cache_misses);
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.analytic.runtime_s.to_bits(), y.analytic.runtime_s.to_bits());
+            assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits());
+            assert_eq!(x.candidate.label(), y.candidate.label());
+        }
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let mut s = tiny_spec();
+        s.scale = 2.0;
+        assert!(run_explore(&s).is_err());
+        let mut s = tiny_spec();
+        s.chunk_nnz = 0;
+        assert!(run_explore(&s).is_err());
+        // a space pruned to nothing errors with the counts, not an empty
+        // success
+        let mut s = tiny_spec();
+        s.space.budget_mm2 = Some(1e-3);
+        let e = run_explore(&s).unwrap_err();
+        assert!(e.contains("zero candidates"), "{e}");
+    }
+
+    #[test]
+    fn delta_describes_itself() {
+        let d = ExploreDelta {
+            label: "n_pes=4".into(),
+            tech: "o-sram".into(),
+            kernel: "spmttkrp".into(),
+            objective: ObjectiveKind::Edp,
+            analytic_value: 1.0,
+            event_value: 1.5,
+            analytic_rank: 0,
+            event_rank: 1,
+            event_dominated: false,
+        };
+        assert!((d.ratio() - 1.5).abs() < 1e-12);
+        let s = d.describe();
+        assert!(s.starts_with("rank flip"), "{s}");
+        assert!(s.contains("n_pes=4") && s.contains("o-sram") && s.contains("edp"), "{s}");
+        assert!(s.contains("#0") && s.contains("#1"), "{s}");
+        // equal ranks + within-frontier domination is not a flip and
+        // must not claim one
+        let d2 = ExploreDelta { analytic_rank: 2, event_rank: 2, event_dominated: true, ..d };
+        let s2 = d2.describe();
+        assert!(s2.starts_with("event dominance"), "{s2}");
+        assert!(s2.contains("event-dominated within frontier"), "{s2}");
+    }
+}

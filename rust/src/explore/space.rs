@@ -1,0 +1,481 @@
+//! The design-space axis grammar: which accelerator configurations,
+//! technologies and kernels a search enumerates, and which constraint
+//! predicates prune the grid before anything is simulated.
+//!
+//! An [`Axis`] names one [`AcceleratorConfig`] knob ([`Knob`]) and the
+//! values it sweeps (`--axes n_pes=2,4,8` on the CLI). A [`DesignSpace`]
+//! crosses every axis combination with the requested technologies and
+//! kernels, then filters:
+//!
+//! 1. **structural validity** — [`AcceleratorConfig::validate`] (e.g.
+//!    `rank=32` with 64 B lines is a contradiction, not a candidate);
+//! 2. **area budget** — instantiated-design area
+//!    ([`AreaModel::design`]) within `budget_mm2`, per technology;
+//! 3. **wafer-scale exclusion** — optionally drop candidates larger than
+//!    one reticle ([`crate::area::model::RETICLE_MM2`]), the §II
+//!    single-die feasibility line.
+//!
+//! Enumeration order is deterministic (axis-major in listed order, then
+//! technology, then kernel) and filtered counts are reported, never
+//! silently swallowed.
+
+use crate::accel::config::AcceleratorConfig;
+use crate::area::model::{AreaModel, RETICLE_MM2};
+use crate::kernel::KernelKind;
+use crate::mem::tech::MemTechnology;
+
+/// An explorable [`AcceleratorConfig`] knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Knob {
+    /// `n_pes` — PE (and DRAM channel) count.
+    NPes,
+    /// `cache_lines` — lines per cache (capacity).
+    CacheLines,
+    /// `cache_assoc` — cache associativity (ways).
+    CacheAssoc,
+    /// `esram_bank_factor` — electrical data-array bank cascade.
+    BankFactor,
+    /// `rank` — decomposition rank R.
+    Rank,
+}
+
+impl Knob {
+    /// Every knob, in CLI listing order.
+    pub const ALL: [Knob; 5] =
+        [Knob::NPes, Knob::CacheLines, Knob::CacheAssoc, Knob::BankFactor, Knob::Rank];
+
+    /// The stable grammar name (`--axes <name>=v1,v2,...`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Knob::NPes => "n_pes",
+            Knob::CacheLines => "cache_lines",
+            Knob::CacheAssoc => "cache_assoc",
+            Knob::BankFactor => "bank_factor",
+            Knob::Rank => "rank",
+        }
+    }
+
+    /// Parse a grammar spelling; the error lists every knob (the
+    /// `--kernel` / `--tech` error style).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Self::ALL.into_iter().find(|k| k.name() == s).ok_or_else(|| {
+            let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+            format!("unknown design-space knob `{s}` (expected one of: {})", names.join(", "))
+        })
+    }
+
+    /// Set this knob to `value` on `cfg`. Structural sanity of the result
+    /// is checked by [`AcceleratorConfig::validate`] during enumeration,
+    /// not here — an axis may legitimately contain values that are only
+    /// valid in combination with another axis.
+    pub fn apply(self, cfg: &mut AcceleratorConfig, value: usize) {
+        match self {
+            Knob::NPes => cfg.n_pes = value,
+            Knob::CacheLines => cfg.cache_lines = value,
+            Knob::CacheAssoc => cfg.cache_assoc = value,
+            Knob::BankFactor => cfg.esram_bank_factor = value,
+            Knob::Rank => cfg.rank = value,
+        }
+    }
+
+    /// The paper-default value of this knob (Table I).
+    pub fn paper_default(self) -> usize {
+        let d = AcceleratorConfig::paper_default();
+        match self {
+            Knob::NPes => d.n_pes,
+            Knob::CacheLines => d.cache_lines,
+            Knob::CacheAssoc => d.cache_assoc,
+            Knob::BankFactor => d.esram_bank_factor,
+            Knob::Rank => d.rank,
+        }
+    }
+}
+
+impl std::fmt::Display for Knob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One axis of the grid: a knob and the values it takes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    pub knob: Knob,
+    pub values: Vec<usize>,
+}
+
+impl Axis {
+    pub fn new(knob: Knob, values: Vec<usize>) -> Self {
+        Axis { knob, values }
+    }
+
+    /// Parse the CLI grammar `knob=v1,v2,...`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (name, vals) = s
+            .split_once('=')
+            .ok_or_else(|| format!("axis `{s}` is not of the form knob=v1,v2,..."))?;
+        let knob = Knob::parse(name.trim())?;
+        let values = vals
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<usize>()
+                    .map_err(|e| format!("axis `{}` value `{v}`: {e}", knob.name()))
+            })
+            .collect::<Result<Vec<usize>, String>>()?;
+        if values.is_empty() {
+            return Err(format!("axis `{}` has no values", knob.name()));
+        }
+        Ok(Axis { knob, values })
+    }
+}
+
+/// One enumerated, constraint-passing point of the design space.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Stable position in the enumeration (== its slot in every
+    /// evaluation vector).
+    pub index: usize,
+    /// The axis settings that produced [`cfg`](Self::cfg), in axis order.
+    pub settings: Vec<(Knob, usize)>,
+    /// The fully-applied configuration (validated).
+    pub cfg: AcceleratorConfig,
+    /// The registry-resolved technology.
+    pub tech: MemTechnology,
+    /// The kernel this candidate runs.
+    pub kernel: KernelKind,
+    /// Instantiated-design area in the candidate's technology
+    /// ([`AreaModel::design`]) — the area objective and the budget
+    /// constraint share this one number.
+    pub area_mm2: f64,
+}
+
+impl Candidate {
+    /// Human-readable knob settings (`n_pes=4,cache_lines=4096`), or
+    /// `base` when the space has no axes.
+    pub fn label(&self) -> String {
+        if self.settings.is_empty() {
+            "base".to_string()
+        } else {
+            self.settings
+                .iter()
+                .map(|(k, v)| format!("{}={v}", k.name()))
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    }
+
+    /// Is this the paper-default configuration (every knob at its Table I
+    /// value, whatever subset of knobs the axes swept)?
+    pub fn is_paper_default(&self) -> bool {
+        self.cfg == AcceleratorConfig::paper_default()
+    }
+}
+
+/// The enumerated grid plus the constraint bookkeeping — how many raw
+/// points each predicate pruned (reported by the CLI so a tight budget
+/// is visible, never a silently smaller search).
+#[derive(Clone, Debug)]
+pub struct EnumeratedSpace {
+    pub candidates: Vec<Candidate>,
+    /// (config, tech, kernel) points dropped by
+    /// [`AcceleratorConfig::validate`].
+    pub n_invalid: usize,
+    /// Points dropped by the area-budget / wafer-scale predicates.
+    pub n_filtered: usize,
+}
+
+/// The axis grammar: base configuration × axes × technologies × kernels,
+/// with the constraint predicates.
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    /// Configuration every axis perturbs. **Not** scale-shrunk: explore
+    /// evaluates real design points (capacity axes must mean something
+    /// absolute) against a scaled workload fingerprint.
+    pub base_cfg: AcceleratorConfig,
+    /// Knob axes; empty means the base configuration alone.
+    pub axes: Vec<Axis>,
+    /// Technologies crossed with every configuration.
+    pub techs: Vec<MemTechnology>,
+    /// Kernels crossed with every (configuration, technology); frontier
+    /// dominance never crosses kernels (they do different work).
+    pub kernels: Vec<KernelKind>,
+    /// Keep only candidates whose instantiated-design area is within
+    /// this many mm² (`--budget-mm2`).
+    pub budget_mm2: Option<f64>,
+    /// Drop candidates larger than one reticle ([`RETICLE_MM2`]) — the
+    /// §II wafer-scale feasibility predicate (`--exclude-wafer-scale`).
+    /// Note this excludes *every* O-SRAM candidate of a Table-I-sized
+    /// design: that is the paper's point, not a bug.
+    pub exclude_wafer_scale: bool,
+}
+
+impl DesignSpace {
+    /// A space over the paper-default configuration with the default
+    /// axes ([`Self::paper_axes`]).
+    pub fn paper_grid(techs: Vec<MemTechnology>, kernels: Vec<KernelKind>) -> Self {
+        DesignSpace {
+            base_cfg: AcceleratorConfig::paper_default(),
+            axes: Self::paper_axes(),
+            techs,
+            kernels,
+            budget_mm2: None,
+            exclude_wafer_scale: false,
+        }
+    }
+
+    /// The default CLI axes: PE count {2, 4, 8} × cache capacity
+    /// {4096, 8192} lines. Both include the Table I default, so the
+    /// paper's design point is always a member of the default grid.
+    pub fn paper_axes() -> Vec<Axis> {
+        vec![
+            Axis::new(Knob::NPes, vec![2, 4, 8]),
+            Axis::new(Knob::CacheLines, vec![4096, 8192]),
+        ]
+    }
+
+    /// Upper bound on the grid size (before constraint pruning).
+    pub fn n_points(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product::<usize>()
+            * self.techs.len()
+            * self.kernels.len()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.techs.is_empty() || self.kernels.is_empty() {
+            return Err("design space needs at least one technology and one kernel".into());
+        }
+        let mut seen_knobs: Vec<Knob> = Vec::new();
+        for a in &self.axes {
+            if a.values.is_empty() {
+                return Err(format!("axis `{}` has no values", a.knob.name()));
+            }
+            if seen_knobs.contains(&a.knob) {
+                return Err(format!("knob `{}` listed twice", a.knob.name()));
+            }
+            seen_knobs.push(a.knob);
+            // a repeated value would enumerate bit-identical candidates
+            // (ties both survive strict dominance ⇒ duplicate frontier
+            // rows) and waste a full simulation each — fail loudly like
+            // the duplicate-tech/kernel checks do
+            for (i, v) in a.values.iter().enumerate() {
+                if a.values[..i].contains(v) {
+                    return Err(format!(
+                        "axis `{}` lists value {v} twice",
+                        a.knob.name()
+                    ));
+                }
+            }
+        }
+        let mut seen: Vec<&str> = Vec::new();
+        for t in &self.techs {
+            if seen.contains(&t.name.as_str()) {
+                return Err(format!("technology `{}` listed twice", t.name));
+            }
+            seen.push(&t.name);
+        }
+        let mut seen_k: Vec<&str> = Vec::new();
+        for k in &self.kernels {
+            if seen_k.contains(&k.name()) {
+                return Err(format!("kernel `{}` listed twice", k.name()));
+            }
+            seen_k.push(k.name());
+        }
+        if let Some(b) = self.budget_mm2 {
+            if !(b > 0.0 && b.is_finite()) {
+                return Err(format!("area budget {b} mm^2 is not a positive finite number"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid, apply every constraint predicate, and return the
+    /// surviving candidates in deterministic enumeration order.
+    pub fn enumerate(&self) -> Result<EnumeratedSpace, String> {
+        self.validate()?;
+        // cartesian product of axis values, axis-major in listed order
+        let mut combos: Vec<Vec<usize>> = vec![Vec::new()];
+        for axis in &self.axes {
+            combos = combos
+                .iter()
+                .flat_map(|c| {
+                    axis.values.iter().map(move |&v| {
+                        let mut c2 = c.clone();
+                        c2.push(v);
+                        c2
+                    })
+                })
+                .collect();
+        }
+        let mut candidates = Vec::new();
+        let mut n_invalid = 0usize;
+        let mut n_filtered = 0usize;
+        for combo in &combos {
+            let settings: Vec<(Knob, usize)> =
+                self.axes.iter().zip(combo).map(|(a, &v)| (a.knob, v)).collect();
+            let mut cfg = self.base_cfg.clone();
+            for &(knob, v) in &settings {
+                knob.apply(&mut cfg, v);
+            }
+            if cfg.validate().is_err() {
+                n_invalid += self.techs.len() * self.kernels.len();
+                continue;
+            }
+            let area_model = AreaModel::new(&cfg);
+            for tech in &self.techs {
+                let area_mm2 = area_model.design(tech).total_mm2();
+                let over_budget = self.budget_mm2.is_some_and(|b| area_mm2 > b);
+                let over_reticle = self.exclude_wafer_scale && area_mm2 > RETICLE_MM2;
+                if over_budget || over_reticle {
+                    n_filtered += self.kernels.len();
+                    continue;
+                }
+                for &kernel in &self.kernels {
+                    candidates.push(Candidate {
+                        index: candidates.len(),
+                        settings: settings.clone(),
+                        cfg: cfg.clone(),
+                        tech: tech.clone(),
+                        kernel,
+                        area_mm2,
+                    });
+                }
+            }
+        }
+        Ok(EnumeratedSpace { candidates, n_invalid, n_filtered })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::registry::tech;
+
+    #[test]
+    fn knob_grammar_roundtrips_and_rejects() {
+        for k in Knob::ALL {
+            assert_eq!(Knob::parse(k.name()), Ok(k));
+        }
+        let err = Knob::parse("warp").unwrap_err();
+        for name in ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank"] {
+            assert!(err.contains(name), "{err}");
+        }
+    }
+
+    #[test]
+    fn axis_grammar_parses_the_cli_form() {
+        let a = Axis::parse("n_pes=2,4, 8").unwrap();
+        assert_eq!(a.knob, Knob::NPes);
+        assert_eq!(a.values, vec![2, 4, 8]);
+        assert!(Axis::parse("n_pes").unwrap_err().contains("knob=v1,v2"));
+        assert!(Axis::parse("warp=1").unwrap_err().contains("n_pes"));
+        assert!(Axis::parse("rank=16,x").unwrap_err().contains("rank"));
+    }
+
+    #[test]
+    fn knobs_apply_to_the_config_and_know_their_defaults() {
+        let mut cfg = AcceleratorConfig::paper_default();
+        Knob::NPes.apply(&mut cfg, 8);
+        Knob::CacheLines.apply(&mut cfg, 8192);
+        Knob::CacheAssoc.apply(&mut cfg, 8);
+        Knob::BankFactor.apply(&mut cfg, 2);
+        Knob::Rank.apply(&mut cfg, 8);
+        assert_eq!(
+            (cfg.n_pes, cfg.cache_lines, cfg.cache_assoc, cfg.esram_bank_factor, cfg.rank),
+            (8, 8192, 8, 2, 8)
+        );
+        assert_eq!(Knob::NPes.paper_default(), 4);
+        assert_eq!(Knob::CacheLines.paper_default(), 4096);
+        assert_eq!(Knob::Rank.paper_default(), 16);
+    }
+
+    #[test]
+    fn enumeration_is_the_filtered_cartesian_product() {
+        let space = DesignSpace::paper_grid(
+            vec![tech("e-sram"), tech("o-sram")],
+            vec![KernelKind::Spmttkrp],
+        );
+        // 3 PE counts × 2 cache sizes × 2 techs × 1 kernel
+        assert_eq!(space.n_points(), 12);
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.candidates.len(), 12);
+        assert_eq!((e.n_invalid, e.n_filtered), (0, 0));
+        for (i, c) in e.candidates.iter().enumerate() {
+            assert_eq!(c.index, i);
+            c.cfg.validate().unwrap();
+            assert!(c.area_mm2 > 0.0);
+        }
+        // deterministic order: axis-major, then tech, then kernel
+        assert_eq!(e.candidates[0].label(), "n_pes=2,cache_lines=4096");
+        assert_eq!(e.candidates[0].tech.name, "e-sram");
+        assert_eq!(e.candidates[1].tech.name, "o-sram");
+        assert_eq!(e.candidates[2].label(), "n_pes=2,cache_lines=8192");
+        // exactly one paper-default config per tech
+        let defaults: Vec<&Candidate> =
+            e.candidates.iter().filter(|c| c.is_paper_default()).collect();
+        assert_eq!(defaults.len(), 2);
+        assert_eq!(defaults[0].label(), "n_pes=4,cache_lines=4096");
+    }
+
+    #[test]
+    fn invalid_configs_are_counted_not_enumerated() {
+        let mut space = DesignSpace::paper_grid(vec![tech("o-sram")], vec![KernelKind::Spmttkrp]);
+        // rank 32 → 128 B rows > 64 B lines: every rank-32 combo invalid
+        space.axes = vec![Axis::new(Knob::Rank, vec![16, 32])];
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.candidates.len(), 1);
+        assert_eq!(e.n_invalid, 1);
+        assert!(e.candidates.iter().all(|c| c.cfg.rank == 16));
+    }
+
+    #[test]
+    fn area_budget_and_reticle_prune_per_technology() {
+        let mut space = DesignSpace::paper_grid(
+            vec![tech("e-sram"), tech("o-sram")],
+            vec![KernelKind::Spmttkrp],
+        );
+        space.axes = Vec::new();
+        // a Table-I e-sram design is a few hundred mm²; o-sram is wafer-scale
+        space.budget_mm2 = Some(500.0);
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.candidates.len(), 1);
+        assert_eq!(e.candidates[0].tech.name, "e-sram");
+        assert_eq!(e.n_filtered, 1);
+        assert_eq!(e.candidates[0].label(), "base");
+        // the reticle predicate prunes the same wafer-scale point
+        space.budget_mm2 = None;
+        space.exclude_wafer_scale = true;
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.candidates.len(), 1);
+        assert_eq!(e.candidates[0].tech.name, "e-sram");
+    }
+
+    #[test]
+    fn invalid_spaces_are_rejected() {
+        let mut s = DesignSpace::paper_grid(vec![tech("o-sram")], vec![KernelKind::Spmttkrp]);
+        s.techs.clear();
+        assert!(s.enumerate().is_err());
+        let mut s = DesignSpace::paper_grid(vec![tech("o-sram")], vec![KernelKind::Spmttkrp]);
+        s.kernels.clear();
+        assert!(s.enumerate().is_err());
+        let mut s = DesignSpace::paper_grid(vec![tech("o-sram")], vec![KernelKind::Spmttkrp]);
+        s.axes.push(Axis::new(Knob::NPes, vec![16]));
+        assert!(s.enumerate().unwrap_err().contains("n_pes"));
+        // a duplicated value would enumerate the same candidate twice
+        let mut s = DesignSpace::paper_grid(vec![tech("o-sram")], vec![KernelKind::Spmttkrp]);
+        s.axes = vec![Axis::new(Knob::NPes, vec![4, 4])];
+        let e = s.enumerate().unwrap_err();
+        assert!(e.contains("n_pes") && e.contains("twice"), "{e}");
+        let mut s = DesignSpace::paper_grid(
+            vec![tech("o-sram"), tech("o-sram")],
+            vec![KernelKind::Spmttkrp],
+        );
+        assert!(s.enumerate().is_err());
+        s.techs = vec![tech("o-sram")];
+        s.kernels = vec![KernelKind::Spmm, KernelKind::Spmm];
+        assert!(s.enumerate().is_err());
+        s.kernels = vec![KernelKind::Spmm];
+        s.budget_mm2 = Some(0.0);
+        assert!(s.enumerate().is_err());
+    }
+}

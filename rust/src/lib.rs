@@ -111,6 +111,19 @@
 //! are closed over the registry: any entry — builtin, config-file or
 //! programmatic — simulates on either backend with no per-name code.
 //!
+//! ## Design-space exploration
+//!
+//! [`explore`] searches the hardware design space instead of replaying
+//! one point: a [`explore::DesignSpace`] axis grammar over
+//! [`accel::config::AcceleratorConfig`] knobs × technologies × kernels
+//! is screened on the analytic engine, the Pareto frontier over
+//! (runtime, energy, area) is extracted, and the survivors are confirmed
+//! on the event engine — any rank flip is surfaced as an
+//! [`explore::ExploreDelta`], never silently dropped. Evaluations are
+//! memoized in a content-keyed [`explore::EvalCache`] shared across
+//! searches. Front-ends: `photon-mttkrp explore`, the `design_space`
+//! example, and the frontier table `reproduce` prints.
+//!
 //! ## The sweep engine and host parallelism
 //!
 //! [`sim::sweep`] fans the cartesian product of
@@ -142,6 +155,7 @@ pub mod controller;
 pub mod coordinator;
 pub mod dma;
 pub mod energy;
+pub mod explore;
 pub mod kernel;
 pub mod mem;
 pub mod mttkrp;
@@ -167,6 +181,10 @@ pub mod prelude {
         simulate_mode_with_kernel, Compute, EngineDelta, TechComparison, TechRun,
     };
     pub use crate::energy::model::{EnergyBreakdown, EnergyModel};
+    pub use crate::explore::{
+        frontier_table, run_explore, run_explore_with_cache, Axis, DesignSpace, EvalCache,
+        ExploreResult, ExploreSpec, Knob, ObjectiveKind, Objectives,
+    };
     pub use crate::kernel::{KernelKind, KernelTotals, SparseKernel};
     pub use crate::mem::registry::{self, tech, TechRegistry, TechSpec};
     pub use crate::mem::tech::MemTechnology;

@@ -14,8 +14,16 @@
 //!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T]
 //!     [--chunk-nnz N] [--config FILE]
 //!     parallel {tensor x mode x tech x scale} design-space sweep
+//! photon-mttkrp explore [--tensor N] [--scale S] [--seed N] [--tech T]...
+//!     [--kernel K]... [--axes KNOB=V1,V2,...]... [--budget-mm2 X]
+//!     [--exclude-wafer-scale] [--objective runtime|energy|edp|area]
+//!     [--top N] [--threads T] [--chunk-nnz N] [--json FILE] [--config FILE]
+//!     Pareto-frontier search over {config knobs x tech x kernel}:
+//!     analytic screen of the full grid, event-engine confirmation of the
+//!     frontier survivors, any rank flip reported as a delta line
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
+//!     + the explore frontier table
 //! photon-mttkrp cpals [--rank R] [--iters N] [--nnz N] [--dim D] [--seed N] [--artifacts]
 //! photon-mttkrp mttkrp <file.tns> [--mode M] [--rank R] [--artifacts]
 //! ```
@@ -39,8 +47,12 @@ use photon_mttkrp::coordinator::driver::{
     apply_memory_mapping, compare_technologies_on_engines, paper_pair, Compute, EngineDelta,
     TechComparison,
 };
+use photon_mttkrp::explore::{
+    self, frontier_table, run_explore, Axis, DesignSpace, ExploreSpec, ObjectiveKind,
+};
 use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry;
+use photon_mttkrp::mem::tech::MemTechnology;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::runtime::client::Runtime;
@@ -115,6 +127,46 @@ fn cli() -> Command {
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
+            Command::new("explore", "Pareto-frontier search over accelerator configurations")
+                .opt("tensor", "NAME", "FROSTT preset name (e.g. nell-2)", Some("nell-2"))
+                .opt("scale", "S", "workload scale factor (tensor only)", Some("0.001"))
+                .opt("seed", "N", "generator seed", Some("42"))
+                .opt_repeated("tech", "T", "technology name or `all` (repeatable; default: all)")
+                .opt_repeated(
+                    "kernel",
+                    "K",
+                    "sparse kernel or `all` (repeatable; default: spmttkrp)",
+                )
+                .opt_repeated(
+                    "axes",
+                    "KNOB=V1,V2,...",
+                    "design-space axis (n_pes | cache_lines | cache_assoc | bank_factor | \
+                     rank); default: n_pes=2,4,8 cache_lines=4096,8192",
+                )
+                .opt("budget-mm2", "MM2", "drop candidates whose design area exceeds this", None)
+                .flag(
+                    "exclude-wafer-scale",
+                    'w',
+                    "drop candidates larger than one reticle (858 mm^2)",
+                )
+                .opt(
+                    "objective",
+                    "O",
+                    "frontier ranking: runtime | energy | edp | area",
+                    Some("edp"),
+                )
+                .opt("top", "N", "frontier rows to print (0 = all)", Some("10"))
+                .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
+                .opt(
+                    "chunk-nnz",
+                    "N",
+                    "access-stream chunk granularity in nonzeros",
+                    Some("65536"),
+                )
+                .opt("json", "FILE", "also write the frontier as JSON", None)
+                .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
+        )
+        .subcommand(
             Command::new("reproduce", "regenerate every paper table and figure")
                 .opt("scale", "S", "workload scale factor", Some("0.001"))
                 .opt("seed", "N", "generator seed", Some("42"))
@@ -150,6 +202,48 @@ fn load_config(p: &Parsed) -> Result<AcceleratorConfig, String> {
         cfg.apply_config(&file)?;
     }
     Ok(cfg)
+}
+
+/// Resolve the repeatable `--tech` selection shared by `sweep` and
+/// `explore`: nothing given or `all` ⇒ every registered technology;
+/// otherwise each name resolves through the registry.
+fn resolve_tech_list(p: &Parsed) -> Result<Vec<MemTechnology>, String> {
+    let given = p.get_all("tech");
+    let names: Vec<String> = if given.contains(&"all") {
+        if given.len() > 1 {
+            return Err(
+                "--tech all already selects every registered technology; \
+                 drop the other --tech values"
+                    .into(),
+            );
+        }
+        registry::names()
+    } else if given.is_empty() {
+        registry::names()
+    } else {
+        given.iter().map(|s| s.to_string()).collect()
+    };
+    names.iter().map(|n| registry::resolve(n)).collect()
+}
+
+/// Resolve a repeatable `--kernel` selection (the `explore` axis):
+/// nothing given ⇒ the paper's spMTTKRP; `all` ⇒ every builtin.
+fn resolve_kernel_list(p: &Parsed) -> Result<Vec<KernelKind>, String> {
+    let given = p.get_all("kernel");
+    if given.contains(&"all") {
+        if given.len() > 1 {
+            return Err(
+                "--kernel all already selects every registered kernel; \
+                 drop the other --kernel values"
+                    .into(),
+            );
+        }
+        return Ok(KernelKind::ALL.to_vec());
+    }
+    if given.is_empty() {
+        return Ok(vec![KernelKind::Spmttkrp]);
+    }
+    given.iter().map(|s| KernelKind::parse(s)).collect()
 }
 
 fn parse_f64_list(p: &Parsed, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
@@ -372,27 +466,7 @@ fn run() -> Result<(), String> {
                         .ok_or_else(|| format!("unknown tensor `{n}`"))
                 })
                 .collect::<Result<Vec<_>, _>>()?;
-            let tech_names: Vec<String> = {
-                let given = p.get_all("tech");
-                if given.contains(&"all") {
-                    if given.len() > 1 {
-                        return Err(
-                            "--tech all already selects every registered technology; \
-                             drop the other --tech values"
-                                .into(),
-                        );
-                    }
-                    registry::names()
-                } else if given.is_empty() {
-                    registry::names()
-                } else {
-                    given.iter().map(|s| s.to_string()).collect()
-                }
-            };
-            let techs = tech_names
-                .iter()
-                .map(|n| registry::resolve(n))
-                .collect::<Result<Vec<_>, _>>()?;
+            let techs = resolve_tech_list(&p)?;
             let modes: Vec<usize> = p
                 .get_all("mode")
                 .iter()
@@ -430,6 +504,82 @@ fn run() -> Result<(), String> {
                 n_threads,
             );
         }
+        "explore" => {
+            let cfg_base = load_config(&p)?;
+            let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
+            let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
+            let name = p.get("tensor").unwrap();
+            let ft = FrosttTensor::from_name(name)
+                .ok_or_else(|| format!("unknown tensor `{name}`"))?;
+            // validate cheap arguments before anything expensive
+            let objective = ObjectiveKind::parse(p.get("objective").unwrap())?;
+            let top = p.get_usize("top").map_err(|e| e.to_string())?;
+            let axes: Vec<Axis> = p
+                .get_all("axes")
+                .iter()
+                .map(|s| Axis::parse(s))
+                .collect::<Result<Vec<_>, _>>()?;
+            let techs = resolve_tech_list(&p)?;
+            let kernels = resolve_kernel_list(&p)?;
+            let budget_mm2 = match p.get("budget-mm2") {
+                Some(s) => {
+                    Some(s.parse::<f64>().map_err(|e| format!("--budget-mm2 `{s}`: {e}"))?)
+                }
+                None => None,
+            };
+            let mut space = DesignSpace::paper_grid(techs, kernels);
+            space.base_cfg = cfg_base;
+            if !axes.is_empty() {
+                space.axes = axes;
+            }
+            space.budget_mm2 = budget_mm2;
+            space.exclude_wafer_scale = p.flag("exclude-wafer-scale");
+            let mut spec = ExploreSpec::new(space, preset(ft));
+            spec.scale = scale;
+            spec.seed = seed;
+            spec.objective = objective;
+            spec.threads = p.get_usize("threads").map_err(|e| e.to_string())?;
+            spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
+            let n_threads = sweep::effective_threads(spec.threads);
+            eprintln!(
+                "exploring up to {} candidates ({} techs x {} kernels) by {} on {} threads ...",
+                spec.space.n_points(),
+                spec.space.techs.len(),
+                spec.space.kernels.len(),
+                spec.objective,
+                n_threads,
+            );
+            let t0 = std::time::Instant::now();
+            let result = run_explore(&spec)?;
+            println!("{}", frontier_table(&result, top).render_ascii());
+            if result.deltas.is_empty() {
+                println!(
+                    "event confirmation agrees with the analytic screen on all {} \
+                     frontier members",
+                    result.frontier.len()
+                );
+            } else {
+                for d in &result.deltas {
+                    println!("{}", d.describe());
+                }
+            }
+            eprintln!(
+                "screened {} candidates ({} invalid, {} constraint-filtered) in {:.2}s on \
+                 {} threads; {} frontier members, cache {} miss / {} hit",
+                result.candidates.len(),
+                result.n_invalid,
+                result.n_filtered,
+                t0.elapsed().as_secs_f64(),
+                n_threads,
+                result.cache_misses,
+                result.cache_hits,
+            );
+            if let Some(path) = p.get("json") {
+                explore::write_frontier_json(&result, std::path::Path::new(path))
+                    .map_err(|e| format!("--json {path}: {e}"))?;
+                eprintln!("wrote {path}");
+            }
+        }
         "reproduce" => {
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
@@ -453,6 +603,8 @@ fn run() -> Result<(), String> {
             println!("{}", render(&paper::table_cross_validation(scale, seed)));
             eprintln!("pricing every registered sparse kernel on the paper pair ...");
             println!("{}", render(&paper::table_kernels(scale, seed)));
+            eprintln!("searching the default design-space grid for the EDP frontier ...");
+            println!("{}", render(&paper::table_frontier(scale, seed)));
         }
         "cpals" => {
             let rank = p.get_usize("rank").map_err(|e| e.to_string())?;
@@ -508,7 +660,15 @@ fn run() -> Result<(), String> {
                 out.frobenius()
             );
         }
-        other => return Err(format!("unknown subcommand `{other}`")),
+        // unreachable through parse_env (the parser rejects unknown
+        // subcommands with the same listing), but a dispatch arm added
+        // without a parser entry must fail just as helpfully
+        other => {
+            return Err(format!(
+                "unknown subcommand `{other}` (expected one of: {})",
+                cmd.subcommand_names().join(", ")
+            ))
+        }
     }
     Ok(())
 }

@@ -14,6 +14,7 @@ use crate::coordinator::driver::{
     compare_paper_pair, compare_technologies_with_kernel, cross_validate, paper_pair,
     TechComparison,
 };
+use crate::explore::{frontier_table, run_explore, DesignSpace, ExploreSpec};
 use crate::kernel::{KernelKind, SparseKernel};
 use crate::mem::registry::{self, TechRegistry};
 use crate::mem::tech::FABRIC_HZ;
@@ -216,6 +217,22 @@ pub fn table_kernels(scale: f64, seed: u64) -> Table {
     t
 }
 
+/// The design-space frontier, paper-style: screen the default explore
+/// grid (PE count × cache capacity across every registered technology,
+/// spMTTKRP) on the NELL-2 fingerprint at `scale`, confirm the frontier
+/// survivors on the event engine, and tabulate the EDP-ranked Pareto
+/// frontier — the beyond-Table-I counterpart of Fig. 7/8: *where* each
+/// technology lands in the design space rather than how two fixed points
+/// compare (EXPERIMENTS.md §Explore).
+pub fn table_frontier(scale: f64, seed: u64) -> Table {
+    let space = DesignSpace::paper_grid(registry::all(), vec![KernelKind::Spmttkrp]);
+    let mut spec = ExploreSpec::new(space, preset(FrosttTensor::Nell2));
+    spec.scale = scale;
+    spec.seed = seed;
+    let result = run_explore(&spec).expect("default explore grid is always non-empty");
+    frontier_table(&result, 0)
+}
+
 /// One evaluated tensor for the Fig. 7 / Fig. 8 suites.
 pub struct EvaluatedTensor {
     pub name: String,
@@ -356,6 +373,21 @@ mod tests {
         assert!(s.contains("delta"), "{s}");
         // non-negativity of the deltas themselves is asserted on the
         // EngineDelta values by the driver and engine-agreement tests
+    }
+
+    #[test]
+    fn frontier_table_keeps_the_paper_default_osram_point() {
+        let t = table_frontier(1.0 / 65536.0, 1);
+        assert!(t.n_rows() >= 1);
+        let s = t.render_ascii();
+        assert!(s.contains("Pareto frontier by edp"), "{s}");
+        // the acceptance anchor: the Table I o-sram design point is a
+        // frontier member of the default grid
+        assert!(
+            s.lines().any(|l| l.contains("n_pes=4,cache_lines=4096") && l.contains(" o-sram ")),
+            "{s}"
+        );
+        assert!(s.contains("spmttkrp"), "{s}");
     }
 
     #[test]

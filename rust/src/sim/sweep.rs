@@ -180,6 +180,12 @@ impl SweepPoint {
     pub fn hit_rate(&self) -> f64 {
         self.report.hit_rate()
     }
+    /// Energy-delay product of this scenario (J·s) — the same ranking
+    /// accessor as [`crate::explore::Objectives::edp`], so sweep rows and
+    /// explore candidates order identically under the EDP objective.
+    pub fn edp(&self) -> f64 {
+        self.energy.total_j() * self.runtime_s()
+    }
 }
 
 /// A prepared (tensor × scale) workload shared by all its points: the
@@ -316,7 +322,7 @@ pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
         ),
         &[
             "tensor", "kernel", "scale", "mode", "tech", "runtime", "hit", "bottleneck",
-            "energy", "speedup",
+            "energy", "edp", "speedup",
         ],
     )
     .align(0, Align::Left)
@@ -338,6 +344,7 @@ pub fn summary_table(spec: &SweepSpec, points: &[SweepPoint]) -> Table {
             format!("{:.1}%", p.hit_rate() * 100.0),
             p.report.bottleneck().name().to_string(),
             format!("{:.3e} J", p.energy.total_j()),
+            format!("{:.3e}", p.edp()),
             format!("{:.2}x", base / p.runtime_cycles()),
         ]);
     }
@@ -559,5 +566,16 @@ mod tests {
         assert!(rendered.contains("o-sram-imc"));
         // baseline rows compare against themselves at exactly 1.00x
         assert!(rendered.contains("1.00x"));
+        // the EDP objective column rides along for every point
+        assert!(rendered.contains("edp"), "{rendered}");
+    }
+
+    #[test]
+    fn edp_is_the_runtime_energy_product() {
+        let points = run_sweep(&tiny_spec(1)).unwrap();
+        for p in &points {
+            assert_eq!(p.edp().to_bits(), (p.energy.total_j() * p.runtime_s()).to_bits());
+            assert!(p.edp() > 0.0);
+        }
     }
 }

@@ -262,9 +262,10 @@ impl Bench {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars) —
-/// bench names are ASCII identifiers but the writer must never emit
-/// invalid JSON whatever the caller names a bench.
-fn json_escape(s: &str) -> String {
+/// names are usually ASCII identifiers but a writer must never emit
+/// invalid JSON whatever it is fed. Shared by the bench JSON writer and
+/// the explore frontier export ([`crate::explore::export`]).
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

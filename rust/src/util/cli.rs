@@ -116,6 +116,12 @@ impl Command {
         self
     }
 
+    /// Registered subcommand names, in definition order — the help
+    /// listing's order, and what the unknown-subcommand error enumerates.
+    pub fn subcommand_names(&self) -> Vec<&str> {
+        self.subcommands.iter().map(|s| s.name.as_str()).collect()
+    }
+
     /// Generated help text.
     pub fn help(&self) -> String {
         let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
@@ -245,7 +251,12 @@ impl Command {
                         return Ok(sub_parsed);
                     }
                     if !self.subcommands.is_empty() && self.positionals.is_empty() {
-                        return Err(CliError(format!("unknown subcommand `{a}`")));
+                        // list every registered subcommand, matching the
+                        // helpful unknown --kernel / --tech error style
+                        return Err(CliError(format!(
+                            "unknown subcommand `{a}` (expected one of: {})",
+                            self.subcommand_names().join(", ")
+                        )));
                     }
                 }
                 first_positional_seen = true;
@@ -388,6 +399,14 @@ mod tests {
     fn unknown_option_rejected() {
         assert!(cmd().parse_from(&["--nope"]).is_err());
         assert!(cmd().parse_from(&["bogus-subcommand"]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_lists_the_registered_ones() {
+        let e = cmd().parse_from(&["bogus-subcommand"]).unwrap_err();
+        assert!(e.0.contains("unknown subcommand `bogus-subcommand`"), "{e}");
+        assert!(e.0.contains("expected one of: run"), "{e}");
+        assert_eq!(cmd().subcommand_names(), vec!["run"]);
     }
 
     #[test]

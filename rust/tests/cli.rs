@@ -12,8 +12,19 @@ fn help_lists_subcommands() {
     let out = bin().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["info", "simulate", "sweep", "reproduce", "cpals", "mttkrp"] {
+    for sub in ["info", "simulate", "sweep", "explore", "reproduce", "cpals", "mttkrp"] {
         assert!(text.contains(sub), "help missing `{sub}`:\n{text}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_lists_every_registered_one() {
+    let out = bin().arg("explode").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown subcommand `explode`"), "{err}");
+    for sub in ["info", "simulate", "sweep", "explore", "reproduce", "cpals", "mttkrp"] {
+        assert!(err.contains(sub), "error must list `{sub}`:\n{err}");
     }
 }
 
@@ -357,6 +368,100 @@ fn sweep_accepts_a_chunk_granularity() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("sweep: 3 points"), "{text}");
+}
+
+#[test]
+fn explore_prints_a_frontier_and_exports_json() {
+    let json = std::env::temp_dir()
+        .join(format!("photon_cli_frontier_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&json);
+    let out = bin()
+        .args([
+            "explore", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "e-sram", "--tech", "o-sram",
+            "--axes", "n_pes=2,4", "--objective", "edp", "--top", "4",
+            "--json", json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Pareto frontier by edp"), "{text}");
+    assert!(text.contains("o-sram"), "{text}");
+    // the two-phase contract is always reported: either delta lines
+    // (a re-rank or a within-frontier domination) or the explicit
+    // all-clear
+    assert!(
+        text.contains("rank flip")
+            || text.contains("event dominance")
+            || text.contains("agrees with the analytic screen"),
+        "{text}"
+    );
+    let meta = String::from_utf8_lossy(&out.stderr);
+    assert!(meta.contains("screened 4 candidates"), "{meta}");
+    let body = std::fs::read_to_string(&json).unwrap();
+    assert!(body.contains("\"frontier\": ["), "{body}");
+    assert!(body.contains("\"objective\": \"edp\""), "{body}");
+    let _ = std::fs::remove_file(&json);
+}
+
+#[test]
+fn explore_ranks_by_every_objective() {
+    for objective in ["runtime", "energy", "edp", "area"] {
+        let out = bin()
+            .args([
+                "explore", "--tensor", "nell-2", "--scale", "0.0001",
+                "--tech", "o-sram", "--axes", "n_pes=2,4",
+                "--objective", objective,
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "--objective {objective}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("Pareto frontier by {objective}")), "{text}");
+    }
+}
+
+#[test]
+fn explore_rejects_bad_grammar_helpfully() {
+    // unknown knob: the error lists the whole grammar
+    let out = bin().args(["explore", "--axes", "warp=1,2"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for knob in ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank"] {
+        assert!(err.contains(knob), "error must list `{knob}`:\n{err}");
+    }
+    // unknown objective: the error lists the options
+    let out = bin().args(["explore", "--objective", "speed"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown objective `speed`"), "{err}");
+    for o in ["runtime", "energy", "edp", "area"] {
+        assert!(err.contains(o), "error must list `{o}`:\n{err}");
+    }
+}
+
+#[test]
+fn explore_area_budget_excludes_wafer_scale_points() {
+    let out = bin()
+        .args([
+            "explore", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "e-sram", "--tech", "o-sram",
+            "--axes", "n_pes=2,4", "--budget-mm2", "858",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // every o-sram candidate is beyond a reticle: only e-sram survives
+    assert!(!text.contains("o-sram"), "{text}");
+    assert!(text.contains("e-sram"), "{text}");
+    let meta = String::from_utf8_lossy(&out.stderr);
+    assert!(meta.contains("constraint-filtered"), "{meta}");
 }
 
 #[test]

@@ -1,0 +1,268 @@
+//! Integration tests of the explore subsystem: Pareto invariants over a
+//! real search, evaluation-cache hit/miss bit-identity, thread-count
+//! determinism of the frontier, constraint filtering, and the acceptance
+//! anchor — the paper-default O-SRAM design point is a member of the
+//! default grid's EDP frontier.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::explore::{
+    dominates, run_explore, run_explore_with_cache, Axis, DesignSpace, EvalCache, ExploreResult,
+    ExploreSpec, Knob, ObjectiveKind,
+};
+use photon_mttkrp::kernel::KernelKind;
+use photon_mttkrp::mem::registry::tech;
+use photon_mttkrp::sim::{EngineKind, SimBudget};
+use photon_mttkrp::tensor::gen::{preset, FrosttTensor, TensorSpec};
+
+/// The default paper grid over all four builtin technologies on the
+/// NELL-2 fingerprint — the acceptance-criteria search.
+fn paper_spec(threads: usize) -> ExploreSpec {
+    let space = DesignSpace::paper_grid(
+        vec![tech("e-sram"), tech("o-sram"), tech("o-sram-imc"), tech("e-uram")],
+        vec![KernelKind::Spmttkrp],
+    );
+    let mut spec = ExploreSpec::new(space, preset(FrosttTensor::Nell2));
+    spec.scale = 1.0 / 4096.0;
+    spec.seed = 42;
+    spec.threads = threads;
+    spec
+}
+
+/// A small custom-grid search used by the structural tests.
+fn tiny_spec(threads: usize) -> ExploreSpec {
+    let mut space = DesignSpace::paper_grid(
+        vec![tech("e-sram"), tech("o-sram")],
+        vec![KernelKind::Spmttkrp, KernelKind::Spmm],
+    );
+    space.axes = vec![
+        Axis::parse("n_pes=2,4").unwrap(),
+        Axis::parse("cache_lines=4096,8192").unwrap(),
+    ];
+    let mut spec =
+        ExploreSpec::new(space, TensorSpec::custom("grid", vec![64, 64, 64], 6_000, 0.9));
+    spec.threads = threads;
+    spec
+}
+
+fn assert_bit_identical(a: &ExploreResult, b: &ExploreResult, what: &str) {
+    assert_eq!(a.candidates.len(), b.candidates.len(), "{what}");
+    for (x, y) in a.analytic.iter().zip(&b.analytic) {
+        assert_eq!(x.runtime_s.to_bits(), y.runtime_s.to_bits(), "{what}");
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{what}");
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "{what}");
+    }
+    assert_eq!(a.frontier.len(), b.frontier.len(), "{what}");
+    for (x, y) in a.frontier.iter().zip(&b.frontier) {
+        assert_eq!(x.candidate.label(), y.candidate.label(), "{what}");
+        assert_eq!(x.candidate.tech.name, y.candidate.tech.name, "{what}");
+        assert_eq!(x.candidate.kernel, y.candidate.kernel, "{what}");
+        assert_eq!(x.analytic.runtime_s.to_bits(), y.analytic.runtime_s.to_bits(), "{what}");
+        assert_eq!(x.analytic.energy_j.to_bits(), y.analytic.energy_j.to_bits(), "{what}");
+        assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits(), "{what}");
+        assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits(), "{what}");
+        assert_eq!(
+            (x.analytic_rank, x.event_rank, x.event_dominated),
+            (y.analytic_rank, y.event_rank, y.event_dominated),
+            "{what}"
+        );
+    }
+    assert_eq!(a.deltas.len(), b.deltas.len(), "{what}");
+}
+
+#[test]
+fn paper_default_osram_is_on_the_edp_frontier() {
+    // The acceptance anchor. NELL-2 is the paper's on-chip-bound (hot)
+    // fingerprint, where O-SRAM's Eq. 1 bandwidth pays: smaller-area
+    // rivals (fewer PEs, electrical arrays) are strictly slower or
+    // strictly costlier in energy, and every faster rival (more PEs,
+    // more cache, the IMC array) buys its speed with strictly more area
+    // — so the Table I O-SRAM point survives 3-objective dominance.
+    let r = run_explore(&paper_spec(0)).unwrap();
+    assert_eq!(r.objective, ObjectiveKind::Edp);
+    // 3 PE counts x 2 cache sizes x 4 techs
+    assert_eq!(r.candidates.len(), 24);
+    let p = r
+        .paper_default_point("o-sram")
+        .expect("paper-default o-sram config must be an EDP-frontier member");
+    assert_eq!(p.candidate.label(), "n_pes=4,cache_lines=4096");
+    assert!(p.candidate.cfg == AcceleratorConfig::paper_default());
+    // frontier rows are in analytic-rank order, EDP ascending
+    for w in r.frontier.windows(2) {
+        assert!(w[0].analytic_rank < w[1].analytic_rank);
+        assert!(w[0].analytic.edp() <= w[1].analytic.edp());
+    }
+}
+
+#[test]
+fn frontier_invariants_hold_on_a_real_search() {
+    let r = run_explore(&tiny_spec(2)).unwrap();
+    // 2 PE counts x 2 cache sizes x 2 techs x 2 kernels
+    assert_eq!(r.candidates.len(), 16);
+    let frontier_idx: Vec<usize> = r.frontier.iter().map(|p| p.candidate.index).collect();
+    // (1) no frontier point is dominated by ANY candidate of its kernel
+    for p in &r.frontier {
+        let me = &r.analytic[p.candidate.index];
+        for (j, other) in r.analytic.iter().enumerate() {
+            if j != p.candidate.index && r.candidates[j].kernel == p.candidate.kernel {
+                assert!(
+                    !dominates(other, me),
+                    "frontier member {} ({}) dominated by candidate {j}",
+                    p.candidate.label(),
+                    p.candidate.tech.name
+                );
+            }
+        }
+    }
+    // (2) every excluded candidate is dominated by a frontier member of
+    // its kernel
+    for (i, obj) in r.analytic.iter().enumerate() {
+        if frontier_idx.contains(&i) {
+            continue;
+        }
+        assert!(
+            r.frontier.iter().any(|p| {
+                p.candidate.kernel == r.candidates[i].kernel
+                    && dominates(&r.analytic[p.candidate.index], obj)
+            }),
+            "excluded candidate {} ({} {}) not dominated by any frontier member",
+            r.candidates[i].label(),
+            r.candidates[i].tech.name,
+            r.candidates[i].kernel.name()
+        );
+    }
+    // (3) the confirmation pass never shrinks the frontier, and every
+    // disagreement is an explicit delta
+    assert_eq!(r.frontier.len(), frontier_idx.len());
+    for p in &r.frontier {
+        assert!(p.event.runtime_s >= p.analytic.runtime_s);
+        assert!(p.event.energy_j >= p.analytic.energy_j);
+        assert_eq!(p.event.area_mm2.to_bits(), p.analytic.area_mm2.to_bits());
+        if p.flipped() {
+            assert!(
+                r.deltas.iter().any(|d| d.label == p.candidate.label()
+                    && d.tech == p.candidate.tech.name
+                    && d.kernel == p.candidate.kernel.name()),
+                "flipped member {} has no delta",
+                p.candidate.label()
+            );
+        }
+    }
+    assert_eq!(r.deltas.len(), r.frontier.iter().filter(|p| p.flipped()).count());
+}
+
+#[test]
+fn evaluation_cache_hit_equals_miss_bit_for_bit() {
+    let spec = tiny_spec(2);
+    let cache = EvalCache::new();
+    let cold = run_explore_with_cache(&spec, &cache).unwrap();
+    assert!(cold.cache_misses > 0);
+    assert_eq!(cold.cache_hits, 0);
+    let warm = run_explore_with_cache(&spec, &cache).unwrap();
+    assert_eq!(warm.cache_misses, 0, "second identical search must be all hits");
+    assert_eq!(warm.cache_hits, cold.cache_misses);
+    assert_bit_identical(&cold, &warm, "cold vs warm cache");
+    // a fresh cache (all misses again) reproduces the same bits too
+    let fresh = run_explore(&spec).unwrap();
+    assert_bit_identical(&cold, &fresh, "shared vs fresh cache");
+}
+
+#[test]
+fn frontier_is_bit_identical_across_thread_counts() {
+    let base = run_explore(&paper_spec(1)).unwrap();
+    for threads in [2usize, 0] {
+        let other = run_explore(&paper_spec(threads)).unwrap();
+        assert_bit_identical(&base, &other, &format!("threads={threads}"));
+    }
+    // the structural grid too, with both kernels in play
+    let tiny1 = run_explore(&tiny_spec(1)).unwrap();
+    for threads in [2usize, 8, 0] {
+        let other = run_explore(&tiny_spec(threads)).unwrap();
+        assert_bit_identical(&tiny1, &other, &format!("tiny threads={threads}"));
+    }
+}
+
+#[test]
+fn chunk_granularity_is_bit_transparent() {
+    let base = run_explore(&tiny_spec(2)).unwrap();
+    let mut s = tiny_spec(2);
+    s.chunk_nnz = 37;
+    let other = run_explore(&s).unwrap();
+    assert_bit_identical(&base, &other, "chunk_nnz=37");
+    let mut s = tiny_spec(1);
+    s.chunk_nnz = 0;
+    assert!(run_explore(&s).is_err());
+}
+
+#[test]
+fn constraints_prune_and_report() {
+    // rank=32 breaks the 64 B line invariant: pruned as invalid
+    let mut s = tiny_spec(1);
+    s.space.axes = vec![Axis::new(Knob::Rank, vec![16, 32])];
+    let r = run_explore(&s).unwrap();
+    assert_eq!(r.n_invalid, 4); // 1 combo x 2 techs x 2 kernels
+    assert!(r.candidates.iter().all(|c| c.cfg.rank == 16));
+    // an area budget below the wafer-scale point keeps only electrical
+    // candidates — and the counts say so
+    let mut s = tiny_spec(1);
+    s.space.budget_mm2 = Some(858.0);
+    let r = run_explore(&s).unwrap();
+    assert!(r.candidates.iter().all(|c| c.tech.name.starts_with("e-")));
+    assert!(r.n_filtered > 0);
+    assert!(r.frontier.iter().all(|p| p.analytic.area_mm2 <= 858.0));
+    // the wafer-scale predicate prunes the same points
+    let mut s = tiny_spec(1);
+    s.space.exclude_wafer_scale = true;
+    let r2 = run_explore(&s).unwrap();
+    assert_eq!(
+        r.candidates.iter().map(|c| c.label()).collect::<Vec<_>>(),
+        r2.candidates.iter().map(|c| c.label()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn screening_matches_the_driver_path_bit_for_bit() {
+    // an axis-free space evaluates exactly the driver comparison
+    let mut s = tiny_spec(1);
+    s.space.axes = Vec::new();
+    s.space.techs = vec![tech("o-sram")];
+    s.space.kernels = vec![KernelKind::Spmttkrp];
+    let r = run_explore(&s).unwrap();
+    assert_eq!(r.candidates.len(), 1);
+    let tensor = s.tensor.clone().scaled(s.scale).generate(s.seed);
+    let c = photon_mttkrp::coordinator::driver::compare_technologies_with_budget(
+        &tensor,
+        &s.space.base_cfg,
+        &[tech("o-sram")],
+        EngineKind::Analytic,
+        KernelKind::Spmttkrp,
+        SimBudget::single_threaded(),
+    );
+    let run = c.baseline();
+    assert_eq!(r.analytic[0].runtime_s.to_bits(), run.report.total_runtime_s().to_bits());
+    assert_eq!(r.analytic[0].energy_j.to_bits(), run.energy.total_j().to_bits());
+}
+
+#[test]
+fn objective_selects_the_frontier_ordering_not_the_membership() {
+    let cache = EvalCache::new();
+    let mut s = tiny_spec(1);
+    s.objective = ObjectiveKind::Edp;
+    let by_edp = run_explore_with_cache(&s, &cache).unwrap();
+    s.objective = ObjectiveKind::Runtime;
+    let by_rt = run_explore_with_cache(&s, &cache).unwrap();
+    // same members (membership is pure Pareto), different order allowed
+    let mut a: Vec<usize> = by_edp.frontier.iter().map(|p| p.candidate.index).collect();
+    let mut b: Vec<usize> = by_rt.frontier.iter().map(|p| p.candidate.index).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b);
+    // re-ranking an already-screened grid costs zero new simulations
+    assert_eq!(by_rt.cache_misses, 0);
+    // and each ordering is monotone in its own objective
+    for w in by_rt.frontier.windows(2) {
+        assert!(w[0].analytic.runtime_s <= w[1].analytic.runtime_s);
+    }
+    for w in by_edp.frontier.windows(2) {
+        assert!(w[0].analytic.edp() <= w[1].analytic.edp());
+    }
+}
