@@ -1,9 +1,9 @@
-//! Explore-subsystem throughput: candidates/second of the two-phase
+//! Explore-subsystem throughput: candidates/second of the four-phase
 //! Pareto search, cold vs warm evaluation cache.
 //!
 //! A "candidate" is one (config × tech × kernel) point: the cold number
 //! prices a full analytic all-modes simulation per candidate (plus the
-//! event confirmation of the frontier survivors); the warm number prices
+//! grid-wide sampled event confirmation and the exact frontier pass); the warm number prices
 //! the same search answered entirely from the content-keyed
 //! [`photon_mttkrp::explore::EvalCache`] — the cross-search reuse path
 //! (`design_space` example §5). The warm/cold ratio is the headline:

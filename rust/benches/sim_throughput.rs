@@ -10,6 +10,10 @@
 //! {1, all} threads** on the hot fingerprint, so the enriched
 //! `BENCH_sim_throughput.json` written at the repository root records
 //! nnz/s per scenario — the perf trajectory the acceptance gate reads.
+//! A second grid times the event replay at sampling rates
+//! {1.0, 0.5, 0.25, 0.1} against the analytic baseline and lands in its
+//! own artifact, `BENCH_event_replay.json`, so the sampled-replay
+//! speedup curve is tracked separately from the engine trajectory.
 //! Set `PHOTON_BENCH_SMOKE=1` to shrink the tensors for CI smoke runs.
 
 mod common;
@@ -18,7 +22,7 @@ use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry::tech;
 use photon_mttkrp::sim::engine::simulate_mode;
-use photon_mttkrp::sim::{EngineKind, SimBudget};
+use photon_mttkrp::sim::{EngineKind, SampleSpec, SimBudget};
 use photon_mttkrp::tensor::csf::ModeView;
 use photon_mttkrp::tensor::gen::{self, TensorSpec};
 use photon_mttkrp::util::bench::Bench;
@@ -131,5 +135,51 @@ fn main() {
     match b.write_json(&json) {
         Ok(()) => eprintln!("wrote {}", json.display()),
         Err(e) => eprintln!("warning: could not write {}: {e}", json.display()),
+    }
+
+    // --- sampled-replay grid: its own Bench, its own artifact -----------
+    // Event-engine nnz/s at sampling rates {1.0, 0.5, 0.25, 0.1} plus the
+    // analytic baseline, default thread budget on the hot fingerprint.
+    // r100 is the exact SoA replay, so the r025/r100 ratio is the
+    // interactive-latency headline the explore loop banks on, and
+    // analytic/exact bounds what any sampling rate could ever reach.
+    let mut eb = Bench::new();
+    eb.group(if smoke { "event_replay_smoke" } else { "event_replay" });
+    let spmttkrp = KernelKind::Spmttkrp.kernel();
+    for (tag, rate) in [("r100", 1.0), ("r050", 0.5), ("r025", 0.25), ("r010", 0.1)] {
+        let budget = SimBudget::default().with_sample(SampleSpec { rate, seed: 0 });
+        eb.bench_items(&format!("event/{tag}"), hot.nnz() as f64, || {
+            EngineKind::Event
+                .simulate_kernel_mode_with_view_budget(
+                    spmttkrp,
+                    &hot,
+                    &hot_view,
+                    0,
+                    &cfg,
+                    &o,
+                    budget,
+                )
+                .runtime_cycles()
+        });
+    }
+    eb.bench_items("analytic/exact", hot.nnz() as f64, || {
+        EngineKind::Analytic
+            .simulate_kernel_mode_with_view_budget(
+                spmttkrp,
+                &hot,
+                &hot_view,
+                0,
+                &cfg,
+                &o,
+                SimBudget::default(),
+            )
+            .runtime_cycles()
+    });
+    println!("\n{}", eb.summary_table().render_ascii());
+    let ejson =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_event_replay.json");
+    match eb.write_json(&ejson) {
+        Ok(()) => eprintln!("wrote {}", ejson.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", ejson.display()),
     }
 }

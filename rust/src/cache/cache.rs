@@ -81,13 +81,11 @@ impl SetAssocCache {
         self.sets * self.assoc
     }
 
-    /// Hardware-style set index: low bits of a lightly mixed key (the mix
-    /// mirrors XOR-folding of tag bits into the index, standard practice to
-    /// decorrelate strided streams).
+    /// Hardware-style set index: low bits of the shared [`mix_key`]
+    /// folding, masked to the power-of-two set count.
     #[inline]
     fn set_of(&self, key: u64) -> usize {
-        let mixed = key ^ (key >> 17);
-        (mixed as usize) & (self.sets - 1)
+        (mix_key(key) as usize) & (self.sets - 1)
     }
 
     /// Access `key`; `write` marks the line dirty on hit or after fill.
@@ -151,11 +149,48 @@ pub fn row_key(matrix: usize, row: u32) -> u64 {
     ((matrix as u64 + 1) << 40) | row as u64
 }
 
+/// Light key mixing shared by every address-interleaving decision in the
+/// model: XOR-fold of the upper tag bits into the low bits (standard
+/// hardware practice to decorrelate strided streams). The cache's set
+/// index and the event engine's bank index both derive from this one
+/// function, so the functional model and the contention replay — exact
+/// or sampled — can never disagree on where a line lives.
+#[inline]
+pub fn mix_key(key: u64) -> u64 {
+    key ^ (key >> 17)
+}
+
+/// Which of `banks` interleaved cache banks serves `key` — the event
+/// engine's arbitration target ([`crate::sim::event`]). Same [`mix_key`]
+/// folding as the set index; banks need not be a power of two, so the
+/// fold is reduced by modulo rather than a mask.
+#[inline]
+pub fn bank_of(key: u64, banks: usize) -> usize {
+    (mix_key(key) % banks as u64) as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::{check, FnGen};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn bank_and_set_share_one_key_mixing() {
+        // the set index is the masked mix, the bank index the modular
+        // mix — one mix_key, two reductions. If they ever diverged, the
+        // sampled and exact replays could disagree on bank assignment.
+        let c = SetAssocCache::new(64, 2);
+        let mut r = Rng::new(17);
+        for _ in 0..10_000 {
+            let key = r.next_u64() >> 1; // stay clear of INVALID
+            assert_eq!(c.set_of(key), (mix_key(key) as usize) & 63);
+            assert_eq!(bank_of(key, 64), (mix_key(key) % 64) as usize);
+            // power-of-two bank counts agree with the masked form too
+            assert_eq!(bank_of(key, 16), (mix_key(key) as usize) & 15);
+            assert!(bank_of(key, 7) < 7); // non-power-of-two supported
+        }
+    }
 
     #[test]
     fn hit_after_fill() {

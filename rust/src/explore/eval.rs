@@ -18,10 +18,17 @@
 //! (config, tech, kernel, engine, workload) reached from different axis
 //! grammars, or a re-run with a warm cache — are therefore computed
 //! once. Host-execution knobs ([`SimBudget`]) are deliberately *not* part
-//! of the key: they are bit-transparent (pinned by
+//! of the key: threads and chunk size are bit-transparent (pinned by
 //! `rust/tests/parallel_determinism.rs`), so a hit and a miss return
 //! bit-identical vectors by construction (pinned by
-//! `rust/tests/explore.rs`).
+//! `rust/tests/explore.rs`). The one exception is
+//! [`SampleSpec`](crate::sim::SampleSpec): a sampled **event** replay
+//! legitimately changes the stall estimate, so a non-exact sample joins
+//! the key — but only for the event engine, and only when the rate is
+//! below 1.0. The analytic engine never replays, and a rate-1.0 event
+//! run is bit-identical to an unsampled one, so both key exactly —
+//! which is what lets the explore search's final exact frontier pass
+//! reuse rate-1.0 entries from a warm cache for free.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,7 +37,7 @@ use std::sync::Mutex;
 use crate::energy::model::EnergyModel;
 use crate::explore::objective::Objectives;
 use crate::explore::space::Candidate;
-use crate::sim::{EngineKind, SimBudget};
+use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
@@ -86,10 +93,22 @@ impl EvalCache {
     }
 }
 
-/// The content key of one (candidate, engine, workload) evaluation.
-pub fn candidate_key(cand: &Candidate, engine: EngineKind, workload_tag: &str) -> String {
+/// The content key of one (candidate, engine, workload, sample)
+/// evaluation. The sample tag appears only when it can change the
+/// result: event engine at a rate below 1.0 (see the module docs).
+pub fn candidate_key(
+    cand: &Candidate,
+    engine: EngineKind,
+    workload_tag: &str,
+    sample: SampleSpec,
+) -> String {
+    let sample_tag = if engine == EngineKind::Event && !sample.is_exact() {
+        format!("|sample{:016x}@{}", sample.rate.to_bits(), sample.seed)
+    } else {
+        String::new()
+    };
     format!(
-        "{:?}|{:?}|{}|{}|{workload_tag}",
+        "{:?}|{:?}|{}|{}{sample_tag}|{workload_tag}",
         cand.cfg,
         cand.tech,
         cand.kernel.name(),
@@ -110,7 +129,9 @@ pub struct Evaluator<'a> {
     /// Workload identity for cache keys: tensor name (which embeds the
     /// scale), nnz, generator seed and remap switch.
     pub workload_tag: String,
-    /// Host-execution budget (bit-transparent; excluded from keys).
+    /// Host-execution budget. Threads and chunk size are bit-transparent
+    /// and excluded from keys; a non-exact `budget.sample` joins event
+    /// keys (see [`candidate_key`]).
     pub budget: SimBudget,
 }
 
@@ -145,7 +166,7 @@ impl Evaluator<'_> {
 
     /// Evaluate `cand` on `engine`, through `cache`.
     pub fn evaluate(&self, cand: &Candidate, engine: EngineKind, cache: &EvalCache) -> Objectives {
-        let key = candidate_key(cand, engine, &self.workload_tag);
+        let key = candidate_key(cand, engine, &self.workload_tag, self.budget.sample);
         cache.get_or_compute(&key, || {
             let report = engine.simulate_kernel_all_modes_with_views_budget(
                 cand.kernel.kernel(),
@@ -203,25 +224,61 @@ mod tests {
     fn keys_separate_every_axis_of_identity() {
         let base = candidate("o-sram");
         let tag = "t#nnz10#seed1#remaptrue";
-        let k0 = candidate_key(&base, EngineKind::Analytic, tag);
+        let exact = SampleSpec::exact();
+        let k0 = candidate_key(&base, EngineKind::Analytic, tag, exact);
         // engine
-        assert_ne!(k0, candidate_key(&base, EngineKind::Event, tag));
+        assert_ne!(k0, candidate_key(&base, EngineKind::Event, tag, exact));
         // workload
-        assert_ne!(k0, candidate_key(&base, EngineKind::Analytic, "t#nnz11#seed1#remaptrue"));
+        assert_ne!(
+            k0,
+            candidate_key(&base, EngineKind::Analytic, "t#nnz11#seed1#remaptrue", exact)
+        );
         // technology
-        assert_ne!(k0, candidate_key(&candidate("e-sram"), EngineKind::Analytic, tag));
+        assert_ne!(k0, candidate_key(&candidate("e-sram"), EngineKind::Analytic, tag, exact));
         // kernel
         let mut k = base.clone();
         k.kernel = KernelKind::Spttm;
-        assert_ne!(k0, candidate_key(&k, EngineKind::Analytic, tag));
+        assert_ne!(k0, candidate_key(&k, EngineKind::Analytic, tag, exact));
         // any config field — including ones no Knob names (the Debug
         // rendering keys the whole struct)
         let mut c = base.clone();
         c.cfg.compute_power_w += 0.1;
-        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag));
+        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag, exact));
         let mut c = base.clone();
         c.cfg.n_pipelines = 40;
-        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag));
+        assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag, exact));
+    }
+
+    #[test]
+    fn sample_keys_only_the_inexact_event_replay() {
+        let base = candidate("o-sram");
+        let tag = "t#nnz10#seed1#remaptrue";
+        let exact = SampleSpec::exact();
+        let quarter = SampleSpec::new(0.25, 7).unwrap();
+        // a sampled event replay is a distinct evaluation...
+        let ev_exact = candidate_key(&base, EngineKind::Event, tag, exact);
+        let ev_quarter = candidate_key(&base, EngineKind::Event, tag, quarter);
+        assert_ne!(ev_exact, ev_quarter);
+        // ...and both the rate and the seed are part of its identity
+        assert_ne!(
+            ev_quarter,
+            candidate_key(&base, EngineKind::Event, tag, SampleSpec::new(0.25, 8).unwrap())
+        );
+        assert_ne!(
+            ev_quarter,
+            candidate_key(&base, EngineKind::Event, tag, SampleSpec::new(0.5, 7).unwrap())
+        );
+        // rate 1.0 is bit-identical to unsampled, so it keys exactly —
+        // regardless of seed — and the analytic engine never replays, so
+        // its key ignores the sample entirely
+        assert_eq!(
+            ev_exact,
+            candidate_key(&base, EngineKind::Event, tag, SampleSpec { rate: 1.0, seed: 99 })
+        );
+        assert_eq!(
+            candidate_key(&base, EngineKind::Analytic, tag, exact),
+            candidate_key(&base, EngineKind::Analytic, tag, quarter)
+        );
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!   "candidates_screened": 12,
 //!   "invalid": 0,
 //!   "filtered": 0,
+//!   "sample": {"rate": 2.5e-1, "seed": 0},
 //!   "frontier": [
 //!     { "rank": 0, "configuration": "n_pes=4,cache_lines=4096",
 //!       "tech": "o-sram", "kernel": "spmttkrp",
@@ -20,15 +21,25 @@
 //!                    "edp": 2e-6, "area_mm2": 9.6e4},
 //!       "event": {"runtime_s": 1.1e-3, "energy_j": 2.1e-3,
 //!                 "edp": 2.3e-6, "area_mm2": 9.6e4},
-//!       "event_rank": 0, "event_dominated": false }
+//!       "event_sampled": {"runtime_s": 1.1e-3, "energy_j": 2.1e-3,
+//!                         "edp": 2.3e-6, "area_mm2": 9.6e4},
+//!       "event_rank": 0, "sampled_rank": 0, "event_dominated": false }
 //!   ],
 //!   "deltas": [
 //!     { "configuration": "...", "tech": "...", "kernel": "...",
-//!       "analytic_rank": 0, "event_rank": 1, "event_dominated": false,
-//!       "analytic_value": 1e-6, "event_value": 1.4e-6 }
+//!       "analytic_rank": 0, "event_rank": 1, "sampled_rank": 1,
+//!       "event_dominated": false,
+//!       "analytic_value": 1e-6, "event_value": 1.4e-6,
+//!       "sampled_value": 1.4e-6 }
 //!   ]
 //! }
 //! ```
+//!
+//! The `event` objects are always from the exact (rate 1.0) phase-4
+//! pass, so two runs of the same grid at different `--sample-rate`
+//! settings agree on every `frontier[*].{rank, configuration, tech,
+//! kernel, analytic, event, event_rank}` field — the invariant the
+//! `explore-smoke` CI step asserts.
 //!
 //! Hand-rolled writer (the build is offline, no serde): numbers via
 //! `{:e}` so round-tripping loses nothing, strings escaped through
@@ -56,6 +67,7 @@ pub fn frontier_json(result: &ExploreResult) -> String {
     let mut out = format!(
         "{{\n  \"objective\": \"{}\",\n  \"tensor\": \"{}\",\n  \"nnz\": {},\n  \
          \"candidates_screened\": {},\n  \"invalid\": {},\n  \"filtered\": {},\n  \
+         \"sample\": {{\"rate\": {:e}, \"seed\": {}}},\n  \
          \"frontier\": [",
         json_escape(result.objective.name()),
         json_escape(&result.tensor),
@@ -63,6 +75,8 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         result.candidates.len(),
         result.n_invalid,
         result.n_filtered,
+        result.sample.rate,
+        result.sample.seed,
     );
     for (i, p) in result.frontier.iter().enumerate() {
         if i > 0 {
@@ -71,14 +85,17 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         out.push_str(&format!(
             "\n    {{\"rank\": {}, \"configuration\": \"{}\", \"tech\": \"{}\", \
              \"kernel\": \"{}\", \"analytic\": {}, \"event\": {}, \
-             \"event_rank\": {}, \"event_dominated\": {}}}",
+             \"event_sampled\": {}, \"event_rank\": {}, \"sampled_rank\": {}, \
+             \"event_dominated\": {}}}",
             p.analytic_rank,
             json_escape(&p.candidate.label()),
             json_escape(&p.candidate.tech.name),
             p.candidate.kernel.name(),
             objectives_json(&p.analytic),
             objectives_json(&p.event),
+            objectives_json(&p.event_sampled),
             p.event_rank,
+            p.sampled_rank,
             p.event_dominated,
         ));
     }
@@ -89,16 +106,19 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         }
         out.push_str(&format!(
             "\n    {{\"configuration\": \"{}\", \"tech\": \"{}\", \"kernel\": \"{}\", \
-             \"analytic_rank\": {}, \"event_rank\": {}, \"event_dominated\": {}, \
-             \"analytic_value\": {:e}, \"event_value\": {:e}}}",
+             \"analytic_rank\": {}, \"event_rank\": {}, \"sampled_rank\": {}, \
+             \"event_dominated\": {}, \
+             \"analytic_value\": {:e}, \"event_value\": {:e}, \"sampled_value\": {:e}}}",
             json_escape(&d.label),
             json_escape(&d.tech),
             json_escape(&d.kernel),
             d.analytic_rank,
             d.event_rank,
+            d.sampled_rank,
             d.event_dominated,
             d.analytic_value,
             d.event_value,
+            d.sampled_value,
         ));
     }
     out.push_str("\n  ]\n}\n");
@@ -145,6 +165,10 @@ mod tests {
         assert!(json.contains("\"deltas\": ["), "{json}");
         assert!(json.contains("\"analytic\": {\"runtime_s\": "), "{json}");
         assert!(json.contains("\"event_dominated\": "), "{json}");
+        // the sampling spec and the per-member sampled view are exported
+        assert!(json.contains("\"sample\": {\"rate\": "), "{json}");
+        assert!(json.contains("\"event_sampled\": {\"runtime_s\": "), "{json}");
+        assert!(json.contains("\"sampled_rank\": "), "{json}");
         // one frontier object per member, ranks in output order
         assert_eq!(json.matches("{\"rank\"").count(), r.frontier.len());
         assert!(json.contains("\"rank\": 0"), "{json}");

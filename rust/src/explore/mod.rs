@@ -21,9 +21,13 @@
 //!   across searches are computed once;
 //! * [`pareto`] — strict-dominance frontier extraction, scoped per
 //!   kernel;
-//! * [`search`] — the two-phase strategy: cheap analytic screen of the
-//!   full grid, event-engine confirmation of frontier survivors only,
-//!   with every analytic-vs-event disagreement surfaced as an
+//! * [`search`] — the four-phase strategy: cheap analytic screen of the
+//!   full grid, frontier extraction, **sampled** event-engine
+//!   confirmation of the *entire* screened grid
+//!   ([`crate::sim::SampleSpec`], default rate
+//!   [`search::DEFAULT_EXPLORE_SAMPLE_RATE`]), then an exact event pass
+//!   that pins the reported frontier numbers — with every
+//!   analytic-vs-event or sampled-vs-exact disagreement surfaced as an
 //!   [`search::ExploreDelta`] (mirroring
 //!   [`crate::coordinator::driver::cross_validate`]) rather than
 //!   silently dropped;
@@ -49,6 +53,6 @@ pub use objective::{ObjectiveKind, Objectives};
 pub use pareto::{dominates, frontier_indices};
 pub use search::{
     frontier_table, run_explore, run_explore_with_cache, ExploreDelta, ExploreResult,
-    ExploreSpec, FrontierPoint,
+    ExploreSpec, FrontierPoint, DEFAULT_EXPLORE_SAMPLE_RATE,
 };
 pub use space::{Axis, Candidate, DesignSpace, EnumeratedSpace, Knob};

@@ -1,4 +1,4 @@
-//! The two-phase Pareto-frontier search.
+//! The four-phase Pareto-frontier search.
 //!
 //! 1. **Screen** — every enumerated candidate is evaluated on the cheap
 //!    analytic engine (the paper's roofline model), fanned across OS
@@ -7,20 +7,33 @@
 //!    fan-out claims `min(threads, candidates)` workers and hands each
 //!    simulation the left-over threads for its per-PE inner loop.
 //! 2. **Extract** — the Pareto frontier over (runtime, energy, area),
-//!    per kernel ([`crate::explore::pareto`]).
-//! 3. **Confirm** — frontier survivors *only* are re-evaluated on the
-//!    event-driven contention engine. Frontier **membership is decided by
-//!    the screen** and never silently revised: if the event numbers
-//!    re-rank the members under the chosen objective, or dominate a
-//!    member within the frontier, that disagreement is surfaced as an
-//!    [`ExploreDelta`] (mirroring
-//!    [`crate::coordinator::driver::cross_validate`]'s `EngineDelta`),
-//!    with every member still reported.
+//!    per kernel ([`crate::explore::pareto`]). Frontier **membership is
+//!    decided by the screen** and never silently revised.
+//! 3. **Confirm** — the **entire screened grid** is re-evaluated on the
+//!    event-driven contention engine under the spec's
+//!    [`SampleSpec`]: the sampled replay keeps functional accounting
+//!    exact and estimates stalls from a deterministic subset of chunks
+//!    ([`crate::sim::event`]), so every candidate — not just the
+//!    survivors — gets a contention-aware objective vector at a fraction
+//!    of the exact replay cost.
+//! 4. **Pin** — frontier members *only* are re-run with an **exact**
+//!    (rate 1.0) event replay; those are the `event` numbers every
+//!    report and export carries, so sampling never changes a published
+//!    figure. At rate 1.0 phase 3 already computed them and phase 4 is
+//!    pure warm-cache reuse.
+//!
+//! Disagreements are surfaced, never hidden: if the exact event numbers
+//! re-rank the members under the chosen objective or dominate a member
+//! within the frontier, or the *sampled* ranking disagrees with the
+//! exact one, that shows up as an [`ExploreDelta`] (mirroring
+//! [`crate::coordinator::driver::cross_validate`]'s `EngineDelta`),
+//! with every member still reported.
 //!
 //! Everything is deterministic: enumeration order is fixed, evaluation
-//! results are slot-ordered, and ranks tie-break on the candidate index —
-//! the frontier is bit-identical at any thread count (pinned by
-//! `rust/tests/explore.rs`).
+//! results are slot-ordered, chunk admission is a pure hash of
+//! (seed, mode, PE, chunk index), and ranks tie-break on the candidate
+//! index — the frontier is bit-identical at any thread count (pinned by
+//! `rust/tests/explore.rs` and `rust/tests/sampled_replay.rs`).
 
 use crate::explore::eval::{EvalCache, Evaluator};
 use crate::explore::objective::{ObjectiveKind, Objectives};
@@ -28,10 +41,17 @@ use crate::explore::pareto;
 use crate::explore::space::{Candidate, DesignSpace};
 use crate::kernel::DEFAULT_CHUNK_NNZ;
 use crate::sim::par::{effective_threads, parallel_map};
-use crate::sim::{EngineKind, SimBudget};
+use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::csf::ModeView;
 use crate::tensor::gen::TensorSpec;
 use crate::util::table::{fmt_sig, Align, Table};
+
+/// Default chunk-sampling rate for the phase-3 grid-wide event
+/// confirmation: 1-in-4 timed chunks per (mode, PE) stream keeps the
+/// stall estimate within its reported confidence band while cutting
+/// replay timing work roughly 4×. `photon-mttkrp explore --sample-rate`
+/// overrides it; 1.0 restores the exact replay everywhere.
+pub const DEFAULT_EXPLORE_SAMPLE_RATE: f64 = 0.25;
 
 /// One search request: the space, the workload fingerprint and the
 /// execution knobs.
@@ -57,6 +77,10 @@ pub struct ExploreSpec {
     pub threads: usize,
     /// Access-stream chunk granularity (bit-transparent).
     pub chunk_nnz: usize,
+    /// Chunk-sampling spec for the phase-3 grid-wide event confirmation
+    /// (defaults to [`DEFAULT_EXPLORE_SAMPLE_RATE`]). The phase-4
+    /// frontier numbers are always exact regardless of this setting.
+    pub sample: SampleSpec,
 }
 
 impl ExploreSpec {
@@ -72,6 +96,7 @@ impl ExploreSpec {
             remap: true,
             threads: 0,
             chunk_nnz: DEFAULT_CHUNK_NNZ,
+            sample: SampleSpec { rate: DEFAULT_EXPLORE_SAMPLE_RATE, seed: 0 },
         }
     }
 
@@ -82,6 +107,7 @@ impl ExploreSpec {
         if self.chunk_nnz == 0 {
             return Err("chunk_nnz must be positive".into());
         }
+        self.sample.validate()?;
         Ok(())
     }
 }
@@ -93,15 +119,21 @@ pub struct FrontierPoint {
     pub candidate: Candidate,
     /// Screening-phase (analytic-engine) objectives.
     pub analytic: Objectives,
-    /// Confirmation-phase (event-engine) objectives; `runtime_s` and
+    /// Pinning-phase (exact event-engine) objectives; `runtime_s` and
     /// `energy_j` are ≥ their analytic twins by construction, `area_mm2`
     /// is engine-independent.
     pub event: Objectives,
+    /// Confirmation-phase (sampled event-engine) objectives, from the
+    /// grid-wide phase-3 pass. Bit-identical to [`event`](Self::event)
+    /// when the spec's sample rate is 1.0.
+    pub event_sampled: Objectives,
     /// 0-based rank by the spec's objective under analytic numbers
     /// (frontier output order).
     pub analytic_rank: usize,
-    /// 0-based rank by the same objective under event numbers.
+    /// 0-based rank by the same objective under exact event numbers.
     pub event_rank: usize,
+    /// 0-based rank by the same objective under sampled event numbers.
+    pub sampled_rank: usize,
     /// Under event numbers, is this member dominated by another frontier
     /// member (same kernel)? Membership was decided by the screen; this
     /// flags the disagreement instead of dropping the point.
@@ -113,6 +145,13 @@ impl FrontierPoint {
     /// about this member (re-ranked, or dominated within the frontier)?
     pub fn flipped(&self) -> bool {
         self.analytic_rank != self.event_rank || self.event_dominated
+    }
+
+    /// Did the sampled confirmation rank this member differently than
+    /// the exact event replay — i.e. would trusting the sampled numbers
+    /// alone have mis-ordered it?
+    pub fn sample_flipped(&self) -> bool {
+        self.sampled_rank != self.event_rank
     }
 }
 
@@ -128,8 +167,12 @@ pub struct ExploreDelta {
     pub objective: ObjectiveKind,
     pub analytic_value: f64,
     pub event_value: f64,
+    /// The same objective under the phase-3 sampled event numbers.
+    pub sampled_value: f64,
     pub analytic_rank: usize,
     pub event_rank: usize,
+    /// Rank under the sampled event numbers.
+    pub sampled_rank: usize,
     pub event_dominated: bool,
 }
 
@@ -143,14 +186,25 @@ impl ExploreDelta {
     /// One-line human rendering for the CLI / example output. The
     /// headline names what actually disagreed: a re-ranking is a
     /// "rank flip"; identical ranks with within-frontier domination is
-    /// "event dominance".
+    /// "event dominance"; a member only the *sampled* replay mis-ordered
+    /// is a "sampled rank flip".
     pub fn describe(&self) -> String {
-        let kind =
-            if self.analytic_rank != self.event_rank { "rank flip" } else { "event dominance" };
+        let kind = if self.analytic_rank != self.event_rank {
+            "rank flip"
+        } else if self.event_dominated {
+            "event dominance"
+        } else {
+            "sampled rank flip"
+        };
         let dom = if self.event_dominated { ", event-dominated within frontier" } else { "" };
+        let samp = if self.sampled_rank != self.event_rank {
+            format!(", sampled rank #{}", self.sampled_rank)
+        } else {
+            String::new()
+        };
         format!(
             "{kind} [{} {} {}]: {} {:.4e} -> {:.4e} under event engine \
-             (rank #{} -> #{}{dom})",
+             (rank #{} -> #{}{dom}{samp})",
             self.label,
             self.tech,
             self.kernel,
@@ -177,6 +231,12 @@ pub struct ExploreResult {
     /// Screening-phase objectives, parallel to
     /// [`candidates`](Self::candidates).
     pub analytic: Vec<Objectives>,
+    /// Phase-3 sampled event objectives for **every** screened
+    /// candidate, parallel to [`candidates`](Self::candidates) — the
+    /// contention-aware view of the whole grid, not just the frontier.
+    pub event_sampled: Vec<Objectives>,
+    /// The sampling spec the grid-wide confirmation ran under.
+    pub sample: SampleSpec,
     /// Points pruned by [`crate::accel::config::AcceleratorConfig::validate`].
     pub n_invalid: usize,
     /// Points pruned by the area-budget / reticle predicates.
@@ -203,7 +263,7 @@ impl ExploreResult {
     }
 }
 
-/// Run the two-phase search with a private, single-use evaluation cache.
+/// Run the four-phase search with a private, single-use evaluation cache.
 pub fn run_explore(spec: &ExploreSpec) -> Result<ExploreResult, String> {
     run_explore_with_cache(spec, &EvalCache::new())
 }
@@ -242,9 +302,9 @@ pub fn run_explore_with_cache(
     // min(threads, candidates) workers; each simulation gets the
     // left-over threads for its per-PE inner loop
     let threads = effective_threads(spec.threads);
-    let budget_for = |jobs: usize| {
+    let budget_for = |jobs: usize, sample: SampleSpec| {
         let workers = threads.min(jobs.max(1));
-        SimBudget { threads: (threads / workers).max(1), chunk_nnz: spec.chunk_nnz }
+        SimBudget { threads: (threads / workers).max(1), chunk_nnz: spec.chunk_nnz, sample }
     };
     let evaluator = |budget: SimBudget| Evaluator {
         tensor: &mapped,
@@ -253,8 +313,8 @@ pub fn run_explore_with_cache(
         budget,
     };
 
-    // Phase 1: analytic screen of the full grid.
-    let screen_eval = evaluator(budget_for(candidates.len()));
+    // Phase 1: analytic screen of the full grid (sample-independent).
+    let screen_eval = evaluator(budget_for(candidates.len(), SampleSpec::exact()));
     let analytic: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
         screen_eval.evaluate(cand, EngineKind::Analytic, cache)
     });
@@ -263,8 +323,16 @@ pub fn run_explore_with_cache(
     let groups: Vec<&str> = candidates.iter().map(|c| c.kernel.name()).collect();
     let front = pareto::frontier_indices(&analytic, &groups);
 
-    // Phase 3: event confirmation of the survivors only.
-    let confirm_eval = evaluator(budget_for(front.len()));
+    // Phase 3: sampled event confirmation of the ENTIRE screened grid.
+    let sampled_eval = evaluator(budget_for(candidates.len(), spec.sample));
+    let event_sampled: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
+        sampled_eval.evaluate(cand, EngineKind::Event, cache)
+    });
+
+    // Phase 4: exact event pass over the frontier members only — the
+    // published numbers. At rate 1.0 phase 3 already computed these
+    // under the same cache key, so this is pure warm-cache reuse.
+    let confirm_eval = evaluator(budget_for(front.len(), SampleSpec::exact()));
     let event: Vec<Objectives> = parallel_map(&front, threads, |&i| {
         confirm_eval.evaluate(&candidates[i], EngineKind::Event, cache)
     });
@@ -283,8 +351,11 @@ pub fn run_explore_with_cache(
     let analytic_values: Vec<f64> =
         front.iter().map(|&i| analytic[i].value(spec.objective)).collect();
     let event_values: Vec<f64> = event.iter().map(|o| o.value(spec.objective)).collect();
+    let sampled_values: Vec<f64> =
+        front.iter().map(|&i| event_sampled[i].value(spec.objective)).collect();
     let analytic_rank = rank_by(&analytic_values);
     let event_rank = rank_by(&event_values);
+    let sampled_rank = rank_by(&sampled_values);
 
     let mut frontier: Vec<FrontierPoint> = front
         .iter()
@@ -299,8 +370,10 @@ pub fn run_explore_with_cache(
                 candidate: candidates[i].clone(),
                 analytic: analytic[i],
                 event: event[slot],
+                event_sampled: event_sampled[i],
                 analytic_rank: analytic_rank[slot],
                 event_rank: event_rank[slot],
+                sampled_rank: sampled_rank[slot],
                 event_dominated,
             }
         })
@@ -309,7 +382,7 @@ pub fn run_explore_with_cache(
 
     let deltas: Vec<ExploreDelta> = frontier
         .iter()
-        .filter(|p| p.flipped())
+        .filter(|p| p.flipped() || p.sample_flipped())
         .map(|p| ExploreDelta {
             label: p.candidate.label(),
             tech: p.candidate.tech.name.clone(),
@@ -317,8 +390,10 @@ pub fn run_explore_with_cache(
             objective: spec.objective,
             analytic_value: p.analytic.value(spec.objective),
             event_value: p.event.value(spec.objective),
+            sampled_value: p.event_sampled.value(spec.objective),
             analytic_rank: p.analytic_rank,
             event_rank: p.event_rank,
+            sampled_rank: p.sampled_rank,
             event_dominated: p.event_dominated,
         })
         .collect();
@@ -329,6 +404,8 @@ pub fn run_explore_with_cache(
         objective: spec.objective,
         candidates,
         analytic,
+        event_sampled,
+        sample: spec.sample,
         n_invalid: enumerated.n_invalid,
         n_filtered: enumerated.n_filtered,
         frontier,
@@ -349,11 +426,16 @@ pub fn frontier_table(result: &ExploreResult, top: usize) -> Table {
     };
     let mut t = Table::new(
         &format!(
-            "Pareto frontier by {} ({}, {} candidates screened, {} on frontier{})",
+            "Pareto frontier by {} ({}, {} candidates screened, {} on frontier{}{})",
             result.objective,
             result.tensor,
             result.candidates.len(),
             result.frontier.len(),
+            if result.sample.is_exact() {
+                String::new()
+            } else {
+                format!(", grid event-confirmed @ rate {}", result.sample.rate)
+            },
             if shown < result.frontier.len() {
                 format!(", top {shown} shown")
             } else {
@@ -370,6 +452,7 @@ pub fn frontier_table(result: &ExploreResult, top: usize) -> Table {
             "EDP",
             "area mm^2",
             "event rank",
+            "sampled rank",
         ],
     )
     .align(1, Align::Left)
@@ -383,6 +466,11 @@ pub fn frontier_table(result: &ExploreResult, top: usize) -> Table {
         } else {
             format!("#{}", p.event_rank)
         };
+        let sampled_cell = if p.sample_flipped() {
+            format!("#{} (flip)", p.sampled_rank)
+        } else {
+            format!("#{}", p.sampled_rank)
+        };
         t.row(vec![
             format!("{}", p.analytic_rank),
             p.candidate.label(),
@@ -393,6 +481,7 @@ pub fn frontier_table(result: &ExploreResult, top: usize) -> Table {
             format!("{:.3e}", p.analytic.edp()),
             fmt_sig(p.analytic.area_mm2, 4),
             event_cell,
+            sampled_cell,
         ]);
     }
     t
@@ -422,22 +511,83 @@ mod tests {
         let r = run_explore(&tiny_spec()).unwrap();
         assert_eq!(r.candidates.len(), 4);
         assert_eq!(r.analytic.len(), 4);
+        // the ENTIRE screened grid is event-confirmed, not just the frontier
+        assert_eq!(r.event_sampled.len(), 4);
+        assert!(!r.sample.is_exact(), "explore defaults to a sampled confirmation");
         assert!(!r.frontier.is_empty());
         assert_eq!(r.objective, ObjectiveKind::Edp);
+        // every grid point's sampled event view can only add time/energy
+        for (a, s) in r.analytic.iter().zip(&r.event_sampled) {
+            assert!(s.runtime_s >= a.runtime_s);
+            assert!(s.energy_j >= a.energy_j);
+            assert_eq!(s.area_mm2, a.area_mm2);
+        }
         // frontier is sorted by analytic rank, ranks are a permutation
         for (i, p) in r.frontier.iter().enumerate() {
             assert_eq!(p.analytic_rank, i);
             assert!(p.event_rank < r.frontier.len());
+            assert!(p.sampled_rank < r.frontier.len());
             // event can only add time/energy; area is engine-independent
             assert!(p.event.runtime_s >= p.analytic.runtime_s);
             assert!(p.event.energy_j >= p.analytic.energy_j);
             assert_eq!(p.event.area_mm2, p.analytic.area_mm2);
         }
-        // deltas are exactly the flipped members
-        assert_eq!(r.deltas.len(), r.frontier.iter().filter(|p| p.flipped()).count());
-        // cache traffic: screen misses + frontier event misses, no hits
-        assert_eq!(r.cache_misses, 4 + r.frontier.len() as u64);
+        // deltas are exactly the flipped members (either flavour)
+        assert_eq!(
+            r.deltas.len(),
+            r.frontier.iter().filter(|p| p.flipped() || p.sample_flipped()).count()
+        );
+        // cache traffic: screen misses + grid-wide sampled event misses
+        // + exact frontier event misses, no hits (sampled keys differ)
+        assert_eq!(r.cache_misses, 4 + 4 + r.frontier.len() as u64);
         assert_eq!(r.cache_hits, 0);
+    }
+
+    #[test]
+    fn exact_sampling_reuses_the_grid_confirmation_for_the_frontier() {
+        let mut spec = tiny_spec();
+        spec.sample = SampleSpec::exact();
+        let r = run_explore(&spec).unwrap();
+        // rate 1.0 keys exactly, so the phase-4 frontier pass is pure
+        // warm-cache reuse of the grid-wide phase 3
+        assert_eq!(r.cache_misses, 4 + 4);
+        assert_eq!(r.cache_hits, r.frontier.len() as u64);
+        for p in &r.frontier {
+            assert_eq!(p.event.runtime_s.to_bits(), p.event_sampled.runtime_s.to_bits());
+            assert_eq!(p.event.energy_j.to_bits(), p.event_sampled.energy_j.to_bits());
+            assert_eq!(p.sampled_rank, p.event_rank);
+            assert!(!p.sample_flipped());
+        }
+    }
+
+    #[test]
+    fn sampled_frontier_matches_the_exact_frontier() {
+        // membership is decided by the (sample-independent) screen and
+        // the reported event numbers come from the exact phase-4 pass,
+        // so the frontier must be identical at any rate — even with the
+        // chunk size forced small enough that sampling really skips work
+        let exact = {
+            let mut s = tiny_spec();
+            s.sample = SampleSpec::exact();
+            s.chunk_nnz = 193;
+            run_explore(&s).unwrap()
+        };
+        let sampled = {
+            let mut s = tiny_spec();
+            s.sample = SampleSpec::new(0.25, 0).unwrap();
+            s.chunk_nnz = 193;
+            run_explore(&s).unwrap()
+        };
+        assert_eq!(exact.frontier.len(), sampled.frontier.len());
+        for (x, y) in exact.frontier.iter().zip(&sampled.frontier) {
+            assert_eq!(x.candidate.label(), y.candidate.label());
+            assert_eq!(x.candidate.tech.name, y.candidate.tech.name);
+            assert_eq!(x.analytic_rank, y.analytic_rank);
+            assert_eq!(x.event_rank, y.event_rank);
+            assert_eq!(x.analytic.runtime_s.to_bits(), y.analytic.runtime_s.to_bits());
+            assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits());
+            assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits());
+        }
     }
 
     #[test]
@@ -482,6 +632,11 @@ mod tests {
         s.space.budget_mm2 = Some(1e-3);
         let e = run_explore(&s).unwrap_err();
         assert!(e.contains("zero candidates"), "{e}");
+        // an out-of-range sample rate is rejected with the range
+        let mut s = tiny_spec();
+        s.sample = SampleSpec { rate: 1.5, seed: 0 };
+        let e = run_explore(&s).unwrap_err();
+        assert!(e.contains("(0, 1]"), "{e}");
     }
 
     #[test]
@@ -493,8 +648,10 @@ mod tests {
             objective: ObjectiveKind::Edp,
             analytic_value: 1.0,
             event_value: 1.5,
+            sampled_value: 1.5,
             analytic_rank: 0,
             event_rank: 1,
+            sampled_rank: 1,
             event_dominated: false,
         };
         assert!((d.ratio() - 1.5).abs() < 1e-12);
@@ -504,9 +661,20 @@ mod tests {
         assert!(s.contains("#0") && s.contains("#1"), "{s}");
         // equal ranks + within-frontier domination is not a flip and
         // must not claim one
-        let d2 = ExploreDelta { analytic_rank: 2, event_rank: 2, event_dominated: true, ..d };
+        let d2 = ExploreDelta {
+            analytic_rank: 2,
+            event_rank: 2,
+            sampled_rank: 2,
+            event_dominated: true,
+            ..d.clone()
+        };
         let s2 = d2.describe();
         assert!(s2.starts_with("event dominance"), "{s2}");
         assert!(s2.contains("event-dominated within frontier"), "{s2}");
+        // a disagreement only the sampled ranking produced names itself
+        let d3 = ExploreDelta { analytic_rank: 2, event_rank: 2, sampled_rank: 3, ..d };
+        let s3 = d3.describe();
+        assert!(s3.starts_with("sampled rank flip"), "{s3}");
+        assert!(s3.contains("sampled rank #3"), "{s3}");
     }
 }

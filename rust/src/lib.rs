@@ -117,8 +117,10 @@
 //! one point: a [`explore::DesignSpace`] axis grammar over
 //! [`accel::config::AcceleratorConfig`] knobs × technologies × kernels
 //! is screened on the analytic engine, the Pareto frontier over
-//! (runtime, energy, area) is extracted, and the survivors are confirmed
-//! on the event engine — any rank flip is surfaced as an
+//! (runtime, energy, area) is extracted, the **whole grid** is confirmed
+//! on the event engine under chunk sampling ([`sim::SampleSpec`]), and
+//! an exact event pass pins the reported frontier numbers — any rank
+//! flip, exact or sampled, is surfaced as an
 //! [`explore::ExploreDelta`], never silently dropped. Evaluations are
 //! memoized in a content-keyed [`explore::EvalCache`] shared across
 //! searches. Front-ends: `photon-mttkrp explore`, the `design_space`
@@ -135,7 +137,11 @@
 //! [`sim::SimBudget`] thread budget so they compose without
 //! oversubscription (`--threads`/`--chunk-nnz` on the CLI). Every host
 //! knob is bit-transparent: any thread count and chunk size reproduce
-//! identical reports.
+//! identical reports. The one deliberate exception is `--sample-rate`
+//! ([`sim::SampleSpec`]): below 1.0 the event engine times a seeded
+//! subset of chunks and extrapolates stalls with a confidence band —
+//! still deterministic at any thread count, but a different estimate
+//! than the exact replay.
 //!
 //! ## Layering
 //!
@@ -192,7 +198,7 @@ pub mod prelude {
     pub use crate::runtime::client::Runtime;
     pub use crate::sim::result::{ModeReport, SimReport};
     pub use crate::sim::sweep::{run_sweep, summary_table, SweepPoint, SweepSpec};
-    pub use crate::sim::{EngineKind, SimBudget, SimEngine};
+    pub use crate::sim::{EngineKind, SampleSpec, SimBudget, SimEngine};
     pub use crate::tensor::coo::SparseTensor;
     pub use crate::tensor::gen as frostt;
     pub use crate::tensor::gen::{FrosttTensor, TensorSpec};

@@ -6,21 +6,24 @@
 //!     platform + Table I/III/IV echo + the technology registry listing
 //! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
 //!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
-//!     [--kernel spmttkrp|spttm|spmm] [--threads T] [--chunk-nnz N] [--config FILE]
+//!     [--kernel spmttkrp|spttm|spmm] [--threads T] [--chunk-nnz N]
+//!     [--sample-rate R] [--sample-seed N] [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
 //!     single technology, per technology for both/all)
 //! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
 //!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T]
-//!     [--chunk-nnz N] [--config FILE]
+//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--config FILE]
 //!     parallel {tensor x mode x tech x scale} design-space sweep
 //! photon-mttkrp explore [--tensor N] [--scale S] [--seed N] [--tech T]...
 //!     [--kernel K]... [--axes KNOB=V1,V2,...]... [--budget-mm2 X]
 //!     [--exclude-wafer-scale] [--objective runtime|energy|edp|area]
-//!     [--top N] [--threads T] [--chunk-nnz N] [--json FILE] [--config FILE]
+//!     [--top N] [--threads T] [--chunk-nnz N] [--sample-rate R]
+//!     [--sample-seed N] [--json FILE] [--config FILE]
 //!     Pareto-frontier search over {config knobs x tech x kernel}:
-//!     analytic screen of the full grid, event-engine confirmation of the
-//!     frontier survivors, any rank flip reported as a delta line
+//!     analytic screen of the full grid, sampled event-engine
+//!     confirmation of the whole grid, exact event pass over the
+//!     frontier, any rank flip reported as a delta line
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
 //!     + the explore frontier table
@@ -39,7 +42,14 @@
 //! TTM-chain) or `spmm` (sparse × dense matrix — see EXPERIMENTS.md
 //! §Kernels). `--threads` and `--chunk-nnz` are host-execution knobs
 //! (per-PE thread budget, access-stream chunk granularity): they change
-//! how fast the simulator runs, never what it reports.
+//! how fast the simulator runs, never what it reports. `--sample-rate`
+//! (with `--sample-seed`) is the one estimate-changing speed knob: below
+//! 1.0 the event engine times only a seeded subset of chunks and
+//! extrapolates stall cycles with a reported confidence band (functional
+//! counts stay exact); 1.0 is bit-identical to the full replay, and the
+//! analytic engine ignores it. `explore` defaults to 0.25 for its
+//! grid-wide event confirmation but always pins the printed frontier
+//! numbers with an exact pass.
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
@@ -57,7 +67,7 @@ use photon_mttkrp::mttkrp::reference::FactorMatrix;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::runtime::client::Runtime;
 use photon_mttkrp::sim::sweep::{self, SweepSpec};
-use photon_mttkrp::sim::{EngineKind, SimBudget};
+use photon_mttkrp::sim::{EngineKind, SampleSpec, SimBudget};
 use photon_mttkrp::tensor::coo::SparseTensor;
 use photon_mttkrp::tensor::csf::ModeView;
 use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
@@ -97,6 +107,13 @@ fn cli() -> Command {
                     "access-stream chunk granularity in nonzeros",
                     Some("65536"),
                 )
+                .opt(
+                    "sample-rate",
+                    "R",
+                    "event-replay chunk sampling rate in (0, 1]; 1 = exact",
+                    Some("1.0"),
+                )
+                .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
@@ -124,6 +141,13 @@ fn cli() -> Command {
                     "access-stream chunk granularity in nonzeros",
                     Some("65536"),
                 )
+                .opt(
+                    "sample-rate",
+                    "R",
+                    "event-replay chunk sampling rate in (0, 1]; 1 = exact",
+                    Some("1.0"),
+                )
+                .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
@@ -163,6 +187,13 @@ fn cli() -> Command {
                     "access-stream chunk granularity in nonzeros",
                     Some("65536"),
                 )
+                .opt(
+                    "sample-rate",
+                    "R",
+                    "grid-wide event confirmation sampling rate in (0, 1]; 1 = exact",
+                    Some("0.25"),
+                )
+                .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
                 .opt("json", "FILE", "also write the frontier as JSON", None)
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
@@ -246,6 +277,15 @@ fn resolve_kernel_list(p: &Parsed) -> Result<Vec<KernelKind>, String> {
     given.iter().map(|s| KernelKind::parse(s)).collect()
 }
 
+/// Parse the shared `--sample-rate` / `--sample-seed` pair. Range
+/// violations surface the valid interval, mirroring the engine listing
+/// an unknown `--engine` prints.
+fn parse_sample(p: &Parsed) -> Result<SampleSpec, String> {
+    let rate = p.get_f64("sample-rate").map_err(|e| e.to_string())?;
+    let seed = p.get_u64("sample-seed").map_err(|e| e.to_string())?;
+    SampleSpec::new(rate, seed).map_err(|e| format!("--sample-rate: {e}"))
+}
+
 fn parse_f64_list(p: &Parsed, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
     let given = p.get_all(name);
     if given.is_empty() {
@@ -291,6 +331,7 @@ fn run() -> Result<(), String> {
             let budget = SimBudget {
                 threads: p.get_usize("threads").map_err(|e| e.to_string())?,
                 chunk_nnz: p.get_usize("chunk-nnz").map_err(|e| e.to_string())?,
+                sample: parse_sample(&p)?,
             };
             if budget.chunk_nnz == 0 {
                 return Err("--chunk-nnz must be positive".into());
@@ -479,6 +520,7 @@ fn run() -> Result<(), String> {
             spec.engine = EngineKind::parse(p.get("engine").unwrap())?;
             spec.kernel = KernelKind::parse(p.get("kernel").unwrap())?;
             spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
+            spec.sample = parse_sample(&p)?;
             if !modes.is_empty() {
                 spec.modes = Some(modes);
             }
@@ -540,6 +582,7 @@ fn run() -> Result<(), String> {
             spec.objective = objective;
             spec.threads = p.get_usize("threads").map_err(|e| e.to_string())?;
             spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
+            spec.sample = parse_sample(&p)?;
             let n_threads = sweep::effective_threads(spec.threads);
             eprintln!(
                 "exploring up to {} candidates ({} techs x {} kernels) by {} on {} threads ...",

@@ -270,6 +270,8 @@ pub fn simulate_kernel_mode_with_view_budget(
                 element_dma_cycles: mc.element_busy,
                 latency_overhead_cycles: latency_overhead,
                 stall_cycles: 0.0,
+                stall_stderr_cycles: 0.0,
+                sampled_nnz: pe_nnz,
                 cache_stats: stats,
                 dram_stream_bytes: mc.dram.bytes_streamed,
                 dram_random_bytes: mc.dram.bytes_random,
@@ -615,8 +617,8 @@ mod tests {
         for budget in [
             SimBudget::with_threads(2),
             SimBudget::with_threads(0),
-            SimBudget { threads: 3, chunk_nnz: 777 },
-            SimBudget { threads: 1, chunk_nnz: 1 },
+            SimBudget { threads: 3, chunk_nnz: 777, ..SimBudget::default() },
+            SimBudget { threads: 1, chunk_nnz: 1, ..SimBudget::default() },
         ] {
             let r = simulate_kernel_mode_with_view_budget(
                 kernel,

@@ -18,7 +18,10 @@
 //!   Each bank serves one request at a time at `bank_factor ×` the
 //!   aggregate per-request occupancy, so two accesses hashing to the same
 //!   bank serialize — the aggregate bandwidth matches the analytic model
-//!   only when the stream spreads evenly.
+//!   only when the stream spreads evenly. Bank assignment is the cache's
+//!   own [`mix_key`][crate::cache::cache::mix_key] folding
+//!   ([`bank_of`][crate::cache::cache::bank_of]), so hot lines collide
+//!   here exactly when they collide in the functional sets.
 //! * **A FIFO DRAM channel** — cache misses, write-backs, bypass accesses
 //!   and the sequential tensor/output streams share one in-order channel
 //!   per PE whose per-request service times are the *same* constants the
@@ -31,16 +34,59 @@
 //!   per pipeline ≈ MSHR + psum depth) back-pressures the front end when
 //!   too many nonzeros are in flight.
 //!
+//! ## The SoA replay core
+//!
+//! [`replay_pe`] processes each chunk in struct-of-arrays batches rather
+//! than dispatching per [`crate::kernel::ir::FactorRead`]:
+//!
+//! 1. **Functional pass** — one sequential sweep of the shared
+//!    [`MemoryController`] over the chunk's reads, recording each serve
+//!    outcome (hit / miss / miss+writeback / bypass, plus the serving
+//!    cache id) as a one-byte code into a reusable batch. This pass owns
+//!    every stateful decision; hit rates, traffic and active words are
+//!    decided here exactly as in the analytic engine.
+//! 2. **Bank batch** — the bank index of every read in the chunk,
+//!    computed in one branch-free sweep over the packed u64 words (pure
+//!    integer mixing, no controller state) that the compiler can
+//!    vectorize.
+//! 3. **Timing pass** — the arbitration replay consumes the two batches:
+//!    same-bank collisions serialize on the busy-until clocks, misses
+//!    queue for FIFO DRAM admission, execution slots close the window.
+//!    The float operations are issued in exactly the order of the old
+//!    fused per-event loop, so the restructure is bit-identical (pinned
+//!    against the retained reference loop, see below).
+//!
+//! The pre-SoA fused loop is kept as [`replay_pe_reference`] behind
+//! `cfg(any(test, feature = "replay-reference"))` and a test pins the two
+//! paths bit-for-bit.
+//!
+//! ## Sampled replay
+//!
+//! [`SampleSpec`] (threaded through [`SimBudget::sample`]) trades stall
+//! precision for wall-clock: below `rate = 1.0` the engine still walks
+//! **every** chunk through the functional pass (cache state is
+//! sequential; traffic, hits and active words stay exact), but runs the
+//! timing pass only for a deterministic, seeded subset of chunks. Each
+//! timed chunk yields one stall sample — the event-frontier advance over
+//! the chunk minus the chunk's own roofline time — and the mean sample,
+//! scaled to the full chunk count, extrapolates
+//! [`PeReport::stall_cycles`] to full-stream scale with a standard error
+//! ([`PeReport::stall_stderr_cycles`]) from the per-chunk variance. Chunk
+//! admission hashes `(seed, mode, pe, chunk index)` only, so a sampled
+//! report is bit-identical at any thread count; `rate = 1.0` takes the
+//! exact path and is bit-identical to the pre-sampling engine.
+//!
 //! ## Invariants vs the analytic engine
 //!
 //! The functional model is *shared*, not re-implemented: the event engine
 //! drives the same [`MemoryController`] over the same IR chunks, so hit
 //! rates, DRAM traffic, active-word counters — everything the energy
-//! model (Eq. 2–3) consumes — are bit-identical between the two backends.
-//! The measured contention is reported as [`PeReport::stall_cycles`] *on
-//! top of* the analytic bottleneck time, so `event runtime ≥ analytic
-//! runtime` always holds and the delta is exactly the roofline model's
-//! blind spot.
+//! model (Eq. 2–3) consumes — are bit-identical between the two backends
+//! at **any** sampling rate. The measured contention is reported as
+//! [`PeReport::stall_cycles`] *on top of* the analytic bottleneck time,
+//! clamped non-negative per chunk sample as well, so `event runtime ≥
+//! analytic runtime` always holds and the delta is exactly the roofline
+//! model's blind spot.
 //!
 //! On conflict-light streams (uniform row access, ≥ a few hundred distinct
 //! rows per factor matrix) the two engines agree within
@@ -57,9 +103,10 @@
 //! any thread count.
 //!
 //! [`PeReport::stall_cycles`]: crate::sim::result::PeReport::stall_cycles
+//! [`PeReport::stall_stderr_cycles`]: crate::sim::result::PeReport::stall_stderr_cycles
 
 use crate::accel::config::AcceleratorConfig;
-use crate::cache::cache::row_key;
+use crate::cache::cache::{bank_of, row_key};
 use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::{MemoryController, Served};
 use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
@@ -68,9 +115,10 @@ use crate::pe::exec::ExecUnit;
 use crate::sim::engine::{charge_streams, nnz_item_bytes, partition_slices, startup_latency};
 use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
-use crate::sim::SimBudget;
+use crate::sim::{SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
+use crate::util::stats::Summary;
 
 /// Documented agreement band of the two engines on conflict-light
 /// deterministic tensors: `event / analytic ∈ [1.0, 1.30]`. The lower
@@ -84,12 +132,30 @@ pub const EVENT_AGREEMENT_TOLERANCE: f64 = 1.30;
 /// miss-status registers + psum-row reservation depth of the Fig. 4 PE).
 pub const DECOUPLE_WINDOW_PER_PIPELINE: usize = 4;
 
-/// Which of `banks` interleaved banks a cache line address maps to. Uses
-/// the same XOR-folded mixing as the functional cache's set index so hot
-/// lines collide here exactly when they collide there.
-#[inline]
-fn bank_of(key: u64, banks: usize) -> usize {
-    ((key ^ (key >> 17)) % banks as u64) as usize
+// Serve codes recorded by the functional pass for the timing pass: the
+// outcome kind in the low two bits, the serving cache id above them
+// (bypasses carry no cache).
+const SERVE_HIT: u8 = 0;
+const SERVE_MISS: u8 = 1;
+const SERVE_MISS_WB: u8 = 2;
+const SERVE_BYPASS: u8 = 3;
+const SERVE_KIND_MASK: u8 = 3;
+const SERVE_CACHE_SHIFT: u8 = 2;
+
+/// Per-worker scratch for the SoA replay: the reusable chunk buffer plus
+/// the struct-of-arrays serve/bank batches and the cache-busy snapshot
+/// the sampled estimator diffs against. All capacity is retained across
+/// chunks and across simulations on the same worker — the replay stays
+/// allocation-free after warm-up.
+#[derive(Default)]
+struct ReplayScratch {
+    chunk: AccessChunk,
+    /// Serve code per read of the current chunk (functional pass out).
+    serve: Vec<u8>,
+    /// Bank index per read of the current chunk (batch bank pass out).
+    bank: Vec<u32>,
+    /// Per-cache busy snapshot at chunk entry (sampling only).
+    cache_snap: Vec<f64>,
 }
 
 /// Immutable inputs shared by every PE of one event-mode replay, so the
@@ -110,16 +176,29 @@ struct ReplayCtx<'a> {
     row_bytes: u64,
     window: usize,
     chunk_nnz: usize,
+    /// Output mode being replayed — a chunk-admission coordinate.
+    mode: usize,
+    /// Chunk-sampling policy ([`SimBudget::sample`]).
+    sample: SampleSpec,
+}
+
+/// The event timeline's current frontier: the furthest busy-until clock
+/// across every arbitrated resource.
+#[inline]
+fn frontier(finish: f64, dram_free: f64, pipe_free: f64, psum_free: f64, bank_free: &[f64]) -> f64 {
+    let bank_max = bank_free.iter().cloned().fold(0.0f64, f64::max);
+    finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max)
 }
 
 /// Replay one PE's slice range through the arbitrated resources. All
-/// mutable state (controller, busy-until clocks, decoupling ring) is
-/// PE-private, so PEs replay concurrently with bit-identical results.
+/// mutable state (controller, busy-until clocks, decoupling ring, SoA
+/// batches) is PE-private, so PEs replay concurrently with bit-identical
+/// results.
 fn replay_pe(
     ctx: &ReplayCtx<'_>,
     pe_idx: usize,
     slices: (usize, usize),
-    scratch: &mut AccessChunk,
+    scratch: &mut ReplayScratch,
 ) -> PeReport {
     let (slo, shi) = slices;
     let cfg = ctx.cfg;
@@ -143,6 +222,7 @@ fn replay_pe(
 
     // --- event state: busy-until clocks, in fabric cycles ---
     let n_caches = mc.caches.len();
+    debug_assert!(n_caches < 64, "serve codes pack the cache id in 6 bits");
     let mut bank_free = vec![0.0f64; n_caches * banks];
     let mut dram_free = 0.0f64;
     let mut pipe_free = 0.0f64;
@@ -158,10 +238,90 @@ fn replay_pe(
     let mut psum_words = 0u64;
     let mut pe_nnz = 0u64;
 
+    // --- sampling state: one stall sample per timed chunk ---
+    let sampling = !ctx.sample.is_exact();
+    let mut stalls = Summary::new();
+    let mut sampled_nnz = 0u64;
+    let mut n_chunks = 0u64;
+
+    let ReplayScratch { chunk, serve, bank, cache_snap } = scratch;
     let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
-    while stream.fill(scratch) {
-        let chunk = &*scratch;
+    while stream.fill(chunk) {
         pe_nnz += chunk.n_nnz as u64;
+        let timed = ctx.sample.admits(ctx.mode, pe_idx, n_chunks);
+        n_chunks += 1;
+
+        if !timed {
+            // Functional-only walk: the shared controller still sees
+            // every read in stream order (hit rates, traffic and busy
+            // sums stay exact — the cache state is sequential and may
+            // never skip), and the per-nonzero exec charges accumulate
+            // as in the analytic engine; only the event clocks stand
+            // still.
+            let mut se = 0usize;
+            for i in 0..chunk.n_nnz {
+                for read in &chunk.reads[i * ctx.rpn..(i + 1) * ctx.rpn] {
+                    let _ = mc.factor_row_load(read.slot() as usize, read.row());
+                }
+                pipeline_cycles += per_nnz.pipeline_cycles;
+                psum_cycles += per_nnz.psum_cycles;
+                psum_words += per_nnz.psum_words;
+                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                    psum_cycles += per_drain.psum_cycles;
+                    psum_words += per_drain.psum_words;
+                    se += 1;
+                }
+            }
+            continue;
+        }
+
+        // chunk-entry baselines for the per-chunk stall sample
+        let (frontier0, dram_busy0, pipe0, psum0) = if sampling {
+            cache_snap.clear();
+            cache_snap.extend_from_slice(&mc.cache_busy);
+            (
+                frontier(finish, dram_free, pipe_free, psum_free, &bank_free),
+                mc.dram.busy_cycles,
+                pipeline_cycles,
+                psum_cycles,
+            )
+        } else {
+            (0.0, 0.0, 0.0, 0.0)
+        };
+
+        let n_reads = chunk.n_nnz * ctx.rpn;
+
+        // --- functional pass: one sequential sweep of the shared
+        // controller, serve outcomes recorded into the SoA batch ---
+        serve.clear();
+        serve.reserve(n_reads);
+        for read in &chunk.reads[..n_reads] {
+            let code = match mc.factor_row_load(read.slot() as usize, read.row()) {
+                Served::CacheHit { cache } => ((cache as u8) << SERVE_CACHE_SHIFT) | SERVE_HIT,
+                Served::CacheMiss { cache, writeback } => {
+                    ((cache as u8) << SERVE_CACHE_SHIFT)
+                        | if writeback { SERVE_MISS_WB } else { SERVE_MISS }
+                }
+                Served::Bypass => SERVE_BYPASS,
+            };
+            serve.push(code);
+        }
+
+        // --- bank batch: every read's bank index in one branch-free
+        // sweep over the packed words — pure integer mixing (shared
+        // with the cache's set index), no controller state, so the
+        // compiler can vectorize it ---
+        bank.clear();
+        bank.reserve(n_reads);
+        bank.extend(
+            chunk.reads[..n_reads]
+                .iter()
+                .map(|read| bank_of(row_key(read.slot() as usize, read.row()), banks) as u32),
+        );
+
+        // --- timing pass: arbitration replay from the precomputed
+        // batches; float operations in exactly the fused-loop order,
+        // so rate 1.0 stays bit-identical to the reference path ---
         let mut se = 0usize;
         for i in 0..chunk.n_nnz {
             // decoupling-window back-pressure: this nonzero may not
@@ -173,19 +333,18 @@ fn replay_pe(
             dram_free += stream_per_nnz;
 
             let mut ready = issue;
-            for read in &chunk.reads[i * ctx.rpn..(i + 1) * ctx.rpn] {
-                let (j, row) = (read.slot() as usize, read.row());
-                // the shared functional model decides hit/miss/bypass
-                // and keeps the analytic busy/traffic accounting
-                let complete = match mc.factor_row_load(j, row) {
-                    Served::CacheHit { cache } => {
-                        let b = cache * banks + bank_of(row_key(j, row), banks);
+            let reads = i * ctx.rpn..(i + 1) * ctx.rpn;
+            for (&code, &bk) in serve[reads.clone()].iter().zip(&bank[reads]) {
+                let complete = match code & SERVE_KIND_MASK {
+                    SERVE_HIT => {
+                        let b = (code >> SERVE_CACHE_SHIFT) as usize * banks + bk as usize;
                         let start = issue.max(bank_free[b]);
                         bank_free[b] = start + bank_hit;
                         bank_free[b] + hit_latency
                     }
-                    Served::CacheMiss { cache, writeback } => {
-                        let b = cache * banks + bank_of(row_key(j, row), banks);
+                    SERVE_MISS | SERVE_MISS_WB => {
+                        let writeback = code & SERVE_KIND_MASK == SERVE_MISS_WB;
+                        let b = (code >> SERVE_CACHE_SHIFT) as usize * banks + bk as usize;
                         let start = issue.max(bank_free[b]);
                         // probe + line-fill write (+ victim read-out)
                         let occ = bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
@@ -194,7 +353,7 @@ fn replay_pe(
                         dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
                         dram_free + miss_latency
                     }
-                    Served::Bypass => {
+                    _ => {
                         let grant = issue.max(dram_free);
                         dram_free = grant + miss_occ;
                         dram_free + miss_latency
@@ -226,6 +385,23 @@ fn replay_pe(
                 se += 1;
             }
         }
+
+        if sampling {
+            sampled_nnz += chunk.n_nnz as u64;
+            // The chunk's stall sample: event-frontier advance minus
+            // the chunk's own roofline time — the busiest resource's
+            // busy added during the chunk, including the nonzero
+            // stream's channel share that the functional model charges
+            // in bulk at stream end. Clamped non-negative so the
+            // extrapolated stall keeps `event ≥ analytic`.
+            let f1 = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
+            let d_dram = (mc.dram.busy_cycles - dram_busy0) + chunk.n_nnz as f64 * stream_per_nnz;
+            let mut ideal = d_dram.max(pipeline_cycles - pipe0).max(psum_cycles - psum0);
+            for (i, &before) in cache_snap.iter().enumerate() {
+                ideal = ideal.max(mc.cache_busy[i] - before);
+            }
+            stalls.push((f1 - frontier0 - ideal).max(0.0));
+        }
     }
 
     // Bulk functional stream accounting — the shared helper issues the
@@ -241,8 +417,160 @@ fn replay_pe(
 
     let latency_overhead = startup_latency(cfg, &mc);
 
-    let bank_max = bank_free.iter().cloned().fold(0.0f64, f64::max);
-    let event_end = finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max);
+    let stats = mc.cache_stats();
+    let mut report = PeReport {
+        pe: pe_idx,
+        nnz: pe_nnz,
+        slices: n_slices_pe,
+        dram_cycles: mc.dram.busy_cycles,
+        cache_cycles: mc.cache_busy.clone(),
+        psum_cycles,
+        pipeline_cycles,
+        stream_dma_cycles: mc.stream_busy,
+        element_dma_cycles: mc.element_busy,
+        latency_overhead_cycles: latency_overhead,
+        stall_cycles: 0.0,
+        stall_stderr_cycles: 0.0,
+        sampled_nnz: if sampling { sampled_nnz } else { pe_nnz },
+        cache_stats: stats,
+        dram_stream_bytes: mc.dram.bytes_streamed,
+        dram_random_bytes: mc.dram.bytes_random,
+        dram_random_accesses: mc.dram.random_accesses,
+        cache_words: mc.cache_words,
+        psum_words,
+        dma_words: mc.dma_words,
+    };
+    if sampling {
+        // extrapolate: mean per-chunk stall × total chunk count, with a
+        // standard error from the per-chunk sample variance scaled the
+        // same way (zero band when fewer than two samples exist)
+        if stalls.count() > 0 {
+            report.stall_cycles = stalls.mean() * n_chunks as f64;
+            if stalls.count() >= 2 {
+                report.stall_stderr_cycles =
+                    stalls.std() / (stalls.count() as f64).sqrt() * n_chunks as f64;
+            }
+        }
+    } else {
+        // contention = measured event finish beyond the perfect-overlap
+        // bound; clamped so the event engine never under-reports the
+        // analytic model (their busy accounting is bit-identical)
+        let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
+        report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
+    }
+    report
+}
+
+/// The pre-SoA fused per-event loop, retained verbatim (exact replay
+/// only) so the batch restructure stays pinned bit-for-bit against the
+/// original arbitration semantics. Compiled for tests and under the
+/// `replay-reference` feature for external A/B benchmarking.
+#[cfg(any(test, feature = "replay-reference"))]
+fn replay_pe_reference(
+    ctx: &ReplayCtx<'_>,
+    pe_idx: usize,
+    slices: (usize, usize),
+    scratch: &mut AccessChunk,
+) -> PeReport {
+    let (slo, shi) = slices;
+    let cfg = ctx.cfg;
+    let banks = ctx.banks;
+    let mut mc = MemoryController::new(cfg, ctx.tech, ctx.matrix_rows);
+    let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, ctx.psum_timing.clone(), ctx.psum_banks);
+
+    let per_nnz = ctx.kernel.nnz_exec(&exec, ctx.tensor.n_modes());
+    let per_drain = ctx.kernel.drain_exec(&exec, ctx.tensor.n_modes());
+
+    let hit_occ = mc.cache_timing.hit_occupancy();
+    let fill_occ = mc.cache_timing.fill_occupancy();
+    let bank_hit = hit_occ * banks as f64;
+    let bank_fill = fill_occ * banks as f64;
+    let hit_latency = mc.cache_timing.hit_latency();
+    let miss_occ = mc.dram_cfg.random_access_cycles(cfg.line_bytes as u64);
+    let miss_latency = mc.dram_cfg.row_miss_ns * 1e-9 * cfg.fabric_hz;
+    let stream_per_nnz = mc.dram_cfg.stream_cycles(ctx.item_bytes);
+
+    let n_caches = mc.caches.len();
+    let mut bank_free = vec![0.0f64; n_caches * banks];
+    let mut dram_free = 0.0f64;
+    let mut pipe_free = 0.0f64;
+    let mut psum_free = 0.0f64;
+    let mut ring = vec![0.0f64; ctx.window];
+    let mut processed = 0usize;
+    let mut finish = 0.0f64;
+
+    let mut pipeline_cycles = 0.0f64;
+    let mut psum_cycles = 0.0f64;
+    let mut psum_words = 0u64;
+    let mut pe_nnz = 0u64;
+
+    let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
+    while stream.fill(scratch) {
+        let chunk = &*scratch;
+        pe_nnz += chunk.n_nnz as u64;
+        let mut se = 0usize;
+        for i in 0..chunk.n_nnz {
+            let slot = processed % ctx.window;
+            let issue = ring[slot];
+            dram_free += stream_per_nnz;
+
+            let mut ready = issue;
+            for read in &chunk.reads[i * ctx.rpn..(i + 1) * ctx.rpn] {
+                let (j, row) = (read.slot() as usize, read.row());
+                let complete = match mc.factor_row_load(j, row) {
+                    Served::CacheHit { cache } => {
+                        let b = cache * banks + bank_of(row_key(j, row), banks);
+                        let start = issue.max(bank_free[b]);
+                        bank_free[b] = start + bank_hit;
+                        bank_free[b] + hit_latency
+                    }
+                    Served::CacheMiss { cache, writeback } => {
+                        let b = cache * banks + bank_of(row_key(j, row), banks);
+                        let start = issue.max(bank_free[b]);
+                        let occ = bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
+                        bank_free[b] = start + occ;
+                        let grant = (start + hit_latency).max(dram_free);
+                        dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
+                        dram_free + miss_latency
+                    }
+                    Served::Bypass => {
+                        let grant = issue.max(dram_free);
+                        dram_free = grant + miss_occ;
+                        dram_free + miss_latency
+                    }
+                };
+                ready = ready.max(complete);
+            }
+
+            let estart = ready.max(pipe_free);
+            pipe_free = estart + per_nnz.pipeline_cycles;
+            let pstart = estart.max(psum_free);
+            psum_free = pstart + per_nnz.psum_cycles;
+            let done = pipe_free.max(psum_free);
+            ring[slot] = done;
+            processed += 1;
+            finish = finish.max(done);
+
+            pipeline_cycles += per_nnz.pipeline_cycles;
+            psum_cycles += per_nnz.psum_cycles;
+            psum_words += per_nnz.psum_words;
+
+            if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
+                psum_free += per_drain.psum_cycles;
+                psum_cycles += per_drain.psum_cycles;
+                psum_words += per_drain.psum_words;
+                finish = finish.max(psum_free);
+                se += 1;
+            }
+        }
+    }
+
+    let n_slices_pe = (shi - slo) as u64;
+    charge_streams(&mut mc, pe_nnz, n_slices_pe, ctx.item_bytes, ctx.row_bytes);
+    dram_free += mc.dram_cfg.stream_cycles(n_slices_pe * ctx.row_bytes);
+
+    let latency_overhead = startup_latency(cfg, &mc);
+    let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
 
     let stats = mc.cache_stats();
     let mut report = PeReport {
@@ -257,6 +585,8 @@ fn replay_pe(
         element_dma_cycles: mc.element_busy,
         latency_overhead_cycles: latency_overhead,
         stall_cycles: 0.0,
+        stall_stderr_cycles: 0.0,
+        sampled_nnz: pe_nnz,
         cache_stats: stats,
         dram_stream_bytes: mc.dram.bytes_streamed,
         dram_random_bytes: mc.dram.bytes_random,
@@ -265,9 +595,6 @@ fn replay_pe(
         psum_words,
         dma_words: mc.dma_words,
     };
-    // contention = measured event finish beyond the perfect-overlap
-    // bound; clamped so the event engine never under-reports the
-    // analytic model (their busy accounting is bit-identical)
     report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
     report
 }
@@ -312,10 +639,13 @@ pub fn simulate_kernel_mode_event_with_view(
 /// [`simulate_kernel_mode_event_with_view`] under an explicit
 /// host-execution [`SimBudget`]: the independent per-PE replays fan
 /// across `budget.pe_threads(cfg.n_pes)` OS threads, each worker reusing
-/// one scratch [`AccessChunk`] through the zero-allocation fill loop.
-/// Reports land in fixed PE order, so the result is bit-identical for
-/// any thread count and chunk size — same contract as the analytic
-/// engine (pinned by `rust/tests/parallel_determinism.rs`).
+/// one scratch buffer set through the zero-allocation fill loop. Reports
+/// land in fixed PE order and chunk admission hashes fixed coordinates,
+/// so the result is bit-identical for any thread count — and, at
+/// `budget.sample` rate 1.0, for any chunk size too (same contract as
+/// the analytic engine, pinned by `rust/tests/parallel_determinism.rs`;
+/// sampled estimates are chunk-granular and pinned by
+/// `rust/tests/sampled_replay.rs`).
 pub fn simulate_kernel_mode_event_with_view_budget(
     kernel: &dyn SparseKernel,
     tensor: &SparseTensor,
@@ -330,6 +660,9 @@ pub fn simulate_kernel_mode_event_with_view_budget(
         panic!("kernel `{}` rejected the workload: {e}", kernel.name());
     }
     cfg.validate().expect("invalid accelerator config");
+    // the CLI and the sweep/explore specs reject bad rates with a proper
+    // error first, so a bad spec reaching here is a library-caller bug
+    budget.sample.validate().expect("invalid SimBudget::sample");
     // shared-path invariant: identical work split to the analytic engine
     let parts = partition_slices(view, cfg.n_pes);
 
@@ -354,13 +687,80 @@ pub fn simulate_kernel_mode_event_with_view_budget(
         row_bytes: kernel.out_row_bytes(cfg.rank, tensor.n_modes()),
         window: (cfg.n_pipelines * DECOUPLE_WINDOW_PER_PIPELINE).max(8),
         chunk_nnz: budget.chunk(),
+        mode,
+        sample: budget.sample,
+    };
+
+    let pes = parallel_map_init(
+        &parts,
+        budget.pe_threads(cfg.n_pes),
+        ReplayScratch::default,
+        |scratch, pe_idx, &range| replay_pe(&ctx, pe_idx, range, scratch),
+    );
+
+    ModeReport {
+        tensor: tensor.name.clone(),
+        kernel: kernel.name().to_string(),
+        mode,
+        tech: t,
+        rank: cfg.rank,
+        fabric_hz: cfg.fabric_hz,
+        pes,
+    }
+}
+
+/// [`simulate_kernel_mode_event_with_view_budget`] through the retained
+/// pre-SoA fused loop ([`replay_pe_reference`], exact replay only) — the
+/// bit-identity oracle for the batch restructure. Test/`replay-reference`
+/// builds only.
+#[cfg(any(test, feature = "replay-reference"))]
+pub fn simulate_kernel_mode_event_reference(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    view: &ModeView,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    budget: SimBudget,
+) -> ModeReport {
+    assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    assert!(budget.sample.is_exact(), "the reference loop only replays exact streams");
+    if let Err(e) = kernel.validate(tensor, mode) {
+        panic!("kernel `{}` rejected the workload: {e}", kernel.name());
+    }
+    cfg.validate().expect("invalid accelerator config");
+    let parts = partition_slices(view, cfg.n_pes);
+
+    let read_modes = kernel.read_modes(tensor, mode);
+    let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+
+    let t = cfg.tuned_tech(tech);
+    let banks = cfg.bank_factor(&t);
+    let psum_timing = ArrayTiming::new(&t, cfg.fabric_hz, banks);
+    let ctx = ReplayCtx {
+        kernel,
+        tensor,
+        view,
+        cfg,
+        tech: &t,
+        matrix_rows: &matrix_rows,
+        rpn: read_modes.len(),
+        banks,
+        psum_timing: &psum_timing,
+        psum_banks: (cfg.n_pipelines / 10).max(1),
+        item_bytes: nnz_item_bytes(tensor.n_modes()),
+        row_bytes: kernel.out_row_bytes(cfg.rank, tensor.n_modes()),
+        window: (cfg.n_pipelines * DECOUPLE_WINDOW_PER_PIPELINE).max(8),
+        chunk_nnz: budget.chunk(),
+        mode,
+        sample: SampleSpec::exact(),
     };
 
     let pes = parallel_map_init(
         &parts,
         budget.pe_threads(cfg.n_pes),
         AccessChunk::default,
-        |scratch, pe_idx, &range| replay_pe(&ctx, pe_idx, range, scratch),
+        |scratch, pe_idx, &range| replay_pe_reference(&ctx, pe_idx, range, scratch),
     );
 
     ModeReport {
@@ -466,7 +866,9 @@ mod tests {
         for budget in [
             SimBudget::with_threads(0),
             SimBudget::with_threads(3),
-            SimBudget { threads: 2, chunk_nnz: 999 },
+            SimBudget { threads: 2, chunk_nnz: 999, ..SimBudget::default() },
+            // at rate 1.0 the sample seed must be fully inert
+            SimBudget::default().with_sample(SampleSpec { rate: 1.0, seed: 12345 }),
         ] {
             let r = simulate_kernel_mode_event_with_view_budget(
                 kernel,
@@ -482,7 +884,107 @@ mod tests {
             for (a, b) in base.pes.iter().zip(&r.pes) {
                 assert_eq!(a.stall_cycles.to_bits(), b.stall_cycles.to_bits(), "{budget:?}");
                 assert_eq!(a.cache_stats.hits, b.cache_stats.hits, "{budget:?}");
+                assert_eq!(b.stall_stderr_cycles, 0.0, "{budget:?}");
+                assert_eq!(b.sampled_nnz, b.nnz, "{budget:?}");
             }
+        }
+    }
+
+    #[test]
+    fn soa_replay_is_bit_identical_to_the_reference_loop() {
+        // the batch restructure may reorder *code*, never arithmetic:
+        // every report field must match the retained fused loop bit for
+        // bit, on both cache classes and a non-default chunk size
+        let t = gen::random(&[512, 512, 512], 20_000, 31);
+        let cfg = small_cfg();
+        let view = ModeView::build(&t, 0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let budgets = [
+            SimBudget::default(),
+            SimBudget { threads: 2, chunk_nnz: 777, ..SimBudget::default() },
+        ];
+        for name in ["e-sram", "o-sram"] {
+            for budget in budgets {
+                let soa = simulate_kernel_mode_event_with_view_budget(
+                    kernel,
+                    &t,
+                    &view,
+                    0,
+                    &cfg,
+                    &tech(name),
+                    budget,
+                );
+                let reference = simulate_kernel_mode_event_reference(
+                    kernel,
+                    &t,
+                    &view,
+                    0,
+                    &cfg,
+                    &tech(name),
+                    budget,
+                );
+                assert_eq!(
+                    soa.runtime_cycles().to_bits(),
+                    reference.runtime_cycles().to_bits(),
+                    "{name}"
+                );
+                for (s, r) in soa.pes.iter().zip(&reference.pes) {
+                    assert_eq!(s.stall_cycles.to_bits(), r.stall_cycles.to_bits(), "{name}");
+                    assert_eq!(s.dram_cycles.to_bits(), r.dram_cycles.to_bits(), "{name}");
+                    assert_eq!(s.cache_cycles, r.cache_cycles, "{name}");
+                    assert_eq!(s.cache_stats, r.cache_stats, "{name}");
+                    assert_eq!(s.dram_stream_bytes, r.dram_stream_bytes, "{name}");
+                    assert_eq!(s.sampled_nnz, r.sampled_nnz, "{name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_replay_keeps_functional_accounting_exact() {
+        // sampling skips timing, never the shared functional model: hit
+        // rates, traffic and busy sums are bit-identical at every rate
+        let t = gen::random(&[512, 512, 512], 20_000, 11);
+        let cfg = small_cfg();
+        let view = ModeView::build(&t, 0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let small_chunks = SimBudget { chunk_nnz: 509, ..SimBudget::default() };
+        let exact = simulate_kernel_mode_event_with_view_budget(
+            kernel,
+            &t,
+            &view,
+            0,
+            &cfg,
+            &tech("e-sram"),
+            small_chunks,
+        );
+        for rate in [0.1, 0.25, 0.5] {
+            let budget = small_chunks.with_sample(SampleSpec { rate, seed: 9 });
+            let s = simulate_kernel_mode_event_with_view_budget(
+                kernel,
+                &t,
+                &view,
+                0,
+                &cfg,
+                &tech("e-sram"),
+                budget,
+            );
+            assert_eq!(exact.hit_rate(), s.hit_rate(), "rate {rate}");
+            assert_eq!(exact.total_dram_bytes(), s.total_dram_bytes(), "rate {rate}");
+            assert_eq!(exact.total_onchip_words(), s.total_onchip_words(), "rate {rate}");
+            for (e, p) in exact.pes.iter().zip(&s.pes) {
+                assert_eq!(e.dram_cycles.to_bits(), p.dram_cycles.to_bits(), "rate {rate}");
+                assert_eq!(e.cache_cycles, p.cache_cycles, "rate {rate}");
+                assert_eq!(e.pipeline_cycles.to_bits(), p.pipeline_cycles.to_bits());
+                assert_eq!(e.psum_cycles.to_bits(), p.psum_cycles.to_bits());
+                // the stall became an estimate — non-negative, partial
+                // coverage, with a band attached
+                assert!(p.stall_cycles >= 0.0);
+                assert!(p.sampled_nnz <= p.nnz);
+                assert!(p.stall_stderr_cycles >= 0.0);
+            }
+            assert!(s.sampled_frac() < 1.0, "rate {rate} sampled everything");
+            assert!(s.runtime_cycles() > 0.0);
         }
     }
 
@@ -554,6 +1056,9 @@ mod tests {
     // NOTE: the bank-conflict regression (single hot row ⇒ event strictly
     // slower on banked electrical caches) lives in the golden integration
     // suite, rust/tests/engine_agreement.rs — one fixture, one owner.
+    // Sampled-replay coverage (rate-1.0 bit-identity across presets,
+    // band coverage, thread determinism) lives in
+    // rust/tests/sampled_replay.rs.
 
     #[test]
     fn empty_tensor_event_matches_analytic() {
@@ -563,6 +1068,32 @@ mod tests {
         let e = simulate_mode_event(&t, 0, &cfg, &tech("o-sram"));
         assert_eq!(e.total_nnz(), 0);
         assert_eq!(a.runtime_cycles().to_bits(), e.runtime_cycles().to_bits());
+    }
+
+    #[test]
+    fn empty_tensor_sampled_report_is_well_formed() {
+        // zero chunks ⇒ zero samples: stall and band must come out 0.0,
+        // not NaN, and sampled_frac must read as exact
+        let t = SparseTensor::new("empty", vec![10, 10]);
+        let cfg = small_cfg();
+        let view = ModeView::build(&t, 0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let budget = SimBudget::default().with_sample(SampleSpec { rate: 0.25, seed: 1 });
+        let r = simulate_kernel_mode_event_with_view_budget(
+            kernel,
+            &t,
+            &view,
+            0,
+            &cfg,
+            &tech("o-sram"),
+            budget,
+        );
+        for p in &r.pes {
+            assert_eq!(p.stall_cycles, 0.0);
+            assert_eq!(p.stall_stderr_cycles, 0.0);
+            assert!((p.sampled_frac() - 1.0).abs() < 1e-12);
+        }
+        assert!(r.runtime_cycles().is_finite());
     }
 
     #[test]

@@ -44,12 +44,105 @@ use crate::sim::result::{ModeReport, SimReport};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
-/// Host-execution knobs for one simulation: they change how fast the
-/// simulator runs, **never** what it computes. Every knob is
-/// bit-transparent — any thread count and any chunk size reproduce
-/// identical reports (pinned by `rust/tests/parallel_determinism.rs`) —
-/// so this lives apart from [`AcceleratorConfig`], which describes the
-/// *modeled* hardware.
+/// Seeded chunk-sampling policy for the event engine's contention
+/// replay.
+///
+/// At `rate = 1.0` (the default, [`SampleSpec::exact`]) every
+/// access-stream chunk is replayed and the event engine behaves exactly
+/// as before — bit for bit. Below 1.0 the engine still walks **every**
+/// chunk functionally (hit rates, traffic and active words stay exact),
+/// but replays the contention timing only for a deterministic, seeded
+/// subset of chunks and extrapolates `stall_cycles` to full-stream
+/// scale, attaching a standard error
+/// ([`result::PeReport::stall_stderr_cycles`]) derived from the
+/// per-chunk stall variance. Chunk admission depends only on
+/// `(seed, mode, pe, chunk index)` — never on thread scheduling — so a
+/// sampled report is identical at any thread count and across runs.
+///
+/// The analytic engine ignores the spec entirely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleSpec {
+    /// Fraction of access-stream chunks whose event timing is replayed,
+    /// in `(0, 1]` (`--sample-rate` on the CLI).
+    pub rate: f64,
+    /// Seed of the chunk-admission hash (`--sample-seed` on the CLI);
+    /// irrelevant at `rate = 1.0`.
+    pub seed: u64,
+}
+
+// `rate` is validated finite and inside (0, 1] before use, so it is
+// never NaN and the reflexivity Eq promises actually holds.
+impl Eq for SampleSpec {}
+
+impl Default for SampleSpec {
+    fn default() -> Self {
+        SampleSpec::exact()
+    }
+}
+
+impl SampleSpec {
+    /// Full replay: every chunk timed, the pre-sampling behaviour.
+    pub const fn exact() -> Self {
+        SampleSpec { rate: 1.0, seed: 0 }
+    }
+
+    /// A validated spec, or the same range error [`Self::validate`]
+    /// reports.
+    pub fn new(rate: f64, seed: u64) -> Result<Self, String> {
+        let s = SampleSpec { rate, seed };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// True when every chunk is timed and the replay is bit-identical
+    /// to the pre-sampling engine.
+    pub fn is_exact(&self) -> bool {
+        self.rate >= 1.0
+    }
+
+    /// Reject rates outside `(0, 1]`; the message names the valid range
+    /// so the CLI can surface it verbatim.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 || self.rate > 1.0 {
+            return Err(format!("sample rate {} outside (0, 1]", self.rate));
+        }
+        Ok(())
+    }
+
+    /// Deterministic chunk admission: does the event replay time chunk
+    /// `chunk_idx` of PE `pe` in output mode `mode`? Chunk 0 of every PE
+    /// is always admitted (at least one stall sample per PE); the rest
+    /// pass a stateless SplitMix64-style hash of the coordinates against
+    /// the rate threshold, so the same chunks are timed at any thread
+    /// count.
+    pub fn admits(&self, mode: usize, pe: usize, chunk_idx: u64) -> bool {
+        if self.is_exact() || chunk_idx == 0 {
+            return true;
+        }
+        let mut z = self
+            .seed
+            .wrapping_add((mode as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((pe as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+            .wrapping_add(chunk_idx.wrapping_mul(0x8CB9_2BA7_2F3D_8DD7));
+        // SplitMix64 finalizer: avalanche the combined coordinates.
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        // 53-bit uniform in [0, 1), same construction as util::rng.
+        ((z >> 11) as f64) < self.rate * (1u64 << 53) as f64
+    }
+}
+
+/// Host-execution knobs for one simulation. `threads` and `chunk_nnz`
+/// change how fast the simulator runs, **never** what it computes —
+/// any thread count and any chunk size reproduce identical reports
+/// (pinned by `rust/tests/parallel_determinism.rs`). `sample` is the
+/// one deliberate exception: below `rate = 1.0` the event engine's
+/// `stall_cycles` becomes a seeded statistical estimate (still
+/// deterministic for a fixed seed, and chunk-granular — so a sampled
+/// estimate legitimately depends on `chunk_nnz`). This struct lives
+/// apart from [`AcceleratorConfig`], which describes the *modeled*
+/// hardware.
 ///
 /// **Thread-budget rule.** `threads` is a *budget*, shared between the
 /// two parallelism levels so they compose without oversubscription: the
@@ -67,11 +160,14 @@ pub struct SimBudget {
     /// Nonzeros per access-stream chunk (`--chunk-nnz` on the CLI);
     /// bounds per-PE live memory, see [`crate::kernel::ir`].
     pub chunk_nnz: usize,
+    /// Event-replay chunk sampling (`--sample-rate` / `--sample-seed`);
+    /// [`SampleSpec::exact`] by default.
+    pub sample: SampleSpec,
 }
 
 impl Default for SimBudget {
     fn default() -> Self {
-        SimBudget { threads: 0, chunk_nnz: DEFAULT_CHUNK_NNZ }
+        SimBudget { threads: 0, chunk_nnz: DEFAULT_CHUNK_NNZ, sample: SampleSpec::exact() }
     }
 }
 
@@ -84,6 +180,11 @@ impl SimBudget {
     /// The sequential budget (the pre-parallel engine behaviour).
     pub fn single_threaded() -> Self {
         SimBudget::with_threads(1)
+    }
+
+    /// This budget with a different sampling policy.
+    pub fn with_sample(self, sample: SampleSpec) -> Self {
+        SimBudget { sample, ..self }
     }
 
     /// Threads the per-PE loop actually uses for `n_pes` PEs: the
@@ -519,8 +620,43 @@ mod tests {
         assert_eq!(SimBudget::with_threads(16).pe_threads(4), 4);
         assert_eq!(SimBudget::with_threads(2).pe_threads(4), 2);
         // a zero chunk is a caller bug and fails loudly, never silently
-        let z = SimBudget { threads: 1, chunk_nnz: 0 };
+        let z = SimBudget { threads: 1, chunk_nnz: 0, ..SimBudget::default() };
         assert!(std::panic::catch_unwind(move || z.chunk()).is_err());
+    }
+
+    #[test]
+    fn sample_spec_validates_the_rate_range() {
+        assert!(SampleSpec::exact().validate().is_ok());
+        assert!(SampleSpec::new(0.25, 7).is_ok());
+        assert!(SampleSpec::new(1.0, 0).is_ok());
+        for bad in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let err = SampleSpec::new(bad, 0).unwrap_err();
+            assert!(err.contains("(0, 1]"), "{err}");
+        }
+        assert!(SampleSpec::exact().is_exact());
+        assert!(!SampleSpec { rate: 0.5, seed: 0 }.is_exact());
+        assert_eq!(SimBudget::default().sample, SampleSpec::exact());
+    }
+
+    #[test]
+    fn sample_admission_is_deterministic_and_near_the_rate() {
+        let s = SampleSpec { rate: 0.25, seed: 42 };
+        // chunk 0 is always admitted: at least one stall sample per PE
+        assert!(s.admits(0, 0, 0) && s.admits(2, 7, 0));
+        // pure function of the coordinates — same answer on every call
+        for c in 0..256u64 {
+            assert_eq!(s.admits(1, 3, c), s.admits(1, 3, c));
+        }
+        // admitted fraction tracks the rate over a long chunk sequence
+        let n = 20_000u64;
+        let hits = (0..n).filter(|&c| s.admits(0, 0, c)).count() as f64;
+        let frac = hits / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+        // a different seed selects a different subset
+        let t = SampleSpec { rate: 0.25, seed: 43 };
+        assert!((1..n).any(|c| s.admits(0, 0, c) != t.admits(0, 0, c)));
+        // exact specs admit everything regardless of seed
+        assert!((0..n).all(|c| SampleSpec::exact().admits(0, 0, c)));
     }
 
     #[test]

@@ -54,6 +54,18 @@ pub struct PeReport {
     /// analytic engine assumes perfect overlap and always reports `0.0`;
     /// see [`crate::sim::event`] for how the event replay measures it.
     pub stall_cycles: f64,
+    /// Standard error of [`Self::stall_cycles`] when the event replay
+    /// sampled the stream ([`crate::sim::SampleSpec`] below rate 1.0):
+    /// per-chunk stall variance scaled to full-stream extrapolation.
+    /// `0.0` for exact replay and for the analytic engine (the estimate
+    /// is then not an estimate).
+    pub stall_stderr_cycles: f64,
+    /// Nonzeros whose event timing was actually replayed for the stall
+    /// figure. Equals [`Self::nnz`] for exact replay and for the
+    /// analytic engine; below that, `stall_cycles` is a sampled
+    /// extrapolation. Functional accounting (traffic, hits, words)
+    /// always covers all `nnz`.
+    pub sampled_nnz: u64,
     /// Functional cache statistics (summed over the PE's caches).
     pub cache_stats: CacheStats,
     /// DRAM traffic.
@@ -105,6 +117,16 @@ impl PeReport {
     pub fn onchip_words(&self) -> u64 {
         self.cache_words + self.psum_words + self.dma_words
     }
+
+    /// Fraction of this PE's nonzeros that were event-timed (1.0 =
+    /// exact replay; empty PEs count as exact).
+    pub fn sampled_frac(&self) -> f64 {
+        if self.nnz == 0 {
+            1.0
+        } else {
+            self.sampled_nnz as f64 / self.nnz as f64
+        }
+    }
 }
 
 /// Result of simulating one full output mode across all PEs.
@@ -149,6 +171,28 @@ impl ModeReport {
             0.0
         } else {
             h as f64 / a as f64
+        }
+    }
+
+    /// Standard error of the mode runtime under sampled replay: the
+    /// slowest PE determines the runtime, so its stall band is the
+    /// mode's band. `0.0` for exact replay.
+    pub fn stall_stderr_cycles(&self) -> f64 {
+        self.pes
+            .iter()
+            .max_by(|a, b| a.runtime_cycles().partial_cmp(&b.runtime_cycles()).unwrap())
+            .map(|p| p.stall_stderr_cycles)
+            .unwrap_or(0.0)
+    }
+
+    /// Fraction of the mode's nonzeros that were event-timed (1.0 =
+    /// exact replay).
+    pub fn sampled_frac(&self) -> f64 {
+        let nnz = self.total_nnz();
+        if nnz == 0 {
+            1.0
+        } else {
+            self.pes.iter().map(|p| p.sampled_nnz).sum::<u64>() as f64 / nnz as f64
         }
     }
 
@@ -207,6 +251,24 @@ impl SimReport {
     pub fn total_runtime_cycles(&self) -> f64 {
         self.modes.iter().map(|m| m.runtime_cycles()).sum()
     }
+
+    /// Root-sum-square standard error of the total runtime in cycles:
+    /// per-mode sampled-stall estimates are independent (disjoint chunk
+    /// populations, independent admission coordinates), so their
+    /// variances add. `0.0` for exact replay.
+    pub fn total_stall_stderr_cycles(&self) -> f64 {
+        self.modes.iter().map(|m| m.stall_stderr_cycles().powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// [`Self::total_stall_stderr_cycles`] converted to seconds via each
+    /// mode's own fabric clock.
+    pub fn total_runtime_stderr_s(&self) -> f64 {
+        self.modes
+            .iter()
+            .map(|m| (m.stall_stderr_cycles() / m.fabric_hz).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +290,8 @@ mod tests {
             element_dma_cycles: 0.0,
             latency_overhead_cycles: 2.0,
             stall_cycles: 0.0,
+            stall_stderr_cycles: 0.0,
+            sampled_nnz: 100,
             cache_stats: CacheStats { hits: 80, misses: 20, evictions: 5, writebacks: 0 },
             dram_stream_bytes: 1000,
             dram_random_bytes: 640,
@@ -297,6 +361,38 @@ mod tests {
             modes: vec![m.clone(), m],
         };
         assert_eq!(r.total_runtime_cycles(), 24.0);
+    }
+
+    #[test]
+    fn stall_band_follows_the_slowest_pe_and_sums_in_quadrature() {
+        let mut fast = pe(10.0, 5.0, 1.0);
+        let mut slow = pe(40.0, 5.0, 1.0);
+        fast.stall_stderr_cycles = 9.0; // not the runtime-determining PE
+        slow.stall_stderr_cycles = 3.0;
+        slow.sampled_nnz = 25;
+        let m = ModeReport {
+            tensor: "t".into(),
+            kernel: "spmttkrp".into(),
+            mode: 0,
+            tech: esram(),
+            rank: 16,
+            fabric_hz: 500e6,
+            pes: vec![fast, slow],
+        };
+        assert_eq!(m.stall_stderr_cycles(), 3.0);
+        assert!((m.sampled_frac() - 125.0 / 200.0).abs() < 1e-12);
+        let r = SimReport {
+            tensor: "t".into(),
+            kernel: "spmttkrp".into(),
+            tech: esram(),
+            modes: vec![m.clone(), m],
+        };
+        // two modes with stderr 3.0 each → sqrt(9 + 9)
+        assert!((r.total_stall_stderr_cycles() - 18.0f64.sqrt()).abs() < 1e-12);
+        assert!((r.total_runtime_stderr_s() - 18.0f64.sqrt() / 500e6).abs() < 1e-18);
+        // exact reports carry a zero band by construction
+        assert_eq!(pe(1.0, 1.0, 1.0).stall_stderr_cycles, 0.0);
+        assert!((pe(1.0, 1.0, 1.0).sampled_frac() - 1.0).abs() < 1e-12);
     }
 
     #[test]

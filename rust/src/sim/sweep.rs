@@ -37,7 +37,7 @@ use crate::kernel::{KernelKind, DEFAULT_CHUNK_NNZ};
 use crate::mem::tech::MemTechnology;
 use crate::sim::par::parallel_map;
 use crate::sim::result::ModeReport;
-use crate::sim::{EngineKind, SimBudget};
+use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 use crate::tensor::gen::TensorSpec;
@@ -81,6 +81,10 @@ pub struct SweepSpec {
     /// ([`SimBudget::chunk_nnz`]); bit-transparent, bounds per-PE live
     /// memory. Default [`DEFAULT_CHUNK_NNZ`].
     pub chunk_nnz: usize,
+    /// Event-replay chunk sampling handed to every simulation
+    /// ([`SimBudget::sample`]; `--sample-rate`/`--sample-seed` on the
+    /// CLI). Ignored by the analytic engine; exact by default.
+    pub sample: SampleSpec,
 }
 
 impl SweepSpec {
@@ -99,6 +103,7 @@ impl SweepSpec {
             engine: EngineKind::Analytic,
             kernel: KernelKind::Spmttkrp,
             chunk_nnz: DEFAULT_CHUNK_NNZ,
+            sample: SampleSpec::exact(),
         }
     }
 
@@ -123,6 +128,7 @@ impl SweepSpec {
         if self.chunk_nnz == 0 {
             return Err("chunk_nnz must be positive".into());
         }
+        self.sample.validate()?;
         let mut seen: Vec<&str> = Vec::new();
         for t in &self.techs {
             if seen.contains(&t.name.as_str()) {
@@ -262,8 +268,11 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
     // big machine ⇒ the spare cores sink into the PE loops instead of
     // idling. Level products never exceed the requested budget.
     let point_workers = threads.min(jobs.len().max(1));
-    let budget =
-        SimBudget { threads: (threads / point_workers).max(1), chunk_nnz: spec.chunk_nnz };
+    let budget = SimBudget {
+        threads: (threads / point_workers).max(1),
+        chunk_nnz: spec.chunk_nnz,
+        sample: spec.sample,
+    };
 
     let points = parallel_map(&jobs, threads, |&(wi, xi, mode)| {
         let wl = &workloads[wi];
@@ -447,6 +456,43 @@ mod tests {
         // and the summary table says which engine produced it
         let table = summary_table(&es, &e_points).render_ascii();
         assert!(table.contains("engine event"), "{table}");
+    }
+
+    #[test]
+    fn sampled_event_sweep_is_deterministic_and_rate_one_is_exact() {
+        // rate 1.0 through the sweep plumbing is the exact replay bit
+        // for bit, whatever the seed; below 1.0 the grid stays
+        // deterministic across thread counts and never undercuts the
+        // analytic floor
+        let mut exact = tiny_spec(2);
+        exact.engine = EngineKind::Event;
+        let base = run_sweep(&exact).unwrap();
+        let mut s = tiny_spec(2);
+        s.engine = EngineKind::Event;
+        s.sample = SampleSpec { rate: 1.0, seed: 777 };
+        for (a, b) in base.iter().zip(&run_sweep(&s).unwrap()) {
+            assert_eq!(a.runtime_cycles().to_bits(), b.runtime_cycles().to_bits());
+        }
+        let analytic = run_sweep(&tiny_spec(2)).unwrap();
+        let mut s1 = tiny_spec(1);
+        s1.engine = EngineKind::Event;
+        s1.sample = SampleSpec { rate: 0.25, seed: 5 };
+        s1.chunk_nnz = 61; // many chunks, so sampling actually skips some
+        let sampled = run_sweep(&s1).unwrap();
+        for (a, e) in analytic.iter().zip(&sampled) {
+            assert!(e.runtime_cycles() >= a.runtime_cycles(), "point {}", a.index);
+            assert_eq!(a.hit_rate(), e.hit_rate(), "point {}", a.index);
+        }
+        let mut s8 = s1.clone();
+        s8.threads = 8;
+        for (x, y) in sampled.iter().zip(&run_sweep(&s8).unwrap()) {
+            assert_eq!(x.runtime_cycles().to_bits(), y.runtime_cycles().to_bits());
+        }
+        // out-of-range rates are rejected up front with the range named
+        let mut bad = tiny_spec(1);
+        bad.sample = SampleSpec { rate: 1.5, seed: 0 };
+        let e = run_sweep(&bad).unwrap_err();
+        assert!(e.contains("(0, 1]"), "{e}");
     }
 
     #[test]

@@ -465,6 +465,60 @@ fn explore_area_budget_excludes_wafer_scale_points() {
 }
 
 #[test]
+fn out_of_range_sample_rate_reports_the_valid_interval() {
+    // satellite of unknown_engine_lists_the_backends: a bad --sample-rate
+    // must name the flag and the accepted range, on every subcommand
+    for args in [
+        vec!["simulate", "--tensor", "nell-2", "--sample-rate", "1.5"],
+        vec!["sweep", "--tensor", "nell-2", "--sample-rate", "0"],
+        vec!["explore", "--tensor", "nell-2", "--sample-rate", "-0.25"],
+    ] {
+        let out = bin().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("sample-rate"), "{args:?}: {err}");
+        assert!(err.contains("(0, 1]"), "{args:?}: {err}");
+    }
+}
+
+#[test]
+fn sampled_event_simulate_runs_and_rate_one_is_exact() {
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001", "--tech", "o-sram",
+            "--mode", "0", "--engine", "event", "--chunk-nnz", "128",
+        ];
+        args.extend_from_slice(extra);
+        let out = bin().args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    // rate 1.0 is bit-identical to the unsampled replay regardless of seed
+    let exact = run(&[]);
+    let rate_one = run(&["--sample-rate", "1.0", "--sample-seed", "99"]);
+    assert_eq!(exact, rate_one, "--sample-rate 1.0 changed the report");
+    // a sampled run completes and still prints the per-mode line
+    let sampled = run(&["--sample-rate", "0.25", "--sample-seed", "7"]);
+    assert!(sampled.contains("M0 [o-sram]"), "{sampled}");
+}
+
+#[test]
+fn explore_accepts_the_sampling_knobs() {
+    let out = bin()
+        .args([
+            "explore", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "e-sram", "--tech", "o-sram",
+            "--axes", "n_pes=2,4", "--sample-rate", "0.25", "--sample-seed", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Pareto frontier by edp"), "{text}");
+    assert!(text.contains("sampled rank"), "{text}");
+}
+
+#[test]
 fn sweep_accepts_config_defined_technologies() {
     // process-unique path so concurrent suites on one machine don't race
     let dir = std::env::temp_dir().join(format!("photon_cli_tech_{}.toml", std::process::id()));

@@ -11,7 +11,7 @@ use photon_mttkrp::explore::{
 };
 use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry::tech;
-use photon_mttkrp::sim::{EngineKind, SimBudget};
+use photon_mttkrp::sim::{EngineKind, SampleSpec, SimBudget};
 use photon_mttkrp::tensor::gen::{preset, FrosttTensor, TensorSpec};
 
 /// The default paper grid over all four builtin technologies on the
@@ -51,6 +51,13 @@ fn assert_bit_identical(a: &ExploreResult, b: &ExploreResult, what: &str) {
         assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{what}");
         assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "{what}");
     }
+    // the grid-wide sampled confirmation is deterministic too: the chunk
+    // admission hash is pure (seed, mode, pe, chunk), never thread order
+    assert_eq!(a.event_sampled.len(), b.event_sampled.len(), "{what}");
+    for (x, y) in a.event_sampled.iter().zip(&b.event_sampled) {
+        assert_eq!(x.runtime_s.to_bits(), y.runtime_s.to_bits(), "{what}");
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{what}");
+    }
     assert_eq!(a.frontier.len(), b.frontier.len(), "{what}");
     for (x, y) in a.frontier.iter().zip(&b.frontier) {
         assert_eq!(x.candidate.label(), y.candidate.label(), "{what}");
@@ -61,8 +68,13 @@ fn assert_bit_identical(a: &ExploreResult, b: &ExploreResult, what: &str) {
         assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits(), "{what}");
         assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits(), "{what}");
         assert_eq!(
-            (x.analytic_rank, x.event_rank, x.event_dominated),
-            (y.analytic_rank, y.event_rank, y.event_dominated),
+            x.event_sampled.runtime_s.to_bits(),
+            y.event_sampled.runtime_s.to_bits(),
+            "{what}"
+        );
+        assert_eq!(
+            (x.analytic_rank, x.event_rank, x.sampled_rank, x.event_dominated),
+            (y.analytic_rank, y.event_rank, y.sampled_rank, y.event_dominated),
             "{what}"
         );
     }
@@ -147,7 +159,16 @@ fn frontier_invariants_hold_on_a_real_search() {
             );
         }
     }
-    assert_eq!(r.deltas.len(), r.frontier.iter().filter(|p| p.flipped()).count());
+    assert_eq!(
+        r.deltas.len(),
+        r.frontier.iter().filter(|p| p.flipped() || p.sample_flipped()).count()
+    );
+    // the sampled grid view exists for every screened candidate
+    assert_eq!(r.event_sampled.len(), r.candidates.len());
+    for (a, s) in r.analytic.iter().zip(&r.event_sampled) {
+        assert!(s.runtime_s >= a.runtime_s);
+        assert!(s.energy_j >= a.energy_j);
+    }
 }
 
 #[test]
@@ -183,11 +204,28 @@ fn frontier_is_bit_identical_across_thread_counts() {
 
 #[test]
 fn chunk_granularity_is_bit_transparent() {
-    let base = run_explore(&tiny_spec(2)).unwrap();
+    // exact replay: the chunk size changes nothing at all
     let mut s = tiny_spec(2);
+    s.sample = SampleSpec::exact();
+    let base = run_explore(&s).unwrap();
+    let mut s = tiny_spec(2);
+    s.sample = SampleSpec::exact();
     s.chunk_nnz = 37;
     let other = run_explore(&s).unwrap();
     assert_bit_identical(&base, &other, "chunk_nnz=37");
+    // sampled confirmation: the chunk grid is the sampling frame, so the
+    // sampled *estimate* may legitimately move with it — but membership
+    // and the published exact event numbers must not
+    let mut s = tiny_spec(2);
+    s.chunk_nnz = 37;
+    let sampled = run_explore(&s).unwrap();
+    assert_eq!(sampled.frontier.len(), base.frontier.len());
+    for (x, y) in base.frontier.iter().zip(&sampled.frontier) {
+        assert_eq!(x.candidate.label(), y.candidate.label());
+        assert_eq!(x.analytic_rank, y.analytic_rank);
+        assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits());
+        assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits());
+    }
     let mut s = tiny_spec(1);
     s.chunk_nnz = 0;
     assert!(run_explore(&s).is_err());

@@ -26,6 +26,8 @@ fn fold_pe(p: &PeReport) -> Vec<u64> {
         p.element_dma_cycles.to_bits(),
         p.latency_overhead_cycles.to_bits(),
         p.stall_cycles.to_bits(),
+        p.stall_stderr_cycles.to_bits(),
+        p.sampled_nnz,
         p.cache_stats.hits,
         p.cache_stats.misses,
         p.dram_stream_bytes,
@@ -106,7 +108,7 @@ fn chunk_size_is_bit_transparent_on_both_engines() {
                 0,
                 &cfg,
                 &tech("e-sram"),
-                SimBudget { threads: 2, chunk_nnz },
+                SimBudget { threads: 2, chunk_nnz, ..SimBudget::default() },
             );
             assert_eq!(fold_mode(&base), fold_mode(&r), "{kind} at chunk {chunk_nnz}");
         }
