@@ -2,6 +2,7 @@
 //! constants of §V-A, all overridable from a config file or CLI.
 
 use crate::mem::dram::DramConfig;
+use crate::mem::hierarchy::{parse_levels, MemLevelSpec};
 use crate::util::configfile::Config;
 
 /// Full accelerator + platform configuration.
@@ -65,6 +66,14 @@ pub struct AcceleratorConfig {
     /// variant's, etc. Eq. 1 ablation knob — changes concurrency, not
     /// the device energies. See [`tuned_tech`](Self::tuned_tech).
     pub osram_lambda_override: Option<u32>,
+    /// Multi-level on-chip memory stack between the PE caches and DRAM,
+    /// outermost (DRAM-side) first. Empty (the default and the paper's
+    /// configuration) is the *degenerate* single-level model: every
+    /// PE-cache miss goes straight to the DRAM channel, bit-identical
+    /// to the pre-hierarchy output. Set via `--levels`, the
+    /// `hierarchy.levels` config key, or programmatically; see
+    /// [`crate::mem::hierarchy`].
+    pub levels: Vec<MemLevelSpec>,
 
     // --- platform resource budget (§V-A, Alveo U250-class) ---
     /// Total on-chip memory replaced by O-SRAM, bytes (54 MB).
@@ -94,6 +103,7 @@ impl AcceleratorConfig {
             compute_power_w: 0.4,
             cache_bypass_factor: None,
             osram_lambda_override: None,
+            levels: Vec::new(),
             onchip_bytes: 54 * 1024 * 1024,
             luts: 6_433_000,
             flipflops: 8_474_000,
@@ -192,6 +202,7 @@ impl AcceleratorConfig {
             "model.esram_bank_factor",
             "model.compute_power_w",
             "platform.onchip_mb",
+            "hierarchy.levels",
         ];
         for k in c.keys() {
             if k.starts_with("tech.") {
@@ -219,6 +230,12 @@ impl AcceleratorConfig {
         self.onchip_bytes =
             (c.f64_or("platform.onchip_mb", self.onchip_bytes as f64 / (1 << 20) as f64)
                 * (1 << 20) as f64) as u64;
+        if let Some(v) = c.get("hierarchy.levels") {
+            let spec = v
+                .as_str()
+                .ok_or_else(|| "hierarchy.levels must be a string (see --levels)".to_string())?;
+            self.levels = parse_levels(spec).map_err(|e| format!("hierarchy.levels: {e}"))?;
+        }
         self.validate()
     }
 
@@ -242,6 +259,53 @@ impl AcceleratorConfig {
         }
         if self.fabric_hz <= 0.0 {
             return Err("fabric clock must be positive".into());
+        }
+        self.validate_levels()
+    }
+
+    /// Structural checks for the memory-hierarchy stack. Each level
+    /// line must be a power-of-two multiple of the PE cache line (so a
+    /// level key is a shift of the row key), the capacity must hold a
+    /// power-of-two line count (the functional model is set-associative
+    /// like the PE caches), and names must be unique.
+    fn validate_levels(&self) -> Result<(), String> {
+        for (i, l) in self.levels.iter().enumerate() {
+            let line = l.resolved_line_bytes(self.line_bytes);
+            if line % self.line_bytes != 0 || !(line / self.line_bytes).is_power_of_two() {
+                return Err(format!(
+                    "level `{}`: line ({line} B) must be a power-of-two multiple of the \
+                     cache line ({} B)",
+                    l.name, self.line_bytes
+                ));
+            }
+            if l.capacity_bytes % line as u64 != 0
+                || !(l.capacity_bytes / line as u64).is_power_of_two()
+            {
+                return Err(format!(
+                    "level `{}`: capacity ({} B) must be a power-of-two multiple of its \
+                     line ({line} B)",
+                    l.name, l.capacity_bytes
+                ));
+            }
+            if l.banks == 0 {
+                return Err(format!("level `{}`: bank count must be positive", l.name));
+            }
+            if self.levels[..i].iter().any(|p| p.name == l.name) {
+                return Err(format!("duplicate level name `{}`", l.name));
+            }
+            // inner levels must not use a coarser line than the level
+            // outside them, or a fill could not be assembled from one
+            // outer request
+            if let Some(prev) = i.checked_sub(1).map(|j| &self.levels[j]) {
+                let prev_line = prev.resolved_line_bytes(self.line_bytes);
+                if line > prev_line {
+                    return Err(format!(
+                        "level `{}`: line ({line} B) exceeds the outer level `{}` line \
+                         ({prev_line} B)",
+                        l.name, prev.name
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -352,6 +416,50 @@ mod tests {
         assert_eq!(c.bank_factor(&crate::mem::uram::uram()), c.esram_bank_factor);
         assert_eq!(c.bank_factor(&crate::mem::osram::osram()), 1);
         assert_eq!(c.bank_factor(&crate::mem::posram::osram_imc()), 1);
+    }
+
+    #[test]
+    fn hierarchy_levels_config_key_and_validation() {
+        let mut c = AcceleratorConfig::paper_default();
+        let file = Config::parse("[hierarchy]\nlevels = \"sram:256KiB:8banks,local:4KiB:db\"")
+            .unwrap();
+        c.apply_config(&file).unwrap();
+        assert_eq!(c.levels.len(), 2);
+        assert_eq!(c.levels[0].name, "sram");
+        assert_eq!(c.levels[0].banks, 8);
+        assert!(c.levels[1].double_buffer);
+
+        // line must be a power-of-two multiple of the cache line
+        let mut bad = AcceleratorConfig::paper_default();
+        bad.levels = parse_levels("l0:4KiB:line96").unwrap();
+        assert!(bad.validate().is_err());
+        // capacity must hold a power-of-two line count
+        let mut bad = AcceleratorConfig::paper_default();
+        bad.levels = parse_levels("l0:192KiB").unwrap(); // 3072 lines of 64 B
+        assert!(bad.validate().is_err());
+        // inner line must not exceed the outer line
+        let mut bad = AcceleratorConfig::paper_default();
+        bad.levels = parse_levels("outer:64KiB:line128,inner:8KiB:line256").unwrap();
+        assert!(bad.validate().is_err());
+        // duplicate names rejected even when set programmatically
+        let mut bad = AcceleratorConfig::paper_default();
+        bad.levels =
+            vec![MemLevelSpec::new("x", 64 * 1024), MemLevelSpec::new("x", 4 * 1024)];
+        assert!(bad.validate().is_err());
+        // a well-formed two-level stack validates
+        let mut ok = AcceleratorConfig::paper_default();
+        ok.levels = parse_levels("sram:256KiB:line256,local:4KiB:db").unwrap();
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_default_has_no_hierarchy_and_scaling_keeps_it() {
+        let c = AcceleratorConfig::paper_default();
+        assert!(c.levels.is_empty(), "degenerate config must stay degenerate");
+        let mut c2 = AcceleratorConfig::paper_default();
+        c2.levels = parse_levels("sram:256KiB").unwrap();
+        let s = c2.scaled(1.0 / 64.0);
+        assert_eq!(s.levels, parse_levels("sram:256KiB").unwrap(), "scaled() leaves levels");
     }
 
     #[test]

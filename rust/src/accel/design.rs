@@ -13,6 +13,12 @@ pub struct OnChipBudget {
     pub cache_tag_bytes: u64,
     pub psum_bytes: u64,
     pub dma_bytes: u64,
+    /// Multi-level memory-hierarchy arrays (`AcceleratorConfig::levels`,
+    /// per PE: data + the same 8 B/line tag model as the caches). Zero
+    /// for the degenerate single-level configuration, so the paper
+    /// default's budget — and everything priced from it (Eq. 2 static
+    /// energy, the explore area objective) — is unchanged.
+    pub hier_bytes: u64,
 }
 
 impl OnChipBudget {
@@ -26,16 +32,27 @@ impl OnChipBudget {
         let cache_tag = pes * cfg.n_caches as u64 * cfg.cache_lines as u64 * 8;
         let psum = pes * cfg.n_pipelines as u64 * cfg.psum_elements as u64 * 4;
         let dma = pes * cfg.n_dma_buffers as u64 * cfg.dma_buffer_bytes as u64;
+        let hier = pes
+            * cfg
+                .levels
+                .iter()
+                .map(|l| {
+                    let line = l.resolved_line_bytes(cfg.line_bytes) as u64;
+                    l.capacity_bytes + (l.capacity_bytes / line) * 8
+                })
+                .sum::<u64>();
         OnChipBudget {
             cache_data_bytes: cache_data,
             cache_tag_bytes: cache_tag,
             psum_bytes: psum,
             dma_bytes: dma,
+            hier_bytes: hier,
         }
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.cache_data_bytes + self.cache_tag_bytes + self.psum_bytes + self.dma_bytes
+            + self.hier_bytes
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -110,5 +127,30 @@ mod tests {
         cfg.n_pes = 8;
         let b8 = OnChipBudget::from_config(&cfg);
         assert_eq!(b8.total_bytes(), 2 * b4.total_bytes());
+    }
+
+    #[test]
+    fn hierarchy_levels_join_the_budget() {
+        let mut cfg = AcceleratorConfig::paper_default();
+        let base = OnChipBudget::from_config(&cfg);
+        assert_eq!(base.hier_bytes, 0, "degenerate config instantiates no levels");
+        cfg.levels =
+            crate::mem::hierarchy::parse_levels("sram:256KiB:line256,local:4KiB").unwrap();
+        cfg.validate().unwrap();
+        let b = OnChipBudget::from_config(&cfg);
+        // per PE: 256 KiB (1024 lines of 256 B) + 4 KiB (64 lines of 64 B),
+        // each line carrying the 8 B tag model
+        let per_pe = (256 * 1024 + 1024 * 8) + (4 * 1024 + 64 * 8);
+        assert_eq!(b.hier_bytes, 4 * per_pe);
+        assert_eq!(b.total_bytes(), base.total_bytes() + 4 * per_pe);
+        // the area/energy models price the stack through this one number
+        let with = crate::area::model::AreaModel::new(&cfg)
+            .design(&crate::mem::esram::esram())
+            .onchip_mem_mm2;
+        cfg.levels.clear();
+        let without = crate::area::model::AreaModel::new(&cfg)
+            .design(&crate::mem::esram::esram())
+            .onchip_mem_mm2;
+        assert!(with > without, "level capacity must cost area");
     }
 }

@@ -11,13 +11,33 @@
 //!    whose row space is hopeless for the cache (≫ capacity × bypass
 //!    factor) bypass the cache so they neither pollute it nor pay tag
 //!    overhead; they go straight to DRAM as independent bursts.
+//!
+//! ## Memory hierarchy (`AcceleratorConfig::levels`)
+//!
+//! When the config carries a non-empty level stack, the type-1 *miss*
+//! path probes the stack innermost-first instead of going straight to
+//! DRAM: a hit at some level serves the PE-cache line fill from that
+//! level's array; an all-miss fetches the outermost level's line from
+//! DRAM and fills every missed level on the way back in. Each level
+//! keeps a functional [`SetAssocCache`] over coarsened row keys (its
+//! line is a power-of-two multiple of the PE cache line, so the level
+//! key is `row >> shift`), per-level hit/traffic/word/busy counters
+//! (surfaced as [`LevelReport`]s), and hoisted `ArrayTiming` occupancy
+//! constants the event engine re-uses for its per-level arbitration.
+//! Bypass accesses and dirty writebacks keep the direct-DRAM path, so
+//! the conservation invariant is exact: level `i` accesses ==
+//! level `i+1` misses, and the innermost level sees every PE-cache
+//! line fill. An **empty stack executes the pre-hierarchy code
+//! byte-for-byte** — the degenerate config is bit-identical (pinned by
+//! `tests/golden.rs`).
 
 use crate::accel::config::AcceleratorConfig;
-use crate::cache::cache::{Access, CacheStats, SetAssocCache};
+use crate::cache::cache::{row_key, Access, CacheStats, SetAssocCache};
 use crate::cache::pipeline::{ArrayTiming, CacheTiming};
 use crate::dma::elementwise::ElementDma;
 use crate::dma::stream::StreamDma;
 use crate::mem::dram::{DramChannelState, DramConfig};
+use crate::mem::hierarchy::LevelReport;
 use crate::mem::tech::MemTechnology;
 
 /// How a factor-row access was served (for the engine's accounting).
@@ -26,6 +46,58 @@ pub enum Served {
     CacheHit { cache: usize },
     CacheMiss { cache: usize, writeback: bool },
     Bypass,
+}
+
+/// One instantiated level of the configured memory hierarchy:
+/// functional set-associative state over coarsened row keys, hoisted
+/// occupancy constants, and the per-level accounting that becomes a
+/// [`LevelReport`]. Stored in `AcceleratorConfig::levels` stack order
+/// (index 0 outermost / DRAM-side).
+struct LevelState {
+    cache: SetAssocCache,
+    /// `log2(level_line / cfg.line_bytes)`: the level key is
+    /// `row_key(matrix, row >> row_shift)`.
+    row_shift: u32,
+    /// Array occupancy to serve one inner request (fabric cycles).
+    serve_occ: f64,
+    /// Array occupancy to write one level line on a fill.
+    fill_occ: f64,
+    /// Pipelined array latency (fabric cycles) — the event engine's
+    /// hit-to-forward delay for this level.
+    latency: f64,
+    /// 32-bit words of one inner request (the next-inner level's line,
+    /// or the PE cache line for the innermost level).
+    request_words: u64,
+    /// 32-bit words of one level line.
+    line_words: u64,
+    // --- accounting ---
+    accesses: u64,
+    hits: u64,
+    misses: u64,
+    busy: f64,
+    words: u64,
+    // --- spec echo for reports ---
+    name: String,
+    capacity_bytes: u64,
+    line_bytes: u64,
+    double_buffer: bool,
+}
+
+impl LevelState {
+    fn report(&self) -> LevelReport {
+        LevelReport {
+            name: self.name.clone(),
+            capacity_bytes: self.capacity_bytes,
+            line_bytes: self.line_bytes,
+            double_buffer: self.double_buffer,
+            accesses: self.accesses,
+            hits: self.hits,
+            misses: self.misses,
+            traffic_bytes: self.accesses * self.request_words * 4,
+            words: self.words,
+            busy_cycles: self.busy,
+        }
+    }
 }
 
 /// Per-PE memory controller: functional + timing state.
@@ -62,6 +134,20 @@ pub struct MemoryController {
     probe_words: u64,
     words_per_line: u64,
     miss_dram_cycles: f64,
+    /// Configured memory hierarchy (empty = degenerate single-level
+    /// model; the miss path then runs the pre-hierarchy code exactly).
+    levels: Vec<LevelState>,
+    /// DRAM occupancy of fetching one *outermost-level* line on an
+    /// all-levels miss (`miss_dram_cycles` covers the degenerate path's
+    /// PE-cache line instead).
+    hier_miss_dram_cycles: f64,
+    /// Bytes of one outermost-level line (all-miss DRAM traffic unit).
+    hier_line_bytes: u64,
+    /// Missed-level count of the most recent `CacheMiss` serve
+    /// (0 = innermost level hit … `n_levels()` = went to DRAM).
+    /// Meaningful only right after [`Self::factor_row_load`] returns
+    /// `Served::CacheMiss`, and only with a non-empty stack.
+    last_fill_depth: u8,
 }
 
 /// A fabric-synchronous (electrical) cache's MEM pipeline sustains fewer
@@ -101,6 +187,51 @@ impl MemoryController {
         let ways_read = if t.serial_tag_data(cfg.fabric_hz) { 1 } else { cfg.cache_assoc as u64 };
         let words_per_line = (cfg.line_bytes / 4) as u64;
         let tag_words = cfg.cache_assoc as u64 * 2;
+        // Memory-hierarchy stack: one functional cache + hoisted
+        // occupancy constants per configured level (see module docs;
+        // `AcceleratorConfig::validate` guarantees the power-of-two
+        // geometry the set-associative model needs).
+        let levels: Vec<LevelState> = cfg
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let line = spec.resolved_line_bytes(cfg.line_bytes) as u64;
+                let request_bytes = match cfg.levels.get(i + 1) {
+                    Some(inner) => inner.resolved_line_bytes(cfg.line_bytes) as u64,
+                    None => cfg.line_bytes as u64,
+                };
+                let lines = (spec.capacity_bytes / line) as usize;
+                let assoc = lines.min(4);
+                let timing = ArrayTiming::new(t, cfg.fabric_hz, spec.banks);
+                let request_words = request_bytes / 4;
+                let line_words = line / 4;
+                LevelState {
+                    cache: SetAssocCache::new(lines / assoc, assoc),
+                    row_shift: (line / cfg.line_bytes as u64).trailing_zeros(),
+                    serve_occ: timing.occupancy_cycles(request_words as f64),
+                    fill_occ: timing.occupancy_cycles(line_words as f64),
+                    latency: timing.latency_fabric_cycles,
+                    request_words,
+                    line_words,
+                    accesses: 0,
+                    hits: 0,
+                    misses: 0,
+                    busy: 0.0,
+                    words: 0,
+                    name: spec.name.clone(),
+                    capacity_bytes: spec.capacity_bytes,
+                    line_bytes: line,
+                    double_buffer: spec.double_buffer,
+                }
+            })
+            .collect();
+        let hier_line_bytes = levels.first().map(|l| l.line_bytes).unwrap_or(0);
+        let hier_miss_dram_cycles = if hier_line_bytes == 0 {
+            0.0
+        } else {
+            dram_cfg.random_access_cycles(hier_line_bytes)
+        };
         MemoryController {
             tech: tech.clone(),
             caches,
@@ -123,6 +254,10 @@ impl MemoryController {
             line_bytes: cfg.line_bytes as u64,
             ways_read_per_lookup: ways_read,
             tag_words_per_access: tag_words,
+            levels,
+            hier_miss_dram_cycles,
+            hier_line_bytes,
+            last_fill_depth: 0,
         }
     }
 
@@ -165,10 +300,19 @@ impl MemoryController {
                 // probe + MEM-pipeline line fill (Fig. 5)
                 self.cache_busy[ci] += self.hit_occ + self.fill_occ;
                 self.cache_words += self.probe_words + self.words_per_line;
-                self.dram.busy_cycles += self.miss_dram_cycles;
-                self.dram.bytes_random += self.line_bytes;
-                self.dram.random_accesses += 1;
+                if self.levels.is_empty() {
+                    // degenerate single-level model: straight to DRAM
+                    // (this arm is the pre-hierarchy code, unchanged)
+                    self.dram.busy_cycles += self.miss_dram_cycles;
+                    self.dram.bytes_random += self.line_bytes;
+                    self.dram.random_accesses += 1;
+                } else {
+                    self.last_fill_depth = self.hierarchy_fill(matrix, row);
+                }
                 if evicted_dirty {
+                    // dirty writebacks post straight to DRAM in both
+                    // shapes (keeps the per-level traffic invariant
+                    // exact: level accesses count only line fills)
                     self.dram.busy_cycles += self.miss_dram_cycles;
                     self.dram.bytes_random += self.line_bytes;
                     self.dram.random_accesses += 1;
@@ -177,6 +321,86 @@ impl MemoryController {
                 Served::CacheMiss { cache: ci, writeback: evicted_dirty }
             }
         }
+    }
+
+    /// Serve a PE-cache line fill from the hierarchy: probe levels
+    /// innermost-first; a hit at some level stops there, an all-miss
+    /// fetches the outermost line from DRAM and every missed level
+    /// fills on the way back in. Returns the missed-level count
+    /// (0 = innermost hit … `n_levels()` = DRAM).
+    ///
+    /// Accounting per probed level: every probe reads the inner
+    /// request's words (`serve_occ` busy); a miss additionally writes
+    /// the level's own line (`fill_occ` busy). Levels are read-only
+    /// caches over factor rows — no dirty state, so no level-level
+    /// writebacks.
+    fn hierarchy_fill(&mut self, matrix: usize, row: u32) -> u8 {
+        let mut depth = 0u8;
+        for idx in (0..self.levels.len()).rev() {
+            let lv = &mut self.levels[idx];
+            let key = row_key(matrix, row >> lv.row_shift);
+            lv.accesses += 1;
+            lv.words += lv.request_words;
+            lv.busy += lv.serve_occ;
+            match lv.cache.access(key, false) {
+                Access::Hit => {
+                    lv.hits += 1;
+                    return depth;
+                }
+                Access::Miss { .. } => {
+                    lv.misses += 1;
+                    lv.words += lv.line_words;
+                    lv.busy += lv.fill_occ;
+                    depth += 1;
+                }
+            }
+        }
+        // missed every level: one outermost-line fetch from DRAM
+        self.dram.busy_cycles += self.hier_miss_dram_cycles;
+        self.dram.bytes_random += self.hier_line_bytes;
+        self.dram.random_accesses += 1;
+        depth
+    }
+
+    /// Number of configured hierarchy levels (0 = degenerate).
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Missed-level count of the most recent `CacheMiss` serve; see the
+    /// field docs. The event engine reads this right after
+    /// [`Self::factor_row_load`] to know which level granted the fill.
+    #[inline]
+    pub fn last_fill_depth(&self) -> u8 {
+        self.last_fill_depth
+    }
+
+    /// Accumulated busy cycles of level `i` (stack order).
+    pub fn level_busy(&self, i: usize) -> f64 {
+        self.levels[i].busy
+    }
+
+    /// Per-level event-engine timing constants, **innermost-first**
+    /// (the order the replay walks a miss): `(serve_occ, fill_occ,
+    /// latency, double_buffer)` per level. Empty for the degenerate
+    /// configuration.
+    pub fn level_event_constants(&self) -> Vec<(f64, f64, f64, bool)> {
+        self.levels
+            .iter()
+            .rev()
+            .map(|l| (l.serve_occ, l.fill_occ, l.latency, l.double_buffer))
+            .collect()
+    }
+
+    /// DRAM occupancy of an all-levels miss (one outermost-line fetch);
+    /// `0.0` for the degenerate configuration.
+    pub fn hier_miss_dram_cycles(&self) -> f64 {
+        self.hier_miss_dram_cycles
+    }
+
+    /// Per-level accounting snapshot, in stack order (outermost first).
+    pub fn level_reports(&self) -> Vec<LevelReport> {
+        self.levels.iter().map(LevelState::report).collect()
     }
 
     /// Sequential stream of `bytes` (tensor in / output rows out):
@@ -204,7 +428,12 @@ impl MemoryController {
     /// engine's bottleneck scan folds this in).
     pub fn max_busy(&self) -> f64 {
         let cache_max = self.cache_busy.iter().cloned().fold(0.0f64, f64::max);
-        cache_max.max(self.dram.busy_cycles).max(self.stream_busy).max(self.element_busy)
+        let level_max = self.levels.iter().map(|l| l.busy).fold(0.0f64, f64::max);
+        cache_max
+            .max(level_max)
+            .max(self.dram.busy_cycles)
+            .max(self.stream_busy)
+            .max(self.element_busy)
     }
 }
 
@@ -310,6 +539,68 @@ mod tests {
         // synchronous E-SRAM reads all 4 ways speculatively:
         // 4×16 data + 4×2 tag = 72 words per probe (Table I assoc 4)
         assert_eq!(w_hit, 4 * 16 + 8);
+    }
+
+    #[test]
+    fn two_level_stack_serves_pe_cache_misses() {
+        let mut c = cfg();
+        // outer 64 KiB of 256 B lines (4 rows/line), inner 4 KiB of the
+        // PE's own 64 B line
+        c.levels =
+            crate::mem::hierarchy::parse_levels("outer:64KiB:line256,inner:4KiB").unwrap();
+        c.validate().unwrap();
+        let mut mc = MemoryController::new(&c, &esram(), &[1000]);
+        assert_eq!(mc.n_levels(), 2);
+        assert_eq!(mc.hier_miss_dram_cycles(), mc.dram_cfg.random_access_cycles(256));
+
+        // row 0: PE miss, inner miss, outer miss ⇒ DRAM (depth 2)
+        assert!(matches!(mc.factor_row_load(0, 0), Served::CacheMiss { .. }));
+        assert_eq!(mc.last_fill_depth(), 2);
+        assert_eq!(mc.dram.random_accesses, 1);
+        assert_eq!(mc.dram.bytes_random, 256, "all-miss fetches the outermost line");
+
+        // rows 1..3 share row 0's outer line: PE miss, inner miss,
+        // outer HIT (depth 1) — no new DRAM traffic
+        for r in 1..4u32 {
+            assert!(matches!(mc.factor_row_load(0, r), Served::CacheMiss { .. }));
+            assert_eq!(mc.last_fill_depth(), 1);
+        }
+        assert_eq!(mc.dram.random_accesses, 1);
+
+        let reports = mc.level_reports();
+        assert_eq!(reports.len(), 2);
+        let (outer, inner) = (&reports[0], &reports[1]);
+        assert_eq!(inner.accesses, 4, "innermost sees every PE-cache fill");
+        assert_eq!(inner.misses, 4);
+        assert_eq!(outer.accesses, inner.misses, "telescoping invariant");
+        assert_eq!(outer.hits, 3);
+        assert_eq!(outer.misses, 1);
+        // traffic = accesses × inner request line
+        assert_eq!(inner.traffic_bytes, 4 * 64);
+        assert_eq!(outer.traffic_bytes, 4 * 64);
+        assert!(inner.words > 0 && outer.words > 0);
+        assert!(inner.busy_cycles > 0.0 && outer.busy_cycles > 0.0);
+        assert!((outer.hit_rate() - 0.75).abs() < 1e-12);
+
+        // a PE-cache hit never reaches the stack
+        mc.factor_row_load(0, 0);
+        assert_eq!(mc.level_reports()[1].accesses, 4);
+
+        // event-constant export is innermost-first
+        let consts = mc.level_event_constants();
+        assert_eq!(consts.len(), 2);
+        assert!(consts[0].1 < consts[1].1, "inner fill (64 B) cheaper than outer (256 B)");
+    }
+
+    #[test]
+    fn degenerate_stack_keeps_the_direct_dram_path() {
+        let mut mc = MemoryController::new(&cfg(), &esram(), &[1000]);
+        assert_eq!(mc.n_levels(), 0);
+        assert!(mc.level_reports().is_empty());
+        assert_eq!(mc.hier_miss_dram_cycles(), 0.0);
+        assert!(mc.level_event_constants().is_empty());
+        mc.factor_row_load(0, 7);
+        assert_eq!(mc.dram.bytes_random, 64, "degenerate miss fetches the PE line");
     }
 
     #[test]

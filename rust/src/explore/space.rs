@@ -22,6 +22,7 @@
 use crate::accel::config::AcceleratorConfig;
 use crate::area::model::{AreaModel, RETICLE_MM2};
 use crate::kernel::KernelKind;
+use crate::mem::hierarchy::MemLevelSpec;
 use crate::mem::tech::MemTechnology;
 
 /// An explorable [`AcceleratorConfig`] knob.
@@ -37,12 +38,27 @@ pub enum Knob {
     BankFactor,
     /// `rank` — decomposition rank R.
     Rank,
+    /// `sram_kib` — capacity (KiB) of a shared `sram` memory-hierarchy
+    /// level between the PE caches and DRAM
+    /// ([`AcceleratorConfig::levels`]); `0` removes the level, making
+    /// the degenerate single-level model itself an axis value.
+    SramKib,
+    /// `local_kib` — capacity (KiB) of an inner `local` hierarchy level
+    /// (nearest the PE caches); `0` removes it.
+    LocalKib,
 }
 
 impl Knob {
     /// Every knob, in CLI listing order.
-    pub const ALL: [Knob; 5] =
-        [Knob::NPes, Knob::CacheLines, Knob::CacheAssoc, Knob::BankFactor, Knob::Rank];
+    pub const ALL: [Knob; 7] = [
+        Knob::NPes,
+        Knob::CacheLines,
+        Knob::CacheAssoc,
+        Knob::BankFactor,
+        Knob::Rank,
+        Knob::SramKib,
+        Knob::LocalKib,
+    ];
 
     /// The stable grammar name (`--axes <name>=v1,v2,...`).
     pub fn name(self) -> &'static str {
@@ -52,6 +68,8 @@ impl Knob {
             Knob::CacheAssoc => "cache_assoc",
             Knob::BankFactor => "bank_factor",
             Knob::Rank => "rank",
+            Knob::SramKib => "sram_kib",
+            Knob::LocalKib => "local_kib",
         }
     }
 
@@ -75,10 +93,16 @@ impl Knob {
             Knob::CacheAssoc => cfg.cache_assoc = value,
             Knob::BankFactor => cfg.esram_bank_factor = value,
             Knob::Rank => cfg.rank = value,
+            // the hierarchy axes size (or remove, at 0) one named level
+            // each; `sram` stays outermost, `local` innermost, so any
+            // value combination yields a well-ordered stack
+            Knob::SramKib => set_level(cfg, "sram", value, true),
+            Knob::LocalKib => set_level(cfg, "local", value, false),
         }
     }
 
-    /// The paper-default value of this knob (Table I).
+    /// The paper-default value of this knob (Table I; the hierarchy
+    /// axes default to 0 — the paper prices no intermediate level).
     pub fn paper_default(self) -> usize {
         let d = AcceleratorConfig::paper_default();
         match self {
@@ -87,6 +111,27 @@ impl Knob {
             Knob::CacheAssoc => d.cache_assoc,
             Knob::BankFactor => d.esram_bank_factor,
             Knob::Rank => d.rank,
+            Knob::SramKib | Knob::LocalKib => 0,
+        }
+    }
+}
+
+/// Size the named memory-hierarchy level to `kib` KiB, creating it if
+/// absent (`outer` prepends — DRAM side; otherwise appends — PE side);
+/// `kib == 0` removes the level. Geometry validity (power-of-two line
+/// count) is still [`AcceleratorConfig::validate`]'s call during
+/// enumeration, like every other knob.
+fn set_level(cfg: &mut AcceleratorConfig, name: &str, kib: usize, outer: bool) {
+    if kib == 0 {
+        cfg.levels.retain(|l| l.name != name);
+    } else if let Some(l) = cfg.levels.iter_mut().find(|l| l.name == name) {
+        l.capacity_bytes = kib as u64 * 1024;
+    } else {
+        let spec = MemLevelSpec::new(name, kib as u64 * 1024);
+        if outer {
+            cfg.levels.insert(0, spec);
+        } else {
+            cfg.levels.push(spec);
         }
     }
 }
@@ -357,7 +402,9 @@ mod tests {
             assert_eq!(Knob::parse(k.name()), Ok(k));
         }
         let err = Knob::parse("warp").unwrap_err();
-        for name in ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank"] {
+        for name in
+            ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank", "sram_kib", "local_kib"]
+        {
             assert!(err.contains(name), "{err}");
         }
     }
@@ -387,6 +434,46 @@ mod tests {
         assert_eq!(Knob::NPes.paper_default(), 4);
         assert_eq!(Knob::CacheLines.paper_default(), 4096);
         assert_eq!(Knob::Rank.paper_default(), 16);
+        assert_eq!(Knob::SramKib.paper_default(), 0);
+        assert_eq!(Knob::LocalKib.paper_default(), 0);
+    }
+
+    #[test]
+    fn hierarchy_knobs_edit_the_level_stack() {
+        let mut cfg = AcceleratorConfig::paper_default();
+        // creation order must not matter: sram is always outermost
+        Knob::LocalKib.apply(&mut cfg, 4);
+        Knob::SramKib.apply(&mut cfg, 256);
+        assert_eq!(cfg.levels.len(), 2);
+        assert_eq!(cfg.levels[0].name, "sram");
+        assert_eq!(cfg.levels[0].capacity_bytes, 256 * 1024);
+        assert_eq!(cfg.levels[1].name, "local");
+        cfg.validate().unwrap();
+        // re-applying resizes in place, never duplicates
+        Knob::SramKib.apply(&mut cfg, 512);
+        assert_eq!(cfg.levels.len(), 2);
+        assert_eq!(cfg.levels[0].capacity_bytes, 512 * 1024);
+        // 0 removes the level; all-zero returns to the degenerate stack
+        Knob::SramKib.apply(&mut cfg, 0);
+        Knob::LocalKib.apply(&mut cfg, 0);
+        assert!(cfg.levels.is_empty());
+        assert!(cfg == AcceleratorConfig::paper_default());
+    }
+
+    #[test]
+    fn hierarchy_axes_enumerate_and_price_area() {
+        let mut space = DesignSpace::paper_grid(vec![tech("e-sram")], vec![KernelKind::Spmttkrp]);
+        space.axes = vec![Axis::new(Knob::SramKib, vec![0, 256, 512])];
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.candidates.len(), 3);
+        assert_eq!((e.n_invalid, e.n_filtered), (0, 0));
+        // capacity must cost area monotonically (the AreaModel pricing)
+        assert!(e.candidates[0].area_mm2 < e.candidates[1].area_mm2);
+        assert!(e.candidates[1].area_mm2 < e.candidates[2].area_mm2);
+        // the 0-valued point is the degenerate paper default
+        assert!(e.candidates[0].is_paper_default());
+        assert_eq!(e.candidates[0].label(), "sram_kib=0");
+        assert_eq!(e.candidates[1].cfg.levels.len(), 1);
     }
 
     #[test]

@@ -192,6 +192,7 @@ pub mod prelude {
         ExploreResult, ExploreSpec, Knob, ObjectiveKind, Objectives,
     };
     pub use crate::kernel::{KernelKind, KernelTotals, SparseKernel};
+    pub use crate::mem::hierarchy::{format_levels, parse_levels, LevelReport, MemLevelSpec};
     pub use crate::mem::registry::{self, tech, TechRegistry, TechSpec};
     pub use crate::mem::tech::MemTechnology;
     pub use crate::mttkrp::reference::FactorMatrix;

@@ -6,8 +6,8 @@
 //!     platform + Table I/III/IV echo + the technology registry listing
 //! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
 //!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
-//!     [--kernel spmttkrp|spttm|spmm] [--threads T] [--chunk-nnz N]
-//!     [--sample-rate R] [--sample-seed N] [--config FILE]
+//!     [--kernel spmttkrp|spttm|spmm] [--levels SPEC] [--threads T]
+//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
 //!     single technology, per technology for both/all)
@@ -26,7 +26,7 @@
 //!     frontier, any rank flip reported as a delta line
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
-//!     + the explore frontier table
+//!     + the explore frontier table + the hierarchy table
 //! photon-mttkrp cpals [--rank R] [--iters N] [--nnz N] [--dim D] [--seed N] [--artifacts]
 //! photon-mttkrp mttkrp <file.tns> [--mode M] [--rank R] [--artifacts]
 //! ```
@@ -40,7 +40,13 @@
 //! `--kernel` selects the sparse workload streamed through the engines:
 //! `spmttkrp` (the paper's CP-ALS kernel, the default), `spttm` (Tucker
 //! TTM-chain) or `spmm` (sparse × dense matrix — see EXPERIMENTS.md
-//! §Kernels). `--threads` and `--chunk-nnz` are host-execution knobs
+//! §Kernels). `--levels` configures the multi-level on-chip memory
+//! hierarchy between the PE caches and DRAM, outermost first — e.g.
+//! `--levels sram:256KiB:8banks,local:4KiB:db` (capacity, optional
+//! `Nbanks`/`lineN`/`db` double-buffer tokens; EXPERIMENTS.md
+//! §Hierarchy); omitted, the model is the paper's degenerate
+//! single-level stack, bit-identical to the pre-hierarchy output.
+//! `--threads` and `--chunk-nnz` are host-execution knobs
 //! (per-PE thread budget, access-stream chunk granularity): they change
 //! how fast the simulator runs, never what it reports. `--sample-rate`
 //! (with `--sample-seed`) is the one estimate-changing speed knob: below
@@ -100,6 +106,13 @@ fn cli() -> Command {
                     "sparse kernel: spmttkrp | spttm | spmm",
                     Some("spmttkrp"),
                 )
+                .opt(
+                    "levels",
+                    "SPEC",
+                    "memory-hierarchy stack, outermost first: \
+                     name:capacity[:Nbanks][:lineN][:db],... (default: none)",
+                    None,
+                )
                 .opt("threads", "T", "per-PE simulator threads (0 = all cores)", Some("0"))
                 .opt(
                     "chunk-nnz",
@@ -133,6 +146,13 @@ fn cli() -> Command {
                     "sparse kernel: spmttkrp | spttm | spmm",
                     Some("spmttkrp"),
                 )
+                .opt(
+                    "levels",
+                    "SPEC",
+                    "memory-hierarchy stack, outermost first: \
+                     name:capacity[:Nbanks][:lineN][:db],... (default: none)",
+                    None,
+                )
                 .opt("seed", "N", "generator seed", Some("42"))
                 .opt("threads", "T", "OS threads (0 = all cores)", Some("0"))
                 .opt(
@@ -165,7 +185,14 @@ fn cli() -> Command {
                     "axes",
                     "KNOB=V1,V2,...",
                     "design-space axis (n_pes | cache_lines | cache_assoc | bank_factor | \
-                     rank); default: n_pes=2,4,8 cache_lines=4096,8192",
+                     rank | sram_kib | local_kib); default: n_pes=2,4,8 cache_lines=4096,8192",
+                )
+                .opt(
+                    "levels",
+                    "SPEC",
+                    "base memory-hierarchy stack every candidate inherits, outermost first: \
+                     name:capacity[:Nbanks][:lineN][:db],... (default: none)",
+                    None,
                 )
                 .opt("budget-mm2", "MM2", "drop candidates whose design area exceeds this", None)
                 .flag(
@@ -233,6 +260,19 @@ fn load_config(p: &Parsed) -> Result<AcceleratorConfig, String> {
         cfg.apply_config(&file)?;
     }
     Ok(cfg)
+}
+
+/// Apply `--levels` (the memory-hierarchy stack grammar) on top of the
+/// loaded configuration. Absent flag ⇒ whatever the config file set —
+/// by default the degenerate (empty) stack, bit-identical to the
+/// pre-hierarchy model.
+fn apply_levels(p: &Parsed, cfg: &mut AcceleratorConfig) -> Result<(), String> {
+    if let Some(spec) = p.get("levels") {
+        cfg.levels = photon_mttkrp::mem::hierarchy::parse_levels(spec)
+            .map_err(|e| format!("--levels: {e}"))?;
+        cfg.validate().map_err(|e| format!("--levels: {e}"))?;
+    }
+    Ok(())
 }
 
 /// Resolve the repeatable `--tech` selection shared by `sweep` and
@@ -319,7 +359,8 @@ fn run() -> Result<(), String> {
             }
         }
         "simulate" => {
-            let cfg_base = load_config(&p)?;
+            let mut cfg_base = load_config(&p)?;
+            apply_levels(&p, &mut cfg_base)?;
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let name = p.get("tensor").unwrap();
@@ -458,6 +499,16 @@ fn run() -> Result<(), String> {
                             r.hit_rate() * 100.0,
                             r.bottleneck().name()
                         );
+                        for l in r.levels() {
+                            println!(
+                                "    level {:<10} hit {:>5.1}%  traffic {} B  busy {:.3e} cyc{}",
+                                l.name,
+                                l.hit_rate() * 100.0,
+                                l.traffic_bytes,
+                                l.busy_cycles,
+                                if l.double_buffer { "  (db)" } else { "" },
+                            );
+                        }
                         if engine == EngineKind::Event {
                             // the event replay's headline deliverable: how
                             // far off the roofline abstraction is here
@@ -487,7 +538,8 @@ fn run() -> Result<(), String> {
             }
         }
         "sweep" => {
-            let cfg_base = load_config(&p)?;
+            let mut cfg_base = load_config(&p)?;
+            apply_levels(&p, &mut cfg_base)?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let threads = p.get_usize("threads").map_err(|e| e.to_string())?;
             let scales = parse_f64_list(&p, "scale", &[0.001])?;
@@ -547,7 +599,8 @@ fn run() -> Result<(), String> {
             );
         }
         "explore" => {
-            let cfg_base = load_config(&p)?;
+            let mut cfg_base = load_config(&p)?;
+            apply_levels(&p, &mut cfg_base)?;
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let name = p.get("tensor").unwrap();
@@ -648,6 +701,8 @@ fn run() -> Result<(), String> {
             println!("{}", render(&paper::table_kernels(scale, seed)));
             eprintln!("searching the default design-space grid for the EDP frontier ...");
             println!("{}", render(&paper::table_frontier(scale, seed)));
+            eprintln!("replaying the two-level hierarchy stack (db on vs off) ...");
+            println!("{}", render(&paper::table_hierarchy(scale, seed)));
         }
         "cpals" => {
             let rank = p.get_usize("rank").map_err(|e| e.to_string())?;

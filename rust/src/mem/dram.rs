@@ -72,7 +72,12 @@ impl DramConfig {
     /// a 64 B burst is the minimum transfer; larger requests take multiple
     /// bursts pipelined at the row-hit rate).
     pub fn random_access_cycles(&self, bytes: u64) -> f64 {
-        let bursts = (bytes as f64 / self.burst_bytes as f64).ceil().max(1.0);
+        if bytes == 0 {
+            // an empty request moves no bursts and must cost no time
+            // (the pre-fix model charged a full first-burst latency here)
+            return 0.0;
+        }
+        let bursts = (bytes as f64 / self.burst_bytes as f64).ceil();
         let first_ns = self.random_row_hit_rate * self.row_hit_ns
             + (1.0 - self.random_row_hit_rate) * self.row_miss_ns;
         // follow-on bursts in the same request stay in the open row
@@ -202,5 +207,40 @@ mod tests {
     fn energy_scales_with_traffic() {
         let d = DramConfig::default();
         assert!(d.transfer_pj(2000, 0) == 2.0 * d.transfer_pj(1000, 0));
+    }
+
+    #[test]
+    fn zero_byte_access_is_free() {
+        // the empty-pop analog: charging a request that carries no data
+        // used to cost a full first-burst latency
+        let d = DramConfig::default();
+        assert_eq!(d.random_access_cycles(0), 0.0);
+        assert_eq!(d.stream_cycles(0), 0.0);
+        let mut ch = DramChannelState::default();
+        assert_eq!(ch.random_access(&d, 0), 0.0);
+        assert_eq!(ch.stream(&d, 0), 0.0);
+        // counters still record the (degenerate) events, time does not
+        assert_eq!(ch.random_accesses, 1);
+        assert_eq!(ch.total_bytes(), 0);
+        assert_eq!(ch.busy_cycles, 0.0);
+    }
+
+    #[test]
+    fn burst_boundary_arrivals_round_exactly() {
+        let d = DramConfig::default();
+        let b = d.burst_bytes as u64;
+        // a request ending exactly on a burst boundary must not charge
+        // the next burst ...
+        assert_eq!(d.random_access_cycles(b).to_bits(), d.random_access_cycles(1).to_bits());
+        assert_eq!(
+            d.random_access_cycles(2 * b).to_bits(),
+            d.random_access_cycles(b + 1).to_bits()
+        );
+        // ... and one byte past it must
+        assert!(d.random_access_cycles(b + 1) > d.random_access_cycles(b));
+        // each follow-on burst is exactly one pipelined row hit
+        let inc = d.random_access_cycles(2 * b) - d.random_access_cycles(b);
+        let hit = d.row_hit_ns * 1e-9 * FABRIC_HZ / d.random_overlap;
+        assert!((inc - hit).abs() < 1e-12, "{inc} vs {hit}");
     }
 }

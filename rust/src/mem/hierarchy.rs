@@ -1,0 +1,391 @@
+//! Multi-level on-chip memory hierarchy between the PE caches and DRAM.
+//!
+//! The paper prices a single cache level in front of one FIFO DRAM
+//! channel. A placeable design streams through a deeper stack — DRAM →
+//! shared SRAM → per-PE local memory — with per-level double buffering
+//! (the KULeuven-MICAS `fpga_asb.py` shape). This module holds the
+//! *configuration* and *reporting* types for that stack:
+//!
+//! - [`MemLevelSpec`] — one level: capacity, banks, line size and the
+//!   `double_buffer` flag that lets the event engine overlap a level's
+//!   fill latency with its drain.
+//! - [`parse_levels`] / [`format_levels`] — the `--levels` CLI grammar
+//!   (`name:capacity[:Nbanks][:lineN][:db]`, outermost/DRAM-side first).
+//! - [`LevelReport`] — per-level hit/traffic/energy accounting carried
+//!   by `PeReport` and rolled up through `ModeReport` / `SimReport`.
+//!
+//! The functional and timing models live in `controller::mc` (which
+//! probes the stack innermost-first on a PE-cache miss) and `sim::event`
+//! (which arbitrates each level as a banked-throughput FIFO). An empty
+//! level stack is the *degenerate* configuration: the controller and
+//! both engines execute exactly the pre-hierarchy code paths, so the
+//! paper-default output is bit-identical to the single-level model
+//! (pinned by `tests/golden.rs`).
+
+use std::fmt;
+
+/// One level of the on-chip memory hierarchy, DRAM-side first in
+/// `AcceleratorConfig::levels` (index 0 is nearest DRAM, the last entry
+/// is nearest the PE caches).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemLevelSpec {
+    /// Human-readable level name (unique within a stack).
+    pub name: String,
+    /// Data capacity in bytes; must be `line × 2^k` for the functional
+    /// set-associative model.
+    pub capacity_bytes: u64,
+    /// Bank count: widens the level's serve/fill throughput in the
+    /// timing model (`ArrayTiming`), exactly like the PE-cache banks.
+    pub banks: usize,
+    /// Level line (transfer block) in bytes. `None` inherits the PE
+    /// cache line. When set it must be a power-of-two multiple of the
+    /// PE cache line.
+    pub line_bytes: Option<usize>,
+    /// Double buffering: the event engine overlaps this level's fill
+    /// latency with its drain, so a fill never sits on the request's
+    /// critical path (throughput is still charged).
+    pub double_buffer: bool,
+}
+
+impl MemLevelSpec {
+    /// A single-bank, inherit-line, no-double-buffer level.
+    pub fn new(name: &str, capacity_bytes: u64) -> Self {
+        MemLevelSpec {
+            name: name.to_string(),
+            capacity_bytes,
+            banks: 1,
+            line_bytes: None,
+            double_buffer: false,
+        }
+    }
+
+    /// The level line in bytes, with `default_line` (the PE cache line)
+    /// substituted when the spec inherits it.
+    pub fn resolved_line_bytes(&self, default_line: usize) -> usize {
+        self.line_bytes.unwrap_or(default_line)
+    }
+}
+
+impl fmt::Display for MemLevelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.name, format_size(self.capacity_bytes))?;
+        if self.banks != 1 {
+            write!(f, ":{}banks", self.banks)?;
+        }
+        if let Some(line) = self.line_bytes {
+            write!(f, ":line{line}")?;
+        }
+        if self.double_buffer {
+            write!(f, ":db")?;
+        }
+        Ok(())
+    }
+}
+
+/// Render a stack in the [`parse_levels`] grammar (round-trips exactly).
+pub fn format_levels(levels: &[MemLevelSpec]) -> String {
+    levels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn format_size(bytes: u64) -> String {
+    const MIB: u64 = 1024 * 1024;
+    const KIB: u64 = 1024;
+    if bytes >= MIB && bytes % MIB == 0 {
+        format!("{}MiB", bytes / MIB)
+    } else if bytes >= KIB && bytes % KIB == 0 {
+        format!("{}KiB", bytes / KIB)
+    } else {
+        format!("{bytes}")
+    }
+}
+
+fn parse_size(s: &str) -> Result<u64, String> {
+    let lower = s.to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")) {
+        (d, 1024u64 * 1024 * 1024)
+    } else if let Some(d) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")) {
+        (d, 1024 * 1024)
+    } else if let Some(d) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")) {
+        (d, 1024)
+    } else if let Some(d) = lower.strip_suffix('g') {
+        (d, 1024 * 1024 * 1024)
+    } else if let Some(d) = lower.strip_suffix('m') {
+        (d, 1024 * 1024)
+    } else if let Some(d) = lower.strip_suffix('k') {
+        (d, 1024)
+    } else if let Some(d) = lower.strip_suffix('b') {
+        (d, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let n: u64 = digits
+        .parse()
+        .map_err(|_| format!("cannot parse size `{s}` (expected e.g. 4096, 256KiB, 4MiB)"))?;
+    n.checked_mul(mult).ok_or_else(|| format!("size `{s}` overflows"))
+}
+
+/// Parse the `--levels` grammar: comma-separated level specs, each
+/// `name:capacity[:Nbanks][:lineN][:db]` with the post-capacity tokens
+/// in any order. Capacities accept `KiB`/`MiB`/`GiB` suffixes. Levels
+/// are listed DRAM-side (outermost) first, matching
+/// `AcceleratorConfig::levels`. An empty string yields the degenerate
+/// (empty) stack.
+///
+/// ```
+/// use photon_mttkrp::mem::hierarchy::parse_levels;
+/// let stack = parse_levels("sram:256KiB:8banks,local:4KiB:db").unwrap();
+/// assert_eq!(stack.len(), 2);
+/// assert_eq!(stack[0].capacity_bytes, 256 * 1024);
+/// assert_eq!(stack[0].banks, 8);
+/// assert!(stack[1].double_buffer);
+/// ```
+pub fn parse_levels(s: &str) -> Result<Vec<MemLevelSpec>, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut levels = Vec::new();
+    for spec in s.split(',') {
+        let spec = spec.trim();
+        let mut parts = spec.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(format!("level `{spec}`: empty name"));
+        }
+        if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+            return Err(format!(
+                "level `{spec}`: name `{name}` must be alphanumeric/-/_"
+            ));
+        }
+        let cap = parts
+            .next()
+            .ok_or_else(|| format!("level `{spec}`: missing capacity (name:capacity[...])"))?;
+        let capacity_bytes = parse_size(cap.trim()).map_err(|e| format!("level `{spec}`: {e}"))?;
+        if capacity_bytes == 0 {
+            return Err(format!("level `{spec}`: capacity must be positive"));
+        }
+        let mut level = MemLevelSpec::new(name, capacity_bytes);
+        for tok in parts {
+            let tok = tok.trim();
+            if tok == "db" {
+                level.double_buffer = true;
+            } else if let Some(n) = tok.strip_suffix("banks").or(tok.strip_suffix("bank")) {
+                level.banks = n
+                    .parse()
+                    .map_err(|_| format!("level `{spec}`: bad bank count `{tok}`"))?;
+                if level.banks == 0 {
+                    return Err(format!("level `{spec}`: bank count must be positive"));
+                }
+            } else if let Some(n) = tok.strip_prefix("line") {
+                let line = parse_size(n).map_err(|e| format!("level `{spec}`: {e}"))?;
+                if line == 0 {
+                    return Err(format!("level `{spec}`: line must be positive"));
+                }
+                level.line_bytes = Some(line as usize);
+            } else {
+                return Err(format!(
+                    "level `{spec}`: unknown token `{tok}` (expected Nbanks, lineN or db)"
+                ));
+            }
+        }
+        if levels.iter().any(|l: &MemLevelSpec| l.name == level.name) {
+            return Err(format!("duplicate level name `{}`", level.name));
+        }
+        levels.push(level);
+    }
+    Ok(levels)
+}
+
+/// Per-level hit/traffic/energy accounting for one simulated PE (or an
+/// aggregate of PEs/modes — see the merge helpers). Produced by
+/// `MemoryController::level_reports` and carried on `PeReport::levels`
+/// in the same stack order as `AcceleratorConfig::levels` (outermost
+/// first).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LevelReport {
+    /// Level name from the spec.
+    pub name: String,
+    /// Configured capacity in bytes (spec echo).
+    pub capacity_bytes: u64,
+    /// Resolved level line in bytes.
+    pub line_bytes: u64,
+    /// Whether the level double-buffers its fills (spec echo).
+    pub double_buffer: bool,
+    /// Lookups that reached this level (== misses of the next-inner
+    /// level; the innermost level sees every PE-cache line fill).
+    pub accesses: u64,
+    /// Lookups served from this level's array.
+    pub hits: u64,
+    /// Lookups forwarded outward (to the next level or DRAM).
+    pub misses: u64,
+    /// Bytes delivered inward: `accesses × inner request line`.
+    pub traffic_bytes: u64,
+    /// Active 32-bit words moved through this level's array (reads of
+    /// the inner request on every access, plus line fills on misses).
+    /// Feeds the Eq. 3 switching-energy term exactly like cache words.
+    pub words: u64,
+    /// Array occupancy charged to this level, in fabric cycles.
+    pub busy_cycles: f64,
+}
+
+impl LevelReport {
+    /// Fraction of accesses served from this level.
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+
+    /// Fold another report for the *same* level from a concurrently
+    /// executing unit (PEs within a mode): counters add, busy takes the
+    /// max (PEs run in parallel, like `ModeReport::runtime_cycles`).
+    pub fn absorb_parallel(&mut self, other: &LevelReport) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.traffic_bytes += other.traffic_bytes;
+        self.words += other.words;
+        self.busy_cycles = self.busy_cycles.max(other.busy_cycles);
+    }
+
+    /// Fold another report for the *same* level from a sequentially
+    /// executed phase (modes within a run): counters and busy both add.
+    pub fn absorb_serial(&mut self, other: &LevelReport) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.traffic_bytes += other.traffic_bytes;
+        self.words += other.words;
+        self.busy_cycles += other.busy_cycles;
+    }
+}
+
+/// Merge a unit's level stack into an accumulator (same stack order).
+/// `parallel` selects [`LevelReport::absorb_parallel`] (PEs) vs
+/// [`LevelReport::absorb_serial`] (modes). An empty accumulator clones
+/// the incoming stack.
+pub fn merge_level_reports(acc: &mut Vec<LevelReport>, other: &[LevelReport], parallel: bool) {
+    if acc.is_empty() {
+        acc.extend(other.iter().cloned());
+        return;
+    }
+    debug_assert_eq!(acc.len(), other.len(), "level stacks must match to merge");
+    for (a, o) in acc.iter_mut().zip(other) {
+        if parallel {
+            a.absorb_parallel(o);
+        } else {
+            a.absorb_serial(o);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let stack = parse_levels("sram:256KiB:8banks,local:4KiB:db").unwrap();
+        assert_eq!(stack.len(), 2);
+        assert_eq!(stack[0].name, "sram");
+        assert_eq!(stack[0].capacity_bytes, 256 * 1024);
+        assert_eq!(stack[0].banks, 8);
+        assert!(!stack[0].double_buffer);
+        assert_eq!(stack[1].name, "local");
+        assert_eq!(stack[1].capacity_bytes, 4 * 1024);
+        assert_eq!(stack[1].banks, 1);
+        assert!(stack[1].double_buffer);
+        assert_eq!(stack[1].line_bytes, None);
+    }
+
+    #[test]
+    fn tokens_after_capacity_commute() {
+        let a = parse_levels("l0:64KiB:db:4banks:line256").unwrap();
+        let b = parse_levels("l0:64KiB:line256:4banks:db").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].line_bytes, Some(256));
+        assert_eq!(a[0].banks, 4);
+        assert!(a[0].double_buffer);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("4096").unwrap(), 4096);
+        assert_eq!(parse_size("64KiB").unwrap(), 64 * 1024);
+        assert_eq!(parse_size("64kb").unwrap(), 64 * 1024);
+        assert_eq!(parse_size("2MiB").unwrap(), 2 * 1024 * 1024);
+        assert_eq!(parse_size("1g").unwrap(), 1024 * 1024 * 1024);
+        assert_eq!(parse_size("128b").unwrap(), 128);
+        assert!(parse_size("four").is_err());
+    }
+
+    #[test]
+    fn format_round_trips() {
+        let src = "outer:2MiB:8banks:line512,mid:64KiB:line128:db,inner:4KiB";
+        let stack = parse_levels(src).unwrap();
+        let rendered = format_levels(&stack);
+        assert_eq!(parse_levels(&rendered).unwrap(), stack);
+        // and the canonical rendering is stable under re-rendering
+        assert_eq!(format_levels(&parse_levels(&rendered).unwrap()), rendered);
+    }
+
+    #[test]
+    fn empty_is_degenerate() {
+        assert!(parse_levels("").unwrap().is_empty());
+        assert!(parse_levels("   ").unwrap().is_empty());
+        assert_eq!(format_levels(&[]), "");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(parse_levels("noname").is_err(), "missing capacity");
+        assert!(parse_levels(":4KiB").is_err(), "empty name");
+        assert!(parse_levels("a b:4KiB").is_err(), "bad name chars");
+        assert!(parse_levels("l0:0").is_err(), "zero capacity");
+        assert!(parse_levels("l0:4KiB:0banks").is_err(), "zero banks");
+        assert!(parse_levels("l0:4KiB:line0").is_err(), "zero line");
+        assert!(parse_levels("l0:4KiB:bogus").is_err(), "unknown token");
+        assert!(parse_levels("l0:4KiB,l0:8KiB").is_err(), "duplicate name");
+        assert!(parse_levels("l0:4QiB").is_err(), "bad size suffix");
+    }
+
+    #[test]
+    fn level_report_merges() {
+        let a = LevelReport {
+            name: "sram".into(),
+            capacity_bytes: 1024,
+            line_bytes: 64,
+            double_buffer: false,
+            accesses: 10,
+            hits: 6,
+            misses: 4,
+            traffic_bytes: 640,
+            words: 200,
+            busy_cycles: 5.0,
+        };
+        let mut p = a.clone();
+        p.absorb_parallel(&a);
+        assert_eq!(p.accesses, 20);
+        assert_eq!(p.hits, 12);
+        assert_eq!(p.busy_cycles, 5.0, "parallel busy is a max");
+        let mut s = a.clone();
+        s.absorb_serial(&a);
+        assert_eq!(s.accesses, 20);
+        assert_eq!(s.busy_cycles, 10.0, "serial busy accumulates");
+        assert!((a.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(LevelReport::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_helper_clones_into_empty_and_folds() {
+        let stack = vec![LevelReport { accesses: 3, busy_cycles: 2.0, ..Default::default() }];
+        let mut acc = Vec::new();
+        merge_level_reports(&mut acc, &stack, true);
+        assert_eq!(acc, stack);
+        merge_level_reports(&mut acc, &stack, false);
+        assert_eq!(acc[0].accesses, 6);
+        assert_eq!(acc[0].busy_cycles, 4.0);
+    }
+}

@@ -15,10 +15,14 @@
 //!   still port-limited.
 //! * [`dram`] — the DDR4 external-memory channel model (§III-A "inputs
 //!   initially reside in the FPGA external memory").
+//! * [`hierarchy`] — the configurable multi-level on-chip stack between
+//!   the PE caches and DRAM (`--levels` grammar, per-level
+//!   [`hierarchy::LevelReport`] accounting, double-buffer flag).
 //! * [`sync`] — the synchronization interface between the 500 MHz
 //!   electrical mesh and the 20 GHz optical memory clock domain (Fig. 2).
 
 pub mod dram;
+pub mod hierarchy;
 pub mod esram;
 pub mod osram;
 pub mod posram;

@@ -14,8 +14,10 @@ use crate::coordinator::driver::{
     compare_paper_pair, compare_technologies_with_kernel, cross_validate, paper_pair,
     TechComparison,
 };
+use crate::coordinator::driver::simulate_all_modes_with_engine;
 use crate::explore::{frontier_table, run_explore, DesignSpace, ExploreSpec};
 use crate::kernel::{KernelKind, SparseKernel};
+use crate::mem::hierarchy::{format_levels, parse_levels};
 use crate::mem::registry::{self, TechRegistry};
 use crate::mem::tech::FABRIC_HZ;
 use crate::sim::EngineKind;
@@ -235,6 +237,74 @@ pub fn table_frontier(scale: f64, seed: u64) -> Table {
     frontier_table(&result, 0)
 }
 
+/// The memory-hierarchy table: run the NELL-2 fingerprint at `scale`
+/// through a two-level stack (shared SRAM + double-buffered per-PE
+/// local memory) on both engines and tabulate each level's hit rate,
+/// traffic and busy cycles — then quantify what double buffering buys
+/// by replaying the same stack with the `db` flag stripped and printing
+/// the event-engine stall delta (EXPERIMENTS.md §Hierarchy). The
+/// degenerate (no `--levels`) configuration has no rows here by
+/// construction: its hierarchy is empty.
+pub fn table_hierarchy(scale: f64, seed: u64) -> Table {
+    let mut cfg = AcceleratorConfig::paper_default().scaled(scale);
+    cfg.levels = parse_levels("sram:64KiB:4banks:line256,local:4KiB:db")
+        .expect("builtin hierarchy spec parses");
+    cfg.validate().expect("builtin hierarchy spec validates");
+    let tensor = preset(FrosttTensor::Nell2).scaled(scale).generate(seed);
+    let tech = registry::tech("o-sram");
+    let mut t = Table::new(
+        &format!(
+            "Hierarchy: two-level stack {} ({}, scale {scale:.1e}, o-sram)",
+            format_levels(&cfg.levels),
+            tensor.name
+        ),
+        &["engine", "level", "capacity", "hit rate", "accesses", "traffic B", "busy cycles"],
+    )
+    .align(0, Align::Left)
+    .align(1, Align::Left);
+    let mut event_db_stall = 0.0;
+    for engine in [EngineKind::Analytic, EngineKind::Event] {
+        let rep = simulate_all_modes_with_engine(&tensor, &cfg, &tech, engine);
+        if engine == EngineKind::Event {
+            event_db_stall = total_stall(&rep);
+        }
+        for l in rep.levels() {
+            t.row(vec![
+                engine.name().into(),
+                l.name.clone(),
+                format!("{} KiB", l.capacity_bytes / 1024),
+                format!("{:.1}%", l.hit_rate() * 100.0),
+                fmt_count(l.accesses),
+                fmt_count(l.traffic_bytes),
+                format!("{:.3e}", l.busy_cycles),
+            ]);
+        }
+    }
+    // Same stack, double buffering off: fills serialize with drains, so
+    // the event replay can only stall more.
+    let mut nodb = cfg.clone();
+    for l in &mut nodb.levels {
+        l.double_buffer = false;
+    }
+    let event_nodb_stall =
+        total_stall(&simulate_all_modes_with_engine(&tensor, &nodb, &tech, EngineKind::Event));
+    t.row(vec![
+        "event".into(),
+        "stall: db on / off".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{event_db_stall:.3e} / {event_nodb_stall:.3e}"),
+    ]);
+    t
+}
+
+/// Total event-replay stall cycles across every mode and PE of a run.
+fn total_stall(rep: &crate::sim::result::SimReport) -> f64 {
+    rep.modes.iter().flat_map(|m| m.pes.iter()).map(|p| p.stall_cycles).sum()
+}
+
 /// One evaluated tensor for the Fig. 7 / Fig. 8 suites.
 pub struct EvaluatedTensor {
     pub name: String,
@@ -390,6 +460,17 @@ mod tests {
             "{s}"
         );
         assert!(s.contains("spmttkrp"), "{s}");
+    }
+
+    #[test]
+    fn hierarchy_table_reports_both_engines_and_the_db_delta() {
+        let t = table_hierarchy(1.0 / 65536.0, 1);
+        // 2 levels × 2 engines + the double-buffer stall comparison row
+        assert_eq!(t.n_rows(), 5);
+        let s = t.render_ascii();
+        for needle in ["sram", "local", "analytic", "event", "stall: db on / off"] {
+            assert!(s.contains(needle), "missing `{needle}` in\n{s}");
+        }
     }
 
     #[test]

@@ -279,6 +279,7 @@ pub fn simulate_kernel_mode_with_view_budget(
                 cache_words: mc.cache_words,
                 psum_words,
                 dma_words: mc.dma_words,
+                levels: mc.level_reports(),
             }
         },
     );

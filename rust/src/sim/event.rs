@@ -28,6 +28,20 @@
 //!   analytic engine charges (bank-level parallelism stays folded into
 //!   the service time), so total channel occupancy is identical and only
 //!   queueing delay differs.
+//! * **Hierarchy levels** — when [`AcceleratorConfig::levels`] is
+//!   non-empty, every stack level is one banked-throughput FIFO: a
+//!   single busy-until clock whose per-request service times come from
+//!   the level's own [`ArrayTiming`] (bank count folded into the rate,
+//!   exactly like the DRAM channel). A PE-cache miss served at depth `d`
+//!   queues on level `d`'s clock; the fetched line then back-fills the
+//!   missed inner levels, occupying each one's clock — but extending the
+//!   request's completion time only through levels *without*
+//!   `double_buffer`. A double-buffered level overlaps its fill with the
+//!   drain of the line it is already serving, so flipping `db` on can
+//!   only shorten the event timeline (never the functional accounting,
+//!   which is fill-count-identical either way). An empty stack leaves
+//!   this path unreachable and the replay byte-identical to the
+//!   single-level engine.
 //! * **PE execution slots** — the kernel's pipeline and psum charges
 //!   issue against busy-until clocks instead of plain accumulators, and a
 //!   finite decoupling window ([`DECOUPLE_WINDOW_PER_PIPELINE`] nonzeros
@@ -154,8 +168,13 @@ struct ReplayScratch {
     serve: Vec<u8>,
     /// Bank index per read of the current chunk (batch bank pass out).
     bank: Vec<u32>,
+    /// Hierarchy fill depth per read (functional pass out; filled only
+    /// when the config carries a level stack, consulted only on misses).
+    depth: Vec<u8>,
     /// Per-cache busy snapshot at chunk entry (sampling only).
     cache_snap: Vec<f64>,
+    /// Per-level busy snapshot at chunk entry (sampling only).
+    level_snap: Vec<f64>,
 }
 
 /// Immutable inputs shared by every PE of one event-mode replay, so the
@@ -183,11 +202,78 @@ struct ReplayCtx<'a> {
 }
 
 /// The event timeline's current frontier: the furthest busy-until clock
-/// across every arbitrated resource.
+/// across every arbitrated resource (the hierarchy level clocks fold in
+/// as an empty — hence inert — slice on the degenerate configuration).
 #[inline]
-fn frontier(finish: f64, dram_free: f64, pipe_free: f64, psum_free: f64, bank_free: &[f64]) -> f64 {
+fn frontier(
+    finish: f64,
+    dram_free: f64,
+    pipe_free: f64,
+    psum_free: f64,
+    bank_free: &[f64],
+    level_free: &[f64],
+) -> f64 {
     let bank_max = bank_free.iter().cloned().fold(0.0f64, f64::max);
-    finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max)
+    let level_max = level_free.iter().cloned().fold(0.0f64, f64::max);
+    finish.max(dram_free).max(pipe_free).max(psum_free).max(bank_max).max(level_max)
+}
+
+/// Completion time of a PE-cache miss walking a **non-empty** hierarchy
+/// stack (event timing only — the functional fill already happened
+/// inside the controller). `request` is the miss's arbitration-ready
+/// instant (`start + hit_latency`); `d` is the controller's
+/// [`MemoryController::last_fill_depth`] for this serve: the
+/// innermost-first index of the level that granted the line, or
+/// `level_consts.len()` when the fetch fell through to DRAM. The
+/// granted line then back-fills every missed inner level `j < d`,
+/// occupying its busy-until clock; a level *without* double buffering
+/// also extends the request's completion to its fill-drain end, while a
+/// double-buffered level overlaps the fill with the drain of the line
+/// it already holds (so enabling `db` can only shorten the timeline).
+/// A dirty PE-cache victim posts its write-back straight onto the DRAM
+/// channel — same direct path the functional model charges — without
+/// the requesting read waiting on it.
+///
+/// Shared verbatim by [`replay_pe`] and [`replay_pe_reference`] so the
+/// two loops stay bit-identical on hierarchy configs by construction.
+#[inline]
+fn hierarchy_complete(
+    request: f64,
+    d: usize,
+    writeback: bool,
+    level_consts: &[(f64, f64, f64, bool)],
+    level_free: &mut [f64],
+    dram_free: &mut f64,
+    hier_miss_occ: f64,
+    wb_occ: f64,
+    miss_latency: f64,
+) -> f64 {
+    let mut t = if d == level_consts.len() {
+        // missed every level: one outermost-line fetch from DRAM
+        let grant = request.max(*dram_free);
+        *dram_free = grant + hier_miss_occ;
+        *dram_free + miss_latency
+    } else {
+        // served by level d: queue on its banked-throughput clock
+        let (serve_occ, _, latency, _) = level_consts[d];
+        let grant = request.max(level_free[d]);
+        level_free[d] = grant + serve_occ;
+        level_free[d] + latency
+    };
+    // back-fill the missed levels outside-in (level d-1 first, the
+    // innermost level last)
+    for j in (0..d).rev() {
+        let (_, fill_occ, _, double_buffer) = level_consts[j];
+        let start = t.max(level_free[j]);
+        level_free[j] = start + fill_occ;
+        if !double_buffer {
+            t = level_free[j];
+        }
+    }
+    if writeback {
+        *dram_free += wb_occ;
+    }
+    t
 }
 
 /// Replay one PE's slice range through the arbitrated resources. All
@@ -219,11 +305,18 @@ fn replay_pe(
     let miss_occ = mc.dram_cfg.random_access_cycles(cfg.line_bytes as u64);
     let miss_latency = mc.dram_cfg.row_miss_ns * 1e-9 * cfg.fabric_hz;
     let stream_per_nnz = mc.dram_cfg.stream_cycles(ctx.item_bytes);
+    // hierarchy constants, innermost-first (the order a miss walks the
+    // stack); empty on the degenerate configuration
+    let level_consts = mc.level_event_constants();
+    let n_levels = level_consts.len();
+    let has_levels = n_levels != 0;
+    let hier_miss_occ = mc.hier_miss_dram_cycles();
 
     // --- event state: busy-until clocks, in fabric cycles ---
     let n_caches = mc.caches.len();
     debug_assert!(n_caches < 64, "serve codes pack the cache id in 6 bits");
     let mut bank_free = vec![0.0f64; n_caches * banks];
+    let mut level_free = vec![0.0f64; n_levels];
     let mut dram_free = 0.0f64;
     let mut pipe_free = 0.0f64;
     let mut psum_free = 0.0f64;
@@ -244,7 +337,7 @@ fn replay_pe(
     let mut sampled_nnz = 0u64;
     let mut n_chunks = 0u64;
 
-    let ReplayScratch { chunk, serve, bank, cache_snap } = scratch;
+    let ReplayScratch { chunk, serve, bank, depth, cache_snap, level_snap } = scratch;
     let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
     while stream.fill(chunk) {
         pe_nnz += chunk.n_nnz as u64;
@@ -279,8 +372,10 @@ fn replay_pe(
         let (frontier0, dram_busy0, pipe0, psum0) = if sampling {
             cache_snap.clear();
             cache_snap.extend_from_slice(&mc.cache_busy);
+            level_snap.clear();
+            level_snap.extend((0..n_levels).map(|i| mc.level_busy(i)));
             (
-                frontier(finish, dram_free, pipe_free, psum_free, &bank_free),
+                frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free),
                 mc.dram.busy_cycles,
                 pipeline_cycles,
                 psum_cycles,
@@ -295,6 +390,14 @@ fn replay_pe(
         // controller, serve outcomes recorded into the SoA batch ---
         serve.clear();
         serve.reserve(n_reads);
+        if has_levels {
+            // misses also need the level depth that granted the fill —
+            // a parallel batch (the serve code has no spare bits), read
+            // back from the controller before the next serve overwrites
+            // it; hit/bypass slots hold stale bytes nothing consults
+            depth.clear();
+            depth.reserve(n_reads);
+        }
         for read in &chunk.reads[..n_reads] {
             let code = match mc.factor_row_load(read.slot() as usize, read.row()) {
                 Served::CacheHit { cache } => ((cache as u8) << SERVE_CACHE_SHIFT) | SERVE_HIT,
@@ -305,6 +408,9 @@ fn replay_pe(
                 Served::Bypass => SERVE_BYPASS,
             };
             serve.push(code);
+            if has_levels {
+                depth.push(mc.last_fill_depth());
+            }
         }
 
         // --- bank batch: every read's bank index in one branch-free
@@ -333,8 +439,8 @@ fn replay_pe(
             dram_free += stream_per_nnz;
 
             let mut ready = issue;
-            let reads = i * ctx.rpn..(i + 1) * ctx.rpn;
-            for (&code, &bk) in serve[reads.clone()].iter().zip(&bank[reads]) {
+            for r in i * ctx.rpn..(i + 1) * ctx.rpn {
+                let (code, bk) = (serve[r], bank[r]);
                 let complete = match code & SERVE_KIND_MASK {
                     SERVE_HIT => {
                         let b = (code >> SERVE_CACHE_SHIFT) as usize * banks + bk as usize;
@@ -349,9 +455,23 @@ fn replay_pe(
                         // probe + line-fill write (+ victim read-out)
                         let occ = bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
                         bank_free[b] = start + occ;
-                        let grant = (start + hit_latency).max(dram_free);
-                        dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
-                        dram_free + miss_latency
+                        if !has_levels {
+                            let grant = (start + hit_latency).max(dram_free);
+                            dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
+                            dram_free + miss_latency
+                        } else {
+                            hierarchy_complete(
+                                start + hit_latency,
+                                depth[r] as usize,
+                                writeback,
+                                &level_consts,
+                                &mut level_free,
+                                &mut dram_free,
+                                hier_miss_occ,
+                                miss_occ,
+                                miss_latency,
+                            )
+                        }
                     }
                     _ => {
                         let grant = issue.max(dram_free);
@@ -394,11 +514,14 @@ fn replay_pe(
             // stream's channel share that the functional model charges
             // in bulk at stream end. Clamped non-negative so the
             // extrapolated stall keeps `event ≥ analytic`.
-            let f1 = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
+            let f1 = frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free);
             let d_dram = (mc.dram.busy_cycles - dram_busy0) + chunk.n_nnz as f64 * stream_per_nnz;
             let mut ideal = d_dram.max(pipeline_cycles - pipe0).max(psum_cycles - psum0);
             for (i, &before) in cache_snap.iter().enumerate() {
                 ideal = ideal.max(mc.cache_busy[i] - before);
+            }
+            for (i, &before) in level_snap.iter().enumerate() {
+                ideal = ideal.max(mc.level_busy(i) - before);
             }
             stalls.push((f1 - frontier0 - ideal).max(0.0));
         }
@@ -439,6 +562,7 @@ fn replay_pe(
         cache_words: mc.cache_words,
         psum_words,
         dma_words: mc.dma_words,
+        levels: mc.level_reports(),
     };
     if sampling {
         // extrapolate: mean per-chunk stall × total chunk count, with a
@@ -455,7 +579,7 @@ fn replay_pe(
         // contention = measured event finish beyond the perfect-overlap
         // bound; clamped so the event engine never under-reports the
         // analytic model (their busy accounting is bit-identical)
-        let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
+        let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free);
         report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
     }
     report
@@ -489,9 +613,13 @@ fn replay_pe_reference(
     let miss_occ = mc.dram_cfg.random_access_cycles(cfg.line_bytes as u64);
     let miss_latency = mc.dram_cfg.row_miss_ns * 1e-9 * cfg.fabric_hz;
     let stream_per_nnz = mc.dram_cfg.stream_cycles(ctx.item_bytes);
+    let level_consts = mc.level_event_constants();
+    let has_levels = !level_consts.is_empty();
+    let hier_miss_occ = mc.hier_miss_dram_cycles();
 
     let n_caches = mc.caches.len();
     let mut bank_free = vec![0.0f64; n_caches * banks];
+    let mut level_free = vec![0.0f64; level_consts.len()];
     let mut dram_free = 0.0f64;
     let mut pipe_free = 0.0f64;
     let mut psum_free = 0.0f64;
@@ -529,9 +657,23 @@ fn replay_pe_reference(
                         let start = issue.max(bank_free[b]);
                         let occ = bank_hit + bank_fill + if writeback { bank_fill } else { 0.0 };
                         bank_free[b] = start + occ;
-                        let grant = (start + hit_latency).max(dram_free);
-                        dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
-                        dram_free + miss_latency
+                        if !has_levels {
+                            let grant = (start + hit_latency).max(dram_free);
+                            dram_free = grant + miss_occ + if writeback { miss_occ } else { 0.0 };
+                            dram_free + miss_latency
+                        } else {
+                            hierarchy_complete(
+                                start + hit_latency,
+                                mc.last_fill_depth() as usize,
+                                writeback,
+                                &level_consts,
+                                &mut level_free,
+                                &mut dram_free,
+                                hier_miss_occ,
+                                miss_occ,
+                                miss_latency,
+                            )
+                        }
                     }
                     Served::Bypass => {
                         let grant = issue.max(dram_free);
@@ -570,7 +712,7 @@ fn replay_pe_reference(
     dram_free += mc.dram_cfg.stream_cycles(n_slices_pe * ctx.row_bytes);
 
     let latency_overhead = startup_latency(cfg, &mc);
-    let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free);
+    let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free);
 
     let stats = mc.cache_stats();
     let mut report = PeReport {
@@ -594,6 +736,7 @@ fn replay_pe_reference(
         cache_words: mc.cache_words,
         psum_words,
         dma_words: mc.dma_words,
+        levels: mc.level_reports(),
     };
     report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
     report
@@ -896,45 +1039,53 @@ mod tests {
         // every report field must match the retained fused loop bit for
         // bit, on both cache classes and a non-default chunk size
         let t = gen::random(&[512, 512, 512], 20_000, 31);
-        let cfg = small_cfg();
         let view = ModeView::build(&t, 0);
         let kernel = KernelKind::Spmttkrp.kernel();
         let budgets = [
             SimBudget::default(),
             SimBudget { threads: 2, chunk_nnz: 777, ..SimBudget::default() },
         ];
-        for name in ["e-sram", "o-sram"] {
-            for budget in budgets {
-                let soa = simulate_kernel_mode_event_with_view_budget(
-                    kernel,
-                    &t,
-                    &view,
-                    0,
-                    &cfg,
-                    &tech(name),
-                    budget,
-                );
-                let reference = simulate_kernel_mode_event_reference(
-                    kernel,
-                    &t,
-                    &view,
-                    0,
-                    &cfg,
-                    &tech(name),
-                    budget,
-                );
-                assert_eq!(
-                    soa.runtime_cycles().to_bits(),
-                    reference.runtime_cycles().to_bits(),
-                    "{name}"
-                );
-                for (s, r) in soa.pes.iter().zip(&reference.pes) {
-                    assert_eq!(s.stall_cycles.to_bits(), r.stall_cycles.to_bits(), "{name}");
-                    assert_eq!(s.dram_cycles.to_bits(), r.dram_cycles.to_bits(), "{name}");
-                    assert_eq!(s.cache_cycles, r.cache_cycles, "{name}");
-                    assert_eq!(s.cache_stats, r.cache_stats, "{name}");
-                    assert_eq!(s.dram_stream_bytes, r.dram_stream_bytes, "{name}");
-                    assert_eq!(s.sampled_nnz, r.sampled_nnz, "{name}");
+        // degenerate and hierarchy configs: both loops route misses
+        // through the shared hierarchy_complete, so the stack must stay
+        // as bit-pinned as the classic path
+        let mut hier_cfg = small_cfg();
+        hier_cfg.levels = crate::mem::hierarchy::parse_levels("sram:32KiB,local:4KiB:db").unwrap();
+        hier_cfg.validate().unwrap();
+        for cfg in [small_cfg(), hier_cfg] {
+            for name in ["e-sram", "o-sram"] {
+                for budget in budgets {
+                    let soa = simulate_kernel_mode_event_with_view_budget(
+                        kernel,
+                        &t,
+                        &view,
+                        0,
+                        &cfg,
+                        &tech(name),
+                        budget,
+                    );
+                    let reference = simulate_kernel_mode_event_reference(
+                        kernel,
+                        &t,
+                        &view,
+                        0,
+                        &cfg,
+                        &tech(name),
+                        budget,
+                    );
+                    assert_eq!(
+                        soa.runtime_cycles().to_bits(),
+                        reference.runtime_cycles().to_bits(),
+                        "{name}"
+                    );
+                    for (s, r) in soa.pes.iter().zip(&reference.pes) {
+                        assert_eq!(s.stall_cycles.to_bits(), r.stall_cycles.to_bits(), "{name}");
+                        assert_eq!(s.dram_cycles.to_bits(), r.dram_cycles.to_bits(), "{name}");
+                        assert_eq!(s.cache_cycles, r.cache_cycles, "{name}");
+                        assert_eq!(s.cache_stats, r.cache_stats, "{name}");
+                        assert_eq!(s.dram_stream_bytes, r.dram_stream_bytes, "{name}");
+                        assert_eq!(s.sampled_nnz, r.sampled_nnz, "{name}");
+                        assert_eq!(s.levels, r.levels, "{name}");
+                    }
                 }
             }
         }

@@ -1,6 +1,7 @@
 //! Simulation results: per-PE and per-mode reports.
 
 use crate::cache::cache::CacheStats;
+use crate::mem::hierarchy::{merge_level_reports, LevelReport};
 use crate::mem::tech::MemTechnology;
 
 /// Named resources a PE can bottleneck on.
@@ -18,6 +19,10 @@ pub enum Resource {
     StreamDma,
     /// Element-wise DMA staging buffer.
     ElementDma,
+    /// The busiest level of the configured memory-hierarchy stack
+    /// (only a candidate when `--levels` is non-degenerate and the
+    /// stack saw traffic).
+    Hierarchy,
 }
 
 impl Resource {
@@ -29,6 +34,7 @@ impl Resource {
             Resource::Pipelines => "pipelines",
             Resource::StreamDma => "stream-dma",
             Resource::ElementDma => "element-dma",
+            Resource::Hierarchy => "hierarchy",
         }
     }
 }
@@ -77,6 +83,10 @@ pub struct PeReport {
     pub cache_words: u64,
     pub psum_words: u64,
     pub dma_words: u64,
+    /// Per-level hierarchy accounting, in `AcceleratorConfig::levels`
+    /// stack order (outermost first). Empty for the degenerate
+    /// single-level configuration.
+    pub levels: Vec<LevelReport>,
 }
 
 impl PeReport {
@@ -85,8 +95,10 @@ impl PeReport {
     /// the analytic engine, so both engines report through one type).
     pub fn runtime_cycles(&self) -> f64 {
         let cache_max = self.cache_cycles.iter().cloned().fold(0.0f64, f64::max);
+        let level_max = self.level_max_cycles();
         self.dram_cycles
             .max(cache_max)
+            .max(level_max)
             .max(self.psum_cycles)
             .max(self.pipeline_cycles)
             .max(self.stream_dma_cycles)
@@ -95,10 +107,18 @@ impl PeReport {
             + self.stall_cycles
     }
 
+    /// Busy cycles of the most-loaded hierarchy level (`0.0` for the
+    /// degenerate configuration — folding an empty stack is then a
+    /// no-op in [`Self::runtime_cycles`], keeping it bit-identical).
+    pub fn level_max_cycles(&self) -> f64 {
+        self.levels.iter().map(|l| l.busy_cycles).fold(0.0f64, f64::max)
+    }
+
     /// Which resource bound this PE.
     pub fn bottleneck(&self) -> Resource {
         let cache_max = self.cache_cycles.iter().cloned().fold(0.0f64, f64::max);
-        let candidates = [
+        let level_max = self.level_max_cycles();
+        let mut candidates = vec![
             (self.dram_cycles, Resource::Dram),
             (cache_max, Resource::Cache),
             (self.psum_cycles, Resource::Psum),
@@ -106,6 +126,11 @@ impl PeReport {
             (self.stream_dma_cycles, Resource::StreamDma),
             (self.element_dma_cycles, Resource::ElementDma),
         ];
+        // only a loaded hierarchy competes: a zero-busy stack (or the
+        // degenerate config) must not perturb the existing tie-breaks
+        if level_max > 0.0 {
+            candidates.push((level_max, Resource::Hierarchy));
+        }
         candidates
             .iter()
             .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
@@ -113,9 +138,13 @@ impl PeReport {
             .unwrap()
     }
 
-    /// Total active on-chip words (cache + psum + DMA buffers).
+    /// Total active on-chip words (cache + psum + DMA buffers + every
+    /// hierarchy level).
     pub fn onchip_words(&self) -> u64 {
-        self.cache_words + self.psum_words + self.dma_words
+        self.cache_words
+            + self.psum_words
+            + self.dma_words
+            + self.levels.iter().map(|l| l.words).sum::<u64>()
     }
 
     /// Fraction of this PE's nonzeros that were event-timed (1.0 =
@@ -216,6 +245,17 @@ impl ModeReport {
         self.pes.iter().map(|p| p.onchip_words()).sum()
     }
 
+    /// Hierarchy rollup across the mode's PEs: counters sum, busy takes
+    /// the per-level max (PEs run concurrently, mirroring
+    /// [`Self::runtime_cycles`]). Empty for the degenerate config.
+    pub fn levels(&self) -> Vec<LevelReport> {
+        let mut acc = Vec::new();
+        for p in &self.pes {
+            merge_level_reports(&mut acc, &p.levels, true);
+        }
+        acc
+    }
+
     /// PE load imbalance: max/mean nnz ratio (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
         if self.pes.is_empty() {
@@ -269,6 +309,17 @@ impl SimReport {
             .sum::<f64>()
             .sqrt()
     }
+
+    /// Hierarchy rollup across modes: counters *and* busy cycles sum
+    /// (modes execute sequentially, mirroring
+    /// [`Self::total_runtime_cycles`]). Empty for the degenerate config.
+    pub fn levels(&self) -> Vec<LevelReport> {
+        let mut acc = Vec::new();
+        for m in &self.modes {
+            merge_level_reports(&mut acc, &m.levels(), false);
+        }
+        acc
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +350,7 @@ mod tests {
             cache_words: 100,
             psum_words: 50,
             dma_words: 25,
+            levels: vec![],
         }
     }
 
@@ -393,6 +445,64 @@ mod tests {
         // exact reports carry a zero band by construction
         assert_eq!(pe(1.0, 1.0, 1.0).stall_stderr_cycles, 0.0);
         assert!((pe(1.0, 1.0, 1.0).sampled_frac() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hierarchy_levels_roll_up_parallel_then_serial() {
+        let level = LevelReport {
+            name: "sram".into(),
+            capacity_bytes: 256 * 1024,
+            line_bytes: 64,
+            double_buffer: false,
+            accesses: 10,
+            hits: 7,
+            misses: 3,
+            traffic_bytes: 640,
+            words: 100,
+            busy_cycles: 4.0,
+        };
+        let mut a = pe(10.0, 5.0, 1.0);
+        let mut b = pe(10.0, 5.0, 1.0);
+        a.levels = vec![level.clone()];
+        let mut bl = level.clone();
+        bl.busy_cycles = 9.0;
+        b.levels = vec![bl];
+        let m = ModeReport {
+            tensor: "t".into(),
+            kernel: "spmttkrp".into(),
+            mode: 0,
+            tech: esram(),
+            rank: 16,
+            fabric_hz: 500e6,
+            pes: vec![a, b],
+        };
+        let ml = m.levels();
+        assert_eq!(ml.len(), 1);
+        assert_eq!(ml[0].accesses, 20, "PE counters sum");
+        assert_eq!(ml[0].busy_cycles, 9.0, "PE busy is a max (concurrent)");
+        let r = SimReport {
+            tensor: "t".into(),
+            kernel: "spmttkrp".into(),
+            tech: esram(),
+            modes: vec![m.clone(), m],
+        };
+        let rl = r.levels();
+        assert_eq!(rl[0].accesses, 40, "mode counters sum");
+        assert_eq!(rl[0].busy_cycles, 18.0, "mode busy sums (sequential)");
+        // level words feed the Eq. 3 active-bits aggregate
+        assert_eq!(r.modes[0].total_onchip_words(), 2 * (175 + 100));
+    }
+
+    #[test]
+    fn hierarchy_competes_for_bottleneck_only_when_loaded() {
+        let mut p = pe(10.0, 20.0, 5.0);
+        p.levels = vec![LevelReport { busy_cycles: 0.0, ..Default::default() }];
+        assert_eq!(p.bottleneck(), Resource::Cache, "zero-busy stack must not perturb ties");
+        assert_eq!(p.runtime_cycles(), 22.0);
+        p.levels[0].busy_cycles = 30.0;
+        assert_eq!(p.bottleneck(), Resource::Hierarchy);
+        assert_eq!(p.runtime_cycles(), 32.0);
+        assert_eq!(Resource::Hierarchy.name(), "hierarchy");
     }
 
     #[test]

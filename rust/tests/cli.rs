@@ -427,12 +427,40 @@ fn explore_ranks_by_every_objective() {
 }
 
 #[test]
+fn simulate_levels_prints_per_level_rows_and_rejects_bad_specs() {
+    let out = bin()
+        .args([
+            "simulate", "--tensor", "nell-2", "--scale", "0.0001",
+            "--tech", "o-sram", "--engine", "event",
+            "--levels", "sram:64KiB:4banks:line256,local:4KiB:db",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["level sram", "level local", "(db)"] {
+        assert!(text.contains(needle), "missing `{needle}`:\n{text}");
+    }
+    // a capacity that is not a power-of-two line count must fail with
+    // the flag named in the error
+    let out = bin()
+        .args(["simulate", "--tensor", "nell-2", "--levels", "sram:63KiB"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--levels"), "{err}");
+}
+
+#[test]
 fn explore_rejects_bad_grammar_helpfully() {
     // unknown knob: the error lists the whole grammar
     let out = bin().args(["explore", "--axes", "warp=1,2"]).output().unwrap();
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
-    for knob in ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank"] {
+    for knob in
+        ["n_pes", "cache_lines", "cache_assoc", "bank_factor", "rank", "sram_kib", "local_kib"]
+    {
         assert!(err.contains(knob), "error must list `{knob}`:\n{err}");
     }
     // unknown objective: the error lists the options

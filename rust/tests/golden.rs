@@ -1,0 +1,293 @@
+//! Golden bit-identity harness.
+//!
+//! Pins every `SimReport` float the simulator produces — bit-for-bit,
+//! via `f64::to_bits()` — across the full grid of FROSTT presets ×
+//! builtin technologies × builtin kernels × both engines. The goldens
+//! live in `tests/golden/<preset>.json` as canonical, line-oriented
+//! JSON rendered by [`render_preset`]; comparison is plain string
+//! equality, so no JSON parser is needed and any drift (a reordered
+//! reduction, a fused multiply-add, an accidental semantic change)
+//! fails with the first differing line.
+//!
+//! Lifecycle:
+//! - **Missing golden** ⇒ the harness bootstraps it: writes the file,
+//!   warns, and passes. Commit the generated files to pin the current
+//!   behaviour (the CI `golden` job uploads them as an artifact).
+//! - **`PHOTON_REGEN_GOLDEN=1`** ⇒ regenerate and overwrite, pass.
+//!   Use after an *intentional* numeric change, and review the diff.
+//! - **Otherwise** ⇒ byte-compare; on mismatch the regenerated file is
+//!   written to `target/golden-regen/` (CI uploads it) and the test
+//!   panics with the first differing line.
+//!
+//! The degenerate hierarchy test at the bottom is the tentpole's
+//! anchor: an explicitly-empty `--levels` stack must reproduce the
+//! golden (no-levels) output bit-for-bit on both engines.
+
+use photon_mttkrp::accel::config::AcceleratorConfig;
+use photon_mttkrp::coordinator::driver::simulate_all_modes_with_kernel;
+use photon_mttkrp::kernel::KernelKind;
+use photon_mttkrp::mem::hierarchy::parse_levels;
+use photon_mttkrp::mem::registry;
+use photon_mttkrp::sim::result::SimReport;
+use photon_mttkrp::sim::EngineKind;
+use photon_mttkrp::tensor::gen::{preset, FrosttTensor};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Small enough that the full 24-run grid per preset stays fast in
+/// debug builds; the goldens pin bits, not workload size.
+const SCALE: f64 = 1.0 / 262144.0;
+const SEED: u64 = 1;
+
+/// Builtin technology registry keys, in registry order. Goldens cover
+/// exactly these — config-file technologies are the user's to pin.
+const TECHS: [&str; 4] = ["e-sram", "o-sram", "o-sram-imc", "e-uram"];
+
+const ENGINES: [EngineKind; 2] = [EngineKind::Analytic, EngineKind::Event];
+
+/// An f64 as its exact bit pattern: the one encoding `to_bits` can
+/// round-trip and `1e-16`-style formatting cannot.
+fn bits(x: f64) -> String {
+    format!("\"{:016x}\"", x.to_bits())
+}
+
+fn render_report(rep: &SimReport, out: &mut String) {
+    out.push_str("      \"modes\": [\n");
+    for (mi, m) in rep.modes.iter().enumerate() {
+        let _ = writeln!(out, "        {{");
+        let _ = writeln!(out, "          \"kernel\": \"{}\",", m.kernel);
+        let _ = writeln!(out, "          \"mode\": {},", m.mode);
+        let _ = writeln!(out, "          \"rank\": {},", m.rank);
+        let _ = writeln!(out, "          \"fabric_hz\": {},", bits(m.fabric_hz));
+        out.push_str("          \"pes\": [\n");
+        for (pi, p) in m.pes.iter().enumerate() {
+            let _ = writeln!(out, "            {{");
+            let _ = writeln!(out, "              \"pe\": {},", p.pe);
+            let _ = writeln!(out, "              \"nnz\": {},", p.nnz);
+            let _ = writeln!(out, "              \"slices\": {},", p.slices);
+            let _ = writeln!(out, "              \"dram_cycles\": {},", bits(p.dram_cycles));
+            let cc: Vec<String> = p.cache_cycles.iter().map(|&c| bits(c)).collect();
+            let _ = writeln!(out, "              \"cache_cycles\": [{}],", cc.join(", "));
+            let _ = writeln!(out, "              \"psum_cycles\": {},", bits(p.psum_cycles));
+            let _ =
+                writeln!(out, "              \"pipeline_cycles\": {},", bits(p.pipeline_cycles));
+            let _ = writeln!(
+                out,
+                "              \"stream_dma_cycles\": {},",
+                bits(p.stream_dma_cycles)
+            );
+            let _ = writeln!(
+                out,
+                "              \"element_dma_cycles\": {},",
+                bits(p.element_dma_cycles)
+            );
+            let _ = writeln!(
+                out,
+                "              \"latency_overhead_cycles\": {},",
+                bits(p.latency_overhead_cycles)
+            );
+            let _ = writeln!(out, "              \"stall_cycles\": {},", bits(p.stall_cycles));
+            let _ = writeln!(
+                out,
+                "              \"stall_stderr_cycles\": {},",
+                bits(p.stall_stderr_cycles)
+            );
+            let _ = writeln!(out, "              \"sampled_nnz\": {},", p.sampled_nnz);
+            let _ = writeln!(
+                out,
+                "              \"cache_stats\": {{\"hits\": {}, \"misses\": {}, \
+                 \"evictions\": {}, \"writebacks\": {}}},",
+                p.cache_stats.hits, p.cache_stats.misses, p.cache_stats.evictions,
+                p.cache_stats.writebacks
+            );
+            let _ =
+                writeln!(out, "              \"dram_stream_bytes\": {},", p.dram_stream_bytes);
+            let _ =
+                writeln!(out, "              \"dram_random_bytes\": {},", p.dram_random_bytes);
+            let _ = writeln!(
+                out,
+                "              \"dram_random_accesses\": {},",
+                p.dram_random_accesses
+            );
+            let _ = writeln!(out, "              \"cache_words\": {},", p.cache_words);
+            let _ = writeln!(out, "              \"psum_words\": {},", p.psum_words);
+            let _ = writeln!(out, "              \"dma_words\": {},", p.dma_words);
+            out.push_str("              \"levels\": [");
+            for (li, l) in p.levels.iter().enumerate() {
+                if li > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(
+                    out,
+                    "{{\"name\": \"{}\", \"accesses\": {}, \"hits\": {}, \"misses\": {}, \
+                     \"traffic_bytes\": {}, \"words\": {}, \"busy_cycles\": {}}}",
+                    l.name, l.accesses, l.hits, l.misses, l.traffic_bytes, l.words,
+                    bits(l.busy_cycles)
+                );
+            }
+            out.push_str("]\n");
+            let comma = if pi + 1 < m.pes.len() { "," } else { "" };
+            let _ = writeln!(out, "            }}{comma}");
+        }
+        out.push_str("          ]\n");
+        let comma = if mi + 1 < rep.modes.len() { "," } else { "" };
+        let _ = writeln!(out, "        }}{comma}");
+    }
+    out.push_str("      ]\n");
+}
+
+/// Render the whole preset grid (techs × kernels × engines) as one
+/// canonical JSON document.
+fn render_preset(ft: FrosttTensor) -> String {
+    let cfg = AcceleratorConfig::paper_default().scaled(SCALE);
+    let tensor = preset(ft).scaled(SCALE).generate(SEED);
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"preset\": \"{}\",", ft.name());
+    let _ = writeln!(out, "  \"scale\": {},", bits(SCALE));
+    let _ = writeln!(out, "  \"seed\": {},", SEED);
+    let _ = writeln!(out, "  \"nnz\": {},", tensor.nnz());
+    out.push_str("  \"runs\": {\n");
+    let n_runs = TECHS.len() * KernelKind::ALL.len() * ENGINES.len();
+    let mut i = 0;
+    for tech_name in TECHS {
+        let tech = registry::tech(tech_name);
+        for kernel in KernelKind::ALL {
+            for engine in ENGINES {
+                let rep = simulate_all_modes_with_kernel(&tensor, &cfg, &tech, engine, kernel);
+                let _ = writeln!(
+                    out,
+                    "    \"{}/{}/{}\": {{",
+                    tech_name,
+                    kernel.name(),
+                    engine.name()
+                );
+                render_report(&rep, &mut out);
+                i += 1;
+                let comma = if i < n_runs { "," } else { "" };
+                let _ = writeln!(out, "    }}{comma}");
+            }
+        }
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn regen_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target").join("golden-regen")
+}
+
+fn check_preset(ft: FrosttTensor) {
+    let rendered = render_preset(ft);
+    let path = golden_dir().join(format!("{}.json", ft.name()));
+    let regen = std::env::var("PHOTON_REGEN_GOLDEN").as_deref() == Ok("1");
+    if regen || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        std::fs::write(&path, &rendered).expect("write golden");
+        if !regen {
+            eprintln!(
+                "golden: bootstrapped {} — commit it to pin bit-identity",
+                path.display()
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    if want == rendered {
+        return;
+    }
+    // Preserve the regenerated document where CI can pick it up, then
+    // fail on the first drifted line.
+    std::fs::create_dir_all(regen_dir()).expect("create target/golden-regen");
+    let regen_path = regen_dir().join(format!("{}.json", ft.name()));
+    std::fs::write(&regen_path, &rendered).expect("write regenerated golden");
+    for (ln, (w, g)) in want.lines().zip(rendered.lines()).enumerate() {
+        if w != g {
+            panic!(
+                "golden mismatch for {} at line {}:\n  golden: {}\n  now:    {}\n\
+                 regenerated file: {} (set PHOTON_REGEN_GOLDEN=1 to accept)",
+                path.display(),
+                ln + 1,
+                w,
+                g,
+                regen_path.display()
+            );
+        }
+    }
+    panic!(
+        "golden mismatch for {}: line count changed ({} -> {}); regenerated file: {}",
+        path.display(),
+        want.lines().count(),
+        rendered.lines().count(),
+        regen_path.display()
+    );
+}
+
+#[test]
+fn golden_nell_1() {
+    check_preset(FrosttTensor::Nell1);
+}
+
+#[test]
+fn golden_nell_2() {
+    check_preset(FrosttTensor::Nell2);
+}
+
+#[test]
+fn golden_patents() {
+    check_preset(FrosttTensor::Patents);
+}
+
+#[test]
+fn golden_lbnl() {
+    check_preset(FrosttTensor::Lbnl);
+}
+
+#[test]
+fn golden_delicious() {
+    check_preset(FrosttTensor::Delicious);
+}
+
+#[test]
+fn golden_amazon() {
+    check_preset(FrosttTensor::Amazon);
+}
+
+#[test]
+fn golden_reddit() {
+    check_preset(FrosttTensor::Reddit);
+}
+
+/// The tentpole's degenerate-config guarantee: an explicitly-parsed
+/// empty `--levels` stack must be byte-identical to the paper default
+/// (no hierarchy code on the hot path) on both engines — the same
+/// document the goldens above pin.
+#[test]
+fn degenerate_levels_stack_is_bit_identical_on_both_engines() {
+    let base = AcceleratorConfig::paper_default().scaled(SCALE);
+    let mut degen = base.clone();
+    degen.levels = parse_levels("").expect("empty spec is the degenerate stack");
+    assert!(degen.levels.is_empty());
+    let tensor = preset(FrosttTensor::Nell2).scaled(SCALE).generate(SEED);
+    let tech = registry::tech("o-sram");
+    for engine in ENGINES {
+        for kernel in KernelKind::ALL {
+            let a = simulate_all_modes_with_kernel(&tensor, &base, &tech, engine, kernel);
+            let b = simulate_all_modes_with_kernel(&tensor, &degen, &tech, engine, kernel);
+            let (mut ra, mut rb) = (String::new(), String::new());
+            render_report(&a, &mut ra);
+            render_report(&b, &mut rb);
+            assert_eq!(
+                ra,
+                rb,
+                "degenerate stack diverged ({} / {})",
+                engine.name(),
+                kernel.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Property tests for the multi-level memory hierarchy
+//! (`AcceleratorConfig::levels`): seeded random stacks must satisfy the
+//! conservation invariants the model is built on, double buffering may
+//! only *remove* event-engine stall (never touch functional bits), and
+//! the whole feature must stay bit-transparent to the host-execution
+//! knobs (threads, chunking, sampling) exactly like the degenerate
+//! configuration is.
+
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::sim::result::PeReport;
+
+const SCALE: f64 = 1.0 / 262_144.0;
+const SEED: u64 = 3;
+
+/// Deterministic split-mix style generator for stack shapes.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+    fn pick(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn flag(&mut self) -> bool {
+        self.next() & 1 == 1
+    }
+}
+
+/// A random *valid* stack for the given PE-cache line size: 1–3 levels,
+/// outermost first, line widths non-increasing inward (each a pow2
+/// multiple of the PE line), pow2 line counts, unique names. Small
+/// capacities on purpose — every level must actually miss for the
+/// conservation invariants to be exercised.
+fn random_stack(rng: &mut Rng, pe_line: usize) -> Vec<MemLevelSpec> {
+    let depth = 1 + rng.pick(3) as usize;
+    let mut stack = Vec::new();
+    // line multiplier starts high at the outermost level, never grows
+    // inward (validation requires inner line <= outer line)
+    let mut line_mult = 1usize << rng.pick(3); // 1, 2 or 4 PE lines
+    for d in 0..depth {
+        let line = pe_line * line_mult;
+        // 2^(2..=6) lines per level, outer levels biased larger
+        let lines = 1u64 << (2 + rng.pick(5) + (depth - 1 - d) as u64);
+        let mut spec = MemLevelSpec::new(&format!("lv{d}"), lines * line as u64);
+        spec.line_bytes = Some(line);
+        spec.banks = 1 << rng.pick(3);
+        spec.double_buffer = rng.flag();
+        stack.push(spec);
+        if line_mult > 1 && rng.flag() {
+            line_mult /= 2;
+        }
+    }
+    stack
+}
+
+fn cfg_with(levels: Vec<MemLevelSpec>) -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::paper_default().scaled(SCALE);
+    cfg.levels = levels;
+    cfg.validate().expect("random stack must be valid by construction");
+    cfg
+}
+
+fn run(cfg: &AcceleratorConfig, engine: EngineKind, budget: SimBudget) -> ModeReport {
+    let tensor = frostt::preset(FrosttTensor::Nell2).scaled(SCALE).generate(SEED);
+    engine.simulate_kernel_mode_budget(
+        KernelKind::Spmttkrp.kernel(),
+        &tensor,
+        0,
+        cfg,
+        &tech("o-sram"),
+        budget,
+    )
+}
+
+/// Functional accounting only: every counter sampling and double
+/// buffering are contractually *not* allowed to move. Stall and its
+/// stderr (timing estimates) and `sampled_nnz` (how much replay
+/// produced them) are deliberately excluded.
+fn fold_functional(p: &PeReport) -> Vec<u64> {
+    let mut out = vec![
+        p.pe as u64,
+        p.nnz,
+        p.slices,
+        p.dram_cycles.to_bits(),
+        p.psum_cycles.to_bits(),
+        p.pipeline_cycles.to_bits(),
+        p.stream_dma_cycles.to_bits(),
+        p.element_dma_cycles.to_bits(),
+        p.latency_overhead_cycles.to_bits(),
+        p.cache_stats.hits,
+        p.cache_stats.misses,
+        p.cache_stats.evictions,
+        p.cache_stats.writebacks,
+        p.dram_stream_bytes,
+        p.dram_random_bytes,
+        p.dram_random_accesses,
+        p.cache_words,
+        p.psum_words,
+        p.dma_words,
+    ];
+    out.extend(p.cache_cycles.iter().map(|c| c.to_bits()));
+    for l in &p.levels {
+        out.extend([l.accesses, l.hits, l.misses, l.traffic_bytes, l.words]);
+        out.push(l.busy_cycles.to_bits());
+    }
+    out
+}
+
+/// Full fold: functional + the timing estimates.
+fn fold_full(p: &PeReport) -> Vec<u64> {
+    let mut out = fold_functional(p);
+    out.extend([p.stall_cycles.to_bits(), p.stall_stderr_cycles.to_bits(), p.sampled_nnz]);
+    out
+}
+
+#[test]
+fn conservation_invariants_hold_on_random_stacks() {
+    for seed in 0..8u64 {
+        let mut rng = Rng(0x9e3779b97f4a7c15 ^ seed);
+        let cfg = cfg_with(random_stack(&mut rng, 64));
+        let rep = run(&cfg, EngineKind::Analytic, SimBudget::single_threaded());
+        for p in &rep.pes {
+            assert_eq!(p.levels.len(), cfg.levels.len(), "stack echoed per PE");
+            // innermost level sees exactly the PE-cache line fills
+            let inner = p.levels.last().unwrap();
+            assert_eq!(
+                inner.accesses, p.cache_stats.misses,
+                "innermost accesses == PE-cache misses (seed {seed})"
+            );
+            for (i, l) in p.levels.iter().enumerate() {
+                assert_eq!(l.hits + l.misses, l.accesses, "hit/miss split (seed {seed})");
+                // a level's request unit is the next-inner line (the PE
+                // cache line for the innermost level)
+                let request_bytes = p
+                    .levels
+                    .get(i + 1)
+                    .map(|n| n.line_bytes)
+                    .unwrap_or(cfg.line_bytes as u64);
+                assert_eq!(
+                    l.traffic_bytes,
+                    l.accesses * request_bytes,
+                    "traffic telescopes through line sizes (seed {seed})"
+                );
+                // active words: every probe moves a request, every miss
+                // additionally writes the level's own line
+                assert_eq!(
+                    l.words,
+                    l.accesses * (request_bytes / 4) + l.misses * (l.line_bytes / 4),
+                    "level words (seed {seed})"
+                );
+                if i + 1 < p.levels.len() {
+                    assert_eq!(
+                        l.accesses,
+                        p.levels[i + 1].misses,
+                        "outer accesses == inner misses (seed {seed})"
+                    );
+                }
+            }
+            // every all-levels miss is one outermost-line DRAM fetch;
+            // writebacks and bypass traffic only add to that
+            assert!(
+                p.dram_random_accesses >= p.levels[0].misses,
+                "DRAM sees every all-miss (seed {seed})"
+            );
+        }
+        // levels cost energy: the active-word rollup must grow
+        let base = cfg_with(Vec::new());
+        let rep0 = run(&base, EngineKind::Analytic, SimBudget::single_threaded());
+        assert!(
+            rep.pes.iter().map(|p| p.onchip_words()).sum::<u64>()
+                > rep0.pes.iter().map(|p| p.onchip_words()).sum::<u64>(),
+            "hierarchy words join Eq. 3 accounting (seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn double_buffering_only_removes_stall_never_functional_bits() {
+    let db = cfg_with(parse_levels("sram:64KiB:4banks:line256,local:4KiB:db").unwrap());
+    let mut nodb = db.clone();
+    for l in &mut nodb.levels {
+        l.double_buffer = false;
+    }
+    let r_db = run(&db, EngineKind::Event, SimBudget::single_threaded());
+    let r_nodb = run(&nodb, EngineKind::Event, SimBudget::single_threaded());
+    for (a, b) in r_db.pes.iter().zip(&r_nodb.pes) {
+        assert_eq!(
+            fold_functional(a),
+            fold_functional(b),
+            "db is a timing-only knob; functional accounting may not move"
+        );
+        assert!(
+            a.stall_cycles <= b.stall_cycles,
+            "overlapping fill with drain can only shorten the timeline \
+             (db {} vs no-db {})",
+            a.stall_cycles,
+            b.stall_cycles
+        );
+    }
+    assert!(
+        r_db.runtime_cycles() <= r_nodb.runtime_cycles(),
+        "mode runtime follows the stall ordering"
+    );
+}
+
+#[test]
+fn double_buffering_strictly_helps_somewhere() {
+    // the acceptance anchor: on at least one preset the overlap is
+    // visible as strictly lower event-engine stall
+    let db = cfg_with(parse_levels("sram:64KiB:4banks:line256,local:4KiB:db").unwrap());
+    let mut nodb = db.clone();
+    for l in &mut nodb.levels {
+        l.double_buffer = false;
+    }
+    let kernel = KernelKind::Spmttkrp.kernel();
+    let mut strict = false;
+    for ft in FrosttTensor::ALL {
+        let tensor = frostt::preset(ft).scaled(SCALE).generate(SEED);
+        let stall = |cfg: &AcceleratorConfig| {
+            EngineKind::Event
+                .simulate_kernel_mode_budget(
+                    kernel,
+                    &tensor,
+                    0,
+                    cfg,
+                    &tech("o-sram"),
+                    SimBudget::single_threaded(),
+                )
+                .pes
+                .iter()
+                .map(|p| p.stall_cycles)
+                .sum::<f64>()
+        };
+        let (s_db, s_nodb) = (stall(&db), stall(&nodb));
+        assert!(s_db <= s_nodb, "{}: db may never cost stall", ft.name());
+        if s_db < s_nodb {
+            strict = true;
+        }
+    }
+    assert!(strict, "double buffering must strictly help on at least one preset");
+}
+
+#[test]
+fn hierarchy_is_bit_identical_across_thread_counts() {
+    let cfg = cfg_with(parse_levels("sram:32KiB,local:4KiB:db").unwrap());
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for engine in EngineKind::ALL {
+        let base = run(&cfg, engine, SimBudget::single_threaded());
+        for threads in [2, avail] {
+            let r = run(&cfg, engine, SimBudget::with_threads(threads));
+            assert_eq!(
+                base.pes.iter().map(fold_full).collect::<Vec<_>>(),
+                r.pes.iter().map(fold_full).collect::<Vec<_>>(),
+                "{engine} at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn sampling_keeps_functional_hierarchy_counts_exact() {
+    let cfg = cfg_with(parse_levels("sram:32KiB,local:4KiB:db").unwrap());
+    let exact = run(&cfg, EngineKind::Event, SimBudget::single_threaded());
+    for rate in [0.5, 0.25] {
+        let budget = SimBudget::single_threaded()
+            .with_sample(SampleSpec::new(rate, 7).unwrap());
+        let r = run(&cfg, EngineKind::Event, budget);
+        assert_eq!(
+            exact.pes.iter().map(fold_functional).collect::<Vec<_>>(),
+            r.pes.iter().map(fold_functional).collect::<Vec<_>>(),
+            "sampling at {rate} may only touch the stall estimate"
+        );
+    }
+}
+
+#[test]
+fn event_runtime_dominates_analytic_with_levels() {
+    let cfg = cfg_with(parse_levels("sram:32KiB:2banks,local:4KiB:db").unwrap());
+    let a = run(&cfg, EngineKind::Analytic, SimBudget::single_threaded());
+    let e = run(&cfg, EngineKind::Event, SimBudget::single_threaded());
+    assert!(
+        e.runtime_cycles() >= a.runtime_cycles(),
+        "contention replay can only add to the roofline ({} < {})",
+        e.runtime_cycles(),
+        a.runtime_cycles()
+    );
+    // and the report rollup surfaces the levels
+    let merged = e.levels();
+    assert_eq!(merged.len(), 2);
+    assert!(merged.iter().all(|l| l.accesses > 0), "stack actually exercised");
+}

@@ -38,6 +38,10 @@ fn fold_pe(p: &PeReport) -> Vec<u64> {
         p.dma_words,
     ];
     out.extend(p.cache_cycles.iter().map(|c| c.to_bits()));
+    for l in &p.levels {
+        out.extend([l.accesses, l.hits, l.misses, l.traffic_bytes, l.words]);
+        out.push(l.busy_cycles.to_bits());
+    }
     out
 }
 
