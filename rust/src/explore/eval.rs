@@ -11,9 +11,11 @@
 //! evaluation (a candidate changes the accelerator, never the tensor).
 //!
 //! The [`EvalCache`] memoizes objective vectors under a **content key**:
-//! the full `Debug` rendering of the configuration and the resolved
-//! technology (shortest-roundtrip floats — injective per value, and new
-//! fields join the key automatically) plus the kernel, engine and
+//! the canonical, versioned serialization of the configuration and the
+//! resolved technology from [`crate::explore::key`] (every field by
+//! name, floats as IEEE-754 bit-hex, prefixed with
+//! [`CACHE_SCHEMA_VERSION`](crate::explore::key::CACHE_SCHEMA_VERSION))
+//! plus the kernel, engine and
 //! workload tags. Overlapping candidates across searches — the same
 //! (config, tech, kernel, engine, workload) reached from different axis
 //! grammars, or a re-run with a warm cache — are therefore computed
@@ -94,25 +96,23 @@ impl EvalCache {
 }
 
 /// The content key of one (candidate, engine, workload, sample)
-/// evaluation. The sample tag appears only when it can change the
-/// result: event engine at a rate below 1.0 (see the module docs).
+/// evaluation: the canonical serialization from
+/// [`crate::explore::key::eval_key`]. The sample joins the key only
+/// when it can change the result: event engine at a rate below 1.0
+/// (see the module docs).
 pub fn candidate_key(
     cand: &Candidate,
     engine: EngineKind,
     workload_tag: &str,
     sample: SampleSpec,
 ) -> String {
-    let sample_tag = if engine == EngineKind::Event && !sample.is_exact() {
-        format!("|sample{:016x}@{}", sample.rate.to_bits(), sample.seed)
-    } else {
-        String::new()
-    };
-    format!(
-        "{:?}|{:?}|{}|{}{sample_tag}|{workload_tag}",
-        cand.cfg,
-        cand.tech,
+    crate::explore::key::eval_key(
+        &cand.cfg,
+        &cand.tech,
         cand.kernel.name(),
-        engine.name()
+        engine,
+        sample,
+        workload_tag,
     )
 }
 
@@ -239,8 +239,8 @@ mod tests {
         let mut k = base.clone();
         k.kernel = KernelKind::Spttm;
         assert_ne!(k0, candidate_key(&k, EngineKind::Analytic, tag, exact));
-        // any config field — including ones no Knob names (the Debug
-        // rendering keys the whole struct)
+        // any config field — including ones no Knob names (the
+        // canonical serialization keys every field by name)
         let mut c = base.clone();
         c.cfg.compute_power_w += 0.1;
         assert_ne!(k0, candidate_key(&c, EngineKind::Analytic, tag, exact));

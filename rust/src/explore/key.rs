@@ -1,0 +1,329 @@
+//! Canonical, versioned cache-key serialization.
+//!
+//! [`EvalCache`](crate::explore::eval::EvalCache) keys used to be the
+//! `Debug` rendering of the configuration and technology structs. That
+//! was injective *today*, but tied cache identity to `#[derive(Debug)]`
+//! output: a field rename, a field reorder, or a future rustc change to
+//! float formatting would silently invalidate every stored entry — or,
+//! worse, alias two distinct configurations. Now that entries survive
+//! the process on disk ([`crate::explore::store`]), key text is a
+//! *format* with a compatibility contract, so it is spelled out here by
+//! hand:
+//!
+//! * every field of [`AcceleratorConfig`] (including every
+//!   [`DramConfig`] sub-field and the [`MemLevelSpec`] stack via
+//!   [`format_levels`]) and every field of [`MemTechnology`] is written
+//!   **by name**, in declaration order — adding a field to either
+//!   struct is a compile error here until the key learns about it, at
+//!   which point [`CACHE_SCHEMA_VERSION`] must be bumped;
+//! * every `f64` is rendered as the `{:016x}` hex of its IEEE-754 bits
+//!   — injective per value (no shortest-roundtrip subtleties) and
+//!   byte-stable across compilers and platforms;
+//! * `Option` fields render as `-` when absent, so `None` can never
+//!   collide with any present value;
+//! * the key starts with `v{CACHE_SCHEMA_VERSION}|`, and the on-disk
+//!   store embeds the same version in its filename — a version bump
+//!   orphans old files instead of misreading them.
+//!
+//! **Policy:** bump [`CACHE_SCHEMA_VERSION`] on *any* change that can
+//! alter a reported number for an unchanged key — a new config field
+//! consulted by the engines, a semantic change to an existing field, a
+//! change to the energy/area models, or a change to this serialization
+//! itself. Bumping is cheap (one cold re-fill); a stale hit is a wrong
+//! answer served as a bit-identical truth.
+
+use crate::accel::config::AcceleratorConfig;
+use crate::mem::dram::DramConfig;
+use crate::mem::hierarchy::format_levels;
+use crate::mem::tech::MemTechnology;
+use crate::sim::{EngineKind, SampleSpec};
+
+/// Version of the canonical key/record format. Bump on any change that
+/// can alter a reported number for an unchanged key (see module docs);
+/// the on-disk store names its file after this, so old entries are
+/// orphaned rather than misread.
+pub const CACHE_SCHEMA_VERSION: u32 = 1;
+
+/// IEEE-754 bits as fixed-width hex: injective per value, byte-stable.
+fn f(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn opt_usize(x: Option<usize>) -> String {
+    x.map_or_else(|| "-".to_string(), |v| v.to_string())
+}
+
+fn opt_u32(x: Option<u32>) -> String {
+    x.map_or_else(|| "-".to_string(), |v| v.to_string())
+}
+
+/// Canonical rendering of a [`DramConfig`]: every field, by name, in
+/// declaration order, floats as bit-hex.
+pub fn canonical_dram(d: &DramConfig) -> String {
+    format!(
+        "dram{{peak={};eff={};burst={};rowhit={};rowmiss={};randhit={};overlap={};epb={};act={}}}",
+        f(d.peak_bytes_per_s),
+        f(d.stream_efficiency),
+        d.burst_bytes,
+        f(d.row_hit_ns),
+        f(d.row_miss_ns),
+        f(d.random_row_hit_rate),
+        f(d.random_overlap),
+        f(d.energy_pj_per_bit),
+        f(d.activate_pj),
+    )
+}
+
+/// Canonical rendering of an [`AcceleratorConfig`]: every field, by
+/// name, in declaration order. The destructuring binding is the
+/// completeness guard — a new field fails to compile here until it is
+/// added to the rendering (and the schema version bumped).
+pub fn canonical_config(cfg: &AcceleratorConfig) -> String {
+    let AcceleratorConfig {
+        n_pes,
+        n_pipelines,
+        psum_elements,
+        n_caches,
+        cache_assoc,
+        cache_lines,
+        line_bytes,
+        n_dma_buffers,
+        dma_buffer_bytes,
+        rank,
+        fabric_hz,
+        dram,
+        esram_bank_factor,
+        compute_power_w,
+        cache_bypass_factor,
+        osram_lambda_override,
+        levels,
+        onchip_bytes,
+        luts,
+        flipflops,
+        dsps,
+    } = cfg;
+    format!(
+        "cfg{{pes={n_pes};pipes={n_pipelines};psum={psum_elements};caches={n_caches};\
+         assoc={cache_assoc};lines={cache_lines};lineb={line_bytes};dmabuf={n_dma_buffers};\
+         dmabytes={dma_buffer_bytes};rank={rank};fabric={};{};bankf={esram_bank_factor};\
+         power={};bypass={};lambda={};levels=[{}];onchip={onchip_bytes};luts={luts};\
+         ffs={flipflops};dsps={dsps}}}",
+        f(*fabric_hz),
+        canonical_dram(dram),
+        f(*compute_power_w),
+        opt_usize(*cache_bypass_factor),
+        opt_u32(*osram_lambda_override),
+        format_levels(levels),
+    )
+}
+
+/// Canonical rendering of a [`MemTechnology`]: every field, by name, in
+/// declaration order. Registry names are identifier-like (TOML section
+/// keys), so the raw name is delimiter-safe.
+pub fn canonical_tech(t: &MemTechnology) -> String {
+    let MemTechnology {
+        name,
+        freq_hz,
+        wavelengths,
+        lanes_per_core_cycle,
+        port_width_bits,
+        ports_per_block,
+        block_bits,
+        data_lines,
+        access_latency_cycles,
+        static_pj_per_bit_cycle,
+        switching_pj_per_bit,
+        conversion_pj_per_bit,
+        storage_pj_per_bit,
+        area_um2_per_bit,
+    } = t;
+    format!(
+        "tech{{name={name};freq={};wl={wavelengths};lanes={lanes_per_core_cycle};\
+         portw={port_width_bits};ports={ports_per_block};block={block_bits};\
+         dlines={data_lines};lat={access_latency_cycles};static={};switch={};conv={};\
+         store={};area={}}}",
+        f(*freq_hz),
+        f(*static_pj_per_bit_cycle),
+        f(*switching_pj_per_bit),
+        f(*conversion_pj_per_bit),
+        f(*storage_pj_per_bit),
+        f(*area_um2_per_bit),
+    )
+}
+
+/// The full canonical content key of one evaluation:
+/// `(config, tech, kernel, engine, sample, workload)`.
+///
+/// The sample tag is `exact` unless it can change the result — event
+/// engine at a rate below 1.0 (see [`crate::explore::eval`] module
+/// docs) — so a rate-1.0 event run keys identically to an unsampled
+/// one, regardless of seed, and the analytic engine ignores the sample
+/// entirely.
+pub fn eval_key(
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    kernel: &str,
+    engine: EngineKind,
+    sample: SampleSpec,
+    workload_tag: &str,
+) -> String {
+    let sample_tag = if engine == EngineKind::Event && !sample.is_exact() {
+        format!("sample{{rate={};seed={}}}", f(sample.rate), sample.seed)
+    } else {
+        "sample{exact}".to_string()
+    };
+    format!(
+        "v{CACHE_SCHEMA_VERSION}|{}|{}|kernel={kernel}|engine={}|{sample_tag}|wl={workload_tag}",
+        canonical_config(cfg),
+        canonical_tech(tech),
+        engine.name(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::hierarchy::parse_levels;
+    use crate::mem::registry::tech;
+
+    fn base_key(cfg: &AcceleratorConfig) -> String {
+        eval_key(
+            cfg,
+            &tech("o-sram"),
+            "spmttkrp",
+            EngineKind::Analytic,
+            SampleSpec::exact(),
+            "wl#test",
+        )
+    }
+
+    #[test]
+    fn key_text_is_byte_stable_across_runs() {
+        // Pure function of field values: two independent renderings of
+        // equal inputs must be byte-identical, and the versioned prefix
+        // is pinned so a schema bump cannot happen silently.
+        let cfg = AcceleratorConfig::paper_default();
+        let a = base_key(&cfg);
+        let b = base_key(&cfg.clone());
+        assert_eq!(a, b);
+        assert!(
+            a.starts_with(&format!("v{CACHE_SCHEMA_VERSION}|cfg{{")),
+            "canonical keys must lead with the schema version: {a}"
+        );
+        // no Debug rendering leaks in (struct names would appear)
+        assert!(!a.contains("AcceleratorConfig"), "{a}");
+        assert!(!a.contains("MemTechnology"), "{a}");
+    }
+
+    #[test]
+    fn every_config_field_separates_keys() {
+        // Two configs differing in exactly one field — any field — must
+        // never collide. One mutation per field, including the Option
+        // fields, the DRAM sub-fields and the level stack.
+        let base = AcceleratorConfig::paper_default();
+        let k0 = base_key(&base);
+        let mutations: Vec<Box<dyn Fn(&mut AcceleratorConfig)>> = vec![
+            Box::new(|c| c.n_pes += 1),
+            Box::new(|c| c.n_pipelines += 1),
+            Box::new(|c| c.psum_elements += 1),
+            Box::new(|c| c.n_caches += 1),
+            Box::new(|c| c.cache_assoc += 1),
+            Box::new(|c| c.cache_lines += 1),
+            Box::new(|c| c.line_bytes *= 2),
+            Box::new(|c| c.n_dma_buffers += 1),
+            Box::new(|c| c.dma_buffer_bytes *= 2),
+            Box::new(|c| c.rank += 1),
+            Box::new(|c| c.fabric_hz += 1.0),
+            Box::new(|c| c.dram.peak_bytes_per_s += 1.0),
+            Box::new(|c| c.dram.stream_efficiency += 0.01),
+            Box::new(|c| c.dram.burst_bytes *= 2),
+            Box::new(|c| c.dram.row_hit_ns += 1.0),
+            Box::new(|c| c.dram.row_miss_ns += 1.0),
+            Box::new(|c| c.dram.random_row_hit_rate += 0.01),
+            Box::new(|c| c.dram.random_overlap += 0.5),
+            Box::new(|c| c.dram.energy_pj_per_bit += 0.5),
+            Box::new(|c| c.dram.activate_pj += 1.0),
+            Box::new(|c| c.esram_bank_factor += 1),
+            Box::new(|c| c.compute_power_w += 0.1),
+            Box::new(|c| c.cache_bypass_factor = Some(2)),
+            Box::new(|c| c.osram_lambda_override = Some(8)),
+            Box::new(|c| c.levels = parse_levels("sram:256KiB:8banks").unwrap()),
+            Box::new(|c| c.onchip_bytes += 1),
+            Box::new(|c| c.luts += 1),
+            Box::new(|c| c.flipflops += 1),
+            Box::new(|c| c.dsps += 1),
+        ];
+        let mut seen = vec![k0.clone()];
+        for (i, m) in mutations.iter().enumerate() {
+            let mut c = base.clone();
+            m(&mut c);
+            let k = base_key(&c);
+            assert_ne!(k, k0, "mutation #{i} did not change the key");
+            assert!(!seen.contains(&k), "mutation #{i} aliased another key");
+            seen.push(k);
+        }
+    }
+
+    #[test]
+    fn every_tech_field_separates_keys() {
+        let base = tech("o-sram");
+        let cfg = AcceleratorConfig::paper_default();
+        let key = |t: &MemTechnology| {
+            eval_key(&cfg, t, "spmttkrp", EngineKind::Analytic, SampleSpec::exact(), "wl")
+        };
+        let k0 = key(&base);
+        let mutations: Vec<Box<dyn Fn(&mut MemTechnology)>> = vec![
+            Box::new(|t| t.name.push('x')),
+            Box::new(|t| t.freq_hz += 1.0),
+            Box::new(|t| t.wavelengths += 1),
+            Box::new(|t| t.lanes_per_core_cycle += 1),
+            Box::new(|t| t.port_width_bits += 1),
+            Box::new(|t| t.ports_per_block += 1),
+            Box::new(|t| t.block_bits += 1),
+            Box::new(|t| t.data_lines += 1),
+            Box::new(|t| t.access_latency_cycles += 1),
+            Box::new(|t| t.static_pj_per_bit_cycle += 0.1),
+            Box::new(|t| t.switching_pj_per_bit += 0.1),
+            Box::new(|t| t.conversion_pj_per_bit += 0.1),
+            Box::new(|t| t.storage_pj_per_bit += 0.1),
+            Box::new(|t| t.area_um2_per_bit += 0.1),
+        ];
+        let mut seen = vec![k0.clone()];
+        for (i, m) in mutations.iter().enumerate() {
+            let mut t = base.clone();
+            m(&mut t);
+            let k = key(&t);
+            assert_ne!(k, k0, "tech mutation #{i} did not change the key");
+            assert!(!seen.contains(&k), "tech mutation #{i} aliased another key");
+            seen.push(k);
+        }
+    }
+
+    #[test]
+    fn none_options_cannot_alias_present_values() {
+        let mut with = AcceleratorConfig::paper_default();
+        with.cache_bypass_factor = Some(1);
+        let mut without = AcceleratorConfig::paper_default();
+        without.cache_bypass_factor = None;
+        assert_ne!(base_key(&with), base_key(&without));
+    }
+
+    #[test]
+    fn keys_never_contain_newlines() {
+        // The on-disk store is line-oriented: one record per line, the
+        // key as the final field. Canonical keys must therefore stay on
+        // one line for every representable input.
+        let mut cfg = AcceleratorConfig::paper_default();
+        cfg.levels = parse_levels("sram:256KiB:8banks,local:4KiB:db").unwrap();
+        let k = eval_key(
+            &cfg,
+            &tech("e-sram"),
+            "spttm",
+            EngineKind::Event,
+            SampleSpec::new(0.25, 7).unwrap(),
+            "grid#dims[64, 64, 64]#nnz3000#seed7#remaptrue#fpdeadbeefdeadbeef",
+        );
+        assert!(!k.contains('\n'));
+        assert!(!k.contains('\r'));
+    }
+}

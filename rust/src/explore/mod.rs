@@ -19,6 +19,10 @@
 //!   (memoized [`crate::tensor::csf::ModeView`]s, Eq. 2–3 pricing) behind
 //!   a content-keyed [`eval::EvalCache`] so overlapping candidates
 //!   across searches are computed once;
+//! * [`key`] — the canonical, versioned cache-key serialization
+//!   (every field by name, floats as bit-hex,
+//!   [`key::CACHE_SCHEMA_VERSION`] prefix) that gives cache identity a
+//!   compatibility contract independent of `Debug` formatting;
 //! * [`pareto`] — strict-dominance frontier extraction, scoped per
 //!   kernel;
 //! * [`search`] — the four-phase strategy: cheap analytic screen of the
@@ -42,12 +46,14 @@
 
 pub mod eval;
 pub mod export;
+pub mod key;
 pub mod objective;
 pub mod pareto;
 pub mod search;
 pub mod space;
 
 pub use eval::{candidate_key, EvalCache, Evaluator};
+pub use key::{eval_key, CACHE_SCHEMA_VERSION};
 pub use export::{frontier_json, write_frontier_json};
 pub use objective::{ObjectiveKind, Objectives};
 pub use pareto::{dominates, frontier_indices};
