@@ -1,0 +1,103 @@
+//! Serving-layer latency: the daemon's request-handling path measured
+//! in-process (no pipe noise), pinning the perf contract of
+//! [`photon_mttkrp::serve`]:
+//!
+//! * `cold_simulate` — a fresh daemon answers a never-seen request:
+//!   tensor generation + workload preparation + one analytic simulation;
+//! * `warm_simulate` — the same daemon answers the same request again:
+//!   the O(hash lookup) path, no engine, no tensor work;
+//! * `batched_window16` vs `unbatched_window16` — sixteen cold requests
+//!   over four technologies, handled as one batch window (workload
+//!   prepared once, shared) vs sixteen single-request windows (each
+//!   cold request re-prepares its views).
+//!
+//! Writes `BENCH_serve.json` at the repository root (the CI
+//! `bench-smoke` job uploads it; the `serve-smoke` job exercises the
+//! process-level NDJSON path instead).
+
+mod common;
+
+use photon_mttkrp::serve::{ServeOptions, ServeState};
+use photon_mttkrp::util::bench::Bench;
+
+fn state() -> ServeState {
+    ServeState::new(&ServeOptions::default()).expect("in-memory daemon")
+}
+
+fn sim_line(tech: &str, scale: f64) -> String {
+    format!(
+        "{{\"cmd\": \"simulate\", \"tensor\": \"nell-2\", \"scale\": {scale:e}, \
+         \"tech\": \"{tech}\", \"engine\": \"analytic\"}}"
+    )
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let smoke = std::env::var("PHOTON_BENCH_SMOKE").ok().as_deref() == Some("1");
+    // smoke runs shrink the workload 10x: distinct group name so a smoke
+    // artifact can never be compared against the full trajectory
+    let group = if smoke { "serve_latency_smoke" } else { "serve_latency" };
+    b.group(group);
+    let scale = if smoke { 1e-4 } else { 1e-3 };
+
+    let line = sim_line("o-sram", scale);
+    b.bench("cold_simulate", || {
+        let mut s = state();
+        let (replies, _) = s.handle_batch(std::slice::from_ref(&line));
+        assert!(replies[0].contains("\"cache\": \"miss\""), "{}", replies[0]);
+        replies
+    });
+
+    let mut warm = state();
+    let _ = warm.handle_batch(std::slice::from_ref(&line));
+    b.bench("warm_simulate", || {
+        let (replies, _) = warm.handle_batch(std::slice::from_ref(&line));
+        assert!(replies[0].contains("\"cache\": \"hit\""), "{}", replies[0]);
+        replies
+    });
+
+    let window: Vec<String> = (0..16)
+        .map(|i| sim_line(["e-sram", "o-sram", "e-uram", "o-sram-imc"][i % 4], scale))
+        .collect();
+    b.bench("batched_window16", || {
+        let mut s = state();
+        let (replies, _) = s.handle_batch(&window);
+        assert_eq!(replies.len(), 16);
+        replies
+    });
+    b.bench("unbatched_window16", || {
+        let mut s = state();
+        let mut n = 0;
+        for l in &window {
+            n += s.handle_batch(std::slice::from_ref(l)).0.len();
+        }
+        assert_eq!(n, 16);
+        n
+    });
+
+    let p50 = |name: &str| {
+        b.results()
+            .iter()
+            .find(|m| m.name == format!("{group}/{name}"))
+            .map(|m| m.median.as_secs_f64())
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "## serve: cold p50 {:.3e}s, warm p50 {:.3e}s ({:.0}x cache speedup); \
+         16-request window {:.3e}s batched vs {:.3e}s unbatched",
+        p50("cold_simulate"),
+        p50("warm_simulate"),
+        p50("cold_simulate") / p50("warm_simulate"),
+        p50("batched_window16"),
+        p50("unbatched_window16"),
+    );
+
+    println!("\n{}", b.summary_table().render_ascii());
+    // perf trajectory at the repository root, like BENCH_explore.json
+    // (CARGO_MANIFEST_DIR is rust/, one level below it)
+    let json = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    match b.write_json(&json) {
+        Ok(()) => eprintln!("wrote {}", json.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", json.display()),
+    }
+}

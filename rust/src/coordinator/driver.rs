@@ -232,16 +232,41 @@ pub fn compare_technologies_with_budget(
     cs.pop().expect("one comparison per requested engine")
 }
 
+/// One fully prepared workload: the (optionally §IV-A remapped) tensor
+/// plus its memoized per-mode [`ModeView`]s. This is the expensive
+/// O(nnz) part of every simulation — preparing it once and fanning many
+/// (technology × engine × request) runs across it is the amortization
+/// trick [`compare_technologies_on_engines`] uses within one call and
+/// the serving layer ([`crate::serve`]) uses across a whole batch
+/// window of requests.
+pub struct PreparedWorkload {
+    /// The tensor the engines see (already remapped when `remap`).
+    pub tensor: SparseTensor,
+    /// `(mode, view)` for every output mode, built exactly once.
+    pub views: Vec<(usize, ModeView)>,
+    /// Whether the §IV-A mapping was applied (part of workload identity).
+    pub remap: bool,
+}
+
+impl PreparedWorkload {
+    /// Remap (when asked) and build every per-mode view.
+    pub fn new(tensor: &SparseTensor, remap: bool) -> Self {
+        let t = if remap { apply_memory_mapping(tensor) } else { tensor.clone() };
+        let views = (0..t.n_modes()).map(|m| (m, ModeView::build(&t, m))).collect();
+        PreparedWorkload { tensor: t, views, remap }
+    }
+}
+
 /// The fully-knobbed comparison primitive every `compare_*` front-end
 /// reduces to: run every technology in `techs` on **each** listed
 /// engine, returning one [`TechComparison`] per engine in order. The
 /// §IV-A memory mapping is applied once and the O(nnz) per-mode
-/// [`ModeView`] builds are **memoized**: each (tensor, mode) view is
-/// built exactly once and shared across every technology × engine run,
-/// instead of being rebuilt `|techs| × |engines| × |modes|` times (the
-/// CLI's `--engine event` delta printing passes
-/// `[Event, Analytic]` here, so the analytic bound reuses the event
-/// pass's workload preparation).
+/// [`ModeView`] builds are **memoized** through a [`PreparedWorkload`]:
+/// each (tensor, mode) view is built exactly once and shared across
+/// every technology × engine run, instead of being rebuilt
+/// `|techs| × |engines| × |modes|` times (the CLI's `--engine event`
+/// delta printing passes `[Event, Analytic]` here, so the analytic
+/// bound reuses the event pass's workload preparation).
 pub fn compare_technologies_on_engines(
     tensor: &SparseTensor,
     cfg: &AcceleratorConfig,
@@ -260,11 +285,9 @@ pub fn compare_technologies_on_engines(
         assert!(!seen.contains(&t.name.as_str()), "technology `{}` listed twice", t.name);
         seen.push(&t.name);
     }
-    let t = apply_memory_mapping(tensor);
+    let w = PreparedWorkload::new(tensor, true);
     let em = EnergyModel::new(cfg);
     let k = kernel.kernel();
-    let views: Vec<(usize, ModeView)> =
-        (0..t.n_modes()).map(|m| (m, ModeView::build(&t, m))).collect();
     engines
         .iter()
         .map(|engine| {
@@ -272,7 +295,7 @@ pub fn compare_technologies_on_engines(
                 .iter()
                 .map(|tech| {
                     let report = engine.simulate_kernel_all_modes_with_views_budget(
-                        k, &t, &views, cfg, tech, budget,
+                        k, &w.tensor, &w.views, cfg, tech, budget,
                     );
                     let energy = em.run_energy(&report);
                     TechRun { report, energy }

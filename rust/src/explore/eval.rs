@@ -33,29 +33,48 @@
 //! reuse rate-1.0 entries from a warm cache for free.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::energy::model::EnergyModel;
 use crate::explore::objective::Objectives;
 use crate::explore::space::Candidate;
+use crate::explore::store::EvalStore;
 use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
 
 /// Memoized objective vectors, shareable across searches (and across the
 /// worker threads of one search). Interior-mutable so a `&EvalCache` can
-/// be handed to every evaluation job.
+/// be handed to every evaluation job. Optionally backed by an on-disk
+/// [`EvalStore`]: entries load at open and every miss is appended, so
+/// the cache survives the process (see [`crate::explore::store`]).
 #[derive(Default)]
 pub struct EvalCache {
     map: Mutex<HashMap<String, Objectives>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    store: Option<EvalStore>,
 }
 
 impl EvalCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Open (or create) the persistent store under `dir`, replay every
+    /// valid record into memory, and return a cache that appends each
+    /// future miss back to disk. Later duplicates win during replay —
+    /// harmless, because duplicate keys hold bit-identical vectors by
+    /// the cache contract.
+    pub fn with_store(dir: &Path) -> std::io::Result<EvalCache> {
+        let (store, entries) = EvalStore::open(dir)?;
+        Ok(EvalCache {
+            map: Mutex::new(entries.into_iter().collect()),
+            store: Some(store),
+            ..Default::default()
+        })
     }
 
     /// Distinct evaluations currently memoized.
@@ -77,6 +96,27 @@ impl EvalCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Records loaded from disk at open (0 for an in-memory cache).
+    pub fn loaded(&self) -> u64 {
+        self.store.as_ref().map_or(0, |s| s.loaded())
+    }
+
+    /// Records persisted to disk so far (0 for an in-memory cache).
+    pub fn appended(&self) -> u64 {
+        self.store.as_ref().map_or(0, |s| s.appended())
+    }
+
+    /// The backing log file, when this cache is persistent.
+    pub fn store_path(&self) -> Option<&Path> {
+        self.store.as_ref().map(|s| s.path())
+    }
+
+    /// Membership probe that never touches the hit/miss counters — used
+    /// by the serving layer to plan a batch without distorting stats.
+    pub fn peek(&self, key: &str) -> Option<Objectives> {
+        self.map.lock().unwrap().get(key).copied()
+    }
+
     /// Return the memoized vector for `key`, or compute, memoize and
     /// return it. The lock is **not** held across `compute` (a simulation
     /// may take milliseconds), so two workers racing on the same fresh
@@ -84,14 +124,34 @@ impl EvalCache {
     /// the cache's correctness contract), the counters are merely
     /// approximate under such races, and last-insert wins harmlessly.
     pub fn get_or_compute(&self, key: &str, compute: impl FnOnce() -> Objectives) -> Objectives {
+        self.get_or_compute_traced(key, compute).0
+    }
+
+    /// [`get_or_compute`](Self::get_or_compute), also reporting whether
+    /// the lookup was a hit. A miss on a persistent cache is appended
+    /// (fsync'd) to the store; a disk error degrades to in-memory-only
+    /// with a warning — it must never fail the evaluation itself.
+    pub fn get_or_compute_traced(
+        &self,
+        key: &str,
+        compute: impl FnOnce() -> Objectives,
+    ) -> (Objectives, bool) {
         if let Some(v) = self.map.lock().unwrap().get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return *v;
+            return (*v, true);
         }
         let v = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.map.lock().unwrap().insert(key.to_string(), v);
-        v
+        if let Some(store) = &self.store {
+            if let Err(e) = store.append(key, &v) {
+                eprintln!(
+                    "warning: failed to persist cache entry to {}: {e}",
+                    store.path().display()
+                );
+            }
+        }
+        (v, false)
     }
 }
 
@@ -166,8 +226,19 @@ impl Evaluator<'_> {
 
     /// Evaluate `cand` on `engine`, through `cache`.
     pub fn evaluate(&self, cand: &Candidate, engine: EngineKind, cache: &EvalCache) -> Objectives {
+        self.evaluate_traced(cand, engine, cache).0
+    }
+
+    /// [`evaluate`](Self::evaluate), also reporting whether the cache
+    /// answered (`true` = hit, neither engine ran).
+    pub fn evaluate_traced(
+        &self,
+        cand: &Candidate,
+        engine: EngineKind,
+        cache: &EvalCache,
+    ) -> (Objectives, bool) {
         let key = candidate_key(cand, engine, &self.workload_tag, self.budget.sample);
-        cache.get_or_compute(&key, || {
+        cache.get_or_compute_traced(&key, || {
             let report = engine.simulate_kernel_all_modes_with_views_budget(
                 cand.kernel.kernel(),
                 self.tensor,
@@ -218,6 +289,28 @@ mod tests {
         let b = cache.get_or_compute("k", || panic!("must be a hit"));
         assert_eq!(a, b);
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn persistent_cache_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("photon_evalcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let o = Objectives { runtime_s: 0.125, energy_j: 7.0, area_mm2: 1.5 };
+        {
+            let cache = EvalCache::with_store(&dir).unwrap();
+            assert_eq!((cache.loaded(), cache.appended()), (0, 0));
+            let _ = cache.get_or_compute("pk", || o);
+            assert_eq!(cache.appended(), 1);
+        }
+        // a fresh process sees the entry: hit, bit-identical, no compute
+        let cache = EvalCache::with_store(&dir).unwrap();
+        assert_eq!(cache.loaded(), 1);
+        let (got, hit) = cache.get_or_compute_traced("pk", || panic!("must come from disk"));
+        assert!(hit);
+        assert_eq!(got.runtime_s.to_bits(), o.runtime_s.to_bits());
+        assert_eq!(got.energy_j.to_bits(), o.energy_j.to_bits());
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

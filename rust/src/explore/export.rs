@@ -14,6 +14,7 @@
 //!   "invalid": 0,
 //!   "filtered": 0,
 //!   "sample": {"rate": 2.5e-1, "seed": 0},
+//!   "cache": {"hits": 0, "misses": 12, "loaded": 0, "appended": 0},
 //!   "frontier": [
 //!     { "rank": 0, "configuration": "n_pes=4,cache_lines=4096",
 //!       "tech": "o-sram", "kernel": "spmttkrp",
@@ -48,19 +49,9 @@
 use std::io;
 use std::path::Path;
 
-use crate::explore::objective::Objectives;
 use crate::explore::search::ExploreResult;
+use crate::report::export::objectives_json;
 use crate::util::bench::json_escape;
-
-fn objectives_json(o: &Objectives) -> String {
-    format!(
-        "{{\"runtime_s\": {:e}, \"energy_j\": {:e}, \"edp\": {:e}, \"area_mm2\": {:e}}}",
-        o.runtime_s,
-        o.energy_j,
-        o.edp(),
-        o.area_mm2
-    )
-}
 
 /// Serialize the search result (see the module docs for the shape).
 pub fn frontier_json(result: &ExploreResult) -> String {
@@ -68,6 +59,7 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         "{{\n  \"objective\": \"{}\",\n  \"tensor\": \"{}\",\n  \"nnz\": {},\n  \
          \"candidates_screened\": {},\n  \"invalid\": {},\n  \"filtered\": {},\n  \
          \"sample\": {{\"rate\": {:e}, \"seed\": {}}},\n  \
+         \"cache\": {{\"hits\": {}, \"misses\": {}, \"loaded\": {}, \"appended\": {}}},\n  \
          \"frontier\": [",
         json_escape(result.objective.name()),
         json_escape(&result.tensor),
@@ -77,6 +69,10 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         result.n_filtered,
         result.sample.rate,
         result.sample.seed,
+        result.cache_hits,
+        result.cache_misses,
+        result.cache_loaded,
+        result.cache_appended,
     );
     for (i, p) in result.frontier.iter().enumerate() {
         if i > 0 {
@@ -167,6 +163,12 @@ mod tests {
         assert!(json.contains("\"event_dominated\": "), "{json}");
         // the sampling spec and the per-member sampled view are exported
         assert!(json.contains("\"sample\": {\"rate\": "), "{json}");
+        // cache effectiveness counters (cold in-memory run: no hits,
+        // one miss per evaluation, nothing loaded or persisted)
+        assert!(json.contains(&format!(
+            "\"cache\": {{\"hits\": {}, \"misses\": {}, \"loaded\": 0, \"appended\": 0}}",
+            r.cache_hits, r.cache_misses
+        )), "{json}");
         assert!(json.contains("\"event_sampled\": {\"runtime_s\": "), "{json}");
         assert!(json.contains("\"sampled_rank\": "), "{json}");
         // one frontier object per member, ranks in output order

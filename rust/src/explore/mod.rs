@@ -23,6 +23,9 @@
 //!   (every field by name, floats as bit-hex,
 //!   [`key::CACHE_SCHEMA_VERSION`] prefix) that gives cache identity a
 //!   compatibility contract independent of `Debug` formatting;
+//! * [`store`] — append-only on-disk persistence for the cache
+//!   (checksummed records, fsync'd appends, truncate-at-first-bad-record
+//!   recovery) so warm traffic survives the process;
 //! * [`pareto`] — strict-dominance frontier extraction, scoped per
 //!   kernel;
 //! * [`search`] — the four-phase strategy: cheap analytic screen of the
@@ -51,9 +54,11 @@ pub mod objective;
 pub mod pareto;
 pub mod search;
 pub mod space;
+pub mod store;
 
 pub use eval::{candidate_key, EvalCache, Evaluator};
 pub use key::{eval_key, CACHE_SCHEMA_VERSION};
+pub use store::EvalStore;
 pub use export::{frontier_json, write_frontier_json};
 pub use objective::{ObjectiveKind, Objectives};
 pub use pareto::{dominates, frontier_indices};

@@ -250,6 +250,11 @@ pub struct ExploreResult {
     /// Evaluation-cache traffic attributable to this search.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Records the persistent store replayed at open (0 when the cache
+    /// is in-memory only; counts the whole store, not just this search).
+    pub cache_loaded: u64,
+    /// Records this search persisted to the store (0 when in-memory).
+    pub cache_appended: u64,
 }
 
 impl ExploreResult {
@@ -286,7 +291,7 @@ pub fn run_explore_with_cache(
         ));
     }
     let candidates = enumerated.candidates;
-    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let (hits0, misses0, appended0) = (cache.hits(), cache.misses(), cache.appended());
 
     // one workload, shared by every candidate × engine evaluation
     let tensor = spec.tensor.clone().scaled(spec.scale).generate(spec.seed);
@@ -412,6 +417,8 @@ pub fn run_explore_with_cache(
         deltas,
         cache_hits: cache.hits() - hits0,
         cache_misses: cache.misses() - misses0,
+        cache_loaded: cache.loaded(),
+        cache_appended: cache.appended() - appended0,
     })
 }
 

@@ -1,0 +1,326 @@
+//! Append-only on-disk persistence for the evaluation cache.
+//!
+//! One store = one line-oriented log file,
+//! `<dir>/evals-v{CACHE_SCHEMA_VERSION}.log`, living under
+//! `~/.photon-mttkrp/cache/` by default or any `--cache-dir`. Each
+//! record is a single line:
+//!
+//! ```text
+//! <fnv64:016x> <runtime_bits:016x> <energy_bits:016x> <area_bits:016x> <canonical key>
+//! ```
+//!
+//! The three objective f64s are stored as their IEEE-754 bits, so a
+//! loaded entry is bit-identical to the computed one — the same
+//! contract the in-memory cache already honours. The leading FNV-1a
+//! checksum covers the rest of the line, so a torn write (power loss
+//! mid-append) or any editor mangling is detected per record.
+//!
+//! **Recovery contract:** on open, records are replayed in order until
+//! the first invalid line (bad UTF-8, wrong field count, unparseable
+//! hex, checksum mismatch, or a final line with no terminating
+//! newline); the file is then physically truncated back to the last
+//! valid record, keeping the prefix. Corruption costs the suffix, never
+//! the store. Duplicate keys can appear (two processes racing on the
+//! same miss append twice); replay order makes the last one win, and
+//! since entries are bit-identical by the cache contract this is
+//! harmless.
+//!
+//! **Versioning:** the schema version is baked into the *filename*, so
+//! a [`CACHE_SCHEMA_VERSION`] bump orphans old files (they are simply
+//! never opened again) instead of risking a misread. Appends are
+//! `fsync`'d (`sync_data`) one record at a time: an evaluation costs
+//! milliseconds to seconds, so one synchronous disk flush per miss is
+//! noise, and it guarantees a hit can never be served from a record
+//! that would not survive a crash.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::explore::key::CACHE_SCHEMA_VERSION;
+use crate::explore::objective::Objectives;
+
+/// FNV-1a over a byte slice — the same hash family the workload tag
+/// uses, applied per record as a corruption check.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+/// Serialize one record, terminating newline included.
+fn encode_record(key: &str, o: &Objectives) -> String {
+    let payload = format!(
+        "{:016x} {:016x} {:016x} {key}",
+        o.runtime_s.to_bits(),
+        o.energy_j.to_bits(),
+        o.area_mm2.to_bits()
+    );
+    format!("{:016x} {payload}\n", fnv64(payload.as_bytes()))
+}
+
+/// Parse and verify one record line (no trailing newline). `None` means
+/// the line — and by the recovery contract everything after it — is
+/// invalid.
+fn parse_record(line: &str) -> Option<(String, Objectives)> {
+    let (checksum_hex, payload) = line.split_once(' ')?;
+    let checksum = u64::from_str_radix(checksum_hex, 16).ok()?;
+    if checksum_hex.len() != 16 || checksum != fnv64(payload.as_bytes()) {
+        return None;
+    }
+    let mut it = payload.splitn(4, ' ');
+    let runtime = u64::from_str_radix(it.next()?, 16).ok()?;
+    let energy = u64::from_str_radix(it.next()?, 16).ok()?;
+    let area = u64::from_str_radix(it.next()?, 16).ok()?;
+    let key = it.next()?;
+    Some((
+        key.to_string(),
+        Objectives {
+            runtime_s: f64::from_bits(runtime),
+            energy_j: f64::from_bits(energy),
+            area_mm2: f64::from_bits(area),
+        },
+    ))
+}
+
+/// The open append-only store: a validated log file plus its append
+/// handle. Interior-mutable (`&EvalStore` appends), like the cache it
+/// backs.
+pub struct EvalStore {
+    path: PathBuf,
+    writer: Mutex<File>,
+    loaded: u64,
+    recovered_at: Option<u64>,
+    appended: AtomicU64,
+}
+
+impl EvalStore {
+    /// The default persistent location: `~/.photon-mttkrp/cache/`
+    /// (falling back to the working directory when `$HOME` is unset).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HOME")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."))
+            .join(".photon-mttkrp")
+            .join("cache")
+    }
+
+    /// Open (creating if needed) the store under `dir`, replay every
+    /// valid record, truncate off any corrupt suffix, and return the
+    /// store plus the loaded `(key, objectives)` entries in file order.
+    pub fn open(dir: &Path) -> std::io::Result<(EvalStore, Vec<(String, Objectives)>)> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("evals-v{CACHE_SCHEMA_VERSION}.log"));
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        let mut recovered_at = None;
+        while offset < bytes.len() {
+            match bytes[offset..].iter().position(|&b| b == b'\n') {
+                None => {
+                    // unterminated final line: a torn append
+                    recovered_at = Some(offset as u64);
+                    break;
+                }
+                Some(rel) => {
+                    let line = &bytes[offset..offset + rel];
+                    match std::str::from_utf8(line).ok().and_then(parse_record) {
+                        Some(entry) => {
+                            entries.push(entry);
+                            offset += rel + 1;
+                        }
+                        None => {
+                            recovered_at = Some(offset as u64);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(at) = recovered_at {
+            file.set_len(at)?;
+            file.sync_all()?;
+        }
+        drop(file);
+
+        let writer = OpenOptions::new().append(true).open(&path)?;
+        let loaded = entries.len() as u64;
+        Ok((
+            EvalStore {
+                path,
+                writer: Mutex::new(writer),
+                loaded,
+                recovered_at,
+                appended: AtomicU64::new(0),
+            },
+            entries,
+        ))
+    }
+
+    /// The log file this store reads and appends.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Valid records replayed at open.
+    pub fn loaded(&self) -> u64 {
+        self.loaded
+    }
+
+    /// Records appended (and fsync'd) since open.
+    pub fn appended(&self) -> u64 {
+        self.appended.load(Ordering::Relaxed)
+    }
+
+    /// Whether open found corruption and truncated the file (the byte
+    /// offset it truncated to, when it did).
+    pub fn recovered_at(&self) -> Option<u64> {
+        self.recovered_at
+    }
+
+    /// Append one record and fsync it. Keys are one line by the
+    /// canonical-key contract; a key that somehow contains a newline is
+    /// unrepresentable and is kept in-memory only.
+    pub fn append(&self, key: &str, o: &Objectives) -> std::io::Result<()> {
+        if key.contains('\n') || key.contains('\r') {
+            return Ok(());
+        }
+        let record = encode_record(key, o);
+        let mut writer = self.writer.lock().unwrap();
+        writer.write_all(record.as_bytes())?;
+        writer.sync_data()?;
+        self.appended.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("photon_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn obj(x: f64) -> Objectives {
+        Objectives { runtime_s: x, energy_j: 2.0 * x, area_mm2: 3.0 * x }
+    }
+
+    #[test]
+    fn records_round_trip_bit_identically() {
+        let o = Objectives { runtime_s: 1.0 / 3.0, energy_j: f64::MIN_POSITIVE, area_mm2: 0.0 };
+        let rec = encode_record("v1|cfg{x}|wl=a b c", &o);
+        let (key, got) = parse_record(rec.trim_end_matches('\n')).expect("valid record");
+        assert_eq!(key, "v1|cfg{x}|wl=a b c");
+        assert_eq!(got.runtime_s.to_bits(), o.runtime_s.to_bits());
+        assert_eq!(got.energy_j.to_bits(), o.energy_j.to_bits());
+        assert_eq!(got.area_mm2.to_bits(), o.area_mm2.to_bits());
+    }
+
+    #[test]
+    fn corrupt_records_are_rejected() {
+        let rec = encode_record("k", &obj(1.0));
+        let line = rec.trim_end_matches('\n');
+        // flip one payload byte: checksum must catch it
+        let mut mangled = line.to_string().into_bytes();
+        let last = mangled.len() - 1;
+        mangled[last] ^= 1;
+        assert!(parse_record(std::str::from_utf8(&mangled).unwrap()).is_none());
+        assert!(parse_record("").is_none());
+        assert!(parse_record("not a record").is_none());
+    }
+
+    #[test]
+    fn store_persists_across_reopens() {
+        let dir = tmp_dir("reopen");
+        {
+            let (store, entries) = EvalStore::open(&dir).unwrap();
+            assert!(entries.is_empty());
+            assert_eq!(store.loaded(), 0);
+            store.append("ka", &obj(1.0)).unwrap();
+            store.append("kb", &obj(2.0)).unwrap();
+            assert_eq!(store.appended(), 2);
+        }
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 2);
+        assert_eq!(store.recovered_at(), None);
+        assert_eq!(entries[0].0, "ka");
+        assert_eq!(entries[1].0, "kb");
+        assert_eq!(entries[1].1.runtime_s.to_bits(), 2.0f64.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_final_record_recovers_the_prefix() {
+        let dir = tmp_dir("torn");
+        let path = {
+            let (store, _) = EvalStore::open(&dir).unwrap();
+            store.append("ka", &obj(1.0)).unwrap();
+            store.append("kb", &obj(2.0)).unwrap();
+            store.append("kc", &obj(3.0)).unwrap();
+            store.path().to_path_buf()
+        };
+        // tear the last record mid-line (simulated power loss)
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 2, "the valid prefix survives");
+        assert!(store.recovered_at().is_some());
+        assert_eq!(entries.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(), ["ka", "kb"]);
+        // the file was physically truncated: appends land cleanly after it
+        store.append("kd", &obj(4.0)).unwrap();
+        drop(store);
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 3);
+        assert_eq!(store.recovered_at(), None);
+        assert_eq!(entries[2].0, "kd");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_prefix_empties_the_store_but_keeps_it_usable() {
+        let dir = tmp_dir("garbage");
+        let path = {
+            let (store, _) = EvalStore::open(&dir).unwrap();
+            store.append("ka", &obj(1.0)).unwrap();
+            store.path().to_path_buf()
+        };
+        // stomp the front of the file, including invalid UTF-8
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = 0xFF;
+        bytes[1] = b'!';
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 0, "a corrupt first record keeps nothing");
+        assert_eq!(store.recovered_at(), Some(0));
+        assert!(entries.is_empty());
+        store.append("kb", &obj(2.0)).unwrap();
+        drop(store);
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 1);
+        assert_eq!(entries[0].0, "kb");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_version_names_the_file() {
+        let dir = tmp_dir("version");
+        let (store, _) = EvalStore::open(&dir).unwrap();
+        let name = store.path().file_name().unwrap().to_string_lossy().into_owned();
+        assert_eq!(name, format!("evals-v{CACHE_SCHEMA_VERSION}.log"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -123,8 +123,18 @@
 //! flip, exact or sampled, is surfaced as an
 //! [`explore::ExploreDelta`], never silently dropped. Evaluations are
 //! memoized in a content-keyed [`explore::EvalCache`] shared across
-//! searches. Front-ends: `photon-mttkrp explore`, the `design_space`
+//! searches — optionally persistent on disk ([`explore::store`],
+//! `--cache-dir`), so a warm re-run answers without simulating.
+//! Front-ends: `photon-mttkrp explore`, the `design_space`
 //! example, and the frontier table `reproduce` prints.
+//!
+//! ## The serving layer
+//!
+//! [`serve`] turns the evaluator into a long-lived daemon
+//! (`photon-mttkrp serve`): newline-delimited JSON requests on stdin or
+//! a Unix socket, answered in order, with batch windows that share
+//! workload preparation and a persistent cache that makes warm traffic
+//! O(hash lookup) — byte-identical `"result"` payloads, cold or warm.
 //!
 //! ## The sweep engine and host parallelism
 //!
@@ -168,6 +178,7 @@ pub mod mttkrp;
 pub mod pe;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod util;

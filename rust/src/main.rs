@@ -7,10 +7,12 @@
 //! photon-mttkrp simulate --tensor nell-2 [--scale S] [--seed N]
 //!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
 //!     [--kernel spmttkrp|spttm|spmm] [--levels SPEC] [--threads T]
-//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--config FILE]
+//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--json]
+//!     [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
-//!     single technology, per technology for both/all)
+//!     single technology, per technology for both/all); --json emits
+//!     the machine-readable comparison instead of the tables
 //! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
 //!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T]
 //!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--config FILE]
@@ -19,11 +21,20 @@
 //!     [--kernel K]... [--axes KNOB=V1,V2,...]... [--budget-mm2 X]
 //!     [--exclude-wafer-scale] [--objective runtime|energy|edp|area]
 //!     [--top N] [--threads T] [--chunk-nnz N] [--sample-rate R]
-//!     [--sample-seed N] [--json FILE] [--config FILE]
+//!     [--sample-seed N] [--json FILE] [--cache-dir DIR] [--config FILE]
 //!     Pareto-frontier search over {config knobs x tech x kernel}:
 //!     analytic screen of the full grid, sampled event-engine
 //!     confirmation of the whole grid, exact event pass over the
-//!     frontier, any rank flip reported as a delta line
+//!     frontier, any rank flip reported as a delta line; --cache-dir
+//!     persists every evaluation, so a warm re-run answers from disk
+//!     with a bit-identical frontier
+//! photon-mttkrp serve [--socket PATH] [--cache-dir DIR] [--threads T]
+//!     [--batch N]
+//!     long-lived NDJSON evaluation daemon (design-space-as-a-service):
+//!     simulate/sweep/explore requests on stdin or a Unix socket,
+//!     answered in order; batch windows share workload preparation,
+//!     and warm requests are answered from the (optionally persistent)
+//!     cache without touching either engine
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
 //!     + the explore frontier table + the hierarchy table
@@ -64,13 +75,16 @@ use photon_mttkrp::coordinator::driver::{
     TechComparison,
 };
 use photon_mttkrp::explore::{
-    self, frontier_table, run_explore, Axis, DesignSpace, ExploreSpec, ObjectiveKind,
+    self, frontier_table, run_explore, run_explore_with_cache, Axis, DesignSpace, EvalCache,
+    ExploreSpec, ObjectiveKind,
 };
 use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry;
 use photon_mttkrp::mem::tech::MemTechnology;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
+use photon_mttkrp::report::export::comparison_json;
 use photon_mttkrp::report::paper;
+use photon_mttkrp::serve::ServeOptions;
 use photon_mttkrp::runtime::client::Runtime;
 use photon_mttkrp::sim::sweep::{self, SweepSpec};
 use photon_mttkrp::sim::{EngineKind, SampleSpec, SimBudget};
@@ -127,6 +141,7 @@ fn cli() -> Command {
                     Some("1.0"),
                 )
                 .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
+                .flag("json", 'j', "emit the comparison as JSON instead of tables")
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
@@ -222,7 +237,31 @@ fn cli() -> Command {
                 )
                 .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
                 .opt("json", "FILE", "also write the frontier as JSON", None)
+                .opt(
+                    "cache-dir",
+                    "DIR",
+                    "persistent evaluation cache: load it before searching, append every miss",
+                    None,
+                )
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
+        )
+        .subcommand(
+            Command::new("serve", "long-lived NDJSON evaluation daemon")
+                .flag("stdin", 'i', "serve one request stream on stdin/stdout (the default)")
+                .opt(
+                    "socket",
+                    "PATH",
+                    "serve Unix-socket connections at PATH instead of stdin",
+                    None,
+                )
+                .opt(
+                    "cache-dir",
+                    "DIR",
+                    "persistent evaluation cache directory (default: in-memory)",
+                    None,
+                )
+                .opt("threads", "T", "OS threads for cold evaluations (0 = all cores)", Some("0"))
+                .opt("batch", "N", "requests per batch window", Some("16")),
         )
         .subcommand(
             Command::new("reproduce", "regenerate every paper table and figure")
@@ -387,6 +426,31 @@ fn run() -> Result<(), String> {
             let cfg = cfg_base.scaled(scale);
             let tensor = preset(ft).scaled(scale).generate(seed);
             eprintln!("generated {} ({} nnz), kernel {}", tensor.name, tensor.nnz(), kernel);
+            if p.flag("json") {
+                if p.get("mode").is_some() {
+                    return Err(
+                        "--json emits the whole comparison; drop --mode (its per-mode \
+                         reports are inside the JSON already)"
+                            .into(),
+                    );
+                }
+                let techs = match tech_arg {
+                    "both" => paper_pair(),
+                    "all" => registry::all(),
+                    t => vec![registry::resolve(t)?],
+                };
+                let mut cs = compare_technologies_on_engines(
+                    &tensor,
+                    &cfg,
+                    &techs,
+                    &[engine],
+                    kernel,
+                    budget,
+                );
+                let c = cs.pop().expect("one comparison per engine");
+                println!("{}", comparison_json(&c, engine.name()));
+                return Ok(());
+            }
             // With --engine event, every variant also prints the
             // analytic-vs-event delta (the roofline error bound), derived
             // from the event comparison already in hand plus one analytic
@@ -646,7 +710,19 @@ fn run() -> Result<(), String> {
                 n_threads,
             );
             let t0 = std::time::Instant::now();
-            let result = run_explore(&spec)?;
+            let result = match p.get("cache-dir") {
+                Some(dir) => {
+                    let cache = EvalCache::with_store(std::path::Path::new(dir))
+                        .map_err(|e| format!("--cache-dir {dir}: {e}"))?;
+                    eprintln!(
+                        "loaded {} cached evaluations from {}",
+                        cache.loaded(),
+                        cache.store_path().expect("persistent cache has a path").display(),
+                    );
+                    run_explore_with_cache(&spec, &cache)?
+                }
+                None => run_explore(&spec)?,
+            };
             println!("{}", frontier_table(&result, top).render_ascii());
             if result.deltas.is_empty() {
                 println!(
@@ -661,7 +737,8 @@ fn run() -> Result<(), String> {
             }
             eprintln!(
                 "screened {} candidates ({} invalid, {} constraint-filtered) in {:.2}s on \
-                 {} threads; {} frontier members, cache {} miss / {} hit",
+                 {} threads; {} frontier members, cache {} miss / {} hit \
+                 ({} loaded, {} appended)",
                 result.candidates.len(),
                 result.n_invalid,
                 result.n_filtered,
@@ -669,11 +746,38 @@ fn run() -> Result<(), String> {
                 n_threads,
                 result.cache_misses,
                 result.cache_hits,
+                result.cache_loaded,
+                result.cache_appended,
             );
             if let Some(path) = p.get("json") {
                 explore::write_frontier_json(&result, std::path::Path::new(path))
                     .map_err(|e| format!("--json {path}: {e}"))?;
                 eprintln!("wrote {path}");
+            }
+        }
+        "serve" => {
+            let opts = ServeOptions {
+                threads: p.get_usize("threads").map_err(|e| e.to_string())?,
+                batch: p.get_usize("batch").map_err(|e| e.to_string())?,
+                cache_dir: p.get("cache-dir").map(std::path::PathBuf::from),
+            };
+            if opts.batch == 0 {
+                return Err("--batch must be positive".into());
+            }
+            match p.get("socket") {
+                Some(path) => {
+                    if p.flag("stdin") {
+                        return Err("--stdin and --socket are mutually exclusive".into());
+                    }
+                    #[cfg(unix)]
+                    photon_mttkrp::serve::run_socket(&opts, std::path::Path::new(path))?;
+                    #[cfg(not(unix))]
+                    return Err(format!(
+                        "--socket {path}: Unix sockets are unavailable on this platform; \
+                         use --stdin"
+                    ));
+                }
+                None => photon_mttkrp::serve::run_stdin(&opts)?,
             }
         }
         "reproduce" => {

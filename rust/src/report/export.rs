@@ -1,0 +1,160 @@
+//! Machine-readable report serialization — the *one* JSON writing path
+//! shared by `photon-mttkrp simulate --json`, the serve daemon's
+//! responses and the explore frontier export, so the formats cannot
+//! drift apart.
+//!
+//! Conventions (same as [`crate::explore::export`]):
+//! * every float is written with `{:e}` — round-trip lossless;
+//! * strings go through [`json_escape`];
+//! * writers emit pretty (multi-line) JSON; the serving layer flattens
+//!   records to one line with [`compact`] because its protocol is
+//!   newline-delimited.
+
+use crate::coordinator::driver::TechComparison;
+use crate::energy::model::EnergyBreakdown;
+use crate::explore::objective::Objectives;
+use crate::sim::result::{ModeReport, SimReport};
+use crate::util::bench::json_escape;
+
+/// One objective vector (runtime, energy, derived EDP, area).
+pub fn objectives_json(o: &Objectives) -> String {
+    format!(
+        "{{\"runtime_s\": {:e}, \"energy_j\": {:e}, \"edp\": {:e}, \"area_mm2\": {:e}}}",
+        o.runtime_s,
+        o.energy_j,
+        o.edp(),
+        o.area_mm2
+    )
+}
+
+/// One per-mode report: the timing/traffic summary the human tables
+/// print, machine-readable.
+pub fn mode_report_json(m: &ModeReport) -> String {
+    format!(
+        "{{\"mode\": {}, \"nnz\": {}, \"runtime_s\": {:e}, \"runtime_cycles\": {:e}, \
+         \"hit_rate\": {:e}, \"bottleneck\": \"{}\", \"stall_stderr_cycles\": {:e}, \
+         \"sampled_frac\": {:e}, \"dram_bytes\": {}, \"onchip_words\": {}}}",
+        m.mode,
+        m.total_nnz(),
+        m.runtime_s(),
+        m.runtime_cycles(),
+        m.hit_rate(),
+        json_escape(m.bottleneck().name()),
+        m.stall_stderr_cycles(),
+        m.sampled_frac(),
+        m.total_dram_bytes(),
+        m.total_onchip_words(),
+    )
+}
+
+/// One full all-modes run with its energy breakdown.
+pub fn sim_report_json(r: &SimReport, energy: &EnergyBreakdown) -> String {
+    let modes: Vec<String> =
+        r.modes.iter().map(|m| format!("    {}", mode_report_json(m))).collect();
+    format!(
+        "{{\n  \"tensor\": \"{}\",\n  \"kernel\": \"{}\",\n  \"tech\": \"{}\",\n  \
+         \"runtime_s\": {:e},\n  \"runtime_cycles\": {:e},\n  \
+         \"runtime_stderr_s\": {:e},\n  \"energy_j\": {:e},\n  \
+         \"energy\": {{\"compute_j\": {:e}, \"dram_j\": {:e}, \"static_j\": {:e}, \
+         \"switching_j\": {:e}}},\n  \"modes\": [\n{}\n  ]\n}}",
+        json_escape(&r.tensor),
+        json_escape(&r.kernel),
+        json_escape(&r.tech.name),
+        r.total_runtime_s(),
+        r.total_runtime_cycles(),
+        r.total_runtime_stderr_s(),
+        energy.total_j(),
+        energy.compute_j,
+        energy.dram_j,
+        energy.static_j,
+        energy.switching_j,
+        modes.join(",\n"),
+    )
+}
+
+/// A whole technology comparison (the `simulate --json` payload): one
+/// [`sim_report_json`] object per technology, baseline first.
+pub fn comparison_json(c: &TechComparison, engine: &str) -> String {
+    let runs: Vec<String> = c
+        .runs
+        .iter()
+        .map(|run| {
+            // indent the nested report so the artifact stays readable
+            let body = sim_report_json(&run.report, &run.energy);
+            let indented: Vec<String> =
+                body.lines().map(|l| format!("    {l}")).collect();
+            indented.join("\n").trim_start().to_string()
+        })
+        .collect();
+    format!(
+        "{{\n  \"tensor\": \"{}\",\n  \"engine\": \"{}\",\n  \"runs\": [\n    {}\n  ]\n}}",
+        json_escape(&c.tensor),
+        json_escape(engine),
+        runs.join(",\n    "),
+    )
+}
+
+/// Flatten pretty JSON to a single NDJSON-safe line. Writers in this
+/// crate only ever emit newlines as inter-token whitespace (string
+/// escapes turn real newlines into `\n`), so joining trimmed lines
+/// changes no value.
+pub fn compact(json: &str) -> String {
+    json.lines().map(str::trim).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn objectives_round_trip_losslessly() {
+        let o = Objectives { runtime_s: 1.0 / 3.0, energy_j: 2.5e-7, area_mm2: 96.125 };
+        let v = Value::parse(&objectives_json(&o)).unwrap();
+        assert_eq!(v.get("runtime_s").unwrap().as_f64().unwrap().to_bits(), o.runtime_s.to_bits());
+        assert_eq!(v.get("energy_j").unwrap().as_f64().unwrap().to_bits(), o.energy_j.to_bits());
+        assert_eq!(v.get("edp").unwrap().as_f64().unwrap().to_bits(), o.edp().to_bits());
+        assert_eq!(v.get("area_mm2").unwrap().as_f64().unwrap().to_bits(), o.area_mm2.to_bits());
+    }
+
+    #[test]
+    fn sim_report_serializes_and_compacts() {
+        use crate::accel::config::AcceleratorConfig;
+        use crate::coordinator::driver::compare_technologies_with_budget;
+        use crate::kernel::KernelKind;
+        use crate::mem::registry::tech;
+        use crate::sim::{EngineKind, SimBudget};
+        use crate::tensor::gen::TensorSpec;
+
+        let tensor = TensorSpec::custom("exp", vec![40, 40, 40], 2_000, 0.8).generate(5);
+        let cfg = AcceleratorConfig::paper_default();
+        let c = compare_technologies_with_budget(
+            &tensor,
+            &cfg,
+            &[tech("e-sram"), tech("o-sram")],
+            EngineKind::Analytic,
+            KernelKind::Spmttkrp,
+            SimBudget::single_threaded(),
+        );
+        let json = comparison_json(&c, "analytic");
+        let v = Value::parse(&json).expect("comparison JSON must parse");
+        assert_eq!(v.get("engine").unwrap().as_str(), Some("analytic"));
+        let runs = v.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        for (run, tech_run) in runs.iter().zip(&c.runs) {
+            assert_eq!(run.get("tech").unwrap().as_str(), Some(tech_run.name()));
+            let rt = run.get("runtime_s").unwrap().as_f64().unwrap();
+            assert_eq!(rt.to_bits(), tech_run.report.total_runtime_s().to_bits());
+            let modes = run.get("modes").unwrap().as_arr().unwrap();
+            assert_eq!(modes.len(), tech_run.report.modes.len());
+            let e = run.get("energy").unwrap();
+            let total = run.get("energy_j").unwrap().as_f64().unwrap();
+            assert_eq!(total.to_bits(), tech_run.energy.total_j().to_bits());
+            assert!(e.get("dram_j").unwrap().as_f64().is_some());
+        }
+        // the NDJSON flattening parses to the identical value tree
+        let flat = compact(&json);
+        assert!(!flat.contains('\n'));
+        assert_eq!(Value::parse(&flat).unwrap(), v);
+    }
+}

@@ -1,3 +1,4 @@
-//! Paper table/figure regeneration.
+//! Paper table/figure regeneration and machine-readable export.
 
+pub mod export;
 pub mod paper;

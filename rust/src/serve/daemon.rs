@@ -1,0 +1,750 @@
+//! The batching evaluation daemon behind `photon-mttkrp serve`.
+//!
+//! Requests arrive as newline-delimited JSON ([`super::request`]) on
+//! stdin or a Unix socket and are answered in order, one JSON object
+//! per line. Three properties define the design:
+//!
+//! * **Warm traffic is O(hash lookup).** Every evaluation is keyed by
+//!   the canonical content key ([`crate::explore::key`]) and memoized in
+//!   an [`EvalCache`] — optionally persistent (`--cache-dir`), so a
+//!   daemon restart answers yesterday's questions without touching an
+//!   engine. The per-workload identity (the O(nnz) generate + fingerprint
+//!   in [`Evaluator::tag`]) is memoized for the daemon lifetime, so a
+//!   steady-state warm request does no tensor work at all.
+//! * **Batch windows share workload preparation.** Lines are grouped
+//!   into windows of `--batch` requests (an empty line or EOF flushes
+//!   early). Within a window, every cold request against the same
+//!   (tensor, scale, seed) shares one [`PreparedWorkload`] — the §IV-A
+//!   remap and the per-mode view builds happen once per distinct
+//!   workload per window, exactly the amortization
+//!   [`compare_technologies_on_engines`](crate::coordinator::driver::compare_technologies_on_engines)
+//!   performs within a single CLI call.
+//! * **Cold fan-out follows the thread-budget rule.** A sweep request's
+//!   cold units are deduplicated by cache key and fanned across
+//!   `min(threads, cold_units)` workers, each simulation receiving the
+//!   left-over `threads / workers` for its per-PE inner loop — the same
+//!   rule [`crate::sim::SimBudget`] documents, so the daemon composes
+//!   parallelism without oversubscription. Determinism is unaffected:
+//!   results are bit-identical at any `--threads` (pinned by
+//!   `rust/tests/serve.rs`).
+//!
+//! Every success reply carries `"cache": "hit"|"miss"` (was *any*
+//! engine run needed?), the wall time, and a `"cache_stats"` snapshot;
+//! the contract tests compare only the `"result"` field across runs —
+//! wall time legitimately varies, results never do. A malformed or
+//! failing request produces an `{"id": ..., "error": "..."}` reply and
+//! the daemon keeps serving; `{"cmd": "shutdown"}` answers, discards the
+//! rest of its window, and exits cleanly.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::accel::config::AcceleratorConfig;
+use crate::area::model::AreaModel;
+use crate::coordinator::driver::PreparedWorkload;
+use crate::explore::eval::{candidate_key, EvalCache, Evaluator};
+use crate::explore::export::frontier_json;
+use crate::explore::objective::Objectives;
+use crate::explore::search::{run_explore_with_cache, ExploreSpec};
+use crate::explore::space::{Axis, Candidate, DesignSpace};
+use crate::kernel::DEFAULT_CHUNK_NNZ;
+use crate::mem::registry;
+use crate::mem::tech::MemTechnology;
+use crate::report::export::{compact, objectives_json};
+use crate::sim::par::{effective_threads, parallel_map};
+use crate::sim::SimBudget;
+use crate::tensor::gen::{preset, FrosttTensor};
+use crate::util::bench::json_escape;
+
+use super::request::{parse_line, ExploreRequest, Request, SimulateRequest, SweepRequest};
+
+/// Default requests per batch window (`--batch` on the CLI).
+pub const DEFAULT_BATCH: usize = 16;
+
+/// Daemon-lifetime workload-identity memos kept before the oldest is
+/// evicted. Each memo is a few hundred bytes; the cap only bounds
+/// pathological tensor×scale×seed churn.
+const MAX_WORKLOAD_MEMO: usize = 32;
+
+/// Daemon configuration (the `serve` subcommand's flags).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// OS-thread budget for cold evaluations; 0 = all cores.
+    pub threads: usize,
+    /// Requests per batch window; an empty input line flushes early.
+    pub batch: usize,
+    /// Persistent cache directory (`--cache-dir`); `None` = in-memory.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { threads: 0, batch: DEFAULT_BATCH, cache_dir: None }
+    }
+}
+
+/// Identity of a generated workload: FROSTT preset name, exact scale
+/// bits and generator seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct WorkloadKey {
+    tensor: String,
+    scale_bits: u64,
+    seed: u64,
+}
+
+impl WorkloadKey {
+    fn new(tensor: &str, scale: f64, seed: u64) -> Self {
+        WorkloadKey { tensor: tensor.to_string(), scale_bits: scale.to_bits(), seed }
+    }
+}
+
+/// What a warm request needs to know about a workload without touching
+/// it: the cache-key tag, the generated name and the nonzero count.
+struct WorkloadMeta {
+    tag: String,
+    name: String,
+    nnz: u64,
+}
+
+/// Ensure the batch window holds a prepared (remapped + viewed) copy of
+/// the workload; returns its index. Idempotent within a window.
+fn prepare_workload(
+    prepared: &mut Vec<(WorkloadKey, PreparedWorkload)>,
+    name: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<usize, String> {
+    let wkey = WorkloadKey::new(name, scale, seed);
+    if let Some(i) = prepared.iter().position(|(k, _)| *k == wkey) {
+        return Ok(i);
+    }
+    let ft = FrosttTensor::from_name(name).ok_or_else(|| format!("unknown tensor `{name}`"))?;
+    let tensor = preset(ft).scaled(scale).generate(seed);
+    prepared.push((wkey, PreparedWorkload::new(&tensor, true)));
+    Ok(prepared.len() - 1)
+}
+
+/// One daemon: the (possibly persistent) evaluation cache plus the
+/// workload-identity memo. Requests are handled strictly in order; the
+/// only intra-request parallelism is the cold-unit fan-out.
+pub struct ServeState {
+    cache: EvalCache,
+    threads: usize,
+    batch: usize,
+    meta: Vec<(WorkloadKey, WorkloadMeta)>,
+}
+
+/// One sweep grid point, planned before any evaluation runs.
+struct SweepUnit {
+    tensor: String,
+    scale: f64,
+    name: String,
+    nnz: u64,
+    tag: String,
+    cand: Candidate,
+    key: String,
+}
+
+impl ServeState {
+    /// Build a daemon; opening `--cache-dir` replays the persistent
+    /// store into memory (see [`EvalCache::with_store`]).
+    pub fn new(opts: &ServeOptions) -> Result<Self, String> {
+        let cache = match &opts.cache_dir {
+            Some(dir) => EvalCache::with_store(dir)
+                .map_err(|e| format!("--cache-dir {}: {e}", dir.display()))?,
+            None => EvalCache::new(),
+        };
+        Ok(ServeState {
+            cache,
+            threads: opts.threads,
+            batch: opts.batch.max(1),
+            meta: Vec::new(),
+        })
+    }
+
+    /// The daemon's evaluation cache (counters, store path).
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    /// Requests per batch window.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The counter snapshot attached to every success reply.
+    fn cache_stats_json(&self) -> String {
+        format!(
+            "{{\"hits\": {}, \"misses\": {}, \"loaded\": {}, \"appended\": {}, \"entries\": {}}}",
+            self.cache.hits(),
+            self.cache.misses(),
+            self.cache.loaded(),
+            self.cache.appended(),
+            self.cache.len()
+        )
+    }
+
+    /// Memoized workload identity; prepares the workload on first touch
+    /// (the once-per-daemon O(nnz) cost a steady-state warm request
+    /// never pays again).
+    fn workload_meta(
+        &mut self,
+        prepared: &mut Vec<(WorkloadKey, PreparedWorkload)>,
+        name: &str,
+        scale: f64,
+        seed: u64,
+    ) -> Result<(String, String, u64), String> {
+        if !(scale > 0.0 && scale <= 1.0) {
+            return Err(format!("scale {scale} outside (0, 1]"));
+        }
+        let wkey = WorkloadKey::new(name, scale, seed);
+        if let Some((_, m)) = self.meta.iter().find(|(k, _)| *k == wkey) {
+            return Ok((m.tag.clone(), m.name.clone(), m.nnz));
+        }
+        let i = prepare_workload(prepared, name, scale, seed)?;
+        let w = &prepared[i].1;
+        let m = WorkloadMeta {
+            tag: Evaluator::tag(&w.tensor, seed, w.remap),
+            name: w.tensor.name.clone(),
+            nnz: w.tensor.nnz() as u64,
+        };
+        let out = (m.tag.clone(), m.name.clone(), m.nnz);
+        if self.meta.len() >= MAX_WORKLOAD_MEMO {
+            self.meta.remove(0);
+        }
+        self.meta.push((wkey, m));
+        Ok(out)
+    }
+
+    fn handle_simulate(
+        &mut self,
+        r: &SimulateRequest,
+        prepared: &mut Vec<(WorkloadKey, PreparedWorkload)>,
+    ) -> Result<(String, bool), String> {
+        let tech = registry::resolve(&r.tech)?;
+        let (tag, name, nnz) = self.workload_meta(prepared, &r.tensor, r.scale, r.seed)?;
+        let cand = sweep_candidate(r.scale, &tech, r.kernel);
+        let key = candidate_key(&cand, r.engine, &tag, r.sample);
+        let (o, hit) = if self.cache.peek(&key).is_some() {
+            // requests are handled one at a time, so the entry the peek
+            // saw is still there and the closure can never run
+            self.cache.get_or_compute_traced(&key, || unreachable!("peeked cache entry vanished"))
+        } else {
+            let i = prepare_workload(prepared, &r.tensor, r.scale, r.seed)?;
+            let w = &prepared[i].1;
+            let ev = Evaluator {
+                tensor: &w.tensor,
+                views: &w.views,
+                workload_tag: tag,
+                budget: SimBudget {
+                    threads: self.threads,
+                    chunk_nnz: DEFAULT_CHUNK_NNZ,
+                    sample: r.sample,
+                },
+            };
+            ev.evaluate_traced(&cand, r.engine, &self.cache)
+        };
+        let result = format!(
+            "{{\"tensor\": \"{}\", \"nnz\": {}, \"tech\": \"{}\", \"kernel\": \"{}\", \
+             \"engine\": \"{}\", \"objectives\": {}}}",
+            json_escape(&name),
+            nnz,
+            json_escape(&cand.tech.name),
+            cand.kernel.name(),
+            r.engine.name(),
+            objectives_json(&o),
+        );
+        Ok((result, hit))
+    }
+
+    fn handle_sweep(
+        &mut self,
+        r: &SweepRequest,
+        prepared: &mut Vec<(WorkloadKey, PreparedWorkload)>,
+    ) -> Result<(String, bool), String> {
+        if r.tensors.is_empty() || r.scales.is_empty() || r.techs.is_empty() {
+            return Err("sweep needs at least one tensor, scale and tech".into());
+        }
+        let techs: Vec<MemTechnology> =
+            r.techs.iter().map(|n| registry::resolve(n)).collect::<Result<_, _>>()?;
+        // plan the grid in deterministic tensor × scale × tech order
+        let mut units: Vec<SweepUnit> = Vec::new();
+        for tname in &r.tensors {
+            for &scale in &r.scales {
+                let (tag, name, nnz) = self.workload_meta(prepared, tname, scale, r.seed)?;
+                for tech in &techs {
+                    let cand = sweep_candidate(scale, tech, r.kernel);
+                    let key = candidate_key(&cand, r.engine, &tag, r.sample);
+                    units.push(SweepUnit {
+                        tensor: tname.clone(),
+                        scale,
+                        name: name.clone(),
+                        nnz,
+                        tag: tag.clone(),
+                        cand,
+                        key,
+                    });
+                }
+            }
+        }
+        // cold set: the first unit of every key the cache cannot answer
+        // (duplicate-key units ride their sibling's computation)
+        let mut cold_idx: Vec<usize> = Vec::new();
+        let mut claimed: HashSet<&str> = HashSet::new();
+        for (i, u) in units.iter().enumerate() {
+            if self.cache.peek(&u.key).is_none() && claimed.insert(&u.key) {
+                cold_idx.push(i);
+            }
+        }
+        for &i in &cold_idx {
+            prepare_workload(prepared, &units[i].tensor, units[i].scale, r.seed)?;
+        }
+        // thread-budget rule: the cold fan-out claims min(threads, jobs)
+        // workers; each simulation gets the left-over threads
+        let threads = effective_threads(self.threads);
+        let workers = threads.min(cold_idx.len().max(1));
+        let budget = SimBudget {
+            threads: (threads / workers).max(1),
+            chunk_nnz: DEFAULT_CHUNK_NNZ,
+            sample: r.sample,
+        };
+        struct Job<'a> {
+            unit: &'a SweepUnit,
+            w: &'a PreparedWorkload,
+        }
+        let jobs: Vec<Job> = cold_idx
+            .iter()
+            .map(|&i| {
+                let u = &units[i];
+                let wkey = WorkloadKey::new(&u.tensor, u.scale, r.seed);
+                let w = &prepared
+                    .iter()
+                    .find(|(k, _)| *k == wkey)
+                    .expect("cold unit's workload prepared above")
+                    .1;
+                Job { unit: u, w }
+            })
+            .collect();
+        let cache = &self.cache;
+        let engine = r.engine;
+        let computed: Vec<Objectives> = parallel_map(&jobs, workers, |j| {
+            let ev = Evaluator {
+                tensor: &j.w.tensor,
+                views: &j.w.views,
+                workload_tag: j.unit.tag.clone(),
+                budget,
+            };
+            ev.evaluate(&j.unit.cand, engine, cache)
+        });
+        let cold_obj: HashMap<usize, Objectives> =
+            cold_idx.iter().copied().zip(computed).collect();
+        let mut points: Vec<String> = Vec::with_capacity(units.len());
+        for (i, u) in units.iter().enumerate() {
+            let (o, marker) = match cold_obj.get(&i) {
+                Some(o) => (*o, "miss"),
+                None => (
+                    self.cache
+                        .get_or_compute_traced(&u.key, || unreachable!("planned key vanished"))
+                        .0,
+                    "hit",
+                ),
+            };
+            points.push(format!(
+                "{{\"tensor\": \"{}\", \"nnz\": {}, \"scale\": {:e}, \"tech\": \"{}\", \
+                 \"cache\": \"{marker}\", \"objectives\": {}}}",
+                json_escape(&u.name),
+                u.nnz,
+                u.scale,
+                json_escape(&u.cand.tech.name),
+                objectives_json(&o),
+            ));
+        }
+        let result = format!(
+            "{{\"kernel\": \"{}\", \"engine\": \"{}\", \"seed\": {}, \"points\": [{}]}}",
+            r.kernel.name(),
+            r.engine.name(),
+            r.seed,
+            points.join(", "),
+        );
+        Ok((result, cold_idx.is_empty()))
+    }
+
+    fn handle_explore(&mut self, r: &ExploreRequest) -> Result<(String, bool), String> {
+        if r.techs.is_empty() || r.kernels.is_empty() {
+            return Err("explore needs at least one tech and kernel".into());
+        }
+        let techs: Vec<MemTechnology> =
+            r.techs.iter().map(|n| registry::resolve(n)).collect::<Result<_, _>>()?;
+        let axes: Vec<Axis> =
+            r.axes.iter().map(|s| Axis::parse(s)).collect::<Result<_, _>>()?;
+        let ft = FrosttTensor::from_name(&r.tensor)
+            .ok_or_else(|| format!("unknown tensor `{}`", r.tensor))?;
+        let mut space = DesignSpace::paper_grid(techs, r.kernels.clone());
+        if !axes.is_empty() {
+            space.axes = axes;
+        }
+        space.budget_mm2 = r.budget_mm2;
+        space.exclude_wafer_scale = r.exclude_wafer_scale;
+        let mut spec = ExploreSpec::new(space, preset(ft));
+        spec.scale = r.scale;
+        spec.seed = r.seed;
+        spec.objective = r.objective;
+        spec.threads = self.threads;
+        spec.sample = r.sample;
+        let result = run_explore_with_cache(&spec, &self.cache)?;
+        let warm = result.cache_misses == 0;
+        Ok((compact(&frontier_json(&result)), warm))
+    }
+
+    fn dispatch(
+        &mut self,
+        req: &Request,
+        prepared: &mut Vec<(WorkloadKey, PreparedWorkload)>,
+    ) -> Result<(String, bool), String> {
+        match req {
+            Request::Simulate(r) => self.handle_simulate(r, prepared),
+            Request::Sweep(r) => self.handle_sweep(r, prepared),
+            Request::Explore(r) => self.handle_explore(r),
+            Request::Shutdown => unreachable!("shutdown short-circuits in handle_batch"),
+        }
+    }
+
+    /// Process one batch window: answer every line in order, sharing
+    /// workload preparation across the window. Returns the replies and
+    /// whether a shutdown request ended the daemon (remaining lines of
+    /// the window are deliberately dropped — shutdown means *now*).
+    pub fn handle_batch(&mut self, lines: &[String]) -> (Vec<String>, bool) {
+        let mut prepared: Vec<(WorkloadKey, PreparedWorkload)> = Vec::new();
+        let mut out = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let t0 = Instant::now();
+            let (id, req) = parse_line(line);
+            let reply = match req {
+                Err(e) => error_json(id, &e),
+                Ok(Request::Shutdown) => {
+                    out.push(format!(
+                        "{{\"id\": {}, \"result\": {{\"shutdown\": true}}, \"cache_stats\": {}}}",
+                        id_json(id),
+                        self.cache_stats_json(),
+                    ));
+                    return (out, true);
+                }
+                Ok(req) => match self.dispatch(&req, &mut prepared) {
+                    Ok((result, warm)) => format!(
+                        "{{\"id\": {}, \"cache\": \"{}\", \"wall_ms\": {:.3}, \
+                         \"cache_stats\": {}, \"result\": {}}}",
+                        id_json(id),
+                        if warm { "hit" } else { "miss" },
+                        t0.elapsed().as_secs_f64() * 1e3,
+                        self.cache_stats_json(),
+                        result,
+                    ),
+                    Err(e) => error_json(id, &e),
+                },
+            };
+            out.push(reply);
+        }
+        (out, false)
+    }
+}
+
+/// The candidate a `simulate`/`sweep` request evaluates: the paper
+/// default configuration at the request's scale (the CLI `simulate`
+/// semantics — `cfg.scaled(scale)` tracks the workload down).
+fn sweep_candidate(scale: f64, tech: &MemTechnology, kernel: crate::kernel::KernelKind) -> Candidate {
+    let cfg = AcceleratorConfig::paper_default().scaled(scale);
+    let area_mm2 = AreaModel::new(&cfg).design(tech).total_mm2();
+    Candidate { index: 0, settings: Vec::new(), cfg, tech: tech.clone(), kernel, area_mm2 }
+}
+
+fn id_json(id: Option<u64>) -> String {
+    id.map_or_else(|| "null".to_string(), |i| i.to_string())
+}
+
+fn error_json(id: Option<u64>, msg: &str) -> String {
+    format!("{{\"id\": {}, \"error\": \"{}\"}}", id_json(id), json_escape(msg))
+}
+
+/// Write a window's replies and flush. Returns whether the window asked
+/// for shutdown.
+fn flush_batch<W: Write>(
+    state: &mut ServeState,
+    batch: &mut Vec<String>,
+    writer: &mut W,
+) -> Result<bool, String> {
+    if batch.is_empty() {
+        return Ok(false);
+    }
+    let (replies, shutdown) = state.handle_batch(batch);
+    batch.clear();
+    for r in replies {
+        writeln!(writer, "{r}").map_err(|e| format!("write error: {e}"))?;
+    }
+    writer.flush().map_err(|e| format!("write error: {e}"))?;
+    Ok(shutdown)
+}
+
+/// Serve one NDJSON stream until EOF or shutdown. Lines accumulate into
+/// windows of [`ServeState::batch`] requests; an **empty line** is an
+/// explicit flush (clients use it to bound latency under the batch cap).
+/// Returns whether a shutdown request ended the stream.
+pub fn serve_stream<R: BufRead, W: Write>(
+    state: &mut ServeState,
+    reader: R,
+    writer: &mut W,
+) -> Result<bool, String> {
+    let cap = state.batch();
+    let mut batch: Vec<String> = Vec::new();
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("read error: {e}"))?;
+        if line.trim().is_empty() {
+            if flush_batch(state, &mut batch, writer)? {
+                return Ok(true);
+            }
+            continue;
+        }
+        batch.push(line);
+        if batch.len() >= cap && flush_batch(state, &mut batch, writer)? {
+            return Ok(true);
+        }
+    }
+    flush_batch(state, &mut batch, writer)
+}
+
+/// Announce the daemon on stderr (never stdout — stdout is the reply
+/// stream).
+fn announce(state: &ServeState, transport: &str) {
+    match state.cache().store_path() {
+        Some(p) => eprintln!(
+            "serving on {transport} (batch {}, cache {} with {} entries loaded)",
+            state.batch(),
+            p.display(),
+            state.cache().loaded(),
+        ),
+        None => eprintln!("serving on {transport} (batch {}, in-memory cache)", state.batch()),
+    }
+}
+
+/// `photon-mttkrp serve --stdin`: one stream, stdin → stdout.
+pub fn run_stdin(opts: &ServeOptions) -> Result<(), String> {
+    let mut state = ServeState::new(opts)?;
+    announce(&state, "stdin");
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    serve_stream(&mut state, stdin.lock(), &mut out)?;
+    Ok(())
+}
+
+/// `photon-mttkrp serve --socket PATH`: accept Unix-socket connections
+/// one at a time (the cache is shared across connections, so a second
+/// client's warm traffic benefits from the first's cold work). A
+/// connection-level error is logged and the daemon keeps listening;
+/// a shutdown request stops it.
+#[cfg(unix)]
+pub fn run_socket(opts: &ServeOptions, path: &std::path::Path) -> Result<(), String> {
+    use std::io::BufReader;
+    use std::os::unix::net::UnixListener;
+
+    let mut state = ServeState::new(opts)?;
+    // a stale socket file from a killed daemon would block the bind
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .map_err(|e| format!("--socket {}: {e}", path.display()))?;
+    announce(&state, &format!("socket {}", path.display()));
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept error: {e}");
+                continue;
+            }
+        };
+        let reader = match stream.try_clone() {
+            Ok(s) => BufReader::new(s),
+            Err(e) => {
+                eprintln!("connection error: {e}");
+                continue;
+            }
+        };
+        let mut writer = stream;
+        match serve_stream(&mut state, reader, &mut writer) {
+            Ok(true) => break,
+            Ok(false) => {}
+            Err(e) => eprintln!("connection error: {e}"),
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn state() -> ServeState {
+        ServeState::new(&ServeOptions::default()).unwrap()
+    }
+
+    fn lines(reqs: &[&str]) -> Vec<String> {
+        reqs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SIM: &str =
+        r#"{"id": 1, "cmd": "simulate", "scale": 1e-4, "tech": "o-sram", "engine": "analytic"}"#;
+
+    #[test]
+    fn second_identical_request_is_a_hit_with_a_bit_identical_result() {
+        let mut s = state();
+        let (replies, shutdown) = s.handle_batch(&lines(&[SIM, SIM]));
+        assert!(!shutdown);
+        assert_eq!(replies.len(), 2);
+        let a = Value::parse(&replies[0]).expect("reply must be valid JSON");
+        let b = Value::parse(&replies[1]).unwrap();
+        assert_eq!(a.get("cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(b.get("cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(a.get("id").unwrap().as_u64(), Some(1));
+        // the result payload — not the envelope — is byte-comparable
+        assert_eq!(a.get("result"), b.get("result"));
+        let o = a.get("result").unwrap().get("objectives").unwrap();
+        assert!(o.get("runtime_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!((s.cache().hits(), s.cache().misses()), (1, 1));
+    }
+
+    #[test]
+    fn malformed_lines_answer_with_errors_and_never_kill_the_batch() {
+        let mut s = state();
+        let (replies, shutdown) = s.handle_batch(&lines(&[
+            "{ not json",
+            r#"{"id": 7, "cmd": "warp"}"#,
+            r#"{"id": 8, "cmd": "simulate", "tech": "t-sram"}"#,
+            SIM,
+        ]));
+        assert!(!shutdown);
+        assert_eq!(replies.len(), 4);
+        assert!(replies[0].contains("\"error\"") && replies[0].contains("\"id\": null"));
+        let e1 = Value::parse(&replies[1]).unwrap();
+        assert_eq!(e1.get("id").unwrap().as_u64(), Some(7));
+        assert!(e1.get("error").unwrap().as_str().unwrap().contains("unknown cmd"));
+        assert!(replies[2].contains("t-sram"), "{}", replies[2]);
+        // the good request after three bad ones still ran
+        assert!(replies[3].contains("\"result\""), "{}", replies[3]);
+    }
+
+    #[test]
+    fn shutdown_answers_and_drops_the_rest_of_the_window() {
+        let mut s = state();
+        let (replies, shutdown) =
+            s.handle_batch(&lines(&[r#"{"id": 2, "cmd": "shutdown"}"#, SIM]));
+        assert!(shutdown);
+        assert_eq!(replies.len(), 1, "lines after shutdown must not run");
+        let v = Value::parse(&replies[0]).unwrap();
+        assert_eq!(v.get("result").unwrap().get("shutdown").unwrap().as_bool(), Some(true));
+        assert!(v.get("cache_stats").is_some());
+    }
+
+    #[test]
+    fn sweep_dedups_units_and_marks_per_point_cache_state() {
+        let mut s = state();
+        let req = r#"{"id": 3, "cmd": "sweep", "tensors": "nell-2", "scales": 1e-4,
+                      "techs": ["e-sram", "o-sram", "e-sram"]}"#
+            .replace('\n', " ");
+        let (replies, _) = s.handle_batch(&lines(&[&req]));
+        let v = Value::parse(&replies[0]).unwrap();
+        assert_eq!(v.get("cache").unwrap().as_str(), Some("miss"));
+        let points = v.get("result").unwrap().get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 3);
+        let markers: Vec<&str> =
+            points.iter().map(|p| p.get("cache").unwrap().as_str().unwrap()).collect();
+        // the duplicated e-sram point rides its sibling's computation
+        assert_eq!(markers, ["miss", "miss", "hit"]);
+        assert_eq!(s.cache().misses(), 2, "duplicate units must not compute twice");
+        // the whole grid again: zero cold units, request-level hit
+        let (replies, _) = s.handle_batch(&lines(&[&req]));
+        let w = Value::parse(&replies[0]).unwrap();
+        assert_eq!(w.get("cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(w.get("result"), v.get("result"), "warm result must be bit-identical");
+    }
+
+    #[test]
+    fn simulate_shares_cache_entries_with_sweep() {
+        // one workload, same (cfg, tech, kernel, engine): the content
+        // key is verb-independent, so a sweep warms simulate for free
+        let mut s = state();
+        let sweep = r#"{"cmd": "sweep", "tensors": "nell-2", "scales": 1e-4, "techs": "o-sram"}"#;
+        let (_, _) = s.handle_batch(&lines(&[sweep]));
+        let (replies, _) = s.handle_batch(&lines(&[SIM]));
+        let v = Value::parse(&replies[0]).unwrap();
+        assert_eq!(v.get("cache").unwrap().as_str(), Some("hit"), "{}", replies[0]);
+    }
+
+    #[test]
+    fn persistent_cache_warms_a_fresh_daemon() {
+        let dir = std::env::temp_dir().join(format!("photon_serve_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ServeOptions { cache_dir: Some(dir.clone()), ..Default::default() };
+        let cold_reply = {
+            let mut s = ServeState::new(&opts).unwrap();
+            let (replies, _) = s.handle_batch(&lines(&[SIM]));
+            assert!(s.cache().appended() >= 1, "misses must persist");
+            replies.into_iter().next().unwrap()
+        };
+        // a brand-new daemon process answers warm, bit-identically
+        let mut s = ServeState::new(&opts).unwrap();
+        assert!(s.cache().loaded() >= 1);
+        let (replies, _) = s.handle_batch(&lines(&[SIM]));
+        let cold = Value::parse(&cold_reply).unwrap();
+        let warm = Value::parse(&replies[0]).unwrap();
+        assert_eq!(cold.get("cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(warm.get("cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(cold.get("result"), warm.get("result"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_stream_flushes_on_empty_line_and_batch_cap() {
+        let mut s = ServeState::new(&ServeOptions { batch: 2, ..Default::default() }).unwrap();
+        let input = format!("{SIM}\n\n{SIM}\n{SIM}\n{SIM}\n");
+        let mut out: Vec<u8> = Vec::new();
+        let shutdown = serve_stream(&mut s, input.as_bytes(), &mut out).unwrap();
+        assert!(!shutdown);
+        let text = String::from_utf8(out).unwrap();
+        let replies: Vec<&str> = text.lines().collect();
+        assert_eq!(replies.len(), 4, "{text}");
+        for (i, r) in replies.iter().enumerate() {
+            let v = Value::parse(r).expect("every reply line parses");
+            let expect = if i == 0 { "miss" } else { "hit" };
+            assert_eq!(v.get("cache").unwrap().as_str(), Some(expect), "reply {i}: {r}");
+        }
+    }
+
+    #[test]
+    fn explore_requests_answer_with_the_frontier_export_shape() {
+        let mut s = state();
+        let req = r#"{"id": 4, "cmd": "explore", "scale": 1e-4, "techs": "o-sram",
+                      "axes": "n_pes=2", "sample_rate": 1.0}"#
+            .replace('\n', " ");
+        let (replies, _) = s.handle_batch(&lines(&[&req]));
+        let v = Value::parse(&replies[0]).expect("explore reply must parse");
+        assert_eq!(v.get("cache").unwrap().as_str(), Some("miss"), "{}", replies[0]);
+        let r = v.get("result").unwrap();
+        assert_eq!(r.get("objective").unwrap().as_str(), Some("edp"));
+        assert!(!r.get("frontier").unwrap().as_arr().unwrap().is_empty());
+        // the identical search again is answered entirely from cache
+        let (replies, _) = s.handle_batch(&lines(&[&req]));
+        let w = Value::parse(&replies[0]).unwrap();
+        assert_eq!(w.get("cache").unwrap().as_str(), Some("hit"), "{}", replies[0]);
+        let strip = |x: &Value| {
+            // the cache counter block legitimately differs warm vs cold
+            let Value::Obj(fields) = x.clone() else { panic!() };
+            Value::Obj(fields.into_iter().filter(|(k, _)| k != "cache").collect())
+        };
+        assert_eq!(strip(r), strip(w.get("result").unwrap()), "frontier must be bit-identical");
+    }
+}

@@ -1,0 +1,28 @@
+//! Design-space-as-a-service: the `photon-mttkrp serve` daemon.
+//!
+//! A long-lived process that answers simulate/sweep/explore requests
+//! over newline-delimited JSON — stdin/stdout or a Unix socket — backed
+//! by the persistent content-keyed evaluation cache
+//! ([`crate::explore::eval::EvalCache`] over
+//! [`crate::explore::store::EvalStore`]). The split:
+//!
+//! * [`request`] — the wire protocol: one JSON object per line, decoded
+//!   with CLI-matching defaults by [`request::parse_line`];
+//! * [`daemon`] — batching, workload-preparation sharing, the cold-unit
+//!   parallel fan-out, and the stdin/socket front-ends.
+//!
+//! The performance contract (pinned by `rust/tests/serve.rs` and
+//! measured by `benches/serve_latency.rs`): a warm request — one whose
+//! (config, tech, kernel, engine, workload, sample) content key is
+//! already cached, whether from this process, an earlier batch, or a
+//! previous run via `--cache-dir` — is answered in O(hash lookup)
+//! without touching either simulation engine, and its `"result"` field
+//! is byte-identical to the cold computation's.
+
+pub mod daemon;
+pub mod request;
+
+pub use daemon::{run_stdin, serve_stream, ServeOptions, ServeState, DEFAULT_BATCH};
+#[cfg(unix)]
+pub use daemon::run_socket;
+pub use request::{parse_line, Request};

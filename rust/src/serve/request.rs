@@ -1,0 +1,285 @@
+//! The serve protocol: newline-delimited JSON requests.
+//!
+//! One request per line. Every request is an object with an optional
+//! numeric `"id"` (echoed verbatim in the response; `null` when absent)
+//! and a `"cmd"` selecting the verb. Unknown fields are ignored so
+//! clients can carry their own bookkeeping. The verbs mirror the CLI
+//! subcommands and share their defaults:
+//!
+//! ```json
+//! {"id": 1, "cmd": "simulate", "tensor": "nell-2", "scale": 1e-3,
+//!  "seed": 42, "tech": "o-sram", "kernel": "spmttkrp",
+//!  "engine": "analytic", "sample_rate": 1.0, "sample_seed": 0}
+//! {"id": 2, "cmd": "sweep", "tensors": ["nell-2", "patents"],
+//!  "scales": [1e-3, 1e-4], "techs": ["e-sram", "o-sram"]}
+//! {"id": 3, "cmd": "explore", "tensor": "nell-2", "scale": 1e-4,
+//!  "techs": ["e-sram", "o-sram"], "axes": ["n_pes=2,4"],
+//!  "objective": "edp", "sample_rate": 0.25}
+//! {"cmd": "shutdown"}
+//! ```
+//!
+//! Decoding is strict about *types* (a non-string `tech` is an error,
+//! not a coercion) and lenient about *presence* (every field except
+//! `cmd` has the CLI default). A malformed line produces an error
+//! *reply*, never a daemon exit — resilience is pinned by
+//! `rust/tests/serve.rs`.
+
+use crate::explore::objective::ObjectiveKind;
+use crate::kernel::KernelKind;
+use crate::sim::{EngineKind, SampleSpec};
+use crate::util::json::Value;
+
+/// One decoded request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Simulate(SimulateRequest),
+    Sweep(SweepRequest),
+    Explore(ExploreRequest),
+    /// Finish the current batch, reply, and exit the daemon cleanly.
+    Shutdown,
+}
+
+/// `cmd: simulate` — one (tensor, tech, kernel, engine) evaluation.
+#[derive(Clone, Debug)]
+pub struct SimulateRequest {
+    pub tensor: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub tech: String,
+    pub kernel: KernelKind,
+    pub engine: EngineKind,
+    pub sample: SampleSpec,
+}
+
+/// `cmd: sweep` — the cross product `tensors × scales × techs` on one
+/// kernel/engine, one objective vector per point.
+#[derive(Clone, Debug)]
+pub struct SweepRequest {
+    pub tensors: Vec<String>,
+    pub scales: Vec<f64>,
+    pub techs: Vec<String>,
+    pub seed: u64,
+    pub kernel: KernelKind,
+    pub engine: EngineKind,
+    pub sample: SampleSpec,
+}
+
+/// `cmd: explore` — a full Pareto-frontier search (the `explore`
+/// subcommand's grid), answered with the frontier JSON.
+#[derive(Clone, Debug)]
+pub struct ExploreRequest {
+    pub tensor: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub techs: Vec<String>,
+    pub kernels: Vec<KernelKind>,
+    pub axes: Vec<String>,
+    pub objective: ObjectiveKind,
+    pub budget_mm2: Option<f64>,
+    pub exclude_wafer_scale: bool,
+    pub sample: SampleSpec,
+}
+
+fn str_field<'v>(v: &'v Value, key: &str) -> Result<Option<&'v str>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_str().map(Some).ok_or_else(|| format!("field `{key}` must be a string")),
+    }
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_f64().map(Some).ok_or_else(|| format!("field `{key}` must be a number")),
+    }
+}
+
+fn u64_field(v: &Value, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("field `{key}` must be a non-negative integer")),
+    }
+}
+
+fn bool_field(v: &Value, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_bool().map(Some).ok_or_else(|| format!("field `{key}` must be a bool")),
+    }
+}
+
+/// A list-of-strings field; a bare string is accepted as a one-element
+/// list (the CLI's repeated-option ergonomics).
+fn str_list(v: &Value, key: &str) -> Result<Option<Vec<String>>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(vec![s.clone()])),
+        Some(Value::Arr(items)) => items
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("field `{key}` must contain strings"))
+            })
+            .collect::<Result<Vec<_>, _>>()
+            .map(Some),
+        Some(_) => Err(format!("field `{key}` must be a string or an array of strings")),
+    }
+}
+
+fn f64_list(v: &Value, key: &str) -> Result<Option<Vec<f64>>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Num(n)) => Ok(Some(vec![*n])),
+        Some(Value::Arr(items)) => items
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| format!("field `{key}` must contain numbers")))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Some),
+        Some(_) => Err(format!("field `{key}` must be a number or an array of numbers")),
+    }
+}
+
+fn sample_field(v: &Value, default_rate: f64) -> Result<SampleSpec, String> {
+    let rate = f64_field(v, "sample_rate")?.unwrap_or(default_rate);
+    let seed = u64_field(v, "sample_seed")?.unwrap_or(0);
+    SampleSpec::new(rate, seed)
+}
+
+fn kernel_field(v: &Value) -> Result<KernelKind, String> {
+    str_field(v, "kernel")?.map_or(Ok(KernelKind::Spmttkrp), KernelKind::parse)
+}
+
+fn engine_field(v: &Value) -> Result<EngineKind, String> {
+    str_field(v, "engine")?.map_or(Ok(EngineKind::Analytic), EngineKind::parse)
+}
+
+/// Parse one request line into `(id, decoded request)`. The id is
+/// recovered whenever the line is valid JSON, even if the request body
+/// is not — so error replies stay correlated.
+pub fn parse_line(line: &str) -> (Option<u64>, Result<Request, String>) {
+    let v = match Value::parse(line.trim()) {
+        Ok(v) => v,
+        Err(e) => return (None, Err(format!("invalid JSON: {e}"))),
+    };
+    let id = v.get("id").and_then(Value::as_u64);
+    (id, decode(&v))
+}
+
+fn decode(v: &Value) -> Result<Request, String> {
+    let cmd = str_field(v, "cmd")?
+        .ok_or("missing `cmd` (expected one of: simulate, sweep, explore, shutdown)")?;
+    match cmd {
+        "shutdown" => Ok(Request::Shutdown),
+        "simulate" => Ok(Request::Simulate(SimulateRequest {
+            tensor: str_field(v, "tensor")?.unwrap_or("nell-2").to_string(),
+            scale: f64_field(v, "scale")?.unwrap_or(1e-3),
+            seed: u64_field(v, "seed")?.unwrap_or(42),
+            tech: str_field(v, "tech")?.unwrap_or("o-sram").to_string(),
+            kernel: kernel_field(v)?,
+            engine: engine_field(v)?,
+            sample: sample_field(v, 1.0)?,
+        })),
+        "sweep" => Ok(Request::Sweep(SweepRequest {
+            tensors: str_list(v, "tensors")?.unwrap_or_else(|| vec!["nell-2".to_string()]),
+            scales: f64_list(v, "scales")?.unwrap_or_else(|| vec![1e-3]),
+            techs: str_list(v, "techs")?
+                .unwrap_or_else(|| vec!["e-sram".to_string(), "o-sram".to_string()]),
+            seed: u64_field(v, "seed")?.unwrap_or(42),
+            kernel: kernel_field(v)?,
+            engine: engine_field(v)?,
+            sample: sample_field(v, 1.0)?,
+        })),
+        "explore" => Ok(Request::Explore(ExploreRequest {
+            tensor: str_field(v, "tensor")?.unwrap_or("nell-2").to_string(),
+            scale: f64_field(v, "scale")?.unwrap_or(1e-3),
+            seed: u64_field(v, "seed")?.unwrap_or(42),
+            techs: str_list(v, "techs")?
+                .unwrap_or_else(|| vec!["e-sram".to_string(), "o-sram".to_string()]),
+            kernels: str_list(v, "kernels")?
+                .map_or(Ok(vec![KernelKind::Spmttkrp]), |names| {
+                    names.iter().map(|n| KernelKind::parse(n)).collect()
+                })?,
+            axes: str_list(v, "axes")?.unwrap_or_default(),
+            objective: str_field(v, "objective")?
+                .map_or(Ok(ObjectiveKind::Edp), ObjectiveKind::parse)?,
+            budget_mm2: f64_field(v, "budget_mm2")?,
+            exclude_wafer_scale: bool_field(v, "exclude_wafer_scale")?.unwrap_or(false),
+            sample: sample_field(v, crate::explore::DEFAULT_EXPLORE_SAMPLE_RATE)?,
+        })),
+        other => Err(format!(
+            "unknown cmd `{other}` (expected one of: simulate, sweep, explore, shutdown)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_mirror_the_cli() {
+        let (id, req) = parse_line(r#"{"cmd": "simulate"}"#);
+        assert_eq!(id, None);
+        let Ok(Request::Simulate(r)) = req else { panic!("{req:?}") };
+        assert_eq!(r.tensor, "nell-2");
+        assert_eq!(r.scale, 1e-3);
+        assert_eq!(r.seed, 42);
+        assert_eq!(r.tech, "o-sram");
+        assert_eq!(r.kernel, KernelKind::Spmttkrp);
+        assert_eq!(r.engine, EngineKind::Analytic);
+        assert!(r.sample.is_exact());
+    }
+
+    #[test]
+    fn ids_survive_bad_bodies() {
+        let (id, req) = parse_line(r#"{"id": 9, "cmd": "warp"}"#);
+        assert_eq!(id, Some(9));
+        assert!(req.unwrap_err().contains("unknown cmd `warp`"));
+        let (id, req) = parse_line(r#"{"id": 5, "cmd": "simulate", "scale": "big"}"#);
+        assert_eq!(id, Some(5));
+        assert!(req.unwrap_err().contains("`scale` must be a number"));
+        let (id, req) = parse_line("not json at all");
+        assert_eq!(id, None);
+        assert!(req.unwrap_err().contains("invalid JSON"));
+    }
+
+    #[test]
+    fn sweep_accepts_scalars_as_one_element_lists() {
+        let (_, req) =
+            parse_line(r#"{"cmd": "sweep", "tensors": "patents", "scales": 1e-4, "techs": ["o-sram"]}"#);
+        let Ok(Request::Sweep(r)) = req else { panic!("{req:?}") };
+        assert_eq!(r.tensors, ["patents"]);
+        assert_eq!(r.scales, [1e-4]);
+        assert_eq!(r.techs, ["o-sram"]);
+    }
+
+    #[test]
+    fn explore_decodes_the_full_grid_spec() {
+        let (_, req) = parse_line(
+            r#"{"cmd": "explore", "tensor": "nell-2", "scale": 1e-4,
+                "techs": ["e-sram", "o-sram"], "axes": ["n_pes=2,4"],
+                "objective": "runtime", "budget_mm2": 1e5,
+                "exclude_wafer_scale": true, "sample_rate": 0.5, "sample_seed": 3}"#,
+        );
+        let Ok(Request::Explore(r)) = req else { panic!("{req:?}") };
+        assert_eq!(r.axes, ["n_pes=2,4"]);
+        assert_eq!(r.objective, ObjectiveKind::Runtime);
+        assert_eq!(r.budget_mm2, Some(1e5));
+        assert!(r.exclude_wafer_scale);
+        assert_eq!(r.sample, SampleSpec::new(0.5, 3).unwrap());
+        // and the sample default is the explore default, not 1.0
+        let (_, req) = parse_line(r#"{"cmd": "explore"}"#);
+        let Ok(Request::Explore(r)) = req else { panic!("{req:?}") };
+        assert_eq!(r.sample.rate, crate::explore::DEFAULT_EXPLORE_SAMPLE_RATE);
+    }
+
+    #[test]
+    fn invalid_sample_rates_are_rejected_at_decode_time() {
+        let (_, req) = parse_line(r#"{"cmd": "simulate", "sample_rate": 0.0}"#);
+        assert!(req.unwrap_err().contains("(0, 1]"));
+    }
+}

@@ -15,10 +15,13 @@
 //!   bounded shrinking) used by the invariant tests.
 //! * [`bench`] — a miniature criterion: warmup, timed iterations,
 //!   mean/σ/min, throughput, and the same "name ... time" output layout.
+//! * [`json`] — a minimal JSON parser (the serve daemon's request
+//!   reader; the crate writes JSON by hand).
 
 pub mod bench;
 pub mod cli;
 pub mod configfile;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -12,7 +12,7 @@ fn help_lists_subcommands() {
     let out = bin().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["info", "simulate", "sweep", "explore", "reproduce", "cpals", "mttkrp"] {
+    for sub in ["info", "simulate", "sweep", "explore", "serve", "reproduce", "cpals", "mttkrp"] {
         assert!(text.contains(sub), "help missing `{sub}`:\n{text}");
     }
 }
@@ -23,7 +23,7 @@ fn unknown_subcommand_lists_every_registered_one() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("unknown subcommand `explode`"), "{err}");
-    for sub in ["info", "simulate", "sweep", "explore", "reproduce", "cpals", "mttkrp"] {
+    for sub in ["info", "simulate", "sweep", "explore", "serve", "reproduce", "cpals", "mttkrp"] {
         assert!(err.contains(sub), "error must list `{sub}`:\n{err}");
     }
 }

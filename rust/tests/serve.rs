@@ -1,0 +1,209 @@
+//! End-to-end contract tests for `photon-mttkrp serve`: drive the built
+//! binary over stdin/stdout NDJSON and pin the serving layer's promises
+//! — warm traffic answered from cache with byte-identical `"result"`
+//! payloads, resilience to malformed requests and corrupted cache
+//! files, and bit-identical batches at any `--threads` value. The
+//! `explore --cache-dir` warm-start path rides along, compared through
+//! its `--json` artifact.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use photon_mttkrp::util::json::Value;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_photon-mttkrp"))
+}
+
+/// Run `photon-mttkrp serve <args>` over one stdin stream; returns the
+/// reply lines. The daemon must exit cleanly (EOF or shutdown).
+fn serve(args: &[&str], input: &str) -> Vec<String> {
+    let mut child = bin()
+        .arg("serve")
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        stdin.write_all(input.as_bytes()).unwrap();
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "serve exited nonzero: {:?}", out.status);
+    String::from_utf8(out.stdout).unwrap().lines().map(str::to_string).collect()
+}
+
+fn parse(line: &str) -> Value {
+    Value::parse(line).unwrap_or_else(|e| panic!("reply is not JSON ({e}): {line}"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("photon_serve_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+const SIM: &str =
+    r#"{"id": 1, "cmd": "simulate", "scale": 1e-4, "tech": "o-sram", "engine": "analytic"}"#;
+
+#[test]
+fn round_trip_miss_then_hit_with_identical_results() {
+    let replies = serve(&[], &format!("{SIM}\n{SIM}\n"));
+    assert_eq!(replies.len(), 2);
+    let a = parse(&replies[0]);
+    let b = parse(&replies[1]);
+    assert_eq!(a.get("cache").unwrap().as_str(), Some("miss"), "{}", replies[0]);
+    assert_eq!(b.get("cache").unwrap().as_str(), Some("hit"), "{}", replies[1]);
+    assert_eq!(a.get("id").unwrap().as_u64(), Some(1));
+    assert_eq!(a.get("result"), b.get("result"), "warm result must match cold");
+    let o = a.get("result").unwrap().get("objectives").unwrap();
+    assert!(o.get("edp").unwrap().as_f64().unwrap() > 0.0);
+    // the hit's cache_stats reflect the first request's miss
+    let stats = b.get("cache_stats").unwrap();
+    assert_eq!(stats.get("hits").unwrap().as_u64(), Some(1));
+    assert_eq!(stats.get("misses").unwrap().as_u64(), Some(1));
+}
+
+#[test]
+fn persistent_cache_warms_a_fresh_daemon_process_bit_identically() {
+    let dir = tmp_dir("warm");
+    let arg = dir.to_str().unwrap();
+    let cold = serve(&["--cache-dir", arg], &format!("{SIM}\n"));
+    let warm = serve(&["--cache-dir", arg], &format!("{SIM}\n"));
+    let c = parse(&cold[0]);
+    let w = parse(&warm[0]);
+    assert_eq!(c.get("cache").unwrap().as_str(), Some("miss"), "{}", cold[0]);
+    assert_eq!(w.get("cache").unwrap().as_str(), Some("hit"), "{}", warm[0]);
+    assert_eq!(c.get("result"), w.get("result"));
+    // byte identity of the payload, not just value equality: the
+    // "result" substring must appear verbatim in both reply lines
+    let needle = {
+        let start = cold[0].find("\"result\":").unwrap();
+        &cold[0][start..]
+    };
+    let trimmed = needle.trim_end_matches('}');
+    assert!(
+        warm[0].contains(trimmed),
+        "warm reply must embed the cold result bytes\ncold: {}\nwarm: {}",
+        cold[0],
+        warm[0],
+    );
+    assert!(w.get("cache_stats").unwrap().get("loaded").unwrap().as_u64().unwrap() >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_cache_tail_is_survived_and_the_valid_prefix_still_serves() {
+    let dir = tmp_dir("corrupt");
+    let arg = dir.to_str().unwrap();
+    let cold = serve(&["--cache-dir", arg], &format!("{SIM}\n"));
+    assert_eq!(parse(&cold[0]).get("cache").unwrap().as_str(), Some("miss"));
+    // torn final record, as a crash mid-append would leave it
+    let store = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| p.extension().is_some_and(|x| x == "log"))
+        .expect("cache dir must hold the eval log");
+    let mut f = std::fs::OpenOptions::new().append(true).open(&store).unwrap();
+    f.write_all(b"\x00\xffgarbage not a record").unwrap();
+    drop(f);
+    let warm = serve(&["--cache-dir", arg], &format!("{SIM}\n"));
+    let w = parse(&warm[0]);
+    assert_eq!(w.get("cache").unwrap().as_str(), Some("hit"), "{}", warm[0]);
+    assert_eq!(parse(&cold[0]).get("result"), w.get("result"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batches_are_bit_identical_at_any_thread_count() {
+    // one batch window holding a sweep (cold fan-out) plus duplicates
+    let input = concat!(
+        r#"{"id": 1, "cmd": "sweep", "tensors": "nell-2", "scales": 1e-4, "techs": ["e-sram", "o-sram"]}"#,
+        "\n",
+        r#"{"id": 2, "cmd": "simulate", "scale": 1e-4, "tech": "e-sram"}"#,
+        "\n",
+    );
+    let runs: Vec<Vec<String>> = ["1", "2", "0"]
+        .iter()
+        .map(|t| serve(&["--threads", t], input))
+        .collect();
+    for replies in &runs {
+        assert_eq!(replies.len(), 2);
+        // the simulate point was computed by the sweep's cold fan-out
+        assert_eq!(parse(&replies[1]).get("cache").unwrap().as_str(), Some("hit"));
+    }
+    let base: Vec<Value> = runs[0].iter().map(|r| parse(r).get("result").unwrap().clone()).collect();
+    for replies in &runs[1..] {
+        for (b, r) in base.iter().zip(replies) {
+            assert_eq!(Some(b), parse(r).get("result"), "thread count changed a result");
+        }
+    }
+}
+
+#[test]
+fn malformed_requests_get_error_replies_and_the_daemon_keeps_serving() {
+    let input = format!(
+        "{}\n{}\n{SIM}\n{}\n",
+        "{ definitely not json",
+        r#"{"id": 9, "cmd": "simulate", "tech": "no-such-tech"}"#,
+        r#"{"id": 10, "cmd": "shutdown"}"#,
+    );
+    let replies = serve(&[], &input);
+    assert_eq!(replies.len(), 4, "{replies:?}");
+    assert!(replies[0].contains("\"error\""), "{}", replies[0]);
+    let e = parse(&replies[1]);
+    assert_eq!(e.get("id").unwrap().as_u64(), Some(9));
+    assert!(e.get("error").unwrap().as_str().unwrap().contains("no-such-tech"));
+    assert!(parse(&replies[2]).get("result").is_some(), "{}", replies[2]);
+    let s = parse(&replies[3]);
+    assert_eq!(s.get("result").unwrap().get("shutdown").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn explore_cache_dir_warm_start_reproduces_the_frontier_byte_for_byte() {
+    let dir = tmp_dir("explore");
+    let cache = dir.join("cache");
+    let run = |json: &str| {
+        let out = bin()
+            .args([
+                "explore",
+                "--tensor",
+                "nell-2",
+                "--scale",
+                "0.0001",
+                "--tech",
+                "o-sram",
+                "--axes",
+                "n_pes=2,4",
+                "--sample-rate",
+                "1.0",
+                "--cache-dir",
+                cache.to_str().unwrap(),
+                "--json",
+                json,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    };
+    let cold_json = dir.join("cold.json");
+    let warm_json = dir.join("warm.json");
+    let cold_err = run(cold_json.to_str().unwrap());
+    let warm_err = run(warm_json.to_str().unwrap());
+    // warm run: nothing simulated, everything answered from disk
+    assert!(cold_err.contains("loaded 0 cached evaluations"), "{cold_err}");
+    assert!(warm_err.contains("cache 0 miss"), "{warm_err}");
+    let cold = std::fs::read_to_string(&cold_json).unwrap();
+    let warm = std::fs::read_to_string(&warm_json).unwrap();
+    // identical except the legitimately-differing cache counter line
+    let strip = |s: &str| {
+        s.lines().filter(|l| !l.trim_start().starts_with("\"cache\":")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&cold), strip(&warm), "warm frontier must be byte-identical");
+    assert_ne!(cold, warm, "the cache counters themselves must differ cold vs warm");
+    let _ = std::fs::remove_dir_all(&dir);
+}
