@@ -1,5 +1,6 @@
 //! Explore-subsystem throughput: candidates/second of the four-phase
-//! Pareto search, cold vs warm evaluation cache.
+//! Pareto search, cold vs warm evaluation cache, and the reuse-distance
+//! profiled analytic screen vs per-candidate direct walks.
 //!
 //! A "candidate" is one (config × tech × kernel) point: the cold number
 //! prices a full analytic all-modes simulation per candidate (plus the
@@ -8,6 +9,13 @@
 //! [`photon_mttkrp::explore::EvalCache`] — the cross-search reuse path
 //! (`design_space` example §5). The warm/cold ratio is the headline:
 //! how much a refined search over an overlapping grid costs.
+//!
+//! The `screen/profiled` vs `screen/direct` pair compares the same cold
+//! search with the single-walk stack-distance profiler
+//! ([`photon_mttkrp::sim::profile`], the default) against per-candidate
+//! direct stream walks (`--no-profile`); the functional stream-walk
+//! counters of both screens are recorded alongside the timings so the
+//! walks-per-grid ratio lands in the perf trajectory.
 //!
 //! Writes `BENCH_explore.json` at the repository root (the CI
 //! `explore-smoke` job exercises the CLI path instead; this bench is the
@@ -65,6 +73,31 @@ fn main() {
         });
     }
 
+    // profiled vs direct analytic screen: identical cold searches, one
+    // with the stack-distance profiler (default), one forced to walk the
+    // stream once per candidate (the CLI's --no-profile). The profiled
+    // walk counter comes from the result, not the clock; the direct
+    // screen walks inside every candidate's analytic eval, so its count
+    // is the grid size.
+    let profiled_walks = std::cell::Cell::new(0u64);
+    let screen_candidates = spec(0, smoke).space.n_points() as f64;
+    for (name, profile) in [("screen/profiled", true), ("screen/direct", false)] {
+        let mut s = spec(0, smoke);
+        s.profile = profile;
+        b.bench_items(name, screen_candidates, || {
+            let cache = EvalCache::new();
+            let r = run_explore_with_cache(&s, &cache).expect("explore");
+            if profile {
+                profiled_walks.set(r.functional_walks);
+            } else {
+                assert_eq!(r.functional_walks, 0, "direct screen must not profile");
+            }
+            r.frontier.len()
+        });
+    }
+    b.record_value("screen/profiled/walks", profiled_walks.get() as f64, "stream walks per grid");
+    b.record_value("screen/direct/walks", screen_candidates, "stream walks per grid");
+
     // headline ratio: warm vs cold at the default thread budget
     let per_s = |name: &str| {
         b.results()
@@ -78,6 +111,14 @@ fn main() {
         "## explore: {cold:.3e} candidates/s cold, {warm:.3e} candidates/s warm \
          ({:.1}x cache speedup)",
         warm / cold
+    );
+    let (sp, sd) = (per_s("screen/profiled"), per_s("screen/direct"));
+    println!(
+        "## screen: {sp:.3e} candidates/s profiled ({} stream walk(s)/grid) vs \
+         {sd:.3e} direct ({:.0} walks/grid) — {:.1}x",
+        profiled_walks.get(),
+        screen_candidates,
+        sp / sd
     );
 
     println!("\n{}", b.summary_table().render_ascii());

@@ -1,10 +1,22 @@
 //! Per-set LRU replacement state (the "LRU RAM" shared by the two cache
-//! pipelines in Figs. 5–6).
+//! pipelines in Figs. 5–6), plus the Mattson stack-distance profile that
+//! prices *every* associativity of a set mapping from one stream walk.
 //!
-//! Implemented as per-way monotonic use-stamps: touch sets the way's stamp
-//! to a counter, victim is the smallest stamp. For the associativities in
-//! play (≤ 16) a linear scan beats any fancier structure and matches what
-//! the hardware's per-set age matrix computes.
+//! [`LruState`] is implemented as per-way monotonic use-stamps: touch sets
+//! the way's stamp to a counter, victim is the smallest stamp. For the
+//! associativities in play (≤ 16) a linear scan beats any fancier
+//! structure and matches what the hardware's per-set age matrix computes.
+//!
+//! [`StackDistance`] exploits the LRU **inclusion property**: an `A`-way
+//! set holds exactly the `A` most-recently-used distinct keys of that
+//! set, so an access hits at associativity `A` iff its recency depth in
+//! the set's full LRU stack is `< A`. One truncated per-set recency stack
+//! therefore answers hit/miss/eviction counts for every `A ≤ cap` of the
+//! same set count — the classic single-pass reuse-distance profile
+//! ([`crate::sim::profile`] walks each kernel stream once and derives the
+//! whole geometry sub-grid from it, bit-identical to direct simulation).
+
+use crate::cache::cache::CacheStats;
 
 /// LRU state for one cache (all sets), `assoc` ways each.
 #[derive(Clone, Debug)]
@@ -52,9 +64,118 @@ impl LruState {
     }
 }
 
+/// Keys never take this value ([`crate::cache::cache::SetAssocCache`]
+/// holds the same reservation), so it can mark empty stack slots.
+const INVALID: u64 = u64::MAX;
+
+/// Per-set LRU stack-distance histogram over one access stream.
+///
+/// Holds, for a fixed power-of-two set count, one recency stack per set
+/// truncated to `cap` entries plus a histogram of observed depths
+/// (`cap` = "deeper than `cap` or never seen" — a miss at every
+/// associativity the profile can answer). [`stats_at`][Self::stats_at]
+/// then derives the exact [`CacheStats`] a
+/// [`SetAssocCache`][crate::cache::cache::SetAssocCache] of any
+/// associativity `A ≤ cap` would report over the same stream:
+///
+/// * `hits(A)   = Σ_set Σ_{d<A} hist[set][d]` (inclusion property),
+/// * `misses(A) = accesses − hits(A)`,
+/// * `evictions(A) = Σ_set max(0, misses_set − A)` — the first `A`
+///   fills of a set land in never-touched ways
+///   ([`LruState::victim`] prefers them), every later fill evicts,
+/// * `writebacks = 0` — the factor-row streams are read-only, a line is
+///   never dirtied (the controller's own invariant).
+///
+/// The caller owns the set mapping: pass the same set index the target
+/// cache would compute (its masked [`mix_key`][crate::cache::cache::mix_key]
+/// fold), so one profile per set count serves every associativity.
+#[derive(Clone, Debug)]
+pub struct StackDistance {
+    sets: usize,
+    cap: usize,
+    /// keys[set * cap + i] = i-th most-recently-used key of `set`
+    /// (front-packed; `INVALID` = empty slot).
+    keys: Vec<u64>,
+    /// hist[set * (cap + 1) + d] = accesses of `set` at recency depth
+    /// `d`; bucket `cap` counts deeper-than-`cap` and compulsory
+    /// (first-touch) accesses together — both miss at every `A ≤ cap`.
+    hist: Vec<u64>,
+}
+
+impl StackDistance {
+    /// Profile for `sets` LRU sets answering associativities `1..=cap`.
+    pub fn new(sets: usize, cap: usize) -> Self {
+        assert!(sets >= 1 && cap >= 1);
+        StackDistance { sets, cap, keys: vec![INVALID; sets * cap], hist: vec![0; sets * (cap + 1)] }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    /// Largest associativity [`stats_at`][Self::stats_at] can answer.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one access of `key` in `set`; returns its recency depth
+    /// (`cap` ⇒ deeper than the truncated stack or never seen).
+    #[inline]
+    pub fn access(&mut self, set: usize, key: u64) -> usize {
+        debug_assert!(set < self.sets);
+        debug_assert_ne!(key, INVALID);
+        let base = set * self.cap;
+        let stack = &mut self.keys[base..base + self.cap];
+        let mut depth = self.cap;
+        for (i, &k) in stack.iter().enumerate() {
+            if k == key {
+                depth = i;
+                break;
+            }
+            if k == INVALID {
+                // front-packed: nothing beyond the first empty slot
+                break;
+            }
+        }
+        // move-to-front (drop the last entry when the key was absent)
+        let shift = depth.min(self.cap - 1);
+        stack.copy_within(0..shift, 1);
+        stack[0] = key;
+        self.hist[set * (self.cap + 1) + depth] += 1;
+        depth
+    }
+
+    /// Exact [`CacheStats`] of an `assoc`-way LRU cache with this set
+    /// count over the profiled stream (`assoc ≤ cap`).
+    pub fn stats_at(&self, assoc: usize) -> CacheStats {
+        assert!(assoc >= 1 && assoc <= self.cap, "assoc {assoc} outside 1..={}", self.cap);
+        let mut out = CacheStats::default();
+        let width = self.cap + 1;
+        for set in 0..self.sets {
+            let h = &self.hist[set * width..(set + 1) * width];
+            let hits: u64 = h[..assoc].iter().sum();
+            let accesses: u64 = h.iter().sum();
+            let misses = accesses - hits;
+            out.hits += hits;
+            out.misses += misses;
+            out.evictions += misses.saturating_sub(assoc as u64);
+        }
+        out
+    }
+
+    /// Clear stacks and histograms (reuse across profile partitions —
+    /// e.g. one PE's stream ends and the next starts cold).
+    pub fn reset(&mut self) {
+        self.keys.fill(INVALID);
+        self.hist.fill(0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, FnGen};
+    use crate::util::rng::Rng;
 
     #[test]
     fn victim_prefers_untouched_ways() {
@@ -101,5 +222,65 @@ mod tests {
         assert_eq!(l.victim(0), 2);
         l.touch(0, 2);
         assert_eq!(l.victim(0), 3);
+    }
+
+    #[test]
+    fn stack_distance_counts_textbook_depths() {
+        // stream a b c a b c on one set: three compulsory misses, then
+        // three depth-2 reuses — hits at A=3, misses at A≤2
+        let mut sd = StackDistance::new(1, 4);
+        for key in [1u64, 2, 3, 1, 2, 3] {
+            sd.access(0, key);
+        }
+        let s3 = sd.stats_at(3);
+        assert_eq!((s3.hits, s3.misses, s3.evictions), (3, 3, 0));
+        let s2 = sd.stats_at(2);
+        assert_eq!((s2.hits, s2.misses, s2.evictions), (0, 6, 4));
+        let s4 = sd.stats_at(4);
+        assert_eq!((s4.hits, s4.misses), (3, 3));
+    }
+
+    #[test]
+    fn stack_distance_matches_direct_cache_on_random_streams() {
+        // the inclusion property, checked mechanically: one profile per
+        // set count must reproduce a directly simulated SetAssocCache's
+        // hits / misses / evictions for every associativity it answers
+        use crate::cache::cache::{mix_key, SetAssocCache};
+        let cap = 8usize;
+        let gen = FnGen(|rng: &mut Rng| {
+            let n = 1_000 + rng.index(1_000);
+            (0..n).map(|_| rng.below(400)).collect::<Vec<u64>>()
+        });
+        check("stack_distance_inclusion", 25, &gen, |stream| {
+            for sets in [1usize, 4, 16, 64] {
+                let mut sd = StackDistance::new(sets, cap);
+                for &k in stream {
+                    sd.access((mix_key(k) as usize) & (sets - 1), k);
+                }
+                for assoc in 1..=cap {
+                    let mut c = SetAssocCache::new(sets, assoc);
+                    for &k in stream {
+                        c.access(k, false);
+                    }
+                    let derived = sd.stats_at(assoc);
+                    if derived != c.stats {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn stack_distance_reset_restarts_cold() {
+        let mut sd = StackDistance::new(2, 4);
+        sd.access(0, 7);
+        sd.access(0, 7);
+        assert_eq!(sd.stats_at(4).hits, 1);
+        sd.reset();
+        assert_eq!(sd.stats_at(4), CacheStats::default());
+        // after reset the first touch is compulsory again
+        assert_eq!(sd.access(0, 7), sd.cap());
     }
 }

@@ -12,6 +12,27 @@
 //!    factor) bypass the cache so they neither pollute it nor pay tag
 //!    overhead; they go straight to DRAM as independent bursts.
 //!
+//! ## Functional/timing split
+//!
+//! The controller's state is split in two strata:
+//!
+//! * **Functional counters** — integer hit/miss/traffic/active-word
+//!   counts, a pure function of the access stream and the cache
+//!   *geometry* (sets × assoc × line, plus the level stack). These are
+//!   what [`Self::counts`] extracts and [`Self::load_counts`] restores,
+//!   and what the reuse-distance profiler
+//!   ([`crate::sim::profile`]) derives without replaying the stream.
+//! * **Pricing constants** — technology-dependent occupancies hoisted
+//!   once in [`Self::new`] (`hit_occ`, `fill_occ`, per-level
+//!   `serve_occ`/`fill_occ`, `miss_dram_cycles`, the element-DMA
+//!   charge). Every busy figure is **derived** from the functional
+//!   counters at read time (`count × constant`, see [`Self::cache_busy`]
+//!   and friends), never accumulated per access — which is what makes a
+//!   priced-from-counts report bit-identical to a directly simulated
+//!   one. The only incremental `f64` left is `stream_busy`, charged by
+//!   the handful of [`Self::stream`] calls the engine replays verbatim
+//!   on the pricing path.
+//!
 //! ## Memory hierarchy (`AcceleratorConfig::levels`)
 //!
 //! When the config carries a non-empty level stack, the type-1 *miss*
@@ -21,7 +42,7 @@
 //! DRAM and fills every missed level on the way back in. Each level
 //! keeps a functional [`SetAssocCache`] over coarsened row keys (its
 //! line is a power-of-two multiple of the PE cache line, so the level
-//! key is `row >> shift`), per-level hit/traffic/word/busy counters
+//! key is `row >> shift`), per-level hit/traffic/word counters
 //! (surfaced as [`LevelReport`]s), and hoisted `ArrayTiming` occupancy
 //! constants the event engine re-uses for its per-level arbitration.
 //! Bypass accesses and dirty writebacks keep the direct-DRAM path, so
@@ -34,7 +55,7 @@
 use crate::accel::config::AcceleratorConfig;
 use crate::cache::cache::{row_key, Access, CacheStats, SetAssocCache};
 use crate::cache::pipeline::{ArrayTiming, CacheTiming};
-use crate::dma::elementwise::ElementDma;
+use crate::dma::elementwise::{ElementCharge, ElementDma};
 use crate::dma::stream::StreamDma;
 use crate::mem::dram::{DramChannelState, DramConfig};
 use crate::mem::hierarchy::LevelReport;
@@ -70,11 +91,10 @@ struct LevelState {
     request_words: u64,
     /// 32-bit words of one level line.
     line_words: u64,
-    // --- accounting ---
+    // --- accounting (functional counters; busy is derived) ---
     accesses: u64,
     hits: u64,
     misses: u64,
-    busy: f64,
     words: u64,
     // --- spec echo for reports ---
     name: String,
@@ -84,6 +104,12 @@ struct LevelState {
 }
 
 impl LevelState {
+    /// Busy cycles, derived: every access serves the inner request,
+    /// every miss additionally writes the level's own line.
+    fn busy(&self) -> f64 {
+        self.accesses as f64 * self.serve_occ + self.misses as f64 * self.fill_occ
+    }
+
     fn report(&self) -> LevelReport {
         LevelReport {
             name: self.name.clone(),
@@ -95,8 +121,54 @@ impl LevelState {
             misses: self.misses,
             traffic_bytes: self.accesses * self.request_words * 4,
             words: self.words,
-            busy_cycles: self.busy,
+            busy_cycles: self.busy(),
         }
+    }
+}
+
+/// Per-level functional counters, the hierarchy slice of
+/// [`FunctionalCounts`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LevelCounts {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// The complete functional state of one controller after a stream walk:
+/// everything the pricing pass needs, and nothing technology-dependent.
+/// Extracted by [`MemoryController::counts`], restored into a fresh
+/// controller (possibly built for a *different* technology) by
+/// [`MemoryController::load_counts`] — the contract the profiler-parity
+/// tests pin is that `walk → counts → load_counts` prices bit-identically
+/// to `walk` on the priced controller itself.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FunctionalCounts {
+    /// Per-cache hit/miss/eviction/writeback counters (index = cache).
+    pub cache_stats: Vec<CacheStats>,
+    /// §IV-A type-3 bypass loads served by the element-wise DMA.
+    pub element_accesses: u64,
+    /// DRAM random accesses of one PE-cache line each: bypass loads,
+    /// degenerate-path miss fills and dirty writebacks.
+    pub dram_line_accesses: u64,
+    /// DRAM random accesses of one outermost-level line each
+    /// (all-levels hierarchy misses; 0 for the degenerate stack).
+    pub dram_hier_accesses: u64,
+    /// Per-level counters, stack order (outermost first).
+    pub levels: Vec<LevelCounts>,
+}
+
+impl FunctionalCounts {
+    /// Combined per-PE cache statistics.
+    pub fn total_cache_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.cache_stats {
+            s.hits += c.hits;
+            s.misses += c.misses;
+            s.evictions += c.evictions;
+            s.writebacks += c.writebacks;
+        }
+        s
     }
 }
 
@@ -109,11 +181,9 @@ pub struct MemoryController {
     pub element_dma: ElementDma,
     pub dram_cfg: DramConfig,
     pub dram: DramChannelState,
-    /// Busy cycles per cache (hit path + fill path share the arrays).
-    pub cache_busy: Vec<f64>,
-    /// Busy cycles of the stream/element DMA buffers.
+    /// Busy cycles of the stream DMA buffer (incremental: the engine's
+    /// few `stream` calls are replayed verbatim on the pricing path).
     pub stream_busy: f64,
-    pub element_busy: f64,
     /// Active-word counters for the Eq. 3 `S_active` energy terms.
     pub cache_words: u64,
     pub dma_words: u64,
@@ -134,6 +204,14 @@ pub struct MemoryController {
     probe_words: u64,
     words_per_line: u64,
     miss_dram_cycles: f64,
+    /// One element-wise bypass transfer of a PE-cache line, hoisted
+    /// (the element DMA's charge is a pure function of the derated
+    /// DRAM config and the line size).
+    element_charge: ElementCharge,
+    // --- functional counters (busy figures derive from these) ---
+    element_accesses: u64,
+    dram_line_accesses: u64,
+    dram_hier_accesses: u64,
     /// Configured memory hierarchy (empty = degenerate single-level
     /// model; the miss path then runs the pre-hierarchy code exactly).
     levels: Vec<LevelState>,
@@ -217,7 +295,6 @@ impl MemoryController {
                     accesses: 0,
                     hits: 0,
                     misses: 0,
-                    busy: 0.0,
                     words: 0,
                     name: spec.name.clone(),
                     capacity_bytes: spec.capacity_bytes,
@@ -232,6 +309,8 @@ impl MemoryController {
         } else {
             dram_cfg.random_access_cycles(hier_line_bytes)
         };
+        let element_dma = ElementDma::new(buffer_timing);
+        let element_charge = element_dma.access(&dram_cfg, cfg.line_bytes as u64);
         MemoryController {
             tech: tech.clone(),
             caches,
@@ -241,19 +320,24 @@ impl MemoryController {
             words_per_line,
             miss_dram_cycles: dram_cfg.random_access_cycles(cfg.line_bytes as u64),
             cache_timing,
-            stream_dma: StreamDma::new(buffer_timing.clone(), cfg.dma_buffer_bytes),
-            element_dma: ElementDma::new(buffer_timing),
+            stream_dma: StreamDma::new(
+                ArrayTiming::new(t, cfg.fabric_hz, banks),
+                cfg.dma_buffer_bytes,
+            ),
+            element_dma,
             dram_cfg,
             dram: DramChannelState::default(),
-            cache_busy: vec![0.0; cfg.n_caches],
             stream_busy: 0.0,
-            element_busy: 0.0,
             cache_words: 0,
             dma_words: 0,
             bypass,
             line_bytes: cfg.line_bytes as u64,
             ways_read_per_lookup: ways_read,
             tag_words_per_access: tag_words,
+            element_charge,
+            element_accesses: 0,
+            dram_line_accesses: 0,
+            dram_hier_accesses: 0,
             levels,
             hier_miss_dram_cycles,
             hier_line_bytes,
@@ -273,14 +357,16 @@ impl MemoryController {
     }
 
     /// One factor-row load: the §IV-A type-1 (or type-3, if bypassed) path.
-    /// Charges timing + traffic; returns how it was served.
+    /// Bumps the functional counters; returns how it was served. All
+    /// timing derives from the counters at read time (see module docs).
     #[inline]
     pub fn factor_row_load(&mut self, matrix: usize, row: u32) -> Served {
         if self.is_bypassed(matrix) {
-            let c = self.element_dma.access(&self.dram_cfg, self.line_bytes);
-            self.dram.random_access(&self.dram_cfg, self.line_bytes);
-            self.element_busy += c.buffer_cycles;
-            self.dma_words += c.buffer_words;
+            self.element_accesses += 1;
+            self.dma_words += self.element_charge.buffer_words;
+            self.dram_line_accesses += 1;
+            self.dram.bytes_random += self.line_bytes;
+            self.dram.random_accesses += 1;
             return Served::Bypass;
         }
         let ci = self.cache_of(matrix);
@@ -292,18 +378,16 @@ impl MemoryController {
         // constants are hoisted into the controller (§Perf).
         match self.caches[ci].access(key, false) {
             Access::Hit => {
-                self.cache_busy[ci] += self.hit_occ;
                 self.cache_words += self.probe_words;
                 Served::CacheHit { cache: ci }
             }
             Access::Miss { evicted_dirty } => {
                 // probe + MEM-pipeline line fill (Fig. 5)
-                self.cache_busy[ci] += self.hit_occ + self.fill_occ;
                 self.cache_words += self.probe_words + self.words_per_line;
                 if self.levels.is_empty() {
                     // degenerate single-level model: straight to DRAM
                     // (this arm is the pre-hierarchy code, unchanged)
-                    self.dram.busy_cycles += self.miss_dram_cycles;
+                    self.dram_line_accesses += 1;
                     self.dram.bytes_random += self.line_bytes;
                     self.dram.random_accesses += 1;
                 } else {
@@ -313,7 +397,7 @@ impl MemoryController {
                     // dirty writebacks post straight to DRAM in both
                     // shapes (keeps the per-level traffic invariant
                     // exact: level accesses count only line fills)
-                    self.dram.busy_cycles += self.miss_dram_cycles;
+                    self.dram_line_accesses += 1;
                     self.dram.bytes_random += self.line_bytes;
                     self.dram.random_accesses += 1;
                     self.cache_words += self.words_per_line;
@@ -330,10 +414,9 @@ impl MemoryController {
     /// (0 = innermost hit … `n_levels()` = DRAM).
     ///
     /// Accounting per probed level: every probe reads the inner
-    /// request's words (`serve_occ` busy); a miss additionally writes
-    /// the level's own line (`fill_occ` busy). Levels are read-only
-    /// caches over factor rows — no dirty state, so no level-level
-    /// writebacks.
+    /// request's words; a miss additionally writes the level's own
+    /// line. Levels are read-only caches over factor rows — no dirty
+    /// state, so no level-level writebacks.
     fn hierarchy_fill(&mut self, matrix: usize, row: u32) -> u8 {
         let mut depth = 0u8;
         for idx in (0..self.levels.len()).rev() {
@@ -341,7 +424,6 @@ impl MemoryController {
             let key = row_key(matrix, row >> lv.row_shift);
             lv.accesses += 1;
             lv.words += lv.request_words;
-            lv.busy += lv.serve_occ;
             match lv.cache.access(key, false) {
                 Access::Hit => {
                     lv.hits += 1;
@@ -350,13 +432,12 @@ impl MemoryController {
                 Access::Miss { .. } => {
                     lv.misses += 1;
                     lv.words += lv.line_words;
-                    lv.busy += lv.fill_occ;
                     depth += 1;
                 }
             }
         }
         // missed every level: one outermost-line fetch from DRAM
-        self.dram.busy_cycles += self.hier_miss_dram_cycles;
+        self.dram_hier_accesses += 1;
         self.dram.bytes_random += self.hier_line_bytes;
         self.dram.random_accesses += 1;
         depth
@@ -375,9 +456,35 @@ impl MemoryController {
         self.last_fill_depth
     }
 
-    /// Accumulated busy cycles of level `i` (stack order).
+    /// Busy cycles of cache `ci`, derived: every probe occupies the hit
+    /// path, every miss additionally occupies the MEM-pipeline fill.
+    pub fn cache_busy(&self, ci: usize) -> f64 {
+        let s = &self.caches[ci].stats;
+        s.accesses() as f64 * self.hit_occ + s.misses as f64 * self.fill_occ
+    }
+
+    /// [`Self::cache_busy`] for every cache, in cache order.
+    pub fn cache_busy_vec(&self) -> Vec<f64> {
+        (0..self.caches.len()).map(|ci| self.cache_busy(ci)).collect()
+    }
+
+    /// Busy cycles of the element-wise DMA buffer, derived.
+    pub fn element_busy(&self) -> f64 {
+        self.element_accesses as f64 * self.element_charge.buffer_cycles
+    }
+
+    /// DRAM channel busy cycles: derived random-access occupancy
+    /// (line-sized + outermost-line-sized) plus the incrementally
+    /// charged stream occupancy.
+    pub fn dram_busy(&self) -> f64 {
+        self.dram_line_accesses as f64 * self.miss_dram_cycles
+            + self.dram_hier_accesses as f64 * self.hier_miss_dram_cycles
+            + self.dram.busy_cycles
+    }
+
+    /// Accumulated busy cycles of level `i` (stack order), derived.
     pub fn level_busy(&self, i: usize) -> f64 {
-        self.levels[i].busy
+        self.levels[i].busy()
     }
 
     /// Per-level event-engine timing constants, **innermost-first**
@@ -424,16 +531,67 @@ impl MemoryController {
         s
     }
 
+    /// Extract the functional counters after a stream walk — the
+    /// technology-independent half of the controller's state (see
+    /// module docs and [`FunctionalCounts`]).
+    pub fn counts(&self) -> FunctionalCounts {
+        FunctionalCounts {
+            cache_stats: self.caches.iter().map(|c| c.stats).collect(),
+            element_accesses: self.element_accesses,
+            dram_line_accesses: self.dram_line_accesses,
+            dram_hier_accesses: self.dram_hier_accesses,
+            levels: self
+                .levels
+                .iter()
+                .map(|l| LevelCounts { accesses: l.accesses, hits: l.hits, misses: l.misses })
+                .collect(),
+        }
+    }
+
+    /// Restore functional counters into a **fresh** controller (pricing
+    /// pass): sets the integer counts and derives every traffic figure
+    /// (`cache_words`, `dma_words`, DRAM random bytes/accesses, level
+    /// words) exactly as the per-access path would have accumulated
+    /// them — u64 sums commute, so the results are identical, and every
+    /// busy figure already derives from the counts. Cache *tag* state is
+    /// **not** restored: a loaded controller prices and reports, it does
+    /// not continue the walk.
+    pub fn load_counts(&mut self, counts: &FunctionalCounts) {
+        assert_eq!(counts.cache_stats.len(), self.caches.len(), "cache count mismatch");
+        assert_eq!(counts.levels.len(), self.levels.len(), "level stack mismatch");
+        let mut cache_words = 0u64;
+        for (c, s) in self.caches.iter_mut().zip(&counts.cache_stats) {
+            c.stats = *s;
+            cache_words += s.accesses() * self.probe_words
+                + (s.misses + s.writebacks) * self.words_per_line;
+        }
+        self.cache_words += cache_words;
+        self.element_accesses = counts.element_accesses;
+        self.dma_words += counts.element_accesses * self.element_charge.buffer_words;
+        self.dram_line_accesses = counts.dram_line_accesses;
+        self.dram_hier_accesses = counts.dram_hier_accesses;
+        self.dram.bytes_random += counts.dram_line_accesses * self.line_bytes
+            + counts.dram_hier_accesses * self.hier_line_bytes;
+        self.dram.random_accesses += counts.dram_line_accesses + counts.dram_hier_accesses;
+        for (lv, lc) in self.levels.iter_mut().zip(&counts.levels) {
+            lv.accesses = lc.accesses;
+            lv.hits = lc.hits;
+            lv.misses = lc.misses;
+            lv.words = lc.accesses * lv.request_words + lc.misses * lv.line_words;
+        }
+    }
+
     /// Busiest single resource the controller owns, in cycles (the
     /// engine's bottleneck scan folds this in).
     pub fn max_busy(&self) -> f64 {
-        let cache_max = self.cache_busy.iter().cloned().fold(0.0f64, f64::max);
-        let level_max = self.levels.iter().map(|l| l.busy).fold(0.0f64, f64::max);
+        let cache_max =
+            (0..self.caches.len()).map(|ci| self.cache_busy(ci)).fold(0.0f64, f64::max);
+        let level_max = self.levels.iter().map(|l| l.busy()).fold(0.0f64, f64::max);
         cache_max
             .max(level_max)
-            .max(self.dram.busy_cycles)
+            .max(self.dram_busy())
             .max(self.stream_busy)
-            .max(self.element_busy)
+            .max(self.element_busy())
     }
 }
 
@@ -461,13 +619,13 @@ mod tests {
         let mut mc = MemoryController::new(&cfg(), &esram(), &[1000]);
         let s1 = mc.factor_row_load(0, 7);
         assert!(matches!(s1, Served::CacheMiss { cache: 0, writeback: false }));
-        let dram_after_miss = mc.dram.busy_cycles;
+        let dram_after_miss = mc.dram_busy();
         assert!(dram_after_miss > 0.0);
         let s2 = mc.factor_row_load(0, 7);
         assert_eq!(s2, Served::CacheHit { cache: 0 });
         // hit adds cache busy but no dram
-        assert_eq!(mc.dram.busy_cycles, dram_after_miss);
-        assert!(mc.cache_busy[0] > 0.0);
+        assert_eq!(mc.dram_busy(), dram_after_miss);
+        assert!(mc.cache_busy(0) > 0.0);
         assert_eq!(mc.cache_stats().hits, 1);
         assert_eq!(mc.cache_stats().misses, 1);
     }
@@ -502,7 +660,7 @@ mod tests {
         assert_eq!(mc.factor_row_load(0, 3), Served::Bypass);
         // bypass never touches the caches
         assert_eq!(mc.cache_stats().accesses(), 0);
-        assert!(mc.element_busy > 0.0);
+        assert!(mc.element_busy() > 0.0);
         assert!(mc.dram.random_accesses == 1);
     }
 
@@ -523,7 +681,7 @@ mod tests {
             me.factor_row_load(0, r % 50);
             mo.factor_row_load(0, r % 50);
         }
-        assert!(me.cache_busy[0] > 10.0 * mo.cache_busy[0]);
+        assert!(me.cache_busy(0) > 10.0 * mo.cache_busy(0));
         // functional behaviour identical: same hit counts
         assert_eq!(me.cache_stats(), mo.cache_stats());
     }
@@ -619,5 +777,64 @@ mod tests {
         let we0 = me.cache_words;
         me.factor_row_load(0, 1);
         assert_eq!((me.cache_words - we0) / w_hit, 3);
+    }
+
+    /// The functional/timing contract: walk a stream directly on one
+    /// controller, extract [`FunctionalCounts`], restore them into a
+    /// fresh controller of the same geometry — every traffic counter
+    /// and every derived busy figure must be bit-identical.
+    #[test]
+    fn counts_roundtrip_prices_bit_identically() {
+        let mut shapes = vec![cfg()];
+        let mut leveled = cfg();
+        leveled.levels =
+            crate::mem::hierarchy::parse_levels("outer:64KiB:line256,inner:4KiB").unwrap();
+        leveled.validate().unwrap();
+        shapes.push(leveled);
+        let mut bypassing = cfg();
+        bypassing.cache_bypass_factor = Some(1);
+        shapes.push(bypassing);
+        for c in &shapes {
+            let rows = [(c.cache_lines * 2) as u64, 500, 300];
+            let mut direct = MemoryController::new(c, &esram(), &rows);
+            let mut x = 1u64;
+            for _ in 0..4000 {
+                // LCG-scrambled matrix/row pattern with real reuse
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let m = (x >> 33) as usize % rows.len();
+                let r = ((x >> 16) % 512) as u32;
+                direct.factor_row_load(m, r);
+            }
+            let counts = direct.counts();
+            let mut priced = MemoryController::new(c, &esram(), &rows);
+            priced.load_counts(&counts);
+            assert_eq!(priced.cache_stats(), direct.cache_stats());
+            assert_eq!(priced.cache_words, direct.cache_words);
+            assert_eq!(priced.dma_words, direct.dma_words);
+            assert_eq!(priced.dram.bytes_random, direct.dram.bytes_random);
+            assert_eq!(priced.dram.random_accesses, direct.dram.random_accesses);
+            for ci in 0..c.n_caches {
+                assert_eq!(priced.cache_busy(ci).to_bits(), direct.cache_busy(ci).to_bits());
+            }
+            assert_eq!(priced.dram_busy().to_bits(), direct.dram_busy().to_bits());
+            assert_eq!(priced.element_busy().to_bits(), direct.element_busy().to_bits());
+            for i in 0..direct.n_levels() {
+                assert_eq!(priced.level_busy(i).to_bits(), direct.level_busy(i).to_bits());
+            }
+            let (ra, rb) = (direct.level_reports(), priced.level_reports());
+            assert_eq!(ra.len(), rb.len());
+            for (a, b) in ra.iter().zip(&rb) {
+                assert_eq!(a.accesses, b.accesses);
+                assert_eq!(a.words, b.words);
+                assert_eq!(a.busy_cycles.to_bits(), b.busy_cycles.to_bits());
+            }
+            // streams replay verbatim on the pricing path and commute
+            // with the loaded counts
+            direct.stream(1 << 16);
+            priced.stream(1 << 16);
+            assert_eq!(priced.dma_words, direct.dma_words);
+            assert_eq!(priced.stream_busy.to_bits(), direct.stream_busy.to_bits());
+            assert_eq!(priced.dram_busy().to_bits(), direct.dram_busy().to_bits());
+        }
     }
 }

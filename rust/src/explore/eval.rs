@@ -35,12 +35,13 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::energy::model::EnergyModel;
 use crate::explore::objective::Objectives;
 use crate::explore::space::Candidate;
 use crate::explore::store::EvalStore;
+use crate::sim::profile::GeometryProfile;
 use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
 use crate::tensor::csf::ModeView;
@@ -50,12 +51,25 @@ use crate::tensor::csf::ModeView;
 /// be handed to every evaluation job. Optionally backed by an on-disk
 /// [`EvalStore`]: entries load at open and every miss is appended, so
 /// the cache survives the process (see [`crate::explore::store`]).
+///
+/// Alongside the objective map the cache holds the **functional memo**:
+/// [`GeometryProfile`]s keyed by [`crate::explore::key::functional_key`]
+/// — the geometry tier of the two-tier key scheme. The memo is
+/// in-memory only (profiles re-derive in one stream walk, so persisting
+/// them buys little), but because the serve daemon owns one `EvalCache`
+/// across batch windows, profiles are shared across windows
+/// automatically, exactly like warm objective entries.
 #[derive(Default)]
 pub struct EvalCache {
     map: Mutex<HashMap<String, Objectives>>,
     hits: AtomicU64,
     misses: AtomicU64,
     store: Option<EvalStore>,
+    /// The functional memo: geometry-tier key → profiled stream walk.
+    profiles: Mutex<HashMap<String, Arc<GeometryProfile>>>,
+    /// Full-workload functional stream walks performed to fill the memo
+    /// (see [`Self::functional_walks`]).
+    walks: AtomicU64,
 }
 
 impl EvalCache {
@@ -115,6 +129,45 @@ impl EvalCache {
     /// by the serving layer to plan a batch without distorting stats.
     pub fn peek(&self, key: &str) -> Option<Objectives> {
         self.map.lock().unwrap().get(key).copied()
+    }
+
+    /// The memoized functional profile for a geometry-tier key
+    /// ([`crate::explore::key::functional_key`]), if one was profiled.
+    pub fn functional_profile(&self, key: &str) -> Option<Arc<GeometryProfile>> {
+        self.profiles.lock().unwrap().get(key).cloned()
+    }
+
+    /// Memoize freshly profiled geometries. First insert wins on a key
+    /// race — harmless, profiles of the same key are bit-identical by
+    /// the profiler's contract.
+    pub fn store_profiles(&self, entries: impl IntoIterator<Item = (String, GeometryProfile)>) {
+        let mut map = self.profiles.lock().unwrap();
+        for (key, profile) in entries {
+            map.entry(key).or_insert_with(|| Arc::new(profile));
+        }
+    }
+
+    /// Record `n` full-workload functional stream walks.
+    ///
+    /// **Unit:** one walk = one complete traversal of a workload's
+    /// access streams (every mode of one kernel) — the same work one
+    /// direct candidate evaluation performs. One
+    /// [`crate::sim::profile::profile_geometries`] call is one walk no
+    /// matter how many geometries it answers; that is what the explore
+    /// screen's walks-vs-grid-points ratio measures.
+    pub fn add_walks(&self, n: u64) {
+        self.walks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Full-workload functional stream walks performed so far (see
+    /// [`Self::add_walks`] for the unit).
+    pub fn functional_walks(&self) -> u64 {
+        self.walks.load(Ordering::Relaxed)
+    }
+
+    /// Distinct geometry profiles currently memoized.
+    pub fn profiled_geometries(&self) -> usize {
+        self.profiles.lock().unwrap().len()
     }
 
     /// Return the memoized vector for `key`, or compute, memoize and
@@ -224,6 +277,35 @@ impl Evaluator<'_> {
         )
     }
 
+    /// The geometry-tier key of `cand` against this workload: what the
+    /// functional memo is keyed by (no technology, no pricing knob).
+    pub fn functional_key_for(&self, cand: &Candidate) -> String {
+        crate::explore::key::functional_key(&cand.cfg, cand.kernel.name(), &self.workload_tag)
+    }
+
+    /// Price `cand` from an already-profiled functional walk: the
+    /// timing/energy pass alone, bit-identical to what
+    /// [`evaluate`](Self::evaluate) computes on the analytic engine
+    /// (pinned by the tests below). `profile` must come from a
+    /// [`crate::sim::profile::profile_geometries`] walk over this
+    /// evaluator's views with a config sharing `cand`'s geometry tier.
+    pub fn price_candidate(&self, cand: &Candidate, profile: &GeometryProfile) -> Objectives {
+        let report = crate::sim::profile::price_report(
+            cand.kernel.kernel(),
+            self.tensor,
+            self.views,
+            &cand.cfg,
+            &cand.tech,
+            profile,
+        );
+        let energy = EnergyModel::new(&cand.cfg).run_energy(&report);
+        Objectives {
+            runtime_s: report.total_runtime_s(),
+            energy_j: energy.total_j(),
+            area_mm2: cand.area_mm2,
+        }
+    }
+
     /// Evaluate `cand` on `engine`, through `cache`.
     pub fn evaluate(&self, cand: &Candidate, engine: EngineKind, cache: &EvalCache) -> Objectives {
         self.evaluate_traced(cand, engine, cache).0
@@ -238,22 +320,27 @@ impl Evaluator<'_> {
         cache: &EvalCache,
     ) -> (Objectives, bool) {
         let key = candidate_key(cand, engine, &self.workload_tag, self.budget.sample);
-        cache.get_or_compute_traced(&key, || {
-            let report = engine.simulate_kernel_all_modes_with_views_budget(
-                cand.kernel.kernel(),
-                self.tensor,
-                self.views,
-                &cand.cfg,
-                &cand.tech,
-                self.budget,
-            );
-            let energy = EnergyModel::new(&cand.cfg).run_energy(&report);
-            Objectives {
-                runtime_s: report.total_runtime_s(),
-                energy_j: energy.total_j(),
-                area_mm2: cand.area_mm2,
-            }
-        })
+        cache.get_or_compute_traced(&key, || self.compute(cand, engine))
+    }
+
+    /// One uncached evaluation of `cand` on `engine` — the cache-miss
+    /// path of [`evaluate`](Self::evaluate): a full stream walk through
+    /// the driver entry point, priced through Eq. 2–3.
+    pub fn compute(&self, cand: &Candidate, engine: EngineKind) -> Objectives {
+        let report = engine.simulate_kernel_all_modes_with_views_budget(
+            cand.kernel.kernel(),
+            self.tensor,
+            self.views,
+            &cand.cfg,
+            &cand.tech,
+            self.budget,
+        );
+        let energy = EnergyModel::new(&cand.cfg).run_energy(&report);
+        Objectives {
+            runtime_s: report.total_runtime_s(),
+            energy_j: energy.total_j(),
+            area_mm2: cand.area_mm2,
+        }
     }
 }
 
@@ -388,6 +475,54 @@ mod tests {
         assert_ne!(ta, Evaluator::tag(&a, 7, false));
         // deterministic: the same workload always tags identically
         assert_eq!(ta, Evaluator::tag(&a, 7, true));
+    }
+
+    #[test]
+    fn functional_memo_stores_and_counts_walks() {
+        let cache = EvalCache::new();
+        assert_eq!((cache.functional_walks(), cache.profiled_geometries()), (0, 0));
+        assert!(cache.functional_profile("fk").is_none());
+        cache.store_profiles([("fk".to_string(), GeometryProfile::default())]);
+        cache.add_walks(1);
+        assert_eq!((cache.functional_walks(), cache.profiled_geometries()), (1, 1));
+        let first = cache.functional_profile("fk").unwrap();
+        // first insert wins on a duplicate key: same Arc comes back
+        cache.store_profiles([(
+            "fk".to_string(),
+            GeometryProfile { modes: vec![Vec::new()] },
+        )]);
+        assert!(Arc::ptr_eq(&first, &cache.functional_profile("fk").unwrap()));
+    }
+
+    #[test]
+    fn profiled_pricing_matches_direct_evaluation_bit_for_bit() {
+        let tensor = TensorSpec::custom("pp", vec![48, 48, 48], 3_000, 0.7).generate(11);
+        let mapped = apply_memory_mapping(&tensor);
+        let views: Vec<(usize, ModeView)> =
+            (0..mapped.n_modes()).map(|m| (m, ModeView::build(&mapped, m))).collect();
+        let ev = Evaluator {
+            tensor: &mapped,
+            views: &views,
+            workload_tag: Evaluator::tag(&mapped, 11, true),
+            budget: SimBudget::single_threaded(),
+        };
+        for tech_name in ["o-sram", "e-sram"] {
+            let cand = candidate(tech_name);
+            let profile = crate::sim::profile::profile_geometries(
+                cand.kernel.kernel(),
+                &mapped,
+                &views,
+                &[&cand.cfg],
+                4096,
+            )
+            .pop()
+            .unwrap();
+            let priced = ev.price_candidate(&cand, &profile);
+            let direct = ev.evaluate(&cand, EngineKind::Analytic, &EvalCache::new());
+            assert_eq!(priced.runtime_s.to_bits(), direct.runtime_s.to_bits(), "{tech_name}");
+            assert_eq!(priced.energy_j.to_bits(), direct.energy_j.to_bits(), "{tech_name}");
+            assert_eq!(priced.area_mm2.to_bits(), direct.area_mm2.to_bits(), "{tech_name}");
+        }
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //!   "filtered": 0,
 //!   "sample": {"rate": 2.5e-1, "seed": 0},
 //!   "cache": {"hits": 0, "misses": 12, "loaded": 0, "appended": 0},
+//!   "timing": {"screen_s": 1.9e-2, "pareto_s": 3e-6, "sampled_s": 1.1e-1,
+//!              "exact_s": 2e-2, "total_s": 1.5e-1, "functional_walks": 1},
 //!   "frontier": [
 //!     { "rank": 0, "configuration": "n_pes=4,cache_lines=4096",
 //!       "tech": "o-sram", "kernel": "spmttkrp",
@@ -42,6 +44,13 @@
 //! kernel, analytic, event, event_rank}` field — the invariant the
 //! `explore-smoke` CI step asserts.
 //!
+//! The `"timing"` object is deliberately emitted on **one** line: it
+//! carries the only run-to-run-volatile values in the artifact (host
+//! wall time per search phase, plus the mode-dependent
+//! `functional_walks` counter), so `grep -v '"timing"'` yields a
+//! byte-stable document — which is how the `explore-smoke` CI step
+//! asserts the profiled and direct screens publish identical frontiers.
+//!
 //! Hand-rolled writer (the build is offline, no serde): numbers via
 //! `{:e}` so round-tripping loses nothing, strings escaped through
 //! [`json_escape`].
@@ -60,6 +69,8 @@ pub fn frontier_json(result: &ExploreResult) -> String {
          \"candidates_screened\": {},\n  \"invalid\": {},\n  \"filtered\": {},\n  \
          \"sample\": {{\"rate\": {:e}, \"seed\": {}}},\n  \
          \"cache\": {{\"hits\": {}, \"misses\": {}, \"loaded\": {}, \"appended\": {}}},\n  \
+         \"timing\": {{\"screen_s\": {:e}, \"pareto_s\": {:e}, \"sampled_s\": {:e}, \
+         \"exact_s\": {:e}, \"total_s\": {:e}, \"functional_walks\": {}}},\n  \
          \"frontier\": [",
         json_escape(result.objective.name()),
         json_escape(&result.tensor),
@@ -73,6 +84,12 @@ pub fn frontier_json(result: &ExploreResult) -> String {
         result.cache_misses,
         result.cache_loaded,
         result.cache_appended,
+        result.timing.screen_s,
+        result.timing.pareto_s,
+        result.timing.sampled_s,
+        result.timing.exact_s,
+        result.timing.total_s(),
+        result.functional_walks,
     );
     for (i, p) in result.frontier.iter().enumerate() {
         if i > 0 {
@@ -175,6 +192,41 @@ mod tests {
         assert_eq!(json.matches("{\"rank\"").count(), r.frontier.len());
         assert!(json.contains("\"rank\": 0"), "{json}");
         assert!(json.trim_end().ends_with('}'), "{json}");
+    }
+
+    #[test]
+    fn timing_is_one_strippable_line_and_the_rest_is_stable() {
+        // every volatile value (wall times, walk counter) lives on the
+        // single "timing" line, so stripping it must leave a document
+        // that is byte-identical across profiled and direct runs
+        let r = result();
+        let json = frontier_json(&r);
+        let timing_lines: Vec<&str> =
+            json.lines().filter(|l| l.contains("\"timing\"")).collect();
+        assert_eq!(timing_lines.len(), 1, "{json}");
+        let line = timing_lines[0];
+        for field in
+            ["screen_s", "pareto_s", "sampled_s", "exact_s", "total_s", "functional_walks"]
+        {
+            assert!(line.contains(&format!("\"{field}\": ")), "{line}");
+        }
+        assert!(line.contains(&format!("\"functional_walks\": {}", r.functional_walks)));
+        // stripped documents from a profiled and a direct run agree
+        let direct = {
+            let mut space = DesignSpace::paper_grid(
+                vec![tech("e-sram"), tech("o-sram")],
+                vec![KernelKind::Spmttkrp],
+            );
+            space.axes = vec![Axis::parse("n_pes=2,4").unwrap()];
+            let mut spec =
+                ExploreSpec::new(space, TensorSpec::custom("j", vec![40, 40, 40], 2_000, 0.9));
+            spec.profile = false;
+            run_explore(&spec).unwrap()
+        };
+        let strip = |s: &str| {
+            s.lines().filter(|l| !l.contains("\"timing\"")).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(strip(&json), strip(&frontier_json(&direct)));
     }
 
     #[test]

@@ -31,6 +31,19 @@
 //! change to the energy/area models, or a change to this serialization
 //! itself. Bumping is cheap (one cold re-fill); a stale hit is a wrong
 //! answer served as a bit-identical truth.
+//!
+//! **Two-tier structure.** The config rendering is split along the
+//! functional/timing seam (see [`crate::sim::profile`]): the fields
+//! that determine the *functional* counters — hit/miss/traffic, a pure
+//! function of `{workload, kernel, cache geometry, level stack}` —
+//! render as the `geom{…}` component ([`canonical_geometry`]), and the
+//! fields that only *price* those counters (technology-tuned knobs,
+//! exec shape, rank, DRAM timing…) render as the `price{…}` component
+//! ([`canonical_pricing`]). An [`eval_key`] leads with the geometry
+//! component, so the persistent store textually records both tiers of
+//! every entry's identity; [`functional_key`] is the geometry tier
+//! alone and keys the in-memory profile memo that lets one stream walk
+//! serve every pricing of the same geometry.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::mem::dram::DramConfig;
@@ -42,7 +55,10 @@ use crate::sim::{EngineKind, SampleSpec};
 /// can alter a reported number for an unchanged key (see module docs);
 /// the on-disk store names its file after this, so old entries are
 /// orphaned rather than misread.
-pub const CACHE_SCHEMA_VERSION: u32 = 1;
+/// v1 → v2: busy figures became `count × constant` derivations (ULP
+/// shifts vs. the old per-access accumulation) and the config rendering
+/// split into geometry/pricing components.
+pub const CACHE_SCHEMA_VERSION: u32 = 2;
 
 /// IEEE-754 bits as fixed-width hex: injective per value, byte-stable.
 fn f(x: f64) -> String {
@@ -74,11 +90,13 @@ pub fn canonical_dram(d: &DramConfig) -> String {
     )
 }
 
-/// Canonical rendering of an [`AcceleratorConfig`]: every field, by
-/// name, in declaration order. The destructuring binding is the
-/// completeness guard — a new field fails to compile here until it is
-/// added to the rendering (and the schema version bumped).
-pub fn canonical_config(cfg: &AcceleratorConfig) -> String {
+/// Split one [`AcceleratorConfig`] into its `(geometry, pricing)`
+/// canonical components: every field, by name, in declaration order,
+/// each on exactly one side of the functional/timing seam. The single
+/// destructuring binding is the completeness guard — a new field fails
+/// to compile here until it is added to one of the two renderings (and
+/// the schema version bumped).
+fn split_config(cfg: &AcceleratorConfig) -> (String, String) {
     let AcceleratorConfig {
         n_pes,
         n_pipelines,
@@ -102,18 +120,57 @@ pub fn canonical_config(cfg: &AcceleratorConfig) -> String {
         flipflops,
         dsps,
     } = cfg;
-    format!(
-        "cfg{{pes={n_pes};pipes={n_pipelines};psum={psum_elements};caches={n_caches};\
-         assoc={cache_assoc};lines={cache_lines};lineb={line_bytes};dmabuf={n_dma_buffers};\
+    let geom = format!(
+        "geom{{pes={n_pes};caches={n_caches};assoc={cache_assoc};lines={cache_lines};\
+         lineb={line_bytes};bypass={};levels=[{}]}}",
+        opt_usize(*cache_bypass_factor),
+        format_levels(levels),
+    );
+    let price = format!(
+        "price{{pipes={n_pipelines};psum={psum_elements};dmabuf={n_dma_buffers};\
          dmabytes={dma_buffer_bytes};rank={rank};fabric={};{};bankf={esram_bank_factor};\
-         power={};bypass={};lambda={};levels=[{}];onchip={onchip_bytes};luts={luts};\
-         ffs={flipflops};dsps={dsps}}}",
+         power={};lambda={};onchip={onchip_bytes};luts={luts};ffs={flipflops};dsps={dsps}}}",
         f(*fabric_hz),
         canonical_dram(dram),
         f(*compute_power_w),
-        opt_usize(*cache_bypass_factor),
         opt_u32(*osram_lambda_override),
-        format_levels(levels),
+    );
+    (geom, price)
+}
+
+/// The functional-geometry component of a config: exactly the fields
+/// the functional pass consumes — `n_pes` (PE partitioning), cache
+/// count/associativity/lines/line bytes, the bypass factor and the
+/// level stack. Two configs with equal geometry components produce
+/// bit-identical [`crate::sim::profile::GeometryProfile`]s for any
+/// workload.
+pub fn canonical_geometry(cfg: &AcceleratorConfig) -> String {
+    split_config(cfg).0
+}
+
+/// The pricing component of a config: every remaining field — the ones
+/// that only scale the functional counters into cycles/joules/mm².
+pub fn canonical_pricing(cfg: &AcceleratorConfig) -> String {
+    split_config(cfg).1
+}
+
+/// Canonical rendering of an [`AcceleratorConfig`]: the geometry
+/// component followed by the pricing component, `|`-separated, so the
+/// functional tier is a textual prefix of the full config identity.
+pub fn canonical_config(cfg: &AcceleratorConfig) -> String {
+    let (geom, price) = split_config(cfg);
+    format!("{geom}|{price}")
+}
+
+/// The functional-tier key: identifies one
+/// [`crate::sim::profile::GeometryProfile`] — geometry × kernel ×
+/// workload, nothing else (no technology, no pricing knob, no engine,
+/// no sample). Every evaluation whose [`eval_key`] shares this prefix
+/// reuses the same profiled stream walk.
+pub fn functional_key(cfg: &AcceleratorConfig, kernel: &str, workload_tag: &str) -> String {
+    format!(
+        "v{CACHE_SCHEMA_VERSION}|{}|kernel={kernel}|wl={workload_tag}",
+        canonical_geometry(cfg)
     )
 }
 
@@ -207,8 +264,9 @@ mod tests {
         let b = base_key(&cfg.clone());
         assert_eq!(a, b);
         assert!(
-            a.starts_with(&format!("v{CACHE_SCHEMA_VERSION}|cfg{{")),
-            "canonical keys must lead with the schema version: {a}"
+            a.starts_with(&format!("v{CACHE_SCHEMA_VERSION}|geom{{")),
+            "canonical keys must lead with the schema version and the \
+             functional-geometry tier: {a}"
         );
         // no Debug rendering leaks in (struct names would appear)
         assert!(!a.contains("AcceleratorConfig"), "{a}");
@@ -297,6 +355,72 @@ mod tests {
             assert!(!seen.contains(&k), "tech mutation #{i} aliased another key");
             seen.push(k);
         }
+    }
+
+    #[test]
+    fn functional_key_tracks_geometry_and_ignores_pricing() {
+        // The functional tier must separate every geometry field (a
+        // collision would serve one geometry's counts as another's) and
+        // must NOT move under pricing-only mutations (that reuse is the
+        // whole point of the tier).
+        let base = AcceleratorConfig::paper_default();
+        let fk = |c: &AcceleratorConfig| functional_key(c, "spmttkrp", "wl#test");
+        let k0 = fk(&base);
+        assert!(k0.starts_with(&format!("v{CACHE_SCHEMA_VERSION}|geom{{")), "{k0}");
+
+        let geometry: Vec<Box<dyn Fn(&mut AcceleratorConfig)>> = vec![
+            Box::new(|c| c.n_pes += 1),
+            Box::new(|c| c.n_caches += 1),
+            Box::new(|c| c.cache_assoc += 1),
+            Box::new(|c| c.cache_lines += 1),
+            Box::new(|c| c.line_bytes *= 2),
+            Box::new(|c| c.cache_bypass_factor = Some(2)),
+            Box::new(|c| c.levels = parse_levels("sram:256KiB:8banks").unwrap()),
+        ];
+        let mut seen = vec![k0.clone()];
+        for (i, m) in geometry.iter().enumerate() {
+            let mut c = base.clone();
+            m(&mut c);
+            let k = fk(&c);
+            assert_ne!(k, k0, "geometry mutation #{i} did not change the functional key");
+            assert!(!seen.contains(&k), "geometry mutation #{i} aliased another key");
+            seen.push(k);
+        }
+
+        let pricing: Vec<Box<dyn Fn(&mut AcceleratorConfig)>> = vec![
+            Box::new(|c| c.n_pipelines += 1),
+            Box::new(|c| c.psum_elements += 1),
+            Box::new(|c| c.n_dma_buffers += 1),
+            Box::new(|c| c.dma_buffer_bytes *= 2),
+            Box::new(|c| c.rank += 1),
+            Box::new(|c| c.fabric_hz += 1.0),
+            Box::new(|c| c.dram.row_miss_ns += 1.0),
+            Box::new(|c| c.esram_bank_factor += 1),
+            Box::new(|c| c.compute_power_w += 0.1),
+            Box::new(|c| c.osram_lambda_override = Some(8)),
+            Box::new(|c| c.onchip_bytes += 1),
+            Box::new(|c| c.luts += 1),
+            Box::new(|c| c.flipflops += 1),
+            Box::new(|c| c.dsps += 1),
+        ];
+        for (i, m) in pricing.iter().enumerate() {
+            let mut c = base.clone();
+            m(&mut c);
+            assert_eq!(fk(&c), k0, "pricing mutation #{i} moved the functional key");
+        }
+    }
+
+    #[test]
+    fn eval_key_leads_with_the_functional_geometry_component() {
+        // Two-tier store records: the full key's geometry component is
+        // textually identical to the one the functional memo keys on.
+        let cfg = AcceleratorConfig::paper_default();
+        let full = base_key(&cfg);
+        let geom = canonical_geometry(&cfg);
+        assert!(
+            full.starts_with(&format!("v{CACHE_SCHEMA_VERSION}|{geom}|price{{")),
+            "eval key must lead with the geometry tier then the pricing tier: {full}"
+        );
     }
 
     #[test]

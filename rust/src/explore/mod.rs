@@ -22,10 +22,15 @@
 //! * [`key`] — the canonical, versioned cache-key serialization
 //!   (every field by name, floats as bit-hex,
 //!   [`key::CACHE_SCHEMA_VERSION`] prefix) that gives cache identity a
-//!   compatibility contract independent of `Debug` formatting;
+//!   compatibility contract independent of `Debug` formatting; keys are
+//!   two-tier — a functional-geometry component ([`key::functional_key`],
+//!   shared by every pricing of the same `{geometry, kernel, workload}`)
+//!   followed by the pricing component;
 //! * [`store`] — append-only on-disk persistence for the cache
 //!   (checksummed records, fsync'd appends, truncate-at-first-bad-record
-//!   recovery) so warm traffic survives the process;
+//!   recovery, last-record-wins key dedup on replay, and an atomic
+//!   [`store::EvalStore::compact`] rewrite) so warm traffic survives
+//!   the process;
 //! * [`pareto`] — strict-dominance frontier extraction, scoped per
 //!   kernel;
 //! * [`search`] — the four-phase strategy: cheap analytic screen of the
@@ -57,13 +62,13 @@ pub mod space;
 pub mod store;
 
 pub use eval::{candidate_key, EvalCache, Evaluator};
-pub use key::{eval_key, CACHE_SCHEMA_VERSION};
-pub use store::EvalStore;
+pub use key::{eval_key, functional_key, CACHE_SCHEMA_VERSION};
+pub use store::{CompactReport, EvalStore};
 pub use export::{frontier_json, write_frontier_json};
 pub use objective::{ObjectiveKind, Objectives};
 pub use pareto::{dominates, frontier_indices};
 pub use search::{
     frontier_table, run_explore, run_explore_with_cache, ExploreDelta, ExploreResult,
-    ExploreSpec, FrontierPoint, DEFAULT_EXPLORE_SAMPLE_RATE,
+    ExploreSpec, FrontierPoint, PhaseTimings, DEFAULT_EXPLORE_SAMPLE_RATE,
 };
 pub use space::{Axis, Candidate, DesignSpace, EnumeratedSpace, Knob};

@@ -1,11 +1,18 @@
 //! The four-phase Pareto-frontier search.
 //!
-//! 1. **Screen** — every enumerated candidate is evaluated on the cheap
-//!    analytic engine (the paper's roofline model), fanned across OS
-//!    threads with the slot-ordered [`crate::sim::par`] map under the one
-//!    thread-budget rule ([`crate::sim::SimBudget`]): the candidate
-//!    fan-out claims `min(threads, candidates)` workers and hands each
-//!    simulation the left-over threads for its per-PE inner loop.
+//! 1. **Screen** — every enumerated candidate gets an analytic-engine
+//!    objective vector. By default the screen is **profiled**: cold
+//!    candidates are grouped by their functional-geometry key
+//!    ([`crate::explore::key::functional_key`]), each kernel's distinct
+//!    geometries are answered by **one** reuse-distance stream walk
+//!    ([`crate::sim::profile::profile_geometries`], memoized on the
+//!    [`EvalCache`]), and every candidate is then *priced* from its
+//!    geometry's profile — O(streams) walks for an O(grid) screen,
+//!    bit-identical to evaluating each candidate directly (pinned by
+//!    the tests below; [`ExploreSpec::profile`] = `false` restores the
+//!    direct per-candidate walk, fanned across OS threads with the
+//!    slot-ordered [`crate::sim::par`] map under the one thread-budget
+//!    rule ([`crate::sim::SimBudget`])).
 //! 2. **Extract** — the Pareto frontier over (runtime, energy, area),
 //!    per kernel ([`crate::explore::pareto`]). Frontier **membership is
 //!    decided by the screen** and never silently revised.
@@ -35,12 +42,16 @@
 //! index — the frontier is bit-identical at any thread count (pinned by
 //! `rust/tests/explore.rs` and `rust/tests/sampled_replay.rs`).
 
-use crate::explore::eval::{EvalCache, Evaluator};
+use std::time::Instant;
+
+use crate::accel::config::AcceleratorConfig;
+use crate::explore::eval::{candidate_key, EvalCache, Evaluator};
 use crate::explore::objective::{ObjectiveKind, Objectives};
 use crate::explore::pareto;
 use crate::explore::space::{Candidate, DesignSpace};
-use crate::kernel::DEFAULT_CHUNK_NNZ;
+use crate::kernel::{KernelKind, DEFAULT_CHUNK_NNZ};
 use crate::sim::par::{effective_threads, parallel_map};
+use crate::sim::profile::profile_geometries;
 use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::csf::ModeView;
 use crate::tensor::gen::TensorSpec;
@@ -81,6 +92,13 @@ pub struct ExploreSpec {
     /// (defaults to [`DEFAULT_EXPLORE_SAMPLE_RATE`]). The phase-4
     /// frontier numbers are always exact regardless of this setting.
     pub sample: SampleSpec,
+    /// Run the phase-1 screen through the reuse-distance profiler
+    /// (default `true`): one functional stream walk per kernel answers
+    /// every cold geometry, and candidates are priced from the memoized
+    /// profiles — bit-identical to the direct screen. `false`
+    /// (`--no-profile` on the CLI) evaluates every candidate with its
+    /// own stream walk.
+    pub profile: bool,
 }
 
 impl ExploreSpec {
@@ -97,6 +115,7 @@ impl ExploreSpec {
             threads: 0,
             chunk_nnz: DEFAULT_CHUNK_NNZ,
             sample: SampleSpec { rate: DEFAULT_EXPLORE_SAMPLE_RATE, seed: 0 },
+            profile: true,
         }
     }
 
@@ -217,6 +236,27 @@ impl ExploreDelta {
     }
 }
 
+/// Wall-clock time spent in each of the four search phases, in seconds
+/// (host measurement — the one deliberately non-deterministic part of an
+/// [`ExploreResult`]; everything it sits next to is bit-stable).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    /// Phase 1: analytic screen (profiled or direct).
+    pub screen_s: f64,
+    /// Phase 2: Pareto frontier extraction.
+    pub pareto_s: f64,
+    /// Phase 3: sampled event confirmation of the grid.
+    pub sampled_s: f64,
+    /// Phase 4: exact event pin of the frontier members.
+    pub exact_s: f64,
+}
+
+impl PhaseTimings {
+    pub fn total_s(&self) -> f64 {
+        self.screen_s + self.pareto_s + self.sampled_s + self.exact_s
+    }
+}
+
 /// The full search result.
 #[derive(Clone, Debug)]
 pub struct ExploreResult {
@@ -255,6 +295,15 @@ pub struct ExploreResult {
     pub cache_loaded: u64,
     /// Records this search persisted to the store (0 when in-memory).
     pub cache_appended: u64,
+    /// Full-workload functional stream walks this search performed to
+    /// fill the profile memo (unit: one walk = every mode of one kernel
+    /// traversed once — the same work as one direct candidate
+    /// evaluation; see [`EvalCache::add_walks`]). 0 when profiling is
+    /// off or every geometry was already memoized; the profiled screen's
+    /// whole point is `candidates.len() / functional_walks ≫ 1`.
+    pub functional_walks: u64,
+    /// Per-phase wall time of this search.
+    pub timing: PhaseTimings,
 }
 
 impl ExploreResult {
@@ -292,6 +341,8 @@ pub fn run_explore_with_cache(
     }
     let candidates = enumerated.candidates;
     let (hits0, misses0, appended0) = (cache.hits(), cache.misses(), cache.appended());
+    let walks0 = cache.functional_walks();
+    let mut timing = PhaseTimings::default();
 
     // one workload, shared by every candidate × engine evaluation
     let tensor = spec.tensor.clone().scaled(spec.scale).generate(spec.seed);
@@ -319,28 +370,42 @@ pub fn run_explore_with_cache(
     };
 
     // Phase 1: analytic screen of the full grid (sample-independent).
+    // Profiled by default: one functional stream walk per kernel answers
+    // every cold geometry, candidates are priced from the memo.
+    let t = Instant::now();
     let screen_eval = evaluator(budget_for(candidates.len(), SampleSpec::exact()));
-    let analytic: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
-        screen_eval.evaluate(cand, EngineKind::Analytic, cache)
-    });
+    let analytic: Vec<Objectives> = if spec.profile {
+        profiled_screen(&screen_eval, &candidates, cache, threads, spec.chunk_nnz)
+    } else {
+        parallel_map(&candidates, threads, |cand| {
+            screen_eval.evaluate(cand, EngineKind::Analytic, cache)
+        })
+    };
+    timing.screen_s = t.elapsed().as_secs_f64();
 
     // Phase 2: frontier extraction (dominance scoped to the kernel).
+    let t = Instant::now();
     let groups: Vec<&str> = candidates.iter().map(|c| c.kernel.name()).collect();
     let front = pareto::frontier_indices(&analytic, &groups);
+    timing.pareto_s = t.elapsed().as_secs_f64();
 
     // Phase 3: sampled event confirmation of the ENTIRE screened grid.
+    let t = Instant::now();
     let sampled_eval = evaluator(budget_for(candidates.len(), spec.sample));
     let event_sampled: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
         sampled_eval.evaluate(cand, EngineKind::Event, cache)
     });
+    timing.sampled_s = t.elapsed().as_secs_f64();
 
     // Phase 4: exact event pass over the frontier members only — the
     // published numbers. At rate 1.0 phase 3 already computed these
     // under the same cache key, so this is pure warm-cache reuse.
+    let t = Instant::now();
     let confirm_eval = evaluator(budget_for(front.len(), SampleSpec::exact()));
     let event: Vec<Objectives> = parallel_map(&front, threads, |&i| {
         confirm_eval.evaluate(&candidates[i], EngineKind::Event, cache)
     });
+    timing.exact_s = t.elapsed().as_secs_f64();
 
     // Ranks by the chosen objective under each engine's numbers;
     // ties break on the (deterministic) candidate index.
@@ -419,7 +484,83 @@ pub fn run_explore_with_cache(
         cache_misses: cache.misses() - misses0,
         cache_loaded: cache.loaded(),
         cache_appended: cache.appended() - appended0,
+        functional_walks: cache.functional_walks() - walks0,
+        timing,
     })
+}
+
+/// The profiled phase-1 screen.
+///
+/// 1. **Plan** — find the candidates that are cold on *both* tiers (no
+///    memoized objectives, no memoized profile) and collect, per
+///    kernel, one representative config per distinct functional key.
+/// 2. **Walk** — one [`profile_geometries`] call per kernel with cold
+///    geometries: a single full-workload stream walk (`add_walks(1)`)
+///    answers all of them at once; the profiles join the cache's memo.
+/// 3. **Price** — every candidate is priced from its geometry's profile
+///    (pure arithmetic, fanned across threads, slot-ordered), then
+///    committed through [`EvalCache::get_or_compute`] in candidate
+///    order — so hit/miss counters, store appends and every returned
+///    bit are identical to the direct screen's.
+fn profiled_screen(
+    eval: &Evaluator<'_>,
+    candidates: &[Candidate],
+    cache: &EvalCache,
+    threads: usize,
+    chunk_nnz: usize,
+) -> Vec<Objectives> {
+    let keys: Vec<String> = candidates
+        .iter()
+        .map(|c| candidate_key(c, EngineKind::Analytic, &eval.workload_tag, eval.budget.sample))
+        .collect();
+    let fkeys: Vec<String> = candidates.iter().map(|c| eval.functional_key_for(c)).collect();
+
+    // plan: per kernel, the distinct cold geometries (first candidate
+    // with each functional key is its representative config)
+    let mut missing: Vec<(KernelKind, Vec<(usize, &str)>)> = Vec::new();
+    for (i, cand) in candidates.iter().enumerate() {
+        if cache.peek(&keys[i]).is_some() || cache.functional_profile(&fkeys[i]).is_some() {
+            continue;
+        }
+        let entry = match missing.iter_mut().find(|(k, _)| *k == cand.kernel) {
+            Some(e) => e,
+            None => {
+                missing.push((cand.kernel, Vec::new()));
+                missing.last_mut().unwrap()
+            }
+        };
+        if !entry.1.iter().any(|&(_, fk)| fk == fkeys[i]) {
+            entry.1.push((i, &fkeys[i]));
+        }
+    }
+
+    // walk: one traversal per kernel covers all its cold geometries
+    for (kernel, geoms) in &missing {
+        let cfgs: Vec<&AcceleratorConfig> =
+            geoms.iter().map(|&(i, _)| &candidates[i].cfg).collect();
+        let profiles =
+            profile_geometries(kernel.kernel(), eval.tensor, eval.views, &cfgs, chunk_nnz);
+        cache.add_walks(1);
+        cache.store_profiles(
+            geoms.iter().zip(profiles).map(|(&(_, fk), p)| (fk.to_string(), p)),
+        );
+    }
+
+    // price: arithmetic only — every needed profile is memoized now
+    let idx: Vec<usize> = (0..candidates.len()).collect();
+    let priced: Vec<Objectives> = parallel_map(&idx, threads, |&i| match cache.peek(&keys[i]) {
+        Some(v) => v,
+        None => match cache.functional_profile(&fkeys[i]) {
+            Some(p) => eval.price_candidate(&candidates[i], &p),
+            // unreachable in a single search; defensively fall back to a
+            // direct (uncached) evaluation rather than panic
+            None => eval.compute(&candidates[i], EngineKind::Analytic),
+        },
+    });
+
+    // commit in candidate order: counters and appends match the direct
+    // screen exactly (warm keys hit, cold keys miss with the same value)
+    idx.iter().map(|&i| cache.get_or_compute(&keys[i], || priced[i])).collect()
 }
 
 /// Render the frontier as a table (`top` = 0 keeps every member): one
@@ -595,6 +736,60 @@ mod tests {
             assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits());
             assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn profiled_screen_is_bit_identical_to_the_direct_screen() {
+        let profiled = run_explore(&tiny_spec()).unwrap();
+        let direct = {
+            let mut s = tiny_spec();
+            s.profile = false;
+            run_explore(&s).unwrap()
+        };
+        // 4 candidates (2 n_pes × 2 techs), 2 distinct geometries, one
+        // kernel → exactly one functional stream walk for the whole grid
+        assert_eq!(profiled.functional_walks, 1);
+        assert_eq!(direct.functional_walks, 0);
+        assert!(profiled.candidates.len() as u64 >= 4 * profiled.functional_walks);
+        // the screen and everything downstream of it are bit-identical
+        assert_eq!(profiled.analytic.len(), direct.analytic.len());
+        for (a, b) in profiled.analytic.iter().zip(&direct.analytic) {
+            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        }
+        assert_eq!(profiled.frontier.len(), direct.frontier.len());
+        for (x, y) in profiled.frontier.iter().zip(&direct.frontier) {
+            assert_eq!(x.candidate.label(), y.candidate.label());
+            assert_eq!(x.candidate.tech.name, y.candidate.tech.name);
+            assert_eq!(x.analytic_rank, y.analytic_rank);
+            assert_eq!(x.event_rank, y.event_rank);
+            assert_eq!(x.analytic.runtime_s.to_bits(), y.analytic.runtime_s.to_bits());
+            assert_eq!(x.analytic.energy_j.to_bits(), y.analytic.energy_j.to_bits());
+            assert_eq!(x.event.runtime_s.to_bits(), y.event.runtime_s.to_bits());
+            assert_eq!(x.event.energy_j.to_bits(), y.event.energy_j.to_bits());
+        }
+        // same cache traffic as the direct screen, by construction
+        assert_eq!(profiled.cache_misses, direct.cache_misses);
+        assert_eq!(profiled.cache_hits, direct.cache_hits);
+    }
+
+    #[test]
+    fn warm_memo_needs_no_walks_and_timings_are_populated() {
+        let spec = tiny_spec();
+        let cache = EvalCache::new();
+        let a = run_explore_with_cache(&spec, &cache).unwrap();
+        assert_eq!(a.functional_walks, 1);
+        for phase in [a.timing.screen_s, a.timing.pareto_s, a.timing.sampled_s, a.timing.exact_s]
+        {
+            assert!(phase >= 0.0 && phase.is_finite());
+        }
+        assert!(a.timing.total_s() >= a.timing.screen_s);
+        // second search over the same grid: every objective key is warm,
+        // so the screen neither walks nor prices anything
+        let b = run_explore_with_cache(&spec, &cache).unwrap();
+        assert_eq!(b.functional_walks, 0);
+        assert_eq!(b.cache_misses, 0);
     }
 
     #[test]

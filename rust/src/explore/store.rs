@@ -21,9 +21,15 @@
 //! newline); the file is then physically truncated back to the last
 //! valid record, keeping the prefix. Corruption costs the suffix, never
 //! the store. Duplicate keys can appear (two processes racing on the
-//! same miss append twice); replay order makes the last one win, and
-//! since entries are bit-identical by the cache contract this is
-//! harmless.
+//! same miss append twice); replay **dedups** them — the last record
+//! for a key wins, at the position of the first — and since duplicate
+//! entries are bit-identical by the cache contract this loses nothing.
+//! Shadowed (dead) records still occupy file bytes until
+//! [`EvalStore::compact`] rewrites the log with exactly the live
+//! records (`photon-mttkrp explore --compact-cache` on the CLI); the
+//! rewrite goes through a temp file + atomic rename, so a crash
+//! mid-compaction leaves either the old or the new log, never a torn
+//! one.
 //!
 //! **Versioning:** the schema version is baked into the *filename*, so
 //! a [`CACHE_SCHEMA_VERSION`] bump orphans old files (they are simply
@@ -33,6 +39,7 @@
 //! noise, and it guarantees a hit can never be served from a record
 //! that would not survive a crash.
 
+use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
@@ -88,6 +95,21 @@ fn parse_record(line: &str) -> Option<(String, Objectives)> {
     ))
 }
 
+/// What [`EvalStore::compact`] kept and reclaimed.
+#[derive(Clone, Debug)]
+pub struct CompactReport {
+    /// The log file that was rewritten.
+    pub path: PathBuf,
+    /// Live records the compacted file holds.
+    pub live: u64,
+    /// Dead (key-shadowed) records dropped by the rewrite.
+    pub dropped: u64,
+    /// File size before the rewrite (after any tail recovery).
+    pub bytes_before: u64,
+    /// File size after the rewrite.
+    pub bytes_after: u64,
+}
+
 /// The open append-only store: a validated log file plus its append
 /// handle. Interior-mutable (`&EvalStore` appends), like the cache it
 /// backs.
@@ -95,6 +117,8 @@ pub struct EvalStore {
     path: PathBuf,
     writer: Mutex<File>,
     loaded: u64,
+    /// Valid records shadowed by a later record with the same key.
+    deduped: u64,
     recovered_at: Option<u64>,
     appended: AtomicU64,
 }
@@ -112,7 +136,10 @@ impl EvalStore {
 
     /// Open (creating if needed) the store under `dir`, replay every
     /// valid record, truncate off any corrupt suffix, and return the
-    /// store plus the loaded `(key, objectives)` entries in file order.
+    /// store plus the loaded `(key, objectives)` entries, deduped by
+    /// key: the **last** record for a key wins, placed at the position
+    /// of the key's first occurrence (so entry order is stable across
+    /// re-appends of an existing key).
     pub fn open(dir: &Path) -> std::io::Result<(EvalStore, Vec<(String, Objectives)>)> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("evals-v{CACHE_SCHEMA_VERSION}.log"));
@@ -121,7 +148,9 @@ impl EvalStore {
         let mut bytes = Vec::new();
         file.read_to_end(&mut bytes)?;
 
-        let mut entries = Vec::new();
+        let mut entries: Vec<(String, Objectives)> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut deduped = 0u64;
         let mut offset = 0usize;
         let mut recovered_at = None;
         while offset < bytes.len() {
@@ -134,8 +163,17 @@ impl EvalStore {
                 Some(rel) => {
                     let line = &bytes[offset..offset + rel];
                     match std::str::from_utf8(line).ok().and_then(parse_record) {
-                        Some(entry) => {
-                            entries.push(entry);
+                        Some((key, o)) => {
+                            match index.get(&key) {
+                                Some(&i) => {
+                                    entries[i].1 = o;
+                                    deduped += 1;
+                                }
+                                None => {
+                                    index.insert(key.clone(), entries.len());
+                                    entries.push((key, o));
+                                }
+                            }
                             offset += rel + 1;
                         }
                         None => {
@@ -159,6 +197,7 @@ impl EvalStore {
                 path,
                 writer: Mutex::new(writer),
                 loaded,
+                deduped,
                 recovered_at,
                 appended: AtomicU64::new(0),
             },
@@ -171,9 +210,16 @@ impl EvalStore {
         &self.path
     }
 
-    /// Valid records replayed at open.
+    /// Live (deduped) records replayed at open.
     pub fn loaded(&self) -> u64 {
         self.loaded
+    }
+
+    /// Valid records open discarded because a later record carried the
+    /// same key. These are the dead bytes [`EvalStore::compact`]
+    /// reclaims.
+    pub fn deduped(&self) -> u64 {
+        self.deduped
     }
 
     /// Records appended (and fsync'd) since open.
@@ -185,6 +231,42 @@ impl EvalStore {
     /// offset it truncated to, when it did).
     pub fn recovered_at(&self) -> Option<u64> {
         self.recovered_at
+    }
+
+    /// Rewrite the log under `dir` with exactly the live records: open
+    /// (which replays, dedups, and truncates any corrupt tail), then
+    /// write the surviving entries to a temp file, fsync it, and
+    /// atomically rename it over the log. A crash at any point leaves
+    /// either the old or the new file — never a torn one. Returns what
+    /// was kept and what was reclaimed.
+    pub fn compact(dir: &Path) -> std::io::Result<CompactReport> {
+        let (store, entries) = EvalStore::open(dir)?;
+        let path = store.path().to_path_buf();
+        let dropped = store.deduped();
+        drop(store); // release the append handle before replacing the file
+        let bytes_before = std::fs::metadata(&path)?.len();
+
+        let tmp = path.with_extension("log.compact");
+        {
+            let mut f = File::create(&tmp)?;
+            for (key, o) in &entries {
+                f.write_all(encode_record(key, o).as_bytes())?;
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        // make the rename itself durable
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+        let bytes_after = std::fs::metadata(&path)?.len();
+        Ok(CompactReport {
+            path,
+            live: entries.len() as u64,
+            dropped,
+            bytes_before,
+            bytes_after,
+        })
     }
 
     /// Append one record and fsync it. Keys are one line by the
@@ -312,6 +394,92 @@ mod tests {
         let (store, entries) = EvalStore::open(&dir).unwrap();
         assert_eq!(store.loaded(), 1);
         assert_eq!(entries[0].0, "kb");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_dedups_keys_last_record_wins_in_first_position() {
+        let dir = tmp_dir("dedup");
+        {
+            let (store, _) = EvalStore::open(&dir).unwrap();
+            store.append("ka", &obj(1.0)).unwrap();
+            store.append("kb", &obj(2.0)).unwrap();
+            store.append("ka", &obj(3.0)).unwrap();
+            store.append("ka", &obj(4.0)).unwrap();
+        }
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 2, "two live keys");
+        assert_eq!(store.deduped(), 2, "two shadowed ka records");
+        assert_eq!(
+            entries.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+            ["ka", "kb"],
+            "first-occurrence order is stable"
+        );
+        assert_eq!(entries[0].1.runtime_s.to_bits(), 4.0f64.to_bits(), "last record wins");
+        assert_eq!(entries[1].1.runtime_s.to_bits(), 2.0f64.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_drops_dead_records_and_keeps_live_ones_bit_identical() {
+        let dir = tmp_dir("compact");
+        {
+            let (store, _) = EvalStore::open(&dir).unwrap();
+            store.append("ka", &obj(1.0)).unwrap();
+            store.append("kb", &obj(2.0)).unwrap();
+            store.append("ka", &obj(3.0)).unwrap();
+            store.append("kc", &obj(1.0 / 3.0)).unwrap();
+            store.append("kb", &obj(5.0)).unwrap();
+        }
+        let (_, before) = EvalStore::open(&dir).unwrap();
+
+        let report = EvalStore::compact(&dir).unwrap();
+        assert_eq!(report.live, 3);
+        assert_eq!(report.dropped, 2);
+        assert!(report.bytes_after < report.bytes_before, "{report:?}");
+
+        let (store, after) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 3);
+        assert_eq!(store.deduped(), 0, "no dead records survive compaction");
+        assert_eq!(store.recovered_at(), None);
+        assert_eq!(after.len(), before.len());
+        for ((ka, oa), (kb, ob)) in before.iter().zip(after.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(oa.runtime_s.to_bits(), ob.runtime_s.to_bits());
+            assert_eq!(oa.energy_j.to_bits(), ob.energy_j.to_bits());
+            assert_eq!(oa.area_mm2.to_bits(), ob.area_mm2.to_bits());
+        }
+        // the compacted store appends cleanly
+        store.append("kd", &obj(7.0)).unwrap();
+        drop(store);
+        let (store, _) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_recovers_a_torn_tail_like_open_does() {
+        let dir = tmp_dir("compact_torn");
+        let path = {
+            let (store, _) = EvalStore::open(&dir).unwrap();
+            store.append("ka", &obj(1.0)).unwrap();
+            store.append("ka", &obj(2.0)).unwrap();
+            store.append("kb", &obj(3.0)).unwrap();
+            store.path().to_path_buf()
+        };
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+
+        // the torn kb record is lost to recovery; the duplicate ka is
+        // compacted away
+        let report = EvalStore::compact(&dir).unwrap();
+        assert_eq!(report.live, 1);
+        assert_eq!(report.dropped, 1);
+        let (store, entries) = EvalStore::open(&dir).unwrap();
+        assert_eq!(store.loaded(), 1);
+        assert_eq!(store.recovered_at(), None, "compacted file is fully valid");
+        assert_eq!(entries[0].0, "ka");
+        assert_eq!(entries[0].1.runtime_s.to_bits(), 2.0f64.to_bits());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

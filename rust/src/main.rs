@@ -21,13 +21,17 @@
 //!     [--kernel K]... [--axes KNOB=V1,V2,...]... [--budget-mm2 X]
 //!     [--exclude-wafer-scale] [--objective runtime|energy|edp|area]
 //!     [--top N] [--threads T] [--chunk-nnz N] [--sample-rate R]
-//!     [--sample-seed N] [--json FILE] [--cache-dir DIR] [--config FILE]
+//!     [--sample-seed N] [--json FILE] [--cache-dir DIR] [--no-profile]
+//!     [--compact-cache] [--config FILE]
 //!     Pareto-frontier search over {config knobs x tech x kernel}:
-//!     analytic screen of the full grid, sampled event-engine
+//!     analytic screen of the full grid (reuse-distance profiled — one
+//!     stream walk prices every cache geometry; --no-profile screens
+//!     each candidate with its own walk instead), sampled event-engine
 //!     confirmation of the whole grid, exact event pass over the
 //!     frontier, any rank flip reported as a delta line; --cache-dir
 //!     persists every evaluation, so a warm re-run answers from disk
-//!     with a bit-identical frontier
+//!     with a bit-identical frontier; --compact-cache rewrites the
+//!     persistent log without dead (key-shadowed) records and exits
 //! photon-mttkrp serve [--socket PATH] [--cache-dir DIR] [--threads T]
 //!     [--batch N]
 //!     long-lived NDJSON evaluation daemon (design-space-as-a-service):
@@ -242,6 +246,18 @@ fn cli() -> Command {
                     "DIR",
                     "persistent evaluation cache: load it before searching, append every miss",
                     None,
+                )
+                .flag(
+                    "no-profile",
+                    '\0',
+                    "screen each candidate with its own stream walk instead of the \
+                     reuse-distance profiled screen (same frontier, more walks)",
+                )
+                .flag(
+                    "compact-cache",
+                    '\0',
+                    "rewrite the persistent cache log without dead records, then exit \
+                     (needs --cache-dir or the default cache directory)",
                 )
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
@@ -663,6 +679,25 @@ fn run() -> Result<(), String> {
             );
         }
         "explore" => {
+            if p.flag("compact-cache") {
+                // maintenance verb: rewrite the log and exit without
+                // searching anything
+                let dir = p
+                    .get("cache-dir")
+                    .map(std::path::PathBuf::from)
+                    .unwrap_or_else(photon_mttkrp::explore::EvalStore::default_dir);
+                let r = photon_mttkrp::explore::EvalStore::compact(&dir)
+                    .map_err(|e| format!("--compact-cache {}: {e}", dir.display()))?;
+                eprintln!(
+                    "compacted {}: kept {} live records, dropped {} dead ({} -> {} bytes)",
+                    r.path.display(),
+                    r.live,
+                    r.dropped,
+                    r.bytes_before,
+                    r.bytes_after,
+                );
+                return Ok(());
+            }
             let mut cfg_base = load_config(&p)?;
             apply_levels(&p, &mut cfg_base)?;
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
@@ -700,6 +735,7 @@ fn run() -> Result<(), String> {
             spec.threads = p.get_usize("threads").map_err(|e| e.to_string())?;
             spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
             spec.sample = parse_sample(&p)?;
+            spec.profile = !p.flag("no-profile");
             let n_threads = sweep::effective_threads(spec.threads);
             eprintln!(
                 "exploring up to {} candidates ({} techs x {} kernels) by {} on {} threads ...",
@@ -744,10 +780,23 @@ fn run() -> Result<(), String> {
                 result.n_filtered,
                 t0.elapsed().as_secs_f64(),
                 n_threads,
+                result.frontier.len(),
                 result.cache_misses,
                 result.cache_hits,
                 result.cache_loaded,
                 result.cache_appended,
+            );
+            eprintln!(
+                "phase wall time: screen {:.3}s / pareto {:.3}s / sampled confirm {:.3}s / \
+                 exact pin {:.3}s (total {:.3}s); {} functional stream walk(s) priced \
+                 {} candidates",
+                result.timing.screen_s,
+                result.timing.pareto_s,
+                result.timing.sampled_s,
+                result.timing.exact_s,
+                result.timing.total_s(),
+                result.functional_walks,
+                result.candidates.len(),
             );
             if let Some(path) = p.get("json") {
                 explore::write_frontier_json(&result, std::path::Path::new(path))

@@ -21,6 +21,14 @@
 //! both engines execute exactly the pre-hierarchy code paths, so the
 //! paper-default output is bit-identical to the single-level model
 //! (pinned by `tests/golden.rs`).
+//!
+//! Level accounting is purely *functional* — per-level accesses, hits,
+//! misses, traffic and words are integer counters carried by
+//! `controller::mc::FunctionalCounts` and priced into busy cycles at
+//! read time. That is what lets the reuse-distance profiler
+//! ([`crate::sim::profile`]) capture a leveled geometry's counts in one
+//! stream walk (it runs a live controller per leveled config) and
+//! reprice them later under any technology without re-walking.
 
 use std::fmt;
 

@@ -10,7 +10,11 @@
 //!   daemon restart answers yesterday's questions without touching an
 //!   engine. The per-workload identity (the O(nnz) generate + fingerprint
 //!   in [`Evaluator::tag`]) is memoized for the daemon lifetime, so a
-//!   steady-state warm request does no tensor work at all.
+//!   steady-state warm request does no tensor work at all. The cache's
+//!   in-memory **functional memo** (reuse-distance geometry profiles,
+//!   see [`crate::sim::profile`]) is daemon-lifetime too: an explore
+//!   request in a later batch window reprices geometries the first
+//!   window already walked without touching the access stream again.
 //! * **Batch windows share workload preparation.** Lines are grouped
 //!   into windows of `--batch` requests (an empty line or EOF flushes
 //!   early). Within a window, every cold request against the same
@@ -741,10 +745,35 @@ mod tests {
         let w = Value::parse(&replies[0]).unwrap();
         assert_eq!(w.get("cache").unwrap().as_str(), Some("hit"), "{}", replies[0]);
         let strip = |x: &Value| {
-            // the cache counter block legitimately differs warm vs cold
+            // the cache counter block and the phase wall times
+            // legitimately differ warm vs cold
             let Value::Obj(fields) = x.clone() else { panic!() };
-            Value::Obj(fields.into_iter().filter(|(k, _)| k != "cache").collect())
+            Value::Obj(
+                fields.into_iter().filter(|(k, _)| k != "cache" && k != "timing").collect(),
+            )
         };
         assert_eq!(strip(r), strip(w.get("result").unwrap()), "frontier must be bit-identical");
+    }
+
+    #[test]
+    fn functional_memo_is_shared_across_batch_windows() {
+        // the daemon owns one EvalCache for its lifetime, so the
+        // geometry profiles the first window's explore walked serve
+        // every later window: repeat searches add zero stream walks
+        let mut s = state();
+        let req = r#"{"cmd": "explore", "scale": 1e-4, "techs": "o-sram",
+                      "axes": "n_pes=2,4", "sample_rate": 1.0}"#
+            .replace('\n', " ");
+        let (_, _) = s.handle_batch(&lines(&[&req]));
+        let walks_cold = s.cache().functional_walks();
+        assert!(walks_cold >= 1, "a cold explore walks the stream");
+        assert!(s.cache().profiled_geometries() >= 1);
+        // a *separate* batch window (new handle_batch call): no new walks
+        let (_, _) = s.handle_batch(&lines(&[&req]));
+        assert_eq!(
+            s.cache().functional_walks(),
+            walks_cold,
+            "warm windows must reprice from the memo, not re-walk"
+        );
     }
 }

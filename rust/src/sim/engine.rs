@@ -39,7 +39,7 @@ use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::MemoryController;
 use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
-use crate::pe::exec::ExecUnit;
+use crate::pe::exec::{ExecCharge, ExecUnit};
 use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
 use crate::sim::SimBudget;
@@ -65,6 +65,68 @@ pub(crate) fn nnz_item_bytes(n_modes: usize) -> u64 {
 /// bound, so the formula must never fork between engines.
 pub(crate) fn startup_latency(cfg: &AcceleratorConfig, mc: &MemoryController) -> f64 {
     cfg.dram.row_miss_ns * 1e-9 * cfg.fabric_hz + mc.cache_timing.hit_latency() + cfg.rank as f64
+}
+
+/// Price one PE's exec-unit totals from its integer work counters: the
+/// pipelines run once per nonzero (a drain never occupies them — see
+/// [`crate::pe::exec::ExecUnit::drain_slice`]), the psum array runs per
+/// nonzero and per slice drain. One multiply per hoisted constant, so a
+/// counts-only pricing pass (the reuse-distance profiler) reproduces the
+/// walked engines bit for bit. Returns
+/// `(pipeline_cycles, psum_cycles, psum_words)`.
+pub(crate) fn price_exec(
+    per_nnz: &ExecCharge,
+    per_drain: &ExecCharge,
+    pe_nnz: u64,
+    drains: u64,
+) -> (f64, f64, u64) {
+    let pipeline_cycles = pe_nnz as f64 * per_nnz.pipeline_cycles;
+    let psum_cycles =
+        pe_nnz as f64 * per_nnz.psum_cycles + drains as f64 * per_drain.psum_cycles;
+    let psum_words = pe_nnz * per_nnz.psum_words + drains * per_drain.psum_words;
+    (pipeline_cycles, psum_cycles, psum_words)
+}
+
+/// Assemble one PE's [`PeReport`] from its controller and priced exec
+/// totals. Every busy field reads the controller's **derived** getters,
+/// so a counts-loaded controller (the profiler's pricing pass, see
+/// [`MemoryController::load_counts`]) produces the same report as a
+/// directly walked one — the single owner of the per-PE report shape
+/// for the analytic engine, the event replay loops and the profiler.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble_pe_report(
+    mc: &MemoryController,
+    pe_idx: usize,
+    pe_nnz: u64,
+    n_slices_pe: u64,
+    pipeline_cycles: f64,
+    psum_cycles: f64,
+    psum_words: u64,
+    latency_overhead: f64,
+) -> PeReport {
+    PeReport {
+        pe: pe_idx,
+        nnz: pe_nnz,
+        slices: n_slices_pe,
+        dram_cycles: mc.dram_busy(),
+        cache_cycles: mc.cache_busy_vec(),
+        psum_cycles,
+        pipeline_cycles,
+        stream_dma_cycles: mc.stream_busy,
+        element_dma_cycles: mc.element_busy(),
+        latency_overhead_cycles: latency_overhead,
+        stall_cycles: 0.0,
+        stall_stderr_cycles: 0.0,
+        sampled_nnz: pe_nnz,
+        cache_stats: mc.cache_stats(),
+        dram_stream_bytes: mc.dram.bytes_streamed,
+        dram_random_bytes: mc.dram.bytes_random,
+        dram_random_accesses: mc.dram.random_accesses,
+        cache_words: mc.cache_words,
+        psum_words,
+        dma_words: mc.dma_words,
+        levels: mc.level_reports(),
+    }
 }
 
 /// Charge one PE's §IV-A sequential streams in the canonical order (the
@@ -220,10 +282,8 @@ pub fn simulate_kernel_mode_with_view_budget(
             let mut mc = MemoryController::new(cfg, &t, &matrix_rows);
             let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing.clone(), psum_banks);
 
-            let mut pipeline_cycles = 0.0f64;
-            let mut psum_cycles = 0.0f64;
-            let mut psum_words = 0u64;
             let mut pe_nnz = 0u64;
+            let mut drains = 0u64;
 
             let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
             let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
@@ -232,19 +292,11 @@ pub fn simulate_kernel_mode_with_view_budget(
             while stream.fill(scratch) {
                 let chunk = &*scratch;
                 pe_nnz += chunk.n_nnz as u64;
-                let mut se = 0usize;
+                // every slice drains exactly once (psum row out)
+                drains += chunk.slice_ends.len() as u64;
                 for i in 0..chunk.n_nnz {
                     for read in &chunk.reads[i * rpn..(i + 1) * rpn] {
                         mc.factor_row_load(read.slot() as usize, read.row());
-                    }
-                    pipeline_cycles += per_nnz.pipeline_cycles;
-                    psum_cycles += per_nnz.psum_cycles;
-                    psum_words += per_nnz.psum_words;
-                    if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
-                        // slice complete: drain psum row + store output row
-                        psum_cycles += per_drain.psum_cycles;
-                        psum_words += per_drain.psum_words;
-                        se += 1;
                     }
                 }
             }
@@ -256,31 +308,18 @@ pub fn simulate_kernel_mode_with_view_budget(
             charge_streams(&mut mc, pe_nnz, n_slices_pe, item_bytes, row_bytes);
 
             let latency_overhead = startup_latency(cfg, &mc);
-
-            let stats = mc.cache_stats();
-            PeReport {
-                pe: pe_idx,
-                nnz: pe_nnz,
-                slices: n_slices_pe,
-                dram_cycles: mc.dram.busy_cycles,
-                cache_cycles: mc.cache_busy.clone(),
-                psum_cycles,
+            let (pipeline_cycles, psum_cycles, psum_words) =
+                price_exec(&per_nnz, &per_drain, pe_nnz, drains);
+            assemble_pe_report(
+                &mc,
+                pe_idx,
+                pe_nnz,
+                n_slices_pe,
                 pipeline_cycles,
-                stream_dma_cycles: mc.stream_busy,
-                element_dma_cycles: mc.element_busy,
-                latency_overhead_cycles: latency_overhead,
-                stall_cycles: 0.0,
-                stall_stderr_cycles: 0.0,
-                sampled_nnz: pe_nnz,
-                cache_stats: stats,
-                dram_stream_bytes: mc.dram.bytes_streamed,
-                dram_random_bytes: mc.dram.bytes_random,
-                dram_random_accesses: mc.dram.random_accesses,
-                cache_words: mc.cache_words,
+                psum_cycles,
                 psum_words,
-                dma_words: mc.dma_words,
-                levels: mc.level_reports(),
-            }
+                latency_overhead,
+            )
         },
     );
 

@@ -126,7 +126,10 @@ use crate::controller::mc::{MemoryController, Served};
 use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
 use crate::pe::exec::ExecUnit;
-use crate::sim::engine::{charge_streams, nnz_item_bytes, partition_slices, startup_latency};
+use crate::sim::engine::{
+    assemble_pe_report, charge_streams, nnz_item_bytes, partition_slices, price_exec,
+    startup_latency,
+};
 use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
 use crate::sim::{SampleSpec, SimBudget};
@@ -325,11 +328,12 @@ fn replay_pe(
     let mut processed = 0usize;
     let mut finish = 0.0f64;
 
-    // --- analytic-identical accumulators (the report's busy fields) ---
-    let mut pipeline_cycles = 0.0f64;
-    let mut psum_cycles = 0.0f64;
-    let mut psum_words = 0u64;
+    // --- analytic-identical exec counters: the report's pipeline/psum
+    // figures are priced from these at report time as count × constant
+    // (the shared `price_exec` helper), exactly like the analytic
+    // engine ---
     let mut pe_nnz = 0u64;
+    let mut drains = 0u64;
 
     // --- sampling state: one stall sample per timed chunk ---
     let sampling = !ctx.sample.is_exact();
@@ -340,7 +344,6 @@ fn replay_pe(
     let ReplayScratch { chunk, serve, bank, depth, cache_snap, level_snap } = scratch;
     let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
     while stream.fill(chunk) {
-        pe_nnz += chunk.n_nnz as u64;
         let timed = ctx.sample.admits(ctx.mode, pe_idx, n_chunks);
         n_chunks += 1;
 
@@ -348,41 +351,35 @@ fn replay_pe(
             // Functional-only walk: the shared controller still sees
             // every read in stream order (hit rates, traffic and busy
             // sums stay exact — the cache state is sequential and may
-            // never skip), and the per-nonzero exec charges accumulate
-            // as in the analytic engine; only the event clocks stand
-            // still.
-            let mut se = 0usize;
-            for i in 0..chunk.n_nnz {
-                for read in &chunk.reads[i * ctx.rpn..(i + 1) * ctx.rpn] {
-                    let _ = mc.factor_row_load(read.slot() as usize, read.row());
-                }
-                pipeline_cycles += per_nnz.pipeline_cycles;
-                psum_cycles += per_nnz.psum_cycles;
-                psum_words += per_nnz.psum_words;
-                if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
-                    psum_cycles += per_drain.psum_cycles;
-                    psum_words += per_drain.psum_words;
-                    se += 1;
-                }
+            // never skip), and the exec work is captured by the chunk's
+            // nonzero/drain counts, priced at report time; only the
+            // event clocks stand still.
+            pe_nnz += chunk.n_nnz as u64;
+            drains += chunk.slice_ends.len() as u64;
+            for read in &chunk.reads[..chunk.n_nnz * ctx.rpn] {
+                let _ = mc.factor_row_load(read.slot() as usize, read.row());
             }
             continue;
         }
 
-        // chunk-entry baselines for the per-chunk stall sample
-        let (frontier0, dram_busy0, pipe0, psum0) = if sampling {
+        // chunk-entry baselines for the per-chunk stall sample (exec
+        // counters snapshot before this chunk's work lands)
+        let (frontier0, dram_busy0, nnz0, drains0) = if sampling {
             cache_snap.clear();
-            cache_snap.extend_from_slice(&mc.cache_busy);
+            cache_snap.extend((0..n_caches).map(|i| mc.cache_busy(i)));
             level_snap.clear();
             level_snap.extend((0..n_levels).map(|i| mc.level_busy(i)));
             (
                 frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free),
-                mc.dram.busy_cycles,
-                pipeline_cycles,
-                psum_cycles,
+                mc.dram_busy(),
+                pe_nnz,
+                drains,
             )
         } else {
-            (0.0, 0.0, 0.0, 0.0)
+            (0.0, 0.0, 0, 0)
         };
+        pe_nnz += chunk.n_nnz as u64;
+        drains += chunk.slice_ends.len() as u64;
 
         let n_reads = chunk.n_nnz * ctx.rpn;
 
@@ -492,15 +489,9 @@ fn replay_pe(
             processed += 1;
             finish = finish.max(done);
 
-            pipeline_cycles += per_nnz.pipeline_cycles;
-            psum_cycles += per_nnz.psum_cycles;
-            psum_words += per_nnz.psum_words;
-
             if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
                 // slice complete: drain psum row toward the store path
                 psum_free += per_drain.psum_cycles;
-                psum_cycles += per_drain.psum_cycles;
-                psum_words += per_drain.psum_words;
                 finish = finish.max(psum_free);
                 se += 1;
             }
@@ -515,10 +506,12 @@ fn replay_pe(
             // in bulk at stream end. Clamped non-negative so the
             // extrapolated stall keeps `event ≥ analytic`.
             let f1 = frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free);
-            let d_dram = (mc.dram.busy_cycles - dram_busy0) + chunk.n_nnz as f64 * stream_per_nnz;
-            let mut ideal = d_dram.max(pipeline_cycles - pipe0).max(psum_cycles - psum0);
+            let d_dram = (mc.dram_busy() - dram_busy0) + chunk.n_nnz as f64 * stream_per_nnz;
+            let (d_pipe, d_psum, _) =
+                price_exec(&per_nnz, &per_drain, pe_nnz - nnz0, drains - drains0);
+            let mut ideal = d_dram.max(d_pipe).max(d_psum);
             for (i, &before) in cache_snap.iter().enumerate() {
-                ideal = ideal.max(mc.cache_busy[i] - before);
+                ideal = ideal.max(mc.cache_busy(i) - before);
             }
             for (i, &before) in level_snap.iter().enumerate() {
                 ideal = ideal.max(mc.level_busy(i) - before);
@@ -540,31 +533,20 @@ fn replay_pe(
 
     let latency_overhead = startup_latency(cfg, &mc);
 
-    let stats = mc.cache_stats();
-    let mut report = PeReport {
-        pe: pe_idx,
-        nnz: pe_nnz,
-        slices: n_slices_pe,
-        dram_cycles: mc.dram.busy_cycles,
-        cache_cycles: mc.cache_busy.clone(),
-        psum_cycles,
+    let (pipeline_cycles, psum_cycles, psum_words) =
+        price_exec(&per_nnz, &per_drain, pe_nnz, drains);
+    let mut report = assemble_pe_report(
+        &mc,
+        pe_idx,
+        pe_nnz,
+        n_slices_pe,
         pipeline_cycles,
-        stream_dma_cycles: mc.stream_busy,
-        element_dma_cycles: mc.element_busy,
-        latency_overhead_cycles: latency_overhead,
-        stall_cycles: 0.0,
-        stall_stderr_cycles: 0.0,
-        sampled_nnz: if sampling { sampled_nnz } else { pe_nnz },
-        cache_stats: stats,
-        dram_stream_bytes: mc.dram.bytes_streamed,
-        dram_random_bytes: mc.dram.bytes_random,
-        dram_random_accesses: mc.dram.random_accesses,
-        cache_words: mc.cache_words,
+        psum_cycles,
         psum_words,
-        dma_words: mc.dma_words,
-        levels: mc.level_reports(),
-    };
+        latency_overhead,
+    );
     if sampling {
+        report.sampled_nnz = sampled_nnz;
         // extrapolate: mean per-chunk stall × total chunk count, with a
         // standard error from the per-chunk sample variance scaled the
         // same way (zero band when fewer than two samples exist)
@@ -627,15 +609,14 @@ fn replay_pe_reference(
     let mut processed = 0usize;
     let mut finish = 0.0f64;
 
-    let mut pipeline_cycles = 0.0f64;
-    let mut psum_cycles = 0.0f64;
-    let mut psum_words = 0u64;
     let mut pe_nnz = 0u64;
+    let mut drains = 0u64;
 
     let mut stream = ctx.kernel.stream(ctx.tensor, ctx.view, (slo, shi), ctx.chunk_nnz);
     while stream.fill(scratch) {
         let chunk = &*scratch;
         pe_nnz += chunk.n_nnz as u64;
+        drains += chunk.slice_ends.len() as u64;
         let mut se = 0usize;
         for i in 0..chunk.n_nnz {
             let slot = processed % ctx.window;
@@ -693,14 +674,8 @@ fn replay_pe_reference(
             processed += 1;
             finish = finish.max(done);
 
-            pipeline_cycles += per_nnz.pipeline_cycles;
-            psum_cycles += per_nnz.psum_cycles;
-            psum_words += per_nnz.psum_words;
-
             if se < chunk.slice_ends.len() && chunk.slice_ends[se] == i as u32 {
                 psum_free += per_drain.psum_cycles;
-                psum_cycles += per_drain.psum_cycles;
-                psum_words += per_drain.psum_words;
                 finish = finish.max(psum_free);
                 se += 1;
             }
@@ -714,30 +689,18 @@ fn replay_pe_reference(
     let latency_overhead = startup_latency(cfg, &mc);
     let event_end = frontier(finish, dram_free, pipe_free, psum_free, &bank_free, &level_free);
 
-    let stats = mc.cache_stats();
-    let mut report = PeReport {
-        pe: pe_idx,
-        nnz: pe_nnz,
-        slices: n_slices_pe,
-        dram_cycles: mc.dram.busy_cycles,
-        cache_cycles: mc.cache_busy.clone(),
-        psum_cycles,
+    let (pipeline_cycles, psum_cycles, psum_words) =
+        price_exec(&per_nnz, &per_drain, pe_nnz, drains);
+    let mut report = assemble_pe_report(
+        &mc,
+        pe_idx,
+        pe_nnz,
+        n_slices_pe,
         pipeline_cycles,
-        stream_dma_cycles: mc.stream_busy,
-        element_dma_cycles: mc.element_busy,
-        latency_overhead_cycles: latency_overhead,
-        stall_cycles: 0.0,
-        stall_stderr_cycles: 0.0,
-        sampled_nnz: pe_nnz,
-        cache_stats: stats,
-        dram_stream_bytes: mc.dram.bytes_streamed,
-        dram_random_bytes: mc.dram.bytes_random,
-        dram_random_accesses: mc.dram.random_accesses,
-        cache_words: mc.cache_words,
+        psum_cycles,
         psum_words,
-        dma_words: mc.dma_words,
-        levels: mc.level_reports(),
-    };
+        latency_overhead,
+    );
     report.stall_cycles = (event_end - report.runtime_cycles()).max(0.0);
     report
 }

@@ -19,6 +19,14 @@
 //! * [`par`] — the deterministic slot-ordered parallel map shared by the
 //!   sweep and by both engines' per-PE inner loops; [`SimBudget`] is the
 //!   thread/chunk knob the two levels compose under.
+//! * [`profile`] — the single-pass reuse-distance profiler: one decode
+//!   traversal per `(tensor, mode, kernel)` builds per-set LRU
+//!   stack-distance histograms that answer the analytic engine's
+//!   functional counters for a **whole geometry sub-grid** at once
+//!   ([`profile::profile_geometries`]); [`profile::price_report`] then
+//!   reproduces the analytic [`result::SimReport`] bit-for-bit per
+//!   `(tech, pricing knobs)` — the functional/timing split the explore
+//!   screen runs on.
 //!
 //! The *workload* axis is just as open as the technology axis: both
 //! backends consume the [`crate::kernel::SparseKernel`] access-stream IR
@@ -34,6 +42,7 @@
 pub mod engine;
 pub mod event;
 pub mod par;
+pub mod profile;
 pub mod result;
 pub mod sweep;
 

@@ -1,0 +1,600 @@
+//! Single-pass reuse-distance profiling: the **functional** half of the
+//! explore screen, computed for a whole geometry sub-grid in one stream
+//! walk.
+//!
+//! The analytic engine's per-candidate work splits cleanly in two
+//! (see [`crate::controller::mc`] §Functional/timing split):
+//!
+//! 1. a **functional pass** — hit/miss/traffic/active-word counters, a
+//!    pure function of `{tensor, mode, kernel, cache geometry, level
+//!    stack}` and *nothing else* (no technology, no `n_pes`-independent
+//!    knob, no rank);
+//! 2. a **pricing pass** — multiply those integer counters by hoisted
+//!    per-technology occupancy constants and assemble the report
+//!    ([`MemoryController::load_counts`] + the shared
+//!    [`crate::sim::engine`] pricing helpers).
+//!
+//! [`profile_geometries`] runs pass 1 for *every* distinct geometry of
+//! an explore grid in **one decode traversal per mode**: empty-stack
+//! geometries are answered by per-set Mattson LRU stack-distance
+//! histograms ([`crate::cache::lru::StackDistance`]) over the coarsened
+//! row keys — the inclusion property means one truncated recency stack
+//! per set answers hit/miss/eviction counts for every associativity at
+//! once — while leveled geometries (the `sram_kib`/`local_kib` axes)
+//! ride the same walk on real functional controllers. Per-PE boundaries
+//! ([`partition_slices`]) finalize and reset the state, so every
+//! `n_pes` value of the grid shares the walk too.
+//!
+//! [`price_report`] is pass 2: it reproduces the analytic engine's
+//! [`SimReport`] **bit for bit** from a profile (pinned by the parity
+//! tests below and `rust/tests/profile_parity.rs`), which is what lets
+//! [`crate::explore::search`] screen a grid of G candidates with O(1)
+//! stream walks instead of O(G).
+
+use crate::accel::config::AcceleratorConfig;
+use crate::cache::cache::{mix_key, row_key, CacheStats};
+use crate::cache::lru::StackDistance;
+use crate::cache::pipeline::ArrayTiming;
+use crate::controller::mc::{FunctionalCounts, MemoryController};
+use crate::kernel::{AccessChunk, SparseKernel};
+use crate::mem::tech::MemTechnology;
+use crate::pe::exec::ExecUnit;
+use crate::sim::engine::{
+    assemble_pe_report, charge_streams, nnz_item_bytes, partition_slices, price_exec,
+    startup_latency,
+};
+use crate::sim::result::{ModeReport, SimReport};
+use crate::tensor::coo::SparseTensor;
+use crate::tensor::csf::ModeView;
+
+/// Per-PE functional result of a profiled walk: exactly what the
+/// pricing pass needs to reproduce the analytic engine's per-PE report
+/// (work counters + the controller's [`FunctionalCounts`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PeProfile {
+    /// Nonzeros the PE's slice range retires.
+    pub nnz: u64,
+    /// Slices in the range (= psum drains = output rows streamed out).
+    pub slices: u64,
+    /// The PE controller's functional counters after the walk.
+    pub counts: FunctionalCounts,
+}
+
+/// One geometry's functional profile across every requested mode:
+/// `modes[i]` holds the per-PE profiles for `views[i]`, in PE order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GeometryProfile {
+    pub modes: Vec<Vec<PeProfile>>,
+}
+
+/// The §IV-A type-3 bypass routing decision, per input slot — must
+/// mirror [`MemoryController::new`] exactly (the signature partitions
+/// the stream between the stack-distance path and the element-DMA
+/// counter, and it depends on `cache_lines`, so it is part of a stack
+/// group's identity).
+fn bypass_signature(cfg: &AcceleratorConfig, matrix_rows: &[u64]) -> Vec<bool> {
+    let capacity_lines = cfg.cache_lines as u64;
+    matrix_rows
+        .iter()
+        .map(|&rows| match cfg.cache_bypass_factor {
+            Some(f) => rows > capacity_lines * f as u64,
+            None => false,
+        })
+        .collect()
+}
+
+/// One shared stack-distance state: every empty-stack geometry with the
+/// same bypass signature, cache count and set count reads its exact
+/// per-associativity [`CacheStats`] out of this group.
+struct StackGroup {
+    sig: Vec<bool>,
+    n_caches: usize,
+    sets: usize,
+    /// Largest associativity any member needs (`StackDistance` cap).
+    cap: usize,
+    /// One truncated recency stack per cache (same routing as the
+    /// controller: slot % n_caches).
+    stacks: Vec<StackDistance>,
+    /// Bypassed loads since the last PE boundary (element-DMA count).
+    bypassed: u64,
+    /// Geometry indices (into the caller's cfg list) answered here.
+    members: Vec<usize>,
+}
+
+/// All profiling state for one `n_pes` value: the slice partition, the
+/// walk cursor, and the stack groups / leveled controllers that reset
+/// at this partition's PE boundaries.
+struct Bucket {
+    n_pes: usize,
+    parts: Vec<(usize, usize)>,
+    /// Current PE (index into `parts`).
+    p: usize,
+    /// Nonzeros since the last PE boundary.
+    pe_nnz: u64,
+    groups: Vec<StackGroup>,
+    /// `(geometry index, controller)` for leveled geometries — they
+    /// ride the same walk on real functional controllers.
+    leveled: Vec<(usize, MemoryController)>,
+}
+
+/// Close out bucket PE `b.p`: derive every member geometry's
+/// [`FunctionalCounts`] for this PE, reset the functional state cold
+/// (the next PE owns a fresh controller in the engines), advance.
+fn finalize_pe(
+    b: &mut Bucket,
+    cfgs: &[&AcceleratorConfig],
+    walk_tech: &MemTechnology,
+    matrix_rows: &[u64],
+    vi: usize,
+    out: &mut [GeometryProfile],
+) {
+    let (lo, hi) = b.parts[b.p];
+    let slices = (hi - lo) as u64;
+    for g in &mut b.groups {
+        for &gi in &g.members {
+            let assoc = cfgs[gi].cache_assoc;
+            let cache_stats: Vec<CacheStats> =
+                g.stacks.iter().map(|sd| sd.stats_at(assoc)).collect();
+            // factor streams are read-only, so writebacks are always 0
+            // and every DRAM line access is a bypass load or a miss fill
+            let misses: u64 = cache_stats.iter().map(|s| s.misses + s.writebacks).sum();
+            let counts = FunctionalCounts {
+                cache_stats,
+                element_accesses: g.bypassed,
+                dram_line_accesses: g.bypassed + misses,
+                dram_hier_accesses: 0,
+                levels: Vec::new(),
+            };
+            out[gi].modes[vi].push(PeProfile { nnz: b.pe_nnz, slices, counts });
+        }
+        g.bypassed = 0;
+        for sd in &mut g.stacks {
+            sd.reset();
+        }
+    }
+    for (gi, mc) in &mut b.leveled {
+        out[*gi].modes[vi].push(PeProfile { nnz: b.pe_nnz, slices, counts: mc.counts() });
+        *mc = MemoryController::new(cfgs[*gi], walk_tech, matrix_rows);
+    }
+    b.pe_nnz = 0;
+    b.p += 1;
+}
+
+/// Profile every geometry in `cfgs` over every `(mode, view)` of
+/// `views` with **one decode traversal per mode** — the functional
+/// pass of the explore screen. Entry `i` of the result corresponds to
+/// `cfgs[i]`; only the functional-geometry fields of each config are
+/// consulted (`n_pes`, cache counts/lines/assoc, line bytes, the
+/// bypass factor and the level stack — see
+/// [`crate::explore::key::canonical_geometry`]), so one representative
+/// config per distinct geometry is enough.
+///
+/// The derived counts are **bit-identical** to walking each geometry
+/// directly through [`MemoryController::factor_row_load`]; `chunk_nnz`
+/// bounds decode scratch memory and never changes the counts.
+pub fn profile_geometries(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    views: &[(usize, ModeView)],
+    cfgs: &[&AcceleratorConfig],
+    chunk_nnz: usize,
+) -> Vec<GeometryProfile> {
+    // Any technology works for the walk controllers: functional counts
+    // are technology-independent by the controller's own split.
+    let walk_tech = crate::mem::esram::esram();
+    let mut out: Vec<GeometryProfile> = cfgs
+        .iter()
+        .map(|_| GeometryProfile { modes: vec![Vec::new(); views.len()] })
+        .collect();
+    let mut scratch = AccessChunk::default();
+    for (vi, (mode, view)) in views.iter().enumerate() {
+        let read_modes = kernel.read_modes(tensor, *mode);
+        let rpn = read_modes.len();
+        let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+
+        // Group the geometries: one bucket per n_pes value, one stack
+        // group per (bypass signature, cache count, set count), one
+        // live controller per leveled geometry.
+        let mut buckets: Vec<Bucket> = Vec::new();
+        for (gi, cfg) in cfgs.iter().enumerate() {
+            let bi = match buckets.iter().position(|b| b.n_pes == cfg.n_pes) {
+                Some(bi) => bi,
+                None => {
+                    buckets.push(Bucket {
+                        n_pes: cfg.n_pes,
+                        parts: partition_slices(view, cfg.n_pes),
+                        p: 0,
+                        pe_nnz: 0,
+                        groups: Vec::new(),
+                        leveled: Vec::new(),
+                    });
+                    buckets.len() - 1
+                }
+            };
+            let b = &mut buckets[bi];
+            if cfg.levels.is_empty() {
+                let sig = bypass_signature(cfg, &matrix_rows);
+                let sets = cfg.cache_sets();
+                match b
+                    .groups
+                    .iter_mut()
+                    .find(|g| g.sig == sig && g.n_caches == cfg.n_caches && g.sets == sets)
+                {
+                    Some(g) => {
+                        g.cap = g.cap.max(cfg.cache_assoc);
+                        g.members.push(gi);
+                    }
+                    None => b.groups.push(StackGroup {
+                        sig,
+                        n_caches: cfg.n_caches,
+                        sets,
+                        cap: cfg.cache_assoc,
+                        stacks: Vec::new(),
+                        bypassed: 0,
+                        members: vec![gi],
+                    }),
+                }
+            } else {
+                b.leveled.push((gi, MemoryController::new(cfg, &walk_tech, &matrix_rows)));
+            }
+        }
+        // caps are final only after every member registered
+        for b in &mut buckets {
+            for g in &mut b.groups {
+                g.stacks = (0..g.n_caches).map(|_| StackDistance::new(g.sets, g.cap)).collect();
+            }
+        }
+
+        // The single decode traversal: every bucket consumes the same
+        // op sequence, finalizing at its own PE boundaries.
+        let mut stream = kernel.stream(tensor, view, (0, view.n_slices()), chunk_nnz);
+        let mut slice = 0usize;
+        while stream.fill(&mut scratch) {
+            let mut se = 0usize;
+            for i in 0..scratch.n_nnz {
+                let reads = &scratch.reads[i * rpn..(i + 1) * rpn];
+                for b in &mut buckets {
+                    while slice >= b.parts[b.p].1 {
+                        finalize_pe(b, cfgs, &walk_tech, &matrix_rows, vi, &mut out);
+                    }
+                    b.pe_nnz += 1;
+                    for read in reads {
+                        let slot = read.slot() as usize;
+                        for g in &mut b.groups {
+                            if g.sig[slot] {
+                                g.bypassed += 1;
+                            } else {
+                                let key = row_key(slot, read.row());
+                                let set = (mix_key(key) as usize) & (g.sets - 1);
+                                g.stacks[slot % g.n_caches].access(set, key);
+                            }
+                        }
+                        for (_, mc) in &mut b.leveled {
+                            let _ = mc.factor_row_load(slot, read.row());
+                        }
+                    }
+                }
+                if se < scratch.slice_ends.len() && scratch.slice_ends[se] as usize == i {
+                    slice += 1;
+                    se += 1;
+                }
+            }
+        }
+        // tail PEs (including valid empty ranges when n_pes > slices)
+        for b in &mut buckets {
+            while b.p < b.n_pes {
+                finalize_pe(b, cfgs, &walk_tech, &matrix_rows, vi, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Price one mode from its per-PE profiles: fresh controller per PE,
+/// [`MemoryController::load_counts`], the verbatim stream replay, and
+/// the same shared pricing helpers the walked engines use — so the
+/// report is bit-identical to [`crate::sim::engine`]'s.
+fn price_mode(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    mode: usize,
+    cfg: &AcceleratorConfig,
+    t: &MemTechnology,
+    pes_profile: &[PeProfile],
+) -> ModeReport {
+    assert!(mode < tensor.n_modes(), "mode {mode} out of range");
+    if let Err(e) = kernel.validate(tensor, mode) {
+        panic!("kernel `{}` rejected the workload: {e}", kernel.name());
+    }
+    assert_eq!(pes_profile.len(), cfg.n_pes, "profile PE count mismatch");
+    let read_modes = kernel.read_modes(tensor, mode);
+    let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+    let banks = cfg.bank_factor(t);
+    let psum_timing = ArrayTiming::new(t, cfg.fabric_hz, banks);
+    let psum_banks = (cfg.n_pipelines / 10).max(1);
+    let exec = ExecUnit::new(cfg.n_pipelines, cfg.rank, psum_timing, psum_banks);
+    let per_nnz = kernel.nnz_exec(&exec, tensor.n_modes());
+    let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
+    let item_bytes = nnz_item_bytes(tensor.n_modes());
+    let row_bytes = kernel.out_row_bytes(cfg.rank, tensor.n_modes());
+    let pes = pes_profile
+        .iter()
+        .enumerate()
+        .map(|(pe_idx, p)| {
+            let mut mc = MemoryController::new(cfg, t, &matrix_rows);
+            mc.load_counts(&p.counts);
+            charge_streams(&mut mc, p.nnz, p.slices, item_bytes, row_bytes);
+            let latency_overhead = startup_latency(cfg, &mc);
+            let (pipeline_cycles, psum_cycles, psum_words) =
+                price_exec(&per_nnz, &per_drain, p.nnz, p.slices);
+            assemble_pe_report(
+                &mc,
+                pe_idx,
+                p.nnz,
+                p.slices,
+                pipeline_cycles,
+                psum_cycles,
+                psum_words,
+                latency_overhead,
+            )
+        })
+        .collect();
+    ModeReport {
+        tensor: tensor.name.clone(),
+        kernel: kernel.name().to_string(),
+        mode,
+        tech: t.clone(),
+        rank: cfg.rank,
+        fabric_hz: cfg.fabric_hz,
+        pes,
+    }
+}
+
+/// The pricing pass: turn one geometry's [`GeometryProfile`] into the
+/// full [`SimReport`] the analytic engine would produce for
+/// `(cfg, tech)` — **bit-identical** to
+/// [`crate::sim::SimEngine::simulate_kernel_all_modes_with_views_budget`]
+/// on [`EngineKind::Analytic`](crate::sim::EngineKind), at any budget
+/// (pinned by the parity tests). `views` must be the same list the
+/// profile was built over.
+pub fn price_report(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    views: &[(usize, ModeView)],
+    cfg: &AcceleratorConfig,
+    tech: &MemTechnology,
+    profile: &GeometryProfile,
+) -> SimReport {
+    assert_eq!(profile.modes.len(), views.len(), "profile/view mode count mismatch");
+    cfg.validate().expect("invalid accelerator config");
+    let t = cfg.tuned_tech(tech);
+    let modes: Vec<ModeReport> = views
+        .iter()
+        .zip(&profile.modes)
+        .map(|((mode, _view), pes)| price_mode(kernel, tensor, *mode, cfg, &t, pes))
+        .collect();
+    SimReport { tensor: tensor.name.clone(), kernel: kernel.name().to_string(), tech: t, modes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::mem::registry::tech;
+    use crate::sim::{engine, SimBudget};
+    use crate::tensor::gen;
+
+    /// A small grid spanning every profiling path: shared-stack
+    /// geometries (n_pes × lines × assoc), a bypassing one, a leveled
+    /// one.
+    fn geometries() -> Vec<AcceleratorConfig> {
+        let base = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        let mut out = Vec::new();
+        for n_pes in [2usize, 4] {
+            for lines_mul in [1usize, 2] {
+                for assoc in [2usize, 4] {
+                    let mut c = base.clone();
+                    c.n_pes = n_pes;
+                    c.cache_lines = base.cache_lines * lines_mul;
+                    c.cache_assoc = assoc;
+                    c.validate().unwrap();
+                    out.push(c);
+                }
+            }
+        }
+        let mut bypass = base.clone();
+        bypass.cache_bypass_factor = Some(1);
+        bypass.validate().unwrap();
+        out.push(bypass);
+        let mut leveled = base.clone();
+        leveled.levels =
+            crate::mem::hierarchy::parse_levels("outer:64KiB:line256,inner:4KiB").unwrap();
+        leveled.validate().unwrap();
+        out.push(leveled);
+        out
+    }
+
+    /// The reference: walk one geometry directly, a fresh controller
+    /// per PE, exactly like the analytic engine's functional loop.
+    fn direct_profiles(
+        kernel: &dyn SparseKernel,
+        tensor: &SparseTensor,
+        views: &[(usize, ModeView)],
+        cfg: &AcceleratorConfig,
+    ) -> GeometryProfile {
+        let walk_tech = crate::mem::esram::esram();
+        let mut gp = GeometryProfile::default();
+        for (mode, view) in views {
+            let read_modes = kernel.read_modes(tensor, *mode);
+            let rpn = read_modes.len();
+            let rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+            let mut pes = Vec::new();
+            for (slo, shi) in engine::partition_slices(view, cfg.n_pes) {
+                let mut mc = MemoryController::new(cfg, &walk_tech, &rows);
+                let mut nnz = 0u64;
+                for chunk in kernel.stream(tensor, view, (slo, shi), 777) {
+                    nnz += chunk.n_nnz as u64;
+                    for read in &chunk.reads[..chunk.n_nnz * rpn] {
+                        let _ = mc.factor_row_load(read.slot() as usize, read.row());
+                    }
+                }
+                pes.push(PeProfile { nnz, slices: (shi - slo) as u64, counts: mc.counts() });
+            }
+            gp.modes.push(pes);
+        }
+        gp
+    }
+
+    #[test]
+    fn profiled_counts_match_direct_simulation_on_every_kernel() {
+        let t = gen::random(&[96, 64, 80], 6_000, 17);
+        let views: Vec<(usize, ModeView)> =
+            (0..3).map(|m| (m, ModeView::build(&t, m))).collect();
+        let geoms = geometries();
+        let refs: Vec<&AcceleratorConfig> = geoms.iter().collect();
+        for kind in KernelKind::ALL {
+            let kernel = kind.kernel();
+            let profiled = profile_geometries(kernel, &t, &views, &refs, 513);
+            assert_eq!(profiled.len(), geoms.len());
+            for (cfg, got) in geoms.iter().zip(&profiled) {
+                let want = direct_profiles(kernel, &t, &views, cfg);
+                assert_eq!(
+                    got, &want,
+                    "{kind}: pes={} lines={} assoc={} bypass={:?} levels={}",
+                    cfg.n_pes,
+                    cfg.cache_lines,
+                    cfg.cache_assoc,
+                    cfg.cache_bypass_factor,
+                    cfg.levels.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_size_never_changes_a_profile() {
+        let t = gen::random(&[64, 48, 48], 3_000, 5);
+        let views: Vec<(usize, ModeView)> =
+            (0..3).map(|m| (m, ModeView::build(&t, m))).collect();
+        let geoms = geometries();
+        let refs: Vec<&AcceleratorConfig> = geoms.iter().collect();
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let a = profile_geometries(kernel, &t, &views, &refs, 1);
+        let b = profile_geometries(kernel, &t, &views, &refs, 100_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn priced_report_is_bit_identical_to_the_analytic_engine() {
+        let t = gen::random(&[128, 96, 64], 8_000, 23);
+        let views: Vec<(usize, ModeView)> =
+            (0..3).map(|m| (m, ModeView::build(&t, m))).collect();
+        let geoms = geometries();
+        let refs: Vec<&AcceleratorConfig> = geoms.iter().collect();
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let profiled = profile_geometries(kernel, &t, &views, &refs, 4096);
+        for (cfg, gp) in geoms.iter().zip(&profiled) {
+            for tname in ["e-sram", "o-sram"] {
+                let want = crate::sim::EngineKind::Analytic
+                    .simulate_kernel_all_modes_with_views_budget(
+                        kernel,
+                        &t,
+                        &views,
+                        cfg,
+                        &tech(tname),
+                        SimBudget::single_threaded(),
+                    );
+                let got = price_report(kernel, &t, &views, cfg, &tech(tname), gp);
+                assert_reports_identical(&want, &got, &format!("{tname} pes={}", cfg.n_pes));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tensor_profiles_and_prices_cleanly() {
+        let t = SparseTensor::new("empty", vec![10, 10]);
+        let views: Vec<(usize, ModeView)> =
+            (0..2).map(|m| (m, ModeView::build(&t, m))).collect();
+        let base = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        let kernel = KernelKind::Spmttkrp.kernel();
+        let profiled = profile_geometries(kernel, &t, &views, &[&base], 64);
+        assert_eq!(profiled[0].modes.len(), 2);
+        for pes in &profiled[0].modes {
+            assert_eq!(pes.len(), base.n_pes);
+            for p in pes {
+                assert_eq!((p.nnz, p.slices), (0, 0));
+                assert_eq!(p.counts.total_cache_stats().accesses(), 0);
+            }
+        }
+        let want = crate::sim::EngineKind::Analytic.simulate_kernel_all_modes_with_views_budget(
+            kernel,
+            &t,
+            &views,
+            &base,
+            &tech("o-sram"),
+            SimBudget::single_threaded(),
+        );
+        let got = price_report(kernel, &t, &views, &base, &tech("o-sram"), &profiled[0]);
+        assert_reports_identical(&want, &got, "empty");
+    }
+
+    fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+        assert_eq!(a.tensor, b.tensor, "{ctx}");
+        assert_eq!(a.kernel, b.kernel, "{ctx}");
+        assert_eq!(a.tech.name, b.tech.name, "{ctx}");
+        assert_eq!(a.modes.len(), b.modes.len(), "{ctx}");
+        assert_eq!(a.total_runtime_s().to_bits(), b.total_runtime_s().to_bits(), "{ctx}");
+        for (ma, mb) in a.modes.iter().zip(&b.modes) {
+            assert_eq!(ma.mode, mb.mode, "{ctx}");
+            assert_eq!(ma.rank, mb.rank, "{ctx}");
+            assert_eq!(ma.runtime_cycles().to_bits(), mb.runtime_cycles().to_bits(), "{ctx}");
+            assert_eq!(ma.pes.len(), mb.pes.len(), "{ctx}");
+            for (pa, pb) in ma.pes.iter().zip(&mb.pes) {
+                let m = format!("{ctx} mode {} pe {}", ma.mode, pa.pe);
+                assert_eq!(pa.nnz, pb.nnz, "{m}");
+                assert_eq!(pa.slices, pb.slices, "{m}");
+                assert_eq!(pa.sampled_nnz, pb.sampled_nnz, "{m}");
+                assert_eq!(pa.dram_cycles.to_bits(), pb.dram_cycles.to_bits(), "{m}");
+                assert_eq!(pa.cache_cycles.len(), pb.cache_cycles.len(), "{m}");
+                for (x, y) in pa.cache_cycles.iter().zip(&pb.cache_cycles) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{m}");
+                }
+                assert_eq!(pa.psum_cycles.to_bits(), pb.psum_cycles.to_bits(), "{m}");
+                assert_eq!(pa.pipeline_cycles.to_bits(), pb.pipeline_cycles.to_bits(), "{m}");
+                assert_eq!(
+                    pa.stream_dma_cycles.to_bits(),
+                    pb.stream_dma_cycles.to_bits(),
+                    "{m}"
+                );
+                assert_eq!(
+                    pa.element_dma_cycles.to_bits(),
+                    pb.element_dma_cycles.to_bits(),
+                    "{m}"
+                );
+                assert_eq!(
+                    pa.latency_overhead_cycles.to_bits(),
+                    pb.latency_overhead_cycles.to_bits(),
+                    "{m}"
+                );
+                assert_eq!(pa.stall_cycles.to_bits(), pb.stall_cycles.to_bits(), "{m}");
+                assert_eq!(pa.cache_stats, pb.cache_stats, "{m}");
+                assert_eq!(pa.dram_stream_bytes, pb.dram_stream_bytes, "{m}");
+                assert_eq!(pa.dram_random_bytes, pb.dram_random_bytes, "{m}");
+                assert_eq!(pa.dram_random_accesses, pb.dram_random_accesses, "{m}");
+                assert_eq!(pa.cache_words, pb.cache_words, "{m}");
+                assert_eq!(pa.psum_words, pb.psum_words, "{m}");
+                assert_eq!(pa.dma_words, pb.dma_words, "{m}");
+                assert_eq!(pa.levels.len(), pb.levels.len(), "{m}");
+                for (la, lb) in pa.levels.iter().zip(&pb.levels) {
+                    assert_eq!(la.name, lb.name, "{m}");
+                    assert_eq!(la.accesses, lb.accesses, "{m}");
+                    assert_eq!(la.traffic_bytes, lb.traffic_bytes, "{m}");
+                    assert_eq!(la.hits, lb.hits, "{m}");
+                    assert_eq!(la.misses, lb.misses, "{m}");
+                    assert_eq!(la.words, lb.words, "{m}");
+                    assert_eq!(la.busy_cycles.to_bits(), lb.busy_cycles.to_bits(), "{m}");
+                }
+            }
+        }
+    }
+}

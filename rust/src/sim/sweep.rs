@@ -30,6 +30,12 @@
 //! single giant point) pushes the budget down into the engines instead
 //! of idling cores. Throughput notes live in EXPERIMENTS.md §Perf. The
 //! CLI front-end is `photon-mttkrp sweep`.
+//!
+//! The sweep's grid varies the *workload* (tensor, scale, mode), so each
+//! point genuinely needs its own stream walk. Grids that vary only
+//! *hardware* knobs over a fixed workload are the explore screen's
+//! domain, where the reuse-distance profiler ([`crate::sim::profile`])
+//! prices the whole cache-geometry sub-grid from one walk.
 
 use crate::accel::config::AcceleratorConfig;
 use crate::energy::model::{EnergyBreakdown, EnergyModel};

@@ -68,6 +68,7 @@ pub struct Bench {
     measure: Duration,
     min_iters: u64,
     results: Vec<Measurement>,
+    values: Vec<(String, f64, String)>,
     group: String,
 }
 
@@ -86,6 +87,7 @@ impl Bench {
             measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
             min_iters: 5,
             results: Vec::new(),
+            values: Vec::new(),
             group: String::new(),
         }
     }
@@ -169,10 +171,13 @@ impl Bench {
     }
 
     /// Record an externally computed scalar (used by the table/figure
-    /// "benches", where the interesting output is the model value itself).
+    /// "benches", where the interesting output is the model value itself,
+    /// and by counters like the explore screen's stream-walk count).
+    /// Persisted into [`Bench::write_json`] under a `"values"` array.
     pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
         let formatted = crate::util::table::fmt_sig(value, 4);
         println!("{:<44} value: {formatted} {unit}", self.full_name(name));
+        self.values.push((self.full_name(name), value, unit.to_string()));
     }
 
     pub fn results(&self) -> &[Measurement] {
@@ -234,6 +239,9 @@ impl Bench {
     /// is computed over `median_s`, the run-to-run-comparable statistic.
     /// Hand-rolled writer (the build is offline, no serde): numbers via
     /// `{:e}` so round-tripping loses nothing, names JSON-escaped.
+    /// Scalars recorded with [`Bench::record_value`] land in an additional
+    /// `"values"` array (omitted when none were recorded, so existing
+    /// trajectory files keep their exact shape).
     pub fn write_json(&self, path: &Path) -> io::Result<()> {
         let mut out = String::from("{\n  \"benchmarks\": [");
         for (i, m) in self.results.iter().enumerate() {
@@ -253,7 +261,23 @@ impl Bench {
                 m.throughput_per_s().map(|t| format!("{t:e}")).unwrap_or_else(|| "null".into()),
             ));
         }
-        out.push_str("\n  ]\n}\n");
+        out.push_str("\n  ]");
+        if !self.values.is_empty() {
+            out.push_str(",\n  \"values\": [");
+            for (i, (name, value, unit)) in self.values.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "\n    {{\"name\": \"{}\", \"value\": {:e}, \"unit\": \"{}\"}}",
+                    json_escape(name),
+                    value,
+                    json_escape(unit),
+                ));
+            }
+            out.push_str("\n  ]");
+        }
+        out.push_str("\n}\n");
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -384,6 +408,27 @@ mod tests {
         // balanced structure: one object per measurement
         assert_eq!(json.matches("{\"name\"").count(), 2);
         assert!(json.trim_end().ends_with('}'), "{json}");
+        // no values recorded → no "values" key at all (shape unchanged)
+        assert!(!json.contains("\"values\""), "{json}");
+    }
+
+    #[test]
+    fn recorded_values_land_in_the_json() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.group("g");
+        b.bench("plain", || 2 + 2);
+        b.record_value("walks", 3.0, "stream walks");
+        let path = std::env::temp_dir()
+            .join(format!("photon_bench_values_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let json = std::fs::read_to_string(&path).unwrap();
+        assert!(json.contains("\"values\": ["), "{json}");
+        assert!(json.contains("\"name\": \"g/walks\""), "{json}");
+        assert!(json.contains("\"value\": 3e0"), "{json}");
+        assert!(json.contains("\"unit\": \"stream walks\""), "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

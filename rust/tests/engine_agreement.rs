@@ -72,10 +72,8 @@ fn legacy_analytic_pes(
         let per_nnz = exec.nonzero(tensor.n_modes());
         let per_drain = exec.drain_slice();
 
-        let mut pipeline_cycles = 0.0f64;
-        let mut psum_cycles = 0.0f64;
-        let mut psum_words = 0u64;
         let mut pe_nnz = 0u64;
+        let mut drains = 0u64;
         for s in slo..shi {
             let slice = view.slice(s);
             pe_nnz += slice.len() as u64;
@@ -84,13 +82,15 @@ fn legacy_analytic_pes(
                 for (j, &m) in input_modes.iter().enumerate() {
                     mc.factor_row_load(j, tensor.indices[m][k]);
                 }
-                pipeline_cycles += per_nnz.pipeline_cycles;
-                psum_cycles += per_nnz.psum_cycles;
-                psum_words += per_nnz.psum_words;
             }
-            psum_cycles += per_drain.psum_cycles;
-            psum_words += per_drain.psum_words;
+            drains += 1;
         }
+        // exec work priced as count × constant (the shared semantics of
+        // the functional/timing split)
+        let pipeline_cycles = pe_nnz as f64 * per_nnz.pipeline_cycles;
+        let psum_cycles =
+            pe_nnz as f64 * per_nnz.psum_cycles + drains as f64 * per_drain.psum_cycles;
+        let psum_words = pe_nnz * per_nnz.psum_words + drains * per_drain.psum_words;
         let n_slices_pe = (shi - slo) as u64;
         mc.stream(pe_nnz * item_bytes);
         mc.stream(n_slices_pe * row_bytes);
@@ -101,12 +101,12 @@ fn legacy_analytic_pes(
         out.push(LegacyPe {
             nnz: pe_nnz,
             slices: n_slices_pe,
-            dram_cycles: mc.dram.busy_cycles.to_bits(),
-            cache_cycles: mc.cache_busy.iter().map(|c| c.to_bits()).collect(),
+            dram_cycles: mc.dram_busy().to_bits(),
+            cache_cycles: mc.cache_busy_vec().iter().map(|c| c.to_bits()).collect(),
             psum_cycles: psum_cycles.to_bits(),
             pipeline_cycles: pipeline_cycles.to_bits(),
             stream_dma_cycles: mc.stream_busy.to_bits(),
-            element_dma_cycles: mc.element_busy.to_bits(),
+            element_dma_cycles: mc.element_busy().to_bits(),
             latency_overhead: latency.to_bits(),
             hits: stats.hits,
             misses: stats.misses,

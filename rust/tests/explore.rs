@@ -188,6 +188,37 @@ fn evaluation_cache_hit_equals_miss_bit_for_bit() {
 }
 
 #[test]
+fn profiled_screen_is_bit_identical_and_walks_the_stream_at_least_5x_less() {
+    // the acceptance criterion: the profiled analytic screen (the
+    // default) performs >= 5x fewer functional stream walks than grid
+    // points evaluated, with a bit-identical published frontier
+    let profiled = run_explore(&paper_spec(0)).unwrap();
+    assert_eq!(
+        profiled.functional_walks, 1,
+        "one kernel, one workload: every geometry profiles in one walk"
+    );
+    assert!(
+        profiled.candidates.len() as u64 >= 5 * profiled.functional_walks,
+        "{} grid points vs {} walks",
+        profiled.candidates.len(),
+        profiled.functional_walks
+    );
+    let mut direct_spec = paper_spec(0);
+    direct_spec.profile = false;
+    let direct = run_explore(&direct_spec).unwrap();
+    assert_eq!(direct.functional_walks, 0, "the direct screen never profiles");
+    assert_bit_identical(&profiled, &direct, "profiled vs direct screen");
+    // the structural grid too, with a second kernel in play (one walk
+    // per kernel group)
+    let profiled = run_explore(&tiny_spec(2)).unwrap();
+    assert_eq!(profiled.functional_walks, 2, "one walk per kernel");
+    let mut direct_spec = tiny_spec(2);
+    direct_spec.profile = false;
+    let direct = run_explore(&direct_spec).unwrap();
+    assert_bit_identical(&profiled, &direct, "profiled vs direct tiny grid");
+}
+
+#[test]
 fn frontier_is_bit_identical_across_thread_counts() {
     let base = run_explore(&paper_spec(1)).unwrap();
     for threads in [2usize, 0] {

@@ -1,0 +1,172 @@
+//! Reuse-distance profiler parity: the single-walk functional profiles
+//! ([`photon_mttkrp::sim::profile`]) must be **bit-identical** to direct
+//! simulation — both at the counter level (vs a fresh
+//! [`MemoryController`] walk per PE per geometry) and at the priced
+//! report level (vs the analytic engine) — on the FROSTT presets across
+//! every registered kernel, and on randomized streams × randomized
+//! set-associative geometries. Any divergence means the profiled explore
+//! screen would publish a different frontier than the direct screen,
+//! which `tests/explore.rs` and the `explore-smoke` CI step forbid.
+
+use photon_mttkrp::controller::mc::MemoryController;
+use photon_mttkrp::prelude::*;
+use photon_mttkrp::sim::engine::partition_slices;
+use photon_mttkrp::sim::profile::{price_report, profile_geometries, GeometryProfile, PeProfile};
+use photon_mttkrp::tensor::csf::ModeView;
+use photon_mttkrp::tensor::gen;
+
+fn views_for(tensor: &SparseTensor) -> Vec<(usize, ModeView)> {
+    (0..tensor.n_modes()).map(|m| (m, ModeView::build(tensor, m))).collect()
+}
+
+/// The reference: walk one geometry directly, a fresh controller per
+/// PE — the analytic engine's functional loop, with no stack-distance
+/// shortcut anywhere.
+fn direct_profile(
+    kernel: &dyn SparseKernel,
+    tensor: &SparseTensor,
+    views: &[(usize, ModeView)],
+    cfg: &AcceleratorConfig,
+) -> GeometryProfile {
+    let walk_tech = photon_mttkrp::mem::esram::esram();
+    let mut gp = GeometryProfile::default();
+    for (mode, view) in views {
+        let read_modes = kernel.read_modes(tensor, *mode);
+        let rpn = read_modes.len();
+        let rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();
+        let mut pes = Vec::new();
+        for (slo, shi) in partition_slices(view, cfg.n_pes) {
+            let mut mc = MemoryController::new(cfg, &walk_tech, &rows);
+            let mut nnz = 0u64;
+            for chunk in kernel.stream(tensor, view, (slo, shi), 1009) {
+                nnz += chunk.n_nnz as u64;
+                for read in &chunk.reads[..chunk.n_nnz * rpn] {
+                    let _ = mc.factor_row_load(read.slot() as usize, read.row());
+                }
+            }
+            pes.push(PeProfile { nnz, slices: (shi - slo) as u64, counts: mc.counts() });
+        }
+        gp.modes.push(pes);
+    }
+    gp
+}
+
+/// Geometry label for assertion messages.
+fn label(cfg: &AcceleratorConfig) -> String {
+    format!(
+        "pes={} lines={} assoc={} bypass={:?} levels={}",
+        cfg.n_pes,
+        cfg.cache_lines,
+        cfg.cache_assoc,
+        cfg.cache_bypass_factor,
+        cfg.levels.len()
+    )
+}
+
+#[test]
+fn frostt_presets_profile_and_price_bit_identically_on_every_kernel() {
+    // one on-chip-bound 3-mode preset and the 5-mode network-flow
+    // preset, tiny enough to walk exhaustively
+    for (ft, scale) in [(FrosttTensor::Nell2, 1e-4), (FrosttTensor::Lbnl, 1e-2)] {
+        let tensor = frostt::preset(ft).scaled(scale).generate(42);
+        let views = views_for(&tensor);
+        let base = AcceleratorConfig::paper_default().scaled(scale.max(1.0 / 64.0));
+        let mut geoms = Vec::new();
+        for n_pes in [2usize, 4] {
+            for assoc in [2usize, 4] {
+                let mut c = base.clone();
+                c.n_pes = n_pes;
+                c.cache_assoc = assoc;
+                c.validate().unwrap();
+                geoms.push(c);
+            }
+        }
+        let refs: Vec<&AcceleratorConfig> = geoms.iter().collect();
+        for kind in KernelKind::ALL {
+            let kernel = kind.kernel();
+            let profiled = profile_geometries(kernel, &tensor, &views, &refs, 4096);
+            for (cfg, gp) in geoms.iter().zip(&profiled) {
+                // counter-level parity against the direct walk
+                let want = direct_profile(kernel, &tensor, &views, cfg);
+                assert_eq!(gp, &want, "{} {kind}: {}", ft.name(), label(cfg));
+                // report-level parity against the analytic engine, both
+                // paper technologies (Debug formatting of f64 is
+                // shortest-roundtrip, so string equality is bit equality)
+                for tname in ["e-sram", "o-sram"] {
+                    let t = tech(tname);
+                    let want = EngineKind::Analytic.simulate_kernel_all_modes_with_views_budget(
+                        kernel,
+                        &tensor,
+                        &views,
+                        cfg,
+                        &t,
+                        SimBudget::single_threaded(),
+                    );
+                    let got = price_report(kernel, &tensor, &views, cfg, &t, gp);
+                    assert_eq!(
+                        format!("{want:?}"),
+                        format!("{got:?}"),
+                        "{} {kind} {tname}: {}",
+                        ft.name(),
+                        label(cfg)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Multiplicative LCG driving the randomized geometry draws — fixed
+/// constants so the test is deterministic.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(1_442_695_040_888_963_407);
+        self.0 >> 33
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next() as usize) % xs.len()]
+    }
+}
+
+#[test]
+fn random_streams_and_geometries_match_direct_controller_walks() {
+    let mut rng = Lcg(0x9e37_79b9_7f4a_7c15);
+    for seed in 0..3u64 {
+        let dims = [
+            rng.pick(&[48u64, 64, 96]),
+            rng.pick(&[32u64, 80, 128]),
+            rng.pick(&[40u64, 56, 72]),
+        ];
+        let tensor = gen::random(&dims, 2_500 + 1_500 * seed as usize, 100 + seed);
+        let views = views_for(&tensor);
+        let base = AcceleratorConfig::paper_default().scaled(1.0 / 64.0);
+        let mut geoms = Vec::new();
+        for _ in 0..6 {
+            let mut c = base.clone();
+            c.n_pes = rng.pick(&[2usize, 4, 8]);
+            c.cache_assoc = rng.pick(&[2usize, 4, 8]);
+            c.cache_lines = base.cache_lines * rng.pick(&[1usize, 2, 4]);
+            if rng.next() % 4 == 0 {
+                c.cache_bypass_factor = Some(rng.pick(&[1usize, 2, 4]));
+            }
+            c.validate().unwrap();
+            geoms.push(c);
+        }
+        let refs: Vec<&AcceleratorConfig> = geoms.iter().collect();
+        for kind in KernelKind::ALL {
+            let kernel = kind.kernel();
+            let profiled = profile_geometries(kernel, &tensor, &views, &refs, 700);
+            assert_eq!(profiled.len(), geoms.len());
+            for (cfg, gp) in geoms.iter().zip(&profiled) {
+                let want = direct_profile(kernel, &tensor, &views, cfg);
+                assert_eq!(gp, &want, "seed {seed} {kind}: {}", label(cfg));
+            }
+        }
+    }
+}
