@@ -41,6 +41,7 @@ use crate::energy::model::EnergyModel;
 use crate::explore::objective::Objectives;
 use crate::explore::space::Candidate;
 use crate::explore::store::EvalStore;
+use crate::obs::metrics::{self, Counter};
 use crate::sim::profile::GeometryProfile;
 use crate::sim::{EngineKind, SampleSpec, SimBudget};
 use crate::tensor::coo::SparseTensor;
@@ -70,6 +71,36 @@ pub struct EvalCache {
     /// Full-workload functional stream walks performed to fill the memo
     /// (see [`Self::functional_walks`]).
     walks: AtomicU64,
+    /// Process-registry mirrors of the counters above.
+    obs: ObsCounters,
+}
+
+/// [`crate::obs::metrics`] handles the cache mirrors its traffic onto:
+/// every hit/miss/append/walk lands on both the cache's own atomics
+/// (the exact per-instance stats each search reports) and these shared
+/// named counters (what the serve `metrics` verb and the Prometheus
+/// exposition aggregate process-wide).
+struct ObsCounters {
+    hits: Counter,
+    misses: Counter,
+    loaded: Counter,
+    appended: Counter,
+    walks: Counter,
+    geometries: Counter,
+}
+
+impl Default for ObsCounters {
+    fn default() -> Self {
+        let m = metrics::global();
+        ObsCounters {
+            hits: m.counter("eval_cache_hits_total"),
+            misses: m.counter("eval_cache_misses_total"),
+            loaded: m.counter("eval_cache_loaded_total"),
+            appended: m.counter("eval_cache_appended_total"),
+            walks: m.counter("functional_walks_total"),
+            geometries: m.counter("profiled_geometries_total"),
+        }
+    }
 }
 
 impl EvalCache {
@@ -84,11 +115,13 @@ impl EvalCache {
     /// the cache contract.
     pub fn with_store(dir: &Path) -> std::io::Result<EvalCache> {
         let (store, entries) = EvalStore::open(dir)?;
-        Ok(EvalCache {
+        let cache = EvalCache {
             map: Mutex::new(entries.into_iter().collect()),
             store: Some(store),
             ..Default::default()
-        })
+        };
+        cache.obs.loaded.add(cache.loaded());
+        Ok(cache)
     }
 
     /// Distinct evaluations currently memoized.
@@ -142,9 +175,14 @@ impl EvalCache {
     /// the profiler's contract.
     pub fn store_profiles(&self, entries: impl IntoIterator<Item = (String, GeometryProfile)>) {
         let mut map = self.profiles.lock().unwrap();
+        let mut fresh = 0u64;
         for (key, profile) in entries {
-            map.entry(key).or_insert_with(|| Arc::new(profile));
+            if let std::collections::hash_map::Entry::Vacant(slot) = map.entry(key) {
+                slot.insert(Arc::new(profile));
+                fresh += 1;
+            }
         }
+        self.obs.geometries.add(fresh);
     }
 
     /// Record `n` full-workload functional stream walks.
@@ -157,6 +195,7 @@ impl EvalCache {
     /// screen's walks-vs-grid-points ratio measures.
     pub fn add_walks(&self, n: u64) {
         self.walks.fetch_add(n, Ordering::Relaxed);
+        self.obs.walks.add(n);
     }
 
     /// Full-workload functional stream walks performed so far (see
@@ -191,17 +230,24 @@ impl EvalCache {
     ) -> (Objectives, bool) {
         if let Some(v) = self.map.lock().unwrap().get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.obs.hits.inc();
             return (*v, true);
         }
         let v = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.obs.misses.inc();
         self.map.lock().unwrap().insert(key.to_string(), v);
         if let Some(store) = &self.store {
-            if let Err(e) = store.append(key, &v) {
-                eprintln!(
-                    "warning: failed to persist cache entry to {}: {e}",
-                    store.path().display()
-                );
+            match store.append(key, &v) {
+                Ok(()) => self.obs.appended.inc(),
+                Err(e) => crate::obs::log::warn(
+                    "explore",
+                    "failed to persist cache entry",
+                    &[
+                        ("path", store.path().display().to_string()),
+                        ("err", e.to_string()),
+                    ],
+                ),
             }
         }
         (v, false)

@@ -42,14 +42,13 @@
 //! index — the frontier is bit-identical at any thread count (pinned by
 //! `rust/tests/explore.rs` and `rust/tests/sampled_replay.rs`).
 
-use std::time::Instant;
-
 use crate::accel::config::AcceleratorConfig;
 use crate::explore::eval::{candidate_key, EvalCache, Evaluator};
 use crate::explore::objective::{ObjectiveKind, Objectives};
 use crate::explore::pareto;
 use crate::explore::space::{Candidate, DesignSpace};
 use crate::kernel::{KernelKind, DEFAULT_CHUNK_NNZ};
+use crate::obs::Span;
 use crate::sim::par::{effective_threads, parallel_map};
 use crate::sim::profile::profile_geometries;
 use crate::sim::{EngineKind, SampleSpec, SimBudget};
@@ -238,7 +237,10 @@ impl ExploreDelta {
 
 /// Wall-clock time spent in each of the four search phases, in seconds
 /// (host measurement — the one deliberately non-deterministic part of an
-/// [`ExploreResult`]; everything it sits next to is bit-stable).
+/// [`ExploreResult`]; everything it sits next to is bit-stable). Each
+/// field is the elapsed time of one timed [`crate::obs::Span`]
+/// (`explore.screen` / `explore.pareto` / `explore.sampled` /
+/// `explore.exact`), so `--trace-out` shows the same four intervals.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseTimings {
     /// Phase 1: analytic screen (profiled or direct).
@@ -372,7 +374,9 @@ pub fn run_explore_with_cache(
     // Phase 1: analytic screen of the full grid (sample-independent).
     // Profiled by default: one functional stream walk per kernel answers
     // every cold geometry, candidates are priced from the memo.
-    let t = Instant::now();
+    // Each phase is one timed obs span; its elapsed seconds feed the
+    // same PhaseTimings field the hand-rolled Instant used to fill.
+    let sp = Span::timed("explore.screen", "explore");
     let screen_eval = evaluator(budget_for(candidates.len(), SampleSpec::exact()));
     let analytic: Vec<Objectives> = if spec.profile {
         profiled_screen(&screen_eval, &candidates, cache, threads, spec.chunk_nnz)
@@ -381,31 +385,31 @@ pub fn run_explore_with_cache(
             screen_eval.evaluate(cand, EngineKind::Analytic, cache)
         })
     };
-    timing.screen_s = t.elapsed().as_secs_f64();
+    timing.screen_s = sp.finish();
 
     // Phase 2: frontier extraction (dominance scoped to the kernel).
-    let t = Instant::now();
+    let sp = Span::timed("explore.pareto", "explore");
     let groups: Vec<&str> = candidates.iter().map(|c| c.kernel.name()).collect();
     let front = pareto::frontier_indices(&analytic, &groups);
-    timing.pareto_s = t.elapsed().as_secs_f64();
+    timing.pareto_s = sp.finish();
 
     // Phase 3: sampled event confirmation of the ENTIRE screened grid.
-    let t = Instant::now();
+    let sp = Span::timed("explore.sampled", "explore");
     let sampled_eval = evaluator(budget_for(candidates.len(), spec.sample));
     let event_sampled: Vec<Objectives> = parallel_map(&candidates, threads, |cand| {
         sampled_eval.evaluate(cand, EngineKind::Event, cache)
     });
-    timing.sampled_s = t.elapsed().as_secs_f64();
+    timing.sampled_s = sp.finish();
 
     // Phase 4: exact event pass over the frontier members only — the
     // published numbers. At rate 1.0 phase 3 already computed these
     // under the same cache key, so this is pure warm-cache reuse.
-    let t = Instant::now();
+    let sp = Span::timed("explore.exact", "explore");
     let confirm_eval = evaluator(budget_for(front.len(), SampleSpec::exact()));
     let event: Vec<Objectives> = parallel_map(&front, threads, |&i| {
         confirm_eval.evaluate(&candidates[i], EngineKind::Event, cache)
     });
-    timing.exact_s = t.elapsed().as_secs_f64();
+    timing.exact_s = sp.finish();
 
     // Ranks by the chosen objective under each engine's numbers;
     // ties break on the (deterministic) candidate index.

@@ -153,6 +153,19 @@
 //! still deterministic at any thread count, but a different estimate
 //! than the exact replay.
 //!
+//! ## Observability
+//!
+//! [`obs`] watches the simulator's own performance without perturbing
+//! it: RAII [`obs::Span`]s over a process-anchored monotonic clock
+//! (explore phases, stream walks, engine mode runs, daemon batch
+//! windows), a process-wide [`obs::metrics::Registry`] of counters /
+//! gauges / log2 histograms (cache hits, walk counts, request
+//! latencies), Chrome trace-event export (`--trace-out trace.json`,
+//! loadable in Perfetto), a Prometheus-style exposition, and one
+//! structured stderr log helper (`--log-json`, `PHOTON_LOG`). The
+//! recorder is disabled by default and merges parallel workers'
+//! events slot-ordered, so golden bit-identity holds with tracing on.
+//!
 //! ## Layering
 //!
 //! * **L3 (this crate)** — the accelerator simulator (both engines),
@@ -175,6 +188,7 @@ pub mod explore;
 pub mod kernel;
 pub mod mem;
 pub mod mttkrp;
+pub mod obs;
 pub mod pe;
 pub mod report;
 pub mod runtime;

@@ -8,21 +8,22 @@
 //!     [--tech both|all|<name>] [--mode M] [--engine analytic|event]
 //!     [--kernel spmttkrp|spttm|spmm] [--levels SPEC] [--threads T]
 //!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--json]
-//!     [--config FILE]
+//!     [--trace-out FILE] [--config FILE]
 //!     one tensor on one/both/all technologies; with --engine event it
 //!     also prints the analytic-vs-event cycle delta (per mode for a
 //!     single technology, per technology for both/all); --json emits
 //!     the machine-readable comparison instead of the tables
 //! photon-mttkrp sweep [--tensor N]... [--tech T]... [--scale S]... [--mode M]...
 //!     [--engine analytic|event] [--kernel K] [--seed N] [--threads T]
-//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N] [--config FILE]
+//!     [--chunk-nnz N] [--sample-rate R] [--sample-seed N]
+//!     [--trace-out FILE] [--config FILE]
 //!     parallel {tensor x mode x tech x scale} design-space sweep
 //! photon-mttkrp explore [--tensor N] [--scale S] [--seed N] [--tech T]...
 //!     [--kernel K]... [--axes KNOB=V1,V2,...]... [--budget-mm2 X]
 //!     [--exclude-wafer-scale] [--objective runtime|energy|edp|area]
 //!     [--top N] [--threads T] [--chunk-nnz N] [--sample-rate R]
 //!     [--sample-seed N] [--json FILE] [--cache-dir DIR] [--no-profile]
-//!     [--compact-cache] [--config FILE]
+//!     [--compact-cache] [--trace-out FILE] [--config FILE]
 //!     Pareto-frontier search over {config knobs x tech x kernel}:
 //!     analytic screen of the full grid (reuse-distance profiled — one
 //!     stream walk prices every cache geometry; --no-profile screens
@@ -33,12 +34,14 @@
 //!     with a bit-identical frontier; --compact-cache rewrites the
 //!     persistent log without dead (key-shadowed) records and exits
 //! photon-mttkrp serve [--socket PATH] [--cache-dir DIR] [--threads T]
-//!     [--batch N]
+//!     [--batch N] [--log-json] [--trace-out FILE]
 //!     long-lived NDJSON evaluation daemon (design-space-as-a-service):
-//!     simulate/sweep/explore requests on stdin or a Unix socket,
-//!     answered in order; batch windows share workload preparation,
-//!     and warm requests are answered from the (optionally persistent)
-//!     cache without touching either engine
+//!     simulate/sweep/explore/metrics requests on stdin or a Unix
+//!     socket, answered in order; batch windows share workload
+//!     preparation, and warm requests are answered from the (optionally
+//!     persistent) cache without touching either engine; the metrics
+//!     verb snapshots the cache counters and the process metrics
+//!     registry
 //! photon-mttkrp reproduce [--scale S] [--seed N] [--markdown]
 //!     all paper tables + figures + the engine cross-validation table
 //!     + the explore frontier table + the hierarchy table
@@ -71,6 +74,16 @@
 //! analytic engine ignores it. `explore` defaults to 0.25 for its
 //! grid-wide event confirmation but always pins the printed frontier
 //! numbers with an exact pass.
+//!
+//! `--trace-out FILE` (simulate / sweep / explore / serve) arms the
+//! span recorder for the run and writes a Chrome trace-event JSON file
+//! on exit — load it in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing` to see explore phases, profiler stream walks,
+//! per-engine mode runs and serve batch windows on a timeline.
+//! Recording is off by default and never changes what the model
+//! reports (see docs/ARCHITECTURE.md §Observability). Daemon stderr is
+//! structured: `PHOTON_LOG=error|warn|info|debug` filters it and
+//! `serve --log-json` switches it to NDJSON.
 
 use photon_mttkrp::accel::config::AcceleratorConfig;
 use photon_mttkrp::coordinator::cpals::{cp_als, low_rank_tensor, CpAlsConfig};
@@ -86,6 +99,7 @@ use photon_mttkrp::kernel::KernelKind;
 use photon_mttkrp::mem::registry;
 use photon_mttkrp::mem::tech::MemTechnology;
 use photon_mttkrp::mttkrp::reference::FactorMatrix;
+use photon_mttkrp::obs;
 use photon_mttkrp::report::export::comparison_json;
 use photon_mttkrp::report::paper;
 use photon_mttkrp::serve::ServeOptions;
@@ -146,6 +160,7 @@ fn cli() -> Command {
                 )
                 .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
                 .flag("json", 'j', "emit the comparison as JSON instead of tables")
+                .opt("trace-out", "FILE", "record spans; write a Chrome trace on exit", None)
                 .opt("config", "FILE", "accelerator config file", None),
         )
         .subcommand(
@@ -187,6 +202,7 @@ fn cli() -> Command {
                     Some("1.0"),
                 )
                 .opt("sample-seed", "N", "chunk-sampling seed", Some("0"))
+                .opt("trace-out", "FILE", "record spans; write a Chrome trace on exit", None)
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
@@ -259,6 +275,7 @@ fn cli() -> Command {
                     "rewrite the persistent cache log without dead records, then exit \
                      (needs --cache-dir or the default cache directory)",
                 )
+                .opt("trace-out", "FILE", "record spans; write a Chrome trace on exit", None)
                 .opt("config", "FILE", "accelerator config file (may define [tech.*])", None),
         )
         .subcommand(
@@ -277,7 +294,9 @@ fn cli() -> Command {
                     None,
                 )
                 .opt("threads", "T", "OS threads for cold evaluations (0 = all cores)", Some("0"))
-                .opt("batch", "N", "requests per batch window", Some("16")),
+                .opt("batch", "N", "requests per batch window", Some("16"))
+                .flag("log-json", '\0', "structured NDJSON logs on stderr instead of text")
+                .opt("trace-out", "FILE", "record spans; write a Chrome trace on exit", None),
         )
         .subcommand(
             Command::new("reproduce", "regenerate every paper table and figure")
@@ -399,9 +418,33 @@ fn run() -> Result<(), String> {
         println!("{}", cmd.help());
         return Ok(());
     }
+    // --trace-out arms the span recorder around the whole subcommand,
+    // so the early returns inside dispatch (--json, --compact-cache)
+    // still get their trace written on the way out
+    let trace_out = matches!(p.subcommand(), Some("simulate" | "sweep" | "explore" | "serve"))
+        .then(|| p.get("trace-out").map(std::path::PathBuf::from))
+        .flatten();
+    if trace_out.is_some() {
+        obs::span::Recorder::global().enable();
+    }
+    let result = dispatch(&cmd, &p);
+    if let Some(path) = &trace_out {
+        let rec = obs::span::Recorder::global();
+        rec.disable();
+        let events = rec.take();
+        if result.is_ok() {
+            obs::export::write_chrome_trace(path, &events)
+                .map_err(|e| format!("--trace-out {}: {e}", path.display()))?;
+            eprintln!("wrote {} trace event(s) to {}", events.len(), path.display());
+        }
+    }
+    result
+}
+
+fn dispatch(cmd: &Command, p: &Parsed) -> Result<(), String> {
     match p.subcommand().unwrap() {
         "info" => {
-            let cfg = load_config(&p)?;
+            let cfg = load_config(p)?;
             println!("{}", paper::table_i(&cfg).render_ascii());
             println!("{}", paper::table_iii().render_ascii());
             println!("{}", paper::table_iv(&cfg).render_ascii());
@@ -414,8 +457,8 @@ fn run() -> Result<(), String> {
             }
         }
         "simulate" => {
-            let mut cfg_base = load_config(&p)?;
-            apply_levels(&p, &mut cfg_base)?;
+            let mut cfg_base = load_config(p)?;
+            apply_levels(p, &mut cfg_base)?;
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let name = p.get("tensor").unwrap();
@@ -427,7 +470,7 @@ fn run() -> Result<(), String> {
             let budget = SimBudget {
                 threads: p.get_usize("threads").map_err(|e| e.to_string())?,
                 chunk_nnz: p.get_usize("chunk-nnz").map_err(|e| e.to_string())?,
-                sample: parse_sample(&p)?,
+                sample: parse_sample(p)?,
             };
             if budget.chunk_nnz == 0 {
                 return Err("--chunk-nnz must be positive".into());
@@ -618,11 +661,11 @@ fn run() -> Result<(), String> {
             }
         }
         "sweep" => {
-            let mut cfg_base = load_config(&p)?;
-            apply_levels(&p, &mut cfg_base)?;
+            let mut cfg_base = load_config(p)?;
+            apply_levels(p, &mut cfg_base)?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let threads = p.get_usize("threads").map_err(|e| e.to_string())?;
-            let scales = parse_f64_list(&p, "scale", &[0.001])?;
+            let scales = parse_f64_list(p, "scale", &[0.001])?;
             let tensor_names: Vec<String> = {
                 let given = p.get_all("tensor");
                 if given.is_empty() {
@@ -639,7 +682,7 @@ fn run() -> Result<(), String> {
                         .ok_or_else(|| format!("unknown tensor `{n}`"))
                 })
                 .collect::<Result<Vec<_>, _>>()?;
-            let techs = resolve_tech_list(&p)?;
+            let techs = resolve_tech_list(p)?;
             let modes: Vec<usize> = p
                 .get_all("mode")
                 .iter()
@@ -652,7 +695,7 @@ fn run() -> Result<(), String> {
             spec.engine = EngineKind::parse(p.get("engine").unwrap())?;
             spec.kernel = KernelKind::parse(p.get("kernel").unwrap())?;
             spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
-            spec.sample = parse_sample(&p)?;
+            spec.sample = parse_sample(p)?;
             if !modes.is_empty() {
                 spec.modes = Some(modes);
             }
@@ -698,8 +741,8 @@ fn run() -> Result<(), String> {
                 );
                 return Ok(());
             }
-            let mut cfg_base = load_config(&p)?;
-            apply_levels(&p, &mut cfg_base)?;
+            let mut cfg_base = load_config(p)?;
+            apply_levels(p, &mut cfg_base)?;
             let scale = p.get_f64("scale").map_err(|e| e.to_string())?;
             let seed = p.get_u64("seed").map_err(|e| e.to_string())?;
             let name = p.get("tensor").unwrap();
@@ -713,8 +756,8 @@ fn run() -> Result<(), String> {
                 .iter()
                 .map(|s| Axis::parse(s))
                 .collect::<Result<Vec<_>, _>>()?;
-            let techs = resolve_tech_list(&p)?;
-            let kernels = resolve_kernel_list(&p)?;
+            let techs = resolve_tech_list(p)?;
+            let kernels = resolve_kernel_list(p)?;
             let budget_mm2 = match p.get("budget-mm2") {
                 Some(s) => {
                     Some(s.parse::<f64>().map_err(|e| format!("--budget-mm2 `{s}`: {e}"))?)
@@ -734,7 +777,7 @@ fn run() -> Result<(), String> {
             spec.objective = objective;
             spec.threads = p.get_usize("threads").map_err(|e| e.to_string())?;
             spec.chunk_nnz = p.get_usize("chunk-nnz").map_err(|e| e.to_string())?;
-            spec.sample = parse_sample(&p)?;
+            spec.sample = parse_sample(p)?;
             spec.profile = !p.flag("no-profile");
             let n_threads = sweep::effective_threads(spec.threads);
             eprintln!(
@@ -805,6 +848,9 @@ fn run() -> Result<(), String> {
             }
         }
         "serve" => {
+            if p.flag("log-json") {
+                obs::log::set_json(true);
+            }
             let opts = ServeOptions {
                 threads: p.get_usize("threads").map_err(|e| e.to_string())?,
                 batch: p.get_usize("batch").map_err(|e| e.to_string())?,

@@ -1,0 +1,40 @@
+//! Process-anchored monotonic clock.
+//!
+//! Every span and structured log line stamps time from the same
+//! anchor — the first call in the process — so a Chrome trace built
+//! from [`crate::obs::span::SpanEvent`]s has one coherent timeline
+//! across threads, subcommands and daemon batch windows. Nanoseconds
+//! in a `u64` cover ~584 years of process uptime.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process clock anchor (monotonic, never
+/// decreasing across threads).
+pub fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn clock_actually_advances() {
+        let a = now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(now_ns() > a);
+    }
+}

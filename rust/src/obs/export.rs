@@ -1,0 +1,217 @@
+//! Exporters: Chrome trace-event JSON, Prometheus-style text
+//! exposition, and the registry JSON snapshot the serve `metrics` verb
+//! answers with.
+//!
+//! All hand-rolled writers in the crate's house style (`{:e}` is not
+//! needed here — span times are integers in nanoseconds, rendered as
+//! microseconds with fixed sub-µs digits; names pass through
+//! [`crate::util::bench::json_escape`]). [`chrome_trace`] output loads
+//! directly in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`; validity is pinned by parsing it back through
+//! [`crate::util::json::Value`] in `rust/tests/obs.rs`.
+
+use std::io;
+use std::path::Path;
+
+use crate::obs::metrics::Registry;
+use crate::obs::span::SpanEvent;
+use crate::util::bench::json_escape;
+
+/// Nanoseconds rendered as the microsecond decimal Chrome's `ts`/`dur`
+/// fields expect, without going through `f64` (exact at any
+/// magnitude).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// Render completed spans as one Chrome trace-event JSON document
+/// (`ph: "X"` complete events, one `pid`, span ids and parent links in
+/// `args`).
+pub fn chrome_trace(events: &[SpanEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\": [");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \
+             \"dur\": {}, \"pid\": 1, \"tid\": {}, \
+             \"args\": {{\"id\": {}, \"parent\": {}}}}}",
+            json_escape(ev.name),
+            json_escape(ev.cat),
+            us(ev.start_ns),
+            us(ev.dur_ns),
+            ev.tid,
+            ev.id,
+            ev.parent,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write [`chrome_trace`] to `path`, creating parent directories.
+pub fn write_chrome_trace(path: &Path, events: &[SpanEvent]) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(events))
+}
+
+/// Render a registry in the Prometheus text exposition style:
+/// `# TYPE` comments, counters and gauges as plain samples, histograms
+/// as cumulative `_bucket{le="..."}` series plus `_sum`/`_count`.
+pub fn prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in reg.counters() {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in reg.gauges() {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, h) in reg.histograms() {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (upper, n) in &h.buckets {
+            cum += n;
+            out.push_str(&format!("{name}_bucket{{le=\"{upper}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+/// The registry as one JSON object — the `result` body of the serve
+/// `metrics` verb (minus the daemon's own cache section):
+///
+/// ```json
+/// {"counters": {"a": 1}, "gauges": {"g": 0.5},
+///  "histograms": {"h": {"count": 2, "sum": 7, "p50": 3, "p90": 7, "p99": 7}}}
+/// ```
+pub fn registry_json(reg: &Registry) -> String {
+    let mut out = String::from("{\"counters\": {");
+    for (i, (name, v)) in reg.counters().iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{}\": {v}", json_escape(name)));
+    }
+    out.push_str("}, \"gauges\": {");
+    for (i, (name, v)) in reg.gauges().iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{}\": {v:e}", json_escape(name)));
+    }
+    out.push_str("}, \"histograms\": {");
+    for (i, (name, h)) in reg.histograms().iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "\"{}\": {{\"count\": {}, \"sum\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}}}",
+            json_escape(name),
+            h.count,
+            h.sum,
+            h.p50,
+            h.p90,
+            h.p99,
+        ));
+    }
+    out.push_str("}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn sample_events() -> Vec<SpanEvent> {
+        vec![
+            SpanEvent {
+                name: "outer",
+                cat: "test",
+                start_ns: 1_000,
+                dur_ns: 3_500,
+                tid: 1,
+                id: 1,
+                parent: 0,
+            },
+            SpanEvent {
+                name: "inner",
+                cat: "test",
+                start_ns: 1_500,
+                dur_ns: 1_250,
+                tid: 1,
+                id: 2,
+                parent: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_keeps_fields() {
+        let json = chrome_trace(&sample_events());
+        let v = Value::parse(&json).expect("trace is valid JSON");
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("name").unwrap().as_str(), Some("outer"));
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(evs[0].get("dur").unwrap().as_f64(), Some(3.5));
+        assert_eq!(evs[1].get("args").unwrap().get("parent").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn empty_trace_is_still_a_document() {
+        let v = Value::parse(&chrome_trace(&[])).unwrap();
+        assert_eq!(v.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn microsecond_rendering_is_exact() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1_000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn prometheus_exposition_has_cumulative_buckets() {
+        let r = Registry::new();
+        r.counter("req_total").add(7);
+        r.gauge("frac").set(0.5);
+        let h = r.histogram("lat_ns");
+        for v in [1u64, 2, 3, 1000] {
+            h.observe(v);
+        }
+        let text = prometheus(&r);
+        assert!(text.contains("# TYPE req_total counter\nreq_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE frac gauge\nfrac 0.5\n"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"1\"} 1\n"), "{text}");
+        // cumulative: the le="3" bucket includes the le="1" count
+        assert!(text.contains("lat_ns_bucket{le=\"3\"} 3\n"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"+Inf\"} 4\n"), "{text}");
+        assert!(text.contains("lat_ns_sum 1006\n"), "{text}");
+        assert!(text.contains("lat_ns_count 4\n"), "{text}");
+    }
+
+    #[test]
+    fn registry_json_round_trips() {
+        let r = Registry::new();
+        r.counter("hits").add(3);
+        r.gauge("rate").set(0.25);
+        r.histogram("h").observe(5);
+        let v = Value::parse(&registry_json(&r)).expect("registry JSON parses");
+        assert_eq!(v.get("counters").unwrap().get("hits").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("gauges").unwrap().get("rate").unwrap().as_f64(), Some(0.25));
+        let h = v.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(h.get("p50").unwrap().as_u64(), Some(7));
+    }
+}

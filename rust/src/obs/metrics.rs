@@ -1,0 +1,353 @@
+//! Process-wide metrics registry: named counters, gauges and
+//! log2-bucketed histograms.
+//!
+//! Handles are `Arc`-backed atomics: resolve a [`Counter`] once (one
+//! `BTreeMap` lock), then increment it from any thread with a relaxed
+//! `fetch_add` — cheap enough for the engines' per-PE loops. The
+//! [`Registry::global`] instance is what the serve `metrics` verb and
+//! the Prometheus exposition snapshot; tests use their own
+//! [`Registry::new`] instances so parallel test binaries never race on
+//! shared counts.
+//!
+//! [`Histogram`] buckets by the bit width of the observed value — 65
+//! buckets cover all of `u64` — so p50/p90/p99 come back as the
+//! enclosing bucket's upper bound: for any true quantile `v > 0` the
+//! reported value lies in `[v, 2v)`. Factor-two resolution at O(1)
+//! memory is the right trade for request latencies spanning six
+//! decades (pinned against the exact [`crate::util::stats::percentile`]
+//! in `rust/tests/obs.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing named count.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A named point-in-time `f64` (stored as bits in an atomic).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+const N_BUCKETS: usize = 65;
+
+#[derive(Debug)]
+struct HistogramInner {
+    /// `buckets[k]` counts observations whose bit width is `k`:
+    /// bucket 0 holds exactly the value 0, bucket `k > 0` holds
+    /// `[2^(k-1), 2^k)`.
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// A log2-bucketed histogram of `u64` observations (latencies in
+/// nanoseconds, batch sizes, ...).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistogramInner {
+            buckets: [const { AtomicU64::new(0) }; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+/// Bucket index for a value: its bit width (0 for 0).
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `k` — what quantiles report.
+pub fn bucket_upper(k: usize) -> u64 {
+    match k {
+        0 => 0,
+        1..=63 => (1u64 << k) - 1,
+        _ => u64::MAX,
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.0.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// The quantile `q` in `[0, 1]`, reported as the upper bound of the
+    /// enclosing log2 bucket (so for the true order statistic `v > 0`
+    /// the result lies in `[v, 2v)`); 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        // rank of the order statistic: ceil(q * total), clamped to [1, total]
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (k, b) in self.0.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_upper(k);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Every non-empty bucket as `(inclusive upper bound, count)`, in
+    /// ascending bound order.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.0
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(k, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((bucket_upper(k), n))
+            })
+            .collect()
+    }
+
+    /// A consistent-enough point-in-time read of the whole histogram.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            buckets: self.buckets(),
+        }
+    }
+}
+
+/// Point-in-time view of one [`Histogram`], as exported.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    /// Non-empty buckets as `(inclusive upper bound, count)`.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// A name-keyed registry of metrics. Lookup interns the name; the
+/// returned handle is lock-free thereafter.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+static GLOBAL: Registry = Registry::new();
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// An empty registry (`const`, so the global instance needs no
+    /// lazy init).
+    pub const fn new() -> Self {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The process-wide registry every production call site uses.
+    pub fn global() -> &'static Registry {
+        &GLOBAL
+    }
+
+    /// The counter named `name`, created at zero on first use.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap();
+        match m.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Counter::default();
+                m.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    /// The gauge named `name`, created at zero on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        match m.get(name) {
+            Some(g) => g.clone(),
+            None => {
+                let g = Gauge::default();
+                m.insert(name.to_string(), g.clone());
+                g
+            }
+        }
+    }
+
+    /// The histogram named `name`, created empty on first use.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.histograms.lock().unwrap();
+        match m.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Histogram::default();
+                m.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Every counter as `(name, value)`, name-sorted.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Every gauge as `(name, value)`, name-sorted.
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        self.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Every histogram as `(name, snapshot)`, name-sorted.
+    pub fn histograms(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.snapshot())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_share_state_through_the_registry() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(4);
+        assert_eq!(r.counter("x").get(), 5);
+        assert_eq!(r.counters(), vec![("x".to_string(), 5)]);
+    }
+
+    #[test]
+    fn gauges_store_floats() {
+        let r = Registry::new();
+        r.gauge("frac").set(0.25);
+        assert_eq!(r.gauge("frac").get(), 0.25);
+        // a fresh gauge reads 0.0, not garbage bits
+        assert_eq!(r.gauge("new").get(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_bit_width() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+        // every value sits inside its own bucket's bounds
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, u64::MAX] {
+            let k = bucket_of(v);
+            assert!(v <= bucket_upper(k), "{v}");
+            if k > 0 {
+                assert!(v > bucket_upper(k - 1), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_the_true_order_statistic() {
+        let h = Histogram::default();
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        for (q, true_v) in [(0.5, 500u64), (0.9, 900), (0.99, 990)] {
+            let got = h.quantile(q);
+            assert!(got >= true_v, "q={q}: {got} < {true_v}");
+            assert!(got < 2 * true_v, "q={q}: {got} >= {}", 2 * true_v);
+        }
+        assert_eq!(h.quantile(0.0), h.quantile(1e-9));
+    }
+
+    #[test]
+    fn empty_and_degenerate_histograms() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.count(), 0);
+        assert!(h.buckets().is_empty());
+        h.observe(0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.buckets(), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn snapshot_orders_quantiles() {
+        let h = Histogram::default();
+        for v in [1u64, 10, 100, 1000, 10_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert_eq!(s.buckets.iter().map(|&(_, n)| n).sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn registry_lists_are_name_sorted() {
+        let r = Registry::new();
+        r.counter("zeta").inc();
+        r.counter("alpha").inc();
+        r.histogram("h").observe(3);
+        let names: Vec<String> = r.counters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["alpha", "zeta"]);
+        assert_eq!(r.histograms()[0].0, "h");
+    }
+}

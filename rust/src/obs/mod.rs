@@ -1,0 +1,47 @@
+//! Unified observability: spans, a metrics registry, structured logs,
+//! and trace/metrics exporters — all dependency-free.
+//!
+//! The simulator models performance; this module watches the
+//! simulator's *own* performance without ever changing what it
+//! computes. The pieces:
+//!
+//! * [`clock`] — a process-anchored monotonic nanosecond clock shared
+//!   by every span and log line.
+//! * [`span`] — RAII spans over that clock with nested parent
+//!   tracking, recorded into a thread-safe [`span::Recorder`]. The
+//!   global recorder starts **disabled** ([`span::Recorder::disabled`]
+//!   is `const`, so the off path is a single relaxed atomic load and
+//!   golden reports stay byte-identical); `--trace-out` enables it.
+//!   Work fanned out through [`crate::sim::par`] captures events into
+//!   per-worker buffers that merge **slot-ordered** after the join, so
+//!   recording never perturbs the deterministic parallel map.
+//! * [`metrics`] — a process-wide registry of named counters, gauges
+//!   and log2-bucketed histograms (p50/p90/p99 derivation), onto which
+//!   the crate's ad-hoc counters migrate: eval-cache
+//!   hits/misses/loaded/appended, functional-memo walks and profiled
+//!   geometries, serve batch sizes and request latencies, per-engine
+//!   chunk and nonzero counts.
+//! * [`log`] — one structured stderr log helper (text or NDJSON via
+//!   `--log-json`, level-filtered via the `PHOTON_LOG` env var) that
+//!   the serve daemon routes all its stderr through.
+//! * [`export`] — Chrome trace-event JSON (open the `--trace-out`
+//!   file in Perfetto / `chrome://tracing`) and a Prometheus-style
+//!   text exposition of the registry, plus the JSON snapshot the
+//!   serve `metrics` verb answers with.
+//!
+//! **Determinism contract.** Observation is strictly read-beside:
+//! spans time code without reordering it, counters accumulate with
+//! relaxed atomics off the result path, and the traced parallel-map
+//! merge happens after all slots are joined. With the recorder enabled
+//! and every counter live, all golden bit-identity tests and
+//! parallel-determinism tests pass unchanged (pinned by
+//! `rust/tests/golden.rs` and `rust/tests/obs.rs`).
+
+pub mod clock;
+pub mod export;
+pub mod log;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use span::{Recorder, Span, SpanEvent};

@@ -1,0 +1,402 @@
+//! RAII spans and the thread-safe span recorder.
+//!
+//! A [`Span`] measures one region of code against
+//! [`crate::obs::clock`] and, when recording is active, emits one
+//! [`SpanEvent`] on drop (or [`Span::finish`]). Nesting is tracked per
+//! thread: a span opened while another is live records that span's id
+//! as its parent, which is what lets the Chrome-trace exporter show
+//! explore phases containing stream walks containing engine runs.
+//!
+//! **The off path costs one relaxed atomic load.** The global
+//! [`Recorder`] is a `const`-constructed static that starts disabled;
+//! [`Span::enter`] on the disabled path reads no clock, takes no lock
+//! and allocates nothing, so instrumenting the engines cannot perturb
+//! golden bit-identity runs. [`Span::timed`] is the variant for call
+//! sites that need the elapsed seconds *themselves* (explore's
+//! `PhaseTimings`): it always reads the clock, and still records only
+//! when recording is active.
+//!
+//! **Determinism under `sim::par`.** Worker threads never push to the
+//! global recorder directly. [`capture`] installs a thread-local
+//! buffer; the traced parallel map wraps each item in it and appends
+//! the per-item buffers **in slot order** after the join
+//! ([`sink_append`] routes to the caller's own buffer when maps nest).
+//! Event order in the recorder is therefore a pure function of the
+//! work list, not of thread scheduling.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::obs::clock;
+
+/// One completed span: a closed interval on the process timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Static span name (e.g. `explore.screen`, `engine.event.mode`).
+    pub name: &'static str,
+    /// Coarse category for trace grouping (`explore`, `engine`, ...).
+    pub cat: &'static str,
+    /// Start, nanoseconds on the [`crate::obs::clock`] timeline.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Small per-thread ordinal (1-based, assigned on first span).
+    pub tid: u64,
+    /// Process-unique span id.
+    pub id: u64,
+    /// Id of the enclosing span on the same thread, 0 for roots.
+    pub parent: u64,
+}
+
+/// Thread-safe sink for completed [`SpanEvent`]s.
+///
+/// The process-wide instance ([`Recorder::global`]) is what
+/// `--trace-out` enables; it is `const`-constructed disabled so the
+/// instrumented-but-off path stays branch-predictable and free of
+/// locks.
+pub struct Recorder {
+    enabled: AtomicBool,
+    events: Mutex<Vec<SpanEvent>>,
+    next_id: AtomicU64,
+}
+
+static GLOBAL: Recorder = Recorder::disabled();
+
+impl Recorder {
+    /// A disabled recorder. `const`, so it can back a `static` with no
+    /// lazy-init branch on the hot path.
+    pub const fn disabled() -> Self {
+        Recorder {
+            enabled: AtomicBool::new(false),
+            events: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// The process-wide recorder.
+    pub fn global() -> &'static Recorder {
+        &GLOBAL
+    }
+
+    /// Start accepting events (idempotent).
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop accepting events; already-recorded events are kept.
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Drain every recorded event, leaving the recorder empty.
+    pub fn take(&self) -> Vec<SpanEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    fn extend(&self, evs: Vec<SpanEvent>) {
+        self.events.lock().unwrap().extend(evs);
+    }
+}
+
+thread_local! {
+    /// When installed, this thread's events buffer here instead of the
+    /// global recorder — the traced parallel map's per-item capture.
+    static LOCAL_SINK: RefCell<Option<Vec<SpanEvent>>> = const { RefCell::new(None) };
+    /// Ids of the live spans enclosing the current point, innermost
+    /// last.
+    static PARENTS: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// This thread's ordinal (0 = not yet assigned).
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+/// Is any sink live for this thread — a local capture buffer or the
+/// enabled global recorder?
+pub fn recording_active() -> bool {
+    LOCAL_SINK.with(|s| s.borrow().is_some()) || GLOBAL.is_enabled()
+}
+
+fn sink_push(ev: SpanEvent) {
+    let buffered = LOCAL_SINK.with(|s| {
+        if let Some(buf) = s.borrow_mut().as_mut() {
+            buf.push(ev);
+            true
+        } else {
+            false
+        }
+    });
+    if !buffered && GLOBAL.is_enabled() {
+        GLOBAL.push(ev);
+    }
+}
+
+/// Append a batch of already-completed events to this thread's sink —
+/// the local capture buffer when one is installed (nested parallel
+/// maps), else the global recorder. The traced parallel map calls this
+/// once per slot, in slot order, after the join.
+pub fn sink_append(evs: Vec<SpanEvent>) {
+    if evs.is_empty() {
+        return;
+    }
+    let buffered = LOCAL_SINK.with(|s| {
+        if let Some(buf) = s.borrow_mut().as_mut() {
+            buf.extend(evs.iter().copied());
+            true
+        } else {
+            false
+        }
+    });
+    if !buffered && GLOBAL.is_enabled() {
+        GLOBAL.extend(evs);
+    }
+}
+
+/// Run `f` with a fresh thread-local event buffer installed and return
+/// its result together with every event `f`'s spans emitted, in
+/// completion order. Re-entrant: a capture inside a capture restores
+/// the outer buffer when it finishes.
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<SpanEvent>) {
+    let prev = LOCAL_SINK.with(|s| s.borrow_mut().replace(Vec::new()));
+    let r = f();
+    let taken = LOCAL_SINK.with(|s| {
+        let mut slot = s.borrow_mut();
+        std::mem::replace(&mut *slot, prev)
+    });
+    (r, taken.unwrap_or_default())
+}
+
+/// An RAII span. Construct with [`Span::enter`] (fully inert when
+/// recording is off) or [`Span::timed`] (always measures; the call
+/// site reads the elapsed seconds from [`Span::finish`]). Dropping a
+/// span closes it.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    id: u64,
+    parent: u64,
+    /// Will this span emit a [`SpanEvent`] when it closes?
+    record: bool,
+    /// Was the clock read at construction (so elapsed is meaningful)?
+    timed: bool,
+    done: bool,
+}
+
+impl Span {
+    /// Open a span that records only if recording is active right now.
+    /// On the disabled path this reads no clock and takes no lock.
+    pub fn enter(name: &'static str, cat: &'static str) -> Span {
+        let record = recording_active();
+        Span::open(name, cat, record, record)
+    }
+
+    /// Open a span that always reads the clock, for call sites that
+    /// consume the elapsed time themselves (explore's phase timings).
+    /// Still emits a [`SpanEvent`] only when recording is active.
+    pub fn timed(name: &'static str, cat: &'static str) -> Span {
+        Span::open(name, cat, recording_active(), true)
+    }
+
+    fn open(name: &'static str, cat: &'static str, record: bool, timed: bool) -> Span {
+        let (start_ns, id, parent) = if record {
+            let id = GLOBAL.next_id.fetch_add(1, Ordering::Relaxed);
+            let parent = PARENTS.with(|p| {
+                let mut p = p.borrow_mut();
+                let parent = p.last().copied().unwrap_or(0);
+                p.push(id);
+                parent
+            });
+            (clock::now_ns(), id, parent)
+        } else {
+            (if timed { clock::now_ns() } else { 0 }, 0, 0)
+        };
+        Span { name, cat, start_ns, id, parent, record, timed, done: false }
+    }
+
+    /// Close the span now and return the elapsed wall time in seconds
+    /// (0.0 for an untimed, unrecorded span).
+    pub fn finish(mut self) -> f64 {
+        if self.done {
+            return 0.0;
+        }
+        let end_ns = if self.record || self.timed { clock::now_ns() } else { self.start_ns };
+        let dur = end_ns.saturating_sub(self.start_ns);
+        self.close(dur);
+        if self.timed {
+            dur as f64 * 1e-9
+        } else {
+            0.0
+        }
+    }
+
+    fn close(&mut self, dur_ns: u64) {
+        self.done = true;
+        if self.record {
+            PARENTS.with(|p| {
+                let mut p = p.borrow_mut();
+                debug_assert_eq!(p.last(), Some(&self.id), "span drop order is LIFO");
+                p.pop();
+            });
+            sink_push(SpanEvent {
+                name: self.name,
+                cat: self.cat,
+                start_ns: self.start_ns,
+                dur_ns,
+                tid: tid(),
+                id: self.id,
+                parent: self.parent,
+            });
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.done {
+            let dur = if self.record || self.timed {
+                clock::now_ns().saturating_sub(self.start_ns)
+            } else {
+                0
+            };
+            self.close(dur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests use `capture` (thread-local sinks) only, so they are
+    // immune to other tests toggling the global recorder in parallel.
+
+    #[test]
+    fn disabled_spans_emit_nothing_and_cost_no_ids() {
+        let (_, evs) = capture(|| {
+            // a capture buffer *is* a sink, so open the inert spans on
+            // a thread with no sink at all
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let sp = Span::enter("noop", "test");
+                    drop(sp);
+                })
+                .join()
+                .unwrap();
+            });
+        });
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn capture_collects_nested_spans_with_parent_links() {
+        let ((), evs) = capture(|| {
+            let _outer = Span::enter("outer", "test");
+            {
+                let _inner = Span::enter("inner", "test");
+                let _leaf = Span::enter("leaf", "test");
+            }
+            let _sibling = Span::enter("sibling", "test");
+        });
+        // completion order: innermost first
+        let names: Vec<&str> = evs.iter().map(|e| e.name).collect();
+        assert_eq!(names, ["leaf", "inner", "sibling", "outer"]);
+        let by_name =
+            |n: &str| evs.iter().find(|e| e.name == n).unwrap_or_else(|| panic!("{n} missing"));
+        let outer = by_name("outer");
+        let inner = by_name("inner");
+        let leaf = by_name("leaf");
+        let sibling = by_name("sibling");
+        assert_eq!(outer.parent, 0);
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(leaf.parent, inner.id);
+        assert_eq!(sibling.parent, outer.id);
+        // ids are unique
+        let mut ids: Vec<u64> = evs.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), evs.len());
+    }
+
+    #[test]
+    fn span_intervals_nest_on_the_timeline() {
+        let ((), evs) = capture(|| {
+            let _outer = Span::enter("outer", "test");
+            let _inner = Span::enter("inner", "test");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let outer = evs.iter().find(|e| e.name == "outer").unwrap();
+        let inner = evs.iter().find(|e| e.name == "inner").unwrap();
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns);
+        assert!(outer.dur_ns > 0);
+    }
+
+    #[test]
+    fn timed_spans_return_elapsed_even_without_a_sink() {
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let sp = Span::timed("phase", "test");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let secs = sp.finish();
+                assert!(secs >= 0.001, "elapsed {secs}");
+            })
+            .join()
+            .unwrap();
+        });
+    }
+
+    #[test]
+    fn capture_is_reentrant_and_keeps_outer_events() {
+        let ((), outer_evs) = capture(|| {
+            let _a = Span::enter("a", "test");
+            let ((), inner_evs) = capture(|| {
+                let _b = Span::enter("b", "test");
+            });
+            assert_eq!(inner_evs.len(), 1);
+            assert_eq!(inner_evs[0].name, "b");
+            // the inner batch can be re-appended to the outer buffer
+            sink_append(inner_evs);
+        });
+        let names: Vec<&str> = outer_evs.iter().map(|e| e.name).collect();
+        assert_eq!(names, ["b", "a"]);
+    }
+
+    #[test]
+    fn global_recorder_starts_disabled() {
+        // must hold for golden bit-identity: nothing records unless a
+        // front-end opted in
+        assert!(!Recorder::disabled().is_enabled());
+    }
+}

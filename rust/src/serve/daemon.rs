@@ -39,6 +39,19 @@
 //! failing request produces an `{"id": ..., "error": "..."}` reply and
 //! the daemon keeps serving; `{"cmd": "shutdown"}` answers, discards the
 //! rest of its window, and exits cleanly.
+//!
+//! The daemon is also its own observability surface. `{"cmd":
+//! "metrics"}` answers inline with the daemon's cache counters (the
+//! exact fields every `cache_stats` envelope carries, so the two
+//! reconcile by construction) plus the process-wide
+//! [`crate::obs::metrics`] registry snapshot. All daemon stderr goes
+//! through [`crate::obs::log`] — structured `key=value` text by
+//! default, NDJSON under `--log-json`, level-filtered by `PHOTON_LOG`
+//! — so accept/connection errors and per-request access logs carry
+//! request ids and batch context. Each batch window is a `serve.batch`
+//! span, batch sizes land in a `serve_batch_size` histogram, and every
+//! dispatched request feeds a `serve_request_ns_<verb>_<hit|miss>`
+//! latency histogram.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, Write};
@@ -56,6 +69,8 @@ use crate::explore::space::{Axis, Candidate, DesignSpace};
 use crate::kernel::DEFAULT_CHUNK_NNZ;
 use crate::mem::registry;
 use crate::mem::tech::MemTechnology;
+use crate::obs::export::registry_json;
+use crate::obs::{log, metrics, Span};
 use crate::report::export::{compact, objectives_json};
 use crate::sim::par::{effective_threads, parallel_map};
 use crate::sim::SimBudget;
@@ -188,6 +203,18 @@ impl ServeState {
             self.cache.appended(),
             self.cache.len()
         )
+    }
+
+    /// The `metrics` verb's payload: the daemon's own cache counters
+    /// (rendered by the same [`Self::cache_stats_json`] every success
+    /// envelope embeds, so the two reconcile exactly) spliced together
+    /// with the process-wide registry snapshot.
+    fn metrics_json(&self) -> String {
+        let registry = registry_json(metrics::global());
+        // registry_json renders one object; splice the cache block in
+        // as its first member
+        debug_assert!(registry.starts_with('{'));
+        format!("{{\"cache\": {}, {}", self.cache_stats_json(), &registry[1..])
     }
 
     /// Memoized workload identity; prepares the workload on first touch
@@ -411,6 +438,7 @@ impl ServeState {
             Request::Simulate(r) => self.handle_simulate(r, prepared),
             Request::Sweep(r) => self.handle_sweep(r, prepared),
             Request::Explore(r) => self.handle_explore(r),
+            Request::Metrics => unreachable!("metrics answers inline in handle_batch"),
             Request::Shutdown => unreachable!("shutdown short-circuits in handle_batch"),
         }
     }
@@ -420,6 +448,12 @@ impl ServeState {
     /// whether a shutdown request ended the daemon (remaining lines of
     /// the window are deliberately dropped — shutdown means *now*).
     pub fn handle_batch(&mut self, lines: &[String]) -> (Vec<String>, bool) {
+        // one span per batch window (inert unless a front-end enabled
+        // recording via --trace-out); the size histogram counts the
+        // non-empty lines the window actually answers
+        let _span = Span::enter("serve.batch", "serve");
+        let requests = lines.iter().filter(|l| !l.trim().is_empty()).count() as u64;
+        metrics::global().histogram("serve_batch_size").observe(requests);
         let mut prepared: Vec<(WorkloadKey, PreparedWorkload)> = Vec::new();
         let mut out = Vec::new();
         for line in lines {
@@ -429,8 +463,12 @@ impl ServeState {
             let t0 = Instant::now();
             let (id, req) = parse_line(line);
             let reply = match req {
-                Err(e) => error_json(id, &e),
+                Err(e) => {
+                    log::warn("serve", "bad request", &[("id", id_json(id)), ("err", e.clone())]);
+                    error_json(id, &e)
+                }
                 Ok(Request::Shutdown) => {
+                    log::info("serve", "shutdown", &[("id", id_json(id))]);
                     out.push(format!(
                         "{{\"id\": {}, \"result\": {{\"shutdown\": true}}, \"cache_stats\": {}}}",
                         id_json(id),
@@ -438,17 +476,59 @@ impl ServeState {
                     ));
                     return (out, true);
                 }
-                Ok(req) => match self.dispatch(&req, &mut prepared) {
-                    Ok((result, warm)) => format!(
-                        "{{\"id\": {}, \"cache\": \"{}\", \"wall_ms\": {:.3}, \
-                         \"cache_stats\": {}, \"result\": {}}}",
+                Ok(Request::Metrics) => {
+                    // answered inline from counters already in memory —
+                    // never batched with simulations, never an engine run
+                    log::info(
+                        "serve",
+                        "request",
+                        &[("id", id_json(id)), ("verb", "metrics".to_string())],
+                    );
+                    format!(
+                        "{{\"id\": {}, \"result\": {}, \"cache_stats\": {}}}",
                         id_json(id),
-                        if warm { "hit" } else { "miss" },
-                        t0.elapsed().as_secs_f64() * 1e3,
+                        self.metrics_json(),
                         self.cache_stats_json(),
-                        result,
-                    ),
-                    Err(e) => error_json(id, &e),
+                    )
+                }
+                Ok(req) => match self.dispatch(&req, &mut prepared) {
+                    Ok((result, warm)) => {
+                        let wall = t0.elapsed();
+                        let marker = if warm { "hit" } else { "miss" };
+                        metrics::global()
+                            .histogram(&format!("serve_request_ns_{}_{marker}", verb(&req)))
+                            .observe(wall.as_nanos() as u64);
+                        log::info(
+                            "serve",
+                            "request",
+                            &[
+                                ("id", id_json(id)),
+                                ("verb", verb(&req).to_string()),
+                                ("cache", marker.to_string()),
+                                ("wall_ms", format!("{:.3}", wall.as_secs_f64() * 1e3)),
+                            ],
+                        );
+                        format!(
+                            "{{\"id\": {}, \"cache\": \"{marker}\", \"wall_ms\": {:.3}, \
+                             \"cache_stats\": {}, \"result\": {}}}",
+                            id_json(id),
+                            wall.as_secs_f64() * 1e3,
+                            self.cache_stats_json(),
+                            result,
+                        )
+                    }
+                    Err(e) => {
+                        log::warn(
+                            "serve",
+                            "request failed",
+                            &[
+                                ("id", id_json(id)),
+                                ("verb", verb(&req).to_string()),
+                                ("err", e.clone()),
+                            ],
+                        );
+                        error_json(id, &e)
+                    }
                 },
             };
             out.push(reply);
@@ -464,6 +544,18 @@ fn sweep_candidate(scale: f64, tech: &MemTechnology, kernel: crate::kernel::Kern
     let cfg = AcceleratorConfig::paper_default().scaled(scale);
     let area_mm2 = AreaModel::new(&cfg).design(tech).total_mm2();
     Candidate { index: 0, settings: Vec::new(), cfg, tech: tech.clone(), kernel, area_mm2 }
+}
+
+/// The wire name of a request's verb — the label latency histograms
+/// and access logs are keyed by.
+fn verb(req: &Request) -> &'static str {
+    match req {
+        Request::Simulate(_) => "simulate",
+        Request::Sweep(_) => "sweep",
+        Request::Explore(_) => "explore",
+        Request::Metrics => "metrics",
+        Request::Shutdown => "shutdown",
+    }
 }
 
 fn id_json(id: Option<u64>) -> String {
@@ -521,17 +613,21 @@ pub fn serve_stream<R: BufRead, W: Write>(
 }
 
 /// Announce the daemon on stderr (never stdout — stdout is the reply
-/// stream).
+/// stream); routed through [`crate::obs::log`] like every other daemon
+/// line.
 fn announce(state: &ServeState, transport: &str) {
+    let mut fields = vec![
+        ("transport", transport.to_string()),
+        ("batch", state.batch().to_string()),
+    ];
     match state.cache().store_path() {
-        Some(p) => eprintln!(
-            "serving on {transport} (batch {}, cache {} with {} entries loaded)",
-            state.batch(),
-            p.display(),
-            state.cache().loaded(),
-        ),
-        None => eprintln!("serving on {transport} (batch {}, in-memory cache)", state.batch()),
+        Some(p) => {
+            fields.push(("cache", p.display().to_string()));
+            fields.push(("loaded", state.cache().loaded().to_string()));
+        }
+        None => fields.push(("cache", "in-memory".to_string())),
     }
+    log::info("serve", "serving", &fields);
 }
 
 /// `photon-mttkrp serve --stdin`: one stream, stdin → stdout.
@@ -561,18 +657,31 @@ pub fn run_socket(opts: &ServeOptions, path: &std::path::Path) -> Result<(), Str
     let listener = UnixListener::bind(path)
         .map_err(|e| format!("--socket {}: {e}", path.display()))?;
     announce(&state, &format!("socket {}", path.display()));
+    let socket = path.display().to_string();
     for conn in listener.incoming() {
         let stream = match conn {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("accept error: {e}");
+                log::warn(
+                    "serve",
+                    "accept error",
+                    &[("socket", socket.clone()), ("err", e.to_string())],
+                );
                 continue;
             }
         };
         let reader = match stream.try_clone() {
             Ok(s) => BufReader::new(s),
             Err(e) => {
-                eprintln!("connection error: {e}");
+                log::warn(
+                    "serve",
+                    "connection error",
+                    &[
+                        ("socket", socket.clone()),
+                        ("stage", "clone".to_string()),
+                        ("err", e.to_string()),
+                    ],
+                );
                 continue;
             }
         };
@@ -580,7 +689,15 @@ pub fn run_socket(opts: &ServeOptions, path: &std::path::Path) -> Result<(), Str
         match serve_stream(&mut state, reader, &mut writer) {
             Ok(true) => break,
             Ok(false) => {}
-            Err(e) => eprintln!("connection error: {e}"),
+            Err(e) => log::warn(
+                "serve",
+                "connection error",
+                &[
+                    ("socket", socket.clone()),
+                    ("stage", "stream".to_string()),
+                    ("err", e),
+                ],
+            ),
         }
     }
     let _ = std::fs::remove_file(path);
@@ -651,6 +768,36 @@ mod tests {
         let v = Value::parse(&replies[0]).unwrap();
         assert_eq!(v.get("result").unwrap().get("shutdown").unwrap().as_bool(), Some(true));
         assert!(v.get("cache_stats").is_some());
+    }
+
+    #[test]
+    fn metrics_verb_reconciles_with_the_cache_stats_envelope() {
+        let mut s = state();
+        let (replies, shutdown) =
+            s.handle_batch(&lines(&[SIM, SIM, r#"{"id": 99, "cmd": "metrics"}"#]));
+        assert!(!shutdown);
+        assert_eq!(replies.len(), 3);
+        let m = Value::parse(&replies[2]).expect("metrics reply must be valid JSON");
+        assert_eq!(m.get("id").unwrap().as_u64(), Some(99));
+        let r = m.get("result").unwrap();
+        // the cache section IS the cache_stats block, field for field
+        assert_eq!(r.get("cache"), m.get("cache_stats"));
+        assert_eq!(r.get("cache").unwrap().get("hits").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("cache").unwrap().get("misses").unwrap().as_u64(), Some(1));
+        for section in ["counters", "gauges", "histograms"] {
+            assert!(r.get(section).is_some(), "metrics payload must carry {section}");
+        }
+        // the process-wide mirrors are shared with every other test in
+        // this binary, so they can only run ahead of this daemon's own
+        // counters — never behind them
+        let hits = r.get("counters").unwrap().get("eval_cache_hits_total");
+        assert!(hits.expect("mirror counter registered").as_u64().unwrap() >= 1);
+        let h = r.get("histograms").unwrap();
+        assert!(
+            h.get("serve_batch_size").is_some(),
+            "batch-size histogram must be registered: {}",
+            replies[2]
+        );
     }
 
     #[test]

@@ -15,8 +15,14 @@
 //! {"id": 3, "cmd": "explore", "tensor": "nell-2", "scale": 1e-4,
 //!  "techs": ["e-sram", "o-sram"], "axes": ["n_pes=2,4"],
 //!  "objective": "edp", "sample_rate": 0.25}
+//! {"id": 4, "cmd": "metrics"}
 //! {"cmd": "shutdown"}
 //! ```
+//!
+//! `metrics` answers with a snapshot of the daemon's own cache counters
+//! plus the process-wide [`crate::obs::metrics`] registry (counters,
+//! gauges, latency histogram quantiles) — the live observability
+//! surface of a long-running daemon.
 //!
 //! Decoding is strict about *types* (a non-string `tech` is an error,
 //! not a coercion) and lenient about *presence* (every field except
@@ -35,6 +41,9 @@ pub enum Request {
     Simulate(SimulateRequest),
     Sweep(SweepRequest),
     Explore(ExploreRequest),
+    /// Snapshot the daemon's cache counters and the process metrics
+    /// registry (answered inline, never batched with simulations).
+    Metrics,
     /// Finish the current batch, reply, and exit the daemon cleanly.
     Shutdown,
 }
@@ -171,9 +180,10 @@ pub fn parse_line(line: &str) -> (Option<u64>, Result<Request, String>) {
 
 fn decode(v: &Value) -> Result<Request, String> {
     let cmd = str_field(v, "cmd")?
-        .ok_or("missing `cmd` (expected one of: simulate, sweep, explore, shutdown)")?;
+        .ok_or("missing `cmd` (expected one of: simulate, sweep, explore, metrics, shutdown)")?;
     match cmd {
         "shutdown" => Ok(Request::Shutdown),
+        "metrics" => Ok(Request::Metrics),
         "simulate" => Ok(Request::Simulate(SimulateRequest {
             tensor: str_field(v, "tensor")?.unwrap_or("nell-2").to_string(),
             scale: f64_field(v, "scale")?.unwrap_or(1e-3),
@@ -211,7 +221,7 @@ fn decode(v: &Value) -> Result<Request, String> {
             sample: sample_field(v, crate::explore::DEFAULT_EXPLORE_SAMPLE_RATE)?,
         })),
         other => Err(format!(
-            "unknown cmd `{other}` (expected one of: simulate, sweep, explore, shutdown)"
+            "unknown cmd `{other}` (expected one of: simulate, sweep, explore, metrics, shutdown)"
         )),
     }
 }
@@ -275,6 +285,15 @@ mod tests {
         let (_, req) = parse_line(r#"{"cmd": "explore"}"#);
         let Ok(Request::Explore(r)) = req else { panic!("{req:?}") };
         assert_eq!(r.sample.rate, crate::explore::DEFAULT_EXPLORE_SAMPLE_RATE);
+    }
+
+    #[test]
+    fn metrics_decodes_and_unknown_cmds_name_it() {
+        let (id, req) = parse_line(r#"{"id": 7, "cmd": "metrics"}"#);
+        assert_eq!(id, Some(7));
+        assert!(matches!(req, Ok(Request::Metrics)));
+        let (_, req) = parse_line(r#"{"cmd": "stats"}"#);
+        assert!(req.unwrap_err().contains("metrics"), "verb list must name metrics");
     }
 
     #[test]

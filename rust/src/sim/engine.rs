@@ -39,6 +39,7 @@ use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::MemoryController;
 use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
+use crate::obs::{metrics, Span};
 use crate::pe::exec::{ExecCharge, ExecUnit};
 use crate::sim::par::parallel_map_init;
 use crate::sim::result::{ModeReport, PeReport, SimReport};
@@ -250,6 +251,11 @@ pub fn simulate_kernel_mode_with_view_budget(
         panic!("kernel `{}` rejected the workload: {e}", kernel.name());
     }
     cfg.validate().expect("invalid accelerator config");
+    // observation rides beside the computation: the span is inert
+    // unless a front-end enabled recording, and the chunk counter is a
+    // relaxed atomic resolved once, off the result path entirely
+    let _span = Span::enter("engine.analytic.mode", "engine");
+    let chunk_counter = metrics::global().counter("sim_analytic_chunks_total");
     let parts = partition_slices(view, cfg.n_pes);
 
     // The kernel's input slots: which factor matrix each FactorRead slot
@@ -289,8 +295,10 @@ pub fn simulate_kernel_mode_with_view_budget(
             let per_drain = kernel.drain_exec(&exec, tensor.n_modes());
 
             let mut stream = kernel.stream(tensor, view, (slo, shi), chunk_nnz);
+            let mut n_chunks = 0u64;
             while stream.fill(scratch) {
                 let chunk = &*scratch;
+                n_chunks += 1;
                 pe_nnz += chunk.n_nnz as u64;
                 // every slice drains exactly once (psum row out)
                 drains += chunk.slice_ends.len() as u64;
@@ -300,6 +308,7 @@ pub fn simulate_kernel_mode_with_view_budget(
                     }
                 }
             }
+            chunk_counter.add(n_chunks);
 
             // Sequential traffic, charged in bulk: the tensor's nonzeros
             // stream in once (coordinates + value), the output rows

@@ -125,6 +125,7 @@ use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::{MemoryController, Served};
 use crate::kernel::{AccessChunk, KernelKind, SparseKernel};
 use crate::mem::tech::MemTechnology;
+use crate::obs::{metrics, Span};
 use crate::pe::exec::ExecUnit;
 use crate::sim::engine::{
     assemble_pe_report, charge_streams, nnz_item_bytes, partition_slices, price_exec,
@@ -520,6 +521,16 @@ fn replay_pe(
         }
     }
 
+    // read-beside accounting: relaxed counter adds on the registry,
+    // off the result path entirely (a sampled run counts the nnz that
+    // actually went through the timing pass; an exact run times all)
+    let m = metrics::global();
+    m.counter("sim_event_chunks_total").add(n_chunks);
+    m.counter("sim_event_timed_chunks_total")
+        .add(if sampling { stalls.count() } else { n_chunks });
+    m.counter("sim_event_nnz_total").add(pe_nnz);
+    m.counter("sim_event_sampled_nnz_total").add(if sampling { sampled_nnz } else { pe_nnz });
+
     // Bulk functional stream accounting — the shared helper issues the
     // identical calls in identical order to the analytic engine, so
     // the *reported* busy/traffic fields stay bit-identical across
@@ -769,6 +780,9 @@ pub fn simulate_kernel_mode_event_with_view_budget(
     // the CLI and the sweep/explore specs reject bad rates with a proper
     // error first, so a bad spec reaching here is a library-caller bug
     budget.sample.validate().expect("invalid SimBudget::sample");
+    // inert unless a front-end enabled recording; the per-PE replays
+    // below record into slot-ordered buffers (see crate::sim::par)
+    let _span = Span::enter("engine.event.mode", "engine");
     // shared-path invariant: identical work split to the analytic engine
     let parts = partition_slices(view, cfg.n_pes);
 

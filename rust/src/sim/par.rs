@@ -13,9 +13,18 @@
 //! How the two levels share one budget without oversubscription is the
 //! thread-budget rule documented on [`crate::sim::SimBudget`] and
 //! implemented in [`crate::sim::sweep::run_sweep`].
+//!
+//! **Span recording.** When [`crate::obs`] recording is active, worker
+//! threads capture their span events into per-item buffers
+//! ([`crate::obs::span::capture`]) and the map appends them to the
+//! caller's sink **in slot order** after the join — trace content is a
+//! pure function of the item list, never of thread scheduling, and the
+//! recording-off path is exactly the code below.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::obs::span::{capture, recording_active, sink_append, SpanEvent};
 
 /// Threads a requested budget resolves to (0 ⇒ all available cores).
 pub fn effective_threads(requested: usize) -> usize {
@@ -57,8 +66,13 @@ where
 {
     let n_threads = threads.clamp(1, items.len().max(1));
     if n_threads == 1 {
+        // inline on the caller's thread: spans flow to the caller's own
+        // sink in natural (slot) order already
         let mut scratch = init();
         return items.iter().enumerate().map(|(i, item)| f(&mut scratch, i, item)).collect();
+    }
+    if recording_active() {
+        return parallel_map_traced(items, n_threads, init, f);
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
@@ -80,6 +94,46 @@ where
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
+        .collect()
+}
+
+/// The recording-active threaded path: identical claim/slot scheme, but
+/// each item's span events are captured into a per-slot buffer and
+/// appended to the caller's sink in slot order after every worker has
+/// joined — so the recorded trace never depends on thread interleaving,
+/// and recording can never reorder or perturb the computation itself.
+fn parallel_map_traced<T, R, S, I, F>(items: &[T], n_threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(R, Vec<SpanEvent>)>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let pair = capture(|| f(&mut scratch, i, &items[i]));
+                    *slots[i].lock().unwrap() = Some(pair);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            let (r, events) = m.into_inner().unwrap().expect("parallel_map slot filled");
+            sink_append(events);
+            r
+        })
         .collect()
 }
 
@@ -137,5 +191,40 @@ mod tests {
         });
         let expect: Vec<usize> = items.iter().map(|&v| 2 * v).collect();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn traced_map_merges_span_events_in_slot_order() {
+        use crate::obs::span::{capture, Span};
+        // item i emits i % 3 child spans inside one "item" span; after
+        // the merge, the child-count sequence between "item" events must
+        // be exactly [0 % 3, 1 % 3, 2 % 3, ...] — slot order, whatever
+        // the thread interleaving was
+        let items: Vec<usize> = (0..61).collect();
+        let (got, evs) = capture(|| {
+            parallel_map(&items, 8, |&i| {
+                let _outer = Span::enter("item", "test");
+                for _ in 0..(i % 3) {
+                    let _c = Span::enter("child", "test");
+                }
+                i * 2
+            })
+        });
+        let expect: Vec<usize> = items.iter().map(|&i| i * 2).collect();
+        assert_eq!(got, expect, "tracing never changes results");
+        let mut children_seen = 0usize;
+        let mut item_idx = 0usize;
+        for ev in &evs {
+            match ev.name {
+                "child" => children_seen += 1,
+                "item" => {
+                    assert_eq!(children_seen, item_idx % 3, "slot {item_idx}");
+                    children_seen = 0;
+                    item_idx += 1;
+                }
+                other => panic!("unexpected span {other}"),
+            }
+        }
+        assert_eq!(item_idx, items.len(), "one span per item");
     }
 }

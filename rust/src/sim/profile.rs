@@ -38,6 +38,7 @@ use crate::cache::pipeline::ArrayTiming;
 use crate::controller::mc::{FunctionalCounts, MemoryController};
 use crate::kernel::{AccessChunk, SparseKernel};
 use crate::mem::tech::MemTechnology;
+use crate::obs::Span;
 use crate::pe::exec::ExecUnit;
 use crate::sim::engine::{
     assemble_pe_report, charge_streams, nnz_item_bytes, partition_slices, price_exec,
@@ -188,6 +189,8 @@ pub fn profile_geometries(
         .collect();
     let mut scratch = AccessChunk::default();
     for (vi, (mode, view)) in views.iter().enumerate() {
+        // one span per decode traversal (inert unless recording is on)
+        let _walk = Span::enter("profile.walk", "profile");
         let read_modes = kernel.read_modes(tensor, *mode);
         let rpn = read_modes.len();
         let matrix_rows: Vec<u64> = read_modes.iter().map(|&m| tensor.dims[m]).collect();

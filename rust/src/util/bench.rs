@@ -5,10 +5,12 @@
 //! iteration, so first-touch costs never contaminate samples), a
 //! calibrated iteration count targeting a wall-time budget, and reports
 //! **median**-of-N (the headline statistic — robust to scheduler noise, so
-//! `BENCH_*.json` files are comparable across runs), mean ± σ, min, and
-//! optional throughput (computed over the median). Results can be dumped
-//! as CSV (plotting) or JSON (the `BENCH_*.json` perf-trajectory files at
-//! the repository root).
+//! `BENCH_*.json` files are comparable across runs), mean ± σ, min,
+//! p50/p95/p99 tail percentiles (via [`crate::util::stats::percentile`],
+//! the latency-shaped view `BENCH_serve.json` surfaces), and optional
+//! throughput (computed over the median). Results can be dumped as CSV
+//! (plotting) or JSON (the `BENCH_*.json` perf-trajectory files at the
+//! repository root).
 //!
 //! This intentionally mirrors criterion's output shape
 //! (`name   time: [median ± σ]`) so downstream tooling/log-readers behave.
@@ -34,6 +36,13 @@ pub struct Measurement {
     pub mean: Duration,
     pub sigma: Duration,
     pub min: Duration,
+    /// 50th percentile — the same statistic as `median`, kept under its
+    /// quantile name so the p50/p95/p99 family reads uniformly.
+    pub p50: Duration,
+    /// 95th percentile of the samples (linear interpolation).
+    pub p95: Duration,
+    /// 99th percentile of the samples — the latency-tail statistic.
+    pub p99: Duration,
     /// Items (e.g. nnz) processed per iteration, for throughput reporting.
     pub items_per_iter: Option<f64>,
 }
@@ -156,6 +165,7 @@ impl Bench {
             raw.push(t0.elapsed().as_secs_f64());
         }
         let samples = Summary::from_slice(&raw);
+        let pct = |p: f64| Duration::from_secs_f64(crate::util::stats::percentile(&raw, p));
         let m = Measurement {
             name: self.full_name(name),
             iters,
@@ -163,6 +173,9 @@ impl Bench {
             mean: Duration::from_secs_f64(samples.mean()),
             sigma: Duration::from_secs_f64(samples.std()),
             min: Duration::from_secs_f64(samples.min()),
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
             items_per_iter: items,
         };
         print_measurement(&m);
@@ -205,8 +218,18 @@ impl Bench {
     /// Write CSV of all measurements to `path`, creating parent
     /// directories as needed.
     pub fn write_csv(&self, path: &Path) -> io::Result<()> {
-        let cols =
-            ["name", "iters", "mean_s", "median_s", "sigma_s", "min_s", "throughput_per_s"];
+        let cols = [
+            "name",
+            "iters",
+            "mean_s",
+            "median_s",
+            "sigma_s",
+            "min_s",
+            "p50_s",
+            "p95_s",
+            "p99_s",
+            "throughput_per_s",
+        ];
         let mut t = Table::new("", &cols);
         for m in &self.results {
             t.row(vec![
@@ -216,6 +239,9 @@ impl Bench {
                 format!("{:.9}", m.median.as_secs_f64()),
                 format!("{:.9}", m.sigma.as_secs_f64()),
                 format!("{:.9}", m.min.as_secs_f64()),
+                format!("{:.9}", m.p50.as_secs_f64()),
+                format!("{:.9}", m.p95.as_secs_f64()),
+                format!("{:.9}", m.p99.as_secs_f64()),
                 m.throughput_per_s().map(|t| format!("{t:.3}")).unwrap_or_default(),
             ]);
         }
@@ -232,6 +258,7 @@ impl Bench {
     /// ```json
     /// { "benchmarks": [ { "name": "...", "iters": 7, "mean_s": 0.1,
     ///   "median_s": 0.1, "sigma_s": 0.01, "min_s": 0.09,
+    ///   "p50_s": 0.1, "p95_s": 0.12, "p99_s": 0.13,
     ///   "throughput_per_s": 123.0 } ] }
     /// ```
     ///
@@ -251,6 +278,7 @@ impl Bench {
             out.push_str(&format!(
                 "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
                  \"median_s\": {:e}, \"sigma_s\": {:e}, \"min_s\": {:e}, \
+                 \"p50_s\": {:e}, \"p95_s\": {:e}, \"p99_s\": {:e}, \
                  \"throughput_per_s\": {}}}",
                 json_escape(&m.name),
                 m.iters,
@@ -258,6 +286,9 @@ impl Bench {
                 m.median.as_secs_f64(),
                 m.sigma.as_secs_f64(),
                 m.min.as_secs_f64(),
+                m.p50.as_secs_f64(),
+                m.p95.as_secs_f64(),
+                m.p99.as_secs_f64(),
                 m.throughput_per_s().map(|t| format!("{t:e}")).unwrap_or_else(|| "null".into()),
             ));
         }
@@ -361,6 +392,25 @@ mod tests {
         assert_eq!(median_of(&[]), 0.0);
         // robust to one wild outlier — the property the bench JSONs need
         assert_eq!(median_of(&[1.0, 1.0, 1.0, 1.0, 500.0]), 1.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_land_in_the_json() {
+        std::env::set_var("PHOTON_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let m = b.bench("p", || std::hint::black_box(2 + 2)).clone();
+        assert!(m.min <= m.p50 && m.p50 <= m.p95 && m.p95 <= m.p99);
+        // p50 is the median under its quantile name (interpolation at
+        // rank (n-1)/2 is exactly the middle-sample mean)
+        assert_eq!(m.p50, m.median);
+        let path = std::env::temp_dir()
+            .join(format!("photon_bench_pct_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let json = std::fs::read_to_string(&path).unwrap();
+        for key in ["\"p50_s\": ", "\"p95_s\": ", "\"p99_s\": "] {
+            assert!(json.contains(key), "{json}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -262,6 +262,38 @@ fn golden_reddit() {
     check_preset(FrosttTensor::Reddit);
 }
 
+/// The observability layer's determinism contract: arming the global
+/// span recorder (`--trace-out`) must not perturb a single bit of any
+/// report — the traced parallel-map path merges per-worker span
+/// buffers in slot order and stores results exactly as the untraced
+/// path does. Rendered through the same canonical document the goldens
+/// pin.
+#[test]
+fn span_recording_leaves_reports_bit_identical() {
+    use photon_mttkrp::obs::span::Recorder;
+    let cfg = AcceleratorConfig::paper_default().scaled(SCALE);
+    let tensor = preset(FrosttTensor::Nell2).scaled(SCALE).generate(SEED);
+    let tech = registry::tech("o-sram");
+    let mut plain = String::new();
+    let mut traced = String::new();
+    for engine in ENGINES {
+        let rep =
+            simulate_all_modes_with_kernel(&tensor, &cfg, &tech, engine, KernelKind::Spmttkrp);
+        render_report(&rep, &mut plain);
+    }
+    let rec = Recorder::global();
+    rec.enable();
+    for engine in ENGINES {
+        let rep =
+            simulate_all_modes_with_kernel(&tensor, &cfg, &tech, engine, KernelKind::Spmttkrp);
+        render_report(&rep, &mut traced);
+    }
+    rec.disable();
+    let events = rec.take();
+    assert!(!events.is_empty(), "the engine spans must have been recorded");
+    assert_eq!(plain, traced, "recording must not perturb report bits");
+}
+
 /// The tentpole's degenerate-config guarantee: an explicitly-parsed
 /// empty `--levels` stack must be byte-identical to the paper default
 /// (no hierarchy code on the hot path) on both engines — the same

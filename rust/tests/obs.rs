@@ -1,0 +1,152 @@
+//! Integration contract tests for the observability layer
+//! ([`photon_mttkrp::obs`]): the global recorder's enable → record →
+//! drain round trip, histogram quantiles pinned against the exact
+//! reference percentile, Chrome-trace validity (parsed back through
+//! the crate's own JSON reader), and the end-to-end `--trace-out`
+//! promise — an explore run emits one span per phase and per stream
+//! walk, without changing anything it prints.
+//!
+//! Only `global_recorder_round_trips_spans` touches the process-wide
+//! recorder; every other in-process test uses `capture` buffers or
+//! private registries, so the tests stay order-independent under the
+//! parallel test runner.
+
+use std::collections::HashSet;
+use std::process::Command;
+
+use photon_mttkrp::obs::export::chrome_trace;
+use photon_mttkrp::obs::metrics::Registry;
+use photon_mttkrp::obs::span::{capture, Recorder, Span};
+use photon_mttkrp::util::json::Value;
+use photon_mttkrp::util::stats::percentile;
+
+#[test]
+fn global_recorder_round_trips_spans() {
+    let rec = Recorder::global();
+    // drain anything a previous (failed) round left behind so the
+    // assertions below see only this test's spans
+    rec.enable();
+    let _ = rec.take();
+    {
+        let _outer = Span::enter("it.outer", "test");
+        let _inner = Span::enter("it.inner", "test");
+    }
+    rec.disable();
+    let events = rec.take();
+    assert!(rec.is_empty(), "take must drain the recorder");
+    // completion order: inner closes first; parent links inner → outer
+    let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+    assert_eq!(names, ["it.inner", "it.outer"]);
+    assert_eq!(events[0].parent, events[1].id);
+    assert_eq!(events[1].parent, 0);
+    assert!(events.iter().all(|e| e.id != 0 && e.tid != 0));
+    // disabled again: a new span must record nothing
+    {
+        let _quiet = Span::enter("it.quiet", "test");
+    }
+    assert!(rec.is_empty(), "disabled recorder must stay empty");
+}
+
+#[test]
+fn histogram_quantiles_track_the_reference_percentile() {
+    let reg = Registry::new();
+    let h = reg.histogram("lat_ns");
+    // deterministic LCG over six decades — the latency shape the log2
+    // buckets are designed around
+    let mut x = 0x2545_f491_4f6c_dd1du64;
+    let mut vals: Vec<f64> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let v = (x >> 40) % 1_000_000 + 1;
+        h.observe(v);
+        vals.push(v as f64);
+    }
+    assert_eq!(h.count(), 10_000);
+    // a log2 bucket bounds its members within a factor of two, so each
+    // reported quantile must bracket the exact sorted-sample statistic
+    for (q, pct) in [(0.50, 50.0), (0.90, 90.0), (0.99, 99.0)] {
+        let reference = percentile(&vals, pct);
+        let got = h.quantile(q) as f64;
+        assert!(got >= 0.5 * reference, "q={q}: {got} < half of {reference}");
+        assert!(got <= 2.0 * reference, "q={q}: {got} > twice {reference}");
+    }
+}
+
+#[test]
+fn chrome_trace_parses_back_with_nesting_intact() {
+    let ((), events) = capture(|| {
+        let _phase = Span::enter("phase", "explore");
+        let _walk = Span::enter("walk", "profile");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    });
+    let json = chrome_trace(&events);
+    let v = Value::parse(&json).expect("chrome trace must be valid JSON");
+    let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(evs.len(), 2);
+    let find = |name: &str| {
+        evs.iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some(name))
+            .unwrap_or_else(|| panic!("{name} missing from trace"))
+    };
+    let phase = find("phase");
+    let walk = find("walk");
+    assert_eq!(phase.get("ph").unwrap().as_str(), Some("X"));
+    assert_eq!(phase.get("cat").unwrap().as_str(), Some("explore"));
+    assert_eq!(
+        walk.get("args").unwrap().get("parent").unwrap().as_u64(),
+        phase.get("args").unwrap().get("id").unwrap().as_u64(),
+        "the walk span must link to its enclosing phase"
+    );
+    // complete events carry µs timestamps and a positive duration
+    assert!(phase.get("dur").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// The acceptance contract of `--trace-out`: a (tiny) explore run
+/// writes a loadable Chrome trace holding one span per explore phase
+/// and per profiler stream walk, with engine spans nested inside.
+#[test]
+fn explore_trace_out_captures_every_phase_and_walk() {
+    let dir = std::env::temp_dir().join(format!("photon_obs_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let trace = dir.join("trace.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_photon-mttkrp"))
+        .args([
+            "explore",
+            "--tensor",
+            "nell-2",
+            "--scale",
+            "0.0001",
+            "--tech",
+            "o-sram",
+            "--axes",
+            "n_pes=2",
+            "--sample-rate",
+            "1.0",
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&trace).expect("--trace-out must write the file");
+    let v = Value::parse(&json).expect("trace must be valid JSON");
+    let names: HashSet<String> = v
+        .get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    for want in [
+        "explore.screen",
+        "explore.pareto",
+        "explore.sampled",
+        "explore.exact",
+        "profile.walk",
+        "engine.event.mode",
+    ] {
+        assert!(names.contains(want), "span {want} missing from trace; got {names:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -163,6 +163,38 @@ fn malformed_requests_get_error_replies_and_the_daemon_keeps_serving() {
 }
 
 #[test]
+fn metrics_verb_snapshot_reconciles_with_the_final_cache_stats() {
+    // two identical simulates (miss then hit), then the metrics verb:
+    // its cache section must match the last envelope's cache_stats
+    // field for field, and the registry mirrors must agree
+    let input = format!("{SIM}\n{SIM}\n{}\n", r#"{"id": 3, "cmd": "metrics"}"#);
+    let replies = serve(&[], &input);
+    assert_eq!(replies.len(), 3, "{replies:?}");
+    let warm = parse(&replies[1]);
+    let m = parse(&replies[2]);
+    assert_eq!(m.get("id").unwrap().as_u64(), Some(3));
+    let r = m.get("result").unwrap();
+    assert_eq!(
+        r.get("cache"),
+        warm.get("cache_stats"),
+        "metrics cache section must reconcile with the envelope snapshot"
+    );
+    assert_eq!(r.get("cache").unwrap().get("hits").unwrap().as_u64(), Some(1));
+    assert_eq!(r.get("cache").unwrap().get("misses").unwrap().as_u64(), Some(1));
+    // in a fresh daemon process the registry mirrors equal the daemon's
+    // own counters exactly
+    let counters = r.get("counters").unwrap();
+    assert_eq!(counters.get("eval_cache_hits_total").unwrap().as_u64(), Some(1));
+    assert_eq!(counters.get("eval_cache_misses_total").unwrap().as_u64(), Some(1));
+    // the per-verb latency histograms recorded both outcomes
+    let h = r.get("histograms").unwrap();
+    for name in ["serve_request_ns_simulate_miss", "serve_request_ns_simulate_hit"] {
+        let hist = h.get(name).unwrap_or_else(|| panic!("{name} missing: {}", replies[2]));
+        assert_eq!(hist.get("count").unwrap().as_u64(), Some(1), "{name}");
+    }
+}
+
+#[test]
 fn explore_cache_dir_warm_start_reproduces_the_frontier_byte_for_byte() {
     let dir = tmp_dir("explore");
     let cache = dir.join("cache");
